@@ -1,0 +1,86 @@
+//! Fig. 5-style exploration through the AOT-compiled PJRT artifact:
+//! "Picking the Number of ADCs for an Architecture".
+//!
+//! The raw ADC metrics for the (n_adcs x throughput) grid are computed by
+//! the compiled Pallas kernel (`artifacts/adc_model.hlo.txt`) — Python is
+//! not involved at runtime — then combined with the native accelerator
+//! rollup into the EAP table, with a power/area Pareto front on top.
+//!
+//! Run with: `cargo run --release --example adc_count_exploration`
+//! (falls back to the native evaluator when artifacts are missing)
+
+use cimdse::adc::{AdcModel, fit_model};
+use cimdse::dse::{
+    Evaluator, NativeEvaluator, PjrtEvaluator, SweepSpec, figures, pareto_front, run_sweep,
+};
+use cimdse::report::Table;
+use cimdse::runtime::{AdcModelEngine, Manifest};
+use cimdse::survey::generator::{SurveyConfig, generate_survey};
+use cimdse::util::units::{fmt_area_um2, fmt_power_w, fmt_throughput};
+
+fn main() -> cimdse::Result<()> {
+    let survey = generate_survey(&SurveyConfig::default());
+    let model = AdcModel::new(fit_model(&survey)?.coefs);
+
+    // Pick the backend: PJRT artifact if built, else native.
+    let evaluator: Box<dyn Evaluator> = match Manifest::locate()
+        .and_then(|m| AdcModelEngine::load(&m))
+    {
+        Ok(engine) => {
+            println!("backend: PJRT artifact (adc_model.hlo.txt)\n");
+            Box::new(PjrtEvaluator::new(engine, model))
+        }
+        Err(e) => {
+            println!("backend: native ({e})\n");
+            Box::new(NativeEvaluator::new(model))
+        }
+    };
+
+    // --- raw ADC metrics over the Fig. 5 grid, via the artifact ----------
+    let spec = SweepSpec::fig5(7.0, 5);
+    let evaluated = run_sweep(&spec, evaluator.as_ref())?;
+    let mut t = Table::new(vec![
+        "total throughput",
+        "n_adcs",
+        "E/convert (pJ)",
+        "ADC power",
+        "ADC area",
+    ]);
+    for p in &evaluated {
+        t.row(vec![
+            fmt_throughput(p.query.total_throughput),
+            p.query.n_adcs.to_string(),
+            format!("{:.3}", p.metrics.energy_pj_per_convert),
+            fmt_power_w(p.metrics.total_power_w),
+            fmt_area_um2(p.metrics.total_area_um2),
+        ]);
+    }
+    println!("ADC metrics on the Fig. 5 grid (7-bit, 32 nm):\n{}", t.render());
+
+    // Pareto front over (power, area): which (throughput, n) corners win.
+    let objectives: Vec<(f64, f64)> = evaluated
+        .iter()
+        .map(|p| (p.metrics.total_power_w, p.metrics.total_area_um2))
+        .collect();
+    let front = pareto_front(&objectives);
+    println!("power/area Pareto-optimal configurations:");
+    for &i in &front {
+        let p = &evaluated[i];
+        println!(
+            "  n_adcs={:<2} @ {:<12} power={} area={}",
+            p.query.n_adcs,
+            fmt_throughput(p.query.total_throughput),
+            fmt_power_w(p.metrics.total_power_w),
+            fmt_area_um2(p.metrics.total_area_um2)
+        );
+    }
+
+    // --- full-accelerator EAP (the paper's Fig. 5) ------------------------
+    println!("\nFig. 5 reproduction (accelerator EAP on the chosen layer):");
+    println!("{}", figures::render_fig5(&figures::fig5(&model, 5)?).render());
+    println!(
+        "paper's claims: EAP rises with required throughput; the n_adcs choice\n\
+         swings EAP ~3x; low-throughput designs favor fewer ADCs, high-throughput more."
+    );
+    Ok(())
+}

@@ -1,0 +1,64 @@
+//! Quickstart: model one ADC, tune it to a published design point, and
+//! interpolate — the §I capability prior work lacked ("7-bit, 65 nm, vary
+//! throughput from 1e6 to 1e9 converts per second").
+//!
+//! Run with: `cargo run --release --example quickstart`
+
+use cimdse::adc::tuning::TuningPoint;
+use cimdse::adc::{AdcModel, AdcQuery, fit_model};
+use cimdse::survey::generator::{SurveyConfig, generate_survey};
+use cimdse::util::units::{fmt_area_um2, fmt_energy_pj, fmt_throughput};
+
+fn main() -> cimdse::Result<()> {
+    // 1. Fit the model to the (synthetic) ADC survey — the Fig. 1 pipeline.
+    let survey = generate_survey(&SurveyConfig::default());
+    let report = fit_model(&survey)?;
+    let model = AdcModel::new(report.coefs);
+    println!(
+        "fitted model over {} survey records (area r = {:.2})\n",
+        report.n_records, report.area_r_energy
+    );
+
+    // 2. Evaluate an architecture-level query: the paper's example design
+    //    point, a 7-bit ADC at 1e9 converts/s in 32 nm.
+    let q = AdcQuery { enob: 7.0, total_throughput: 1e9, tech_nm: 32.0, n_adcs: 1 };
+    let m = model.eval(&q);
+    println!("7-bit, 32 nm, 1 GS/s (model best-case):");
+    println!("  energy/convert = {}", fmt_energy_pj(m.energy_pj_per_convert));
+    println!("  area           = {}\n", fmt_area_um2(m.area_um2_per_adc));
+
+    // 3. Tune the model to a specific published ADC (§II: "users may tune
+    //    the tool ... to match the ADC of interest").
+    let reference = TuningPoint {
+        query: q,
+        energy_pj_per_convert: 2.5, // the ADC we want to model
+        area_um2: Some(4.2e4),
+    };
+    let tuned = model.tuned_to(&reference);
+    println!("tuned to a published 7-bit ADC (2.5 pJ/convert, 0.042 mm²):");
+    println!(
+        "  model now reproduces it exactly: {} / {}\n",
+        fmt_energy_pj(tuned.energy_pj_per_convert(&q)),
+        fmt_area_um2(tuned.area_um2_per_adc(&q))
+    );
+
+    // 4. Interpolate: how would *that* ADC change at 65 nm across three
+    //    decades of throughput? (the thing a fixed design point cannot do)
+    println!("interpolation at 65 nm, 7-bit, tuned ADC:");
+    println!("  {:>14}  {:>14}  {:>12}", "throughput", "energy/convert", "area");
+    for exp in [6.0, 7.0, 8.0, 8.5, 9.0] {
+        let f = 10f64.powf(exp);
+        let qi = AdcQuery { enob: 7.0, total_throughput: f, tech_nm: 65.0, n_adcs: 1 };
+        println!(
+            "  {:>14}  {:>14}  {:>12}",
+            fmt_throughput(f),
+            fmt_energy_pj(tuned.energy_pj_per_convert(&qi)),
+            fmt_area_um2(tuned.area_um2_per_adc(&qi))
+        );
+    }
+    println!(
+        "\nknee (tradeoff bound takes over) at {} for this ENOB/node",
+        fmt_throughput(tuned.crossover_throughput(7.0, 65.0))
+    );
+    Ok(())
+}

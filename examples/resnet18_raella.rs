@@ -1,0 +1,93 @@
+//! End-to-end driver (DESIGN.md §5): run the full modeling pipeline on a
+//! real workload — all 21 ResNet18 layers mapped onto the four RAELLA
+//! parameterizations — and report the paper's headline result (Fig. 4)
+//! plus per-layer breakdowns, whole-network area, and ADC-bound
+//! latency/throughput.
+//!
+//! Pipeline exercised: survey → fit → ADC model → architecture presets →
+//! mapper → component rollup → report. Results are recorded in
+//! EXPERIMENTS.md.
+//!
+//! Run with: `cargo run --release --example resnet18_raella`
+
+use cimdse::adc::{AdcModel, fit_model};
+use cimdse::arch::raella::{RaellaVariant, raella};
+use cimdse::dse::figures;
+use cimdse::energy::{AreaScope, accel_area, workload_energy};
+use cimdse::mapper::{arrays_for_workload, map_layer};
+use cimdse::report::Table;
+use cimdse::survey::generator::{SurveyConfig, generate_survey};
+use cimdse::util::units::{fmt_area_um2, fmt_energy_pj};
+use cimdse::workload::resnet18::resnet18;
+
+fn main() -> cimdse::Result<()> {
+    // --- fit the ADC model from the survey (Fig. 1 pipeline) -------------
+    let survey = generate_survey(&SurveyConfig::default());
+    let report = fit_model(&survey)?;
+    let model = AdcModel::new(report.coefs);
+    let net = resnet18();
+    println!(
+        "== ResNet18 ({} layers, {:.2} GMACs) on RAELLA S/M/L/XL ==\n",
+        net.layers.len(),
+        net.total_macs() as f64 / 1e9
+    );
+
+    // --- the paper's Fig. 4 ----------------------------------------------
+    println!("Fig. 4 reproduction (energy per inference):");
+    println!("{}", figures::render_fig4(&figures::fig4(&model)?).render());
+
+    // --- whole-network summary per variant --------------------------------
+    let mut t = Table::new(vec![
+        "variant",
+        "energy/inf",
+        "ADC E%",
+        "arrays",
+        "area",
+        "ADC A%",
+        "latency (ms)",
+        "inf/s",
+    ]);
+    for variant in RaellaVariant::ALL {
+        let arch = raella(variant);
+        let e = workload_energy(&arch, &model, &net)?;
+        let arrays = arrays_for_workload(&arch, &net.layers);
+        let a = accel_area(&arch, &model, AreaScope::Tile { n_arrays: arrays });
+        // ADC-bound latency: layers run sequentially on their arrays.
+        let latency_s: f64 = net
+            .layers
+            .iter()
+            .map(|l| map_layer(&arch, l).map(|m| m.latency_s).unwrap_or(0.0))
+            .sum();
+        t.row(vec![
+            variant.name().to_string(),
+            fmt_energy_pj(e.total_pj()),
+            format!("{:.0}%", 100.0 * e.adc_fraction()),
+            arrays.to_string(),
+            fmt_area_um2(a.total_um2()),
+            format!("{:.0}%", 100.0 * a.adc_fraction()),
+            format!("{:.2}", latency_s * 1e3),
+            format!("{:.1}", 1.0 / latency_s),
+        ]);
+    }
+    println!("whole-network rollup:\n{}", t.render());
+
+    // --- per-layer detail for the best variant -----------------------------
+    let rows = figures::fig4(&model)?;
+    let best = rows
+        .iter()
+        .filter(|r| r.group == "all-layers")
+        .min_by(|a, b| a.total_pj.total_cmp(&b.total_pj))
+        .unwrap();
+    println!(
+        "best overall variant: {} ({} per inference) — paper predicts M or L\n",
+        best.variant,
+        fmt_energy_pj(best.total_pj)
+    );
+    let variant = RaellaVariant::ALL
+        .into_iter()
+        .find(|v| v.name() == best.variant)
+        .unwrap();
+    println!("per-layer breakdown on {}:", raella(variant).name);
+    println!("{}", figures::per_layer_table(&model, &raella(variant), &net)?.render());
+    Ok(())
+}

@@ -1,0 +1,133 @@
+"""AOT export: lower the Layer-2 graphs to HLO *text* artifacts.
+
+HLO text (not ``.serialize()``) is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Run as ``python -m compile.aot --out-dir ../artifacts`` (what ``make
+artifacts`` does). Python never runs after this: the Rust binary loads the
+text artifacts via PJRT and is self-contained.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .coeffs import DEFAULT_COEFS, N_COEFS, N_METRICS, N_PARAMS
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by the parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def lower_adc_model() -> str:
+    return to_hlo_text(
+        jax.jit(model.adc_model_batch).lower(
+            f32(model.DSE_BATCH, N_PARAMS), f32(N_COEFS)
+        )
+    )
+
+
+def lower_crossbar() -> str:
+    return to_hlo_text(
+        jax.jit(model.crossbar_layer).lower(
+            f32(model.MLP_BATCH, model.MLP_IN),
+            f32(model.MLP_IN, model.MLP_HIDDEN),
+            f32(1),
+        )
+    )
+
+
+def lower_cim_mlp() -> str:
+    return to_hlo_text(
+        jax.jit(model.cim_mlp).lower(
+            f32(model.MLP_BATCH, model.MLP_IN),
+            f32(model.MLP_IN, model.MLP_HIDDEN),
+            f32(model.MLP_HIDDEN, model.MLP_OUT),
+            f32(1),
+            f32(1),
+            f32(1),
+        )
+    )
+
+
+ARTIFACTS = {
+    "adc_model.hlo.txt": lower_adc_model,
+    "crossbar.hlo.txt": lower_crossbar,
+    "cim_mlp.hlo.txt": lower_cim_mlp,
+}
+
+
+def manifest() -> dict:
+    """Shape/layout contract consumed by the Rust runtime at load time."""
+    return {
+        "adc_model": {
+            "file": "adc_model.hlo.txt",
+            "batch": model.DSE_BATCH,
+            "n_params": N_PARAMS,
+            "n_metrics": N_METRICS,
+            "n_coefs": N_COEFS,
+            "default_coefs": [float(c) for c in DEFAULT_COEFS],
+        },
+        "crossbar": {
+            "file": "crossbar.hlo.txt",
+            "batch": model.MLP_BATCH,
+            "in_dim": model.MLP_IN,
+            "out_dim": model.MLP_HIDDEN,
+            "n_sum": model.MLP_NSUM_1,
+            "x_bits": model.X_BITS,
+            "cell_bits": model.CELL_BITS,
+        },
+        "cim_mlp": {
+            "file": "cim_mlp.hlo.txt",
+            "batch": model.MLP_BATCH,
+            "in_dim": model.MLP_IN,
+            "hidden_dim": model.MLP_HIDDEN,
+            "out_dim": model.MLP_OUT,
+            "n_sum_1": model.MLP_NSUM_1,
+            "n_sum_2": model.MLP_NSUM_2,
+            "x_bits": model.X_BITS,
+            "cell_bits": model.CELL_BITS,
+        },
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None, help="(compat) single-file target; "
+                    "writes all artifacts into its directory")
+    args = ap.parse_args()
+    out_dir = os.path.dirname(args.out) if args.out else args.out_dir
+    os.makedirs(out_dir, exist_ok=True)
+
+    for name, lower in ARTIFACTS.items():
+        path = os.path.join(out_dir, name)
+        text = lower()
+        with open(path, "w") as fh:
+            fh.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    mpath = os.path.join(out_dir, "manifest.json")
+    with open(mpath, "w") as fh:
+        json.dump(manifest(), fh, indent=2)
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""Layer-1 Pallas kernels and their pure-jnp reference oracles."""
+
+from . import adc_model, crossbar, noisy, ref  # noqa: F401

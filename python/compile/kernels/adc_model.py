@@ -1,0 +1,92 @@
+"""Pallas kernel: batched ADC energy/area model evaluation.
+
+This is the DSE hot-spot (Layer 1). The Rust coordinator sweeps millions of
+design points; each point is four architecture-level attributes and the
+model is a pair of piecewise power laws plus Eq. 1 — pure element-wise math,
+so the kernel is a VPU (vector-unit) kernel tiled over the design-point
+batch.
+
+TPU mapping (DESIGN.md §8): design points are tiled in (BLOCK, 4)-shaped
+VMEM blocks with an 8x128-aligned BLOCK; the 11-entry coefficient vector is
+replicated into every grid step (index_map -> 0). There is no MXU work —
+the roofline is VPU/memory-bound, so the only structural knobs are block
+size (VMEM residency) and fusing the energy/area/power outputs into a
+single pass, which this kernel does.
+
+Pallas runs with interpret=True: on this CPU PJRT build the kernel lowers
+to plain HLO so the Rust runtime can execute it; numerics are identical.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Design-point rows per grid step. 512 rows x 4 cols f32 in + 512 x 4 out
+# = 16 KiB VMEM per step — far under the ~16 MiB VMEM budget; chosen so the
+# grid still has enough steps to pipeline HBM->VMEM copies on real hardware.
+BLOCK = 512
+
+N_PARAMS = 4
+N_METRICS = 4
+N_COEFS = 11
+
+
+def _adc_model_kernel(params_ref, coefs_ref, out_ref):
+    """One grid step: evaluate the model on a (BLOCK, 4) tile of points."""
+    p = params_ref[...]  # (BLOCK, 4)
+    c = coefs_ref[...]   # (11,)
+
+    enob = p[:, 0]
+    log_f = p[:, 1]
+    log_t = p[:, 2]
+    n_adcs = p[:, 3]
+
+    # Energy: max of the two bounds (paper §II-A), all in log10 space.
+    log_e_min = c[0] + c[1] * enob + c[2] * log_t
+    log_e_trade = c[3] + c[4] * enob + c[5] * log_t + c[6] * log_f
+    log_e = jnp.maximum(log_e_min, log_e_trade)
+    energy_pj = 10.0 ** log_e
+
+    # Area: Eq. 1 in log10 space (the p10 calibration lives in d0).
+    log_area = c[7] + c[8] * log_t + c[9] * log_f + c[10] * log_e
+    area_um2 = 10.0 ** log_area
+
+    total_power_w = energy_pj * 1e-12 * (10.0 ** log_f) * n_adcs
+    total_area_um2 = area_um2 * n_adcs
+
+    out_ref[...] = jnp.stack(
+        [energy_pj, area_um2, total_power_w, total_area_um2], axis=1
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def adc_model(params, coefs, interpret=True):
+    """Evaluate the ADC model for a batch of design points.
+
+    Args:
+      params: f32[N, 4] — [enob, log10_f_per_adc, log10_tech_ratio, n_adcs]
+        per row; N must be a multiple of BLOCK (the Rust side pads).
+      coefs: f32[11] — fitted model coefficients (see coeffs.py for layout).
+      interpret: run Pallas in interpret mode (required for CPU PJRT).
+
+    Returns:
+      f32[N, 4] — [energy_pJ_per_convert, area_um2_per_adc, total_power_W,
+      total_area_um2] per row.
+    """
+    n = params.shape[0]
+    if n % BLOCK != 0:
+        raise ValueError(f"batch size {n} must be a multiple of {BLOCK}")
+    grid = (n // BLOCK,)
+    return pl.pallas_call(
+        _adc_model_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK, N_PARAMS), lambda i: (i, 0)),
+            pl.BlockSpec((N_COEFS,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK, N_METRICS), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, N_METRICS), jnp.float32),
+        interpret=interpret,
+    )(params, coefs)

@@ -1,0 +1,111 @@
+"""Pallas kernel: bit-sliced CiM crossbar matmul with ADC read-out.
+
+Functional simulation of the analog datapath the energy model prices
+(Layer 1). One RAELLA-style CiM array computes, per ADC convert, the
+analog sum of up to ``n_sum`` rows on each column line; the sum is read
+through the ADC transfer function (clip + uniform quantization) and then
+digitally shift-added across input bit-planes and weight cell-slices.
+
+GPU->TPU adaptation (DESIGN.md §8): the paper's analog column sum is the
+MXU contraction dimension. Each (input-bit-plane, cell-slice) pair is one
+(B, n_sum) @ (n_sum, OUT) matmul on the MXU; the ADC transfer function is
+a VPU epilogue on the (B, OUT) tile; the HBM->VMEM BlockSpec schedule
+streams row chunks exactly as the DACs stream rows into the array. The
+grid iterates over row chunks so each chunk's slice of x and w is resident
+in VMEM while the (B, OUT) accumulator stays in the output block across
+grid steps (revisited output block => accumulate in place).
+
+The ADC quantization step arrives as a runtime scalar input so the Rust
+side can sweep ADC resolution against one compiled artifact.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _crossbar_kernel(
+    x_ref, w_ref, step_ref, out_ref, *, x_bits, cell_bits, full_scale, n_chunks
+):
+    """Grid step = one row chunk: all bit-planes x cell-slices of the chunk.
+
+    x_ref:   (B, n_sum)    — this chunk's integer activations
+    w_ref:   (n_sum, OUT)  — this chunk's integer weights (both slices packed)
+    step_ref:(1,)          — ADC quantization step (runtime scalar)
+    out_ref: (B, OUT)      — accumulator, revisited across grid steps
+    """
+    chunk = pl.program_id(0)
+
+    @pl.when(chunk == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    x = x_ref[...]
+    w = w_ref[...]
+    step = step_ref[0]
+
+    w_levels = float(2**cell_bits)
+    w_lo = jnp.mod(w, w_levels)
+    w_hi = jnp.floor_divide(w, w_levels)
+
+    acc = jnp.zeros_like(out_ref)
+    for s in range(x_bits):
+        x_bit = jnp.mod(jnp.floor_divide(x, float(2**s)), 2.0)
+        for ci, w_slice in enumerate((w_lo, w_hi)):
+            # Analog column sum over <= n_sum rows (MXU matmul) ...
+            analog = jnp.dot(x_bit, w_slice, preferred_element_type=jnp.float32)
+            # ... read through the ADC transfer function (VPU epilogue).
+            clipped = jnp.clip(analog, 0.0, full_scale)
+            quant = jnp.round(clipped / step) * step
+            acc = acc + (2.0 ** (s + cell_bits * ci)) * quant
+    out_ref[...] = out_ref[...] + acc
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_sum", "x_bits", "cell_bits", "interpret")
+)
+def cim_matmul(x_q, w_q, adc_step, n_sum, x_bits=4, cell_bits=2, interpret=True):
+    """Bit-sliced CiM crossbar matmul with per-chunk ADC quantization.
+
+    Matches ``ref.cim_matmul_ref`` exactly (same op order in f32).
+
+    Args:
+      x_q: f32[B, IN] integer-valued activations in [0, 2^x_bits).
+      w_q: f32[IN, OUT] integer-valued weights in [0, 2^(2*cell_bits)).
+      adc_step: f32[1] runtime ADC quantization step.
+      n_sum: analog sum size (rows per ADC convert); must divide IN.
+      x_bits: DAC input resolution (bit-serial planes).
+      cell_bits: bits per memory cell (weights span two cell slices).
+      interpret: run Pallas in interpret mode (required for CPU PJRT).
+
+    Returns:
+      f32[B, OUT] — the digitally recombined (lossy) matmul.
+    """
+    b, in_dim = x_q.shape
+    out_dim = w_q.shape[1]
+    if in_dim % n_sum != 0:
+        raise ValueError(f"IN={in_dim} must be a multiple of n_sum={n_sum}")
+    n_chunks = in_dim // n_sum
+    full_scale = float(n_sum * (2**cell_bits - 1))
+
+    kernel = functools.partial(
+        _crossbar_kernel,
+        x_bits=x_bits,
+        cell_bits=cell_bits,
+        full_scale=full_scale,
+        n_chunks=n_chunks,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(n_chunks,),
+        in_specs=[
+            pl.BlockSpec((b, n_sum), lambda c: (0, c)),
+            pl.BlockSpec((n_sum, out_dim), lambda c: (c, 0)),
+            pl.BlockSpec((1,), lambda c: (0,)),
+        ],
+        out_specs=pl.BlockSpec((b, out_dim), lambda c: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, out_dim), jnp.float32),
+        interpret=interpret,
+    )(x_q, w_q, adc_step)

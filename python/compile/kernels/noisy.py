@@ -1,0 +1,107 @@
+"""Pallas kernel: crossbar matmul with a *noisy* ADC transfer function.
+
+The paper measures resolution as ENOB — "effective ADC resolution after
+considering nonidealities such as noise and nonlinearity". This variant
+adds input-referred noise to each analog column sum before quantization,
+so the functional simulation can measure effective ENOB *below* the
+nominal bit count and validate the `adc::enob` composition rules
+(quantization SNDR + noise SNDR combine as powers).
+
+Noise is sampled in the Layer-2 graph (jax.random, counter-based threefry
+with an explicit key input so the artifact stays deterministic given the
+key) and streamed into the kernel per (chunk, bit-plane, cell-slice) —
+inside the kernel it is just an add on the VPU epilogue.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _noisy_crossbar_kernel(
+    x_ref, w_ref, noise_ref, step_ref, out_ref, *, x_bits, cell_bits, full_scale
+):
+    """Grid step = one row chunk (same schedule as kernels.crossbar).
+
+    noise_ref: (1, x_bits*2, B, OUT) — this chunk's per-plane/slice noise.
+    """
+    chunk = pl.program_id(0)
+
+    @pl.when(chunk == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    x = x_ref[...]
+    w = w_ref[...]
+    step = step_ref[0]
+
+    w_levels = float(2**cell_bits)
+    w_lo = jnp.mod(w, w_levels)
+    w_hi = jnp.floor_divide(w, w_levels)
+
+    acc = jnp.zeros_like(out_ref)
+    for s in range(x_bits):
+        x_bit = jnp.mod(jnp.floor_divide(x, float(2**s)), 2.0)
+        for ci, w_slice in enumerate((w_lo, w_hi)):
+            analog = jnp.dot(x_bit, w_slice, preferred_element_type=jnp.float32)
+            # Input-referred ADC noise, then the ideal transfer function.
+            noisy = analog + noise_ref[0, s * 2 + ci]
+            clipped = jnp.clip(noisy, 0.0, full_scale)
+            quant = jnp.round(clipped / step) * step
+            acc = acc + (2.0 ** (s + cell_bits * ci)) * quant
+    out_ref[...] = out_ref[...] + acc
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_sum", "x_bits", "cell_bits", "interpret")
+)
+def cim_matmul_noisy(
+    x_q, w_q, adc_step, noise_sigma, key, n_sum, x_bits=4, cell_bits=2, interpret=True
+):
+    """Bit-sliced CiM matmul with Gaussian input-referred ADC noise.
+
+    Args:
+      x_q: f32[B, IN] integer activations.
+      w_q: f32[IN, OUT] integer weights (two cell slices per weight).
+      adc_step: f32[1] quantization step.
+      noise_sigma: f32[1] noise std-dev in analog-sum units (0 => matches
+        kernels.crossbar.cim_matmul exactly).
+      key: jax PRNG key (threefry counter — deterministic per key).
+      n_sum: analog sum size; must divide IN.
+
+    Returns:
+      f32[B, OUT].
+    """
+    b, in_dim = x_q.shape
+    out_dim = w_q.shape[1]
+    if in_dim % n_sum != 0:
+        raise ValueError(f"IN={in_dim} must be a multiple of n_sum={n_sum}")
+    n_chunks = in_dim // n_sum
+    full_scale = float(n_sum * (2**cell_bits - 1))
+
+    # One noise draw per (chunk, plane, slice, batch, column) analog read.
+    noise = noise_sigma[0] * jax.random.normal(
+        key, (n_chunks, x_bits * 2, b, out_dim), dtype=jnp.float32
+    )
+
+    kernel = functools.partial(
+        _noisy_crossbar_kernel,
+        x_bits=x_bits,
+        cell_bits=cell_bits,
+        full_scale=full_scale,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(n_chunks,),
+        in_specs=[
+            pl.BlockSpec((b, n_sum), lambda c: (0, c)),
+            pl.BlockSpec((n_sum, out_dim), lambda c: (c, 0)),
+            pl.BlockSpec((1, x_bits * 2, b, out_dim), lambda c: (c, 0, 0, 0)),
+            pl.BlockSpec((1,), lambda c: (0,)),
+        ],
+        out_specs=pl.BlockSpec((b, out_dim), lambda c: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, out_dim), jnp.float32),
+        interpret=interpret,
+    )(x_q, w_q, noise, adc_step)

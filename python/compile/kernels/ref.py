@@ -1,0 +1,113 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: pytest asserts the Pallas kernels
+(interpret=True) match these references bit-for-bit (same dtype, same op
+order where it matters) or to tight float tolerance.
+"""
+
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# ADC energy/area model (paper §II) — reference implementation
+# ---------------------------------------------------------------------------
+
+def adc_model_ref(params, coefs):
+    """Evaluate the ADC model for a batch of design points.
+
+    Args:
+      params: f32[N, 4] — columns [enob, log10_f_per_adc, log10_tech_ratio,
+        n_adcs]. ``log10_tech_ratio`` is log10(tech_nm / 32).
+      coefs: f32[11] — [a0,a1,a2, b0,b1,b2,b3, d0,d1,d2,d3], see coeffs.py.
+
+    Returns:
+      f32[N, 4] — [energy_pJ_per_convert, area_um2_per_adc,
+                   total_power_W, total_area_um2].
+    """
+    enob = params[:, 0]
+    log_f = params[:, 1]
+    log_t = params[:, 2]
+    n_adcs = params[:, 3]
+
+    a0, a1, a2 = coefs[0], coefs[1], coefs[2]
+    b0, b1, b2, b3 = coefs[3], coefs[4], coefs[5], coefs[6]
+    d0, d1, d2, d3 = coefs[7], coefs[8], coefs[9], coefs[10]
+
+    log_e_min = a0 + a1 * enob + a2 * log_t
+    log_e_trade = b0 + b1 * enob + b2 * log_t + b3 * log_f
+    log_e = jnp.maximum(log_e_min, log_e_trade)
+    energy_pj = 10.0 ** log_e
+
+    log_area = d0 + d1 * log_t + d2 * log_f + d3 * log_e
+    area_um2 = 10.0 ** log_area
+
+    # total power: E/convert * converts/s * number of ADCs
+    total_power_w = energy_pj * 1e-12 * (10.0 ** log_f) * n_adcs
+    total_area_um2 = area_um2 * n_adcs
+
+    return jnp.stack([energy_pj, area_um2, total_power_w, total_area_um2], axis=1)
+
+
+# ---------------------------------------------------------------------------
+# CiM crossbar (bit-sliced analog MAC with ADC read-out) — reference
+# ---------------------------------------------------------------------------
+
+def adc_quantize_ref(v, full_scale, step):
+    """ADC transfer function: clip to [0, full_scale], quantize to ``step``."""
+    clipped = jnp.clip(v, 0.0, full_scale)
+    return jnp.round(clipped / step) * step
+
+
+def cim_matmul_ref(x_q, w_q, n_sum, x_bits, cell_bits, adc_step):
+    """Bit-sliced CiM crossbar matmul with per-chunk ADC quantization.
+
+    Models an analog crossbar: the input activations stream in one bit-plane
+    at a time (1-bit DACs), weights are stored across ``cell_bits``-bit
+    cells, at most ``n_sum`` rows are summed on an analog column line per
+    ADC convert, and each column sum is read through the ADC transfer
+    function before digital shift-add recombination.
+
+    Args:
+      x_q: f32[B, IN] integer-valued activations in [0, 2^x_bits).
+      w_q: f32[IN, OUT] integer-valued weights in [0, 2^(2*cell_bits)).
+        (two cell slices per weight: low/high ``cell_bits`` bits)
+      n_sum: analog sum size (rows summed per ADC convert); divides IN.
+      x_bits: DAC input resolution (bit-serial planes).
+      cell_bits: bits stored per memory cell.
+      adc_step: ADC quantization step on the analog column value.
+
+    Returns:
+      f32[B, OUT] — the digitally recombined (lossy) matmul result.
+    """
+    b, in_dim = x_q.shape
+    out_dim = w_q.shape[1]
+    n_chunks = in_dim // n_sum
+    full_scale = float(n_sum * (2**cell_bits - 1))
+
+    w_levels = float(2**cell_bits)
+    w_lo = jnp.mod(w_q, w_levels)
+    w_hi = jnp.floor_divide(w_q, w_levels)
+
+    y = jnp.zeros((b, out_dim), dtype=jnp.float32)
+    for s in range(x_bits):
+        x_bit = jnp.mod(jnp.floor_divide(x_q, float(2**s)), 2.0)
+        for ci, w_slice in enumerate((w_lo, w_hi)):
+            acc = jnp.zeros((b, out_dim), dtype=jnp.float32)
+            for c in range(n_chunks):
+                rows = slice(c * n_sum, (c + 1) * n_sum)
+                analog = x_bit[:, rows] @ w_slice[rows, :]
+                acc = acc + adc_quantize_ref(analog, full_scale, adc_step)
+            y = y + (2.0 ** (s + cell_bits * ci)) * acc
+    return y
+
+
+def exact_matmul_ref(x_q, w_q):
+    """Lossless integer matmul — the ADC-free ground truth for error stats."""
+    return x_q @ w_q
+
+
+def sqnr_db(exact, lossy):
+    """Signal-to-quantization-noise ratio in dB between two tensors."""
+    sig = jnp.mean(exact**2)
+    err = jnp.mean((exact - lossy) ** 2)
+    return 10.0 * jnp.log10(sig / jnp.maximum(err, 1e-30))

@@ -1,0 +1,81 @@
+"""Layer 2: JAX compute graphs built on the Layer-1 Pallas kernels.
+
+Two graphs are AOT-lowered to HLO text (aot.py) and executed from Rust:
+
+  * ``adc_model_batch`` — the DSE evaluation graph. The Rust sweep engine
+    streams (BATCH, 4) design-point tiles plus the fitted 11-coefficient
+    vector through the compiled executable.
+  * ``cim_mlp`` — a two-layer MLP whose matmuls run entirely through the
+    bit-sliced CiM crossbar kernel, including inter-layer requantization.
+    Used by the functional-sim example to demonstrate that the datapath
+    the energy model prices actually computes.
+
+Everything here is build-time Python; nothing in this package is imported
+at runtime.
+"""
+
+import jax.numpy as jnp
+
+from .kernels.adc_model import adc_model
+from .kernels.crossbar import cim_matmul
+
+#: Compile-time batch of the DSE evaluation artifact. The Rust side pads
+#: the final partial tile. Must be a multiple of kernels.adc_model.BLOCK.
+DSE_BATCH = 4096
+
+#: Compile-time shapes of the functional-sim MLP (16x16 digit images).
+MLP_BATCH = 32
+MLP_IN = 256
+MLP_HIDDEN = 64
+MLP_OUT = 16  # 10 classes, padded to 16 for lane alignment
+MLP_NSUM_1 = 128  # analog sum size, layer 1 (RAELLA-S-like)
+MLP_NSUM_2 = 64   # analog sum size, layer 2 (column-limited)
+X_BITS = 4
+CELL_BITS = 2
+
+
+def adc_model_batch(params, coefs):
+    """DSE evaluation graph: (DSE_BATCH, 4) design points -> (DSE_BATCH, 4).
+
+    Returns a 1-tuple so the lowered HLO root is a tuple (the Rust loader
+    unwraps with ``to_tuple1``).
+    """
+    return (adc_model(params, coefs),)
+
+
+def cim_linear(x_q, w_q, adc_step, n_sum):
+    """One CiM crossbar layer (thin alias with the artifact's static config)."""
+    return cim_matmul(
+        x_q, w_q, adc_step, n_sum=n_sum, x_bits=X_BITS, cell_bits=CELL_BITS
+    )
+
+
+def crossbar_layer(x_q, w_q, adc_step):
+    """Single-layer functional-check graph: (B, IN) @ (IN, HIDDEN)."""
+    return (cim_linear(x_q, w_q, adc_step, MLP_NSUM_1),)
+
+
+def requantize(y, scale, x_bits=X_BITS):
+    """Digital requantization between CiM layers: scale, ReLU, clip to DAC range."""
+    q = jnp.round(y * scale)
+    return jnp.clip(q, 0.0, float(2**x_bits - 1))
+
+
+def cim_mlp(x_q, w1_q, w2_q, step1, step2, scale1):
+    """Two-layer CiM MLP forward, every matmul through the crossbar kernel.
+
+    Args:
+      x_q: f32[MLP_BATCH, MLP_IN] integer activations in [0, 2^X_BITS).
+      w1_q: f32[MLP_IN, MLP_HIDDEN] integer weights in [0, 2^(2*CELL_BITS)).
+      w2_q: f32[MLP_HIDDEN, MLP_OUT] integer weights.
+      step1, step2: f32[1] runtime ADC quantization steps per layer.
+      scale1: f32[1] inter-layer requantization scale.
+
+    Returns:
+      (f32[MLP_BATCH, MLP_OUT],) logits (padded classes stay near zero when
+      the corresponding weight columns are zero).
+    """
+    h = cim_linear(x_q, w1_q, step1, MLP_NSUM_1)
+    h_q = requantize(h, scale1[0])
+    logits = cim_linear(h_q, w2_q, step2, MLP_NSUM_2)
+    return (logits,)

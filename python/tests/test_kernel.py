@@ -1,0 +1,163 @@
+"""Kernel-vs-reference correctness: the core L1 signal.
+
+Hypothesis sweeps shapes, dtypes-of-content (integer ranges), and model
+parameters; every case asserts the Pallas kernel (interpret=True) matches
+the pure-jnp oracle.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.coeffs import DEFAULT_COEFS, N_COEFS
+from compile.kernels.adc_model import BLOCK, adc_model
+from compile.kernels.crossbar import cim_matmul
+from compile.kernels import ref
+
+
+def random_params(rng, n):
+    """Design points spanning the paper's evaluation ranges."""
+    return np.stack(
+        [
+            rng.uniform(1.0, 16.0, n),      # ENOB
+            rng.uniform(3.0, 10.6, n),      # log10 f: 1e3 .. 4e10 conv/s
+            rng.uniform(-0.3, 1.25, n),     # log10(T/32): 16nm .. 570nm
+            rng.integers(1, 64, n).astype(np.float64),
+        ],
+        axis=1,
+    ).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# adc_model kernel
+# ---------------------------------------------------------------------------
+
+class TestAdcModelKernel:
+    def test_matches_ref_default_coefs(self):
+        rng = np.random.default_rng(1)
+        p = random_params(rng, 2 * BLOCK)
+        out = np.asarray(adc_model(jnp.asarray(p), jnp.asarray(DEFAULT_COEFS)))
+        expect = np.asarray(ref.adc_model_ref(jnp.asarray(p), jnp.asarray(DEFAULT_COEFS)))
+        np.testing.assert_allclose(out, expect, rtol=1e-5)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        blocks=st.integers(1, 4),
+        coef_jitter=st.floats(-0.2, 0.2),
+    )
+    def test_matches_ref_swept(self, seed, blocks, coef_jitter):
+        rng = np.random.default_rng(seed)
+        p = random_params(rng, blocks * BLOCK)
+        coefs = (DEFAULT_COEFS + np.float32(coef_jitter)).astype(np.float32)
+        out = np.asarray(adc_model(jnp.asarray(p), jnp.asarray(coefs)))
+        expect = np.asarray(ref.adc_model_ref(jnp.asarray(p), jnp.asarray(coefs)))
+        np.testing.assert_allclose(out, expect, rtol=2e-5)
+
+    def test_rejects_unaligned_batch(self):
+        p = np.zeros((BLOCK + 1, 4), np.float32)
+        with pytest.raises(ValueError, match="multiple"):
+            adc_model(jnp.asarray(p), jnp.asarray(DEFAULT_COEFS))
+
+    def test_energy_is_max_of_bounds(self):
+        """Low throughput sits on the flat bound; high sits on the tradeoff."""
+        p = np.zeros((BLOCK, 4), np.float32)
+        p[:, 0] = 8.0      # ENOB
+        p[:, 3] = 1.0      # n_adcs
+        p[: BLOCK // 2, 1] = 4.0    # 1e4 conv/s — deep in the flat region
+        p[BLOCK // 2 :, 1] = 10.0   # 1e10 conv/s — deep in the tradeoff region
+        out = np.asarray(adc_model(jnp.asarray(p), jnp.asarray(DEFAULT_COEFS)))
+        low, high = out[: BLOCK // 2, 0], out[BLOCK // 2 :, 0]
+        assert np.allclose(low, low[0])          # flat: no throughput dependence
+        assert high[0] > 50 * low[0]             # tradeoff: much higher energy
+
+    def test_power_and_total_area_scale_with_n_adcs(self):
+        p = np.zeros((BLOCK, 4), np.float32)
+        p[:, 0], p[:, 1], p[:, 2] = 7.0, 8.0, 0.0
+        p[:, 3] = np.arange(1, BLOCK + 1, dtype=np.float32)
+        out = np.asarray(adc_model(jnp.asarray(p), jnp.asarray(DEFAULT_COEFS)))
+        # per-ADC metrics constant; totals linear in n_adcs
+        assert np.allclose(out[:, 0], out[0, 0], rtol=1e-6)
+        assert np.allclose(out[:, 1], out[0, 1], rtol=1e-6)
+        np.testing.assert_allclose(out[:, 2] / out[0, 2], p[:, 3], rtol=1e-5)
+        np.testing.assert_allclose(out[:, 3] / out[0, 3], p[:, 3], rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# crossbar kernel
+# ---------------------------------------------------------------------------
+
+def random_crossbar_case(rng, b, in_dim, out_dim, x_bits, cell_bits):
+    x = rng.integers(0, 2**x_bits, (b, in_dim)).astype(np.float32)
+    w = rng.integers(0, 2 ** (2 * cell_bits), (in_dim, out_dim)).astype(np.float32)
+    return x, w
+
+
+class TestCrossbarKernel:
+    @settings(max_examples=20, deadline=None)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        b=st.sampled_from([1, 4, 8, 16]),
+        chunks=st.integers(1, 4),
+        n_sum=st.sampled_from([16, 32, 64, 128]),
+        out_dim=st.sampled_from([8, 16, 64]),
+        x_bits=st.integers(1, 5),
+        cell_bits=st.integers(1, 3),
+        step=st.floats(0.5, 16.0),
+    )
+    def test_matches_ref_swept(
+        self, seed, b, chunks, n_sum, out_dim, x_bits, cell_bits, step
+    ):
+        rng = np.random.default_rng(seed)
+        in_dim = chunks * n_sum
+        x, w = random_crossbar_case(rng, b, in_dim, out_dim, x_bits, cell_bits)
+        got = np.asarray(
+            cim_matmul(
+                jnp.asarray(x), jnp.asarray(w), jnp.asarray([step], dtype=np.float32),
+                n_sum=n_sum, x_bits=x_bits, cell_bits=cell_bits,
+            )
+        )
+        want = np.asarray(
+            ref.cim_matmul_ref(jnp.asarray(x), jnp.asarray(w), n_sum, x_bits,
+                               cell_bits, np.float32(step))
+        )
+        np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-3)
+
+    def test_fine_step_recovers_exact_matmul(self):
+        """With step=1 (ideal ADC) and no clipping, the CiM path is lossless."""
+        rng = np.random.default_rng(7)
+        x, w = random_crossbar_case(rng, 8, 256, 32, 4, 2)
+        got = np.asarray(
+            cim_matmul(jnp.asarray(x), jnp.asarray(w),
+                       jnp.asarray([1.0], np.float32), n_sum=128)
+        )
+        exact = np.asarray(ref.exact_matmul_ref(jnp.asarray(x), jnp.asarray(w)))
+        np.testing.assert_allclose(got, exact, rtol=0, atol=1e-2)
+
+    def test_coarser_adc_monotonically_degrades_sqnr(self):
+        """Doubling the ADC step must not improve SQNR (paper's ENOB knob)."""
+        rng = np.random.default_rng(11)
+        x, w = random_crossbar_case(rng, 16, 256, 32, 4, 2)
+        exact = ref.exact_matmul_ref(jnp.asarray(x), jnp.asarray(w))
+        sqnrs = []
+        for step in [1.0, 2.0, 4.0, 8.0, 16.0]:
+            y = cim_matmul(jnp.asarray(x), jnp.asarray(w),
+                           jnp.asarray([step], np.float32), n_sum=128)
+            sqnrs.append(float(ref.sqnr_db(exact, y)))
+        assert all(a >= b - 1e-6 for a, b in zip(sqnrs, sqnrs[1:])), sqnrs
+
+    def test_rejects_bad_n_sum(self):
+        x = np.zeros((4, 100), np.float32)
+        w = np.zeros((100, 8), np.float32)
+        with pytest.raises(ValueError, match="multiple"):
+            cim_matmul(jnp.asarray(x), jnp.asarray(w),
+                       jnp.asarray([1.0], np.float32), n_sum=64)
+
+    def test_zero_weights_give_zero_output(self):
+        x = np.full((4, 128), 3.0, np.float32)
+        w = np.zeros((128, 8), np.float32)
+        y = np.asarray(cim_matmul(jnp.asarray(x), jnp.asarray(w),
+                                  jnp.asarray([2.0], np.float32), n_sum=64))
+        assert np.all(y == 0.0)

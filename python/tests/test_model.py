@@ -1,0 +1,83 @@
+"""Layer-2 graph tests: shapes, requantization, MLP composition."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile import model
+from compile.coeffs import DEFAULT_COEFS, N_METRICS, N_PARAMS
+from compile.kernels import ref
+
+
+def mlp_inputs(seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.integers(0, 2**model.X_BITS, (model.MLP_BATCH, model.MLP_IN))
+    w1 = rng.integers(0, 2 ** (2 * model.CELL_BITS), (model.MLP_IN, model.MLP_HIDDEN))
+    w2 = rng.integers(0, 2 ** (2 * model.CELL_BITS), (model.MLP_HIDDEN, model.MLP_OUT))
+    return (x.astype(np.float32), w1.astype(np.float32), w2.astype(np.float32))
+
+
+class TestAdcModelBatch:
+    def test_shape_and_tuple(self):
+        p = np.zeros((model.DSE_BATCH, N_PARAMS), np.float32)
+        p[:, 0], p[:, 1], p[:, 3] = 8.0, 8.0, 1.0
+        (out,) = model.adc_model_batch(jnp.asarray(p), jnp.asarray(DEFAULT_COEFS))
+        assert out.shape == (model.DSE_BATCH, N_METRICS)
+        assert np.all(np.isfinite(np.asarray(out)))
+
+
+class TestRequantize:
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), scale=st.floats(1e-3, 2.0))
+    def test_range_and_integrality(self, seed, scale):
+        rng = np.random.default_rng(seed)
+        y = rng.uniform(-50, 5000, (8, 16)).astype(np.float32)
+        q = np.asarray(model.requantize(jnp.asarray(y), scale))
+        assert q.min() >= 0.0
+        assert q.max() <= 2**model.X_BITS - 1
+        np.testing.assert_allclose(q, np.round(q))
+
+    def test_negative_inputs_clamp_to_zero(self):
+        q = np.asarray(model.requantize(jnp.asarray(-np.ones((2, 2), np.float32)), 1.0))
+        assert np.all(q == 0.0)
+
+
+class TestCimMlp:
+    def test_shapes(self):
+        x, w1, w2 = mlp_inputs()
+        (logits,) = model.cim_mlp(
+            jnp.asarray(x), jnp.asarray(w1), jnp.asarray(w2),
+            jnp.asarray([1.0], np.float32), jnp.asarray([1.0], np.float32),
+            jnp.asarray([0.01], np.float32),
+        )
+        assert logits.shape == (model.MLP_BATCH, model.MLP_OUT)
+        assert np.all(np.isfinite(np.asarray(logits)))
+
+    def test_matches_composed_reference(self):
+        """The full MLP graph == ref crossbar -> requantize -> ref crossbar."""
+        x, w1, w2 = mlp_inputs(3)
+        step1, step2, scale1 = 1.0, 1.0, 0.02
+        (got,) = model.cim_mlp(
+            jnp.asarray(x), jnp.asarray(w1), jnp.asarray(w2),
+            jnp.asarray([step1], np.float32), jnp.asarray([step2], np.float32),
+            jnp.asarray([scale1], np.float32),
+        )
+        h = ref.cim_matmul_ref(jnp.asarray(x), jnp.asarray(w1), model.MLP_NSUM_1,
+                               model.X_BITS, model.CELL_BITS, step1)
+        h_q = model.requantize(h, scale1)
+        want = ref.cim_matmul_ref(h_q, jnp.asarray(w2), model.MLP_NSUM_2,
+                                  model.X_BITS, model.CELL_BITS, step2)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-6, atol=1e-3)
+
+    def test_zero_padded_classes_stay_zero(self):
+        """Weight columns for padded classes are zero => logits exactly zero."""
+        x, w1, w2 = mlp_inputs(5)
+        w2[:, 10:] = 0.0
+        (logits,) = model.cim_mlp(
+            jnp.asarray(x), jnp.asarray(w1), jnp.asarray(w2),
+            jnp.asarray([1.0], np.float32), jnp.asarray([1.0], np.float32),
+            jnp.asarray([0.02], np.float32),
+        )
+        assert np.all(np.asarray(logits)[:, 10:] == 0.0)

@@ -1,0 +1,75 @@
+"""Noisy-ADC kernel tests: ENOB semantics (resolution after noise)."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.crossbar import cim_matmul
+from compile.kernels.noisy import cim_matmul_noisy
+from compile.kernels import ref
+
+
+def case(seed, b=8, in_dim=256, out_dim=32, x_bits=4, cell_bits=2):
+    rng = np.random.default_rng(seed)
+    x = rng.integers(0, 2**x_bits, (b, in_dim)).astype(np.float32)
+    w = rng.integers(0, 2 ** (2 * cell_bits), (in_dim, out_dim)).astype(np.float32)
+    return jnp.asarray(x), jnp.asarray(w)
+
+
+class TestNoisyCrossbar:
+    def test_zero_noise_matches_ideal_kernel(self):
+        x, w = case(0)
+        step = jnp.asarray([2.0], jnp.float32)
+        ideal = cim_matmul(x, w, step, n_sum=128)
+        noisy = cim_matmul_noisy(
+            x, w, step, jnp.asarray([0.0], jnp.float32), jax.random.PRNGKey(1),
+            n_sum=128,
+        )
+        np.testing.assert_allclose(np.asarray(noisy), np.asarray(ideal), atol=1e-3)
+
+    def test_deterministic_given_key(self):
+        x, w = case(1)
+        args = (x, w, jnp.asarray([1.0], jnp.float32), jnp.asarray([3.0], jnp.float32))
+        a = cim_matmul_noisy(*args, jax.random.PRNGKey(7), n_sum=128)
+        b = cim_matmul_noisy(*args, jax.random.PRNGKey(7), n_sum=128)
+        c = cim_matmul_noisy(*args, jax.random.PRNGKey(8), n_sum=128)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert np.any(np.asarray(a) != np.asarray(c))
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), sigma=st.floats(0.5, 8.0))
+    def test_noise_degrades_sqnr(self, seed, sigma):
+        x, w = case(seed)
+        step = jnp.asarray([1.0], jnp.float32)
+        exact = ref.exact_matmul_ref(x, w)
+        clean = cim_matmul(x, w, step, n_sum=128)
+        noisy = cim_matmul_noisy(
+            x, w, step, jnp.asarray([sigma], jnp.float32), jax.random.PRNGKey(seed),
+            n_sum=128,
+        )
+        assert float(ref.sqnr_db(exact, noisy)) < float(ref.sqnr_db(exact, clean))
+
+    def test_effective_enob_follows_noise_composition(self):
+        """Measured ENOB tracks the quantization+noise power composition.
+
+        With a fine quantizer (step 1) and per-read noise sigma, the error
+        power per output is ~ n_reads * sigma^2 (noise dominates
+        quantization). Effective ENOB = (SQNR - 1.76)/6.02 must fall with
+        sigma at ~1 bit per doubling once noise dominates.
+        """
+        x, w = case(42, b=16)
+        step = jnp.asarray([1.0], jnp.float32)
+        exact = ref.exact_matmul_ref(x, w)
+        enobs = []
+        for sigma in [2.0, 4.0, 8.0]:
+            y = cim_matmul_noisy(
+                x, w, step, jnp.asarray([sigma], jnp.float32), jax.random.PRNGKey(3),
+                n_sum=128,
+            )
+            sqnr = float(ref.sqnr_db(exact, y))
+            enobs.append((sqnr - 1.76) / 6.02)
+        drops = [a - b for a, b in zip(enobs, enobs[1:])]
+        for d in drops:
+            assert 0.6 < d < 1.4, f"ENOB drop per noise doubling: {drops} ({enobs})"

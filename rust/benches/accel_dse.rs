@@ -1,0 +1,77 @@
+//! Bench: accelerator-level DSE (§I claim 3 — "explore CiM accelerator
+//! designs using different ADCs") across three workloads with different
+//! utilization profiles, reporting the Pareto-optimal (sum size, ENOB,
+//! n_adcs) configurations per workload, plus sweep timing.
+//!
+//! Run with `cargo bench --bench accel_dse`.
+
+use cimdse::adc::{AdcModel, fit_model};
+use cimdse::bench_util::Bench;
+use cimdse::dse::accel::{AccelSweepSpec, accel_pareto, run_accel_sweep};
+use cimdse::exec::default_workers;
+use cimdse::report::Table;
+use cimdse::survey::generator::{SurveyConfig, generate_survey};
+use cimdse::util::units::{fmt_area_um2, fmt_energy_pj};
+use cimdse::workload::{lenet, resnet18, vgg16};
+
+fn main() {
+    let survey = generate_survey(&SurveyConfig::default());
+    let model = AdcModel::new(fit_model(&survey).unwrap().coefs);
+    let spec = AccelSweepSpec::default();
+    println!("{} fidelity-feasible candidate architectures per workload\n", spec.candidates().len());
+
+    let mut best_sum_sizes = Vec::new();
+    for workload in [lenet(), resnet18(), vgg16()] {
+        let points = run_accel_sweep(&spec, &model, &workload, default_workers()).unwrap();
+        let front = accel_pareto(&points);
+        let best = points
+            .iter()
+            .min_by(|a, b| a.eap.total_cmp(&b.eap))
+            .unwrap();
+        best_sum_sizes.push((workload.name.clone(), best.arch.sum_size));
+
+        let mut t = Table::new(vec!["config", "energy", "area", "ADC E%", "EAP rank"]);
+        let mut on_front: Vec<_> = front.iter().map(|&i| &points[i]).collect();
+        on_front.sort_by(|a, b| a.eap.total_cmp(&b.eap));
+        for (rank, p) in on_front.iter().take(8).enumerate() {
+            t.row(vec![
+                p.arch.name.clone(),
+                fmt_energy_pj(p.energy_pj),
+                fmt_area_um2(p.area_um2),
+                format!("{:.0}%", 100.0 * p.adc_energy_fraction),
+                (rank + 1).to_string(),
+            ]);
+        }
+        println!(
+            "{}: {} Pareto-optimal configs (of {}), best-EAP = {}",
+            workload.name,
+            front.len(),
+            points.len(),
+            best.arch.name
+        );
+        println!("{}", t.render());
+    }
+
+    // Structural expectation: tiny-tensor workloads choose smaller analog
+    // sums than dense large-tensor workloads.
+    let get = |name: &str| best_sum_sizes.iter().find(|(n, _)| n == name).unwrap().1;
+    assert!(
+        get("lenet") <= get("vgg16"),
+        "lenet sum {} should be <= vgg16 sum {}",
+        get("lenet"),
+        get("vgg16")
+    );
+    println!(
+        "ok: best sum size scales with workload tensor size: lenet {} <= resnet18 {} ~ vgg16 {}\n",
+        get("lenet"),
+        get("resnet18"),
+        get("vgg16")
+    );
+
+    let bench = Bench::slow();
+    bench.run("accel DSE: 320 feasible candidates x lenet", || {
+        std::hint::black_box(
+            run_accel_sweep(&spec, &model, &lenet(), default_workers()).unwrap(),
+        );
+    });
+}

@@ -1,0 +1,65 @@
+//! Bench: regenerate the paper's **Fig. 2** — published ADC throughput vs
+//! energy, with the model's two-bound lines for 4b/8b/12b at 32 nm —
+//! and time the full figure pipeline (survey synth → fit → series).
+//!
+//! Run with `cargo bench --bench fig2_energy`.
+
+use cimdse::adc::{AdcModel, fit_model};
+use cimdse::bench_util::Bench;
+use cimdse::dse::figures;
+use cimdse::report::Table;
+use cimdse::survey::generator::{SurveyConfig, generate_survey};
+
+fn main() {
+    let survey = generate_survey(&SurveyConfig::default());
+    let model = AdcModel::new(fit_model(&survey).unwrap().coefs);
+
+    // --- the figure itself -------------------------------------------------
+    let data = figures::fig2(&survey, &model, 40);
+    println!(
+        "{}",
+        figures::render_fig23(
+            &data,
+            "Fig. 2: ADC throughput vs energy (32 nm; dots = survey, lines = model bounds)",
+            "energy (pJ/convert)"
+        )
+    );
+
+    // Machine-readable series (the paper's rows).
+    let mut t = Table::new(vec!["enob", "throughput", "model energy (pJ/convert)"]);
+    for (enob, pts) in &data.lines {
+        for &(f, e) in pts.iter().step_by(4) {
+            t.row(vec![format!("{enob}"), format!("{f:.3e}"), format!("{e:.4e}")]);
+        }
+    }
+    println!("CSV:\n{}", t.to_csv());
+
+    // Structural assertions the paper states (§II-A): flat at low f,
+    // rising at high f, knee earlier for higher ENOB.
+    for (enob, pts) in &data.lines {
+        let flat = pts[1].1 / pts[0].1;
+        assert!((flat - 1.0).abs() < 1e-6, "{enob}b not flat at low throughput");
+        let rising = pts[pts.len() - 1].1 / pts[pts.len() - 2].1;
+        assert!(rising > 1.0, "{enob}b not rising at high throughput");
+    }
+    let knee = |enob: f64| model.crossover_throughput(enob, 32.0);
+    assert!(knee(12.0) < knee(8.0) && knee(8.0) < knee(4.0));
+    println!(
+        "knees: 4b {:.2e}, 8b {:.2e}, 12b {:.2e} converts/s (falling with ENOB ok)\n",
+        knee(4.0),
+        knee(8.0),
+        knee(12.0)
+    );
+
+    // --- timing -------------------------------------------------------------
+    let bench = Bench::default();
+    bench.run("fig2: survey synthesis (700 records)", || {
+        std::hint::black_box(generate_survey(&SurveyConfig::default()));
+    });
+    bench.run("fig2: envelope fit", || {
+        std::hint::black_box(fit_model(&survey).unwrap());
+    });
+    bench.run("fig2: figure series generation", || {
+        std::hint::black_box(figures::fig2(&survey, &model, 40));
+    });
+}

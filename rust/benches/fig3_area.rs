@@ -1,0 +1,73 @@
+//! Bench: regenerate the paper's **Fig. 3** — published ADC throughput vs
+//! area with model lines (Eq. 1 + p10 calibration) — and time it.
+//!
+//! Run with `cargo bench --bench fig3_area`.
+
+use cimdse::adc::{AdcModel, AdcQuery, fit_model};
+use cimdse::bench_util::Bench;
+use cimdse::dse::figures;
+use cimdse::report::Table;
+use cimdse::survey::generator::{SurveyConfig, generate_survey};
+
+fn main() {
+    let survey = generate_survey(&SurveyConfig::default());
+    let model = AdcModel::new(fit_model(&survey).unwrap().coefs);
+
+    let data = figures::fig3(&survey, &model, 40);
+    println!(
+        "{}",
+        figures::render_fig23(
+            &data,
+            "Fig. 3: ADC throughput vs area (32 nm; dots = survey, lines = model)",
+            "area (µm²)"
+        )
+    );
+
+    let mut t = Table::new(vec!["enob", "throughput", "model area (µm²)"]);
+    for (enob, pts) in &data.lines {
+        for &(f, a) in pts.iter().step_by(4) {
+            t.row(vec![format!("{enob}"), format!("{f:.3e}"), format!("{a:.4e}")]);
+        }
+    }
+    println!("CSV:\n{}", t.to_csv());
+
+    // Paper §II-B structure: "as throughput increases, area first increases
+    // slowly, then quickly — because the two energy bounds influence area".
+    for (enob, pts) in &data.lines {
+        let early = pts[4].1 / pts[0].1; // growth below the knee
+        let late = pts[pts.len() - 1].1 / pts[pts.len() - 5].1; // above the knee
+        assert!(
+            late > early,
+            "{enob}b: area growth should steepen past the knee ({early:.3} vs {late:.3})"
+        );
+    }
+    // Area rises with ENOB at fixed throughput.
+    let area = |enob: f64| {
+        model.area_um2_per_adc(&AdcQuery {
+            enob,
+            total_throughput: 1e8,
+            tech_nm: 32.0,
+            n_adcs: 1,
+        })
+    };
+    assert!(area(4.0) < area(8.0) && area(8.0) < area(12.0));
+    println!(
+        "area @1e8 conv/s: 4b {:.0} µm², 8b {:.0} µm², 12b {:.0} µm² (rising with ENOB ok)\n",
+        area(4.0),
+        area(8.0),
+        area(12.0)
+    );
+
+    let bench = Bench::default();
+    bench.run("fig3: figure series generation", || {
+        std::hint::black_box(figures::fig3(&survey, &model, 40));
+    });
+    bench.run("fig3: single area query", || {
+        std::hint::black_box(model.area_um2_per_adc(&AdcQuery {
+            enob: 8.0,
+            total_throughput: 1e9,
+            tech_nm: 32.0,
+            n_adcs: 1,
+        }));
+    });
+}

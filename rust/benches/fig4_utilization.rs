@@ -1,0 +1,67 @@
+//! Bench: regenerate the paper's **Fig. 4** — full-accelerator energy for
+//! RAELLA S/M/L/XL across layer groups of varying utilization — assert
+//! the paper's three claims, and time the mapping+rollup pipeline.
+//!
+//! Run with `cargo bench --bench fig4_utilization`.
+
+use cimdse::adc::{AdcModel, fit_model};
+use cimdse::arch::raella::{RaellaVariant, raella};
+use cimdse::bench_util::Bench;
+use cimdse::dse::figures;
+use cimdse::energy::layer_energy;
+use cimdse::mapper::map_layer;
+use cimdse::survey::generator::{SurveyConfig, generate_survey};
+use cimdse::workload::resnet18::{large_tensor_layer, resnet18};
+
+fn main() {
+    let survey = generate_survey(&SurveyConfig::default());
+    let model = AdcModel::new(fit_model(&survey).unwrap().coefs);
+
+    let rows = figures::fig4(&model).unwrap();
+    println!("Fig. 4: energy for varying utilization and analog sum size");
+    println!("{}", figures::render_fig4(&rows).render());
+    let t = figures::render_fig4(&rows);
+    println!("CSV:\n{}", t.to_csv());
+
+    // The paper's §III-A claims, asserted on the regenerated data:
+    let get = |g: &str, v: &str| rows.iter().find(|r| r.group == g && r.variant == v).unwrap();
+    // (1) large-tensor layer: summing more values reduces ADC energy.
+    assert!(get("large-tensor", "XL").adc_pj < get("large-tensor", "L").adc_pj);
+    assert!(get("large-tensor", "L").adc_pj < get("large-tensor", "M").adc_pj);
+    assert!(get("large-tensor", "M").adc_pj < get("large-tensor", "S").adc_pj);
+    println!("claim 1 ok: large-tensor ADC energy falls monotonically S -> XL");
+    // (2) small-tensor layer: higher-ENOB ADCs consume more energy.
+    assert!(get("small-tensor", "S").total_pj < get("small-tensor", "M").total_pj);
+    assert!(get("small-tensor", "M").total_pj < get("small-tensor", "L").total_pj);
+    assert!(get("small-tensor", "L").total_pj < get("small-tensor", "XL").total_pj);
+    println!("claim 2 ok: small-tensor total energy rises monotonically S -> XL");
+    // (3) over all layers, M and L balance the two effects.
+    let mut all: Vec<_> = rows.iter().filter(|r| r.group == "all-layers").collect();
+    all.sort_by(|a, b| a.total_pj.total_cmp(&b.total_pj));
+    assert!(matches!(all[0].variant, "M" | "L"));
+    assert!(matches!(all[1].variant, "M" | "L"));
+    println!("claim 3 ok: best two overall variants are {{{}, {}}}\n", all[0].variant, all[1].variant);
+
+    // --- timing -------------------------------------------------------------
+    let bench = Bench::default();
+    let net = resnet18();
+    let arch = raella(RaellaVariant::Medium);
+    let layer = large_tensor_layer();
+    bench.run("fig4: map one layer", || {
+        std::hint::black_box(map_layer(&arch, &layer).unwrap());
+    });
+    bench.run("fig4: map+price one layer", || {
+        std::hint::black_box(layer_energy(&arch, &model, &layer).unwrap());
+    });
+    bench.run("fig4: all 21 layers x 4 variants", || {
+        for variant in RaellaVariant::ALL {
+            let arch = raella(variant);
+            for l in &net.layers {
+                std::hint::black_box(layer_energy(&arch, &model, l).unwrap());
+            }
+        }
+    });
+    bench.run("fig4: full figure", || {
+        std::hint::black_box(figures::fig4(&model).unwrap());
+    });
+}

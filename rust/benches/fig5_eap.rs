@@ -1,0 +1,69 @@
+//! Bench: regenerate the paper's **Fig. 5** — accelerator energy-area
+//! product vs number of ADCs across total-throughput requirements —
+//! assert the paper's three findings, and time the EAP sweep.
+//!
+//! Run with `cargo bench --bench fig5_eap`.
+
+use cimdse::adc::{AdcModel, fit_model};
+use cimdse::bench_util::Bench;
+use cimdse::dse::figures;
+use cimdse::survey::generator::{SurveyConfig, generate_survey};
+
+fn main() {
+    let survey = generate_survey(&SurveyConfig::default());
+    let model = AdcModel::new(fit_model(&survey).unwrap().coefs);
+
+    let cells = figures::fig5(&model, 5).unwrap();
+    println!("Fig. 5: accelerator EAP vs number of ADCs for varying throughputs");
+    println!("{}", figures::render_fig5(&cells).render());
+    println!("CSV:\n{}", figures::render_fig5(&cells).to_csv());
+
+    let mut tps: Vec<f64> = cells.iter().map(|c| c.total_throughput).collect();
+    tps.dedup();
+    let group = |tp: f64| -> Vec<&figures::Fig5Cell> {
+        cells.iter().filter(|c| c.total_throughput == tp).collect()
+    };
+
+    // (1) higher total throughput -> higher (minimum) EAP.
+    let min_eap = |tp: f64| group(tp).iter().map(|c| c.eap).fold(f64::MAX, f64::min);
+    for w in tps.windows(2) {
+        assert!(min_eap(w[1]) > min_eap(w[0]), "EAP did not grow with throughput");
+    }
+    println!("finding 1 ok: min EAP grows with total throughput");
+
+    // (2) the n_adcs choice can swing EAP by ~3x.
+    let max_swing = tps
+        .iter()
+        .map(|&tp| {
+            let g = group(tp);
+            let hi = g.iter().map(|c| c.eap).fold(f64::MIN, f64::max);
+            let lo = g.iter().map(|c| c.eap).fold(f64::MAX, f64::min);
+            hi / lo
+        })
+        .fold(f64::MIN, f64::max);
+    assert!(max_swing >= 3.0, "max EAP swing only {max_swing:.2}x");
+    println!("finding 2 ok: n_adcs choice swings EAP up to {max_swing:.1}x (paper: ~3x)");
+
+    // (3) optimal n_adcs grows with throughput: few ADCs at low demand
+    // (area), many at high demand (energy).
+    let opt = |tp: f64| {
+        group(tp)
+            .iter()
+            .min_by(|a, b| a.eap.total_cmp(&b.eap))
+            .unwrap()
+            .n_adcs
+    };
+    let opts: Vec<u32> = tps.iter().map(|&tp| opt(tp)).collect();
+    assert!(opts.windows(2).all(|w| w[1] >= w[0]), "optima not monotone: {opts:?}");
+    assert!(opts[0] < *opts.last().unwrap(), "optimum never moved: {opts:?}");
+    println!("finding 3 ok: optimal n_adcs per throughput = {opts:?}\n");
+
+    // --- timing -------------------------------------------------------------
+    let bench = Bench::default();
+    bench.run("fig5: one throughput column (5 EAP cells)", || {
+        std::hint::black_box(figures::fig5(&model, 2).unwrap());
+    });
+    bench.run("fig5: full 25-cell grid", || {
+        std::hint::black_box(figures::fig5(&model, 5).unwrap());
+    });
+}

@@ -1,0 +1,84 @@
+//! Bench: the whole-stack hot paths (EXPERIMENTS.md §Perf).
+//!
+//! L3 native: single-point eval, threaded sweeps, mapper, rollup.
+//! L3↔PJRT: artifact batch evaluation and marshalling overhead.
+//!
+//! Run with `cargo bench --bench perf_hotpaths`.
+
+use cimdse::adc::{AdcModel, AdcQuery};
+use cimdse::bench_util::Bench;
+use cimdse::dse::{Evaluator, NativeEvaluator, SweepSpec};
+use cimdse::energy::layer_energy;
+use cimdse::exec::default_workers;
+use cimdse::mapper::map_layer;
+use cimdse::arch::raella::{RaellaVariant, raella};
+use cimdse::runtime::{AdcModelEngine, Manifest};
+use cimdse::workload::resnet18::large_tensor_layer;
+
+fn main() {
+    let model = AdcModel::default();
+    let bench = Bench::default();
+
+    // --- L3 native hot paths ------------------------------------------------
+    let q = AdcQuery { enob: 7.0, total_throughput: 1.3e9, tech_nm: 32.0, n_adcs: 8 };
+    bench.run("adc model: single eval", || {
+        std::hint::black_box(model.eval(std::hint::black_box(&q)));
+    });
+
+    let spec = SweepSpec::dense(18); // 18*18*4*6 = 7776 points
+    let queries = spec.points();
+    println!("sweep size: {} design points", queries.len());
+
+    let serial = NativeEvaluator::serial(model);
+    let s = bench.run("sweep: native serial", || {
+        std::hint::black_box(serial.eval(&queries).unwrap());
+    });
+    let threaded = NativeEvaluator::new(model);
+    let p = bench.run(
+        &format!("sweep: native {} workers", default_workers()),
+        || {
+            std::hint::black_box(threaded.eval(&queries).unwrap());
+        },
+    );
+    println!(
+        "  -> native sweep throughput: serial {:.2} Mpts/s, threaded {:.2} Mpts/s ({:.1}x)",
+        queries.len() as f64 / s.median_s / 1e6,
+        queries.len() as f64 / p.median_s / 1e6,
+        s.median_s / p.median_s
+    );
+
+    let arch = raella(RaellaVariant::Medium);
+    let layer = large_tensor_layer();
+    bench.run("mapper: map_layer", || {
+        std::hint::black_box(map_layer(&arch, &layer).unwrap());
+    });
+    bench.run("rollup: layer_energy", || {
+        std::hint::black_box(layer_energy(&arch, &model, &layer).unwrap());
+    });
+
+    // --- PJRT path ------------------------------------------------------------
+    match Manifest::locate().and_then(|m| AdcModelEngine::load(&m)) {
+        Ok(engine) => {
+            let batch = engine.batch_size();
+            let full: Vec<AdcQuery> = queries.iter().cycle().take(batch).copied().collect();
+            let slow = Bench::slow();
+            let st = slow.run("pjrt: one full batch (batch_size pts)", || {
+                std::hint::black_box(engine.eval(&full, &model.coefs).unwrap());
+            });
+            println!(
+                "  -> pjrt throughput: {:.2} Mpts/s",
+                batch as f64 / st.median_s / 1e6
+            );
+            let sweep16k: Vec<AdcQuery> =
+                queries.iter().cycle().take(4 * batch).copied().collect();
+            slow.run("pjrt: 4-batch sweep (4x batch)", || {
+                std::hint::black_box(engine.eval(&sweep16k, &model.coefs).unwrap());
+            });
+            // Marshalling overhead proxy: tiny batch pays full padding cost.
+            slow.run("pjrt: 1-point call (padded to batch)", || {
+                std::hint::black_box(engine.eval(&full[..1], &model.coefs).unwrap());
+            });
+        }
+        Err(e) => println!("pjrt benches skipped: {e}"),
+    }
+}

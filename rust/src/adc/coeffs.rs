@@ -1,0 +1,185 @@
+//! Model coefficients — the fitted parameters of the paper's §II model.
+//!
+//! Layout mirrors `python/compile/coeffs.py` exactly (the same 11-float
+//! vector is fed to the AOT-compiled Pallas kernel at runtime):
+//!
+//! ```text
+//! log10 E_min   = a0 + a1·ENOB + a2·t            t = log10(tech_nm / 32)
+//! log10 E_trade = b0 + b1·ENOB + b2·t + b3·log10 f
+//! log10 E       = max(E_min, E_trade)                         [pJ/convert]
+//! log10 Area    = d0 + d1·t + d2·log10 f + d3·log10 E         [µm², Eq. 1]
+//! ```
+
+/// The 11 model coefficients (see module docs for the functional form).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Coefficients {
+    /// Minimum-energy bound intercept (log10 pJ at ENOB=0, 32 nm).
+    pub a0: f64,
+    /// Minimum-energy bound ENOB slope (decades per bit).
+    pub a1: f64,
+    /// Minimum-energy bound tech slope (decades per decade of node).
+    pub a2: f64,
+    /// Tradeoff bound intercept.
+    pub b0: f64,
+    /// Tradeoff bound ENOB slope (> a1: crossover falls with ENOB).
+    pub b1: f64,
+    /// Tradeoff bound tech slope.
+    pub b2: f64,
+    /// Tradeoff bound throughput slope (decades per decade of f).
+    pub b3: f64,
+    /// Area intercept: log10(kappa · 21.1 · 32^d1).
+    pub d0: f64,
+    /// Area tech exponent (Eq. 1: 1.0).
+    pub d1: f64,
+    /// Area throughput exponent (Eq. 1: 0.2).
+    pub d2: f64,
+    /// Area energy exponent (Eq. 1: 0.3).
+    pub d3: f64,
+}
+
+/// The paper's Eq. 1 leading constant (before p10 calibration).
+pub const EQ1_CONSTANT: f64 = 21.1;
+
+/// The p10 area calibration factor baked into the generator truth.
+/// Consistent with the generator's 0.55-decade area scatter:
+/// `10^(-1.2816 * 0.55) ~= 0.20` (the lowest-area-10% envelope).
+pub const TRUTH_KAPPA: f64 = 0.20;
+
+impl Coefficients {
+    /// Ground-truth constants the synthetic survey is generated from, and
+    /// the defaults baked into the AOT artifact. Matches
+    /// `python/compile/coeffs.py` (asserted by an integration test).
+    pub fn generator_truth() -> Self {
+        Coefficients {
+            a0: -2.301, // 4b @ 32nm: 0.05 pJ/convert
+            a1: 0.250,  // x10 energy per 4 ENOB bits
+            a2: 1.000,
+            b0: -14.840, // anchors the 8b corner at ~2.8e8 conv/s @ 32nm
+            b1: 0.550,   // crossover falls 0.25 decades/bit
+            b2: 1.000,
+            b3: 1.200,
+            d0: (TRUTH_KAPPA * EQ1_CONSTANT).log10() + 32f64.log10(),
+            d1: 1.0,
+            d2: 0.2,
+            d3: 0.3,
+        }
+    }
+
+    /// Raw Eq. 1 (kappa = 1) variant of the truth, used by the survey
+    /// generator to scatter area around the *uncalibrated* law.
+    pub fn log_area_raw_um2(&self, log_t: f64, log_f: f64, log_e_pj: f64) -> f64 {
+        EQ1_CONSTANT.log10() + self.d1 * (log_t + 32f64.log10()) + self.d2 * log_f
+            + self.d3 * log_e_pj
+    }
+
+    /// log10 energy per convert (pJ): max of the two bounds.
+    pub fn log_energy_pj(&self, enob: f64, log_t: f64, log_f: f64) -> f64 {
+        let e_min = self.a0 + self.a1 * enob + self.a2 * log_t;
+        let e_trade = self.b0 + self.b1 * enob + self.b2 * log_t + self.b3 * log_f;
+        e_min.max(e_trade)
+    }
+
+    /// log10 area (µm², Eq. 1 with the calibrated d0).
+    pub fn log_area_um2(&self, log_t: f64, log_f: f64, log_e_pj: f64) -> f64 {
+        self.d0 + self.d1 * log_t + self.d2 * log_f + self.d3 * log_e_pj
+    }
+
+    /// Flat f32 vector in the artifact's layout
+    /// `[a0,a1,a2, b0,b1,b2,b3, d0,d1,d2,d3]`.
+    pub fn to_f32_vec(&self) -> Vec<f32> {
+        vec![
+            self.a0 as f32,
+            self.a1 as f32,
+            self.a2 as f32,
+            self.b0 as f32,
+            self.b1 as f32,
+            self.b2 as f32,
+            self.b3 as f32,
+            self.d0 as f32,
+            self.d1 as f32,
+            self.d2 as f32,
+            self.d3 as f32,
+        ]
+    }
+
+    /// Inverse of [`Self::to_f32_vec`].
+    pub fn from_slice(v: &[f64]) -> Self {
+        assert_eq!(v.len(), 11, "coefficient vector must have 11 entries");
+        Coefficients {
+            a0: v[0],
+            a1: v[1],
+            a2: v[2],
+            b0: v[3],
+            b1: v[4],
+            b2: v[5],
+            b3: v[6],
+            d0: v[7],
+            d1: v[8],
+            d2: v[9],
+            d3: v[10],
+        }
+    }
+
+    /// Flat f64 vector (same layout).
+    pub fn to_vec(&self) -> Vec<f64> {
+        vec![
+            self.a0, self.a1, self.a2, self.b0, self.b1, self.b2, self.b3, self.d0,
+            self.d1, self.d2, self.d3,
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn truth_anchors() {
+        let c = Coefficients::generator_truth();
+        // 4b @ 32nm, low throughput: 0.05 pJ.
+        let e4 = 10f64.powf(c.log_energy_pj(4.0, 0.0, 4.0));
+        assert!((e4 - 0.05).abs() < 1e-3, "{e4}");
+        // Bounds meet exactly at the analytic crossover.
+        let cross = (c.a0 - c.b0 + (c.a1 - c.b1) * 4.0) / c.b3;
+        let flat = c.a0 + c.a1 * 4.0;
+        let trade = c.b0 + c.b1 * 4.0 + c.b3 * cross;
+        assert!((flat - trade).abs() < 1e-9);
+        // The 8b corner sits in the high-1e8 range at 32 nm.
+        let cross8 = 10f64.powf((c.a0 - c.b0 + (c.a1 - c.b1) * 8.0) / c.b3);
+        assert!((1e8..1e9).contains(&cross8), "{cross8}");
+    }
+
+    #[test]
+    fn roundtrip_vec() {
+        let c = Coefficients::generator_truth();
+        let v = c.to_vec();
+        assert_eq!(Coefficients::from_slice(&v), c);
+        assert_eq!(v.len(), 11);
+    }
+
+    #[test]
+    fn energy_monotone_in_enob_and_throughput() {
+        let c = Coefficients::generator_truth();
+        let mut prev = f64::MIN;
+        for enob in [2.0, 4.0, 6.0, 8.0, 10.0, 12.0] {
+            let e = c.log_energy_pj(enob, 0.0, 8.0);
+            assert!(e > prev);
+            prev = e;
+        }
+        let mut prev = f64::MIN;
+        for log_f in [4.0, 6.0, 8.0, 9.0, 10.0] {
+            let e = c.log_energy_pj(8.0, 0.0, log_f);
+            assert!(e >= prev);
+            prev = e;
+        }
+    }
+
+    #[test]
+    fn calibrated_area_below_raw() {
+        let c = Coefficients::generator_truth();
+        let raw = c.log_area_raw_um2(0.0, 8.0, 0.0);
+        let cal = c.log_area_um2(0.0, 8.0, 0.0);
+        assert!((raw - cal - (-(TRUTH_KAPPA.log10()))).abs() < 1e-12);
+        assert!(cal < raw);
+    }
+}

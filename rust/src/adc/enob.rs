@@ -1,0 +1,123 @@
+//! ENOB / SNDR semantics (paper §II: "ADC resolution measured as the
+//! effective number of bits (ENOB), which measures effective ADC
+//! resolution after considering nonidealities such as noise and
+//! nonlinearity").
+//!
+//! Conversions between ENOB, SNDR, and quantization noise, plus the
+//! composition rules the functional simulation uses to translate a
+//! measured SQNR into "effective bits" and to budget how much ENOB a
+//! given analog sum size actually needs.
+
+/// SNDR (dB) of an ideal `bits`-bit quantizer driven at full scale:
+/// `6.02·bits + 1.76`.
+pub fn ideal_sndr_db(bits: f64) -> f64 {
+    6.02 * bits + 1.76
+}
+
+/// ENOB implied by a measured SNDR (dB): the inverse of [`ideal_sndr_db`].
+pub fn enob_from_sndr_db(sndr_db: f64) -> f64 {
+    (sndr_db - 1.76) / 6.02
+}
+
+/// Combine independent noise sources given as SNDRs (dB) against the same
+/// signal: noise powers add.
+pub fn combine_sndr_db(sndrs_db: &[f64]) -> f64 {
+    assert!(!sndrs_db.is_empty());
+    let total_noise: f64 = sndrs_db.iter().map(|s| 10f64.powf(-s / 10.0)).sum();
+    -10.0 * total_noise.log10()
+}
+
+/// Bits needed to read an analog sum of `n_sum` values stored in
+/// `cell_bits`-bit cells losslessly: `log2(n_sum · (2^cell_bits - 1) + 1)`.
+pub fn lossless_bits(n_sum: usize, cell_bits: u32) -> f64 {
+    ((n_sum as f64) * ((1u64 << cell_bits) - 1) as f64 + 1.0).log2()
+}
+
+/// Effective resolution degradation (in bits) when an ADC with
+/// `adc_bits` reads a sum that needs [`lossless_bits`]: the clipped /
+/// truncated bits the architecture must recover digitally (RAELLA-style
+/// speculation) or absorb as error.
+pub fn clipped_bits(n_sum: usize, cell_bits: u32, adc_bits: f64) -> f64 {
+    (lossless_bits(n_sum, cell_bits) - adc_bits).max(0.0)
+}
+
+/// Expected SQNR (dB) of reading a full-scale column sum through a
+/// uniform quantizer with `adc_bits`: `6.02·min(adc_bits, lossless) +
+/// 1.76`. Each bit the ADC is short of lossless doubles the quantization
+/// step (−6.02 dB) — the fidelity the functional sim converges to for
+/// large random workloads (EXPERIMENTS.md's ~12 dB per 2 ADC bits).
+pub fn expected_read_sqnr_db(n_sum: usize, cell_bits: u32, adc_bits: f64) -> f64 {
+    ideal_sndr_db(adc_bits.min(lossless_bits(n_sum, cell_bits)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sndr_enob_roundtrip() {
+        for bits in [4.0, 6.5, 8.0, 12.0] {
+            let sndr = ideal_sndr_db(bits);
+            assert!((enob_from_sndr_db(sndr) - bits).abs() < 1e-12);
+        }
+        // The canonical anchor: 8 bits ~ 49.9 dB.
+        assert!((ideal_sndr_db(8.0) - 49.92).abs() < 0.01);
+    }
+
+    #[test]
+    fn combining_equal_sources_costs_half_a_bit() {
+        // Two equal independent noise sources: +3 dB noise = -0.5 ENOB.
+        let combined = combine_sndr_db(&[50.0, 50.0]);
+        assert!((combined - (50.0 - 10.0 * 2f64.log10())).abs() < 1e-9);
+        let enob_drop = enob_from_sndr_db(50.0) - enob_from_sndr_db(combined);
+        assert!((enob_drop - 0.5).abs() < 0.001, "{enob_drop}");
+    }
+
+    #[test]
+    fn combining_with_much_better_source_is_noop() {
+        let combined = combine_sndr_db(&[50.0, 110.0]);
+        assert!((combined - 50.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn lossless_bits_matches_arch() {
+        use crate::arch::raella::{RaellaVariant, raella};
+        for v in RaellaVariant::ALL {
+            let arch = raella(v);
+            assert!(
+                (lossless_bits(arch.sum_size, arch.cell_bits) - arch.lossless_enob()).abs()
+                    < 1e-12
+            );
+        }
+        // RAELLA-S: 128 x 3 + 1 = 385 levels ~ 8.59 bits.
+        assert!((lossless_bits(128, 2) - 385f64.log2()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn clipped_bits_grow_with_sum_at_fixed_adc() {
+        let c128 = clipped_bits(128, 2, 6.0);
+        let c512 = clipped_bits(512, 2, 6.0);
+        assert!(c512 > c128);
+        // An over-provisioned ADC clips nothing.
+        assert_eq!(clipped_bits(16, 2, 12.0), 0.0);
+    }
+
+    #[test]
+    fn raella_variants_clip_progressively_more() {
+        // S/M/L/XL trade +2 lossless bits per step for +1 ADC bit: the
+        // clipped-bit budget grows ~1 bit per step (the speculation debt).
+        use crate::arch::raella::{RaellaVariant, raella};
+        let clips: Vec<f64> = RaellaVariant::ALL
+            .iter()
+            .map(|&v| {
+                let a = raella(v);
+                clipped_bits(a.sum_size, a.cell_bits, a.adc.enob)
+            })
+            .collect();
+        for w in clips.windows(2) {
+            // ~1.0 bit per step (the +1 level in lossless_bits keeps it
+            // from being exact).
+            assert!((w[1] - w[0] - 1.0).abs() < 0.01, "{clips:?}");
+        }
+    }
+}

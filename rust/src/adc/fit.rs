@@ -1,0 +1,175 @@
+//! The survey-fit pipeline (paper Fig. 1): survey → regression →
+//! [`Coefficients`].
+//!
+//! Energy: two-bound envelope fit ([`crate::stats::piecewise`]) at the 5%
+//! residual quantile (best-case bounds). Area: log-space OLS of Eq. 1's
+//! form on (tech, throughput, energy), then the paper's "optimistically
+//! reduce the estimated area to match the lowest-area 10% of ADCs"
+//! — an intercept shift to the 10% residual quantile.
+
+use crate::error::Result;
+use crate::stats::corr::pearson_r;
+use crate::stats::ols::ols;
+use crate::stats::piecewise::{EnergyPoint, TwoBoundFit, fit_two_bound_envelope};
+use crate::stats::quantile::envelope_shift;
+use crate::survey::SurveyDataset;
+use crate::util::logspace::log10;
+
+use super::Coefficients;
+
+/// Residual quantile for the best-case energy envelope.
+pub const ENERGY_ENVELOPE_Q: f64 = 0.05;
+/// Residual quantile for the area calibration (paper: lowest 10%).
+pub const AREA_ENVELOPE_Q: f64 = 0.10;
+
+/// Everything the fit pipeline produces, for reporting and tests.
+#[derive(Clone, Debug)]
+pub struct FitReport {
+    /// The fitted coefficient set (consumed by [`super::AdcModel`]).
+    pub coefs: Coefficients,
+    /// The raw two-bound energy fit.
+    pub energy_fit: TwoBoundFit,
+    /// Pearson r of the area regression using *energy* as a predictor
+    /// (the paper's improved model, r ≈ 0.75).
+    pub area_r_energy: f64,
+    /// Pearson r of the area regression using *ENOB* instead
+    /// (the prior-work baseline, r ≈ 0.66).
+    pub area_r_enob: f64,
+    /// R² of the area regression (energy form) in log space.
+    pub area_r2: f64,
+    /// Number of survey records used.
+    pub n_records: usize,
+}
+
+/// Fit the full model to a survey.
+pub fn fit_model(survey: &SurveyDataset) -> Result<FitReport> {
+    let energy_points: Vec<EnergyPoint> = survey
+        .records
+        .iter()
+        .map(|r| EnergyPoint {
+            enob: r.enob,
+            log_t: r.log_tech_ratio(),
+            log_f: log10(r.throughput),
+            log_e: log10(r.energy_pj),
+        })
+        .collect();
+    let energy_fit = fit_two_bound_envelope(&energy_points, ENERGY_ENVELOPE_Q)?;
+
+    // --- Area regression: log A ~ log T + log f + log E  (paper's form) ---
+    let xs_energy: Vec<Vec<f64>> = survey
+        .records
+        .iter()
+        .map(|r| vec![r.log_tech_ratio(), log10(r.throughput), log10(r.energy_pj)])
+        .collect();
+    let log_area: Vec<f64> = survey.records.iter().map(|r| log10(r.area_um2)).collect();
+    let area_fit = ols(&xs_energy, &log_area)?;
+
+    // Pearson r of predicted-vs-observed log area, energy form.
+    let pred_energy: Vec<f64> = xs_energy.iter().map(|x| area_fit.predict(x)).collect();
+    let area_r_energy = pearson_r(&log_area, &pred_energy);
+
+    // Prior-work baseline: ENOB in place of energy (r should be lower —
+    // the paper's 0.66 -> 0.75 comparison).
+    let xs_enob: Vec<Vec<f64>> = survey
+        .records
+        .iter()
+        .map(|r| vec![r.log_tech_ratio(), log10(r.throughput), r.enob])
+        .collect();
+    let enob_fit = ols(&xs_enob, &log_area)?;
+    let pred_enob: Vec<f64> = xs_enob.iter().map(|x| enob_fit.predict(x)).collect();
+    let area_r_enob = pearson_r(&log_area, &pred_enob);
+
+    // p10 calibration: shift the intercept to the lowest-area-10% envelope.
+    let d0 = area_fit.coefs[0] + envelope_shift(&area_fit.residuals, AREA_ENVELOPE_Q);
+
+    let coefs = Coefficients {
+        a0: energy_fit.flat[0],
+        a1: energy_fit.flat[1],
+        a2: energy_fit.flat[2],
+        b0: energy_fit.trade[0],
+        b1: energy_fit.trade[1],
+        b2: energy_fit.trade[2],
+        b3: energy_fit.trade[3],
+        d0,
+        d1: area_fit.coefs[1],
+        d2: area_fit.coefs[2],
+        d3: area_fit.coefs[3],
+    };
+
+    Ok(FitReport {
+        coefs,
+        energy_fit,
+        area_r_energy,
+        area_r_enob,
+        area_r2: area_fit.r2,
+        n_records: survey.len(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::survey::generator::{SurveyConfig, generate_survey};
+
+    fn fit() -> FitReport {
+        fit_model(&generate_survey(&SurveyConfig::default())).unwrap()
+    }
+
+    #[test]
+    fn recovers_generator_truth_slopes() {
+        let truth = Coefficients::generator_truth();
+        let report = fit();
+        let c = report.coefs;
+        assert!((c.a1 - truth.a1).abs() < 0.05, "a1={} vs {}", c.a1, truth.a1);
+        assert!((c.a2 - truth.a2).abs() < 0.15, "a2={}", c.a2);
+        assert!((c.b3 - truth.b3).abs() < 0.25, "b3={}", c.b3);
+        assert!((c.d1 - truth.d1).abs() < 0.1, "d1={}", c.d1);
+        assert!((c.d2 - truth.d2).abs() < 0.05, "d2={}", c.d2);
+        assert!((c.d3 - truth.d3).abs() < 0.05, "d3={}", c.d3);
+        // Calibrated intercept lands near the truth's kappa-adjusted d0.
+        assert!((c.d0 - truth.d0).abs() < 0.15, "d0={} vs {}", c.d0, truth.d0);
+    }
+
+    #[test]
+    fn energy_predictor_beats_enob_predictor() {
+        // The paper's §II-B observation: r improves when energy replaces
+        // ENOB in the area regression (0.66 -> 0.75 on the real survey).
+        let report = fit();
+        assert!(
+            report.area_r_energy > report.area_r_enob,
+            "r_energy={} <= r_enob={}",
+            report.area_r_energy,
+            report.area_r_enob
+        );
+        assert!(report.area_r_energy > 0.6, "r_energy={}", report.area_r_energy);
+    }
+
+    #[test]
+    fn fitted_model_is_a_lower_envelope() {
+        let survey = generate_survey(&SurveyConfig::default());
+        let report = fit_model(&survey).unwrap();
+        let below = survey
+            .records
+            .iter()
+            .filter(|r| {
+                let le = report.coefs.log_energy_pj(
+                    r.enob,
+                    r.log_tech_ratio(),
+                    log10(r.throughput),
+                );
+                log10(r.energy_pj) < le
+            })
+            .count();
+        let frac = below as f64 / survey.len() as f64;
+        assert!(frac <= 0.10, "below-envelope fraction {frac}");
+    }
+
+    #[test]
+    fn crossover_structure_preserved() {
+        // b1 > a1 must survive the fit (the paper's "tradeoff bound kicks
+        // in earlier at high ENOB" requires it).
+        let c = fit().coefs;
+        assert!(c.b1 > c.a1, "b1={} a1={}", c.b1, c.a1);
+        assert!(c.b3 > 0.5, "b3={}", c.b3);
+    }
+}

@@ -1,0 +1,271 @@
+//! The paper's contribution: the architecture-level ADC energy/area model.
+//!
+//! Given four architecture-level attributes — number of ADCs, total
+//! throughput, technology node, and resolution (ENOB) — [`AdcModel`]
+//! estimates best-case per-convert energy (two-bound piecewise power law,
+//! §II-A) and per-ADC area (Eq. 1 with lowest-10% calibration, §II-B).
+//!
+//! The model is obtained either from the built-in defaults
+//! ([`AdcModel::default`]), from a survey fit ([`fit::fit_model`]), or by
+//! tuning an existing model to a known ADC design point
+//! ([`AdcModel::tuned_to`], §II "users may tune...").
+
+pub mod coeffs;
+pub mod enob;
+pub mod fit;
+pub mod plugin;
+pub mod tuning;
+
+pub use coeffs::Coefficients;
+pub use fit::{FitReport, fit_model};
+pub use plugin::Estimator;
+pub use tuning::TuningPoint;
+
+use crate::util::logspace::{log10, pow10};
+
+/// Architecture-level query: the model's four inputs (paper Fig. 1).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AdcQuery {
+    /// Effective number of bits (resolution after nonidealities).
+    pub enob: f64,
+    /// Aggregate converts/second across all ADCs.
+    pub total_throughput: f64,
+    /// Technology node in nanometers.
+    pub tech_nm: f64,
+    /// Number of ADCs operating in parallel.
+    pub n_adcs: u32,
+}
+
+impl AdcQuery {
+    /// Per-ADC throughput (total / n).
+    pub fn throughput_per_adc(&self) -> f64 {
+        self.total_throughput / self.n_adcs as f64
+    }
+
+    /// Validate physical ranges; the model extrapolates, but garbage
+    /// queries (non-positive values) are caller bugs.
+    pub fn validate(&self) -> crate::Result<()> {
+        if !(self.enob > 0.0 && self.enob < 24.0) {
+            return Err(crate::Error::Numeric(format!("ENOB {} out of range", self.enob)));
+        }
+        if !(self.total_throughput > 0.0) {
+            return Err(crate::Error::Numeric("non-positive throughput".into()));
+        }
+        if !(self.tech_nm >= 1.0 && self.tech_nm <= 1000.0) {
+            return Err(crate::Error::Numeric(format!("tech {}nm out of range", self.tech_nm)));
+        }
+        if self.n_adcs == 0 {
+            return Err(crate::Error::Numeric("n_adcs must be >= 1".into()));
+        }
+        Ok(())
+    }
+}
+
+/// Model outputs for one query.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AdcMetrics {
+    /// Energy per convert, picojoules.
+    pub energy_pj_per_convert: f64,
+    /// Area of one ADC, square micrometers.
+    pub area_um2_per_adc: f64,
+    /// Aggregate power across all ADCs, watts.
+    pub total_power_w: f64,
+    /// Aggregate area across all ADCs, square micrometers.
+    pub total_area_um2: f64,
+}
+
+/// The ADC energy/area model: fitted coefficients plus optional user tuning.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AdcModel {
+    /// The fitted coefficient set.
+    pub coefs: Coefficients,
+    /// Additive log10-energy offset from user tuning (0 = untuned).
+    pub energy_offset_decades: f64,
+    /// Additive log10-area offset from user tuning (0 = untuned).
+    pub area_offset_decades: f64,
+}
+
+impl Default for AdcModel {
+    /// Model with the built-in default coefficients (the generator truth —
+    /// i.e. what a fit of the synthetic survey converges to).
+    fn default() -> Self {
+        AdcModel::new(Coefficients::generator_truth())
+    }
+}
+
+impl AdcModel {
+    /// Model from a coefficient set with no user tuning.
+    pub fn new(coefs: Coefficients) -> Self {
+        AdcModel { coefs, energy_offset_decades: 0.0, area_offset_decades: 0.0 }
+    }
+
+    /// Energy per convert in picojoules for a query.
+    pub fn energy_pj_per_convert(&self, q: &AdcQuery) -> f64 {
+        let log_t = log10(q.tech_nm / 32.0);
+        let log_f = log10(q.throughput_per_adc());
+        pow10(self.coefs.log_energy_pj(q.enob, log_t, log_f) + self.energy_offset_decades)
+    }
+
+    /// Area of one ADC in µm² for a query (Eq. 1; depends on energy).
+    pub fn area_um2_per_adc(&self, q: &AdcQuery) -> f64 {
+        let log_t = log10(q.tech_nm / 32.0);
+        let log_f = log10(q.throughput_per_adc());
+        let log_e =
+            self.coefs.log_energy_pj(q.enob, log_t, log_f) + self.energy_offset_decades;
+        pow10(self.coefs.log_area_um2(log_t, log_f, log_e) + self.area_offset_decades)
+    }
+
+    /// Full metric set for a query.
+    ///
+    /// Computes the shared log-space terms once (the separate
+    /// `energy_pj_per_convert` / `area_um2_per_adc` entry points each
+    /// re-derive them; this fused path is what the DSE hot loop calls —
+    /// see EXPERIMENTS.md §Perf).
+    pub fn eval(&self, q: &AdcQuery) -> AdcMetrics {
+        let log_t = log10(q.tech_nm / 32.0);
+        let log_f = log10(q.throughput_per_adc());
+        let log_e =
+            self.coefs.log_energy_pj(q.enob, log_t, log_f) + self.energy_offset_decades;
+        let log_area = self.coefs.log_area_um2(log_t, log_f, log_e) + self.area_offset_decades;
+        let energy_pj = pow10(log_e);
+        let area = pow10(log_area);
+        AdcMetrics {
+            energy_pj_per_convert: energy_pj,
+            area_um2_per_adc: area,
+            total_power_w: energy_pj * 1e-12 * q.total_throughput,
+            total_area_um2: area * q.n_adcs as f64,
+        }
+    }
+
+    /// Throughput (converts/s) at which the tradeoff bound overtakes the
+    /// minimum-energy bound for this (enob, tech) — the knee in Fig. 2.
+    pub fn crossover_throughput(&self, enob: f64, tech_nm: f64) -> f64 {
+        let c = &self.coefs;
+        let log_t = log10(tech_nm / 32.0);
+        let num = (c.a0 + c.a1 * enob + c.a2 * log_t) - (c.b0 + c.b1 * enob + c.b2 * log_t);
+        pow10(num / c.b3)
+    }
+
+    /// Coefficients with the tuning offsets folded in: the energy offset
+    /// shifts both bound intercepts and the area offset shifts d0. The
+    /// folded set evaluates identically to this model, which is how tuned
+    /// models ride through the AOT artifact (it only takes coefficients).
+    pub fn folded_coefficients(&self) -> Coefficients {
+        Coefficients {
+            a0: self.coefs.a0 + self.energy_offset_decades,
+            b0: self.coefs.b0 + self.energy_offset_decades,
+            // Area reads log E *with* the energy offset already applied via
+            // the shifted intercepts, so only the explicit area offset
+            // remains to fold into d0.
+            d0: self.coefs.d0 + self.area_offset_decades,
+            ..self.coefs
+        }
+    }
+
+    /// Tune the model so it reproduces a known ADC design point exactly
+    /// (paper §II: "users may tune the tool's estimated area and energy to
+    /// match that of the ADC of interest"), preserving all trends for
+    /// interpolation around that point.
+    pub fn tuned_to(&self, point: &tuning::TuningPoint) -> AdcModel {
+        tuning::tune(self, point)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn q(enob: f64, total: f64, tech: f64, n: u32) -> AdcQuery {
+        AdcQuery { enob, total_throughput: total, tech_nm: tech, n_adcs: n }
+    }
+
+    #[test]
+    fn eval_matches_components() {
+        let m = AdcModel::default();
+        let query = q(8.0, 2e9, 32.0, 4);
+        let metrics = m.eval(&query);
+        assert!((metrics.energy_pj_per_convert - m.energy_pj_per_convert(&query)).abs() < 1e-12);
+        assert!((metrics.total_area_um2 - 4.0 * metrics.area_um2_per_adc).abs() < 1e-9);
+        let expect_power = metrics.energy_pj_per_convert * 1e-12 * 2e9;
+        assert!((metrics.total_power_w - expect_power).abs() / expect_power < 1e-12);
+    }
+
+    #[test]
+    fn more_adcs_at_fixed_total_never_raise_energy() {
+        let m = AdcModel::default();
+        let mut prev = f64::MAX;
+        for n in [1u32, 2, 4, 8, 16] {
+            let e = m.energy_pj_per_convert(&q(7.0, 1.3e9, 32.0, n));
+            assert!(e <= prev + 1e-15, "n={n}: {e} > {prev}");
+            prev = e;
+        }
+    }
+
+    #[test]
+    fn crossover_matches_bound_equality() {
+        let m = AdcModel::default();
+        for enob in [4.0, 8.0, 12.0] {
+            let f = m.crossover_throughput(enob, 32.0);
+            let lo = m.energy_pj_per_convert(&q(enob, f * 0.99, 32.0, 1));
+            let hi = m.energy_pj_per_convert(&q(enob, f * 1.01, 32.0, 1));
+            let flat = m.energy_pj_per_convert(&q(enob, f * 0.01, 32.0, 1));
+            assert!((lo - flat).abs() / flat < 1e-6, "below knee should be flat");
+            assert!(hi > lo, "above knee must rise");
+        }
+    }
+
+    #[test]
+    fn crossover_decreases_with_enob() {
+        let m = AdcModel::default();
+        assert!(
+            m.crossover_throughput(12.0, 32.0) < m.crossover_throughput(8.0, 32.0)
+        );
+        assert!(
+            m.crossover_throughput(8.0, 32.0) < m.crossover_throughput(4.0, 32.0)
+        );
+    }
+
+    #[test]
+    fn smaller_node_is_cheaper() {
+        let m = AdcModel::default();
+        let e16 = m.energy_pj_per_convert(&q(8.0, 1e8, 16.0, 1));
+        let e65 = m.energy_pj_per_convert(&q(8.0, 1e8, 65.0, 1));
+        assert!(e16 < e65);
+        let a16 = m.area_um2_per_adc(&q(8.0, 1e8, 16.0, 1));
+        let a65 = m.area_um2_per_adc(&q(8.0, 1e8, 65.0, 1));
+        assert!(a16 < a65);
+    }
+
+    #[test]
+    fn validate_rejects_garbage() {
+        assert!(q(0.0, 1e9, 32.0, 1).validate().is_err());
+        assert!(q(8.0, -1.0, 32.0, 1).validate().is_err());
+        assert!(q(8.0, 1e9, 0.5, 1).validate().is_err());
+        assert!(q(8.0, 1e9, 32.0, 0).validate().is_err());
+        assert!(q(8.0, 1e9, 32.0, 1).validate().is_ok());
+    }
+
+    #[test]
+    fn per_adc_throughput() {
+        assert_eq!(q(8.0, 4e9, 32.0, 4).throughput_per_adc(), 1e9);
+    }
+
+    #[test]
+    fn folded_coefficients_reproduce_tuned_model() {
+        let point = tuning::TuningPoint {
+            query: q(7.0, 1e9, 32.0, 1),
+            energy_pj_per_convert: 3.3,
+            area_um2: Some(5e4),
+        };
+        let tuned = AdcModel::default().tuned_to(&point);
+        let folded = AdcModel::new(tuned.folded_coefficients());
+        for query in [q(5.0, 1e8, 65.0, 2), q(9.0, 1e10, 16.0, 8), point.query] {
+            let et = tuned.energy_pj_per_convert(&query);
+            let ef = folded.energy_pj_per_convert(&query);
+            assert!((et - ef).abs() / et < 1e-12);
+            let at = tuned.area_um2_per_adc(&query);
+            let af = folded.area_um2_per_adc(&query);
+            assert!((at - af).abs() / at < 1e-12);
+        }
+    }
+}

@@ -1,0 +1,176 @@
+//! Accelergy-style plug-in interface.
+//!
+//! The paper's released artifact is an Accelergy plug-in: an estimator
+//! that answers `(class_name, attributes, action_name)` queries with
+//! energy/area numbers and a confidence ("accuracy") score, so that a
+//! architecture description can name an `adc` component and have this
+//! model price it. This module reproduces that interface shape so the
+//! crate slots into an Accelergy-like flow:
+//!
+//! * [`Estimator::primitive_classes`] — the classes this plug-in serves.
+//! * [`Estimator::estimate_energy`] / [`Estimator::estimate_area`] —
+//!   attribute-map queries returning picojoules / µm².
+//!
+//! Attribute names follow the published plug-in: `resolution` (ENOB),
+//! `throughput` (total converts/s), `n_adcs`, `technology` (nm).
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+use super::{AdcModel, AdcQuery};
+
+/// An attribute map, as an Accelergy component description would carry.
+pub type Attributes = BTreeMap<String, f64>;
+
+/// Estimation confidence reported with each answer (Accelergy protocol:
+/// estimators bid with an accuracy percentage).
+pub const ACCURACY: f64 = 70.0;
+
+/// One estimation answer.
+#[derive(Clone, Copy, Debug)]
+pub struct Estimate {
+    /// The estimated value (pJ per action, or µm² per instance).
+    pub value: f64,
+    /// Confidence score in [0, 100].
+    pub accuracy: f64,
+}
+
+/// The ADC estimator plug-in.
+#[derive(Clone, Debug)]
+pub struct Estimator {
+    model: AdcModel,
+}
+
+impl Estimator {
+    /// Wrap a (fitted / tuned) model as an estimator.
+    pub fn new(model: AdcModel) -> Self {
+        Estimator { model }
+    }
+
+    /// Primitive component classes served by this plug-in.
+    pub fn primitive_classes(&self) -> &'static [&'static str] {
+        &["adc", "sar_adc", "pipeline_adc", "flash_adc"]
+    }
+
+    /// Whether a class/action pair is supported.
+    pub fn supports(&self, class_name: &str, action_name: &str) -> bool {
+        self.primitive_classes().contains(&class_name)
+            && matches!(action_name, "convert" | "read" | "sample")
+    }
+
+    fn query_from(&self, attributes: &Attributes) -> Result<AdcQuery> {
+        let get = |names: &[&str], default: Option<f64>| -> Result<f64> {
+            for n in names {
+                if let Some(v) = attributes.get(*n) {
+                    return Ok(*v);
+                }
+            }
+            default.ok_or_else(|| {
+                Error::Config(format!("adc plugin: missing attribute {names:?}"))
+            })
+        };
+        let query = AdcQuery {
+            enob: get(&["resolution", "enob"], None)?,
+            total_throughput: get(&["throughput", "total_throughput"], None)?,
+            tech_nm: get(&["technology", "tech_nm"], Some(32.0))?,
+            n_adcs: get(&["n_adcs", "n_instances"], Some(1.0))? as u32,
+        };
+        query.validate()?;
+        Ok(query)
+    }
+
+    /// Energy per `convert` action, picojoules.
+    pub fn estimate_energy(
+        &self,
+        class_name: &str,
+        attributes: &Attributes,
+        action_name: &str,
+    ) -> Result<Estimate> {
+        if !self.supports(class_name, action_name) {
+            return Err(Error::Config(format!(
+                "adc plugin: unsupported query {class_name}/{action_name}"
+            )));
+        }
+        let q = self.query_from(attributes)?;
+        Ok(Estimate { value: self.model.energy_pj_per_convert(&q), accuracy: ACCURACY })
+    }
+
+    /// Area per ADC instance, µm².
+    pub fn estimate_area(&self, class_name: &str, attributes: &Attributes) -> Result<Estimate> {
+        if !self.primitive_classes().contains(&class_name) {
+            return Err(Error::Config(format!(
+                "adc plugin: unsupported class {class_name}"
+            )));
+        }
+        let q = self.query_from(attributes)?;
+        Ok(Estimate { value: self.model.area_um2_per_adc(&q), accuracy: ACCURACY })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn attrs(pairs: &[(&str, f64)]) -> Attributes {
+        pairs.iter().map(|(k, v)| (k.to_string(), *v)).collect()
+    }
+
+    #[test]
+    fn energy_query_matches_model() {
+        let model = AdcModel::default();
+        let est = Estimator::new(model);
+        let a = attrs(&[("resolution", 7.0), ("throughput", 1e9), ("technology", 32.0)]);
+        let e = est.estimate_energy("adc", &a, "convert").unwrap();
+        let q = AdcQuery { enob: 7.0, total_throughput: 1e9, tech_nm: 32.0, n_adcs: 1 };
+        assert!((e.value - model.energy_pj_per_convert(&q)).abs() < 1e-12);
+        assert_eq!(e.accuracy, ACCURACY);
+    }
+
+    #[test]
+    fn attribute_aliases_work() {
+        let est = Estimator::new(AdcModel::default());
+        let a = attrs(&[("enob", 8.0), ("total_throughput", 1e8), ("tech_nm", 65.0)]);
+        let b = attrs(&[("resolution", 8.0), ("throughput", 1e8), ("technology", 65.0)]);
+        let ea = est.estimate_energy("adc", &a, "convert").unwrap().value;
+        let eb = est.estimate_energy("adc", &b, "convert").unwrap().value;
+        assert_eq!(ea, eb);
+    }
+
+    #[test]
+    fn defaults_applied_for_optional_attributes() {
+        let est = Estimator::new(AdcModel::default());
+        // technology defaults to 32 nm, n_adcs to 1.
+        let a = attrs(&[("resolution", 7.0), ("throughput", 1e9)]);
+        assert!(est.estimate_area("adc", &a).is_ok());
+    }
+
+    #[test]
+    fn missing_required_attribute_errors() {
+        let est = Estimator::new(AdcModel::default());
+        let a = attrs(&[("throughput", 1e9)]);
+        let err = est.estimate_energy("adc", &a, "convert").unwrap_err().to_string();
+        assert!(err.contains("resolution"), "{err}");
+    }
+
+    #[test]
+    fn unsupported_class_or_action_rejected() {
+        let est = Estimator::new(AdcModel::default());
+        let a = attrs(&[("resolution", 7.0), ("throughput", 1e9)]);
+        assert!(est.estimate_energy("dac", &a, "convert").is_err());
+        assert!(est.estimate_energy("adc", &a, "multiply").is_err());
+        assert!(est.supports("sar_adc", "convert"));
+    }
+
+    #[test]
+    fn n_adcs_divides_per_adc_throughput() {
+        let est = Estimator::new(AdcModel::default());
+        // 8 ADCs at the same total throughput -> lower per-ADC rate -> the
+        // per-convert energy cannot be higher.
+        let one = attrs(&[("resolution", 7.0), ("throughput", 4e9), ("n_adcs", 1.0)]);
+        let eight = attrs(&[("resolution", 7.0), ("throughput", 4e9), ("n_adcs", 8.0)]);
+        let e1 = est.estimate_energy("adc", &one, "convert").unwrap().value;
+        let e8 = est.estimate_energy("adc", &eight, "convert").unwrap().value;
+        assert!(e8 <= e1);
+    }
+}

@@ -1,0 +1,108 @@
+//! User tuning: calibrate the model to a specific published ADC.
+//!
+//! Paper §II: "To model a particular ADC, users may tune the tool's
+//! estimated area and energy to match that of the ADC of interest. Users
+//! may then use the tool to estimate how the area and energy of that ADC
+//! would change given a change in throughput, ENOB, or technology node."
+//!
+//! Tuning is a pair of additive log10 offsets (multiplicative factors on
+//! energy and area) chosen so the model passes exactly through the
+//! reference design point while preserving every slope for interpolation.
+
+use crate::util::logspace::log10;
+
+use super::{AdcModel, AdcQuery};
+
+/// A known ADC design point to tune to.
+#[derive(Clone, Copy, Debug)]
+pub struct TuningPoint {
+    /// The architecture-level query describing the reference ADC.
+    pub query: AdcQuery,
+    /// Its published energy per convert (picojoules).
+    pub energy_pj_per_convert: f64,
+    /// Its published per-ADC area (µm²). `None` tunes energy only.
+    pub area_um2: Option<f64>,
+}
+
+/// Produce a tuned copy of `model` passing through `point` exactly.
+pub fn tune(model: &AdcModel, point: &TuningPoint) -> AdcModel {
+    let base_e = model.energy_pj_per_convert(&point.query);
+    let mut tuned = *model;
+    tuned.energy_offset_decades += log10(point.energy_pj_per_convert) - log10(base_e);
+
+    if let Some(area) = point.area_um2 {
+        // Area depends on energy through d3·log E; tune area *after* the
+        // energy offset is applied so the net model hits the point exactly.
+        let base_a = tuned.area_um2_per_adc(&point.query);
+        tuned.area_offset_decades += log10(area) - log10(base_a);
+    }
+    tuned
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adc::AdcQuery;
+
+    fn reference() -> TuningPoint {
+        TuningPoint {
+            query: AdcQuery {
+                enob: 7.0,
+                total_throughput: 1e9,
+                tech_nm: 32.0,
+                n_adcs: 1,
+            },
+            energy_pj_per_convert: 2.5,
+            area_um2: Some(4.2e4),
+        }
+    }
+
+    #[test]
+    fn tuned_model_hits_the_point_exactly() {
+        let tuned = AdcModel::default().tuned_to(&reference());
+        let p = reference();
+        let e = tuned.energy_pj_per_convert(&p.query);
+        let a = tuned.area_um2_per_adc(&p.query);
+        assert!((e - 2.5).abs() / 2.5 < 1e-9, "energy {e}");
+        assert!((a - 4.2e4).abs() / 4.2e4 < 1e-9, "area {a}");
+    }
+
+    #[test]
+    fn tuning_preserves_trends() {
+        let base = AdcModel::default();
+        let tuned = base.tuned_to(&reference());
+        // Ratios against the untuned model are constant across queries:
+        // slopes (trends) are untouched.
+        let q1 = AdcQuery { enob: 6.0, total_throughput: 1e8, tech_nm: 65.0, n_adcs: 2 };
+        let q2 = AdcQuery { enob: 10.0, total_throughput: 4e9, tech_nm: 16.0, n_adcs: 8 };
+        let r1 = tuned.energy_pj_per_convert(&q1) / base.energy_pj_per_convert(&q1);
+        let r2 = tuned.energy_pj_per_convert(&q2) / base.energy_pj_per_convert(&q2);
+        assert!((r1 - r2).abs() / r1 < 1e-9, "{r1} vs {r2}");
+    }
+
+    #[test]
+    fn energy_only_tuning_leaves_area_offset_partially_coupled() {
+        // Tuning energy alone still moves area through Eq. 1's E^d3 term —
+        // that is physical (lower-energy designs are smaller) and the
+        // paper's rationale for using energy in the area model.
+        let base = AdcModel::default();
+        let point = TuningPoint { area_um2: None, ..reference() };
+        let tuned = base.tuned_to(&point);
+        let q = reference().query;
+        let base_e = base.energy_pj_per_convert(&q);
+        assert!(point.energy_pj_per_convert > base_e, "fixture: tune upward");
+        assert!(tuned.area_um2_per_adc(&q) > base.area_um2_per_adc(&q));
+        assert_eq!(tuned.area_offset_decades, 0.0);
+    }
+
+    #[test]
+    fn interpolation_around_tuned_point_follows_model_shape() {
+        let tuned = AdcModel::default().tuned_to(&reference());
+        // Doubling throughput above the knee raises energy by ~2^b3.
+        let q = AdcQuery { enob: 7.0, total_throughput: 8e9, tech_nm: 32.0, n_adcs: 1 };
+        let q2 = AdcQuery { total_throughput: 16e9, ..q };
+        let ratio = tuned.energy_pj_per_convert(&q2) / tuned.energy_pj_per_convert(&q);
+        let b3 = tuned.coefs.b3;
+        assert!((ratio - 2f64.powf(b3)).abs() / ratio < 1e-9);
+    }
+}

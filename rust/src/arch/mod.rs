@@ -1,0 +1,216 @@
+//! CiM accelerator architecture specifications.
+//!
+//! A [`CimArch`] describes one analog CiM design point at the architecture
+//! level: crossbar geometry, weight/activation slicing, the analog sum
+//! size (how many values one ADC convert reads — the paper's central
+//! knob), the ADC configuration, and the buffer hierarchy. Presets for
+//! the RAELLA-like S/M/L/XL parameterizations of §III live in [`mod@raella`];
+//! arbitrary specs load from TOML via [`from_toml`].
+
+pub mod raella;
+
+pub use raella::{RaellaVariant, raella};
+
+use crate::config::{Value, parse_toml};
+use crate::error::{Error, Result};
+
+/// ADC configuration of an architecture.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AdcArchConfig {
+    /// ADC resolution in effective bits.
+    pub enob: f64,
+    /// Number of ADCs operating in parallel.
+    pub n_adcs: u32,
+    /// Aggregate converts/second across all ADCs.
+    pub total_throughput: f64,
+}
+
+/// One CiM architecture design point.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CimArch {
+    /// Display name (e.g. "raella-m").
+    pub name: String,
+    /// Technology node (nm).
+    pub tech_nm: f64,
+    /// Physical crossbar rows per array.
+    pub array_rows: usize,
+    /// Physical crossbar columns per array.
+    pub array_cols: usize,
+    /// Analog sum size: values summed on a column line per ADC convert.
+    /// May exceed `array_rows` (CASCADE-style analog chaining of arrays).
+    pub sum_size: usize,
+    /// Bits stored per memory cell.
+    pub cell_bits: u32,
+    /// Weight precision in bits (=> `weight_bits / cell_bits` column slices).
+    pub weight_bits: u32,
+    /// Activation precision in bits (bit-serial 1-bit DACs => planes).
+    pub act_bits: u32,
+    /// ADC configuration.
+    pub adc: AdcArchConfig,
+    /// Local SRAM buffer capacity (bytes) per tile.
+    pub sram_bytes: usize,
+    /// Global eDRAM buffer capacity (bytes).
+    pub edram_bytes: usize,
+}
+
+impl CimArch {
+    /// Column slices each logical weight occupies.
+    pub fn col_slices(&self) -> usize {
+        (self.weight_bits as usize).div_ceil(self.cell_bits as usize)
+    }
+
+    /// Bit-serial activation planes.
+    pub fn planes(&self) -> usize {
+        self.act_bits as usize
+    }
+
+    /// Logical weights that fit in one array (rows x logical columns).
+    pub fn weights_per_array(&self) -> usize {
+        self.array_rows * (self.array_cols / self.col_slices())
+    }
+
+    /// Validate structural invariants.
+    pub fn validate(&self) -> Result<()> {
+        if self.array_rows == 0 || self.array_cols == 0 {
+            return Err(Error::Config("array dimensions must be positive".into()));
+        }
+        if self.sum_size == 0 {
+            return Err(Error::Config("sum_size must be positive".into()));
+        }
+        if self.cell_bits == 0 || self.weight_bits < self.cell_bits {
+            return Err(Error::Config(format!(
+                "invalid slicing: weight_bits={} cell_bits={}",
+                self.weight_bits, self.cell_bits
+            )));
+        }
+        if self.act_bits == 0 {
+            return Err(Error::Config("act_bits must be positive".into()));
+        }
+        if self.array_cols % self.col_slices() != 0 {
+            return Err(Error::Config(format!(
+                "array_cols={} not divisible by col_slices={}",
+                self.array_cols,
+                self.col_slices()
+            )));
+        }
+        if self.adc.n_adcs == 0 || self.adc.total_throughput <= 0.0 || self.adc.enob <= 0.0 {
+            return Err(Error::Config("invalid ADC config".into()));
+        }
+        Ok(())
+    }
+
+    /// The analog full-scale (distinct levels - 1) a column sum can reach:
+    /// sum_size rows each contributing up to (2^cell_bits - 1).
+    pub fn column_full_scale(&self) -> f64 {
+        self.sum_size as f64 * ((1u64 << self.cell_bits) - 1) as f64
+    }
+
+    /// ENOB needed to read a full-scale column losslessly
+    /// (log2 of distinct levels). The paper's S/M/L/XL ADCs deliberately
+    /// sit *below* this (RAELLA keeps sums small so low ENOB suffices).
+    pub fn lossless_enob(&self) -> f64 {
+        (self.column_full_scale() + 1.0).log2()
+    }
+}
+
+/// Load an architecture from a TOML-subset document (see `configs/`).
+pub fn from_toml(text: &str) -> Result<CimArch> {
+    let v = parse_toml(text)?;
+    from_value(&v)
+}
+
+/// Build a [`CimArch`] from a parsed config [`Value`].
+pub fn from_value(v: &Value) -> Result<CimArch> {
+    let arch = CimArch {
+        name: v.require_str("name")?.to_string(),
+        tech_nm: v.require_f64("tech_nm")?,
+        array_rows: v.require_usize("array.rows")?,
+        array_cols: v.require_usize("array.cols")?,
+        sum_size: v.require_usize("array.sum_size")?,
+        cell_bits: v.require_usize("array.cell_bits")? as u32,
+        weight_bits: v.require_usize("precision.weight_bits")? as u32,
+        act_bits: v.require_usize("precision.act_bits")? as u32,
+        adc: AdcArchConfig {
+            enob: v.require_f64("adc.enob")?,
+            n_adcs: v.require_usize("adc.n_adcs")? as u32,
+            total_throughput: v.require_f64("adc.total_throughput")?,
+        },
+        sram_bytes: v.require_usize("buffers.sram_bytes")?,
+        edram_bytes: v.require_usize("buffers.edram_bytes")?,
+    };
+    arch.validate()?;
+    Ok(arch)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DOC: &str = r#"
+name = "custom"
+tech_nm = 32
+
+[array]
+rows = 512
+cols = 512
+sum_size = 256
+cell_bits = 2
+
+[precision]
+weight_bits = 8
+act_bits = 8
+
+[adc]
+enob = 7
+n_adcs = 2
+total_throughput = 1.3e9
+
+[buffers]
+sram_bytes = 65536
+edram_bytes = 4194304
+"#;
+
+    #[test]
+    fn parses_full_spec() {
+        let a = from_toml(DOC).unwrap();
+        assert_eq!(a.name, "custom");
+        assert_eq!(a.array_rows, 512);
+        assert_eq!(a.sum_size, 256);
+        assert_eq!(a.col_slices(), 4);
+        assert_eq!(a.planes(), 8);
+        assert_eq!(a.adc.n_adcs, 2);
+        assert!((a.adc.total_throughput - 1.3e9).abs() < 1.0);
+    }
+
+    #[test]
+    fn missing_field_is_reported() {
+        let bad = DOC.replace("rows = 512\n", "");
+        let err = from_toml(&bad).unwrap_err().to_string();
+        assert!(err.contains("array.rows"), "{err}");
+    }
+
+    #[test]
+    fn validate_catches_bad_slicing() {
+        let mut a = from_toml(DOC).unwrap();
+        a.weight_bits = 1; // < cell_bits
+        assert!(a.validate().is_err());
+        let mut b = from_toml(DOC).unwrap();
+        b.array_cols = 510; // not divisible by 4 slices
+        assert!(b.validate().is_err());
+    }
+
+    #[test]
+    fn full_scale_and_lossless_enob() {
+        let a = from_toml(DOC).unwrap();
+        // 256 rows x 3 (2-bit cells) = 768 levels above zero.
+        assert_eq!(a.column_full_scale(), 768.0);
+        let enob = a.lossless_enob();
+        assert!(enob > 9.5 && enob < 9.6, "{enob}"); // log2(769)
+    }
+
+    #[test]
+    fn weights_per_array() {
+        let a = from_toml(DOC).unwrap();
+        assert_eq!(a.weights_per_array(), 512 * 128);
+    }
+}

@@ -1,0 +1,124 @@
+//! RAELLA-like architecture presets (paper §III-A).
+//!
+//! Four parameterizations trade computations-per-convert against ADC
+//! resolution: Small sums up to 128 analog values and reads with a 6-bit
+//! ADC; Medium / Large / Extra-Large sum up to 512 / 2048 / 8192 values
+//! with 7 / 8 / 9-bit ADCs — each step sums 4x more values for +1 ADC bit.
+
+use super::{AdcArchConfig, CimArch};
+
+/// The four parameterizations evaluated in the paper's Fig. 4.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum RaellaVariant {
+    /// Sum ≤ 128, 6-bit ADC.
+    Small,
+    /// Sum ≤ 512, 7-bit ADC.
+    Medium,
+    /// Sum ≤ 2048, 8-bit ADC.
+    Large,
+    /// Sum ≤ 8192, 9-bit ADC.
+    ExtraLarge,
+}
+
+impl RaellaVariant {
+    /// All four variants in S..XL order.
+    pub const ALL: [RaellaVariant; 4] = [
+        RaellaVariant::Small,
+        RaellaVariant::Medium,
+        RaellaVariant::Large,
+        RaellaVariant::ExtraLarge,
+    ];
+
+    /// Display name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            RaellaVariant::Small => "S",
+            RaellaVariant::Medium => "M",
+            RaellaVariant::Large => "L",
+            RaellaVariant::ExtraLarge => "XL",
+        }
+    }
+
+    /// (sum size, ADC ENOB) of this variant (paper §III-A).
+    pub fn params(&self) -> (usize, f64) {
+        match self {
+            RaellaVariant::Small => (128, 6.0),
+            RaellaVariant::Medium => (512, 7.0),
+            RaellaVariant::Large => (2048, 8.0),
+            RaellaVariant::ExtraLarge => (8192, 9.0),
+        }
+    }
+}
+
+/// Build a RAELLA-like [`CimArch`] for a variant.
+///
+/// Common structure across variants: 512x512 crossbars, 2-bit cells,
+/// 8-bit weights (4 column slices), 8-bit bit-serial activations, 64 KiB
+/// tile SRAM, 4 MiB global eDRAM, 32 nm. Only `(sum_size, ADC ENOB)`
+/// differ — exactly the §III-A experiment design. `n_adcs` and ADC
+/// throughput default to 8 ADCs at the paper's Fig. 5 base throughput
+/// (1.3e9 conv/s total => 1.6e8 per ADC, inside the minimum-energy
+/// region for all four variants' ENOBs) and are overridden by the
+/// Fig. 5 sweep.
+pub fn raella(variant: RaellaVariant) -> CimArch {
+    let (sum_size, enob) = variant.params();
+    CimArch {
+        name: format!("raella-{}", variant.name().to_lowercase()),
+        tech_nm: 32.0,
+        array_rows: 512,
+        array_cols: 512,
+        sum_size,
+        cell_bits: 2,
+        weight_bits: 8,
+        act_bits: 8,
+        adc: AdcArchConfig { enob, n_adcs: 8, total_throughput: 1.3e9 },
+        sram_bytes: 64 * 1024,
+        edram_bytes: 4 * 1024 * 1024,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn variants_match_paper_parameters() {
+        assert_eq!(raella(RaellaVariant::Small).sum_size, 128);
+        assert_eq!(raella(RaellaVariant::Small).adc.enob, 6.0);
+        assert_eq!(raella(RaellaVariant::Medium).sum_size, 512);
+        assert_eq!(raella(RaellaVariant::Medium).adc.enob, 7.0);
+        assert_eq!(raella(RaellaVariant::Large).sum_size, 2048);
+        assert_eq!(raella(RaellaVariant::Large).adc.enob, 8.0);
+        assert_eq!(raella(RaellaVariant::ExtraLarge).sum_size, 8192);
+        assert_eq!(raella(RaellaVariant::ExtraLarge).adc.enob, 9.0);
+    }
+
+    #[test]
+    fn each_step_trades_4x_sum_for_one_bit() {
+        for w in RaellaVariant::ALL.windows(2) {
+            let (s0, e0) = w[0].params();
+            let (s1, e1) = w[1].params();
+            assert_eq!(s1, 4 * s0);
+            assert_eq!(e1, e0 + 1.0);
+        }
+    }
+
+    #[test]
+    fn presets_validate() {
+        for v in RaellaVariant::ALL {
+            raella(v).validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn only_sum_and_enob_differ() {
+        let s = raella(RaellaVariant::Small);
+        let xl = raella(RaellaVariant::ExtraLarge);
+        assert_eq!(s.array_rows, xl.array_rows);
+        assert_eq!(s.cell_bits, xl.cell_bits);
+        assert_eq!(s.weight_bits, xl.weight_bits);
+        assert_eq!(s.sram_bytes, xl.sram_bytes);
+        assert_ne!(s.sum_size, xl.sum_size);
+        assert_ne!(s.adc.enob, xl.adc.enob);
+    }
+}

@@ -1,0 +1,174 @@
+//! Micro-benchmark harness (criterion is not in the offline registry).
+//!
+//! Provides warm-up, calibrated iteration counts, and robust statistics
+//! (median / mean / stddev / min, kept as f64 seconds — per-iteration
+//! times can be sub-nanosecond, below `Duration` resolution) with
+//! human-readable reporting. Bench targets are `harness = false` binaries
+//! that call [`Bench::run`].
+
+use std::time::{Duration, Instant};
+
+/// Measurement statistics for one benchmark case (all times in seconds
+/// per iteration).
+#[derive(Clone, Copy, Debug)]
+pub struct Stats {
+    /// Iterations per sample batch.
+    pub iters_per_sample: u64,
+    /// Number of sample batches.
+    pub samples: usize,
+    /// Median time per iteration (seconds).
+    pub median_s: f64,
+    /// Mean time per iteration (seconds).
+    pub mean_s: f64,
+    /// Standard deviation of per-sample means (seconds).
+    pub stddev_s: f64,
+    /// Fastest sample (seconds per iteration).
+    pub min_s: f64,
+}
+
+impl Stats {
+    /// Throughput in iterations/second based on the median.
+    pub fn iters_per_sec(&self) -> f64 {
+        1.0 / self.median_s
+    }
+}
+
+/// Format a seconds-per-iteration value with an adaptive unit.
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Benchmark runner configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct Bench {
+    /// Wall-clock budget for warm-up.
+    pub warmup: Duration,
+    /// Wall-clock budget for measurement.
+    pub measure: Duration,
+    /// Number of sample batches to split the measurement into.
+    pub samples: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            warmup: Duration::from_millis(300),
+            measure: Duration::from_secs(1),
+            samples: 20,
+        }
+    }
+}
+
+impl Bench {
+    /// Quick preset for slow (>10 ms/iter) cases.
+    pub fn slow() -> Self {
+        Bench {
+            warmup: Duration::from_millis(100),
+            measure: Duration::from_secs(2),
+            samples: 10,
+        }
+    }
+
+    /// Run `f` repeatedly and return statistics. `f` should include any
+    /// per-iteration state internally; use `std::hint::black_box` on
+    /// inputs/outputs to defeat const-folding.
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> Stats {
+        // Warm-up and calibration: find iters/sample so one sample ~=
+        // measure/samples wall time.
+        let warm_start = Instant::now();
+        let mut warm_iters: u64 = 0;
+        while warm_start.elapsed() < self.warmup {
+            f();
+            warm_iters += 1;
+        }
+        let per_iter =
+            (warm_start.elapsed().as_secs_f64() / warm_iters.max(1) as f64).max(1e-12);
+        let target_sample = self.measure.as_secs_f64() / self.samples as f64;
+        let iters_per_sample = ((target_sample / per_iter) as u64).clamp(1, 1 << 28);
+
+        let mut sample_means: Vec<f64> = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t = Instant::now();
+            for _ in 0..iters_per_sample {
+                f();
+            }
+            sample_means.push(t.elapsed().as_secs_f64() / iters_per_sample as f64);
+        }
+        sample_means.sort_by(|a, b| a.total_cmp(b));
+
+        let mean = sample_means.iter().sum::<f64>() / sample_means.len() as f64;
+        let var = sample_means
+            .iter()
+            .map(|m| (m - mean) * (m - mean))
+            .sum::<f64>()
+            / sample_means.len() as f64;
+        let stats = Stats {
+            iters_per_sample,
+            samples: self.samples,
+            median_s: sample_means[sample_means.len() / 2],
+            mean_s: mean,
+            stddev_s: var.sqrt(),
+            min_s: sample_means[0],
+        };
+        println!(
+            "bench {name:<44} median {:>12}  mean {:>12}  sd {:>10}  ({} iters x {} samples)",
+            fmt_secs(stats.median_s),
+            fmt_secs(stats.mean_s),
+            fmt_secs(stats.stddev_s),
+            iters_per_sample,
+            self.samples
+        );
+        stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_a_known_busy_loop() {
+        let bench = Bench {
+            warmup: Duration::from_millis(20),
+            measure: Duration::from_millis(100),
+            samples: 5,
+        };
+        let mut acc = 0u64;
+        let stats = bench.run("busy", || {
+            acc = acc.wrapping_add(std::hint::black_box((0..1000u64).sum::<u64>()));
+        });
+        std::hint::black_box(acc);
+        assert!(stats.median_s > 0.0);
+        assert!(stats.min_s <= stats.median_s);
+        assert!(stats.iters_per_sample >= 1);
+    }
+
+    #[test]
+    fn throughput_is_inverse_of_median() {
+        let s = Stats {
+            iters_per_sample: 1,
+            samples: 1,
+            median_s: 0.01,
+            mean_s: 0.01,
+            stddev_s: 0.0,
+            min_s: 0.01,
+        };
+        assert!((s.iters_per_sec() - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fmt_secs_units() {
+        assert_eq!(fmt_secs(2.0), "2.000 s");
+        assert_eq!(fmt_secs(2e-3), "2.000 ms");
+        assert_eq!(fmt_secs(2e-6), "2.000 µs");
+        assert_eq!(fmt_secs(2e-9), "2.0 ns");
+    }
+}

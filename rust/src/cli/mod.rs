@@ -1,0 +1,167 @@
+//! Argument-parsing substrate (no clap in the offline registry).
+//!
+//! Supports `program <subcommand> [--flag] [--key value] [positional...]`
+//! with typed accessors, defaults, and a generated usage string.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// Parsed command line: subcommand, options, flags, and positionals.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    /// First non-flag token (e.g. `fit`, `sweep`), if any.
+    pub subcommand: Option<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positionals: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of tokens (typically `std::env::args().skip(1)`).
+    pub fn parse<I: IntoIterator<Item = String>>(tokens: I) -> Result<Args> {
+        let mut args = Args::default();
+        let mut iter = tokens.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if name.is_empty() {
+                    return Err(Error::Config("bare `--` is not supported".into()));
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|next| !next.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let value = iter.next().unwrap();
+                    args.options.insert(name.to_string(), value);
+                } else {
+                    args.flags.push(name.to_string());
+                }
+            } else if args.subcommand.is_none() {
+                args.subcommand = Some(tok);
+            } else {
+                args.positionals.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    /// String option value.
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(String::as_str)
+    }
+
+    /// String option with default.
+    pub fn opt_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.opt(name).unwrap_or(default)
+    }
+
+    /// f64 option with default; errors on unparsable input.
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| Error::Config(format!("--{name}: `{s}` is not a number"))),
+        }
+    }
+
+    /// usize option with default.
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| Error::Config(format!("--{name}: `{s}` is not an integer"))),
+        }
+    }
+
+    /// u64 option with default.
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| Error::Config(format!("--{name}: `{s}` is not an integer"))),
+        }
+    }
+
+    /// Whether a boolean flag was given.
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    /// Positional arguments (after the subcommand).
+    pub fn positionals(&self) -> &[String] {
+        &self.positionals
+    }
+
+    /// Comma-separated f64 list option (e.g. `--enob 4,8,12`).
+    pub fn f64_list(&self, name: &str) -> Result<Option<Vec<f64>>> {
+        match self.opt(name) {
+            None => Ok(None),
+            Some(s) => s
+                .split(',')
+                .map(|p| {
+                    p.trim().parse::<f64>().map_err(|_| {
+                        Error::Config(format!("--{name}: `{p}` is not a number"))
+                    })
+                })
+                .collect::<Result<Vec<f64>>>()
+                .map(Some),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_options_flags_positionals() {
+        let a = parse("sweep --enob 8 --verbose --out=x.csv input1 input2");
+        assert_eq!(a.subcommand.as_deref(), Some("sweep"));
+        assert_eq!(a.opt("enob"), Some("8"));
+        assert_eq!(a.opt("out"), Some("x.csv"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positionals(), &["input1".to_string(), "input2".to_string()]);
+    }
+
+    #[test]
+    fn typed_accessors_and_defaults() {
+        let a = parse("model --enob 7.5 --n 4");
+        assert_eq!(a.f64_or("enob", 0.0).unwrap(), 7.5);
+        assert_eq!(a.usize_or("n", 1).unwrap(), 4);
+        assert_eq!(a.f64_or("missing", 2.5).unwrap(), 2.5);
+        assert_eq!(a.opt_or("backend", "native"), "native");
+    }
+
+    #[test]
+    fn bad_numbers_error_with_context() {
+        let a = parse("model --enob seven");
+        let e = a.f64_or("enob", 0.0).unwrap_err().to_string();
+        assert!(e.contains("enob") && e.contains("seven"), "{e}");
+    }
+
+    #[test]
+    fn comma_lists() {
+        let a = parse("figures --enob 4,8,12");
+        assert_eq!(a.f64_list("enob").unwrap().unwrap(), vec![4.0, 8.0, 12.0]);
+        assert_eq!(a.f64_list("missing").unwrap(), None);
+        let bad = parse("figures --enob 4,x");
+        assert!(bad.f64_list("enob").is_err());
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse("cmd --dry-run --seed 7");
+        assert!(a.flag("dry-run"));
+        assert_eq!(a.u64_or("seed", 0).unwrap(), 7);
+    }
+}

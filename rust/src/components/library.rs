@@ -1,0 +1,83 @@
+//! The concrete component catalog with 32 nm reference values.
+//!
+//! Values are in the ballpark of the ISAAC (ISCA'16) and RAELLA (ISCA'23)
+//! component tables, normalized to 32 nm. Exact magnitudes are not the
+//! point (our substrate is synthetic; see DESIGN.md §2) — what matters is
+//! that the non-ADC context is realistic relative to the ADC so the
+//! paper's full-accelerator tradeoffs (Figs. 4–5) keep their shape.
+
+use super::{Component, ScalingClass};
+
+/// ReRAM crossbar cell read: energy per cell per activated bit-plane;
+/// area per cell including its share of array periphery (4F² cell plus
+/// wordline/bitline overhead).
+pub fn crossbar_cell(tech_nm: f64) -> Component {
+    Component::at_tech("crossbar-cell", 0.0005, 0.05, ScalingClass::Crossbar, tech_nm)
+}
+
+/// 1-bit row DAC / wordline driver: energy per driven row per bit-plane.
+pub fn dac(tech_nm: f64) -> Component {
+    Component::at_tech("dac", 0.25, 1.2, ScalingClass::Analog, tech_nm)
+}
+
+/// Column sample-and-hold: energy per sampled column value.
+pub fn sample_hold(tech_nm: f64) -> Component {
+    Component::at_tech("sample-hold", 0.01, 10.0, ScalingClass::Analog, tech_nm)
+}
+
+/// Digital shift-add unit: energy per post-ADC accumulate operation;
+/// area per instance (one per ADC).
+pub fn shift_add(tech_nm: f64) -> Component {
+    Component::at_tech("shift-add", 0.02, 600.0, ScalingClass::Digital, tech_nm)
+}
+
+/// Input/output registers: energy per bit moved.
+pub fn register(tech_nm: f64) -> Component {
+    Component::at_tech("register", 0.0002, 0.4, ScalingClass::Digital, tech_nm)
+}
+
+/// Local SRAM buffer: energy per byte accessed; area per byte.
+pub fn sram(tech_nm: f64) -> Component {
+    Component::at_tech("sram", 0.19, 0.35, ScalingClass::Digital, tech_nm)
+}
+
+/// Global eDRAM buffer: energy per byte accessed; area per byte.
+pub fn edram(tech_nm: f64) -> Component {
+    Component::at_tech("edram", 1.2, 0.08, ScalingClass::Digital, tech_nm)
+}
+
+/// On-chip router: energy per 32-byte flit; area per router instance.
+pub fn router(tech_nm: f64) -> Component {
+    Component::at_tech("router", 2.0, 25_000.0, ScalingClass::Digital, tech_nm)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn catalog_is_positive_and_ordered_sanely() {
+        let t = 32.0;
+        // Cell reads are the cheapest action; router flits the priciest.
+        let cell = crossbar_cell(t);
+        let rt = router(t);
+        assert!(cell.energy_pj_per_action < dac(t).energy_pj_per_action);
+        assert!(sample_hold(t).energy_pj_per_action < shift_add(t).energy_pj_per_action * 10.0);
+        assert!(rt.energy_pj_per_action > sram(t).energy_pj_per_action);
+        for c in [cell, dac(t), sample_hold(t), shift_add(t), register(t), sram(t), edram(t), rt] {
+            assert!(c.energy_pj_per_action > 0.0, "{}", c.name);
+            assert!(c.area_um2 > 0.0, "{}", c.name);
+        }
+    }
+
+    #[test]
+    fn bigger_node_costs_more() {
+        for f in [crossbar_cell, dac, sample_hold, shift_add, register, sram, edram, router]
+        {
+            let small = f(16.0);
+            let big = f(65.0);
+            assert!(big.energy_pj_per_action > small.energy_pj_per_action, "{}", big.name);
+            assert!(big.area_um2 > small.area_um2, "{}", big.name);
+        }
+    }
+}

@@ -1,0 +1,152 @@
+//! Accelergy-like component energy/area library.
+//!
+//! Each non-ADC accelerator component is characterized by an energy per
+//! action and an area, specified at a 32 nm reference node and scaled to
+//! the target technology by per-class exponents (digital logic and memory
+//! scale ~quadratically with node; analog front-end components scale
+//! ~linearly — mirroring how Accelergy's primitive tables behave across
+//! nodes). Reference values are in the ISAAC / RAELLA ballpark and are
+//! documented per component; the paper's experiments only require that
+//! the non-ADC context has realistic relative magnitude, since every
+//! variant shares these components (DESIGN.md §2).
+//!
+//! The ADC itself is priced by [`crate::adc::AdcModel`] — that is the
+//! paper's point — and enters the rollup through [`AdcComponent`].
+
+pub mod library;
+
+pub use library::*;
+
+use crate::adc::{AdcModel, AdcQuery};
+
+/// Energy/area scaling class of a component.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScalingClass {
+    /// Digital logic / SRAM: energy ~ (T/32)^2, area ~ (T/32)^2.
+    Digital,
+    /// Analog front-end (DAC, S+H): energy ~ (T/32)^1, area ~ (T/32)^1.
+    Analog,
+    /// Memristive crossbar cells: energy ~ (T/32)^1, area ~ (T/32)^2 (4F²).
+    Crossbar,
+}
+
+impl ScalingClass {
+    /// Multiplicative energy scale factor from 32 nm to `tech_nm`.
+    pub fn energy_scale(&self, tech_nm: f64) -> f64 {
+        let r = tech_nm / 32.0;
+        match self {
+            ScalingClass::Digital => r * r,
+            ScalingClass::Analog | ScalingClass::Crossbar => r,
+        }
+    }
+
+    /// Multiplicative area scale factor from 32 nm to `tech_nm`.
+    pub fn area_scale(&self, tech_nm: f64) -> f64 {
+        let r = tech_nm / 32.0;
+        match self {
+            ScalingClass::Digital | ScalingClass::Crossbar => r * r,
+            ScalingClass::Analog => r,
+        }
+    }
+}
+
+/// A primitive component instance: per-action energy and per-instance area
+/// at a given technology node.
+#[derive(Clone, Debug)]
+pub struct Component {
+    /// Display name (e.g. "dac", "shift-add").
+    pub name: &'static str,
+    /// Energy per action in picojoules (at `tech_nm`).
+    pub energy_pj_per_action: f64,
+    /// Area per instance in µm² (at `tech_nm`).
+    pub area_um2: f64,
+    /// Scaling class used to derive the above from 32 nm reference values.
+    pub class: ScalingClass,
+}
+
+impl Component {
+    /// Build from 32 nm reference values, scaled to `tech_nm`.
+    pub fn at_tech(
+        name: &'static str,
+        ref_energy_pj: f64,
+        ref_area_um2: f64,
+        class: ScalingClass,
+        tech_nm: f64,
+    ) -> Self {
+        Component {
+            name,
+            energy_pj_per_action: ref_energy_pj * class.energy_scale(tech_nm),
+            area_um2: ref_area_um2 * class.area_scale(tech_nm),
+            class,
+        }
+    }
+
+    /// Energy (pJ) for `n` actions.
+    pub fn energy_pj(&self, actions: f64) -> f64 {
+        self.energy_pj_per_action * actions
+    }
+}
+
+/// The ADC as a component: wraps the paper's model for use in the rollup.
+#[derive(Clone, Debug)]
+pub struct AdcComponent {
+    /// The model (possibly tuned / fitted).
+    pub model: AdcModel,
+    /// The architecture-level query this instance answers.
+    pub query: AdcQuery,
+}
+
+impl AdcComponent {
+    /// Energy per convert (pJ).
+    pub fn energy_pj_per_convert(&self) -> f64 {
+        self.model.energy_pj_per_convert(&self.query)
+    }
+
+    /// Total area of all ADCs (µm²).
+    pub fn total_area_um2(&self) -> f64 {
+        self.model.area_um2_per_adc(&self.query) * self.query.n_adcs as f64
+    }
+
+    /// Energy (pJ) for `n` converts.
+    pub fn energy_pj(&self, converts: f64) -> f64 {
+        self.energy_pj_per_convert() * converts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scaling_classes() {
+        // 64 nm = 2x node: digital energy 4x, analog energy 2x.
+        assert!((ScalingClass::Digital.energy_scale(64.0) - 4.0).abs() < 1e-12);
+        assert!((ScalingClass::Analog.energy_scale(64.0) - 2.0).abs() < 1e-12);
+        assert!((ScalingClass::Crossbar.energy_scale(64.0) - 2.0).abs() < 1e-12);
+        assert!((ScalingClass::Crossbar.area_scale(64.0) - 4.0).abs() < 1e-12);
+        // Identity at the reference node.
+        for c in [ScalingClass::Digital, ScalingClass::Analog, ScalingClass::Crossbar] {
+            assert!((c.energy_scale(32.0) - 1.0).abs() < 1e-12);
+            assert!((c.area_scale(32.0) - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn component_scales_from_reference() {
+        let c = Component::at_tech("t", 1.0, 10.0, ScalingClass::Digital, 64.0);
+        assert!((c.energy_pj_per_action - 4.0).abs() < 1e-12);
+        assert!((c.area_um2 - 40.0).abs() < 1e-12);
+        assert!((c.energy_pj(3.0) - 12.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn adc_component_consistency() {
+        let comp = AdcComponent {
+            model: AdcModel::default(),
+            query: AdcQuery { enob: 7.0, total_throughput: 1e9, tech_nm: 32.0, n_adcs: 4 },
+        };
+        let e = comp.energy_pj_per_convert();
+        assert!((comp.energy_pj(100.0) - 100.0 * e).abs() < 1e-9);
+        assert!(comp.total_area_um2() > 0.0);
+    }
+}

@@ -1,0 +1,137 @@
+//! Configuration substrate: a small self-contained value model with JSON
+//! and TOML-subset parsers (no serde in the offline registry).
+//!
+//! [`json`] parses `artifacts/manifest.json` (the shape contract emitted
+//! by `python/compile/aot.py`). [`toml`] parses the architecture /
+//! workload spec files under `configs/`.
+
+pub mod json;
+pub mod toml;
+
+pub use json::parse_json;
+pub use toml::parse_toml;
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// A dynamically-typed configuration value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    /// null / absent.
+    Null,
+    /// Boolean.
+    Bool(bool),
+    /// All numbers are kept as f64 (adequate for config use).
+    Number(f64),
+    /// String.
+    String(String),
+    /// Ordered list.
+    Array(Vec<Value>),
+    /// Key-value table (sorted for deterministic output).
+    Table(BTreeMap<String, Value>),
+}
+
+impl Value {
+    /// Navigate a dotted path like `"adc_model.batch"`.
+    pub fn get(&self, path: &str) -> Option<&Value> {
+        let mut cur = self;
+        for key in path.split('.') {
+            match cur {
+                Value::Table(map) => cur = map.get(key)?,
+                _ => return None,
+            }
+        }
+        Some(cur)
+    }
+
+    /// The value as f64, if numeric.
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Number(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    /// The value as usize, if a non-negative integral number.
+    pub fn as_usize(&self) -> Option<usize> {
+        let n = self.as_f64()?;
+        if n >= 0.0 && n.fract() == 0.0 { Some(n as usize) } else { None }
+    }
+
+    /// The value as &str, if a string.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::String(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// The value as bool, if boolean.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// The value as a slice, if an array.
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// Required numeric field with a config-error message.
+    pub fn require_f64(&self, path: &str) -> Result<f64> {
+        self.get(path)
+            .and_then(Value::as_f64)
+            .ok_or_else(|| Error::Config(format!("missing/non-numeric field `{path}`")))
+    }
+
+    /// Required usize field.
+    pub fn require_usize(&self, path: &str) -> Result<usize> {
+        self.get(path)
+            .and_then(Value::as_usize)
+            .ok_or_else(|| Error::Config(format!("missing/non-integer field `{path}`")))
+    }
+
+    /// Required string field.
+    pub fn require_str(&self, path: &str) -> Result<&str> {
+        self.get(path)
+            .and_then(Value::as_str)
+            .ok_or_else(|| Error::Config(format!("missing/non-string field `{path}`")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table(pairs: &[(&str, Value)]) -> Value {
+        Value::Table(pairs.iter().map(|(k, v)| (k.to_string(), v.clone())).collect())
+    }
+
+    #[test]
+    fn dotted_path_navigation() {
+        let v = table(&[("a", table(&[("b", Value::Number(3.0))]))]);
+        assert_eq!(v.get("a.b").unwrap().as_f64(), Some(3.0));
+        assert!(v.get("a.c").is_none());
+        assert!(v.get("x").is_none());
+    }
+
+    #[test]
+    fn as_usize_rejects_fraction_and_negative() {
+        assert_eq!(Value::Number(4.0).as_usize(), Some(4));
+        assert_eq!(Value::Number(4.5).as_usize(), None);
+        assert_eq!(Value::Number(-1.0).as_usize(), None);
+    }
+
+    #[test]
+    fn require_errors_mention_path() {
+        let v = table(&[]);
+        let err = v.require_f64("missing.key").unwrap_err().to_string();
+        assert!(err.contains("missing.key"), "{err}");
+    }
+}

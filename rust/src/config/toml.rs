@@ -1,0 +1,211 @@
+//! TOML-subset parser for architecture / workload spec files.
+//!
+//! Supported: `[section]` and `[section.sub]` headers, `key = value` with
+//! strings, numbers (including `1.3e9`), booleans, flat arrays, and `#`
+//! comments. This covers the `configs/*.toml` shipped with the crate;
+//! anything fancier (dates, inline tables, multi-line strings) is
+//! rejected with a line-numbered error.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+use super::Value;
+
+/// Parse a TOML-subset document into a [`Value::Table`].
+pub fn parse_toml(input: &str) -> Result<Value> {
+    let mut root: BTreeMap<String, Value> = BTreeMap::new();
+    let mut current_path: Vec<String> = Vec::new();
+
+    for (lineno, raw) in input.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(header) = line.strip_prefix('[') {
+            let header = header
+                .strip_suffix(']')
+                .ok_or_else(|| err(lineno, "unterminated section header"))?
+                .trim();
+            if header.is_empty() {
+                return Err(err(lineno, "empty section header"));
+            }
+            current_path = header.split('.').map(|s| s.trim().to_string()).collect();
+            // Materialize the section table.
+            table_at(&mut root, &current_path, lineno)?;
+            continue;
+        }
+        let (key, value_text) = line
+            .split_once('=')
+            .ok_or_else(|| err(lineno, "expected `key = value`"))?;
+        let key = key.trim();
+        if key.is_empty() {
+            return Err(err(lineno, "empty key"));
+        }
+        let value = parse_value(value_text.trim(), lineno)?;
+        let table = table_at(&mut root, &current_path, lineno)?;
+        if table.insert(key.to_string(), value).is_some() {
+            return Err(err(lineno, &format!("duplicate key `{key}`")));
+        }
+    }
+    Ok(Value::Table(root))
+}
+
+fn err(lineno: usize, msg: &str) -> Error {
+    Error::Config(format!("toml parse error on line {}: {msg}", lineno + 1))
+}
+
+/// Strip a `#` comment, respecting string literals.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+/// Get (creating as needed) the table at `path` under `root`.
+fn table_at<'a>(
+    root: &'a mut BTreeMap<String, Value>,
+    path: &[String],
+    lineno: usize,
+) -> Result<&'a mut BTreeMap<String, Value>> {
+    let mut cur = root;
+    for part in path {
+        let entry = cur
+            .entry(part.clone())
+            .or_insert_with(|| Value::Table(BTreeMap::new()));
+        match entry {
+            Value::Table(map) => cur = map,
+            _ => return Err(err(lineno, &format!("`{part}` is not a table"))),
+        }
+    }
+    Ok(cur)
+}
+
+fn parse_value(text: &str, lineno: usize) -> Result<Value> {
+    if text.is_empty() {
+        return Err(err(lineno, "empty value"));
+    }
+    if let Some(inner) = text.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| err(lineno, "unterminated array"))?;
+        let mut items = Vec::new();
+        for piece in split_array_items(inner) {
+            let piece = piece.trim();
+            if !piece.is_empty() {
+                items.push(parse_value(piece, lineno)?);
+            }
+        }
+        return Ok(Value::Array(items));
+    }
+    if let Some(inner) = text.strip_prefix('"') {
+        let inner = inner
+            .strip_suffix('"')
+            .ok_or_else(|| err(lineno, "unterminated string"))?;
+        return Ok(Value::String(inner.to_string()));
+    }
+    match text {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    // Numbers, including underscores (1_000) and scientific notation.
+    let cleaned: String = text.chars().filter(|&c| c != '_').collect();
+    cleaned
+        .parse::<f64>()
+        .map(Value::Number)
+        .map_err(|_| err(lineno, &format!("cannot parse value `{text}`")))
+}
+
+/// Split a flat array body on commas outside string literals.
+fn split_array_items(body: &str) -> Vec<&str> {
+    let mut items = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    for (i, c) in body.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                items.push(&body[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    items.push(&body[start..]);
+    items
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DOC: &str = r#"
+# RAELLA-like architecture
+name = "raella-m"   # inline comment
+tech_nm = 32
+sum_size = 512
+
+[adc]
+enob_bits = 7
+throughput = 1.3e9
+n_adcs = 2
+
+[array.dims]
+rows = 512
+cols = 512
+levels = [1, 2, 4]
+tags = ["a", "b,c"]
+enabled = true
+"#;
+
+    #[test]
+    fn parses_sections_and_values() {
+        let v = parse_toml(DOC).unwrap();
+        assert_eq!(v.get("name").unwrap().as_str(), Some("raella-m"));
+        assert_eq!(v.get("tech_nm").unwrap().as_f64(), Some(32.0));
+        assert_eq!(v.get("adc.enob_bits").unwrap().as_usize(), Some(7));
+        assert_eq!(v.get("adc.throughput").unwrap().as_f64(), Some(1.3e9));
+        assert_eq!(v.get("array.dims.rows").unwrap().as_usize(), Some(512));
+        assert_eq!(v.get("array.dims.enabled").unwrap().as_bool(), Some(true));
+    }
+
+    #[test]
+    fn arrays_and_quoted_commas() {
+        let v = parse_toml(DOC).unwrap();
+        let levels = v.get("array.dims.levels").unwrap().as_array().unwrap();
+        assert_eq!(levels.len(), 3);
+        let tags = v.get("array.dims.tags").unwrap().as_array().unwrap();
+        assert_eq!(tags[1].as_str(), Some("b,c"));
+    }
+
+    #[test]
+    fn underscored_numbers() {
+        let v = parse_toml("x = 1_000_000").unwrap();
+        assert_eq!(v.get("x").unwrap().as_f64(), Some(1e6));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = parse_toml("a = 1\nb = ").unwrap_err().to_string();
+        assert!(e.contains("line 2"), "{e}");
+        let e = parse_toml("[sec\nx = 1").unwrap_err().to_string();
+        assert!(e.contains("line 1"), "{e}");
+    }
+
+    #[test]
+    fn duplicate_key_rejected() {
+        assert!(parse_toml("a = 1\na = 2").is_err());
+    }
+
+    #[test]
+    fn key_with_same_name_as_section_rejected() {
+        assert!(parse_toml("a = 1\n[a]\nb = 2").is_err());
+    }
+}

@@ -1,0 +1,228 @@
+//! Accelerator-level design-space exploration (§I claim 3: "explore CiM
+//! accelerator designs using different ADCs").
+//!
+//! Where [`super::sweep`] explores raw ADC design points, this module
+//! sweeps *architecture* knobs — analog sum size, ADC resolution, number
+//! of ADCs, total ADC throughput — and evaluates each candidate with the
+//! full mapper + component rollup on a workload, yielding
+//! energy/area/latency/EAP and the Pareto-optimal configurations.
+
+use crate::adc::AdcModel;
+use crate::arch::CimArch;
+use crate::arch::raella::{RaellaVariant, raella};
+use crate::energy::{AreaScope, accel_area, eap, layer_energy};
+use crate::error::Result;
+use crate::exec::parallel_map;
+use crate::mapper::map_layer;
+use crate::workload::Workload;
+
+use super::pareto::pareto_front;
+
+/// The architecture knob grid.
+#[derive(Clone, Debug)]
+pub struct AccelSweepSpec {
+    /// Analog sum sizes to try (values summed per convert).
+    pub sum_sizes: Vec<usize>,
+    /// ADC resolutions (ENOB) to try.
+    pub enobs: Vec<f64>,
+    /// Parallel ADC counts to try.
+    pub n_adcs: Vec<u32>,
+    /// Total ADC throughputs (converts/s) to try.
+    pub total_throughputs: Vec<f64>,
+    /// Fidelity coupling: a candidate is kept only if its ADC reads the
+    /// analog sum with at most this many clipped bits
+    /// (`lossless_enob(sum) - enob <= max_clipped_bits`). RAELLA-style
+    /// speculation tolerates ~5.6 clipped bits (its XL point); without
+    /// this constraint the lowest ENOB trivially dominates every sum size.
+    pub max_clipped_bits: f64,
+}
+
+impl Default for AccelSweepSpec {
+    /// A RAELLA-neighborhood grid: the paper's S/M/L/XL sum/ENOB points
+    /// plus intermediate resolutions, Fig. 5's ADC counts, and a
+    /// low/high throughput pair.
+    fn default() -> Self {
+        AccelSweepSpec {
+            sum_sizes: vec![128, 256, 512, 1024, 2048, 4096, 8192],
+            enobs: vec![5.0, 6.0, 7.0, 8.0, 9.0, 10.0],
+            n_adcs: vec![1, 2, 4, 8, 16],
+            total_throughputs: vec![1.3e9, 1.3e10],
+            max_clipped_bits: 5.6,
+        }
+    }
+}
+
+impl AccelSweepSpec {
+    /// Upper bound on candidate count (before the fidelity filter).
+    pub fn len(&self) -> usize {
+        self.sum_sizes.len() * self.enobs.len() * self.n_adcs.len()
+            * self.total_throughputs.len()
+    }
+
+    /// Whether the grid is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Materialize candidate architectures (RAELLA-M chassis, knobs
+    /// swept, fidelity-infeasible combinations dropped).
+    pub fn candidates(&self) -> Vec<CimArch> {
+        let base = raella(RaellaVariant::Medium);
+        let mut out = Vec::with_capacity(self.len());
+        for &sum_size in &self.sum_sizes {
+            for &enob in &self.enobs {
+                for &n in &self.n_adcs {
+                    for &tp in &self.total_throughputs {
+                        let mut arch = base.clone();
+                        arch.name = format!("sum{sum_size}-e{enob}-n{n}-t{tp:.1e}");
+                        arch.sum_size = sum_size;
+                        arch.adc.enob = enob;
+                        arch.adc.n_adcs = n;
+                        arch.adc.total_throughput = tp;
+                        if arch.lossless_enob() - enob <= self.max_clipped_bits {
+                            out.push(arch);
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// One evaluated candidate architecture.
+#[derive(Clone, Debug)]
+pub struct AccelPoint {
+    /// The candidate.
+    pub arch: CimArch,
+    /// Workload energy (pJ).
+    pub energy_pj: f64,
+    /// Tile area (µm²).
+    pub area_um2: f64,
+    /// ADC share of energy.
+    pub adc_energy_fraction: f64,
+    /// Workload ADC-bound latency (s).
+    pub latency_s: f64,
+    /// Energy-area product.
+    pub eap: f64,
+}
+
+/// Evaluate every candidate on the workload (threaded).
+pub fn run_accel_sweep(
+    spec: &AccelSweepSpec,
+    model: &AdcModel,
+    workload: &Workload,
+    workers: usize,
+) -> Result<Vec<AccelPoint>> {
+    let candidates = spec.candidates();
+    let evaluated = parallel_map(&candidates, workers, |arch| -> Result<AccelPoint> {
+        let mut energy = crate::energy::EnergyBreakdown::default();
+        let mut latency_s = 0.0;
+        let mut max_arrays = 0usize;
+        for layer in &workload.layers {
+            let m = map_layer(arch, layer)?;
+            energy = energy.add(&layer_energy(arch, model, layer)?);
+            latency_s += m.latency_s;
+            max_arrays = max_arrays.max(m.arrays_used);
+        }
+        // Tile sized for the largest layer (weights are reloaded per layer
+        // in this tile-level exploration).
+        let area = accel_area(arch, model, AreaScope::Tile { n_arrays: max_arrays });
+        Ok(AccelPoint {
+            arch: arch.clone(),
+            energy_pj: energy.total_pj(),
+            area_um2: area.total_um2(),
+            adc_energy_fraction: energy.adc_fraction(),
+            latency_s,
+            eap: eap(&energy, &area),
+        })
+    });
+    evaluated.into_iter().collect()
+}
+
+/// Indices of the energy/area Pareto-optimal candidates.
+pub fn accel_pareto(points: &[AccelPoint]) -> Vec<usize> {
+    pareto_front(
+        &points
+            .iter()
+            .map(|p| (p.energy_pj, p.area_um2))
+            .collect::<Vec<_>>(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::lenet;
+
+    fn small_spec() -> AccelSweepSpec {
+        AccelSweepSpec {
+            sum_sizes: vec![128, 512, 2048],
+            enobs: vec![6.0, 8.0],
+            n_adcs: vec![2, 8],
+            total_throughputs: vec![1.3e9],
+            max_clipped_bits: 5.6,
+        }
+    }
+
+    #[test]
+    fn sweep_evaluates_all_candidates() {
+        let spec = small_spec();
+        let pts = run_accel_sweep(&spec, &AdcModel::default(), &lenet(), 2).unwrap();
+        assert_eq!(pts.len(), spec.candidates().len());
+        assert!(pts.len() < spec.len(), "fidelity filter should drop some");
+        for p in &pts {
+            assert!(p.energy_pj > 0.0 && p.energy_pj.is_finite());
+            assert!(p.area_um2 > 0.0);
+            assert!(p.latency_s > 0.0);
+            assert!((0.0..1.0).contains(&p.adc_energy_fraction));
+            assert!((p.eap - p.energy_pj * p.area_um2).abs() / p.eap < 1e-12);
+        }
+    }
+
+    #[test]
+    fn pareto_front_nonempty_and_valid() {
+        let pts = run_accel_sweep(&small_spec(), &AdcModel::default(), &lenet(), 1).unwrap();
+        let front = accel_pareto(&pts);
+        assert!(!front.is_empty());
+        // The global-min-energy and global-min-area candidates are on it.
+        let min_e = pts
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.energy_pj.total_cmp(&b.1.energy_pj))
+            .unwrap()
+            .0;
+        assert!(front.contains(&min_e));
+    }
+
+    #[test]
+    fn lenet_best_covers_reduction_at_lowest_enob() {
+        // With ENOB and sum size as *independent* knobs (fidelity is
+        // studied separately in the functional sim), the best-energy
+        // candidate uses the smallest sum that still covers the largest
+        // reduction (lenet max C·R·S = 400 -> 512) at the lowest ENOB:
+        // fewer converts, cheapest converts.
+        let pts = run_accel_sweep(&small_spec(), &AdcModel::default(), &lenet(), 1).unwrap();
+        let best = pts
+            .iter()
+            .min_by(|a, b| a.energy_pj.total_cmp(&b.energy_pj))
+            .unwrap();
+        assert_eq!(best.arch.sum_size, 512, "best was {}", best.arch.name);
+        assert_eq!(best.arch.adc.enob, 6.0);
+        // The fidelity coupling removed sum-2048 @ 6b (it would clip
+        // ~6.6 bits > 5.6 allowed), so oversizing cannot win for free.
+        assert!(!pts.iter().any(|p| p.arch.sum_size == 2048 && p.arch.adc.enob == 6.0));
+    }
+
+    #[test]
+    fn serial_and_parallel_agree() {
+        let spec = small_spec();
+        let model = AdcModel::default();
+        let a = run_accel_sweep(&spec, &model, &lenet(), 1).unwrap();
+        let b = run_accel_sweep(&spec, &model, &lenet(), 4).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.arch.name, y.arch.name);
+            assert_eq!(x.energy_pj, y.energy_pj);
+        }
+    }
+}

@@ -1,0 +1,430 @@
+//! Regeneration of every figure in the paper's evaluation (DESIGN.md §4).
+//!
+//! Each `figN_*` function produces the figure's underlying data through
+//! the public APIs (survey → fit → model → mapper → rollup), and a
+//! `render_figN` helper turns it into tables/plots. The figure benches
+//! and the `cimdse figures` CLI subcommand both call these, so the paper
+//! reproduction is a single code path asserted by integration tests.
+
+use crate::adc::{AdcModel, AdcQuery};
+use crate::arch::raella::{RaellaVariant, raella};
+use crate::energy::{AreaScope, accel_area, eap, layer_energy};
+use crate::error::Result;
+use crate::mapper::map_layer;
+use crate::report::{AsciiPlot, Table, sig};
+use crate::survey::{SurveyDataset, pareto_near_filter, scale_to_tech};
+use crate::survey::filters::nearest_enob_bin;
+use crate::util::logspace::logspace;
+use crate::workload::resnet18::{large_tensor_layer, resnet18, small_tensor_layer};
+use crate::workload::{Layer, Workload};
+
+/// The ENOB lines the paper draws in Figs. 2–3.
+pub const FIG23_ENOBS: [f64; 3] = [4.0, 8.0, 12.0];
+
+/// One model line of Fig. 2/3: (ENOB, points of (throughput, value)).
+pub type Line = (f64, Vec<(f64, f64)>);
+
+/// Data behind Fig. 2 (energy) or Fig. 3 (area).
+#[derive(Clone, Debug)]
+pub struct Fig23Data {
+    /// Survey dots after 32 nm scaling + near-Pareto filtering:
+    /// (throughput, value, nearest ENOB bin).
+    pub dots: Vec<(f64, f64, f64)>,
+    /// Model lines per ENOB bin.
+    pub lines: Vec<Line>,
+}
+
+/// Fig. 2: published-ADC throughput vs energy with model bound lines.
+pub fn fig2(survey: &SurveyDataset, model: &AdcModel, line_points: usize) -> Fig23Data {
+    let scaled: Vec<_> = survey
+        .records
+        .iter()
+        .map(|r| scale_to_tech(r, 32.0, &model.coefs))
+        .collect();
+    let near = pareto_near_filter(&scaled, 1.0, |r| r.energy_pj);
+    let dots = near
+        .iter()
+        .map(|r| (r.throughput, r.energy_pj, nearest_enob_bin(r.enob, &FIG23_ENOBS)))
+        .collect();
+    let lines = FIG23_ENOBS
+        .iter()
+        .map(|&enob| {
+            let pts = logspace(1e4, 2e10, line_points)
+                .into_iter()
+                .map(|f| {
+                    let q = AdcQuery {
+                        enob,
+                        total_throughput: f,
+                        tech_nm: 32.0,
+                        n_adcs: 1,
+                    };
+                    (f, model.energy_pj_per_convert(&q))
+                })
+                .collect();
+            (enob, pts)
+        })
+        .collect();
+    Fig23Data { dots, lines }
+}
+
+/// Fig. 3: published-ADC throughput vs area with model lines.
+pub fn fig3(survey: &SurveyDataset, model: &AdcModel, line_points: usize) -> Fig23Data {
+    let scaled: Vec<_> = survey
+        .records
+        .iter()
+        .map(|r| scale_to_tech(r, 32.0, &model.coefs))
+        .collect();
+    let near = pareto_near_filter(&scaled, 1.0, |r| r.area_um2);
+    let dots = near
+        .iter()
+        .map(|r| (r.throughput, r.area_um2, nearest_enob_bin(r.enob, &FIG23_ENOBS)))
+        .collect();
+    let lines = FIG23_ENOBS
+        .iter()
+        .map(|&enob| {
+            let pts = logspace(1e4, 2e10, line_points)
+                .into_iter()
+                .map(|f| {
+                    let q = AdcQuery {
+                        enob,
+                        total_throughput: f,
+                        tech_nm: 32.0,
+                        n_adcs: 1,
+                    };
+                    (f, model.area_um2_per_adc(&q))
+                })
+                .collect();
+            (enob, pts)
+        })
+        .collect();
+    Fig23Data { dots, lines }
+}
+
+/// Render a Fig. 2/3 dataset as an ASCII log-log plot.
+pub fn render_fig23(data: &Fig23Data, title: &str, y_label: &str) -> String {
+    let mut plot = AsciiPlot::new(title, "throughput (converts/s)", y_label);
+    let glyphs = ['·', 'o', '*'];
+    for (i, &enob) in FIG23_ENOBS.iter().enumerate() {
+        let pts: Vec<(f64, f64)> = data
+            .dots
+            .iter()
+            .filter(|d| d.2 == enob)
+            .map(|d| (d.0, d.1))
+            .collect();
+        plot = plot.series(&format!("{enob:.0}b survey"), glyphs[i], pts);
+    }
+    let line_glyphs = ['4', '8', 'C'];
+    for (i, (enob, pts)) in data.lines.iter().enumerate() {
+        plot = plot.series(&format!("{enob:.0}b model"), line_glyphs[i], pts.clone());
+    }
+    plot.render()
+}
+
+/// One Fig. 4 cell: a RAELLA variant on a layer group.
+#[derive(Clone, Debug)]
+pub struct Fig4Row {
+    /// Layer group name ("large-tensor", "small-tensor", "all-layers").
+    pub group: &'static str,
+    /// Variant name (S/M/L/XL).
+    pub variant: &'static str,
+    /// Analog sum utilization (averaged over layers, weighted by MACs).
+    pub utilization: f64,
+    /// ADC energy (pJ).
+    pub adc_pj: f64,
+    /// Non-ADC energy (pJ).
+    pub other_pj: f64,
+    /// Total (pJ).
+    pub total_pj: f64,
+}
+
+/// Fig. 4: full-accelerator energy for S/M/L/XL over the three layer groups.
+pub fn fig4(model: &AdcModel) -> Result<Vec<Fig4Row>> {
+    let net = resnet18();
+    let groups: [(&'static str, Vec<Layer>); 3] = [
+        ("large-tensor", vec![large_tensor_layer()]),
+        ("small-tensor", vec![small_tensor_layer()]),
+        ("all-layers", net.layers.clone()),
+    ];
+    let mut rows = Vec::new();
+    for (group, layers) in &groups {
+        for variant in RaellaVariant::ALL {
+            let arch = raella(variant);
+            let mut adc_pj = 0.0;
+            let mut total_pj = 0.0;
+            let mut util_weighted = 0.0;
+            let mut macs = 0.0;
+            for layer in layers {
+                let e = layer_energy(&arch, model, layer)?;
+                adc_pj += e.adc_pj;
+                total_pj += e.total_pj();
+                let m = map_layer(&arch, layer)?;
+                util_weighted += m.utilization * layer.macs() as f64;
+                macs += layer.macs() as f64;
+            }
+            rows.push(Fig4Row {
+                group,
+                variant: variant.name(),
+                utilization: util_weighted / macs,
+                adc_pj,
+                other_pj: total_pj - adc_pj,
+                total_pj,
+            });
+        }
+    }
+    Ok(rows)
+}
+
+/// Render Fig. 4 rows as a table.
+pub fn render_fig4(rows: &[Fig4Row]) -> Table {
+    let mut t = Table::new(vec![
+        "layer-group",
+        "variant",
+        "utilization",
+        "ADC (µJ)",
+        "other (µJ)",
+        "total (µJ)",
+    ]);
+    for r in rows {
+        t.row(vec![
+            r.group.to_string(),
+            r.variant.to_string(),
+            format!("{:.3}", r.utilization),
+            sig(r.adc_pj / 1e6, 3),
+            sig(r.other_pj / 1e6, 3),
+            sig(r.total_pj / 1e6, 3),
+        ]);
+    }
+    t
+}
+
+/// One Fig. 5 cell: EAP at (total throughput, n_adcs).
+#[derive(Clone, Copy, Debug)]
+pub struct Fig5Cell {
+    /// Aggregate ADC throughput (converts/s).
+    pub total_throughput: f64,
+    /// Number of parallel ADCs.
+    pub n_adcs: u32,
+    /// Layer energy (pJ).
+    pub energy_pj: f64,
+    /// Array-group area (µm²).
+    pub area_um2: f64,
+    /// Energy-area product (pJ·µm²).
+    pub eap: f64,
+}
+
+/// Fig. 5: accelerator EAP vs number of ADCs for varying throughputs, on
+/// the paper's chosen ResNet18 layer (we use the large-tensor conv; the
+/// Medium variant is the base architecture).
+pub fn fig5(model: &AdcModel, throughput_steps: usize) -> Result<Vec<Fig5Cell>> {
+    let layer = large_tensor_layer();
+    let base = raella(RaellaVariant::Medium);
+    let mut cells = Vec::new();
+    for &total in &logspace(1.3e9, 40e9, throughput_steps) {
+        for &n in &[1u32, 2, 4, 8, 16] {
+            let mut arch = base.clone();
+            arch.adc.n_adcs = n;
+            arch.adc.total_throughput = total;
+            let e = layer_energy(&arch, model, &layer)?;
+            let m = map_layer(&arch, &layer)?;
+            let a = accel_area(&arch, model, AreaScope::ArrayGroup { n_arrays: m.arrays_used });
+            cells.push(Fig5Cell {
+                total_throughput: total,
+                n_adcs: n,
+                energy_pj: e.total_pj(),
+                area_um2: a.total_um2(),
+                eap: eap(&e, &a),
+            });
+        }
+    }
+    Ok(cells)
+}
+
+/// Render Fig. 5 cells as a table with per-throughput optima marked.
+pub fn render_fig5(cells: &[Fig5Cell]) -> Table {
+    let mut t = Table::new(vec![
+        "total throughput",
+        "n_adcs",
+        "energy (µJ)",
+        "area (mm²)",
+        "EAP (norm)",
+        "optimal",
+    ]);
+    // Normalize EAP within each throughput row-group; mark the optimum.
+    let mut throughputs: Vec<f64> = cells.iter().map(|c| c.total_throughput).collect();
+    throughputs.dedup();
+    for &tp in &throughputs {
+        let group: Vec<&Fig5Cell> =
+            cells.iter().filter(|c| c.total_throughput == tp).collect();
+        let best = group
+            .iter()
+            .min_by(|a, b| a.eap.total_cmp(&b.eap))
+            .map(|c| c.n_adcs)
+            .unwrap();
+        let min_eap = group.iter().map(|c| c.eap).fold(f64::MAX, f64::min);
+        for c in &group {
+            t.row(vec![
+                format!("{:.2e}", c.total_throughput),
+                c.n_adcs.to_string(),
+                sig(c.energy_pj / 1e6, 3),
+                format!("{:.4}", c.area_um2 / 1e6),
+                format!("{:.2}", c.eap / min_eap),
+                if c.n_adcs == best { "  <-- min EAP".into() } else { String::new() },
+            ]);
+        }
+    }
+    t
+}
+
+/// Whole-workload summary used by the end-to-end example: per-layer
+/// energy/utilization rows for one architecture.
+pub fn per_layer_table(
+    model: &AdcModel,
+    arch: &crate::arch::CimArch,
+    net: &Workload,
+) -> Result<Table> {
+    let mut t = Table::new(vec![
+        "layer",
+        "rows(CRS)",
+        "chunks",
+        "util",
+        "ADC (µJ)",
+        "total (µJ)",
+        "ADC frac",
+    ]);
+    for layer in &net.layers {
+        let m = map_layer(&arch, layer)?;
+        let e = layer_energy(&arch, model, layer)?;
+        t.row(vec![
+            layer.name.clone(),
+            layer.weight_rows().to_string(),
+            m.row_chunks.to_string(),
+            format!("{:.3}", m.utilization),
+            sig(e.adc_pj / 1e6, 3),
+            sig(e.total_pj() / 1e6, 3),
+            format!("{:.2}", e.adc_fraction()),
+        ]);
+    }
+    Ok(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::survey::generator::{SurveyConfig, generate_survey};
+
+    fn survey() -> SurveyDataset {
+        generate_survey(&SurveyConfig::default())
+    }
+
+    #[test]
+    fn fig2_has_dots_and_three_lines() {
+        let d = fig2(&survey(), &AdcModel::default(), 25);
+        assert_eq!(d.lines.len(), 3);
+        assert!(d.dots.len() > 30, "only {} near-Pareto dots", d.dots.len());
+        // Lines are monotone non-decreasing in throughput (flat then rising).
+        for (_, pts) in &d.lines {
+            assert!(pts.windows(2).all(|w| w[1].1 >= w[0].1 - 1e-9));
+        }
+    }
+
+    #[test]
+    fn fig2_lines_order_by_enob() {
+        let d = fig2(&survey(), &AdcModel::default(), 10);
+        for i in 0..d.lines[0].1.len() {
+            assert!(d.lines[0].1[i].1 < d.lines[1].1[i].1);
+            assert!(d.lines[1].1[i].1 < d.lines[2].1[i].1);
+        }
+    }
+
+    #[test]
+    fn fig3_area_increases_with_throughput_and_enob() {
+        let d = fig3(&survey(), &AdcModel::default(), 10);
+        for (_, pts) in &d.lines {
+            assert!(pts.windows(2).all(|w| w[1].1 >= w[0].1 - 1e-9));
+        }
+        for i in 0..d.lines[0].1.len() {
+            assert!(d.lines[0].1[i].1 < d.lines[2].1[i].1);
+        }
+    }
+
+    #[test]
+    fn fig4_shapes_match_paper_claims() {
+        let rows = fig4(&AdcModel::default()).unwrap();
+        assert_eq!(rows.len(), 12);
+        let get = |g: &str, v: &str| {
+            rows.iter().find(|r| r.group == g && r.variant == v).unwrap().clone()
+        };
+        // Large-tensor: summing more values reduces ADC energy (XL < S).
+        assert!(get("large-tensor", "XL").adc_pj < get("large-tensor", "S").adc_pj);
+        // Small-tensor: higher-ENOB ADCs cost more (XL > S).
+        assert!(get("small-tensor", "XL").total_pj > get("small-tensor", "S").total_pj);
+        // Overall: M or L is the best total.
+        let all: Vec<Fig4Row> =
+            rows.iter().filter(|r| r.group == "all-layers").cloned().collect();
+        let best = all
+            .iter()
+            .min_by(|a, b| a.total_pj.total_cmp(&b.total_pj))
+            .unwrap();
+        assert!(
+            best.variant == "M" || best.variant == "L",
+            "best overall variant was {}",
+            best.variant
+        );
+    }
+
+    #[test]
+    fn fig5_shapes_match_paper_claims() {
+        let cells = fig5(&AdcModel::default(), 4).unwrap();
+        // (1) Higher total throughput -> higher minimum EAP.
+        let min_eap_at = |tp: f64| {
+            cells
+                .iter()
+                .filter(|c| c.total_throughput == tp)
+                .map(|c| c.eap)
+                .fold(f64::MAX, f64::min)
+        };
+        let mut tps: Vec<f64> = cells.iter().map(|c| c.total_throughput).collect();
+        tps.dedup();
+        for w in tps.windows(2) {
+            assert!(min_eap_at(w[1]) > min_eap_at(w[0]));
+        }
+        // (2) The number of ADCs can swing EAP by ~3x at some throughput.
+        let max_swing = tps
+            .iter()
+            .map(|&tp| {
+                let group: Vec<f64> = cells
+                    .iter()
+                    .filter(|c| c.total_throughput == tp)
+                    .map(|c| c.eap)
+                    .collect();
+                group.iter().fold(f64::MIN, |a, &b| a.max(b))
+                    / group.iter().fold(f64::MAX, |a, &b| a.min(b))
+            })
+            .fold(f64::MIN, f64::max);
+        assert!(max_swing > 2.0, "EAP swing only {max_swing:.2}x");
+        // (3) Optimal n_adcs grows with throughput demand.
+        let opt = |tp: f64| {
+            cells
+                .iter()
+                .filter(|c| c.total_throughput == tp)
+                .min_by(|a, b| a.eap.total_cmp(&b.eap))
+                .unwrap()
+                .n_adcs
+        };
+        assert!(opt(*tps.last().unwrap()) > opt(tps[0]),
+            "optimum did not grow: {} -> {}", opt(tps[0]), opt(*tps.last().unwrap()));
+    }
+
+    #[test]
+    fn renders_do_not_panic_and_contain_content() {
+        let model = AdcModel::default();
+        let d2 = fig2(&survey(), &model, 10);
+        assert!(render_fig23(&d2, "fig2", "pJ/convert").contains("model"));
+        let t4 = render_fig4(&fig4(&model).unwrap());
+        assert!(t4.render().contains("large-tensor"));
+        let t5 = render_fig5(&fig5(&model, 3).unwrap());
+        assert!(t5.render().contains("min EAP"));
+        let tl = per_layer_table(&model, &raella(RaellaVariant::Medium), &resnet18()).unwrap();
+        assert_eq!(tl.len(), 21);
+    }
+}

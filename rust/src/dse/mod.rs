@@ -1,0 +1,146 @@
+//! Design-space exploration engine.
+//!
+//! Generates design-point grids ([`sweep`]), evaluates them through either
+//! the native Rust model (threaded) or the AOT-compiled PJRT artifact
+//! ([`Evaluator`]), extracts Pareto fronts ([`pareto`]), and regenerates
+//! the paper's figures ([`figures`]).
+
+pub mod accel;
+pub mod figures;
+pub mod pareto;
+pub mod sweep;
+
+pub use accel::{AccelPoint, AccelSweepSpec, run_accel_sweep};
+pub use pareto::pareto_front;
+pub use sweep::SweepSpec;
+
+use crate::adc::{AdcMetrics, AdcModel, AdcQuery};
+use crate::error::Result;
+use crate::exec::parallel_chunks;
+use crate::runtime::AdcModelEngine;
+
+/// A design-point evaluator: queries in, ADC metrics out.
+pub trait Evaluator {
+    /// Evaluate a batch of queries.
+    fn eval(&self, queries: &[AdcQuery]) -> Result<Vec<AdcMetrics>>;
+
+    /// Human-readable backend name.
+    fn backend_name(&self) -> &'static str;
+}
+
+/// Native Rust evaluation, threaded across `workers`.
+pub struct NativeEvaluator {
+    /// The model to evaluate.
+    pub model: AdcModel,
+    /// Worker thread count (1 = serial).
+    pub workers: usize,
+    /// Chunk size per dispatch (amortizes thread hand-off).
+    pub chunk: usize,
+}
+
+impl NativeEvaluator {
+    /// Evaluator with sensible defaults.
+    pub fn new(model: AdcModel) -> Self {
+        NativeEvaluator { model, workers: crate::exec::default_workers(), chunk: 4096 }
+    }
+
+    /// Serial evaluator (useful for micro-benchmarks).
+    pub fn serial(model: AdcModel) -> Self {
+        NativeEvaluator { model, workers: 1, chunk: usize::MAX }
+    }
+}
+
+impl Evaluator for NativeEvaluator {
+    fn eval(&self, queries: &[AdcQuery]) -> Result<Vec<AdcMetrics>> {
+        let chunk = self.chunk.min(queries.len().max(1));
+        Ok(parallel_chunks(queries, chunk, self.workers, |qs| {
+            qs.iter().map(|q| self.model.eval(q)).collect()
+        }))
+    }
+
+    fn backend_name(&self) -> &'static str {
+        "native"
+    }
+}
+
+/// PJRT evaluation through the compiled `adc_model.hlo.txt` artifact.
+///
+/// Tuned models ride through via [`AdcModel::folded_coefficients`]. The
+/// PJRT client is single-threaded here; batching (the artifact's 4096
+/// design points per execute) is what amortizes dispatch.
+pub struct PjrtEvaluator {
+    engine: AdcModelEngine,
+    model: AdcModel,
+}
+
+impl PjrtEvaluator {
+    /// Wrap a compiled engine and the model whose coefficients to use.
+    pub fn new(engine: AdcModelEngine, model: AdcModel) -> Self {
+        PjrtEvaluator { engine, model }
+    }
+}
+
+impl Evaluator for PjrtEvaluator {
+    fn eval(&self, queries: &[AdcQuery]) -> Result<Vec<AdcMetrics>> {
+        self.engine.eval(queries, &self.model.folded_coefficients())
+    }
+
+    fn backend_name(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+/// One evaluated design point.
+#[derive(Clone, Copy, Debug)]
+pub struct EvaluatedPoint {
+    /// The query.
+    pub query: AdcQuery,
+    /// The model's outputs.
+    pub metrics: AdcMetrics,
+}
+
+/// Evaluate a whole sweep.
+pub fn run_sweep(spec: &SweepSpec, evaluator: &dyn Evaluator) -> Result<Vec<EvaluatedPoint>> {
+    let queries = spec.points();
+    let metrics = evaluator.eval(&queries)?;
+    Ok(queries
+        .into_iter()
+        .zip(metrics)
+        .map(|(query, metrics)| EvaluatedPoint { query, metrics })
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_parallel_matches_serial() {
+        let model = AdcModel::default();
+        let spec = SweepSpec {
+            enobs: vec![4.0, 8.0, 12.0],
+            total_throughputs: vec![1e6, 1e8, 1e10],
+            tech_nms: vec![16.0, 32.0],
+            n_adcs: vec![1, 4],
+        };
+        let serial = run_sweep(&spec, &NativeEvaluator::serial(model)).unwrap();
+        let par = run_sweep(&spec, &NativeEvaluator::new(model)).unwrap();
+        assert_eq!(serial.len(), 3 * 3 * 2 * 2);
+        for (a, b) in serial.iter().zip(&par) {
+            assert_eq!(a.metrics, b.metrics);
+        }
+    }
+
+    #[test]
+    fn evaluated_points_preserve_query_order() {
+        let spec = SweepSpec {
+            enobs: vec![4.0, 8.0],
+            total_throughputs: vec![1e8],
+            tech_nms: vec![32.0],
+            n_adcs: vec![1],
+        };
+        let out = run_sweep(&spec, &NativeEvaluator::serial(AdcModel::default())).unwrap();
+        assert_eq!(out[0].query.enob, 4.0);
+        assert_eq!(out[1].query.enob, 8.0);
+    }
+}

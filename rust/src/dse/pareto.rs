@@ -1,0 +1,122 @@
+//! Pareto-front extraction for (minimize, minimize) objectives.
+
+/// Indices of the Pareto-optimal points among `(a, b)` pairs where both
+/// objectives are minimized. A point is kept iff no other point is <= in
+/// both objectives and < in at least one. Returned indices are sorted by
+/// the first objective ascending.
+pub fn pareto_front(points: &[(f64, f64)]) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..points.len()).collect();
+    // Sort by a ascending, then b ascending.
+    order.sort_by(|&i, &j| {
+        points[i]
+            .0
+            .total_cmp(&points[j].0)
+            .then(points[i].1.total_cmp(&points[j].1))
+    });
+    let mut front = Vec::new();
+    let mut best_b = f64::INFINITY;
+    for &i in &order {
+        // Sorted by a ascending with b as tiebreak, a point is on the front
+        // iff its b strictly improves on everything seen so far (anything
+        // earlier has a <= ours, so equal-or-worse b means dominated/dup).
+        if points[i].1 < best_b {
+            front.push(i);
+            best_b = points[i].1;
+        }
+    }
+    front
+}
+
+/// Hypervolume-style scalar summary: the best (minimum) product a·b on the
+/// front — a quick "knee" indicator used in sweep reports.
+pub fn best_product(points: &[(f64, f64)]) -> Option<(usize, f64)> {
+    points
+        .iter()
+        .enumerate()
+        .map(|(i, &(a, b))| (i, a * b))
+        .min_by(|x, y| x.1.total_cmp(&y.1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{Config, check};
+    use crate::util::Rng;
+
+    #[test]
+    fn simple_front() {
+        let pts = vec![
+            (1.0, 10.0), // front
+            (2.0, 5.0),  // front
+            (3.0, 6.0),  // dominated by (2,5)
+            (4.0, 1.0),  // front
+            (4.0, 2.0),  // dominated
+        ];
+        let f = pareto_front(&pts);
+        assert_eq!(f, vec![0, 1, 3]);
+    }
+
+    #[test]
+    fn single_point_is_front() {
+        assert_eq!(pareto_front(&[(1.0, 1.0)]), vec![0]);
+        assert!(pareto_front(&[]).is_empty());
+    }
+
+    #[test]
+    fn duplicate_points_keep_one() {
+        let pts = vec![(1.0, 1.0), (1.0, 1.0)];
+        let f = pareto_front(&pts);
+        assert_eq!(f.len(), 1);
+    }
+
+    #[test]
+    fn property_no_front_point_is_dominated() {
+        check(Config::default().cases(50), |rng: &mut Rng| {
+            let n = 3 + rng.index(60);
+            let pts: Vec<(f64, f64)> = (0..n)
+                .map(|_| (rng.uniform(0.0, 10.0), rng.uniform(0.0, 10.0)))
+                .collect();
+            let front = pareto_front(&pts);
+            assert!(!front.is_empty());
+            for &i in &front {
+                for (j, &(a, b)) in pts.iter().enumerate() {
+                    if i == j {
+                        continue;
+                    }
+                    let dominated = a <= pts[i].0
+                        && b <= pts[i].1
+                        && (a < pts[i].0 || b < pts[i].1);
+                    assert!(!dominated, "front point {i} dominated by {j}");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn property_every_non_front_point_is_dominated() {
+        check(Config::default().cases(50).seed(99), |rng: &mut Rng| {
+            let n = 3 + rng.index(40);
+            let pts: Vec<(f64, f64)> = (0..n)
+                .map(|_| (rng.uniform(0.0, 4.0).round(), rng.uniform(0.0, 4.0).round()))
+                .collect();
+            let front = pareto_front(&pts);
+            for (j, &(a, b)) in pts.iter().enumerate() {
+                if front.contains(&j) {
+                    continue;
+                }
+                let dominated_or_dup = pts.iter().enumerate().any(|(i, &(x, y))| {
+                    i != j && x <= a && y <= b
+                });
+                assert!(dominated_or_dup, "non-front point {j} not dominated");
+            }
+        });
+    }
+
+    #[test]
+    fn best_product_finds_knee() {
+        let pts = vec![(10.0, 1.0), (3.0, 3.0), (1.0, 10.0)];
+        let (i, p) = best_product(&pts).unwrap();
+        assert_eq!(i, 1);
+        assert!((p - 9.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,103 @@
+//! Sweep specification: cartesian grids over the model's four inputs.
+
+use crate::adc::AdcQuery;
+use crate::util::logspace::logspace;
+
+/// A cartesian sweep over (ENOB, total throughput, tech node, #ADCs).
+#[derive(Clone, Debug)]
+pub struct SweepSpec {
+    /// ENOB values.
+    pub enobs: Vec<f64>,
+    /// Aggregate throughputs (converts/s).
+    pub total_throughputs: Vec<f64>,
+    /// Technology nodes (nm).
+    pub tech_nms: Vec<f64>,
+    /// Parallel ADC counts.
+    pub n_adcs: Vec<u32>,
+}
+
+impl SweepSpec {
+    /// The paper's Fig. 5 exploration grid: 1..16 ADCs, total throughput
+    /// 1.3e9..40e9 converts/s, at 32 nm for the given ENOB.
+    pub fn fig5(enob: f64, throughput_steps: usize) -> SweepSpec {
+        SweepSpec {
+            enobs: vec![enob],
+            total_throughputs: logspace(1.3e9, 40e9, throughput_steps),
+            tech_nms: vec![32.0],
+            n_adcs: vec![1, 2, 4, 8, 16],
+        }
+    }
+
+    /// A dense interpolation grid (the capability prior work lacked):
+    /// ENOB 2..14, throughput 1e4..1e10, across common nodes.
+    pub fn dense(points_per_axis: usize) -> SweepSpec {
+        SweepSpec {
+            enobs: crate::util::logspace::linspace(2.0, 14.0, points_per_axis),
+            total_throughputs: logspace(1e4, 1e10, points_per_axis),
+            tech_nms: vec![16.0, 32.0, 65.0, 130.0],
+            n_adcs: vec![1, 2, 4, 8, 16, 32],
+        }
+    }
+
+    /// Number of design points in the grid.
+    pub fn len(&self) -> usize {
+        self.enobs.len() * self.total_throughputs.len() * self.tech_nms.len() * self.n_adcs.len()
+    }
+
+    /// Whether the grid is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Materialize the cartesian product (ENOB-major, n_adcs-minor order).
+    pub fn points(&self) -> Vec<AdcQuery> {
+        let mut out = Vec::with_capacity(self.len());
+        for &enob in &self.enobs {
+            for &total_throughput in &self.total_throughputs {
+                for &tech_nm in &self.tech_nms {
+                    for &n_adcs in &self.n_adcs {
+                        out.push(AdcQuery { enob, total_throughput, tech_nm, n_adcs });
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cartesian_count_and_order() {
+        let s = SweepSpec {
+            enobs: vec![4.0, 8.0],
+            total_throughputs: vec![1e8, 1e9],
+            tech_nms: vec![32.0],
+            n_adcs: vec![1, 2],
+        };
+        let pts = s.points();
+        assert_eq!(pts.len(), s.len());
+        assert_eq!(pts.len(), 8);
+        assert_eq!(pts[0].n_adcs, 1);
+        assert_eq!(pts[1].n_adcs, 2);
+        assert_eq!(pts[0].enob, 4.0);
+        assert_eq!(pts[7].enob, 8.0);
+    }
+
+    #[test]
+    fn fig5_grid_matches_paper_ranges() {
+        let s = SweepSpec::fig5(7.0, 5);
+        assert_eq!(s.n_adcs, vec![1, 2, 4, 8, 16]);
+        assert!((s.total_throughputs[0] - 1.3e9).abs() / 1.3e9 < 1e-9);
+        assert!((s.total_throughputs[4] - 40e9).abs() / 40e9 < 1e-9);
+        assert_eq!(s.len(), 25);
+    }
+
+    #[test]
+    fn dense_grid_is_dense() {
+        let s = SweepSpec::dense(10);
+        assert_eq!(s.len(), 10 * 10 * 4 * 6);
+    }
+}

@@ -1,0 +1,142 @@
+//! Latency / bottleneck model for a mapped layer.
+//!
+//! The mapper's base latency is ADC-bound (converts / total ADC
+//! throughput); this module adds the other pipeline stages so an
+//! exploration can see *which* resource limits a configuration — the
+//! "picking the number of ADCs" question (Fig. 5) is exactly about
+//! moving the ADC off the critical path at acceptable area cost.
+
+use crate::arch::CimArch;
+use crate::mapper::Mapping;
+
+/// Per-resource latency estimates (seconds) for one layer inference.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LatencyBreakdown {
+    /// ADC conversion time: converts / total ADC throughput.
+    pub adc_s: f64,
+    /// DAC / row-drive time: one bit-plane per row-cycle.
+    pub dac_s: f64,
+    /// Digital shift-add time.
+    pub shift_add_s: f64,
+    /// Local SRAM streaming time.
+    pub sram_s: f64,
+}
+
+/// Default digital clock for the non-ADC pipeline stages (cycles/s).
+/// ISAAC/RAELLA-class tiles clock around 1 GHz at 32 nm; scaled with
+/// node in [`latency_of_mapping`].
+pub const DIGITAL_CLOCK_32NM_HZ: f64 = 1.0e9;
+
+/// SRAM streaming bandwidth at 32 nm (bytes/s): a 32-byte port at clock.
+pub const SRAM_BYTES_PER_S_32NM: f64 = 32.0 * DIGITAL_CLOCK_32NM_HZ;
+
+impl LatencyBreakdown {
+    /// The critical-path latency (stages overlap; the slowest dominates).
+    pub fn critical_s(&self) -> f64 {
+        self.adc_s.max(self.dac_s).max(self.shift_add_s).max(self.sram_s)
+    }
+
+    /// Name of the bottleneck resource.
+    pub fn bottleneck(&self) -> &'static str {
+        let c = self.critical_s();
+        if c == self.adc_s {
+            "adc"
+        } else if c == self.dac_s {
+            "dac"
+        } else if c == self.shift_add_s {
+            "shift-add"
+        } else {
+            "sram"
+        }
+    }
+
+    /// Whether the ADC is on the critical path.
+    pub fn adc_bound(&self) -> bool {
+        self.bottleneck() == "adc"
+    }
+}
+
+/// Latency estimate for a mapped layer on an architecture.
+pub fn latency_of_mapping(arch: &CimArch, m: &Mapping) -> LatencyBreakdown {
+    // Digital stages slow down linearly with node size.
+    let clock = DIGITAL_CLOCK_32NM_HZ * 32.0 / arch.tech_nm;
+    let sram_bw = SRAM_BYTES_PER_S_32NM * 32.0 / arch.tech_nm;
+    let c = &m.counts;
+
+    // DACs drive all occupied rows of a chunk in parallel; the serial
+    // dimension is (positions x planes x chunks) row-cycles, which equals
+    // adc_converts / cols_used (every column sees every cycle).
+    let row_cycles = c.adc_converts / (m.cols_used as f64).max(1.0);
+    // One shift-add per convert, but n_adcs shift-adders run in parallel.
+    let shift_add_cycles = c.shift_add_ops / arch.adc.n_adcs as f64;
+
+    LatencyBreakdown {
+        adc_s: c.adc_converts / arch.adc.total_throughput,
+        dac_s: row_cycles / clock,
+        shift_add_s: shift_add_cycles / clock,
+        sram_s: c.sram_bytes / sram_bw,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::raella::{RaellaVariant, raella};
+    use crate::mapper::map_layer;
+    use crate::workload::resnet18::large_tensor_layer;
+
+    fn mapping(n_adcs: u32, total: f64) -> (CimArch, Mapping) {
+        let mut arch = raella(RaellaVariant::Medium);
+        arch.adc.n_adcs = n_adcs;
+        arch.adc.total_throughput = total;
+        let m = map_layer(&arch, &large_tensor_layer()).unwrap();
+        (arch, m)
+    }
+
+    #[test]
+    fn adc_bound_at_low_adc_throughput() {
+        let (arch, m) = mapping(1, 1e8);
+        let lat = latency_of_mapping(&arch, &m);
+        assert!(lat.adc_bound(), "{lat:?}");
+        assert_eq!(lat.critical_s(), lat.adc_s);
+    }
+
+    #[test]
+    fn adc_leaves_critical_path_at_high_throughput() {
+        let (arch, m) = mapping(16, 4e13);
+        let lat = latency_of_mapping(&arch, &m);
+        assert!(!lat.adc_bound(), "{lat:?}");
+    }
+
+    #[test]
+    fn more_adc_throughput_never_slows_down() {
+        let (arch_lo, m) = mapping(4, 1.3e9);
+        let (arch_hi, _) = mapping(4, 1.3e10);
+        let lo = latency_of_mapping(&arch_lo, &m);
+        let hi = latency_of_mapping(&arch_hi, &m);
+        assert!(hi.critical_s() <= lo.critical_s());
+        // Non-ADC stages are untouched by the ADC knob.
+        assert_eq!(lo.dac_s, hi.dac_s);
+        assert_eq!(lo.sram_s, hi.sram_s);
+    }
+
+    #[test]
+    fn bigger_node_is_slower_digitally() {
+        let (mut arch, m) = mapping(4, 1.3e9);
+        let lat32 = latency_of_mapping(&arch, &m);
+        arch.tech_nm = 65.0;
+        let lat65 = latency_of_mapping(&arch, &m);
+        assert!(lat65.dac_s > lat32.dac_s);
+        assert!(lat65.sram_s > lat32.sram_s);
+        assert_eq!(lat65.adc_s, lat32.adc_s); // ADC rate is an input, not derived
+    }
+
+    #[test]
+    fn parallel_shift_adders_help() {
+        let (a1, m) = mapping(1, 1.3e9);
+        let (a8, _) = mapping(8, 1.3e9);
+        let l1 = latency_of_mapping(&a1, &m);
+        let l8 = latency_of_mapping(&a8, &m);
+        assert!((l1.shift_add_s / l8.shift_add_s - 8.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,301 @@
+//! Full-accelerator energy / area / EAP rollup.
+//!
+//! Combines the ADC model (the paper's contribution) with the component
+//! library and the mapper's action counts into per-layer and per-network
+//! energy, architecture area, and the energy-area product that Fig. 5
+//! optimizes.
+
+pub mod latency;
+
+pub use latency::{LatencyBreakdown, latency_of_mapping};
+
+use crate::adc::{AdcModel, AdcQuery};
+use crate::arch::CimArch;
+use crate::components::{self, AdcComponent};
+use crate::error::Result;
+use crate::mapper::{Mapping, map_layer};
+use crate::workload::{Layer, Workload};
+
+/// Per-component energy breakdown for one layer inference (picojoules).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct EnergyBreakdown {
+    /// ADC conversion energy.
+    pub adc_pj: f64,
+    /// DAC / wordline drive energy.
+    pub dac_pj: f64,
+    /// Crossbar cell read energy.
+    pub crossbar_pj: f64,
+    /// Sample-and-hold energy.
+    pub sample_hold_pj: f64,
+    /// Shift-add energy.
+    pub shift_add_pj: f64,
+    /// Register traffic energy.
+    pub register_pj: f64,
+    /// Local SRAM energy.
+    pub sram_pj: f64,
+    /// Global eDRAM energy.
+    pub edram_pj: f64,
+    /// NoC energy.
+    pub router_pj: f64,
+}
+
+impl EnergyBreakdown {
+    /// Total energy in picojoules.
+    pub fn total_pj(&self) -> f64 {
+        self.adc_pj
+            + self.dac_pj
+            + self.crossbar_pj
+            + self.sample_hold_pj
+            + self.shift_add_pj
+            + self.register_pj
+            + self.sram_pj
+            + self.edram_pj
+            + self.router_pj
+    }
+
+    /// ADC share of total energy, in [0, 1].
+    pub fn adc_fraction(&self) -> f64 {
+        self.adc_pj / self.total_pj()
+    }
+
+    /// Element-wise sum.
+    pub fn add(&self, other: &EnergyBreakdown) -> EnergyBreakdown {
+        EnergyBreakdown {
+            adc_pj: self.adc_pj + other.adc_pj,
+            dac_pj: self.dac_pj + other.dac_pj,
+            crossbar_pj: self.crossbar_pj + other.crossbar_pj,
+            sample_hold_pj: self.sample_hold_pj + other.sample_hold_pj,
+            shift_add_pj: self.shift_add_pj + other.shift_add_pj,
+            register_pj: self.register_pj + other.register_pj,
+            sram_pj: self.sram_pj + other.sram_pj,
+            edram_pj: self.edram_pj + other.edram_pj,
+            router_pj: self.router_pj + other.router_pj,
+        }
+    }
+}
+
+/// Per-component area breakdown (µm²).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct AreaBreakdown {
+    /// All ADCs.
+    pub adc_um2: f64,
+    /// Crossbar arrays (cells).
+    pub arrays_um2: f64,
+    /// Row DACs.
+    pub dac_um2: f64,
+    /// Column sample-and-holds.
+    pub sample_hold_um2: f64,
+    /// Shift-add units (one per ADC).
+    pub shift_add_um2: f64,
+    /// Local SRAM.
+    pub sram_um2: f64,
+    /// Global eDRAM.
+    pub edram_um2: f64,
+    /// Router.
+    pub router_um2: f64,
+}
+
+impl AreaBreakdown {
+    /// Total area in µm².
+    pub fn total_um2(&self) -> f64 {
+        self.adc_um2
+            + self.arrays_um2
+            + self.dac_um2
+            + self.sample_hold_um2
+            + self.shift_add_um2
+            + self.sram_um2
+            + self.edram_um2
+            + self.router_um2
+    }
+
+    /// ADC share of total area, in [0, 1].
+    pub fn adc_fraction(&self) -> f64 {
+        self.adc_um2 / self.total_um2()
+    }
+}
+
+/// Scope of the area rollup.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AreaScope {
+    /// One CiM array group + its converters (paper Fig. 5's "RAELLA CiM
+    /// arrays" granularity: arrays, DACs, S+H, ADCs, shift-adds).
+    ArrayGroup { n_arrays: usize },
+    /// A full tile: array group plus SRAM, eDRAM share, and router
+    /// (Fig. 4's full-accelerator granularity).
+    Tile { n_arrays: usize },
+}
+
+/// The ADC query implied by an architecture's ADC config.
+pub fn adc_query(arch: &CimArch) -> AdcQuery {
+    AdcQuery {
+        enob: arch.adc.enob,
+        total_throughput: arch.adc.total_throughput,
+        tech_nm: arch.tech_nm,
+        n_adcs: arch.adc.n_adcs,
+    }
+}
+
+/// Price one layer's mapped action counts (energy rollup).
+pub fn layer_energy(arch: &CimArch, model: &AdcModel, layer: &Layer) -> Result<EnergyBreakdown> {
+    let mapping = map_layer(arch, layer)?;
+    Ok(energy_of_mapping(arch, model, &mapping))
+}
+
+/// Price an existing mapping.
+pub fn energy_of_mapping(arch: &CimArch, model: &AdcModel, m: &Mapping) -> EnergyBreakdown {
+    let t = arch.tech_nm;
+    let adc = AdcComponent { model: *model, query: adc_query(arch) };
+    let c = &m.counts;
+    EnergyBreakdown {
+        adc_pj: adc.energy_pj(c.adc_converts),
+        dac_pj: components::dac(t).energy_pj(c.dac_drives),
+        crossbar_pj: components::crossbar_cell(t).energy_pj(c.cell_reads),
+        sample_hold_pj: components::sample_hold(t).energy_pj(c.sh_samples),
+        shift_add_pj: components::shift_add(t).energy_pj(c.shift_add_ops),
+        register_pj: components::register(t).energy_pj(c.register_bits),
+        sram_pj: components::sram(t).energy_pj(c.sram_bytes),
+        edram_pj: components::edram(t).energy_pj(c.edram_bytes),
+        router_pj: components::router(t).energy_pj(c.noc_flits),
+    }
+}
+
+/// Whole-workload energy (sum over layers).
+pub fn workload_energy(
+    arch: &CimArch,
+    model: &AdcModel,
+    workload: &Workload,
+) -> Result<EnergyBreakdown> {
+    let mut total = EnergyBreakdown::default();
+    for layer in &workload.layers {
+        total = total.add(&layer_energy(arch, model, layer)?);
+    }
+    Ok(total)
+}
+
+/// Architecture area under the given scope.
+pub fn accel_area(arch: &CimArch, model: &AdcModel, scope: AreaScope) -> AreaBreakdown {
+    let t = arch.tech_nm;
+    let (n_arrays, with_buffers) = match scope {
+        AreaScope::ArrayGroup { n_arrays } => (n_arrays, false),
+        AreaScope::Tile { n_arrays } => (n_arrays, true),
+    };
+    let adc = AdcComponent { model: *model, query: adc_query(arch) };
+    let cells = (arch.array_rows * arch.array_cols) as f64;
+    let mut area = AreaBreakdown {
+        adc_um2: adc.total_area_um2(),
+        arrays_um2: n_arrays as f64 * cells * components::crossbar_cell(t).area_um2,
+        dac_um2: n_arrays as f64 * arch.array_rows as f64 * components::dac(t).area_um2,
+        sample_hold_um2: n_arrays as f64
+            * arch.array_cols as f64
+            * components::sample_hold(t).area_um2,
+        shift_add_um2: arch.adc.n_adcs as f64 * components::shift_add(t).area_um2,
+        ..Default::default()
+    };
+    if with_buffers {
+        area.sram_um2 = arch.sram_bytes as f64 * components::sram(t).area_um2;
+        area.edram_um2 = arch.edram_bytes as f64 * components::edram(t).area_um2;
+        area.router_um2 = components::router(t).area_um2;
+    }
+    area
+}
+
+/// Energy-area product: energy (pJ) x area (µm²) — the Fig. 5 objective.
+/// Absolute units are arbitrary; only ratios across design points matter.
+pub fn eap(energy: &EnergyBreakdown, area: &AreaBreakdown) -> f64 {
+    energy.total_pj() * area.total_um2()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::raella::{RaellaVariant, raella};
+    use crate::workload::resnet18::{large_tensor_layer, resnet18, small_tensor_layer};
+
+    #[test]
+    fn breakdown_total_is_sum_of_parts() {
+        let arch = raella(RaellaVariant::Medium);
+        let e = layer_energy(&arch, &AdcModel::default(), &large_tensor_layer()).unwrap();
+        let manual = e.adc_pj
+            + e.dac_pj
+            + e.crossbar_pj
+            + e.sample_hold_pj
+            + e.shift_add_pj
+            + e.register_pj
+            + e.sram_pj
+            + e.edram_pj
+            + e.router_pj;
+        assert!((e.total_pj() - manual).abs() < 1e-9);
+        assert!(e.total_pj() > 0.0);
+    }
+
+    #[test]
+    fn adc_is_a_significant_but_not_total_fraction() {
+        // The premise of the paper: ADCs consume significant energy/area.
+        let arch = raella(RaellaVariant::Medium);
+        let model = AdcModel::default();
+        let e = layer_energy(&arch, &model, &large_tensor_layer()).unwrap();
+        let frac = e.adc_fraction();
+        assert!(frac > 0.1 && frac < 0.95, "ADC energy fraction {frac}");
+        let a = accel_area(&arch, &model, AreaScope::ArrayGroup { n_arrays: 1 });
+        let afrac = a.adc_fraction();
+        assert!(afrac > 0.05 && afrac < 0.9, "ADC area fraction {afrac}");
+    }
+
+    #[test]
+    fn large_layer_prefers_bigger_sums() {
+        // Fig. 4 large-tensor mechanism: XL's 36x fewer converts beat its
+        // ~5.6x per-convert energy premium.
+        let model = AdcModel::default();
+        let l = large_tensor_layer();
+        let e_s = layer_energy(&raella(RaellaVariant::Small), &model, &l).unwrap();
+        let e_xl = layer_energy(&raella(RaellaVariant::ExtraLarge), &model, &l).unwrap();
+        assert!(e_xl.adc_pj < e_s.adc_pj, "XL {} vs S {}", e_xl.adc_pj, e_s.adc_pj);
+    }
+
+    #[test]
+    fn small_layer_prefers_small_sums() {
+        // Fig. 4 small-tensor mechanism: converts equal, per-convert
+        // energy grows with ENOB => monotone in variant size.
+        let model = AdcModel::default();
+        let l = small_tensor_layer();
+        let adc: Vec<f64> = RaellaVariant::ALL
+            .iter()
+            .map(|&v| layer_energy(&raella(v), &model, &l).unwrap().adc_pj)
+            .collect();
+        assert!(adc.windows(2).all(|w| w[0] < w[1]), "{adc:?}");
+    }
+
+    #[test]
+    fn workload_energy_sums_layers() {
+        let arch = raella(RaellaVariant::Medium);
+        let model = AdcModel::default();
+        let net = resnet18();
+        let total = workload_energy(&arch, &model, &net).unwrap();
+        let manual: f64 = net
+            .layers
+            .iter()
+            .map(|l| layer_energy(&arch, &model, l).unwrap().total_pj())
+            .sum();
+        assert!((total.total_pj() - manual).abs() / manual < 1e-12);
+    }
+
+    #[test]
+    fn tile_scope_is_larger_than_array_group() {
+        let arch = raella(RaellaVariant::Medium);
+        let model = AdcModel::default();
+        let g = accel_area(&arch, &model, AreaScope::ArrayGroup { n_arrays: 4 });
+        let t = accel_area(&arch, &model, AreaScope::Tile { n_arrays: 4 });
+        assert!(t.total_um2() > g.total_um2());
+        assert_eq!(g.sram_um2, 0.0);
+        assert!(t.sram_um2 > 0.0);
+    }
+
+    #[test]
+    fn eap_is_product() {
+        let arch = raella(RaellaVariant::Medium);
+        let model = AdcModel::default();
+        let e = layer_energy(&arch, &model, &large_tensor_layer()).unwrap();
+        let a = accel_area(&arch, &model, AreaScope::ArrayGroup { n_arrays: 1 });
+        assert!((eap(&e, &a) - e.total_pj() * a.total_um2()).abs() < 1e-3);
+    }
+}

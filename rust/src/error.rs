@@ -1,0 +1,44 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// Unified error for all cimdse subsystems.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// Configuration file / CLI parse problems.
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// A numeric routine received out-of-domain input.
+    #[error("numeric error: {0}")]
+    Numeric(String),
+
+    /// Regression / fitting failures (singular systems, too few points).
+    #[error("fit error: {0}")]
+    Fit(String),
+
+    /// A layer cannot be mapped onto the given architecture.
+    #[error("mapping error: {0}")]
+    Mapping(String),
+
+    /// PJRT runtime failures (artifact missing, compile/execute errors).
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// Underlying XLA/PJRT error.
+    #[error("xla error: {0}")]
+    Xla(String),
+
+    /// I/O while loading artifacts or writing reports.
+    #[error(transparent)]
+    Io(#[from] std::io::Error),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;

@@ -1,0 +1,116 @@
+//! Threaded execution substrate.
+//!
+//! The offline registry has no tokio; the DSE engine's needs are
+//! embarrassingly parallel batch evaluation, which scoped threads plus an
+//! atomic work index cover with less machinery and no unsafe code.
+
+use std::sync::Mutex;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads to use by default (logical CPUs, capped).
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .min(32)
+}
+
+/// Apply `f` to every item in parallel, preserving input order in the
+/// output. `workers = 1` degrades to a plain serial map (no threads).
+pub fn parallel_map<T, U, F>(items: &[T], workers: usize, f: F) -> Vec<U>
+where
+    T: Sync,
+    U: Send,
+    F: Fn(&T) -> U + Sync,
+{
+    assert!(workers >= 1);
+    if workers == 1 || items.len() <= 1 {
+        return items.iter().map(|t| f(t)).collect();
+    }
+
+    let next = AtomicUsize::new(0);
+    let results: Vec<Mutex<Option<U>>> =
+        (0..items.len()).map(|_| Mutex::new(None)).collect();
+
+    std::thread::scope(|scope| {
+        for _ in 0..workers.min(items.len()) {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= items.len() {
+                    break;
+                }
+                let out = f(&items[i]);
+                *results[i].lock().unwrap() = Some(out);
+            });
+        }
+    });
+
+    results
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("worker left a hole"))
+        .collect()
+}
+
+/// Apply `f` to contiguous chunks of `items` in parallel (one call per
+/// chunk), concatenating per-chunk outputs in order. Lower dispatch
+/// overhead than [`parallel_map`] when per-item work is tiny — this is the
+/// DSE sweep's hot-path shape.
+pub fn parallel_chunks<T, U, F>(items: &[T], chunk: usize, workers: usize, f: F) -> Vec<U>
+where
+    T: Sync,
+    U: Send,
+    F: Fn(&[T]) -> Vec<U> + Sync,
+{
+    assert!(chunk >= 1);
+    let chunks: Vec<&[T]> = items.chunks(chunk).collect();
+    let nested = parallel_map(&chunks, workers, |c| f(c));
+    nested.into_iter().flatten().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order() {
+        let items: Vec<u64> = (0..1000).collect();
+        let out = parallel_map(&items, 8, |x| x * 2);
+        assert_eq!(out, items.iter().map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn serial_path_matches_parallel() {
+        let items: Vec<u64> = (0..100).collect();
+        let a = parallel_map(&items, 1, |x| x + 7);
+        let b = parallel_map(&items, 4, |x| x + 7);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn empty_input() {
+        let items: Vec<u64> = Vec::new();
+        let out: Vec<u64> = parallel_map(&items, 4, |x| *x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn more_workers_than_items() {
+        let items = vec![1u64, 2, 3];
+        let out = parallel_map(&items, 16, |x| x * x);
+        assert_eq!(out, vec![1, 4, 9]);
+    }
+
+    #[test]
+    fn chunked_matches_flat() {
+        let items: Vec<u64> = (0..517).collect();
+        let flat = parallel_map(&items, 4, |x| x + 1);
+        let chunked = parallel_chunks(&items, 64, 4, |c| c.iter().map(|x| x + 1).collect());
+        assert_eq!(flat, chunked);
+    }
+
+    #[test]
+    fn default_workers_reasonable() {
+        let w = default_workers();
+        assert!((1..=32).contains(&w));
+    }
+}

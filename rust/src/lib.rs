@@ -1,0 +1,55 @@
+//! # cimdse — ADC energy/area modeling for compute-in-memory design space exploration
+//!
+//! Reproduction of *Modeling Analog-Digital-Converter Energy and Area for
+//! Compute-In-Memory Accelerator Design* (Andrulis, Chen, Lee, Emer, Sze, 2024).
+//!
+//! The crate is organized as the paper's pipeline (Fig. 1):
+//!
+//! * [`survey`] — a synthetic Murmann-style ADC survey (the published-ADC
+//!   dataset substrate; see DESIGN.md §2 for the substitution rationale).
+//! * [`stats`] — the regression substrate: log-space OLS, quantile/envelope
+//!   fitting, piecewise two-bound fitting, bootstrap confidence intervals.
+//! * [`adc`] — the paper's contribution: the architecture-level ADC energy
+//!   (two-bound, §II-A) and area (Eq. 1, §II-B) model, the survey-fit
+//!   pipeline, and user tuning to known ADC design points.
+//! * [`components`] — an Accelergy-like component energy/area library for
+//!   every non-ADC accelerator component (DACs, crossbars, buffers, ...).
+//! * [`arch`] / [`workload`] / [`mapper`] / [`energy`] — the CiMLoop-like
+//!   full-accelerator modeling stack: architecture specs (RAELLA S/M/L/XL),
+//!   DNN layer descriptors (ResNet18), layer-to-crossbar mapping with
+//!   action counts, and the energy/area/EAP rollup.
+//! * [`dse`] — the design-space exploration engine: sweeps, Pareto fronts,
+//!   and threaded evaluation over the native model or the AOT-compiled
+//!   PJRT artifact.
+//! * [`runtime`] — the PJRT bridge: loads `artifacts/*.hlo.txt` (lowered
+//!   once from JAX/Pallas by `make artifacts`) and executes them on the
+//!   CPU PJRT client; Python is never on this path.
+//! * [`exec`], [`cli`], [`config`], [`report`], [`testing`], [`util`] —
+//!   substrates (thread pool, argument parser, TOML-subset/JSON parsers,
+//!   tables/CSV/ASCII plots, property testing, RNG/log-space helpers)
+//!   hand-rolled because the offline registry carries no tokio / clap /
+//!   serde / criterion / proptest.
+//!
+//! See DESIGN.md for the experiment index mapping every figure of the paper
+//! to a bench target, and EXPERIMENTS.md for measured results.
+
+pub mod adc;
+pub mod arch;
+pub mod bench_util;
+pub mod cli;
+pub mod components;
+pub mod config;
+pub mod dse;
+pub mod energy;
+pub mod error;
+pub mod exec;
+pub mod mapper;
+pub mod report;
+pub mod runtime;
+pub mod stats;
+pub mod survey;
+pub mod testing;
+pub mod util;
+pub mod workload;
+
+pub use error::{Error, Result};

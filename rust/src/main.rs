@@ -1,0 +1,406 @@
+//! `cimdse` — the command-line front end.
+//!
+//! Subcommands mirror the paper's pipeline:
+//!
+//! * `fit`     — synthesize the survey, fit the model, report coefficients.
+//! * `model`   — evaluate one ADC design point (optionally tuned).
+//! * `sweep`   — DSE over a design-point grid (native or PJRT backend).
+//! * `map`     — map a workload onto a RAELLA variant, report energy/area.
+//! * `figures` — regenerate the paper's Figs. 2–5.
+
+use cimdse::adc::{AdcModel, AdcQuery, fit_model, tuning::TuningPoint};
+use cimdse::arch::raella::{RaellaVariant, raella};
+use cimdse::cli::Args;
+use cimdse::dse::{
+    NativeEvaluator, PjrtEvaluator, SweepSpec, figures, pareto_front, run_sweep,
+};
+use cimdse::energy::{AreaScope, accel_area, layer_energy, workload_energy};
+use cimdse::report::Table;
+use cimdse::runtime::{AdcModelEngine, Manifest};
+use cimdse::survey::generator::{SurveyConfig, generate_survey};
+use cimdse::util::units::{fmt_area_um2, fmt_energy_pj, fmt_power_w, fmt_throughput};
+
+use cimdse::{Error, Result};
+
+const USAGE: &str = "\
+cimdse — ADC energy/area modeling for CiM design-space exploration
+
+USAGE: cimdse <subcommand> [options]
+
+SUBCOMMANDS
+  fit      [--n 700] [--seed 1997] [--csv PATH]
+           [--survey-csv PATH]                    fit the model to a survey
+  model    --enob B --throughput F [--tech 32] [--n-adcs 1]
+           [--tune-energy PJ] [--tune-area UM2]   evaluate one design point
+  estimate --class adc --resolution B --throughput F [...]
+                                                  Accelergy-style plug-in query
+  sweep    [--backend native|pjrt] [--points 12]  dense DSE + Pareto front
+  map      [--arch s|m|l|xl] [--arch-file TOML]
+           [--workload resnet18|vgg16|lenet] [--workload-file TOML]
+           [--layer NAME]                         map a DNN onto a CiM arch
+  explore  [--workload NAME]                      accelerator-level DSE
+  survey   [--n 700] [--seed 1997]                survey analytics (FoM trends)
+  figures  [--fig 2|3|4|5|all]                    regenerate paper figures
+";
+
+fn main() {
+    let args = match Args::parse(std::env::args().skip(1)) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    let result = match args.subcommand.as_deref() {
+        Some("fit") => cmd_fit(&args),
+        Some("model") => cmd_model(&args),
+        Some("estimate") => cmd_estimate(&args),
+        Some("sweep") => cmd_sweep(&args),
+        Some("map") => cmd_map(&args),
+        Some("explore") => cmd_explore(&args),
+        Some("survey") => cmd_survey(&args),
+        Some("figures") => cmd_figures(&args),
+        _ => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+/// Model fitted to a fresh synthetic survey (the default model source).
+fn fitted_model(n: usize, seed: u64) -> Result<AdcModel> {
+    let survey = generate_survey(&SurveyConfig {
+        n_records: n,
+        seed,
+        ..SurveyConfig::default()
+    });
+    Ok(AdcModel::new(fit_model(&survey)?.coefs))
+}
+
+fn cmd_fit(args: &Args) -> Result<()> {
+    let n = args.usize_or("n", 700)?;
+    let seed = args.u64_or("seed", 1997)?;
+    // Real-survey drop-in: --survey-csv fits user-provided data instead of
+    // the synthetic survey.
+    let survey = match args.opt("survey-csv") {
+        Some(path) => {
+            println!("loading survey from {path}");
+            cimdse::survey::load_survey_csv(path)?
+        }
+        None => generate_survey(&SurveyConfig { n_records: n, seed, ..SurveyConfig::default() }),
+    };
+    if let Some(path) = args.opt("csv") {
+        std::fs::write(path, survey.to_csv())?;
+        println!("wrote survey CSV to {path}");
+    }
+    let report = fit_model(&survey)?;
+    println!("fit over {} survey records (seed {seed})\n", report.n_records);
+
+    let truth = cimdse::adc::Coefficients::generator_truth();
+    let mut t = Table::new(vec!["coefficient", "fitted", "generator truth"]);
+    let fitted = report.coefs.to_vec();
+    let names = ["a0", "a1", "a2", "b0", "b1", "b2", "b3", "d0", "d1", "d2", "d3"];
+    for (i, name) in names.iter().enumerate() {
+        t.row(vec![
+            name.to_string(),
+            format!("{:+.4}", fitted[i]),
+            format!("{:+.4}", truth.to_vec()[i]),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "energy fit: {} EM iterations, {:.0}% of points in tradeoff segment",
+        report.energy_fit.iterations,
+        100.0 * report.energy_fit.trade_fraction
+    );
+    println!(
+        "area regression: r = {:.3} with energy predictor vs r = {:.3} with ENOB \
+         (paper: 0.75 vs 0.66)",
+        report.area_r_energy, report.area_r_enob
+    );
+    Ok(())
+}
+
+fn cmd_model(args: &Args) -> Result<()> {
+    let enob = args.f64_or("enob", 8.0)?;
+    let throughput = args.f64_or("throughput", 1e9)?;
+    let tech_nm = args.f64_or("tech", 32.0)?;
+    let n_adcs = args.usize_or("n-adcs", 1)? as u32;
+    let query = AdcQuery { enob, total_throughput: throughput, tech_nm, n_adcs };
+    query.validate()?;
+
+    let mut model = fitted_model(args.usize_or("n", 700)?, args.u64_or("seed", 1997)?)?;
+    if let Some(e) = args.opt("tune-energy") {
+        let energy: f64 = e
+            .parse()
+            .map_err(|_| Error::Config(format!("--tune-energy: bad number `{e}`")))?;
+        let area = match args.opt("tune-area") {
+            Some(a) => Some(a.parse().map_err(|_| {
+                Error::Config(format!("--tune-area: bad number `{a}`"))
+            })?),
+            None => None,
+        };
+        model = model.tuned_to(&TuningPoint {
+            query,
+            energy_pj_per_convert: energy,
+            area_um2: area,
+        });
+        println!("(model tuned to the given reference point)");
+    }
+
+    let m = model.eval(&query);
+    println!("ADC design point:");
+    println!("  ENOB             {enob}");
+    println!("  total throughput {}", fmt_throughput(throughput));
+    println!("  tech node        {tech_nm} nm");
+    println!(
+        "  n ADCs           {n_adcs}  (per-ADC {})",
+        fmt_throughput(query.throughput_per_adc())
+    );
+    println!();
+    println!("  energy/convert   {}", fmt_energy_pj(m.energy_pj_per_convert));
+    println!("  area per ADC     {}", fmt_area_um2(m.area_um2_per_adc));
+    println!("  total power      {}", fmt_power_w(m.total_power_w));
+    println!("  total area       {}", fmt_area_um2(m.total_area_um2));
+    println!(
+        "  energy knee      {} (tradeoff bound beyond this)",
+        fmt_throughput(model.crossover_throughput(enob, tech_nm))
+    );
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let model = fitted_model(args.usize_or("n", 700)?, args.u64_or("seed", 1997)?)?;
+    let points = args.usize_or("points", 12)?;
+    let spec = SweepSpec::dense(points);
+    let backend = args.opt_or("backend", "native");
+
+    let evaluated = match backend {
+        "pjrt" => {
+            let manifest = Manifest::locate()?;
+            let engine = AdcModelEngine::load(&manifest)?;
+            let eval = PjrtEvaluator::new(engine, model);
+            println!("sweeping {} design points on the PJRT artifact...", spec.len());
+            run_sweep(&spec, &eval)?
+        }
+        "native" => {
+            let eval = NativeEvaluator::new(model);
+            println!("sweeping {} design points natively...", spec.len());
+            run_sweep(&spec, &eval)?
+        }
+        other => return Err(Error::Config(format!("unknown backend `{other}`"))),
+    };
+
+    // Pareto front over (total power, total area).
+    let objectives: Vec<(f64, f64)> = evaluated
+        .iter()
+        .map(|p| (p.metrics.total_power_w, p.metrics.total_area_um2))
+        .collect();
+    let front = pareto_front(&objectives);
+    println!("{} points on the power-area Pareto front:\n", front.len());
+    let mut t = Table::new(vec![
+        "ENOB", "total thpt", "tech", "n_adcs", "E/convert", "power", "area",
+    ]);
+    for &i in front.iter().take(args.usize_or("top", 20)?) {
+        let p = &evaluated[i];
+        t.row(vec![
+            format!("{:.1}", p.query.enob),
+            fmt_throughput(p.query.total_throughput),
+            format!("{} nm", p.query.tech_nm),
+            p.query.n_adcs.to_string(),
+            fmt_energy_pj(p.metrics.energy_pj_per_convert),
+            fmt_power_w(p.metrics.total_power_w),
+            fmt_area_um2(p.metrics.total_area_um2),
+        ]);
+    }
+    println!("{}", t.render());
+    if let Some(path) = args.opt("csv") {
+        let mut csv = String::from(
+            "enob,total_throughput,tech_nm,n_adcs,energy_pj,area_um2,power_w,total_area_um2\n",
+        );
+        for p in &evaluated {
+            csv.push_str(&format!(
+                "{},{},{},{},{},{},{},{}\n",
+                p.query.enob,
+                p.query.total_throughput,
+                p.query.tech_nm,
+                p.query.n_adcs,
+                p.metrics.energy_pj_per_convert,
+                p.metrics.area_um2_per_adc,
+                p.metrics.total_power_w,
+                p.metrics.total_area_um2
+            ));
+        }
+        std::fs::write(path, csv)?;
+        println!("wrote sweep CSV to {path}");
+    }
+    Ok(())
+}
+
+fn variant_from_name(name: &str) -> Result<RaellaVariant> {
+    match name.to_lowercase().as_str() {
+        "s" | "small" => Ok(RaellaVariant::Small),
+        "m" | "medium" => Ok(RaellaVariant::Medium),
+        "l" | "large" => Ok(RaellaVariant::Large),
+        "xl" | "extra-large" => Ok(RaellaVariant::ExtraLarge),
+        other => Err(Error::Config(format!("unknown variant `{other}` (s|m|l|xl)"))),
+    }
+}
+
+fn cmd_estimate(args: &Args) -> Result<()> {
+    // The Accelergy-style plug-in query path (adc::plugin).
+    let model = fitted_model(args.usize_or("n", 700)?, args.u64_or("seed", 1997)?)?;
+    let estimator = cimdse::adc::Estimator::new(model);
+    let class = args.opt_or("class", "adc");
+    let mut attributes = cimdse::adc::plugin::Attributes::new();
+    for key in ["resolution", "enob", "throughput", "total_throughput", "technology", "tech_nm", "n_adcs"] {
+        if let Some(v) = args.opt(key) {
+            let v: f64 = v
+                .parse()
+                .map_err(|_| Error::Config(format!("--{key}: bad number `{v}`")))?;
+            attributes.insert(key.to_string(), v);
+        }
+    }
+    let energy = estimator.estimate_energy(class, &attributes, "convert")?;
+    let area = estimator.estimate_area(class, &attributes)?;
+    println!("class `{class}` with {attributes:?}:");
+    println!("  energy/convert = {} (accuracy {}%)", fmt_energy_pj(energy.value), energy.accuracy);
+    println!("  area per ADC   = {} (accuracy {}%)", fmt_area_um2(area.value), area.accuracy);
+    Ok(())
+}
+
+fn cmd_explore(args: &Args) -> Result<()> {
+    use cimdse::dse::accel::{AccelSweepSpec, accel_pareto, run_accel_sweep};
+    let model = fitted_model(args.usize_or("n", 700)?, args.u64_or("seed", 1997)?)?;
+    let workload = cimdse::workload::zoo::by_name(args.opt_or("workload", "resnet18"))?;
+    let spec = AccelSweepSpec::default();
+    println!(
+        "exploring {} candidate architectures on {}...",
+        spec.len(),
+        workload.name
+    );
+    let points = run_accel_sweep(&spec, &model, &workload, cimdse::exec::default_workers())?;
+    let mut front: Vec<_> = accel_pareto(&points).iter().map(|&i| &points[i]).collect();
+    front.sort_by(|a, b| a.eap.total_cmp(&b.eap));
+    let mut t = Table::new(vec!["config", "energy", "area", "ADC E%", "latency (ms)"]);
+    for p in front.iter().take(args.usize_or("top", 12)?) {
+        t.row(vec![
+            p.arch.name.clone(),
+            fmt_energy_pj(p.energy_pj),
+            fmt_area_um2(p.area_um2),
+            format!("{:.0}%", 100.0 * p.adc_energy_fraction),
+            format!("{:.2}", p.latency_s * 1e3),
+        ]);
+    }
+    println!(
+        "{} Pareto-optimal configurations (showing best-EAP first):\n{}",
+        front.len(),
+        t.render()
+    );
+    Ok(())
+}
+
+fn cmd_survey(args: &Args) -> Result<()> {
+    let survey = match args.opt("survey-csv") {
+        Some(path) => cimdse::survey::load_survey_csv(path)?,
+        None => generate_survey(&SurveyConfig {
+            n_records: args.usize_or("n", 700)?,
+            seed: args.u64_or("seed", 1997)?,
+            ..SurveyConfig::default()
+        }),
+    };
+    println!("{} records\n", survey.len());
+    println!("{}", cimdse::survey::stats::render_summary(&survey));
+    Ok(())
+}
+
+fn load_workload(args: &Args) -> Result<cimdse::workload::Workload> {
+    if let Some(path) = args.opt("workload-file") {
+        return cimdse::workload::zoo::from_toml(&std::fs::read_to_string(path)?);
+    }
+    cimdse::workload::zoo::by_name(args.opt_or("workload", "resnet18"))
+}
+
+fn cmd_map(args: &Args) -> Result<()> {
+    let model = fitted_model(args.usize_or("n", 700)?, args.u64_or("seed", 1997)?)?;
+    let arch = match args.opt("arch-file") {
+        Some(path) => cimdse::arch::from_toml(&std::fs::read_to_string(path)?)?,
+        None => raella(variant_from_name(args.opt_or("arch", "m"))?),
+    };
+    let net = load_workload(args)?;
+
+    if let Some(layer_name) = args.opt("layer") {
+        let layer = net
+            .layer(layer_name)
+            .ok_or_else(|| Error::Config(format!("no layer `{layer_name}` in resnet18")))?;
+        let m = cimdse::mapper::map_layer(&arch, layer)?;
+        let e = layer_energy(&arch, &model, layer)?;
+        println!("{} on {}:", layer.name, arch.name);
+        println!("  row chunks    {}", m.row_chunks);
+        println!("  cols used     {}", m.cols_used);
+        println!("  arrays        {}", m.arrays_used);
+        println!("  utilization   {:.3}", m.utilization);
+        println!("  ADC converts  {:.3e}", m.counts.adc_converts);
+        let lat = cimdse::energy::latency_of_mapping(&arch, &m);
+        println!("  latency       {:.3e} s (bottleneck: {})", lat.critical_s(), lat.bottleneck());
+        println!("  ADC energy    {}", fmt_energy_pj(e.adc_pj));
+        println!(
+            "  total energy  {} (ADC {:.0}%)",
+            fmt_energy_pj(e.total_pj()),
+            100.0 * e.adc_fraction()
+        );
+        return Ok(());
+    }
+
+    println!("{}", figures::per_layer_table(&model, &arch, &net)?.render());
+    let total = workload_energy(&arch, &model, &net)?;
+    let arrays = cimdse::mapper::arrays_for_workload(&arch, &net.layers);
+    let area = accel_area(&arch, &model, AreaScope::Tile { n_arrays: arrays });
+    println!(
+        "whole-network: energy {} (ADC {:.0}%), area {} over {} arrays (ADC {:.0}%)",
+        fmt_energy_pj(total.total_pj()),
+        100.0 * total.adc_fraction(),
+        fmt_area_um2(area.total_um2()),
+        arrays,
+        100.0 * area.adc_fraction(),
+    );
+    Ok(())
+}
+
+fn cmd_figures(args: &Args) -> Result<()> {
+    let model = fitted_model(args.usize_or("n", 700)?, args.u64_or("seed", 1997)?)?;
+    let survey = generate_survey(&SurveyConfig::default());
+    let which = args.opt_or("fig", "all");
+
+    if which == "2" || which == "all" {
+        let d = figures::fig2(&survey, &model, 40);
+        println!(
+            "{}",
+            figures::render_fig23(
+                &d,
+                "Fig. 2: ADC throughput vs energy (32 nm)",
+                "energy (pJ/convert)"
+            )
+        );
+    }
+    if which == "3" || which == "all" {
+        let d = figures::fig3(&survey, &model, 40);
+        println!(
+            "{}",
+            figures::render_fig23(&d, "Fig. 3: ADC throughput vs area (32 nm)", "area (µm²)")
+        );
+    }
+    if which == "4" || which == "all" {
+        println!("Fig. 4: RAELLA S/M/L/XL energy on ResNet18 layer groups");
+        println!("{}", figures::render_fig4(&figures::fig4(&model)?).render());
+    }
+    if which == "5" || which == "all" {
+        println!("Fig. 5: EAP vs number of ADCs for varying total throughput");
+        println!("{}", figures::render_fig5(&figures::fig5(&model, 5)?).render());
+    }
+    Ok(())
+}

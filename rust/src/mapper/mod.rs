@@ -1,0 +1,241 @@
+//! Layer-to-crossbar mapping and action counting (the CiMLoop analogue).
+//!
+//! Maps one DNN layer's im2col weight matrix onto a [`CimArch`] and
+//! derives the per-component action counts that the energy rollup prices:
+//! ADC converts, crossbar cell reads, DAC row drives, sample-and-holds,
+//! shift-adds, and buffer traffic. The mapping follows the standard
+//! ISAAC/RAELLA scheme: weights stay resident (weight-stationary),
+//! activations stream bit-serially, each physical column is read through
+//! an ADC once per (output position, bit-plane, row chunk).
+
+use crate::arch::CimArch;
+use crate::error::{Error, Result};
+use crate::workload::Layer;
+
+/// Per-component action counts for one layer inference.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ActionCounts {
+    /// ADC conversions.
+    pub adc_converts: f64,
+    /// Crossbar cell activations (cell x bit-plane).
+    pub cell_reads: f64,
+    /// DAC / wordline drives (row x bit-plane x position).
+    pub dac_drives: f64,
+    /// Column sample-and-hold operations.
+    pub sh_samples: f64,
+    /// Digital shift-add operations.
+    pub shift_add_ops: f64,
+    /// Register bits moved (input staging + output collection).
+    pub register_bits: f64,
+    /// Local SRAM bytes accessed.
+    pub sram_bytes: f64,
+    /// Global eDRAM bytes accessed.
+    pub edram_bytes: f64,
+    /// NoC flits (32-byte) moved.
+    pub noc_flits: f64,
+}
+
+/// The result of mapping a layer onto an architecture.
+#[derive(Clone, Debug)]
+pub struct Mapping {
+    /// Row chunks: ADC converts needed to cover the reduction dimension.
+    pub row_chunks: usize,
+    /// Physical columns used (logical channels x column slices).
+    pub cols_used: usize,
+    /// Crossbar arrays needed to hold the layer's weights.
+    pub arrays_used: usize,
+    /// Analog sum utilization in (0, 1]: how full the average analog sum
+    /// is relative to the architecture's `sum_size` (the paper's Fig. 4
+    /// x-axis notion).
+    pub utilization: f64,
+    /// Action counts for one inference of this layer.
+    pub counts: ActionCounts,
+    /// ADC-bound latency for one inference, seconds.
+    pub latency_s: f64,
+}
+
+/// Map `layer` onto `arch`, deriving action counts for one inference.
+pub fn map_layer(arch: &CimArch, layer: &Layer) -> Result<Mapping> {
+    arch.validate()?;
+    let rows = layer.weight_rows();
+    let k = layer.weight_cols();
+    let positions = layer.output_positions() as f64;
+    if rows == 0 || k == 0 {
+        return Err(Error::Mapping(format!("layer {} has empty weights", layer.name)));
+    }
+
+    let col_slices = arch.col_slices();
+    let planes = arch.planes() as f64;
+    let cols_used = k * col_slices;
+
+    // The analog sum covers min(sum_size, rows) values per convert; the
+    // reduction dimension needs ceil(rows / sum_size) sequential chunks.
+    let row_chunks = rows.div_ceil(arch.sum_size);
+    let utilization = rows as f64 / (row_chunks * arch.sum_size) as f64;
+
+    // Weight storage: arrays are tiled rows x cols.
+    let arrays_rows = rows.div_ceil(arch.array_rows);
+    let arrays_cols = cols_used.div_ceil(arch.array_cols);
+    let arrays_used = arrays_rows * arrays_cols;
+
+    // One convert per (position, plane, physical column, row chunk).
+    let adc_converts = positions * planes * cols_used as f64 * row_chunks as f64;
+    // Only occupied rows are driven / read.
+    let dac_drives = positions * planes * rows as f64;
+    let cell_reads = dac_drives * cols_used as f64;
+    // Each convert is preceded by a column sample and followed by a
+    // shift-add into the digital accumulator.
+    let sh_samples = adc_converts;
+    let shift_add_ops = adc_converts;
+
+    // Input staging: each input value is registered once per position
+    // (act_bits each); outputs collected at 2 bytes per channel.
+    let register_bits =
+        positions * rows as f64 * arch.act_bits as f64 + positions * k as f64 * 16.0;
+    // SRAM: im2col input reads (1 byte per value) + output writes.
+    let sram_bytes = positions * rows as f64 + positions * k as f64 * 2.0;
+    // eDRAM: unique input activations (~rows / (r·s) channels per
+    // position) + outputs spilled once.
+    let edram_bytes = positions * layer.c as f64 + positions * k as f64 * 2.0;
+    let noc_flits = edram_bytes / 32.0;
+
+    let latency_s = adc_converts / arch.adc.total_throughput;
+
+    Ok(Mapping {
+        row_chunks,
+        cols_used,
+        arrays_used,
+        utilization,
+        counts: ActionCounts {
+            adc_converts,
+            cell_reads,
+            dac_drives,
+            sh_samples,
+            shift_add_ops,
+            register_bits,
+            sram_bytes,
+            edram_bytes,
+            noc_flits,
+        },
+        latency_s,
+    })
+}
+
+/// Arrays needed to keep a whole workload's weights resident.
+pub fn arrays_for_workload(arch: &CimArch, layers: &[Layer]) -> usize {
+    layers
+        .iter()
+        .map(|l| map_layer(arch, l).map(|m| m.arrays_used).unwrap_or(0))
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::raella::{RaellaVariant, raella};
+    use crate::workload::Layer;
+
+    fn large() -> Layer {
+        crate::workload::resnet18::large_tensor_layer()
+    }
+
+    fn small() -> Layer {
+        crate::workload::resnet18::small_tensor_layer()
+    }
+
+    #[test]
+    fn row_chunks_shrink_with_sum_size() {
+        let l = large(); // rows = 4608
+        let chunks: Vec<usize> = RaellaVariant::ALL
+            .iter()
+            .map(|&v| map_layer(&raella(v), &l).unwrap().row_chunks)
+            .collect();
+        assert_eq!(chunks, vec![36, 9, 3, 1]);
+    }
+
+    #[test]
+    fn converts_scale_with_chunks() {
+        let l = large();
+        let s = map_layer(&raella(RaellaVariant::Small), &l).unwrap();
+        let xl = map_layer(&raella(RaellaVariant::ExtraLarge), &l).unwrap();
+        assert!((s.counts.adc_converts / xl.counts.adc_converts - 36.0).abs() < 1e-9);
+        // Exact count: P·Q=49, planes=8, cols=512·4=2048, chunks.
+        let expect = 49.0 * 8.0 * 2048.0 * 36.0;
+        assert!((s.counts.adc_converts - expect).abs() < 1e-6);
+    }
+
+    #[test]
+    fn small_layer_converts_are_sum_size_invariant() {
+        // rows=64 < 128: every variant needs exactly one chunk, so converts
+        // are identical and only per-convert ADC energy differs (the
+        // paper's small-tensor mechanism).
+        let l = small();
+        let counts: Vec<f64> = RaellaVariant::ALL
+            .iter()
+            .map(|&v| map_layer(&raella(v), &l).unwrap().counts.adc_converts)
+            .collect();
+        assert!(counts.windows(2).all(|w| (w[0] - w[1]).abs() < 1e-9), "{counts:?}");
+    }
+
+    #[test]
+    fn utilization_definition() {
+        let l = small(); // rows=64
+        let s = map_layer(&raella(RaellaVariant::Small), &l).unwrap(); // sum 128
+        assert!((s.utilization - 0.5).abs() < 1e-12);
+        let xl = map_layer(&raella(RaellaVariant::ExtraLarge), &l).unwrap(); // sum 8192
+        assert!((xl.utilization - 64.0 / 8192.0).abs() < 1e-12);
+        let full = map_layer(&raella(RaellaVariant::ExtraLarge), &large()).unwrap();
+        assert!((full.utilization - 4608.0 / 8192.0).abs() < 1e-12);
+        assert!(full.utilization <= 1.0);
+    }
+
+    #[test]
+    fn non_adc_counts_are_variant_invariant() {
+        // DAC and cell activity depend on occupied rows only — identical
+        // across S/M/L/XL (same weights, same slicing).
+        let l = large();
+        let ms: Vec<Mapping> = RaellaVariant::ALL
+            .iter()
+            .map(|&v| map_layer(&raella(v), &l).unwrap())
+            .collect();
+        for m in &ms[1..] {
+            assert_eq!(m.counts.dac_drives, ms[0].counts.dac_drives);
+            assert_eq!(m.counts.cell_reads, ms[0].counts.cell_reads);
+            assert_eq!(m.counts.sram_bytes, ms[0].counts.sram_bytes);
+        }
+    }
+
+    #[test]
+    fn mac_conservation() {
+        // cell_reads == MACs x planes x col_slices: every MAC touches each
+        // of its bit-plane x slice combinations exactly once.
+        let arch = raella(RaellaVariant::Medium);
+        let l = large();
+        let m = map_layer(&arch, &l).unwrap();
+        let expect = l.macs() as f64 * arch.planes() as f64 * arch.col_slices() as f64;
+        assert!((m.counts.cell_reads - expect).abs() / expect < 1e-12);
+    }
+
+    #[test]
+    fn arrays_used_covers_weights() {
+        let arch = raella(RaellaVariant::Medium);
+        let l = large(); // 4608 x 2048 physical
+        let m = map_layer(&arch, &l).unwrap();
+        assert_eq!(m.arrays_used, 9 * 4);
+        assert!(m.arrays_used * arch.array_rows * arch.array_cols >= l.weights() * 4);
+    }
+
+    #[test]
+    fn latency_is_adc_bound() {
+        let mut arch = raella(RaellaVariant::Medium);
+        arch.adc.total_throughput = 1e9;
+        let m = map_layer(&arch, &large()).unwrap();
+        assert!((m.latency_s - m.counts.adc_converts / 1e9).abs() < 1e-15);
+    }
+
+    #[test]
+    fn empty_layer_rejected() {
+        let l = Layer::conv("bad", 0, 8, 3, 3, 1, 1);
+        assert!(map_layer(&raella(RaellaVariant::Small), &l).is_err());
+    }
+}

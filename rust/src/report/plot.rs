@@ -1,0 +1,165 @@
+//! ASCII log-log plots — the Figs. 2/3 visualization in terminal form.
+//!
+//! Renders scatter series (survey dots) and line series (model bounds) on
+//! a shared log-log canvas with decade tick labels.
+
+use crate::util::logspace::log10;
+
+/// A plot series: points plus the glyph to draw them with.
+#[derive(Clone, Debug)]
+struct Series {
+    label: String,
+    glyph: char,
+    points: Vec<(f64, f64)>,
+}
+
+/// An ASCII canvas for log-log scatter/line plots.
+#[derive(Clone, Debug)]
+pub struct AsciiPlot {
+    title: String,
+    x_label: String,
+    y_label: String,
+    width: usize,
+    height: usize,
+    series: Vec<Series>,
+}
+
+impl AsciiPlot {
+    /// New plot with the given title and axis labels.
+    pub fn new(title: &str, x_label: &str, y_label: &str) -> Self {
+        AsciiPlot {
+            title: title.to_string(),
+            x_label: x_label.to_string(),
+            y_label: y_label.to_string(),
+            width: 72,
+            height: 22,
+            series: Vec::new(),
+        }
+    }
+
+    /// Set canvas size in characters.
+    pub fn size(mut self, width: usize, height: usize) -> Self {
+        assert!(width >= 20 && height >= 8);
+        self.width = width;
+        self.height = height;
+        self
+    }
+
+    /// Add a series; `(x, y)` must be positive (log-log canvas).
+    pub fn series(mut self, label: &str, glyph: char, points: Vec<(f64, f64)>) -> Self {
+        self.series.push(Series { label: label.to_string(), glyph, points });
+        self
+    }
+
+    /// Render the plot.
+    pub fn render(&self) -> String {
+        let pts: Vec<(f64, f64)> = self
+            .series
+            .iter()
+            .flat_map(|s| s.points.iter().copied())
+            .filter(|&(x, y)| x > 0.0 && y > 0.0)
+            .collect();
+        if pts.is_empty() {
+            return format!("{} (no data)\n", self.title);
+        }
+        let (mut x0, mut x1) = (f64::MAX, f64::MIN);
+        let (mut y0, mut y1) = (f64::MAX, f64::MIN);
+        for &(x, y) in &pts {
+            x0 = x0.min(log10(x));
+            x1 = x1.max(log10(x));
+            y0 = y0.min(log10(y));
+            y1 = y1.max(log10(y));
+        }
+        // Pad degenerate ranges.
+        if (x1 - x0).abs() < 1e-9 {
+            x0 -= 0.5;
+            x1 += 0.5;
+        }
+        if (y1 - y0).abs() < 1e-9 {
+            y0 -= 0.5;
+            y1 += 0.5;
+        }
+
+        let mut grid = vec![vec![' '; self.width]; self.height];
+        for s in &self.series {
+            for &(x, y) in &s.points {
+                if x <= 0.0 || y <= 0.0 {
+                    continue;
+                }
+                let cx = ((log10(x) - x0) / (x1 - x0) * (self.width - 1) as f64).round()
+                    as usize;
+                let cy = ((log10(y) - y0) / (y1 - y0) * (self.height - 1) as f64).round()
+                    as usize;
+                let row = self.height - 1 - cy.min(self.height - 1);
+                let col = cx.min(self.width - 1);
+                // Lines (drawn later in series order) win over scatter dots.
+                grid[row][col] = s.glyph;
+            }
+        }
+
+        let mut out = String::new();
+        out.push_str(&format!("{}\n", self.title));
+        let legend: Vec<String> = self
+            .series
+            .iter()
+            .map(|s| format!("{} {}", s.glyph, s.label))
+            .collect();
+        out.push_str(&format!("  [{}]\n", legend.join("   ")));
+        for (i, row) in grid.iter().enumerate() {
+            let y_val = y1 - (y1 - y0) * i as f64 / (self.height - 1) as f64;
+            let label = if i == 0 || i == self.height - 1 || i == self.height / 2 {
+                format!("1e{y_val:>5.1}")
+            } else {
+                String::from("       ")
+            };
+            out.push_str(&format!("{label} |{}\n", row.iter().collect::<String>()));
+        }
+        out.push_str(&format!(
+            "        +{}\n         1e{:<6.1}{}1e{:>6.1}  ({})\n",
+            "-".repeat(self.width),
+            x0,
+            " ".repeat(self.width.saturating_sub(18)),
+            x1,
+            self.x_label,
+        ));
+        out.push_str(&format!("         y: {}\n", self.y_label));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_points_within_canvas() {
+        let plot = AsciiPlot::new("t", "x", "y")
+            .series("dots", '*', vec![(1e3, 1.0), (1e9, 100.0)]);
+        let s = plot.render();
+        assert!(s.contains('*'));
+        assert!(s.contains("t\n"));
+        assert!(s.contains("dots"));
+    }
+
+    #[test]
+    fn empty_plot_does_not_panic() {
+        let s = AsciiPlot::new("empty", "x", "y").render();
+        assert!(s.contains("no data"));
+    }
+
+    #[test]
+    fn degenerate_single_point() {
+        let s = AsciiPlot::new("one", "x", "y").series("p", 'o', vec![(10.0, 10.0)]);
+        assert!(s.render().contains('o'));
+    }
+
+    #[test]
+    fn later_series_overdraw_earlier() {
+        let plot = AsciiPlot::new("t", "x", "y")
+            .series("a", 'a', vec![(10.0, 10.0), (100.0, 100.0)])
+            .series("b", 'b', vec![(10.0, 10.0)]);
+        let rendered = plot.render();
+        // The shared coordinate shows 'b' (drawn later).
+        assert!(rendered.contains('b'));
+    }
+}

@@ -1,0 +1,165 @@
+//! Typed entry points over the compiled artifacts.
+
+use crate::adc::{AdcMetrics, AdcQuery, Coefficients};
+use crate::error::{Error, Result};
+use crate::util::logspace::log10;
+
+use super::{Executable, Manifest, literal_f32};
+
+/// Batched ADC-model evaluation through `adc_model.hlo.txt`.
+///
+/// The artifact computes the same math as [`crate::adc::AdcModel`] (the
+/// Pallas kernel and the native path share the coefficient layout), at a
+/// fixed compile-time batch; partial batches are padded and sliced.
+pub struct AdcModelEngine {
+    exe: Executable,
+    batch: usize,
+    n_params: usize,
+    n_metrics: usize,
+}
+
+impl AdcModelEngine {
+    /// Compile the engine from located artifacts.
+    pub fn load(manifest: &Manifest) -> Result<AdcModelEngine> {
+        let exe = Executable::compile(&manifest.artifact_path("adc_model")?)?;
+        Ok(AdcModelEngine {
+            exe,
+            batch: manifest.doc.require_usize("adc_model.batch")?,
+            n_params: manifest.doc.require_usize("adc_model.n_params")?,
+            n_metrics: manifest.doc.require_usize("adc_model.n_metrics")?,
+        })
+    }
+
+    /// Compile-time batch size of the artifact.
+    pub fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    /// Evaluate a slice of queries, padding the tail batch.
+    pub fn eval(&self, queries: &[AdcQuery], coefs: &Coefficients) -> Result<Vec<AdcMetrics>> {
+        let coefs_vec = coefs.to_f32_vec();
+        let mut out = Vec::with_capacity(queries.len());
+        for chunk in queries.chunks(self.batch) {
+            let mut flat = Vec::with_capacity(self.batch * self.n_params);
+            for q in chunk {
+                flat.push(q.enob as f32);
+                flat.push(log10(q.throughput_per_adc()) as f32);
+                flat.push(log10(q.tech_nm / 32.0) as f32);
+                flat.push(q.n_adcs as f32);
+            }
+            // Pad with a copy of the last query (benign values).
+            let pad = [
+                flat[flat.len() - 4],
+                flat[flat.len() - 3],
+                flat[flat.len() - 2],
+                flat[flat.len() - 1],
+            ];
+            while flat.len() < self.batch * self.n_params {
+                flat.extend_from_slice(&pad);
+            }
+            let params =
+                literal_f32(&flat, &[self.batch as i64, self.n_params as i64])?;
+            let coefs_lit = literal_f32(&coefs_vec, &[coefs_vec.len() as i64])?;
+            let result = self.exe.run(&[params, coefs_lit])?;
+            let values = result.to_vec::<f32>()?;
+            if values.len() != self.batch * self.n_metrics {
+                return Err(Error::Runtime(format!(
+                    "adc_model artifact returned {} values, expected {}",
+                    values.len(),
+                    self.batch * self.n_metrics
+                )));
+            }
+            for row in values.chunks(self.n_metrics).take(chunk.len()) {
+                out.push(AdcMetrics {
+                    energy_pj_per_convert: row[0] as f64,
+                    area_um2_per_adc: row[1] as f64,
+                    total_power_w: row[2] as f64,
+                    total_area_um2: row[3] as f64,
+                });
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// Single CiM crossbar layer through `crossbar.hlo.txt`.
+pub struct CrossbarEngine {
+    exe: Executable,
+    /// (batch, in_dim, out_dim) compile-time shape.
+    pub shape: (usize, usize, usize),
+    /// Analog sum size baked into the artifact.
+    pub n_sum: usize,
+}
+
+impl CrossbarEngine {
+    /// Compile the engine from located artifacts.
+    pub fn load(manifest: &Manifest) -> Result<CrossbarEngine> {
+        let exe = Executable::compile(&manifest.artifact_path("crossbar")?)?;
+        Ok(CrossbarEngine {
+            exe,
+            shape: (
+                manifest.doc.require_usize("crossbar.batch")?,
+                manifest.doc.require_usize("crossbar.in_dim")?,
+                manifest.doc.require_usize("crossbar.out_dim")?,
+            ),
+            n_sum: manifest.doc.require_usize("crossbar.n_sum")?,
+        })
+    }
+
+    /// Run `y = cim_matmul(x, w; adc_step)`; shapes must match the artifact.
+    pub fn run(&self, x: &[f32], w: &[f32], adc_step: f32) -> Result<Vec<f32>> {
+        let (b, i, o) = self.shape;
+        let x_lit = literal_f32(x, &[b as i64, i as i64])?;
+        let w_lit = literal_f32(w, &[i as i64, o as i64])?;
+        let step = literal_f32(&[adc_step], &[1])?;
+        let out = self.exe.run(&[x_lit, w_lit, step])?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}
+
+/// Two-layer CiM MLP through `cim_mlp.hlo.txt`.
+pub struct CimMlpEngine {
+    exe: Executable,
+    /// (batch, in, hidden, out) compile-time shape.
+    pub shape: (usize, usize, usize, usize),
+}
+
+impl CimMlpEngine {
+    /// Compile the engine from located artifacts.
+    pub fn load(manifest: &Manifest) -> Result<CimMlpEngine> {
+        let exe = Executable::compile(&manifest.artifact_path("cim_mlp")?)?;
+        Ok(CimMlpEngine {
+            exe,
+            shape: (
+                manifest.doc.require_usize("cim_mlp.batch")?,
+                manifest.doc.require_usize("cim_mlp.in_dim")?,
+                manifest.doc.require_usize("cim_mlp.hidden_dim")?,
+                manifest.doc.require_usize("cim_mlp.out_dim")?,
+            ),
+        })
+    }
+
+    /// Forward pass: returns logits `[batch, out]` flattened.
+    #[allow(clippy::too_many_arguments)]
+    pub fn forward(
+        &self,
+        x: &[f32],
+        w1: &[f32],
+        w2: &[f32],
+        step1: f32,
+        step2: f32,
+        scale1: f32,
+    ) -> Result<Vec<f32>> {
+        let (b, i, h, o) = self.shape;
+        let inputs = [
+            literal_f32(x, &[b as i64, i as i64])?,
+            literal_f32(w1, &[i as i64, h as i64])?,
+            literal_f32(w2, &[h as i64, o as i64])?,
+            literal_f32(&[step1], &[1])?,
+            literal_f32(&[step2], &[1])?,
+            literal_f32(&[scale1], &[1])?,
+        ];
+        let out = self.exe.run(&inputs)?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}

@@ -1,0 +1,150 @@
+//! PJRT runtime: load and execute the AOT-compiled HLO artifacts.
+//!
+//! `make artifacts` lowers the Layer-2 JAX graphs (which call the Layer-1
+//! Pallas kernels) to HLO *text*; this module loads that text with the
+//! `xla` crate's parser (which reassigns instruction ids — the reason
+//! text, not serialized protos, is the interchange format), compiles it
+//! on the PJRT CPU client once, and exposes typed entry points:
+//!
+//! * [`AdcModelEngine`] — batched ADC-model evaluation for the DSE sweep.
+//! * [`CimMlpEngine`] / [`CrossbarEngine`] — the functional CiM datapath.
+//!
+//! Python never runs on this path; the Rust binary is self-contained
+//! once `artifacts/` exists.
+
+pub mod engines;
+
+pub use engines::{AdcModelEngine, CimMlpEngine, CrossbarEngine};
+
+use std::path::{Path, PathBuf};
+
+use crate::config::{Value, parse_json};
+use crate::error::{Error, Result};
+
+/// Parsed `artifacts/manifest.json` plus the directory it lives in.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    /// Artifact directory.
+    pub dir: PathBuf,
+    /// Parsed manifest document.
+    pub doc: Value,
+}
+
+impl Manifest {
+    /// Load the manifest from an artifact directory.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Runtime(format!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                path.display()
+            ))
+        })?;
+        Ok(Manifest { dir: dir.to_path_buf(), doc: parse_json(&text)? })
+    }
+
+    /// Locate the artifact directory: `$CIMDSE_ARTIFACTS` or `./artifacts`
+    /// relative to the current dir or the crate root.
+    pub fn locate() -> Result<Manifest> {
+        if let Ok(dir) = std::env::var("CIMDSE_ARTIFACTS") {
+            return Manifest::load(Path::new(&dir));
+        }
+        let candidates = [
+            PathBuf::from("artifacts"),
+            Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"),
+        ];
+        for dir in &candidates {
+            if dir.join("manifest.json").exists() {
+                return Manifest::load(dir);
+            }
+        }
+        Err(Error::Runtime(
+            "artifacts/manifest.json not found; run `make artifacts` \
+             or set CIMDSE_ARTIFACTS"
+                .into(),
+        ))
+    }
+
+    /// Full path of an artifact file referenced by manifest key
+    /// (e.g. `"adc_model"`).
+    pub fn artifact_path(&self, key: &str) -> Result<PathBuf> {
+        let file = self.doc.require_str(&format!("{key}.file"))?;
+        Ok(self.dir.join(file))
+    }
+}
+
+/// A compiled HLO executable on the CPU PJRT client.
+pub struct Executable {
+    client: xla::PjRtClient,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Load HLO text from `path` and compile it.
+    pub fn compile(path: &Path) -> Result<Executable> {
+        let client = xla::PjRtClient::cpu()?;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| Error::Runtime(format!("non-utf8 path {path:?}")))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp)?;
+        Ok(Executable { client, exe })
+    }
+
+    /// Execute with the given input literals; returns the unwrapped
+    /// 1-tuple root (aot.py lowers every graph with `return_tuple=True`).
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<xla::Literal> {
+        let result = self.exe.execute::<xla::Literal>(inputs)?;
+        let out = result[0][0].to_literal_sync()?;
+        Ok(out.to_tuple1()?)
+    }
+
+    /// The PJRT platform name (for diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}
+
+/// Build an f32 literal of the given shape from a flat slice.
+///
+/// Uses `create_from_shape_and_untyped_data` (one memcpy) rather than
+/// `vec1(..).reshape(..)` (copy + reshape) — this is the DSE batch
+/// marshalling hot path (EXPERIMENTS.md §Perf).
+pub fn literal_f32(data: &[f32], shape: &[i64]) -> Result<xla::Literal> {
+    let expect: i64 = shape.iter().product();
+    if expect != data.len() as i64 {
+        return Err(Error::Runtime(format!(
+            "literal shape {shape:?} needs {expect} elements, got {}",
+            data.len()
+        )));
+    }
+    let dims: Vec<usize> = shape.iter().map(|&d| d as usize).collect();
+    let bytes = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, std::mem::size_of_val(data))
+    };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::F32,
+        &dims,
+        bytes,
+    )?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_shape_mismatch_is_error() {
+        assert!(literal_f32(&[1.0, 2.0, 3.0], &[2, 2]).is_err());
+        assert!(literal_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).is_ok());
+    }
+
+    #[test]
+    fn manifest_missing_dir_errors_helpfully() {
+        let err = Manifest::load(Path::new("/nonexistent-dir-xyz"))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+}

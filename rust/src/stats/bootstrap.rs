@@ -1,0 +1,124 @@
+//! Bootstrap confidence intervals for fitted coefficients.
+//!
+//! Resample-with-replacement the observation set, refit, and report
+//! percentile intervals. Used to quantify how sensitive the ADC-model
+//! coefficients are to the survey sample (EXPERIMENTS.md reports these
+//! alongside the point fits).
+
+use crate::error::Result;
+use crate::util::Rng;
+
+/// A percentile confidence interval for one statistic.
+#[derive(Clone, Copy, Debug)]
+pub struct ConfidenceInterval {
+    /// Lower percentile bound.
+    pub lo: f64,
+    /// Point estimate from the full sample.
+    pub point: f64,
+    /// Upper percentile bound.
+    pub hi: f64,
+}
+
+impl ConfidenceInterval {
+    /// Interval width.
+    pub fn width(&self) -> f64 {
+        self.hi - self.lo
+    }
+
+    /// Whether the interval contains `x`.
+    pub fn contains(&self, x: f64) -> bool {
+        (self.lo..=self.hi).contains(&x)
+    }
+}
+
+/// Bootstrap percentile CIs for a vector-valued fit statistic.
+///
+/// `fit` maps a resampled index set (into the caller's data) to a vector of
+/// statistics (e.g. regression coefficients); resamples that fail to fit
+/// are skipped (up to half may fail before this errors).
+pub fn bootstrap_ci<F>(
+    n_obs: usize,
+    n_resamples: usize,
+    confidence: f64,
+    seed: u64,
+    fit: F,
+) -> Result<Vec<ConfidenceInterval>>
+where
+    F: Fn(&[usize]) -> Result<Vec<f64>>,
+{
+    assert!(n_obs > 0 && n_resamples > 0);
+    assert!((0.0..1.0).contains(&confidence));
+
+    let identity: Vec<usize> = (0..n_obs).collect();
+    let point = fit(&identity)?;
+    let k = point.len();
+
+    let mut rng = Rng::new(seed);
+    let mut samples: Vec<Vec<f64>> = Vec::with_capacity(n_resamples);
+    for _ in 0..n_resamples {
+        let idx: Vec<usize> = (0..n_obs).map(|_| rng.index(n_obs)).collect();
+        if let Ok(stat) = fit(&idx) {
+            debug_assert_eq!(stat.len(), k);
+            samples.push(stat);
+        }
+    }
+    if samples.len() < n_resamples / 2 {
+        return Err(crate::error::Error::Fit(format!(
+            "bootstrap: only {}/{} resamples fit successfully",
+            samples.len(),
+            n_resamples
+        )));
+    }
+
+    let alpha = (1.0 - confidence) / 2.0;
+    let cis = (0..k)
+        .map(|j| {
+            let vals: Vec<f64> = samples.iter().map(|s| s[j]).collect();
+            ConfidenceInterval {
+                lo: crate::stats::quantile(&vals, alpha),
+                point: point[j],
+                hi: crate::stats::quantile(&vals, 1.0 - alpha),
+            }
+        })
+        .collect();
+    Ok(cis)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::ols::ols;
+    use crate::util::Rng;
+
+    #[test]
+    fn ci_covers_true_slope() {
+        let mut rng = Rng::new(9);
+        let xs: Vec<Vec<f64>> = (0..300).map(|_| vec![rng.uniform(0.0, 10.0)]).collect();
+        let y: Vec<f64> = xs
+            .iter()
+            .map(|r| 2.0 + 1.5 * r[0] + rng.normal(0.0, 0.5))
+            .collect();
+
+        let cis = bootstrap_ci(xs.len(), 200, 0.95, 77, |idx| {
+            let bx: Vec<Vec<f64>> = idx.iter().map(|&i| xs[i].clone()).collect();
+            let by: Vec<f64> = idx.iter().map(|&i| y[i]).collect();
+            Ok(ols(&bx, &by)?.coefs)
+        })
+        .unwrap();
+
+        assert_eq!(cis.len(), 2);
+        assert!(cis[0].contains(2.0), "intercept CI {:?}", cis[0]);
+        assert!(cis[1].contains(1.5), "slope CI {:?}", cis[1]);
+        assert!(cis[1].width() < 0.2, "slope CI too wide: {:?}", cis[1]);
+    }
+
+    #[test]
+    fn point_estimate_within_interval() {
+        let data: Vec<f64> = (0..100).map(|i| i as f64).collect();
+        let cis = bootstrap_ci(data.len(), 100, 0.9, 1, |idx| {
+            Ok(vec![idx.iter().map(|&i| data[i]).sum::<f64>() / idx.len() as f64])
+        })
+        .unwrap();
+        assert!(cis[0].contains(cis[0].point));
+    }
+}

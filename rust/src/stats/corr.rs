@@ -1,0 +1,99 @@
+//! Correlation / goodness-of-fit metrics.
+//!
+//! The paper reports the Pearson correlation coefficient `r` of the area
+//! regression improving from 0.66 (ENOB predictor) to 0.75 (energy
+//! predictor); `bench area_corr` reproduces that comparison with these
+//! routines.
+
+/// Pearson correlation coefficient between two equal-length slices.
+pub fn pearson_r(x: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(x.len(), y.len(), "pearson_r: length mismatch");
+    assert!(x.len() >= 2, "pearson_r: need at least 2 points");
+    let n = x.len() as f64;
+    let mx = x.iter().sum::<f64>() / n;
+    let my = y.iter().sum::<f64>() / n;
+    let mut sxy = 0.0;
+    let mut sxx = 0.0;
+    let mut syy = 0.0;
+    for (&xi, &yi) in x.iter().zip(y) {
+        let dx = xi - mx;
+        let dy = yi - my;
+        sxy += dx * dy;
+        sxx += dx * dx;
+        syy += dy * dy;
+    }
+    if sxx == 0.0 || syy == 0.0 {
+        return 0.0;
+    }
+    sxy / (sxx * syy).sqrt()
+}
+
+/// Coefficient of determination of predictions vs observations.
+pub fn r_squared(observed: &[f64], predicted: &[f64]) -> f64 {
+    assert_eq!(observed.len(), predicted.len());
+    let n = observed.len() as f64;
+    let mean = observed.iter().sum::<f64>() / n;
+    let ss_tot: f64 = observed.iter().map(|&o| (o - mean).powi(2)).sum();
+    let ss_res: f64 = observed
+        .iter()
+        .zip(predicted)
+        .map(|(&o, &p)| (o - p).powi(2))
+        .sum();
+    if ss_tot == 0.0 { 1.0 } else { 1.0 - ss_res / ss_tot }
+}
+
+/// Root-mean-square error of predictions vs observations.
+pub fn rmse(observed: &[f64], predicted: &[f64]) -> f64 {
+    assert_eq!(observed.len(), predicted.len());
+    assert!(!observed.is_empty());
+    let ss: f64 = observed
+        .iter()
+        .zip(predicted)
+        .map(|(&o, &p)| (o - p).powi(2))
+        .sum();
+    (ss / observed.len() as f64).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn perfect_positive_and_negative() {
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let y: Vec<f64> = x.iter().map(|v| 2.0 * v + 1.0).collect();
+        assert!((pearson_r(&x, &y) - 1.0).abs() < 1e-12);
+        let yneg: Vec<f64> = x.iter().map(|v| -v).collect();
+        assert!((pearson_r(&x, &yneg) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn independent_data_near_zero() {
+        let mut rng = Rng::new(5);
+        let x: Vec<f64> = (0..20_000).map(|_| rng.f64()).collect();
+        let y: Vec<f64> = (0..20_000).map(|_| rng.f64()).collect();
+        assert!(pearson_r(&x, &y).abs() < 0.03);
+    }
+
+    #[test]
+    fn constant_input_gives_zero() {
+        let x = [1.0, 1.0, 1.0];
+        let y = [1.0, 2.0, 3.0];
+        assert_eq!(pearson_r(&x, &y), 0.0);
+    }
+
+    #[test]
+    fn r2_and_rmse_for_exact_prediction() {
+        let o = [1.0, 2.0, 3.0];
+        assert_eq!(r_squared(&o, &o), 1.0);
+        assert_eq!(rmse(&o, &o), 0.0);
+    }
+
+    #[test]
+    fn rmse_known_value() {
+        let o = [0.0, 0.0];
+        let p = [3.0, 4.0];
+        assert!((rmse(&o, &p) - (12.5f64).sqrt()).abs() < 1e-12);
+    }
+}

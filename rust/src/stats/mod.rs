@@ -1,0 +1,19 @@
+//! Regression substrate for the survey-fit pipeline (paper Fig. 1).
+//!
+//! Everything the ADC model fit needs: multi-variable ordinary least
+//! squares in log space ([`mod@ols`]), quantile utilities and lower-envelope
+//! calibration ([`mod@quantile`]), correlation metrics ([`corr`]), the
+//! two-bound piecewise power-law fit ([`piecewise`]), and bootstrap
+//! confidence intervals ([`bootstrap`]).
+
+pub mod bootstrap;
+pub mod corr;
+pub mod ols;
+pub mod piecewise;
+pub mod quantile;
+
+pub use bootstrap::bootstrap_ci;
+pub use corr::{pearson_r, r_squared, rmse};
+pub use ols::{OlsFit, ols};
+pub use piecewise::{TwoBoundFit, fit_two_bound_envelope};
+pub use quantile::{envelope_shift, quantile};

@@ -1,0 +1,201 @@
+//! Multi-variable ordinary least squares via the normal equations.
+//!
+//! The fit problems in this crate are tiny (2–4 predictors, ~700 points),
+//! so forming X'X and solving with partially-pivoted Gaussian elimination
+//! is both adequate and dependency-free.
+
+use crate::error::{Error, Result};
+
+/// Result of an OLS fit `y ≈ X·β` (X includes an intercept column).
+#[derive(Clone, Debug)]
+pub struct OlsFit {
+    /// Coefficients; `coefs[0]` is the intercept, followed by one slope per
+    /// predictor in input order.
+    pub coefs: Vec<f64>,
+    /// Residuals `y_i - ŷ_i` in input order.
+    pub residuals: Vec<f64>,
+    /// Coefficient of determination.
+    pub r2: f64,
+}
+
+impl OlsFit {
+    /// Predict for a single row of predictors (without intercept entry).
+    pub fn predict(&self, x: &[f64]) -> f64 {
+        assert_eq!(x.len() + 1, self.coefs.len());
+        self.coefs[0]
+            + x.iter()
+                .zip(&self.coefs[1..])
+                .map(|(xi, b)| xi * b)
+                .sum::<f64>()
+    }
+}
+
+/// Solve a dense linear system `A·x = b` by Gaussian elimination with
+/// partial pivoting. `a` is row-major `n x n`.
+pub fn solve_linear(mut a: Vec<Vec<f64>>, mut b: Vec<f64>) -> Result<Vec<f64>> {
+    let n = b.len();
+    for (row, cols) in a.iter().enumerate() {
+        if cols.len() != n {
+            return Err(Error::Numeric(format!(
+                "solve_linear: row {row} has {} cols, expected {n}",
+                cols.len()
+            )));
+        }
+    }
+    for col in 0..n {
+        // pivot
+        let pivot = (col..n)
+            .max_by(|&i, &j| a[i][col].abs().total_cmp(&a[j][col].abs()))
+            .unwrap();
+        if a[pivot][col].abs() < 1e-12 {
+            return Err(Error::Fit("singular system in OLS solve".into()));
+        }
+        a.swap(col, pivot);
+        b.swap(col, pivot);
+        // eliminate below
+        for row in col + 1..n {
+            let factor = a[row][col] / a[col][col];
+            if factor == 0.0 {
+                continue;
+            }
+            for k in col..n {
+                a[row][k] -= factor * a[col][k];
+            }
+            b[row] -= factor * b[col];
+        }
+    }
+    // back-substitute
+    let mut x = vec![0.0; n];
+    for row in (0..n).rev() {
+        let mut acc = b[row];
+        for k in row + 1..n {
+            acc -= a[row][k] * x[k];
+        }
+        x[row] = acc / a[row][row];
+    }
+    Ok(x)
+}
+
+/// Fit `y ≈ β0 + Σ βj·xj` by least squares.
+///
+/// `xs[i]` is the predictor row for observation `i` (all rows must share a
+/// length), `y[i]` the response. Returns an error when the system is
+/// under-determined or singular.
+pub fn ols(xs: &[Vec<f64>], y: &[f64]) -> Result<OlsFit> {
+    if xs.len() != y.len() {
+        return Err(Error::Fit(format!(
+            "ols: {} predictor rows vs {} responses",
+            xs.len(),
+            y.len()
+        )));
+    }
+    let n = xs.len();
+    let p = xs.first().map_or(0, |r| r.len()) + 1; // + intercept
+    if n < p {
+        return Err(Error::Fit(format!("ols: {n} points for {p} coefficients")));
+    }
+
+    // Normal equations: (X'X) β = X'y with X = [1 | xs].
+    let mut xtx = vec![vec![0.0; p]; p];
+    let mut xty = vec![0.0; p];
+    for (row, &yi) in xs.iter().zip(y) {
+        if row.len() + 1 != p {
+            return Err(Error::Fit("ols: ragged predictor rows".into()));
+        }
+        // augmented row [1, x0, x1, ...]
+        let aug = |j: usize| if j == 0 { 1.0 } else { row[j - 1] };
+        for i in 0..p {
+            xty[i] += aug(i) * yi;
+            for j in i..p {
+                xtx[i][j] += aug(i) * aug(j);
+            }
+        }
+    }
+    for i in 0..p {
+        for j in 0..i {
+            xtx[i][j] = xtx[j][i];
+        }
+    }
+
+    let coefs = solve_linear(xtx, xty)?;
+
+    let fit = OlsFit { coefs, residuals: Vec::new(), r2: 0.0 };
+    let residuals: Vec<f64> = xs
+        .iter()
+        .zip(y)
+        .map(|(row, &yi)| yi - fit.predict(row))
+        .collect();
+    let mean_y = y.iter().sum::<f64>() / n as f64;
+    let ss_tot: f64 = y.iter().map(|&yi| (yi - mean_y).powi(2)).sum();
+    let ss_res: f64 = residuals.iter().map(|r| r * r).sum();
+    let r2 = if ss_tot > 0.0 { 1.0 - ss_res / ss_tot } else { 1.0 };
+
+    Ok(OlsFit { residuals, r2, ..fit })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn recovers_exact_linear_relation() {
+        // y = 2 + 3a - 5b, no noise.
+        let mut rng = Rng::new(1);
+        let xs: Vec<Vec<f64>> = (0..50)
+            .map(|_| vec![rng.uniform(-10.0, 10.0), rng.uniform(-10.0, 10.0)])
+            .collect();
+        let y: Vec<f64> = xs.iter().map(|r| 2.0 + 3.0 * r[0] - 5.0 * r[1]).collect();
+        let fit = ols(&xs, &y).unwrap();
+        assert!((fit.coefs[0] - 2.0).abs() < 1e-9);
+        assert!((fit.coefs[1] - 3.0).abs() < 1e-9);
+        assert!((fit.coefs[2] + 5.0).abs() < 1e-9);
+        assert!((fit.r2 - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn noisy_fit_is_close_and_r2_below_one() {
+        let mut rng = Rng::new(2);
+        let xs: Vec<Vec<f64>> = (0..500).map(|_| vec![rng.uniform(0.0, 1.0)]).collect();
+        let y: Vec<f64> = xs
+            .iter()
+            .map(|r| 1.0 + 4.0 * r[0] + rng.normal(0.0, 0.1))
+            .collect();
+        let fit = ols(&xs, &y).unwrap();
+        assert!((fit.coefs[0] - 1.0).abs() < 0.05);
+        assert!((fit.coefs[1] - 4.0).abs() < 0.1);
+        assert!(fit.r2 > 0.9 && fit.r2 < 1.0);
+    }
+
+    #[test]
+    fn under_determined_errors() {
+        let xs = vec![vec![1.0, 2.0]];
+        let y = vec![3.0];
+        assert!(ols(&xs, &y).is_err());
+    }
+
+    #[test]
+    fn singular_errors() {
+        // Duplicate predictor column -> singular normal equations.
+        let xs: Vec<Vec<f64>> = (0..20).map(|i| vec![i as f64, i as f64]).collect();
+        let y: Vec<f64> = (0..20).map(|i| i as f64).collect();
+        assert!(ols(&xs, &y).is_err());
+    }
+
+    #[test]
+    fn predict_matches_training_points_when_exact() {
+        let xs: Vec<Vec<f64>> = (0..10).map(|i| vec![i as f64]).collect();
+        let y: Vec<f64> = (0..10).map(|i| 7.0 - 2.0 * i as f64).collect();
+        let fit = ols(&xs, &y).unwrap();
+        for (row, &yi) in xs.iter().zip(&y) {
+            assert!((fit.predict(row) - yi).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn solve_linear_identity() {
+        let a = vec![vec![1.0, 0.0], vec![0.0, 1.0]];
+        let x = solve_linear(a, vec![3.0, -4.0]).unwrap();
+        assert_eq!(x, vec![3.0, -4.0]);
+    }
+}

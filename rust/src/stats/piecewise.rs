@@ -1,0 +1,239 @@
+//! Two-bound piecewise power-law fitting (paper §II-A).
+//!
+//! ADC energy is modeled as the max of two bounds, both linear in log10
+//! space:
+//!
+//! ```text
+//! log10 E = max( a0 + a1·ENOB + a2·t,                 // minimum-energy bound
+//!                b0 + b1·ENOB + b2·t + b3·log10 f )   // tradeoff bound
+//! ```
+//!
+//! Fitting assigns every survey point to the bound that dominates at its
+//! covariates, fits each segment by OLS, and iterates to a fixed point
+//! (a 1-D EM over segment membership). Both intercepts are then shifted
+//! down to the `envelope_q` residual quantile so the fit is a *best-case*
+//! lower envelope, matching the paper's "reasonable lower-bound" intent.
+
+use crate::error::{Error, Result};
+use crate::stats::ols::ols;
+use crate::stats::quantile::envelope_shift;
+
+/// One observation for the envelope fit (all values in log10 space except
+/// `enob`).
+#[derive(Clone, Copy, Debug)]
+pub struct EnergyPoint {
+    /// Effective number of bits.
+    pub enob: f64,
+    /// log10(tech_nm / 32).
+    pub log_t: f64,
+    /// log10(per-ADC throughput, converts/s).
+    pub log_f: f64,
+    /// log10(energy per convert, pJ).
+    pub log_e: f64,
+}
+
+/// Fitted two-bound envelope.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TwoBoundFit {
+    /// Minimum-energy bound `[a0, a1, a2]` (intercept, ENOB, tech).
+    pub flat: [f64; 3],
+    /// Tradeoff bound `[b0, b1, b2, b3]` (intercept, ENOB, tech, log10 f).
+    pub trade: [f64; 4],
+    /// Number of EM iterations used.
+    pub iterations: usize,
+    /// Fraction of points assigned to the tradeoff segment at convergence.
+    pub trade_fraction: f64,
+}
+
+impl TwoBoundFit {
+    /// log10 of the minimum-energy bound at (enob, log_t).
+    pub fn log_flat(&self, enob: f64, log_t: f64) -> f64 {
+        self.flat[0] + self.flat[1] * enob + self.flat[2] * log_t
+    }
+
+    /// log10 of the tradeoff bound at (enob, log_t, log_f).
+    pub fn log_trade(&self, enob: f64, log_t: f64, log_f: f64) -> f64 {
+        self.trade[0] + self.trade[1] * enob + self.trade[2] * log_t + self.trade[3] * log_f
+    }
+
+    /// log10 of the modeled (max-of-bounds) energy.
+    pub fn log_energy(&self, enob: f64, log_t: f64, log_f: f64) -> f64 {
+        self.log_flat(enob, log_t).max(self.log_trade(enob, log_t, log_f))
+    }
+
+    /// Crossover throughput (log10 converts/s) where the two bounds meet
+    /// for a given (enob, log_t). `None` if the tradeoff slope is ~0.
+    pub fn log_crossover(&self, enob: f64, log_t: f64) -> Option<f64> {
+        if self.trade[3].abs() < 1e-9 {
+            return None;
+        }
+        Some((self.log_flat(enob, log_t) - self.trade[0]
+            - self.trade[1] * enob
+            - self.trade[2] * log_t)
+            / self.trade[3])
+    }
+}
+
+/// Fit the two-bound envelope to survey points.
+///
+/// `envelope_q` is the residual quantile both intercepts are shifted down
+/// to (0.05 ≈ best-case envelope; 0.5 ≈ central trend).
+pub fn fit_two_bound_envelope(points: &[EnergyPoint], envelope_q: f64) -> Result<TwoBoundFit> {
+    const MAX_ITERS: usize = 20;
+    const MIN_SEGMENT: usize = 8;
+    if points.len() < 2 * MIN_SEGMENT {
+        return Err(Error::Fit(format!(
+            "two-bound fit needs >= {} points, got {}",
+            2 * MIN_SEGMENT,
+            points.len()
+        )));
+    }
+
+    // Initial split at the median log-throughput.
+    let mut fs: Vec<f64> = points.iter().map(|p| p.log_f).collect();
+    fs.sort_by(|a, b| a.total_cmp(b));
+    let median_f = fs[fs.len() / 2];
+    let mut in_trade: Vec<bool> = points.iter().map(|p| p.log_f > median_f).collect();
+
+    let mut flat = [0.0; 3];
+    let mut trade = [0.0; 4];
+    let mut iterations = 0;
+
+    for iter in 0..MAX_ITERS {
+        iterations = iter + 1;
+
+        let flat_pts: Vec<&EnergyPoint> = points
+            .iter()
+            .zip(&in_trade)
+            .filter(|(_, &t)| !t)
+            .map(|(p, _)| p)
+            .collect();
+        let trade_pts: Vec<&EnergyPoint> = points
+            .iter()
+            .zip(&in_trade)
+            .filter(|(_, &t)| t)
+            .map(|(p, _)| p)
+            .collect();
+        if flat_pts.len() < MIN_SEGMENT || trade_pts.len() < MIN_SEGMENT {
+            return Err(Error::Fit(format!(
+                "two-bound fit: degenerate segments ({} flat / {} trade)",
+                flat_pts.len(),
+                trade_pts.len()
+            )));
+        }
+
+        let flat_fit = ols(
+            &flat_pts.iter().map(|p| vec![p.enob, p.log_t]).collect::<Vec<_>>(),
+            &flat_pts.iter().map(|p| p.log_e).collect::<Vec<_>>(),
+        )?;
+        let trade_fit = ols(
+            &trade_pts
+                .iter()
+                .map(|p| vec![p.enob, p.log_t, p.log_f])
+                .collect::<Vec<_>>(),
+            &trade_pts.iter().map(|p| p.log_e).collect::<Vec<_>>(),
+        )?;
+
+        flat = [flat_fit.coefs[0], flat_fit.coefs[1], flat_fit.coefs[2]];
+        trade = [
+            trade_fit.coefs[0],
+            trade_fit.coefs[1],
+            trade_fit.coefs[2],
+            trade_fit.coefs[3],
+        ];
+
+        // Reassign: a point belongs to the tradeoff segment when that bound
+        // dominates at its covariates.
+        let probe = TwoBoundFit { flat, trade, iterations, trade_fraction: 0.0 };
+        let next: Vec<bool> = points
+            .iter()
+            .map(|p| probe.log_trade(p.enob, p.log_t, p.log_f) > probe.log_flat(p.enob, p.log_t))
+            .collect();
+        if next == in_trade {
+            break;
+        }
+        in_trade = next;
+    }
+
+    // Envelope calibration: shift both intercepts so `envelope_q` of the
+    // residuals against max(bounds) fall below the model.
+    let probe = TwoBoundFit { flat, trade, iterations, trade_fraction: 0.0 };
+    let residuals: Vec<f64> = points
+        .iter()
+        .map(|p| p.log_e - probe.log_energy(p.enob, p.log_t, p.log_f))
+        .collect();
+    let shift = envelope_shift(&residuals, envelope_q);
+    flat[0] += shift;
+    trade[0] += shift;
+
+    let trade_fraction =
+        in_trade.iter().filter(|&&t| t).count() as f64 / points.len() as f64;
+    Ok(TwoBoundFit { flat, trade, iterations, trade_fraction })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    /// Generate points from known ground-truth bounds plus positive scatter.
+    fn synth(rng: &mut Rng, n: usize, flat: [f64; 3], trade: [f64; 4]) -> Vec<EnergyPoint> {
+        (0..n)
+            .map(|_| {
+                let enob = rng.uniform(3.0, 13.0);
+                let log_t = rng.uniform(-0.3, 1.0);
+                let log_f = rng.uniform(4.0, 10.0);
+                let truth = TwoBoundFit { flat, trade, iterations: 0, trade_fraction: 0.0 };
+                let log_e =
+                    truth.log_energy(enob, log_t, log_f) + rng.exponential(0.35);
+                EnergyPoint { enob, log_t, log_f, log_e }
+            })
+            .collect()
+    }
+
+    const FLAT: [f64; 3] = [-2.301, 0.25, 1.0];
+    const TRADE: [f64; 4] = [-14.301, 0.55, 1.0, 1.2];
+
+    #[test]
+    fn recovers_ground_truth_bounds() {
+        let mut rng = Rng::new(42);
+        let pts = synth(&mut rng, 2000, FLAT, TRADE);
+        let fit = fit_two_bound_envelope(&pts, 0.05).unwrap();
+        // Slopes recovered to ~10-15% despite the one-sided scatter.
+        assert!((fit.flat[1] - FLAT[1]).abs() < 0.06, "a1={}", fit.flat[1]);
+        assert!((fit.trade[3] - TRADE[3]).abs() < 0.25, "b3={}", fit.trade[3]);
+        assert!((fit.trade[1] - TRADE[1]).abs() < 0.12, "b1={}", fit.trade[1]);
+        // Envelope property: ~95% of points at/above model.
+        let below = pts
+            .iter()
+            .filter(|p| p.log_e < fit.log_energy(p.enob, p.log_t, p.log_f))
+            .count();
+        let frac = below as f64 / pts.len() as f64;
+        assert!(frac < 0.10, "below-envelope fraction {frac}");
+    }
+
+    #[test]
+    fn crossover_decreases_with_enob() {
+        let fit = TwoBoundFit { flat: FLAT, trade: TRADE, iterations: 0, trade_fraction: 0.0 };
+        let c4 = fit.log_crossover(4.0, 0.0).unwrap();
+        let c8 = fit.log_crossover(8.0, 0.0).unwrap();
+        let c12 = fit.log_crossover(12.0, 0.0).unwrap();
+        assert!(c4 > c8 && c8 > c12, "{c4} {c8} {c12}");
+        assert!((c4 - 9.0).abs() < 1e-9); // ground truth anchor
+    }
+
+    #[test]
+    fn max_of_bounds_is_continuous_at_crossover() {
+        let fit = TwoBoundFit { flat: FLAT, trade: TRADE, iterations: 0, trade_fraction: 0.0 };
+        let c = fit.log_crossover(8.0, 0.0).unwrap();
+        let below = fit.log_energy(8.0, 0.0, c - 1e-9);
+        let above = fit.log_energy(8.0, 0.0, c + 1e-9);
+        assert!((below - above).abs() < 1e-6);
+    }
+
+    #[test]
+    fn too_few_points_errors() {
+        let pts: Vec<EnergyPoint> = Vec::new();
+        assert!(fit_two_bound_envelope(&pts, 0.05).is_err());
+    }
+}

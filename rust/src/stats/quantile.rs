@@ -1,0 +1,78 @@
+//! Quantiles and lower-envelope calibration.
+//!
+//! The paper's model calibrates bounds against the survey: the energy
+//! bounds are *best-case* (lower envelope of the published-ADC cloud) and
+//! the area model is "optimistically reduced to match the lowest-area 10%
+//! of ADCs". Both are intercept shifts by a residual quantile, implemented
+//! here as [`envelope_shift`].
+
+/// Linear-interpolated quantile of `xs` at `q ∈ [0, 1]`.
+///
+/// Matches numpy's default (linear) method. Panics on empty input or
+/// out-of-range `q`.
+pub fn quantile(xs: &[f64], q: f64) -> f64 {
+    assert!(!xs.is_empty(), "quantile of empty slice");
+    assert!((0.0..=1.0).contains(&q), "quantile q={q} out of [0,1]");
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.total_cmp(b));
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let frac = pos - lo as f64;
+        sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+    }
+}
+
+/// Median (0.5 quantile).
+pub fn median(xs: &[f64]) -> f64 {
+    quantile(xs, 0.5)
+}
+
+/// Intercept shift that moves a fitted central-trend line down (or up) so
+/// that fraction `q` of the residuals lie below it.
+///
+/// Given OLS residuals `r_i = y_i - ŷ_i`, adding `envelope_shift(r, q)` to
+/// the fit's intercept makes the line pass through the `q`-quantile of the
+/// point cloud — `q = 0.05` turns a central fit into a best-case
+/// lower envelope, `q = 0.10` reproduces the paper's lowest-area-10%
+/// calibration.
+pub fn envelope_shift(residuals: &[f64], q: f64) -> f64 {
+    quantile(residuals, q)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantile_endpoints_and_median() {
+        let xs = [5.0, 1.0, 3.0, 2.0, 4.0];
+        assert_eq!(quantile(&xs, 0.0), 1.0);
+        assert_eq!(quantile(&xs, 1.0), 5.0);
+        assert_eq!(median(&xs), 3.0);
+    }
+
+    #[test]
+    fn quantile_interpolates() {
+        let xs = [0.0, 1.0];
+        assert!((quantile(&xs, 0.25) - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn envelope_shift_puts_q_fraction_below() {
+        // residuals uniform over [0, 99]
+        let residuals: Vec<f64> = (0..100).map(|i| i as f64).collect();
+        let shift = envelope_shift(&residuals, 0.1);
+        let below = residuals.iter().filter(|&&r| r < shift).count();
+        assert!((9..=10).contains(&below), "below={below}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn quantile_empty_panics() {
+        quantile(&[], 0.5);
+    }
+}

@@ -1,0 +1,203 @@
+//! CSV survey loader — drop-in support for real survey data.
+//!
+//! The paper fits against the Murmann ADC survey; users with access to it
+//! (or any other characterization set) can export a CSV and fit this
+//! crate's model to their data instead of the synthetic survey:
+//!
+//! ```text
+//! cimdse fit --survey-csv my_adcs.csv
+//! ```
+//!
+//! Expected columns (header names are matched case-insensitively, order
+//! free): `tech_nm`, `enob`, `throughput`, `energy_pj`, `area_um2`, and
+//! optionally `id`, `year`, `architecture`. Unknown columns are ignored.
+//! This parser handles quoted fields and both `\n` / `\r\n` line endings.
+
+use std::collections::HashMap;
+
+use super::{AdcArchitecture, AdcRecord, SurveyDataset};
+use crate::error::{Error, Result};
+
+/// Split one CSV line into fields, honoring double-quote escaping.
+fn split_csv_line(line: &str) -> Vec<String> {
+    let mut fields = Vec::new();
+    let mut cur = String::new();
+    let mut in_quotes = false;
+    let mut chars = line.chars().peekable();
+    while let Some(c) = chars.next() {
+        match c {
+            '"' if in_quotes && chars.peek() == Some(&'"') => {
+                cur.push('"');
+                chars.next();
+            }
+            '"' => in_quotes = !in_quotes,
+            ',' if !in_quotes => {
+                fields.push(std::mem::take(&mut cur));
+            }
+            _ => cur.push(c),
+        }
+    }
+    fields.push(cur);
+    fields
+}
+
+fn parse_architecture(s: &str) -> AdcArchitecture {
+    match s.to_lowercase().as_str() {
+        "flash" => AdcArchitecture::Flash,
+        "pipeline" | "pipelined" => AdcArchitecture::Pipeline,
+        "delta-sigma" | "sigma-delta" | "dsm" => AdcArchitecture::DeltaSigma,
+        "time-interleaved" | "ti" => AdcArchitecture::TimeInterleaved,
+        _ => AdcArchitecture::Sar,
+    }
+}
+
+/// Parse a survey CSV document.
+pub fn parse_survey_csv(text: &str) -> Result<SurveyDataset> {
+    let mut lines = text.lines().enumerate().filter(|(_, l)| !l.trim().is_empty());
+    let (_, header) = lines
+        .next()
+        .ok_or_else(|| Error::Config("survey csv: empty document".into()))?;
+    let columns: HashMap<String, usize> = split_csv_line(header)
+        .iter()
+        .enumerate()
+        .map(|(i, name)| (name.trim().to_lowercase(), i))
+        .collect();
+
+    let required = ["tech_nm", "enob", "throughput", "energy_pj", "area_um2"];
+    for name in required {
+        if !columns.contains_key(name) {
+            return Err(Error::Config(format!("survey csv: missing column `{name}`")));
+        }
+    }
+
+    let get = |fields: &[String], name: &str| -> Option<String> {
+        columns.get(name).and_then(|&i| fields.get(i)).map(|s| s.trim().to_string())
+    };
+    let get_f64 = |fields: &[String], name: &str, lineno: usize| -> Result<f64> {
+        let raw = get(fields, name)
+            .ok_or_else(|| Error::Config(format!("survey csv line {lineno}: short row")))?;
+        raw.parse().map_err(|_| {
+            Error::Config(format!("survey csv line {lineno}: bad {name} `{raw}`"))
+        })
+    };
+
+    let mut records = Vec::new();
+    for (lineno, line) in lines {
+        let fields = split_csv_line(line);
+        let record = AdcRecord {
+            id: get(&fields, "id").unwrap_or_else(|| format!("csv-{lineno}")),
+            year: get(&fields, "year")
+                .and_then(|y| y.parse().ok())
+                .unwrap_or(2023),
+            architecture: get(&fields, "architecture")
+                .map(|a| parse_architecture(&a))
+                .unwrap_or(AdcArchitecture::Sar),
+            tech_nm: get_f64(&fields, "tech_nm", lineno + 1)?,
+            enob: get_f64(&fields, "enob", lineno + 1)?,
+            throughput: get_f64(&fields, "throughput", lineno + 1)?,
+            energy_pj: get_f64(&fields, "energy_pj", lineno + 1)?,
+            area_um2: get_f64(&fields, "area_um2", lineno + 1)?,
+        };
+        for (name, v) in [
+            ("tech_nm", record.tech_nm),
+            ("enob", record.enob),
+            ("throughput", record.throughput),
+            ("energy_pj", record.energy_pj),
+            ("area_um2", record.area_um2),
+        ] {
+            if !(v > 0.0 && v.is_finite()) {
+                return Err(Error::Config(format!(
+                    "survey csv line {}: non-positive {name} ({v})",
+                    lineno + 1
+                )));
+            }
+        }
+        records.push(record);
+    }
+    if records.is_empty() {
+        return Err(Error::Config("survey csv: no data rows".into()));
+    }
+    Ok(SurveyDataset { records, seed: 0 })
+}
+
+/// Load a survey CSV from disk.
+pub fn load_survey_csv(path: &str) -> Result<SurveyDataset> {
+    parse_survey_csv(&std::fs::read_to_string(path)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::survey::generator::{SurveyConfig, generate_survey};
+
+    #[test]
+    fn roundtrips_generated_survey() {
+        let original = generate_survey(&SurveyConfig::default());
+        let parsed = parse_survey_csv(&original.to_csv()).unwrap();
+        assert_eq!(parsed.len(), original.len());
+        for (a, b) in original.records.iter().zip(&parsed.records) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.year, b.year);
+            assert_eq!(a.architecture, b.architecture);
+            assert!((a.enob - b.enob).abs() < 1e-3);
+            assert!((a.energy_pj - b.energy_pj).abs() / a.energy_pj < 1e-5);
+            assert!((a.area_um2 - b.area_um2).abs() / a.area_um2 < 1e-5);
+        }
+    }
+
+    #[test]
+    fn column_order_is_free_and_extra_columns_ignored() {
+        let doc = "enob,notes,area_um2,energy_pj,tech_nm,throughput\n\
+                   8.0,\"hello, world\",5e4,2.5,32,1e9\n";
+        let sv = parse_survey_csv(doc).unwrap();
+        assert_eq!(sv.len(), 1);
+        let r = &sv.records[0];
+        assert_eq!(r.enob, 8.0);
+        assert_eq!(r.tech_nm, 32.0);
+        assert_eq!(r.area_um2, 5e4);
+    }
+
+    #[test]
+    fn missing_required_column_errors() {
+        let doc = "enob,tech_nm,throughput,energy_pj\n8,32,1e9,2.5\n";
+        let err = parse_survey_csv(doc).unwrap_err().to_string();
+        assert!(err.contains("area_um2"), "{err}");
+    }
+
+    #[test]
+    fn bad_and_nonpositive_values_error_with_line_numbers() {
+        let doc = "tech_nm,enob,throughput,energy_pj,area_um2\n32,8,1e9,abc,5e4\n";
+        let err = parse_survey_csv(doc).unwrap_err().to_string();
+        assert!(err.contains("line 2") && err.contains("energy_pj"), "{err}");
+
+        let doc = "tech_nm,enob,throughput,energy_pj,area_um2\n32,8,-1e9,2.5,5e4\n";
+        let err = parse_survey_csv(doc).unwrap_err().to_string();
+        assert!(err.contains("non-positive"), "{err}");
+    }
+
+    #[test]
+    fn quoted_fields_with_commas_and_escapes() {
+        let fields = split_csv_line(r#"a,"b,c","d""e",f"#);
+        assert_eq!(fields, vec!["a", "b,c", "d\"e", "f"]);
+    }
+
+    #[test]
+    fn architecture_names_parse() {
+        for (s, a) in [
+            ("flash", AdcArchitecture::Flash),
+            ("Pipeline", AdcArchitecture::Pipeline),
+            ("sigma-delta", AdcArchitecture::DeltaSigma),
+            ("TI", AdcArchitecture::TimeInterleaved),
+            ("whatever", AdcArchitecture::Sar),
+        ] {
+            assert_eq!(parse_architecture(s), a);
+        }
+    }
+
+    #[test]
+    fn fitting_a_csv_survey_works_end_to_end() {
+        let sv = parse_survey_csv(&generate_survey(&SurveyConfig::default()).to_csv()).unwrap();
+        let report = crate::adc::fit_model(&sv).unwrap();
+        assert!(report.area_r_energy > report.area_r_enob);
+    }
+}

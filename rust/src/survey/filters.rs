@@ -1,0 +1,138 @@
+//! Survey presentation transforms used by Figs. 2–3.
+//!
+//! The paper, "for ease of visualization": (1) scales published ADCs to a
+//! common 32 nm node, and (3) shows only ADCs that are near
+//! Pareto-optimal. These transforms live here so the figure benches apply
+//! exactly what the paper applied.
+
+use super::AdcRecord;
+use crate::adc::coeffs::Coefficients;
+use crate::util::logspace::log10;
+
+/// Scale a record's energy and area to a target technology node using the
+/// model's tech exponents (energy ~ T^a2, area ~ T^d1 at fixed energy —
+/// the same normalization the paper applies before plotting).
+pub fn scale_to_tech(record: &AdcRecord, target_nm: f64, coefs: &Coefficients) -> AdcRecord {
+    let ratio = target_nm / record.tech_nm;
+    let energy_scale = ratio.powf(coefs.a2);
+    // Area scales directly through d1 and indirectly through energy^d3.
+    let area_scale = ratio.powf(coefs.d1) * energy_scale.powf(coefs.d3);
+    AdcRecord {
+        tech_nm: target_nm,
+        energy_pj: record.energy_pj * energy_scale,
+        area_um2: record.area_um2 * area_scale,
+        ..record.clone()
+    }
+}
+
+/// Keep records that are within `slack_decades` of the 2-D Pareto front in
+/// (throughput ↑, metric ↓) space, where the metric is extracted by `key`
+/// (energy for Fig. 2, area for Fig. 3).
+///
+/// A record is near-Pareto if no other record has >= throughput while its
+/// metric is more than `slack_decades` below (in log10).
+pub fn pareto_near_filter<K>(records: &[AdcRecord], slack_decades: f64, key: K) -> Vec<AdcRecord>
+where
+    K: Fn(&AdcRecord) -> f64,
+{
+    // Sort by throughput descending; sweep tracking the lowest metric seen
+    // among records with throughput >= current.
+    let mut order: Vec<usize> = (0..records.len()).collect();
+    order.sort_by(|&i, &j| records[j].throughput.total_cmp(&records[i].throughput));
+
+    let mut best_log_metric = f64::INFINITY;
+    let mut keep = vec![false; records.len()];
+    for &i in &order {
+        let lm = log10(key(&records[i]));
+        if lm <= best_log_metric + slack_decades {
+            keep[i] = true;
+        }
+        best_log_metric = best_log_metric.min(lm);
+    }
+    records
+        .iter()
+        .zip(keep)
+        .filter(|(_, k)| *k)
+        .map(|(r, _)| r.clone())
+        .collect()
+}
+
+/// Round ENOB to the nearest of the given bins (paper: 4b / 8b / 12b lines).
+pub fn nearest_enob_bin(enob: f64, bins: &[f64]) -> f64 {
+    assert!(!bins.is_empty());
+    *bins
+        .iter()
+        .min_by(|a, b| (enob - **a).abs().total_cmp(&(enob - **b).abs()))
+        .unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::survey::AdcArchitecture;
+
+    fn rec(throughput: f64, energy_pj: f64, area_um2: f64) -> AdcRecord {
+        AdcRecord {
+            id: "t".into(),
+            year: 2020,
+            architecture: AdcArchitecture::Sar,
+            tech_nm: 65.0,
+            enob: 8.0,
+            throughput,
+            energy_pj,
+            area_um2,
+        }
+    }
+
+    #[test]
+    fn scale_to_tech_shrinks_energy_for_smaller_node() {
+        let coefs = Coefficients::generator_truth();
+        let r = rec(1e8, 2.0, 5e4);
+        let scaled = scale_to_tech(&r, 32.0, &coefs);
+        assert!(scaled.energy_pj < r.energy_pj);
+        assert!(scaled.area_um2 < r.area_um2);
+        assert_eq!(scaled.tech_nm, 32.0);
+        // enob/throughput untouched
+        assert_eq!(scaled.enob, r.enob);
+        assert_eq!(scaled.throughput, r.throughput);
+    }
+
+    #[test]
+    fn scale_to_same_tech_is_identity() {
+        let coefs = Coefficients::generator_truth();
+        let r = rec(1e8, 2.0, 5e4);
+        let scaled = scale_to_tech(&r, 65.0, &coefs);
+        assert!((scaled.energy_pj - 2.0).abs() < 1e-12);
+        assert!((scaled.area_um2 - 5e4).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pareto_filter_keeps_front_drops_dominated() {
+        let records = vec![
+            rec(1e9, 1.0, 1.0),   // front (fastest, cheap)
+            rec(1e8, 0.5, 1.0),   // front (slower but cheaper)
+            rec(1e8, 100.0, 1.0), // dominated by far (2 decades worse)
+            rec(1e7, 0.4, 1.0),   // front
+        ];
+        let kept = pareto_near_filter(&records, 0.5, |r| r.energy_pj);
+        let ids: Vec<f64> = kept.iter().map(|r| r.energy_pj).collect();
+        assert!(ids.contains(&1.0));
+        assert!(ids.contains(&0.5));
+        assert!(ids.contains(&0.4));
+        assert!(!ids.contains(&100.0));
+    }
+
+    #[test]
+    fn zero_slack_keeps_strict_front_only() {
+        let records = vec![rec(1e9, 1.0, 1.0), rec(1e8, 2.0, 1.0), rec(1e8, 1.0, 1.0)];
+        let kept = pareto_near_filter(&records, 0.0, |r| r.energy_pj);
+        assert!(kept.iter().all(|r| r.energy_pj <= 1.0));
+    }
+
+    #[test]
+    fn enob_binning() {
+        assert_eq!(nearest_enob_bin(5.4, &[4.0, 8.0, 12.0]), 4.0);
+        assert_eq!(nearest_enob_bin(6.6, &[4.0, 8.0, 12.0]), 8.0);
+        assert_eq!(nearest_enob_bin(11.0, &[4.0, 8.0, 12.0]), 12.0);
+    }
+}

@@ -1,0 +1,135 @@
+//! Synthetic ADC survey — the published-ADC dataset substrate.
+//!
+//! The paper fits its model to the Murmann ADC Performance Survey
+//! (1997–2023, ~700 published converters). That dataset is not available
+//! here, so [`generator`] synthesizes a survey with the same *envelope
+//! structure* the paper's fit consumes: per-architecture ENOB/throughput
+//! marginals, energy scattered one-sidedly above the two-bound best-case
+//! envelope, and area scattered log-normally around the Eq. 1 power law
+//! (DESIGN.md §2 documents why this preserves the pipeline's behaviour).
+//!
+//! [`filters`] provides the Fig. 2/3 presentation transforms: scaling
+//! published points to a common 32 nm node and keeping only
+//! near-Pareto-optimal converters.
+
+pub mod csv;
+pub mod filters;
+pub mod generator;
+pub mod stats;
+
+pub use csv::{load_survey_csv, parse_survey_csv};
+pub use filters::{pareto_near_filter, scale_to_tech};
+pub use generator::{SurveyConfig, generate_survey};
+
+use crate::util::logspace::log10;
+
+/// ADC circuit architecture classes in the survey.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum AdcArchitecture {
+    /// Successive approximation — the bulk of modern low/mid-speed designs.
+    Sar,
+    /// Flash — low resolution, very high speed.
+    Flash,
+    /// Pipelined — mid/high resolution, high speed.
+    Pipeline,
+    /// Delta-sigma — high resolution, low bandwidth.
+    DeltaSigma,
+    /// Time-interleaved (SAR backends) — highest aggregate throughput.
+    TimeInterleaved,
+}
+
+impl AdcArchitecture {
+    /// All architecture classes.
+    pub const ALL: [AdcArchitecture; 5] = [
+        AdcArchitecture::Sar,
+        AdcArchitecture::Flash,
+        AdcArchitecture::Pipeline,
+        AdcArchitecture::DeltaSigma,
+        AdcArchitecture::TimeInterleaved,
+    ];
+
+    /// Short display name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            AdcArchitecture::Sar => "SAR",
+            AdcArchitecture::Flash => "flash",
+            AdcArchitecture::Pipeline => "pipeline",
+            AdcArchitecture::DeltaSigma => "delta-sigma",
+            AdcArchitecture::TimeInterleaved => "time-interleaved",
+        }
+    }
+}
+
+/// One published-ADC record (one dot in the paper's Figs. 2–3).
+#[derive(Clone, Debug)]
+pub struct AdcRecord {
+    /// Identifier (synthetic: `adc-<n>`).
+    pub id: String,
+    /// Publication year.
+    pub year: u32,
+    /// Circuit architecture class.
+    pub architecture: AdcArchitecture,
+    /// Technology node in nanometers.
+    pub tech_nm: f64,
+    /// Effective number of bits.
+    pub enob: f64,
+    /// Nyquist throughput in converts per second.
+    pub throughput: f64,
+    /// Energy per convert in picojoules.
+    pub energy_pj: f64,
+    /// Die area in square micrometers.
+    pub area_um2: f64,
+}
+
+impl AdcRecord {
+    /// log10(tech_nm / 32) — the model's normalized tech covariate.
+    pub fn log_tech_ratio(&self) -> f64 {
+        log10(self.tech_nm / 32.0)
+    }
+
+    /// Walden figure of merit in femtojoules per conversion-step.
+    pub fn walden_fom_fj(&self) -> f64 {
+        self.energy_pj * 1e3 / 2f64.powf(self.enob)
+    }
+}
+
+/// A survey dataset plus its provenance.
+#[derive(Clone, Debug)]
+pub struct SurveyDataset {
+    /// The records.
+    pub records: Vec<AdcRecord>,
+    /// RNG seed the dataset was generated from (reproducibility).
+    pub seed: u64,
+}
+
+impl SurveyDataset {
+    /// Number of records.
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    /// Whether the dataset is empty.
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// Write the dataset as CSV (one row per record).
+    pub fn to_csv(&self) -> String {
+        let mut out =
+            String::from("id,year,architecture,tech_nm,enob,throughput,energy_pj,area_um2\n");
+        for r in &self.records {
+            out.push_str(&format!(
+                "{},{},{},{},{:.3},{:.6e},{:.6e},{:.6e}\n",
+                r.id,
+                r.year,
+                r.architecture.name(),
+                r.tech_nm,
+                r.enob,
+                r.throughput,
+                r.energy_pj,
+                r.area_um2
+            ));
+        }
+        out
+    }
+}

@@ -1,0 +1,176 @@
+//! Survey analytics: the FoM-evolution views the model is built on.
+//!
+//! The paper's §II derives its trends from the survey literature
+//! (Jonsson's and Murmann's performance-evolution studies,
+//! refs 12–17 of the paper). This module reproduces those summary views over a
+//! [`SurveyDataset`]: Walden figure-of-merit evolution by year,
+//! per-architecture-class composition, and best-in-class tables — used
+//! by the `cimdse survey` subcommand and as sanity checks that the
+//! synthetic survey has realistic structure.
+
+use std::collections::BTreeMap;
+
+use crate::report::Table;
+use crate::stats::quantile::{median, quantile};
+use crate::util::logspace::log10;
+
+use super::{AdcArchitecture, SurveyDataset};
+
+/// One year-bucket of FoM evolution.
+#[derive(Clone, Copy, Debug)]
+pub struct FomTrendRow {
+    /// Bucket start year (inclusive).
+    pub year_start: u32,
+    /// Records in the bucket.
+    pub count: usize,
+    /// Median Walden FoM (fJ/conversion-step).
+    pub median_fom_fj: f64,
+    /// Best (lowest) Walden FoM in the bucket.
+    pub best_fom_fj: f64,
+}
+
+/// Walden FoM evolution in `bucket_years` buckets (paper refs 12–17: FoM
+/// improves over time as process and architectures advance).
+pub fn fom_trend(survey: &SurveyDataset, bucket_years: u32) -> Vec<FomTrendRow> {
+    assert!(bucket_years >= 1);
+    let mut buckets: BTreeMap<u32, Vec<f64>> = BTreeMap::new();
+    for r in &survey.records {
+        let bucket = r.year - (r.year - 1997) % bucket_years;
+        buckets.entry(bucket).or_default().push(r.walden_fom_fj());
+    }
+    buckets
+        .into_iter()
+        .map(|(year_start, foms)| FomTrendRow {
+            year_start,
+            count: foms.len(),
+            median_fom_fj: median(&foms),
+            best_fom_fj: foms.iter().copied().fold(f64::MAX, f64::min),
+        })
+        .collect()
+}
+
+/// Per-architecture-class composition summary.
+#[derive(Clone, Debug)]
+pub struct ClassSummary {
+    /// The class.
+    pub architecture: AdcArchitecture,
+    /// Number of records.
+    pub count: usize,
+    /// Median ENOB.
+    pub median_enob: f64,
+    /// Median throughput (converts/s).
+    pub median_throughput: f64,
+    /// 10th-percentile (best-case-ish) energy/convert (pJ).
+    pub p10_energy_pj: f64,
+}
+
+/// Summarize the survey per architecture class.
+pub fn class_summary(survey: &SurveyDataset) -> Vec<ClassSummary> {
+    AdcArchitecture::ALL
+        .iter()
+        .filter_map(|&architecture| {
+            let rs: Vec<_> = survey
+                .records
+                .iter()
+                .filter(|r| r.architecture == architecture)
+                .collect();
+            if rs.is_empty() {
+                return None;
+            }
+            let enobs: Vec<f64> = rs.iter().map(|r| r.enob).collect();
+            let thpts: Vec<f64> = rs.iter().map(|r| log10(r.throughput)).collect();
+            let energies: Vec<f64> = rs.iter().map(|r| r.energy_pj).collect();
+            Some(ClassSummary {
+                architecture,
+                count: rs.len(),
+                median_enob: median(&enobs),
+                median_throughput: 10f64.powf(median(&thpts)),
+                p10_energy_pj: quantile(&energies, 0.10),
+            })
+        })
+        .collect()
+}
+
+/// Render both views as tables (the `cimdse survey` subcommand's output).
+pub fn render_summary(survey: &SurveyDataset) -> String {
+    let mut out = String::new();
+    let mut t = Table::new(vec!["years", "n", "median FoM (fJ/step)", "best FoM"]);
+    for row in fom_trend(survey, 5) {
+        t.row(vec![
+            format!("{}-{}", row.year_start, row.year_start + 4),
+            row.count.to_string(),
+            format!("{:.1}", row.median_fom_fj),
+            format!("{:.2}", row.best_fom_fj),
+        ]);
+    }
+    out.push_str("Walden FoM evolution:\n");
+    out.push_str(&t.render());
+    out.push('\n');
+
+    let mut t = Table::new(vec!["class", "n", "median ENOB", "median thpt", "p10 E/conv (pJ)"]);
+    for s in class_summary(survey) {
+        t.row(vec![
+            s.architecture.name().to_string(),
+            s.count.to_string(),
+            format!("{:.1}", s.median_enob),
+            crate::util::units::fmt_throughput(s.median_throughput),
+            format!("{:.3}", s.p10_energy_pj),
+        ]);
+    }
+    out.push_str("architecture classes:\n");
+    out.push_str(&t.render());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::survey::generator::{SurveyConfig, generate_survey};
+
+    fn survey() -> SurveyDataset {
+        generate_survey(&SurveyConfig::default())
+    }
+
+    #[test]
+    fn fom_improves_over_time() {
+        // Newer buckets use smaller nodes -> lower median FoM (the
+        // Jonsson/Murmann evolution the survey literature documents).
+        let trend = fom_trend(&survey(), 9);
+        assert!(trend.len() >= 2);
+        let first = trend.first().unwrap();
+        let last = trend.last().unwrap();
+        assert!(
+            last.median_fom_fj < first.median_fom_fj,
+            "median FoM did not improve: {:?} -> {:?}",
+            first,
+            last
+        );
+        for row in &trend {
+            assert!(row.best_fom_fj <= row.median_fom_fj);
+            assert!(row.count > 0);
+        }
+    }
+
+    #[test]
+    fn class_profiles_match_reality() {
+        let summary = class_summary(&survey());
+        assert_eq!(summary.len(), 5);
+        let get = |a: AdcArchitecture| summary.iter().find(|s| s.architecture == a).unwrap();
+        // Flash: fast and low resolution; delta-sigma: slow and high res.
+        let flash = get(AdcArchitecture::Flash);
+        let dsm = get(AdcArchitecture::DeltaSigma);
+        assert!(flash.median_throughput > 100.0 * dsm.median_throughput);
+        assert!(dsm.median_enob > flash.median_enob + 3.0);
+        // SAR is the biggest population (as in the real survey).
+        let sar = get(AdcArchitecture::Sar);
+        assert!(summary.iter().all(|s| s.count <= sar.count));
+    }
+
+    #[test]
+    fn render_contains_both_tables() {
+        let s = render_summary(&survey());
+        assert!(s.contains("Walden FoM evolution"));
+        assert!(s.contains("architecture classes"));
+        assert!(s.contains("SAR"));
+    }
+}

@@ -1,0 +1,76 @@
+//! Log-space helpers used throughout the model (everything in the paper is
+//! fit and plotted in log10 space).
+
+/// `log10` that maps non-positive input to an error-signaling NaN-free floor.
+///
+/// The model operates on strictly positive physical quantities; a zero or
+/// negative value is a caller bug, so we debug-assert and clamp in release
+/// builds rather than propagating NaN through a whole sweep.
+pub fn log10(x: f64) -> f64 {
+    debug_assert!(x > 0.0, "log10 of non-positive value {x}");
+    x.max(f64::MIN_POSITIVE).log10()
+}
+
+/// `10^x`.
+pub fn pow10(x: f64) -> f64 {
+    10f64.powf(x)
+}
+
+/// `n` points spaced linearly over [lo, hi] inclusive.
+pub fn linspace(lo: f64, hi: f64, n: usize) -> Vec<f64> {
+    assert!(n >= 2, "linspace needs at least 2 points");
+    let step = (hi - lo) / (n - 1) as f64;
+    (0..n).map(|i| lo + step * i as f64).collect()
+}
+
+/// `n` points spaced logarithmically over [lo, hi] inclusive (lo, hi > 0).
+pub fn logspace(lo: f64, hi: f64, n: usize) -> Vec<f64> {
+    linspace(log10(lo), log10(hi), n)
+        .into_iter()
+        .map(pow10)
+        .collect()
+}
+
+/// Geometric mean of a slice of positive numbers.
+pub fn geomean(xs: &[f64]) -> f64 {
+    assert!(!xs.is_empty());
+    pow10(xs.iter().map(|&x| log10(x)).sum::<f64>() / xs.len() as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linspace_endpoints_and_count() {
+        let v = linspace(0.0, 1.0, 5);
+        assert_eq!(v.len(), 5);
+        assert_eq!(v[0], 0.0);
+        assert_eq!(v[4], 1.0);
+        assert!((v[2] - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn logspace_endpoints() {
+        let v = logspace(1e3, 1e9, 7);
+        assert_eq!(v.len(), 7);
+        assert!((v[0] - 1e3).abs() / 1e3 < 1e-12);
+        assert!((v[6] - 1e9).abs() / 1e9 < 1e-12);
+        // each step is exactly one decade
+        for w in v.windows(2) {
+            assert!((w[1] / w[0] - 10.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn geomean_of_decades() {
+        assert!((geomean(&[1.0, 100.0]) - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn log10_pow10_roundtrip() {
+        for x in [1e-12, 0.5, 1.0, 3.7e9] {
+            assert!((pow10(log10(x)) - x).abs() / x < 1e-12);
+        }
+    }
+}

@@ -1,0 +1,8 @@
+//! Small numeric / formatting substrates shared across the crate.
+
+pub mod logspace;
+pub mod rng;
+pub mod units;
+
+pub use logspace::{linspace, log10, logspace, pow10};
+pub use rng::Rng;

@@ -1,0 +1,227 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! The offline registry carries no `rand` crate, so this module implements
+//! xoshiro256++ (Blackman & Vigna) seeded through SplitMix64, plus the
+//! distributions the survey generator and property tests need. All
+//! generation in the crate is seed-deterministic so every experiment is
+//! exactly reproducible.
+
+/// xoshiro256++ PRNG with Box-Muller gaussian support.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+    spare_gauss: Option<f64>,
+}
+
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+impl Rng {
+    /// Create a generator from a 64-bit seed (SplitMix64-expanded).
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s, spare_gauss: None }
+    }
+
+    /// Next raw 64-bit output (xoshiro256++).
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[0]
+            .wrapping_add(s[3])
+            .rotate_left(23)
+            .wrapping_add(s[0]);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform f64 in [0, 1).
+    pub fn f64(&mut self) -> f64 {
+        // 53 high bits -> [0,1) with full double precision.
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f64 in [lo, hi).
+    pub fn uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.f64()
+    }
+
+    /// Uniform integer in [lo, hi) (hi exclusive). Panics if lo >= hi.
+    pub fn range(&mut self, lo: u64, hi: u64) -> u64 {
+        assert!(lo < hi, "empty range");
+        // Lemire-style rejection-free-enough for modeling use.
+        lo + self.next_u64() % (hi - lo)
+    }
+
+    /// Uniform usize in [0, n).
+    pub fn index(&mut self, n: usize) -> usize {
+        self.range(0, n as u64) as usize
+    }
+
+    /// Bernoulli draw with probability `p`.
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Standard normal via Box-Muller (with spare caching).
+    pub fn gauss(&mut self) -> f64 {
+        if let Some(g) = self.spare_gauss.take() {
+            return g;
+        }
+        loop {
+            let u = 2.0 * self.f64() - 1.0;
+            let v = 2.0 * self.f64() - 1.0;
+            let s = u * u + v * v;
+            if s > 0.0 && s < 1.0 {
+                let m = (-2.0 * s.ln() / s).sqrt();
+                self.spare_gauss = Some(v * m);
+                return u * m;
+            }
+        }
+    }
+
+    /// Normal with mean `mu`, standard deviation `sigma`.
+    pub fn normal(&mut self, mu: f64, sigma: f64) -> f64 {
+        mu + sigma * self.gauss()
+    }
+
+    /// Log10-normal multiplicative factor: `10^N(mu, sigma)` (decades).
+    pub fn log10_normal(&mut self, mu: f64, sigma: f64) -> f64 {
+        10f64.powf(self.normal(mu, sigma))
+    }
+
+    /// Exponential with the given mean.
+    pub fn exponential(&mut self, mean: f64) -> f64 {
+        -mean * (1.0 - self.f64()).ln()
+    }
+
+    /// Pick one element of a slice (uniform).
+    pub fn choice<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[self.index(items.len())]
+    }
+
+    /// Pick one element with the given (unnormalized) weights.
+    pub fn weighted_choice<'a, T>(&mut self, items: &'a [(T, f64)]) -> &'a T {
+        let total: f64 = items.iter().map(|(_, w)| w).sum();
+        let mut x = self.f64() * total;
+        for (item, w) in items {
+            x -= w;
+            if x <= 0.0 {
+                return item;
+            }
+        }
+        &items[items.len() - 1].0
+    }
+
+    /// Fisher-Yates shuffle in place.
+    pub fn shuffle<T>(&mut self, items: &mut [T]) {
+        for i in (1..items.len()).rev() {
+            let j = self.index(i + 1);
+            items.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Rng::new(7);
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn uniform_mean_is_centered() {
+        let mut r = Rng::new(11);
+        let n = 50_000;
+        let mean = (0..n).map(|_| r.uniform(2.0, 4.0)).sum::<f64>() / n as f64;
+        assert!((mean - 3.0).abs() < 0.02, "mean={mean}");
+    }
+
+    #[test]
+    fn gauss_moments() {
+        let mut r = Rng::new(13);
+        let n = 100_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.gauss()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.03, "var={var}");
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let mut r = Rng::new(17);
+        let n = 100_000;
+        let mean = (0..n).map(|_| r.exponential(0.5)).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn range_bounds_respected() {
+        let mut r = Rng::new(19);
+        for _ in 0..10_000 {
+            let x = r.range(5, 17);
+            assert!((5..17).contains(&x));
+        }
+    }
+
+    #[test]
+    fn weighted_choice_respects_weights() {
+        let mut r = Rng::new(23);
+        let items = [("a", 1.0), ("b", 9.0)];
+        let n = 20_000;
+        let b_count = (0..n)
+            .filter(|_| *r.weighted_choice(&items) == "b")
+            .count();
+        let frac = b_count as f64 / n as f64;
+        assert!((frac - 0.9).abs() < 0.02, "frac={frac}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(29);
+        let mut v: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<u32>>());
+    }
+}

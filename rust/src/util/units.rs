@@ -1,0 +1,75 @@
+//! Human-readable formatting of physical quantities used in reports.
+
+/// Format a throughput in converts/second with SI prefix (e.g. "1.3 GS/s").
+pub fn fmt_throughput(converts_per_s: f64) -> String {
+    fmt_si(converts_per_s, "S/s")
+}
+
+/// Format an energy given in picojoules with an appropriate prefix.
+pub fn fmt_energy_pj(pj: f64) -> String {
+    fmt_si(pj * 1e-12, "J")
+}
+
+/// Format an area given in square micrometers.
+pub fn fmt_area_um2(um2: f64) -> String {
+    if um2 >= 1e6 {
+        format!("{:.3} mm²", um2 / 1e6)
+    } else {
+        format!("{um2:.1} µm²")
+    }
+}
+
+/// Format a power in watts.
+pub fn fmt_power_w(w: f64) -> String {
+    fmt_si(w, "W")
+}
+
+/// Generic SI-prefixed formatter.
+pub fn fmt_si(value: f64, unit: &str) -> String {
+    const PREFIXES: &[(f64, &str)] = &[
+        (1e12, "T"),
+        (1e9, "G"),
+        (1e6, "M"),
+        (1e3, "k"),
+        (1.0, ""),
+        (1e-3, "m"),
+        (1e-6, "µ"),
+        (1e-9, "n"),
+        (1e-12, "p"),
+        (1e-15, "f"),
+    ];
+    if value == 0.0 {
+        return format!("0 {unit}");
+    }
+    let mag = value.abs();
+    for &(scale, prefix) in PREFIXES {
+        if mag >= scale {
+            return format!("{:.3} {}{}", value / scale, prefix, unit);
+        }
+    }
+    format!("{value:.3e} {unit}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn si_prefixes() {
+        assert_eq!(fmt_si(1.3e9, "S/s"), "1.300 GS/s");
+        assert_eq!(fmt_si(2.5e-12, "J"), "2.500 pJ");
+        assert_eq!(fmt_si(0.0, "W"), "0 W");
+    }
+
+    #[test]
+    fn energy_pico_input() {
+        assert_eq!(fmt_energy_pj(1.0), "1.000 pJ");
+        assert_eq!(fmt_energy_pj(1500.0), "1.500 nJ");
+    }
+
+    #[test]
+    fn area_switches_to_mm2() {
+        assert_eq!(fmt_area_um2(100.0), "100.0 µm²");
+        assert_eq!(fmt_area_um2(2.5e6), "2.500 mm²");
+    }
+}

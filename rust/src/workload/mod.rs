@@ -1,0 +1,112 @@
+//! DNN workload descriptors.
+//!
+//! Layers are described by their tensor shapes; the mapper consumes the
+//! implied weight-matrix geometry (a conv layer is an
+//! `(C·R·S) x K` matrix applied at `P·Q` output positions — the standard
+//! CiM im2col view used by ISAAC/RAELLA/CiMLoop).
+
+pub mod resnet18;
+pub mod zoo;
+
+pub use resnet18::resnet18;
+pub use zoo::{lenet, vgg16};
+
+/// One DNN layer.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Layer {
+    /// Name, e.g. "conv2_1a".
+    pub name: String,
+    /// Input channels.
+    pub c: usize,
+    /// Output channels (filters).
+    pub k: usize,
+    /// Kernel height.
+    pub r: usize,
+    /// Kernel width.
+    pub s: usize,
+    /// Output height.
+    pub p: usize,
+    /// Output width.
+    pub q: usize,
+}
+
+impl Layer {
+    /// Convolution layer.
+    pub fn conv(name: &str, c: usize, k: usize, r: usize, s: usize, p: usize, q: usize) -> Layer {
+        Layer { name: name.into(), c, k, r, s, p, q }
+    }
+
+    /// Fully-connected layer (a 1x1 conv at a single output position).
+    pub fn fc(name: &str, c_in: usize, c_out: usize) -> Layer {
+        Layer { name: name.into(), c: c_in, k: c_out, r: 1, s: 1, p: 1, q: 1 }
+    }
+
+    /// Rows of the im2col weight matrix: values contributing to one output.
+    pub fn weight_rows(&self) -> usize {
+        self.c * self.r * self.s
+    }
+
+    /// Columns of the im2col weight matrix (logical, pre-slicing).
+    pub fn weight_cols(&self) -> usize {
+        self.k
+    }
+
+    /// Output positions the matrix is applied at.
+    pub fn output_positions(&self) -> usize {
+        self.p * self.q
+    }
+
+    /// Total logical weights.
+    pub fn weights(&self) -> usize {
+        self.weight_rows() * self.k
+    }
+
+    /// Total multiply-accumulates for one inference.
+    pub fn macs(&self) -> usize {
+        self.weights() * self.output_positions()
+    }
+}
+
+/// A named sequence of layers.
+#[derive(Clone, Debug)]
+pub struct Workload {
+    /// Network name.
+    pub name: String,
+    /// Layers in execution order.
+    pub layers: Vec<Layer>,
+}
+
+impl Workload {
+    /// Total MACs over all layers.
+    pub fn total_macs(&self) -> usize {
+        self.layers.iter().map(Layer::macs).sum()
+    }
+
+    /// Find a layer by name.
+    pub fn layer(&self, name: &str) -> Option<&Layer> {
+        self.layers.iter().find(|l| l.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_geometry() {
+        let l = Layer::conv("t", 64, 128, 3, 3, 28, 28);
+        assert_eq!(l.weight_rows(), 576);
+        assert_eq!(l.weight_cols(), 128);
+        assert_eq!(l.output_positions(), 784);
+        assert_eq!(l.weights(), 576 * 128);
+        assert_eq!(l.macs(), 576 * 128 * 784);
+    }
+
+    #[test]
+    fn fc_is_single_position() {
+        let l = Layer::fc("fc", 512, 1000);
+        assert_eq!(l.weight_rows(), 512);
+        assert_eq!(l.output_positions(), 1);
+        assert_eq!(l.macs(), 512_000);
+    }
+}

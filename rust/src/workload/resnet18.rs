@@ -1,0 +1,95 @@
+//! ResNet18 layer shapes (He et al., CVPR 2016) at 224x224 input.
+//!
+//! All 21 weight layers: the 7x7 stem, sixteen 3x3 convs in eight basic
+//! blocks, three 1x1 downsample convs, and the final FC. These are the
+//! layers the paper's Fig. 4 sweeps; its "small-tensor layer" corresponds
+//! to a 1x1 downsample (few values available to sum analogically) and its
+//! "large-tensor layer" to a late-stage 3x3 conv (C·R·S = 4608).
+
+use super::{Layer, Workload};
+
+/// Build the ResNet18 workload.
+pub fn resnet18() -> Workload {
+    let mut layers = vec![Layer::conv("conv1", 3, 64, 7, 7, 112, 112)];
+
+    // conv2_x: 2 blocks @ 64ch, 56x56.
+    for b in 1..=2 {
+        layers.push(Layer::conv(&format!("conv2_{b}a"), 64, 64, 3, 3, 56, 56));
+        layers.push(Layer::conv(&format!("conv2_{b}b"), 64, 64, 3, 3, 56, 56));
+    }
+    // conv3_x: 2 blocks @ 128ch, 28x28 (first conv strides down).
+    layers.push(Layer::conv("conv3_1a", 64, 128, 3, 3, 28, 28));
+    layers.push(Layer::conv("conv3_1b", 128, 128, 3, 3, 28, 28));
+    layers.push(Layer::conv("conv3_ds", 64, 128, 1, 1, 28, 28));
+    layers.push(Layer::conv("conv3_2a", 128, 128, 3, 3, 28, 28));
+    layers.push(Layer::conv("conv3_2b", 128, 128, 3, 3, 28, 28));
+    // conv4_x: 2 blocks @ 256ch, 14x14.
+    layers.push(Layer::conv("conv4_1a", 128, 256, 3, 3, 14, 14));
+    layers.push(Layer::conv("conv4_1b", 256, 256, 3, 3, 14, 14));
+    layers.push(Layer::conv("conv4_ds", 128, 256, 1, 1, 14, 14));
+    layers.push(Layer::conv("conv4_2a", 256, 256, 3, 3, 14, 14));
+    layers.push(Layer::conv("conv4_2b", 256, 256, 3, 3, 14, 14));
+    // conv5_x: 2 blocks @ 512ch, 7x7.
+    layers.push(Layer::conv("conv5_1a", 256, 512, 3, 3, 7, 7));
+    layers.push(Layer::conv("conv5_1b", 512, 512, 3, 3, 7, 7));
+    layers.push(Layer::conv("conv5_ds", 256, 512, 1, 1, 7, 7));
+    layers.push(Layer::conv("conv5_2a", 512, 512, 3, 3, 7, 7));
+    layers.push(Layer::conv("conv5_2b", 512, 512, 3, 3, 7, 7));
+
+    layers.push(Layer::fc("fc", 512, 1000));
+
+    Workload { name: "resnet18".into(), layers }
+}
+
+/// The paper's Fig. 4 "large-tensor layer": a late 3x3 conv whose
+/// C·R·S = 4608 lets even the XL variant sum at full utilization.
+pub fn large_tensor_layer() -> Layer {
+    resnet18().layer("conv5_2a").unwrap().clone()
+}
+
+/// The paper's Fig. 4 "small-tensor layer": a 1x1 downsample conv whose
+/// C·R·S = 64 caps the analog sum below even the Small variant's limit.
+pub fn small_tensor_layer() -> Layer {
+    resnet18().layer("conv3_ds").unwrap().clone()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn has_21_weight_layers() {
+        assert_eq!(resnet18().layers.len(), 21);
+    }
+
+    #[test]
+    fn total_macs_match_published_figure() {
+        // ResNet18 @224x224 is ~1.8 GMACs.
+        let macs = resnet18().total_macs();
+        assert!((1.6e9..2.0e9).contains(&(macs as f64)), "{macs}");
+    }
+
+    #[test]
+    fn stem_and_fc_shapes() {
+        let net = resnet18();
+        let conv1 = net.layer("conv1").unwrap();
+        assert_eq!(conv1.weight_rows(), 147);
+        let fc = net.layer("fc").unwrap();
+        assert_eq!(fc.weights(), 512_000);
+    }
+
+    #[test]
+    fn tensor_extremes() {
+        assert_eq!(large_tensor_layer().weight_rows(), 4608);
+        assert_eq!(small_tensor_layer().weight_rows(), 64);
+    }
+
+    #[test]
+    fn all_names_unique() {
+        let net = resnet18();
+        let mut names: Vec<&str> = net.layers.iter().map(|l| l.name.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), net.layers.len());
+    }
+}

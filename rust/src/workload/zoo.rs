@@ -1,0 +1,172 @@
+//! Additional DNN workloads beyond ResNet18, for generality studies:
+//! VGG16 (large dense convs — high utilization everywhere) and a small
+//! LeNet-style CNN (tiny tensors — the sum-size-limited regime), plus a
+//! TOML loader for user-defined workloads.
+
+use crate::config::{Value, parse_toml};
+use crate::error::{Error, Result};
+
+use super::{Layer, Workload};
+
+/// VGG16 at 224x224 (Simonyan & Zisserman, 2015): thirteen 3x3 convs and
+/// three FC layers. C·R·S ranges 27..4608 — a denser, more uniform
+/// utilization profile than ResNet18.
+pub fn vgg16() -> Workload {
+    let mut layers = vec![
+        Layer::conv("conv1_1", 3, 64, 3, 3, 224, 224),
+        Layer::conv("conv1_2", 64, 64, 3, 3, 224, 224),
+        Layer::conv("conv2_1", 64, 128, 3, 3, 112, 112),
+        Layer::conv("conv2_2", 128, 128, 3, 3, 112, 112),
+        Layer::conv("conv3_1", 128, 256, 3, 3, 56, 56),
+        Layer::conv("conv3_2", 256, 256, 3, 3, 56, 56),
+        Layer::conv("conv3_3", 256, 256, 3, 3, 56, 56),
+        Layer::conv("conv4_1", 256, 512, 3, 3, 28, 28),
+        Layer::conv("conv4_2", 512, 512, 3, 3, 28, 28),
+        Layer::conv("conv4_3", 512, 512, 3, 3, 28, 28),
+        Layer::conv("conv5_1", 512, 512, 3, 3, 14, 14),
+        Layer::conv("conv5_2", 512, 512, 3, 3, 14, 14),
+        Layer::conv("conv5_3", 512, 512, 3, 3, 14, 14),
+    ];
+    layers.push(Layer::fc("fc6", 512 * 7 * 7, 4096));
+    layers.push(Layer::fc("fc7", 4096, 4096));
+    layers.push(Layer::fc("fc8", 4096, 1000));
+    Workload { name: "vgg16".into(), layers }
+}
+
+/// A LeNet-style small CNN (28x28 input): every layer's C·R·S is below
+/// even the Small variant's sum size — the regime where the paper's
+/// small-tensor effect dominates whole-network energy.
+pub fn lenet() -> Workload {
+    Workload {
+        name: "lenet".into(),
+        layers: vec![
+            Layer::conv("conv1", 1, 6, 5, 5, 24, 24),
+            Layer::conv("conv2", 6, 16, 5, 5, 8, 8),
+            Layer::fc("fc1", 16 * 4 * 4, 120),
+            Layer::fc("fc2", 120, 84),
+            Layer::fc("fc3", 84, 10),
+        ],
+    }
+}
+
+/// Look up a built-in workload by name.
+pub fn by_name(name: &str) -> Result<Workload> {
+    match name.to_lowercase().as_str() {
+        "resnet18" => Ok(super::resnet18()),
+        "vgg16" => Ok(vgg16()),
+        "lenet" => Ok(lenet()),
+        other => Err(Error::Config(format!(
+            "unknown workload `{other}` (resnet18|vgg16|lenet)"
+        ))),
+    }
+}
+
+/// Load a workload from a TOML-subset document:
+///
+/// ```toml
+/// name = "custom"
+/// [layers.conv1]
+/// kind = "conv"    # or "fc"
+/// c = 3
+/// k = 64
+/// r = 7
+/// s = 7
+/// p = 112
+/// q = 112
+/// ```
+pub fn from_toml(text: &str) -> Result<Workload> {
+    let v = parse_toml(text)?;
+    let name = v.require_str("name")?.to_string();
+    let layers_table = match v.get("layers") {
+        Some(Value::Table(t)) => t,
+        _ => return Err(Error::Config("workload: missing [layers.*] sections".into())),
+    };
+    let mut layers = Vec::new();
+    for (lname, spec) in layers_table {
+        let kind = spec
+            .get("kind")
+            .and_then(Value::as_str)
+            .unwrap_or("conv");
+        let layer = match kind {
+            "conv" => Layer::conv(
+                lname,
+                spec.require_usize("c")?,
+                spec.require_usize("k")?,
+                spec.require_usize("r")?,
+                spec.require_usize("s")?,
+                spec.require_usize("p")?,
+                spec.require_usize("q")?,
+            ),
+            "fc" => Layer::fc(lname, spec.require_usize("c")?, spec.require_usize("k")?),
+            other => {
+                return Err(Error::Config(format!("layer {lname}: unknown kind `{other}`")));
+            }
+        };
+        layers.push(layer);
+    }
+    if layers.is_empty() {
+        return Err(Error::Config("workload: no layers".into()));
+    }
+    Ok(Workload { name, layers })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vgg16_macs_match_published() {
+        // VGG16 @224 is ~15.5 GMACs.
+        let macs = vgg16().total_macs() as f64;
+        assert!((14.5e9..16.5e9).contains(&macs), "{macs}");
+        assert_eq!(vgg16().layers.len(), 16);
+    }
+
+    #[test]
+    fn lenet_is_tiny_everywhere() {
+        // Every layer's reduction dimension fits inside a 128-value sum.
+        for l in &lenet().layers {
+            assert!(l.weight_rows() <= 400, "{}: {}", l.name, l.weight_rows());
+        }
+    }
+
+    #[test]
+    fn by_name_lookup() {
+        assert_eq!(by_name("resnet18").unwrap().layers.len(), 21);
+        assert_eq!(by_name("VGG16").unwrap().name, "vgg16");
+        assert!(by_name("alexnet").is_err());
+    }
+
+    #[test]
+    fn toml_workload_roundtrip() {
+        let doc = r#"
+name = "toy"
+[layers.conv1]
+kind = "conv"
+c = 3
+k = 8
+r = 3
+s = 3
+p = 8
+q = 8
+[layers.head]
+kind = "fc"
+c = 512
+k = 10
+"#;
+        let w = from_toml(doc).unwrap();
+        assert_eq!(w.name, "toy");
+        assert_eq!(w.layers.len(), 2);
+        let conv = w.layer("conv1").unwrap();
+        assert_eq!(conv.macs(), 3 * 8 * 9 * 64);
+        let fc = w.layer("head").unwrap();
+        assert_eq!(fc.weights(), 5120);
+    }
+
+    #[test]
+    fn toml_errors() {
+        assert!(from_toml("name = \"x\"").is_err());
+        let bad_kind = "name = \"x\"\n[layers.a]\nkind = \"pool\"\nc = 1\nk = 1";
+        assert!(from_toml(bad_kind).is_err());
+    }
+}

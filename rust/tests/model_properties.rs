@@ -1,0 +1,179 @@
+//! Property-based tests on model/mapper/rollup invariants, using the
+//! crate's own mini property-testing substrate.
+
+use cimdse::adc::{AdcModel, AdcQuery};
+use cimdse::arch::raella::{RaellaVariant, raella};
+use cimdse::energy::{AreaScope, accel_area, layer_energy};
+use cimdse::mapper::map_layer;
+use cimdse::testing::{Config, check};
+use cimdse::util::Rng;
+use cimdse::workload::Layer;
+
+fn random_query(rng: &mut Rng) -> AdcQuery {
+    AdcQuery {
+        enob: rng.uniform(1.5, 15.0),
+        total_throughput: 10f64.powf(rng.uniform(4.0, 10.5)),
+        tech_nm: rng.uniform(8.0, 500.0),
+        n_adcs: rng.range(1, 65) as u32,
+    }
+}
+
+fn random_layer(rng: &mut Rng) -> Layer {
+    Layer::conv(
+        "prop",
+        rng.range(1, 513) as usize,
+        rng.range(1, 513) as usize,
+        *rng.choice(&[1usize, 3, 5, 7]),
+        *rng.choice(&[1usize, 3, 5, 7]),
+        rng.range(1, 57) as usize,
+        rng.range(1, 57) as usize,
+    )
+}
+
+#[test]
+fn prop_metrics_always_positive_and_finite() {
+    let model = AdcModel::default();
+    check(Config::default().cases(500), |rng| {
+        let q = random_query(rng);
+        let m = model.eval(&q);
+        assert!(m.energy_pj_per_convert.is_finite() && m.energy_pj_per_convert > 0.0);
+        assert!(m.area_um2_per_adc.is_finite() && m.area_um2_per_adc > 0.0);
+        assert!(m.total_power_w.is_finite() && m.total_power_w > 0.0);
+        assert!(m.total_area_um2.is_finite() && m.total_area_um2 > 0.0);
+    });
+}
+
+#[test]
+fn prop_energy_monotone_in_enob() {
+    let model = AdcModel::default();
+    check(Config::default().cases(300), |rng| {
+        let q = random_query(rng);
+        let hi = AdcQuery { enob: q.enob + rng.uniform(0.1, 3.0), ..q };
+        assert!(
+            model.energy_pj_per_convert(&hi) > model.energy_pj_per_convert(&q),
+            "energy not increasing in ENOB at {q:?}"
+        );
+    });
+}
+
+#[test]
+fn prop_energy_monotone_in_throughput_and_tech() {
+    let model = AdcModel::default();
+    check(Config::default().cases(300).seed(1), |rng| {
+        let q = random_query(rng);
+        let faster = AdcQuery { total_throughput: q.total_throughput * 3.0, ..q };
+        assert!(model.energy_pj_per_convert(&faster) >= model.energy_pj_per_convert(&q));
+        let bigger = AdcQuery { tech_nm: q.tech_nm * 2.0, ..q };
+        assert!(model.energy_pj_per_convert(&bigger) > model.energy_pj_per_convert(&q));
+    });
+}
+
+#[test]
+fn prop_more_adcs_never_increase_per_convert_energy() {
+    let model = AdcModel::default();
+    check(Config::default().cases(300).seed(2), |rng| {
+        let q = random_query(rng);
+        let more = AdcQuery { n_adcs: q.n_adcs * 2, ..q };
+        assert!(model.energy_pj_per_convert(&more) <= model.energy_pj_per_convert(&q) * (1.0 + 1e-12));
+        // ...but total area grows (each ADC may shrink, yet count doubles
+        // and per-ADC area shrinks sublinearly: area ~ f^0.2 E^0.3).
+        assert!(model.eval(&more).total_area_um2 >= model.eval(&q).total_area_um2 * 0.999);
+    });
+}
+
+#[test]
+fn prop_area_monotone_in_energy_via_eq1() {
+    // Eq. 1 has positive exponents: at fixed tech/throughput, higher-ENOB
+    // (=> higher-energy) ADCs are larger.
+    let model = AdcModel::default();
+    check(Config::default().cases(300).seed(3), |rng| {
+        let q = random_query(rng);
+        let hi = AdcQuery { enob: (q.enob + 2.0).min(16.0), ..q };
+        assert!(model.area_um2_per_adc(&hi) > model.area_um2_per_adc(&q));
+    });
+}
+
+#[test]
+fn prop_mapping_conservation_laws() {
+    check(Config::default().cases(300).seed(4), |rng| {
+        let variant = *rng.choice(&RaellaVariant::ALL);
+        let arch = raella(variant);
+        let layer = random_layer(rng);
+        let m = map_layer(&arch, &layer).unwrap();
+
+        // Utilization in (0, 1].
+        assert!(m.utilization > 0.0 && m.utilization <= 1.0);
+        // Chunk covering: chunks * sum_size >= rows > (chunks-1) * sum_size.
+        let rows = layer.weight_rows();
+        assert!(m.row_chunks * arch.sum_size >= rows);
+        assert!((m.row_chunks - 1) * arch.sum_size < rows);
+        // Every MAC is computed: cell_reads = MACs * planes * col_slices.
+        let expect =
+            layer.macs() as f64 * arch.planes() as f64 * arch.col_slices() as f64;
+        assert!((m.counts.cell_reads - expect).abs() / expect < 1e-9);
+        // ADC converts >= one per (position, plane, column).
+        let floor = layer.output_positions() as f64
+            * arch.planes() as f64
+            * (layer.weight_cols() * arch.col_slices()) as f64;
+        assert!(m.counts.adc_converts >= floor - 1e-9);
+        // Arrays hold the weights.
+        assert!(
+            m.arrays_used * arch.array_rows * arch.array_cols
+                >= layer.weights() * arch.col_slices()
+        );
+    });
+}
+
+#[test]
+fn prop_energy_rollup_dominates_its_parts_and_scales() {
+    let model = AdcModel::default();
+    check(Config::default().cases(200).seed(5), |rng| {
+        let arch = raella(*rng.choice(&RaellaVariant::ALL));
+        let layer = random_layer(rng);
+        let e = layer_energy(&arch, &model, &layer).unwrap();
+        assert!(e.total_pj() >= e.adc_pj);
+        assert!(e.adc_fraction() > 0.0 && e.adc_fraction() < 1.0);
+
+        // Doubling output positions ~doubles every energy component.
+        let double = Layer { q: layer.q * 2, ..layer.clone() };
+        let e2 = layer_energy(&arch, &model, &double).unwrap();
+        let ratio = e2.total_pj() / e.total_pj();
+        assert!((ratio - 2.0).abs() < 1e-9, "ratio {ratio}");
+    });
+}
+
+#[test]
+fn prop_area_scope_monotone_in_arrays() {
+    let model = AdcModel::default();
+    check(Config::default().cases(200).seed(6), |rng| {
+        let arch = raella(*rng.choice(&RaellaVariant::ALL));
+        let n = 1 + rng.index(64);
+        let a1 = accel_area(&arch, &model, AreaScope::ArrayGroup { n_arrays: n });
+        let a2 = accel_area(&arch, &model, AreaScope::ArrayGroup { n_arrays: n + 1 });
+        assert!(a2.total_um2() > a1.total_um2());
+        // ADC area does not depend on array count.
+        assert_eq!(a1.adc_um2, a2.adc_um2);
+    });
+}
+
+#[test]
+fn prop_tuning_is_idempotent_and_exact() {
+    let base = AdcModel::default();
+    check(Config::default().cases(200).seed(7), |rng| {
+        let q = random_query(rng);
+        let target_e = base.energy_pj_per_convert(&q) * rng.log10_normal(0.0, 0.5);
+        let target_a = base.area_um2_per_adc(&q) * rng.log10_normal(0.0, 0.5);
+        let point = cimdse::adc::tuning::TuningPoint {
+            query: q,
+            energy_pj_per_convert: target_e,
+            area_um2: Some(target_a),
+        };
+        let tuned = base.tuned_to(&point);
+        assert!((tuned.energy_pj_per_convert(&q) - target_e).abs() / target_e < 1e-9);
+        assert!((tuned.area_um2_per_adc(&q) - target_a).abs() / target_a < 1e-9);
+        // Tuning again to the same point changes nothing.
+        let twice = tuned.tuned_to(&point);
+        assert!((twice.energy_offset_decades - tuned.energy_offset_decades).abs() < 1e-9);
+        assert!((twice.area_offset_decades - tuned.area_offset_decades).abs() < 1e-9);
+    });
+}

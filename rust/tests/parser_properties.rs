@@ -1,0 +1,147 @@
+//! Property-based round-trip tests for the config/CSV parsing substrates,
+//! using the crate's own quickcheck-style harness.
+
+use std::collections::BTreeMap;
+
+use cimdse::config::{Value, parse_json, parse_toml};
+use cimdse::survey::parse_survey_csv;
+use cimdse::survey::generator::{SurveyConfig, generate_survey};
+use cimdse::testing::{Config, check};
+use cimdse::util::Rng;
+
+/// Serialize a Value back to JSON (test-local; the crate only needs the
+/// parser at runtime).
+fn to_json(v: &Value) -> String {
+    match v {
+        Value::Null => "null".into(),
+        Value::Bool(b) => b.to_string(),
+        Value::Number(n) => {
+            if n.fract() == 0.0 && n.abs() < 1e15 {
+                format!("{}", *n as i64)
+            } else {
+                format!("{n:e}")
+            }
+        }
+        Value::String(s) => format!(
+            "\"{}\"",
+            s.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+        ),
+        Value::Array(items) => {
+            format!("[{}]", items.iter().map(to_json).collect::<Vec<_>>().join(","))
+        }
+        Value::Table(map) => format!(
+            "{{{}}}",
+            map.iter()
+                .map(|(k, v)| format!("\"{}\":{}", k.replace('"', "\\\""), to_json(v)))
+                .collect::<Vec<_>>()
+                .join(",")
+        ),
+    }
+}
+
+/// Generate a random JSON value of bounded depth.
+fn random_value(rng: &mut Rng, depth: usize) -> Value {
+    let choice = if depth == 0 { rng.index(4) } else { rng.index(6) };
+    match choice {
+        0 => Value::Null,
+        1 => Value::Bool(rng.bool(0.5)),
+        2 => Value::Number((rng.normal(0.0, 1e6) * 1000.0).round() / 1000.0),
+        3 => {
+            let len = rng.index(12);
+            let s: String = (0..len)
+                .map(|_| {
+                    let c = rng.range(32, 127) as u8 as char;
+                    c
+                })
+                .collect();
+            Value::String(s)
+        }
+        4 => {
+            let len = rng.index(5);
+            Value::Array((0..len).map(|_| random_value(rng, depth - 1)).collect())
+        }
+        _ => {
+            let len = rng.index(5);
+            let mut map = BTreeMap::new();
+            for i in 0..len {
+                map.insert(format!("k{i}"), random_value(rng, depth - 1));
+            }
+            Value::Table(map)
+        }
+    }
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    check(Config::default().cases(300), |rng| {
+        let v = random_value(rng, 3);
+        let text = to_json(&v);
+        let parsed = parse_json(&text)
+            .unwrap_or_else(|e| panic!("failed to parse {text}: {e}"));
+        assert_eq!(parsed, v, "roundtrip mismatch for {text}");
+    });
+}
+
+#[test]
+fn prop_toml_flat_roundtrip() {
+    // Tables of numbers/strings/bools survive a TOML print+parse cycle.
+    check(Config::default().cases(200).seed(5), |rng| {
+        let n = 1 + rng.index(8);
+        let mut doc = String::new();
+        let mut expect: Vec<(String, Value)> = Vec::new();
+        for i in 0..n {
+            let key = format!("key{i}");
+            let v = match rng.index(3) {
+                0 => Value::Number((rng.normal(0.0, 1e3) * 100.0).round() / 100.0),
+                1 => Value::Bool(rng.bool(0.5)),
+                _ => Value::String(format!("s{}", rng.index(1000))),
+            };
+            match &v {
+                Value::Number(x) => doc.push_str(&format!("{key} = {x}\n")),
+                Value::Bool(b) => doc.push_str(&format!("{key} = {b}\n")),
+                Value::String(s) => doc.push_str(&format!("{key} = \"{s}\"\n")),
+                _ => unreachable!(),
+            }
+            expect.push((key, v));
+        }
+        let parsed = parse_toml(&doc).unwrap();
+        for (key, v) in expect {
+            assert_eq!(parsed.get(&key), Some(&v), "key {key} in:\n{doc}");
+        }
+    });
+}
+
+#[test]
+fn prop_survey_csv_roundtrip_random_subsets() {
+    // Any subset of a generated survey round-trips through CSV.
+    let full = generate_survey(&SurveyConfig::default());
+    check(Config::default().cases(40).seed(9), |rng| {
+        let take = 1 + rng.index(50);
+        let mut subset = full.clone();
+        rng.shuffle(&mut subset.records);
+        subset.records.truncate(take);
+        let parsed = parse_survey_csv(&subset.to_csv()).unwrap();
+        assert_eq!(parsed.len(), take);
+        for (a, b) in subset.records.iter().zip(&parsed.records) {
+            assert_eq!(a.id, b.id);
+            assert!((a.energy_pj - b.energy_pj).abs() / a.energy_pj < 1e-5);
+        }
+    });
+}
+
+#[test]
+fn prop_json_parser_never_panics_on_garbage() {
+    // Fuzz-ish: arbitrary byte soup must produce Ok or Err, never a panic.
+    check(Config::default().cases(500).seed(13), |rng| {
+        let len = rng.index(64);
+        let soup: String = (0..len)
+            .map(|_| {
+                // Mix of JSON-ish characters and noise.
+                const CHARS: &[u8] = b"{}[]\",:0123456789.eE+-truefalsnl \n\t\\";
+                CHARS[rng.index(CHARS.len())] as char
+            })
+            .collect();
+        let _ = parse_json(&soup); // must not panic
+        let _ = parse_toml(&soup);
+    });
+}

@@ -1,0 +1,266 @@
+//! Integration tests over the PJRT runtime: the AOT artifacts (lowered
+//! from JAX/Pallas by `make artifacts`) must agree with the native Rust
+//! model — the contract that lets the DSE engine use either backend.
+//!
+//! These tests skip (with a notice) when `artifacts/` has not been built.
+
+use cimdse::adc::tuning::TuningPoint;
+use cimdse::adc::{AdcModel, AdcQuery, Coefficients, fit_model};
+use cimdse::dse::{NativeEvaluator, PjrtEvaluator, SweepSpec, run_sweep};
+use cimdse::runtime::{AdcModelEngine, CimMlpEngine, CrossbarEngine, Manifest};
+use cimdse::survey::generator::{SurveyConfig, generate_survey};
+use cimdse::util::Rng;
+
+fn manifest_or_skip() -> Option<Manifest> {
+    match Manifest::locate() {
+        Ok(m) => Some(m),
+        Err(e) => {
+            eprintln!("SKIP (artifacts not built): {e}");
+            None
+        }
+    }
+}
+
+fn sample_queries(n: usize, seed: u64) -> Vec<AdcQuery> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| AdcQuery {
+            enob: rng.uniform(2.0, 14.0),
+            total_throughput: 10f64.powf(rng.uniform(4.0, 10.5)),
+            tech_nm: *rng.choice(&[16.0, 22.0, 32.0, 65.0, 130.0]),
+            n_adcs: rng.range(1, 33) as u32,
+        })
+        .collect()
+}
+
+#[test]
+fn adc_artifact_matches_native_model_on_default_coefs() {
+    let Some(manifest) = manifest_or_skip() else { return };
+    let engine = AdcModelEngine::load(&manifest).unwrap();
+    let model = AdcModel::default();
+    let queries = sample_queries(1000, 7);
+
+    let native: Vec<_> = queries.iter().map(|q| model.eval(q)).collect();
+    let pjrt = engine.eval(&queries, &model.coefs).unwrap();
+
+    assert_eq!(native.len(), pjrt.len());
+    for (i, (n, p)) in native.iter().zip(&pjrt).enumerate() {
+        // Artifact computes in f32; allow f32-level relative error.
+        let rel = |a: f64, b: f64| (a - b).abs() / a.abs().max(1e-30);
+        assert!(
+            rel(n.energy_pj_per_convert, p.energy_pj_per_convert) < 1e-4,
+            "energy mismatch at {i}: {n:?} vs {p:?} ({:?})",
+            queries[i]
+        );
+        assert!(
+            rel(n.area_um2_per_adc, p.area_um2_per_adc) < 1e-4,
+            "area mismatch at {i}"
+        );
+        assert!(rel(n.total_power_w, p.total_power_w) < 1e-3, "power mismatch at {i}");
+        assert!(rel(n.total_area_um2, p.total_area_um2) < 1e-3, "total area at {i}");
+    }
+}
+
+#[test]
+fn adc_artifact_matches_fitted_and_tuned_models() {
+    let Some(manifest) = manifest_or_skip() else { return };
+    let engine = AdcModelEngine::load(&manifest).unwrap();
+
+    // Fit on the synthetic survey, then tune to a reference point: the
+    // artifact must track both through the folded coefficients.
+    let survey = generate_survey(&SurveyConfig::default());
+    let fitted = AdcModel::new(fit_model(&survey).unwrap().coefs);
+    let tuned = fitted.tuned_to(&TuningPoint {
+        query: AdcQuery { enob: 7.0, total_throughput: 1e9, tech_nm: 32.0, n_adcs: 1 },
+        energy_pj_per_convert: 2.5,
+        area_um2: Some(4.2e4),
+    });
+
+    for model in [fitted, tuned] {
+        let queries = sample_queries(300, 11);
+        let native: Vec<_> = queries.iter().map(|q| model.eval(q)).collect();
+        let pjrt = engine.eval(&queries, &model.folded_coefficients()).unwrap();
+        for (n, p) in native.iter().zip(&pjrt) {
+            let rel =
+                (n.energy_pj_per_convert - p.energy_pj_per_convert).abs() / n.energy_pj_per_convert;
+            assert!(rel < 1e-4, "{n:?} vs {p:?}");
+        }
+    }
+}
+
+#[test]
+fn pjrt_evaluator_handles_partial_batches() {
+    let Some(manifest) = manifest_or_skip() else { return };
+    let engine = AdcModelEngine::load(&manifest).unwrap();
+    let batch = engine.batch_size();
+    let model = AdcModel::default();
+
+    // 1 query, batch-1, batch, batch+1: all must round-trip exactly.
+    for n in [1usize, batch - 1, batch, batch + 1] {
+        let queries = sample_queries(n, n as u64);
+        let out = engine.eval(&queries, &model.coefs).unwrap();
+        assert_eq!(out.len(), n, "padding broke result length for n={n}");
+        let native = model.eval(&queries[n - 1]);
+        let rel = (out[n - 1].energy_pj_per_convert - native.energy_pj_per_convert).abs()
+            / native.energy_pj_per_convert;
+        assert!(rel < 1e-4);
+    }
+}
+
+#[test]
+fn sweep_backends_agree() {
+    let Some(manifest) = manifest_or_skip() else { return };
+    let model = AdcModel::default();
+    let spec = SweepSpec {
+        enobs: vec![4.0, 7.0, 12.0],
+        total_throughputs: vec![1.3e9, 1e10, 4e10],
+        tech_nms: vec![32.0, 65.0],
+        n_adcs: vec![1, 4, 16],
+    };
+    let native = run_sweep(&spec, &NativeEvaluator::new(model)).unwrap();
+    let engine = AdcModelEngine::load(&manifest).unwrap();
+    let pjrt = run_sweep(&spec, &PjrtEvaluator::new(engine, model)).unwrap();
+    assert_eq!(native.len(), pjrt.len());
+    for (a, b) in native.iter().zip(&pjrt) {
+        assert_eq!(a.query, b.query);
+        let rel = (a.metrics.energy_pj_per_convert - b.metrics.energy_pj_per_convert).abs()
+            / a.metrics.energy_pj_per_convert;
+        assert!(rel < 1e-4);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Functional CiM datapath artifacts
+// ---------------------------------------------------------------------------
+
+/// Native mirror of the crossbar kernel (bit-sliced, per-chunk ADC
+/// quantization) — the Rust-side oracle for the HLO artifact.
+fn cim_matmul_native(
+    x: &[f32],
+    w: &[f32],
+    b: usize,
+    in_dim: usize,
+    out_dim: usize,
+    n_sum: usize,
+    x_bits: u32,
+    cell_bits: u32,
+    step: f32,
+) -> Vec<f32> {
+    let full_scale = (n_sum as f32) * ((1u32 << cell_bits) - 1) as f32;
+    let w_levels = (1u32 << cell_bits) as f32;
+    let mut y = vec![0f32; b * out_dim];
+    let n_chunks = in_dim / n_sum;
+    for s in 0..x_bits {
+        for ci in 0..2u32 {
+            for row in 0..b {
+                for col in 0..out_dim {
+                    let mut acc = 0f32;
+                    for chunk in 0..n_chunks {
+                        let mut analog = 0f32;
+                        for r in chunk * n_sum..(chunk + 1) * n_sum {
+                            let xv = x[row * in_dim + r];
+                            let x_bit = ((xv / (1u32 << s) as f32).floor()) % 2.0;
+                            let wv = w[r * out_dim + col];
+                            let w_slice = if ci == 0 {
+                                wv % w_levels
+                            } else {
+                                (wv / w_levels).floor()
+                            };
+                            analog += x_bit * w_slice;
+                        }
+                        let clipped = analog.clamp(0.0, full_scale);
+                        // jnp.round is round-half-to-even; match it.
+                        acc += (clipped / step).round_ties_even() * step;
+                    }
+                    y[row * out_dim + col] +=
+                        2f32.powi((s + cell_bits * ci) as i32) * acc;
+                }
+            }
+        }
+    }
+    y
+}
+
+#[test]
+fn crossbar_artifact_matches_native_bit_sliced_matmul() {
+    let Some(manifest) = manifest_or_skip() else { return };
+    let engine = CrossbarEngine::load(&manifest).unwrap();
+    let (b, i, o) = engine.shape;
+    let mut rng = Rng::new(42);
+    let x: Vec<f32> = (0..b * i).map(|_| rng.range(0, 16) as f32).collect();
+    let w: Vec<f32> = (0..i * o).map(|_| rng.range(0, 16) as f32).collect();
+
+    for step in [1.0f32, 2.0, 6.0] {
+        let got = engine.run(&x, &w, step).unwrap();
+        let want = cim_matmul_native(&x, &w, b, i, o, engine.n_sum, 4, 2, step);
+        assert_eq!(got.len(), want.len());
+        for (g, wv) in got.iter().zip(&want) {
+            assert!((g - wv).abs() <= 1e-2 * wv.abs().max(1.0), "step={step}: {g} vs {wv}");
+        }
+    }
+}
+
+#[test]
+fn crossbar_artifact_with_unit_step_is_lossless() {
+    let Some(manifest) = manifest_or_skip() else { return };
+    let engine = CrossbarEngine::load(&manifest).unwrap();
+    let (b, i, o) = engine.shape;
+    let mut rng = Rng::new(43);
+    let x: Vec<f32> = (0..b * i).map(|_| rng.range(0, 16) as f32).collect();
+    let w: Vec<f32> = (0..i * o).map(|_| rng.range(0, 16) as f32).collect();
+    let got = engine.run(&x, &w, 1.0).unwrap();
+    // Exact integer matmul.
+    for row in 0..b {
+        for col in 0..o {
+            let exact: f32 = (0..i).map(|r| x[row * i + r] * w[r * o + col]).sum();
+            let g = got[row * o + col];
+            assert!((g - exact).abs() < 1e-1, "({row},{col}): {g} vs {exact}");
+        }
+    }
+}
+
+#[test]
+fn mlp_artifact_runs_and_padded_classes_are_zero() {
+    let Some(manifest) = manifest_or_skip() else { return };
+    let engine = CimMlpEngine::load(&manifest).unwrap();
+    let (b, i, h, o) = engine.shape;
+    let mut rng = Rng::new(44);
+    let x: Vec<f32> = (0..b * i).map(|_| rng.range(0, 16) as f32).collect();
+    let w1: Vec<f32> = (0..i * h).map(|_| rng.range(0, 16) as f32).collect();
+    let mut w2: Vec<f32> = (0..h * o).map(|_| rng.range(0, 16) as f32).collect();
+    // Zero the padded class columns (10..16).
+    for row in 0..h {
+        for col in 10..o {
+            w2[row * o + col] = 0.0;
+        }
+    }
+    let logits = engine.forward(&x, &w1, &w2, 1.0, 1.0, 0.002).unwrap();
+    assert_eq!(logits.len(), b * o);
+    assert!(logits.iter().all(|v| v.is_finite()));
+    for row in 0..b {
+        for col in 10..o {
+            assert_eq!(logits[row * o + col], 0.0, "padded class leaked at ({row},{col})");
+        }
+    }
+    // Some real logit must be non-zero.
+    assert!(logits.iter().any(|&v| v > 0.0));
+}
+
+#[test]
+fn manifest_coefs_match_rust_defaults() {
+    // The artifact's baked default coefficients are the generator truth —
+    // one contract, two languages (python/compile/coeffs.py vs
+    // adc::Coefficients::generator_truth).
+    let Some(manifest) = manifest_or_skip() else { return };
+    let defaults = manifest
+        .doc
+        .get("adc_model.default_coefs")
+        .and_then(|v| v.as_array())
+        .expect("manifest missing default_coefs");
+    let truth = Coefficients::generator_truth().to_vec();
+    assert_eq!(defaults.len(), truth.len());
+    for (i, (d, t)) in defaults.iter().zip(&truth).enumerate() {
+        let d = d.as_f64().unwrap();
+        assert!((d - t).abs() < 1e-3, "coef {i}: python {d} vs rust {t}");
+    }
+}
