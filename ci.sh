@@ -1,0 +1,24 @@
+#!/usr/bin/env bash
+# Tier-1 CI for the cimdse crate. Mirrors ROADMAP.md's verify line and
+# additionally compile-checks every bench and example target.
+#
+# Usage: ./ci.sh  (from the repo root; no network access required)
+set -euo pipefail
+cd "$(dirname "$0")/rust"
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo test -q =="
+cargo test -q
+
+echo "== bench targets compile (all-features preferred, default as fallback) =="
+# --all-features exercises the `pjrt` gate against the vendored xla API
+# shim; if that shim is ever swapped for real bindings that need system
+# libs absent from CI, fall back to the default feature set.
+cargo build --benches --all-features || cargo build --benches
+
+echo "== example targets compile =="
+cargo build --examples
+
+echo "ci.sh: all green"

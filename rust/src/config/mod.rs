@@ -103,6 +103,148 @@ impl Value {
             .and_then(Value::as_str)
             .ok_or_else(|| Error::Config(format!("missing/non-string field `{path}`")))
     }
+
+    /// Serialize to a JSON document that [`parse_json`] round-trips
+    /// losslessly (f64 `Display` prints the shortest digits that parse
+    /// back to the identical bits; tables stay sorted). Errors on
+    /// non-finite numbers, which JSON cannot represent.
+    pub fn to_json_string(&self) -> Result<String> {
+        fn escape(s: &str) -> String {
+            let mut out = String::with_capacity(s.len() + 2);
+            for c in s.chars() {
+                match c {
+                    '"' => out.push_str("\\\""),
+                    '\\' => out.push_str("\\\\"),
+                    '\n' => out.push_str("\\n"),
+                    '\t' => out.push_str("\\t"),
+                    '\r' => out.push_str("\\r"),
+                    c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+                    c => out.push(c),
+                }
+            }
+            out
+        }
+        Ok(match self {
+            Value::Null => "null".to_string(),
+            Value::Bool(b) => b.to_string(),
+            Value::Number(n) => {
+                if !n.is_finite() {
+                    return Err(Error::Config(format!(
+                        "json serialize: non-finite number {n} is not representable"
+                    )));
+                }
+                n.to_string()
+            }
+            Value::String(s) => format!("\"{}\"", escape(s)),
+            Value::Array(items) => format!(
+                "[{}]",
+                items
+                    .iter()
+                    .map(Value::to_json_string)
+                    .collect::<Result<Vec<_>>>()?
+                    .join(", ")
+            ),
+            Value::Table(map) => format!(
+                "{{{}}}",
+                map.iter()
+                    .map(|(k, v)| Ok(format!("\"{}\": {}", escape(k), v.to_json_string()?)))
+                    .collect::<Result<Vec<_>>>()?
+                    .join(", ")
+            ),
+        })
+    }
+
+    /// Serialize a table to a TOML-subset document that [`parse_toml`]
+    /// round-trips losslessly: scalar / array keys first, then one
+    /// `[dotted.section]` block per nested table (recursively).
+    ///
+    /// Errors on shapes the subset parser cannot represent: a non-table
+    /// root, `null`, non-finite numbers, tables inside arrays, nested
+    /// arrays, strings containing `"` or newlines (the parser has no
+    /// string escapes), and keys using characters outside
+    /// `[A-Za-z0-9_-]` (the parser would split on `.`/`=`/`#`).
+    pub fn to_toml_string(&self) -> Result<String> {
+        fn checked_key(k: &str) -> Result<&str> {
+            let bare = !k.is_empty()
+                && k.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-');
+            if bare {
+                Ok(k)
+            } else {
+                Err(Error::Config(format!(
+                    "toml serialize: key `{k}` is not a bare [A-Za-z0-9_-]+ key"
+                )))
+            }
+        }
+
+        fn scalar(v: &Value) -> Result<String> {
+            match v {
+                Value::Bool(b) => Ok(b.to_string()),
+                Value::Number(n) => {
+                    if !n.is_finite() {
+                        return Err(Error::Config(format!(
+                            "toml serialize: non-finite number {n} is not representable"
+                        )));
+                    }
+                    Ok(n.to_string())
+                }
+                Value::String(s) => {
+                    if s.contains('"') || s.contains('\n') {
+                        return Err(Error::Config(format!(
+                            "toml serialize: string `{s}` needs escapes the subset lacks"
+                        )));
+                    }
+                    Ok(format!("\"{s}\""))
+                }
+                Value::Array(items) => {
+                    let parts = items
+                        .iter()
+                        .map(|item| match item {
+                            Value::Array(_) | Value::Table(_) | Value::Null => {
+                                Err(Error::Config(
+                                    "toml serialize: arrays may only hold scalars".into(),
+                                ))
+                            }
+                            other => scalar(other),
+                        })
+                        .collect::<Result<Vec<_>>>()?;
+                    Ok(format!("[{}]", parts.join(", ")))
+                }
+                Value::Null => {
+                    Err(Error::Config("toml serialize: null is not representable".into()))
+                }
+                Value::Table(_) => unreachable!("tables are emitted as sections"),
+            }
+        }
+
+        fn emit(map: &BTreeMap<String, Value>, path: &[&str], out: &mut String) -> Result<()> {
+            if !path.is_empty() {
+                out.push_str(&format!("\n[{}]\n", path.join(".")));
+            }
+            // Scalars first so they land in this section, not a child's.
+            for (key, v) in map {
+                if !matches!(v, Value::Table(_)) {
+                    out.push_str(&format!("{} = {}\n", checked_key(key)?, scalar(v)?));
+                }
+            }
+            for (key, v) in map {
+                if let Value::Table(child) = v {
+                    let mut child_path: Vec<&str> = path.to_vec();
+                    child_path.push(checked_key(key)?);
+                    emit(child, &child_path, out)?;
+                }
+            }
+            Ok(())
+        }
+
+        match self {
+            Value::Table(map) => {
+                let mut out = String::new();
+                emit(map, &[], &mut out)?;
+                Ok(out)
+            }
+            _ => Err(Error::Config("toml serialize: root must be a table".into())),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -133,5 +275,77 @@ mod tests {
         let v = table(&[]);
         let err = v.require_f64("missing.key").unwrap_err().to_string();
         assert!(err.contains("missing.key"), "{err}");
+    }
+
+    #[test]
+    fn json_serialize_roundtrips() {
+        let v = table(&[
+            ("n", Value::Number(1.3e9)),
+            ("frac", Value::Number(-0.051)),
+            ("flag", Value::Bool(true)),
+            ("none", Value::Null),
+            (
+                "s",
+                Value::String("quote \" slash \\ newline \n tab \t".into()),
+            ),
+            (
+                "nested",
+                table(&[(
+                    "arr",
+                    Value::Array(vec![Value::Number(1.0), Value::String("x".into())]),
+                )]),
+            ),
+        ]);
+        let text = v.to_json_string().unwrap();
+        assert_eq!(parse_json(&text).unwrap(), v, "{text}");
+    }
+
+    #[test]
+    fn serializers_reject_non_finite_numbers() {
+        let bad = table(&[("x", Value::Number(f64::NAN))]);
+        assert!(bad.to_json_string().is_err());
+        assert!(bad.to_toml_string().is_err());
+        let inf = table(&[("x", Value::Number(f64::INFINITY))]);
+        assert!(inf.to_json_string().is_err());
+        assert!(inf.to_toml_string().is_err());
+    }
+
+    #[test]
+    fn toml_serialize_rejects_non_bare_keys() {
+        for key in ["a.b", "a=b", "a#b", "a b", "", "a[0]"] {
+            let v = table(&[(key, Value::Number(1.0))]);
+            assert!(v.to_toml_string().is_err(), "key `{key}` should be rejected");
+            let nested = table(&[(key, table(&[("inner", Value::Number(1.0))]))]);
+            assert!(nested.to_toml_string().is_err(), "section `{key}` should be rejected");
+        }
+    }
+
+    #[test]
+    fn toml_serialize_roundtrips_nested_sections() {
+        let v = table(&[
+            ("name", Value::String("raella-m".into())),
+            ("tech_nm", Value::Number(32.0)),
+            (
+                "array",
+                table(&[
+                    ("rows", Value::Number(512.0)),
+                    ("levels", Value::Array(vec![Value::Number(1.0), Value::Number(4.0)])),
+                    ("dims", table(&[("inner", Value::Bool(false))])),
+                ]),
+            ),
+        ]);
+        let text = v.to_toml_string().unwrap();
+        assert_eq!(parse_toml(&text).unwrap(), v, "{text}");
+    }
+
+    #[test]
+    fn toml_serialize_rejects_unrepresentable_shapes() {
+        assert!(Value::Number(1.0).to_toml_string().is_err());
+        let null_val = table(&[("x", Value::Null)]);
+        assert!(null_val.to_toml_string().is_err());
+        let nested_arr = table(&[("x", Value::Array(vec![Value::Array(vec![])]))]);
+        assert!(nested_arr.to_toml_string().is_err());
+        let bad_string = table(&[("x", Value::String("has \" quote".into()))]);
+        assert!(bad_string.to_toml_string().is_err());
     }
 }

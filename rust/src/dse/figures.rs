@@ -146,7 +146,9 @@ pub fn fig4(model: &AdcModel) -> Result<Vec<Fig4Row>> {
         ("all-layers", net.layers.clone()),
     ];
     let mut rows = Vec::new();
-    for (group, layers) in &groups {
+    // `&'static str` is Copy: bind the group name by value so it keeps its
+    // 'static lifetime instead of borrowing through the loop reference.
+    for &(group, ref layers) in &groups {
         for variant in RaellaVariant::ALL {
             let arch = raella(variant);
             let mut adc_pj = 0.0;

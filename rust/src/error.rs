@@ -1,39 +1,68 @@
 //! Crate-wide error type.
+//!
+//! Hand-rolled `Display`/`Error` impls — the offline registry carries no
+//! `thiserror`. Message formats are part of the public behaviour (tests
+//! and the CLI match on them), so keep them stable.
 
-use thiserror::Error;
+use std::fmt;
 
 /// Unified error for all cimdse subsystems.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
     /// Configuration file / CLI parse problems.
-    #[error("config error: {0}")]
     Config(String),
 
     /// A numeric routine received out-of-domain input.
-    #[error("numeric error: {0}")]
     Numeric(String),
 
     /// Regression / fitting failures (singular systems, too few points).
-    #[error("fit error: {0}")]
     Fit(String),
 
     /// A layer cannot be mapped onto the given architecture.
-    #[error("mapping error: {0}")]
     Mapping(String),
 
-    /// PJRT runtime failures (artifact missing, compile/execute errors).
-    #[error("runtime error: {0}")]
+    /// PJRT runtime failures (artifact missing, compile/execute errors,
+    /// or the backend being stubbed out without the `pjrt` feature).
     Runtime(String),
 
     /// Underlying XLA/PJRT error.
-    #[error("xla error: {0}")]
     Xla(String),
 
     /// I/O while loading artifacts or writing reports.
-    #[error(transparent)]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 }
 
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Config(msg) => write!(f, "config error: {msg}"),
+            Error::Numeric(msg) => write!(f, "numeric error: {msg}"),
+            Error::Fit(msg) => write!(f, "fit error: {msg}"),
+            Error::Mapping(msg) => write!(f, "mapping error: {msg}"),
+            Error::Runtime(msg) => write!(f, "runtime error: {msg}"),
+            Error::Xla(msg) => write!(f, "xla error: {msg}"),
+            // Transparent: the io::Error message stands on its own.
+            Error::Io(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+#[cfg(feature = "pjrt")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Xla(e.to_string())
@@ -42,3 +71,26 @@ impl From<xla::Error> for Error {
 
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_formats_are_stable() {
+        assert_eq!(Error::Config("bad key".into()).to_string(), "config error: bad key");
+        assert_eq!(
+            Error::Runtime("no artifacts".into()).to_string(),
+            "runtime error: no artifacts"
+        );
+        assert_eq!(Error::Fit("singular".into()).to_string(), "fit error: singular");
+    }
+
+    #[test]
+    fn io_errors_are_transparent_and_sourced() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let err: Error = io.into();
+        assert_eq!(err.to_string(), "gone");
+        assert!(std::error::Error::source(&err).is_some());
+    }
+}

@@ -15,8 +15,17 @@ pub fn default_workers() -> usize {
         .min(32)
 }
 
+/// Work-claim chunks per worker: enough granularity to load-balance
+/// uneven items without contending on the claim counter per item.
+const CLAIMS_PER_WORKER: usize = 4;
+
 /// Apply `f` to every item in parallel, preserving input order in the
 /// output. `workers = 1` degrades to a plain serial map (no threads).
+///
+/// Workers claim *contiguous index ranges* off one atomic counter and
+/// push each finished `(start, Vec<U>)` run into a shared buffer — one
+/// lock acquisition per chunk, not one `Mutex<Option<U>>` per element —
+/// then the runs are stitched back in input order.
 pub fn parallel_map<T, U, F>(items: &[T], workers: usize, f: F) -> Vec<U>
 where
     T: Sync,
@@ -28,27 +37,39 @@ where
         return items.iter().map(|t| f(t)).collect();
     }
 
-    let next = AtomicUsize::new(0);
-    let results: Vec<Mutex<Option<U>>> =
-        (0..items.len()).map(|_| Mutex::new(None)).collect();
+    let chunk = items
+        .len()
+        .div_ceil(workers * CLAIMS_PER_WORKER)
+        .max(1);
+    let n_chunks = items.len().div_ceil(chunk);
+
+    let next_chunk = AtomicUsize::new(0);
+    let runs: Mutex<Vec<(usize, Vec<U>)>> = Mutex::new(Vec::with_capacity(n_chunks));
 
     std::thread::scope(|scope| {
-        for _ in 0..workers.min(items.len()) {
+        for _ in 0..workers.min(n_chunks) {
             scope.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= items.len() {
+                let ci = next_chunk.fetch_add(1, Ordering::Relaxed);
+                if ci >= n_chunks {
                     break;
                 }
-                let out = f(&items[i]);
-                *results[i].lock().unwrap() = Some(out);
+                let start = ci * chunk;
+                let end = (start + chunk).min(items.len());
+                let out: Vec<U> = items[start..end].iter().map(|t| f(t)).collect();
+                runs.lock().unwrap().push((start, out));
             });
         }
     });
 
-    results
-        .into_iter()
-        .map(|m| m.into_inner().unwrap().expect("worker left a hole"))
-        .collect()
+    let mut runs = runs.into_inner().unwrap();
+    runs.sort_unstable_by_key(|&(start, _)| start);
+    debug_assert_eq!(runs.len(), n_chunks, "worker left a hole");
+    let mut out = Vec::with_capacity(items.len());
+    for (_, mut run) in runs {
+        out.append(&mut run);
+    }
+    debug_assert_eq!(out.len(), items.len());
+    out
 }
 
 /// Apply `f` to contiguous chunks of `items` in parallel (one call per
@@ -98,6 +119,36 @@ mod tests {
         let items = vec![1u64, 2, 3];
         let out = parallel_map(&items, 16, |x| x * x);
         assert_eq!(out, vec![1, 4, 9]);
+    }
+
+    #[test]
+    fn order_preserved_when_workers_exceed_len() {
+        // workers > len at several awkward sizes: chunking must neither
+        // drop nor reorder items when most claim slots go unused.
+        for len in [2usize, 3, 5, 7, 13] {
+            let items: Vec<u64> = (0..len as u64).collect();
+            let out = parallel_map(&items, len * 8, |x| x * 10 + 1);
+            assert_eq!(
+                out,
+                items.iter().map(|x| x * 10 + 1).collect::<Vec<_>>(),
+                "len={len}"
+            );
+        }
+    }
+
+    #[test]
+    fn uneven_chunk_boundaries_preserved() {
+        // Lengths chosen to leave ragged tail chunks for several worker
+        // counts.
+        for (len, workers) in [(17usize, 2usize), (100, 3), (101, 7), (1000, 13)] {
+            let items: Vec<u64> = (0..len as u64).collect();
+            let out = parallel_map(&items, workers, |x| x + 1);
+            assert_eq!(
+                out,
+                items.iter().map(|x| x + 1).collect::<Vec<_>>(),
+                "len={len} workers={workers}"
+            );
+        }
     }
 
     #[test]

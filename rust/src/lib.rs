@@ -23,7 +23,10 @@
 //!   PJRT artifact.
 //! * [`runtime`] — the PJRT bridge: loads `artifacts/*.hlo.txt` (lowered
 //!   once from JAX/Pallas by `make artifacts`) and executes them on the
-//!   CPU PJRT client; Python is never on this path.
+//!   CPU PJRT client; Python is never on this path. The real backend is
+//!   gated behind the `pjrt` cargo feature; the default build ships a
+//!   stub that keeps the API compiling and errors at runtime (see
+//!   rust/README.md).
 //! * [`exec`], [`cli`], [`config`], [`report`], [`testing`], [`util`] —
 //!   substrates (thread pool, argument parser, TOML-subset/JSON parsers,
 //!   tables/CSV/ASCII plots, property testing, RNG/log-space helpers)

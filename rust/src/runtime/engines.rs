@@ -60,8 +60,7 @@ impl AdcModelEngine {
             let params =
                 literal_f32(&flat, &[self.batch as i64, self.n_params as i64])?;
             let coefs_lit = literal_f32(&coefs_vec, &[coefs_vec.len() as i64])?;
-            let result = self.exe.run(&[params, coefs_lit])?;
-            let values = result.to_vec::<f32>()?;
+            let values = self.exe.run_f32(&[params, coefs_lit])?;
             if values.len() != self.batch * self.n_metrics {
                 return Err(Error::Runtime(format!(
                     "adc_model artifact returned {} values, expected {}",
@@ -112,8 +111,7 @@ impl CrossbarEngine {
         let x_lit = literal_f32(x, &[b as i64, i as i64])?;
         let w_lit = literal_f32(w, &[i as i64, o as i64])?;
         let step = literal_f32(&[adc_step], &[1])?;
-        let out = self.exe.run(&[x_lit, w_lit, step])?;
-        Ok(out.to_vec::<f32>()?)
+        self.exe.run_f32(&[x_lit, w_lit, step])
     }
 }
 
@@ -159,7 +157,6 @@ impl CimMlpEngine {
             literal_f32(&[step2], &[1])?,
             literal_f32(&[scale1], &[1])?,
         ];
-        let out = self.exe.run(&inputs)?;
-        Ok(out.to_vec::<f32>()?)
+        self.exe.run_f32(&inputs)
     }
 }

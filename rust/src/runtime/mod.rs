@@ -1,18 +1,42 @@
 //! PJRT runtime: load and execute the AOT-compiled HLO artifacts.
 //!
 //! `make artifacts` lowers the Layer-2 JAX graphs (which call the Layer-1
-//! Pallas kernels) to HLO *text*; this module loads that text with the
-//! `xla` crate's parser (which reassigns instruction ids — the reason
-//! text, not serialized protos, is the interchange format), compiles it
-//! on the PJRT CPU client once, and exposes typed entry points:
+//! Pallas kernels) to HLO *text*; this module loads that text, compiles
+//! it on the PJRT CPU client once, and exposes typed entry points:
 //!
 //! * [`AdcModelEngine`] — batched ADC-model evaluation for the DSE sweep.
 //! * [`CimMlpEngine`] / [`CrossbarEngine`] — the functional CiM datapath.
 //!
 //! Python never runs on this path; the Rust binary is self-contained
 //! once `artifacts/` exists.
+//!
+//! ## Backends
+//!
+//! The actual HLO compile/execute step lives behind a backend selected at
+//! build time by the `pjrt` cargo feature:
+//!
+//! * **default (feature off)** — `stub`: everything compiles, but
+//!   [`Executable::compile`] returns a typed
+//!   `Error::Runtime("... built without the `pjrt` feature ...")`, so
+//!   callers (CLI `--backend pjrt`, integration tests, benches) degrade
+//!   gracefully at runtime.
+//! * **`--features pjrt`** — `pjrt`: the real path through the `xla`
+//!   crate's PJRT CPU client (offline builds see the vendored API shim in
+//!   `vendor/xla`; swap in the real bindings to execute).
+//!
+//! [`Manifest`], [`Literal`], and the engine types are backend-independent.
 
 pub mod engines;
+
+#[cfg(feature = "pjrt")]
+mod pjrt;
+#[cfg(not(feature = "pjrt"))]
+mod stub;
+
+#[cfg(feature = "pjrt")]
+use pjrt as backend;
+#[cfg(not(feature = "pjrt"))]
+use stub as backend;
 
 pub use engines::{AdcModelEngine, CimMlpEngine, CrossbarEngine};
 
@@ -20,6 +44,9 @@ use std::path::{Path, PathBuf};
 
 use crate::config::{Value, parse_json};
 use crate::error::{Error, Result};
+
+/// Environment variable naming the artifact directory.
+pub const ARTIFACTS_ENV: &str = "CIMDSE_ARTIFACTS";
 
 /// Parsed `artifacts/manifest.json` plus the directory it lives in.
 #[derive(Clone, Debug)]
@@ -43,26 +70,53 @@ impl Manifest {
         Ok(Manifest { dir: dir.to_path_buf(), doc: parse_json(&text)? })
     }
 
-    /// Locate the artifact directory: `$CIMDSE_ARTIFACTS` or `./artifacts`
-    /// relative to the current dir or the crate root.
-    pub fn locate() -> Result<Manifest> {
-        if let Ok(dir) = std::env::var("CIMDSE_ARTIFACTS") {
-            return Manifest::load(Path::new(&dir));
+    /// The artifact directories [`Manifest::locate`] will probe, in
+    /// priority order: `$CIMDSE_ARTIFACTS`, `./artifacts` relative to the
+    /// current dir, and `artifacts` under the crate root when the binary
+    /// was built with `CARGO_MANIFEST_DIR` available (`option_env!`, so a
+    /// build without it still resolves the first two).
+    pub fn candidate_dirs() -> Vec<PathBuf> {
+        let mut candidates = Vec::new();
+        if let Ok(dir) = std::env::var(ARTIFACTS_ENV) {
+            candidates.push(PathBuf::from(dir));
         }
-        let candidates = [
-            PathBuf::from("artifacts"),
-            Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"),
-        ];
+        candidates.push(PathBuf::from("artifacts"));
+        if let Some(root) = option_env!("CARGO_MANIFEST_DIR") {
+            let dir = Path::new(root).join("artifacts");
+            if !candidates.contains(&dir) {
+                candidates.push(dir);
+            }
+        }
+        candidates
+    }
+
+    /// Locate the artifact directory.
+    ///
+    /// `$CIMDSE_ARTIFACTS`, when set, is authoritative: it is loaded
+    /// directly and a missing/unreadable manifest there fails loudly
+    /// rather than silently falling through to a stale default
+    /// directory. Otherwise the first of [`Manifest::candidate_dirs`]
+    /// holding a `manifest.json` wins, and the error message names
+    /// every candidate path tried.
+    pub fn locate() -> Result<Manifest> {
+        let candidates = Manifest::candidate_dirs();
+        if std::env::var(ARTIFACTS_ENV).is_ok() {
+            return Manifest::load(&candidates[0]);
+        }
         for dir in &candidates {
             if dir.join("manifest.json").exists() {
                 return Manifest::load(dir);
             }
         }
-        Err(Error::Runtime(
-            "artifacts/manifest.json not found; run `make artifacts` \
-             or set CIMDSE_ARTIFACTS"
-                .into(),
-        ))
+        let tried: Vec<String> = candidates
+            .iter()
+            .map(|p| p.join("manifest.json").display().to_string())
+            .collect();
+        Err(Error::Runtime(format!(
+            "artifacts/manifest.json not found (tried: {}); run `make artifacts` \
+             or set {ARTIFACTS_ENV}",
+            tried.join(", ")
+        )))
     }
 
     /// Full path of an artifact file referenced by manifest key
@@ -73,45 +127,30 @@ impl Manifest {
     }
 }
 
-/// A compiled HLO executable on the CPU PJRT client.
-pub struct Executable {
-    client: xla::PjRtClient,
-    exe: xla::PjRtLoadedExecutable,
+/// A host-side f32 literal: flat data plus shape. Backend-independent;
+/// the pjrt backend converts it into an `xla::Literal` (one memcpy) at
+/// execute time, which keeps the DSE batch-marshalling hot path cheap
+/// (EXPERIMENTS.md §Perf).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Literal {
+    data: Vec<f32>,
+    shape: Vec<i64>,
 }
 
-impl Executable {
-    /// Load HLO text from `path` and compile it.
-    pub fn compile(path: &Path) -> Result<Executable> {
-        let client = xla::PjRtClient::cpu()?;
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str()
-                .ok_or_else(|| Error::Runtime(format!("non-utf8 path {path:?}")))?,
-        )?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = client.compile(&comp)?;
-        Ok(Executable { client, exe })
+impl Literal {
+    /// The flat element buffer.
+    pub fn data(&self) -> &[f32] {
+        &self.data
     }
 
-    /// Execute with the given input literals; returns the unwrapped
-    /// 1-tuple root (aot.py lowers every graph with `return_tuple=True`).
-    pub fn run(&self, inputs: &[xla::Literal]) -> Result<xla::Literal> {
-        let result = self.exe.execute::<xla::Literal>(inputs)?;
-        let out = result[0][0].to_literal_sync()?;
-        Ok(out.to_tuple1()?)
-    }
-
-    /// The PJRT platform name (for diagnostics).
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
+    /// The literal's shape (row-major dims).
+    pub fn shape(&self) -> &[i64] {
+        &self.shape
     }
 }
 
 /// Build an f32 literal of the given shape from a flat slice.
-///
-/// Uses `create_from_shape_and_untyped_data` (one memcpy) rather than
-/// `vec1(..).reshape(..)` (copy + reshape) — this is the DSE batch
-/// marshalling hot path (EXPERIMENTS.md §Perf).
-pub fn literal_f32(data: &[f32], shape: &[i64]) -> Result<xla::Literal> {
+pub fn literal_f32(data: &[f32], shape: &[i64]) -> Result<Literal> {
     let expect: i64 = shape.iter().product();
     if expect != data.len() as i64 {
         return Err(Error::Runtime(format!(
@@ -119,15 +158,32 @@ pub fn literal_f32(data: &[f32], shape: &[i64]) -> Result<xla::Literal> {
             data.len()
         )));
     }
-    let dims: Vec<usize> = shape.iter().map(|&d| d as usize).collect();
-    let bytes = unsafe {
-        std::slice::from_raw_parts(data.as_ptr() as *const u8, std::mem::size_of_val(data))
-    };
-    Ok(xla::Literal::create_from_shape_and_untyped_data(
-        xla::ElementType::F32,
-        &dims,
-        bytes,
-    )?)
+    Ok(Literal { data: data.to_vec(), shape: shape.to_vec() })
+}
+
+/// A compiled HLO executable on the PJRT backend.
+pub struct Executable {
+    inner: backend::BackendExecutable,
+}
+
+impl Executable {
+    /// Load HLO text from `path` and compile it. Without the `pjrt`
+    /// feature this returns `Error::Runtime` and nothing is compiled.
+    pub fn compile(path: &Path) -> Result<Executable> {
+        Ok(Executable { inner: backend::compile(path)? })
+    }
+
+    /// Execute with the given input literals and return the flattened f32
+    /// output (the unwrapped 1-tuple root — aot.py lowers every graph
+    /// with `return_tuple=True`).
+    pub fn run_f32(&self, inputs: &[Literal]) -> Result<Vec<f32>> {
+        self.inner.run_f32(inputs)
+    }
+
+    /// The PJRT platform name (for diagnostics).
+    pub fn platform(&self) -> String {
+        self.inner.platform()
+    }
 }
 
 #[cfg(test)]
@@ -141,10 +197,56 @@ mod tests {
     }
 
     #[test]
+    fn literal_exposes_data_and_shape() {
+        let lit = literal_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(lit.data(), &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(lit.shape(), &[2, 2]);
+    }
+
+    #[test]
     fn manifest_missing_dir_errors_helpfully() {
         let err = Manifest::load(Path::new("/nonexistent-dir-xyz"))
             .unwrap_err()
             .to_string();
         assert!(err.contains("make artifacts"), "{err}");
+    }
+
+    #[test]
+    fn candidate_dirs_always_include_cwd_artifacts() {
+        let candidates = Manifest::candidate_dirs();
+        assert!(!candidates.is_empty());
+        assert!(
+            candidates.iter().any(|p| p == Path::new("artifacts")),
+            "{candidates:?}"
+        );
+    }
+
+    #[test]
+    fn locate_error_names_all_candidates() {
+        // With no artifacts built, locate must fail and its message must
+        // name every candidate manifest path plus the env-var escape hatch.
+        if std::env::var(ARTIFACTS_ENV).is_ok() {
+            return; // env override active: locate reports only that path
+        }
+        match Manifest::locate() {
+            Ok(_) => {} // artifacts exist in this checkout: nothing to assert
+            Err(e) => {
+                let msg = e.to_string();
+                assert!(msg.contains(ARTIFACTS_ENV), "{msg}");
+                for dir in Manifest::candidate_dirs() {
+                    let shown = dir.join("manifest.json").display().to_string();
+                    assert!(msg.contains(&shown), "missing `{shown}` in `{msg}`");
+                }
+            }
+        }
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_backend_errors_with_typed_message() {
+        let err = Executable::compile(Path::new("whatever.hlo.txt"))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("built without the `pjrt` feature"), "{err}");
     }
 }

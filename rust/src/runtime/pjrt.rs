@@ -1,0 +1,66 @@
+//! Real PJRT runtime backend (feature `pjrt`): compile HLO text with the
+//! `xla` crate's parser (which reassigns instruction ids — the reason
+//! text, not serialized protos, is the interchange format), load it on
+//! the PJRT CPU client, and execute.
+//!
+//! Offline builds compile this against the vendored API shim in
+//! `vendor/xla`; swap in the real xla bindings (same API) to execute.
+
+use std::path::Path;
+
+use crate::error::{Error, Result};
+
+use super::Literal;
+
+/// A compiled HLO executable on the CPU PJRT client.
+pub struct BackendExecutable {
+    client: xla::PjRtClient,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// Load HLO text from `path` and compile it on the CPU client.
+pub fn compile(path: &Path) -> Result<BackendExecutable> {
+    let client = xla::PjRtClient::cpu()?;
+    let proto = xla::HloModuleProto::from_text_file(
+        path.to_str()
+            .ok_or_else(|| Error::Runtime(format!("non-utf8 path {path:?}")))?,
+    )?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    let exe = client.compile(&comp)?;
+    Ok(BackendExecutable { client, exe })
+}
+
+/// Marshal a host literal into an `xla::Literal`.
+///
+/// Uses `create_from_shape_and_untyped_data` (one memcpy) rather than
+/// `vec1(..).reshape(..)` (copy + reshape) — this is the DSE batch
+/// marshalling hot path (EXPERIMENTS.md §Perf).
+fn to_xla(lit: &Literal) -> Result<xla::Literal> {
+    let dims: Vec<usize> = lit.shape().iter().map(|&d| d as usize).collect();
+    let data = lit.data();
+    let bytes = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, std::mem::size_of_val(data))
+    };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::F32,
+        &dims,
+        bytes,
+    )?)
+}
+
+impl BackendExecutable {
+    /// Execute with the given inputs; returns the unwrapped 1-tuple root
+    /// as a flat f32 vector.
+    pub fn run_f32(&self, inputs: &[Literal]) -> Result<Vec<f32>> {
+        let lits: Vec<xla::Literal> =
+            inputs.iter().map(to_xla).collect::<Result<Vec<_>>>()?;
+        let result = self.exe.execute::<xla::Literal>(&lits)?;
+        let out = result[0][0].to_literal_sync()?;
+        Ok(out.to_tuple1()?.to_vec::<f32>()?)
+    }
+
+    /// The PJRT platform name (for diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}

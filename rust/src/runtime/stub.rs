@@ -1,0 +1,41 @@
+//! Default runtime backend: a stub compiled when the `pjrt` feature is
+//! off. Keeps the whole `runtime` API surface (and everything layered on
+//! it — CLI `--backend pjrt`, `PjrtEvaluator`, the integration tests and
+//! benches) compiling with zero external dependencies; any attempt to
+//! actually compile an artifact fails at *runtime* with a typed error.
+
+use std::path::Path;
+
+use crate::error::{Error, Result};
+
+use super::Literal;
+
+fn unavailable() -> Error {
+    Error::Runtime(
+        "cimdse was built without the `pjrt` feature; the PJRT backend is a stub \
+         (rebuild with `cargo build --features pjrt`)"
+            .to_string(),
+    )
+}
+
+/// Stub executable — never successfully constructed.
+pub struct BackendExecutable {
+    _private: (),
+}
+
+/// Stub compile: always the typed runtime error.
+pub fn compile(_path: &Path) -> Result<BackendExecutable> {
+    Err(unavailable())
+}
+
+impl BackendExecutable {
+    /// Unreachable in practice (compile never succeeds); total anyway.
+    pub fn run_f32(&self, _inputs: &[Literal]) -> Result<Vec<f32>> {
+        Err(unavailable())
+    }
+
+    /// Backend name for diagnostics.
+    pub fn platform(&self) -> String {
+        "stub (built without the `pjrt` feature)".to_string()
+    }
+}

@@ -1,7 +1,9 @@
 //! Property-based round-trip tests for the config/CSV parsing substrates,
-//! using the crate's own quickcheck-style harness.
+//! using the crate's own quickcheck-style harness, plus lossless
+//! round-trips of every example spec under `configs/`.
 
 use std::collections::BTreeMap;
+use std::path::Path;
 
 use cimdse::config::{Value, parse_json, parse_toml};
 use cimdse::survey::parse_survey_csv;
@@ -126,6 +128,80 @@ fn prop_survey_csv_roundtrip_random_subsets() {
             assert_eq!(a.id, b.id);
             assert!((a.energy_pj - b.energy_pj).abs() / a.energy_pj < 1e-5);
         }
+    });
+}
+
+/// Every example spec shipped under `configs/` must parse through the
+/// config layer and re-serialize losslessly (value-identical after a
+/// second parse). This is the canary for parser/serializer drift.
+#[test]
+fn config_specs_roundtrip_losslessly() {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("configs");
+    let mut checked = 0usize;
+    for entry in std::fs::read_dir(&dir).unwrap() {
+        let path = entry.unwrap().path();
+        let text = std::fs::read_to_string(&path).unwrap();
+        match path.extension().and_then(|e| e.to_str()) {
+            Some("toml") => {
+                let v = parse_toml(&text).unwrap_or_else(|e| panic!("{path:?}: {e}"));
+                let re = v.to_toml_string().unwrap_or_else(|e| panic!("{path:?}: {e}"));
+                let v2 = parse_toml(&re).unwrap_or_else(|e| panic!("{path:?} reparse: {e}"));
+                assert_eq!(v, v2, "lossy TOML round-trip for {path:?}:\n{re}");
+                checked += 1;
+            }
+            Some("json") => {
+                let v = parse_json(&text).unwrap_or_else(|e| panic!("{path:?}: {e}"));
+                let re = v.to_json_string().unwrap_or_else(|e| panic!("{path:?}: {e}"));
+                let v2 = parse_json(&re).unwrap_or_else(|e| panic!("{path:?} reparse: {e}"));
+                assert_eq!(v, v2, "lossy JSON round-trip for {path:?}:\n{re}");
+                checked += 1;
+            }
+            _ => {}
+        }
+    }
+    assert!(checked >= 3, "only {checked} specs found under {dir:?}");
+}
+
+/// The example specs are not just parseable — they load through the typed
+/// config consumers and match the built-in presets they document.
+#[test]
+fn config_specs_load_through_typed_consumers() {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("configs");
+
+    let arch_text = std::fs::read_to_string(dir.join("raella_m.toml")).unwrap();
+    let arch = cimdse::arch::from_toml(&arch_text).unwrap();
+    let preset = cimdse::arch::raella::raella(cimdse::arch::raella::RaellaVariant::Medium);
+    assert_eq!(arch, preset);
+
+    let wl_text = std::fs::read_to_string(dir.join("lenet.toml")).unwrap();
+    let workload = cimdse::workload::zoo::from_toml(&wl_text).unwrap();
+    let builtin = cimdse::workload::zoo::lenet();
+    assert_eq!(workload.name, builtin.name);
+    assert_eq!(workload.layers, builtin.layers);
+
+    let manifest_text = std::fs::read_to_string(dir.join("manifest.example.json")).unwrap();
+    let doc = parse_json(&manifest_text).unwrap();
+    assert_eq!(doc.require_str("adc_model.file").unwrap(), "adc_model.hlo.txt");
+    assert_eq!(doc.require_usize("adc_model.batch").unwrap(), 4096);
+    assert_eq!(doc.require_usize("crossbar.n_sum").unwrap(), 128);
+    let coefs = doc.get("adc_model.default_coefs").unwrap().as_array().unwrap();
+    let truth = cimdse::adc::Coefficients::generator_truth().to_vec();
+    assert_eq!(coefs.len(), truth.len());
+    for (i, (c, t)) in coefs.iter().zip(&truth).enumerate() {
+        assert!((c.as_f64().unwrap() - t).abs() < 1e-3, "coef {i}");
+    }
+}
+
+/// The serializer matches the hand-rolled property-test serializer on
+/// random values (two independent implementations agreeing).
+#[test]
+fn prop_value_to_json_string_roundtrips() {
+    check(Config::default().cases(300).seed(21), |rng: &mut Rng| {
+        let v = random_value(rng, 3);
+        let text = v.to_json_string().unwrap();
+        let parsed =
+            parse_json(&text).unwrap_or_else(|e| panic!("failed to parse {text}: {e}"));
+        assert_eq!(parsed, v, "roundtrip mismatch for {text}");
     });
 }
 

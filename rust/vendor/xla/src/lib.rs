@@ -1,0 +1,152 @@
+//! Offline API shim for the `xla` crate (the xla-rs / PJRT bindings).
+//!
+//! The offline registry does not carry the real `xla` crate, whose build
+//! also requires `libxla_extension` at link time. This shim mirrors the
+//! API surface that `cimdse::runtime::pjrt` consumes so that
+//! `cargo build --features pjrt` type-checks from a cold checkout; every
+//! entry point returns [`Error`] at runtime. To run the real PJRT path,
+//! replace this path dependency with the actual bindings (same names,
+//! same signatures) — no cimdse code changes are required.
+
+use std::fmt;
+
+/// Error type mirroring `xla::Error` (shim: carries a message only).
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Shim result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable() -> Error {
+    Error(
+        "xla shim: the real XLA/PJRT runtime is not linked in this build \
+         (replace rust/vendor/xla with the actual xla bindings)"
+            .to_string(),
+    )
+}
+
+/// Element types of XLA literals (only F32 is used by cimdse).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    /// 32-bit IEEE float.
+    F32,
+}
+
+/// A host-side literal (shim: opaque, never constructible at runtime).
+#[derive(Debug)]
+pub struct Literal(());
+
+impl Literal {
+    /// Build a literal from a shape and raw bytes (one memcpy in the real
+    /// bindings).
+    pub fn create_from_shape_and_untyped_data(
+        _ty: ElementType,
+        _dims: &[usize],
+        _data: &[u8],
+    ) -> Result<Literal> {
+        Err(unavailable())
+    }
+
+    /// Unwrap a 1-tuple literal.
+    pub fn to_tuple1(self) -> Result<Literal> {
+        Err(unavailable())
+    }
+
+    /// Copy the literal out as a typed vector.
+    pub fn to_vec<T: Copy>(&self) -> Result<Vec<T>> {
+        Err(unavailable())
+    }
+}
+
+/// A PJRT client (shim: construction always fails).
+#[derive(Debug)]
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    /// Create the CPU PJRT client.
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable())
+    }
+
+    /// The PJRT platform name.
+    pub fn platform_name(&self) -> String {
+        "xla-shim".to_string()
+    }
+
+    /// Compile an XLA computation for this client.
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable())
+    }
+}
+
+/// A parsed HLO module proto.
+#[derive(Debug)]
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    /// Parse HLO text from a file (instruction ids are reassigned by the
+    /// real parser, which is why text is the interchange format).
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(unavailable())
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+#[derive(Debug)]
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    /// Wrap a module proto as a computation.
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+/// A device buffer returned by execution.
+#[derive(Debug)]
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    /// Copy the buffer back to a host literal.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable())
+    }
+}
+
+/// A compiled, loaded executable.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    /// Execute with the given inputs; returns per-device, per-output
+    /// buffers (cimdse uses device 0, output 0).
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _inputs: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_entry_point_errors_helpfully() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+        let err = Literal::create_from_shape_and_untyped_data(ElementType::F32, &[1], &[0; 4])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("xla shim"), "{err}");
+    }
+}
