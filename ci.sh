@@ -1,6 +1,8 @@
 #!/usr/bin/env bash
-# Tier-1 CI for the cimdse crate. Mirrors ROADMAP.md's verify line and
-# additionally compile-checks every bench and example target.
+# Tier-1 CI for the cimdse crate. Mirrors ROADMAP.md's verify line,
+# compile-checks every bench and example target, then runs the perf
+# hot-path bench in quick mode and validates its BENCH_sweep.json
+# trajectory artifact (every PR leaves a comparable perf record).
 #
 # Usage: ./ci.sh  (from the repo root; no network access required)
 set -euo pipefail
@@ -20,5 +22,14 @@ cargo build --benches --all-features || cargo build --benches
 
 echo "== example targets compile =="
 cargo build --examples
+
+echo "== perf_hotpaths (quick mode) -> BENCH_sweep.json =="
+rm -f BENCH_sweep.json
+CIMDSE_BENCH_QUICK=1 cargo bench --bench perf_hotpaths
+
+echo "== validate BENCH_sweep.json =="
+# Hard gate: a missing or malformed perf artifact fails CI.
+test -s BENCH_sweep.json || { echo "ci.sh: BENCH_sweep.json missing or empty" >&2; exit 1; }
+cargo run --quiet --release -- bench-report --path BENCH_sweep.json
 
 echo "ci.sh: all green"

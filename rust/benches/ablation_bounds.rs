@@ -14,7 +14,7 @@
 //! Run with `cargo bench --bench ablation_bounds`.
 
 use cimdse::adc::fit_model;
-use cimdse::bench_util::Bench;
+use cimdse::bench_util::{Bench, scale};
 use cimdse::report::Table;
 use cimdse::stats::ols::ols;
 use cimdse::stats::piecewise::{EnergyPoint, fit_two_bound_envelope};
@@ -103,8 +103,10 @@ fn main() {
     // --- ablation 3: area predictor across seeds ----------------------------
     let mut t = Table::new(vec!["seed", "r (ENOB)", "r (energy)", "improvement"]);
     let mut wins = 0;
-    const SEEDS: [u64; 5] = [1997, 2003, 2011, 2017, 2023];
-    for seed in SEEDS {
+    const ALL_SEEDS: [u64; 5] = [1997, 2003, 2011, 2017, 2023];
+    // CIMDSE_BENCH_QUICK: re-fit on 3 seeds instead of 5.
+    let seeds = &ALL_SEEDS[..scale(ALL_SEEDS.len(), 3)];
+    for &seed in seeds {
         let sv = generate_survey(&SurveyConfig { seed, ..SurveyConfig::default() });
         let report = fit_model(&sv).unwrap();
         if report.area_r_energy > report.area_r_enob {
@@ -118,11 +120,11 @@ fn main() {
         ]);
     }
     println!("ablation 3 — area predictor (paper §II-B, r 0.66 -> 0.75):\n{}", t.render());
-    assert_eq!(wins, SEEDS.len(), "energy predictor must win on every seed");
-    println!("ok: energy predictor beats ENOB on {wins}/{} seeds\n", SEEDS.len());
+    assert_eq!(wins, seeds.len(), "energy predictor must win on every seed");
+    println!("ok: energy predictor beats ENOB on {wins}/{} seeds\n", seeds.len());
 
     // --- timing --------------------------------------------------------------
-    let bench = Bench::default();
+    let bench = Bench::auto();
     bench.run("two-bound envelope fit (700 pts)", || {
         std::hint::black_box(fit_two_bound_envelope(&points, 0.05).unwrap());
     });

@@ -68,7 +68,8 @@ fn main() {
         get("vgg16")
     );
 
-    let bench = Bench::slow();
+    // CIMDSE_BENCH_QUICK shrinks the measurement budget.
+    let bench = Bench::auto_slow();
     bench.run("accel DSE: 320 feasible candidates x lenet", || {
         std::hint::black_box(
             run_accel_sweep(&spec, &model, &lenet(), default_workers()).unwrap(),

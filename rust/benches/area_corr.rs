@@ -6,7 +6,7 @@
 //! Run with `cargo bench --bench area_corr`.
 
 use cimdse::adc::fit::{FitReport, fit_model};
-use cimdse::bench_util::Bench;
+use cimdse::bench_util::{Bench, scale};
 use cimdse::report::Table;
 use cimdse::stats::bootstrap_ci;
 use cimdse::stats::ols::ols;
@@ -42,7 +42,8 @@ fn main() {
         .map(|r| vec![r.log_tech_ratio(), log10(r.throughput), log10(r.energy_pj)])
         .collect();
     let ys: Vec<f64> = survey.records.iter().map(|r| log10(r.area_um2)).collect();
-    let cis = bootstrap_ci(xs.len(), 300, 0.95, 7, |idx| {
+    // CIMDSE_BENCH_QUICK: fewer bootstrap resamples.
+    let cis = bootstrap_ci(xs.len(), scale(300, 80), 0.95, 7, |idx| {
         let bx: Vec<Vec<f64>> = idx.iter().map(|&i| xs[i].clone()).collect();
         let by: Vec<f64> = idx.iter().map(|&i| ys[i]).collect();
         Ok(ols(&bx, &by)?.coefs)
@@ -62,7 +63,7 @@ fn main() {
     println!("bootstrap CIs for the Eq. 1 regression:\n{}", t.render());
 
     // --- timing -------------------------------------------------------------
-    let bench = Bench::default();
+    let bench = Bench::auto();
     bench.run("area regression (700 pts, 3 predictors)", || {
         std::hint::black_box(ols(&xs, &ys).unwrap());
     });

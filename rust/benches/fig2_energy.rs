@@ -5,7 +5,7 @@
 //! Run with `cargo bench --bench fig2_energy`.
 
 use cimdse::adc::{AdcModel, fit_model};
-use cimdse::bench_util::Bench;
+use cimdse::bench_util::{Bench, scale};
 use cimdse::dse::figures;
 use cimdse::report::Table;
 use cimdse::survey::generator::{SurveyConfig, generate_survey};
@@ -13,9 +13,10 @@ use cimdse::survey::generator::{SurveyConfig, generate_survey};
 fn main() {
     let survey = generate_survey(&SurveyConfig::default());
     let model = AdcModel::new(fit_model(&survey).unwrap().coefs);
+    let line_points = scale(40, 12); // CIMDSE_BENCH_QUICK shrinks the lines
 
     // --- the figure itself -------------------------------------------------
-    let data = figures::fig2(&survey, &model, 40);
+    let data = figures::fig2(&survey, &model, line_points);
     println!(
         "{}",
         figures::render_fig23(
@@ -52,7 +53,7 @@ fn main() {
     );
 
     // --- timing -------------------------------------------------------------
-    let bench = Bench::default();
+    let bench = Bench::auto();
     bench.run("fig2: survey synthesis (700 records)", || {
         std::hint::black_box(generate_survey(&SurveyConfig::default()));
     });
@@ -60,6 +61,6 @@ fn main() {
         std::hint::black_box(fit_model(&survey).unwrap());
     });
     bench.run("fig2: figure series generation", || {
-        std::hint::black_box(figures::fig2(&survey, &model, 40));
+        std::hint::black_box(figures::fig2(&survey, &model, line_points));
     });
 }

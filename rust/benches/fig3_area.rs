@@ -4,7 +4,7 @@
 //! Run with `cargo bench --bench fig3_area`.
 
 use cimdse::adc::{AdcModel, AdcQuery, fit_model};
-use cimdse::bench_util::Bench;
+use cimdse::bench_util::{Bench, scale};
 use cimdse::dse::figures;
 use cimdse::report::Table;
 use cimdse::survey::generator::{SurveyConfig, generate_survey};
@@ -12,8 +12,9 @@ use cimdse::survey::generator::{SurveyConfig, generate_survey};
 fn main() {
     let survey = generate_survey(&SurveyConfig::default());
     let model = AdcModel::new(fit_model(&survey).unwrap().coefs);
+    let line_points = scale(40, 12); // CIMDSE_BENCH_QUICK shrinks the lines
 
-    let data = figures::fig3(&survey, &model, 40);
+    let data = figures::fig3(&survey, &model, line_points);
     println!(
         "{}",
         figures::render_fig23(
@@ -58,9 +59,9 @@ fn main() {
         area(12.0)
     );
 
-    let bench = Bench::default();
+    let bench = Bench::auto();
     bench.run("fig3: figure series generation", || {
-        std::hint::black_box(figures::fig3(&survey, &model, 40));
+        std::hint::black_box(figures::fig3(&survey, &model, line_points));
     });
     bench.run("fig3: single area query", || {
         std::hint::black_box(model.area_um2_per_adc(&AdcQuery {

@@ -42,8 +42,8 @@ fn main() {
     assert!(matches!(all[1].variant, "M" | "L"));
     println!("claim 3 ok: best two overall variants are {{{}, {}}}\n", all[0].variant, all[1].variant);
 
-    // --- timing -------------------------------------------------------------
-    let bench = Bench::default();
+    // --- timing (CIMDSE_BENCH_QUICK shrinks the budgets) --------------------
+    let bench = Bench::auto();
     let net = resnet18();
     let arch = raella(RaellaVariant::Medium);
     let layer = large_tensor_layer();

@@ -58,8 +58,8 @@ fn main() {
     assert!(opts[0] < *opts.last().unwrap(), "optimum never moved: {opts:?}");
     println!("finding 3 ok: optimal n_adcs per throughput = {opts:?}\n");
 
-    // --- timing -------------------------------------------------------------
-    let bench = Bench::default();
+    // --- timing (CIMDSE_BENCH_QUICK shrinks the budgets) --------------------
+    let bench = Bench::auto();
     bench.run("fig5: one throughput column (5 EAP cells)", || {
         std::hint::black_box(figures::fig5(&model, 2).unwrap());
     });

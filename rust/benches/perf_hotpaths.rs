@@ -1,70 +1,168 @@
 //! Bench: the whole-stack hot paths (EXPERIMENTS.md §Perf).
 //!
-//! L3 native: single-point eval, threaded sweeps, mapper, rollup.
-//! L3↔PJRT: artifact batch evaluation and marshalling overhead.
+//! L3 native: single-point eval, the three sweep tiers (serial eval,
+//! pooled eval, invariant-hoisted prepared kernel), streaming rollups,
+//! mapper, rollup. L3↔PJRT: artifact batch evaluation and marshalling
+//! overhead.
+//!
+//! Writes the machine-readable perf trajectory to `BENCH_sweep.json`
+//! (schema in `bench_util::JsonReport`; `CIMDSE_BENCH_OUT` overrides the
+//! path). `ci.sh` runs this bench in `CIMDSE_BENCH_QUICK=1` mode and
+//! fails if the artifact is missing or malformed.
 //!
 //! Run with `cargo bench --bench perf_hotpaths`.
 
 use cimdse::adc::{AdcModel, AdcQuery};
-use cimdse::bench_util::Bench;
-use cimdse::dse::{Evaluator, NativeEvaluator, SweepSpec};
-use cimdse::energy::layer_energy;
-use cimdse::exec::default_workers;
-use cimdse::mapper::map_layer;
 use cimdse::arch::raella::{RaellaVariant, raella};
+use cimdse::bench_util::{Bench, JsonReport, quick, scale};
+use cimdse::dse::{NativeEvaluator, SweepSpec, run_sweep, run_sweep_prepared, sweep_min_eap};
+use cimdse::energy::layer_energy;
+use cimdse::exec::{Pool, default_workers};
+use cimdse::mapper::map_layer;
 use cimdse::runtime::{AdcModelEngine, Manifest};
 use cimdse::workload::resnet18::large_tensor_layer;
 
 fn main() {
     let model = AdcModel::default();
-    let bench = Bench::default();
+    let bench = Bench::auto();
+    let mut report = JsonReport::new("sweep");
+    if quick() {
+        println!("(CIMDSE_BENCH_QUICK: reduced budgets and grids)\n");
+    }
+    // Spin the pool up outside the timed regions.
+    let _ = Pool::global().workers();
 
     // --- L3 native hot paths ------------------------------------------------
     let q = AdcQuery { enob: 7.0, total_throughput: 1.3e9, tech_nm: 32.0, n_adcs: 8 };
-    bench.run("adc model: single eval", || {
+    let s = bench.run("adc model: single eval", || {
         std::hint::black_box(model.eval(std::hint::black_box(&q)));
     });
+    report.case("single eval", &s, 1);
 
     let spec = SweepSpec::dense(18); // 18*18*4*6 = 7776 points
-    let queries = spec.points();
-    println!("sweep size: {} design points", queries.len());
+    let n_points = spec.len();
+    println!("sweep size: {n_points} design points");
 
     let serial = NativeEvaluator::serial(model);
-    let s = bench.run("sweep: native serial", || {
-        std::hint::black_box(serial.eval(&queries).unwrap());
+    let s_serial = bench.run("sweep dense18: eval serial", || {
+        std::hint::black_box(run_sweep(&spec, &serial).unwrap());
     });
+    report.case("dense18 eval serial", &s_serial, n_points);
+
     let threaded = NativeEvaluator::new(model);
-    let p = bench.run(
-        &format!("sweep: native {} workers", default_workers()),
+    let s_pool = bench.run(
+        &format!("sweep dense18: eval pooled ({} workers)", default_workers()),
         || {
-            std::hint::black_box(threaded.eval(&queries).unwrap());
+            std::hint::black_box(run_sweep(&spec, &threaded).unwrap());
         },
     );
-    println!(
-        "  -> native sweep throughput: serial {:.2} Mpts/s, threaded {:.2} Mpts/s ({:.1}x)",
-        queries.len() as f64 / s.median_s / 1e6,
-        queries.len() as f64 / p.median_s / 1e6,
-        s.median_s / p.median_s
-    );
+    report.case("dense18 eval pooled", &s_pool, n_points);
 
+    let s_prep = bench.run("sweep dense18: prepared serial", || {
+        std::hint::black_box(run_sweep_prepared(&spec, &model, 1).unwrap());
+    });
+    report.case("dense18 prepared serial", &s_prep, n_points);
+
+    let s_prep_pool = bench.run("sweep dense18: prepared pooled", || {
+        std::hint::black_box(run_sweep_prepared(&spec, &model, default_workers()).unwrap());
+    });
+    report.case("dense18 prepared pooled", &s_prep_pool, n_points);
+
+    let speedup_prepared = s_serial.median_s / s_prep.median_s;
+    let pool_scaling = s_prep.median_s / s_prep_pool.median_s;
+    println!(
+        "  -> dense18 throughput: eval serial {:.2} Mpts/s, prepared serial {:.2} Mpts/s \
+         ({speedup_prepared:.1}x), prepared pooled {:.2} Mpts/s ({pool_scaling:.1}x over \
+         serial on {} workers)",
+        n_points as f64 / s_serial.median_s / 1e6,
+        n_points as f64 / s_prep.median_s / 1e6,
+        n_points as f64 / s_prep_pool.median_s / 1e6,
+        default_workers(),
+    );
+    report.metric("speedup_prepared_vs_serial_dense18", speedup_prepared);
+    report.metric("pool_scaling_prepared_dense18", pool_scaling);
+    report.metric("speedup_pooled_vs_serial_eval_dense18", s_serial.median_s / s_pool.median_s);
+    // Correctness pin: the prepared kernel must be bit-identical to the
+    // eval path before any of its timings mean anything.
+    let baseline = run_sweep(&spec, &serial).unwrap();
+    let prepared_out = run_sweep_prepared(&spec, &model, 1).unwrap();
+    assert_eq!(baseline.len(), prepared_out.len());
+    for (a, b) in baseline.iter().zip(&prepared_out) {
+        assert_eq!(a.query, b.query);
+        assert_eq!(a.metrics.to_bits(), b.metrics.to_bits());
+    }
+    println!("  ok: prepared kernel bit-identical to AdcModel::eval over dense(18)");
+    // Perf ratios are recorded in BENCH_sweep.json for trend tooling, not
+    // hard-asserted: a noisy CI runner must not fail the build over them.
+    if speedup_prepared <= 1.1 {
+        println!(
+            "  WARNING: prepared kernel only {speedup_prepared:.2}x over serial eval \
+             (expected well above 1.1x; noisy machine or perf regression?)"
+        );
+    }
+
+    // dense(40) tier: 40*40*4*6 = 38,400 points.
+    let spec40 = SweepSpec::dense(40);
+    let n40 = spec40.len();
+    let s40_serial = bench.run("sweep dense40: prepared serial", || {
+        std::hint::black_box(run_sweep_prepared(&spec40, &model, 1).unwrap());
+    });
+    report.case("dense40 prepared serial", &s40_serial, n40);
+    let s40_pool = bench.run("sweep dense40: prepared pooled", || {
+        std::hint::black_box(run_sweep_prepared(&spec40, &model, default_workers()).unwrap());
+    });
+    report.case("dense40 prepared pooled", &s40_pool, n40);
+    let s40_fold = bench.run("sweep dense40: streaming min-EAP fold", || {
+        std::hint::black_box(sweep_min_eap(&spec40, &model, default_workers()).unwrap());
+    });
+    report.case("dense40 streaming fold", &s40_fold, n40);
+    report.metric("pool_scaling_prepared_dense40", s40_serial.median_s / s40_pool.median_s);
+
+    // Streaming scale demo: a grid too big to want materialized
+    // (~1.5M points full, ~0.24M quick) rolled up to its min-EAP point
+    // with only chunk-sized buffers live. One-shot timing: the point is
+    // that it completes without a query vector, not a tight median.
+    let big = SweepSpec::dense(scale(250, 100));
+    let n_big = big.len();
+    let t0 = std::time::Instant::now();
+    let best = sweep_min_eap(&big, &model, default_workers()).unwrap();
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "streaming sweep: {n_big} points -> min-EAP {} (ENOB {:.1}, {} ADCs) in {:.3} s \
+         ({:.2} Mpts/s), no materialized query vector",
+        best.metrics.energy_pj_per_convert * best.metrics.total_area_um2,
+        best.query.enob,
+        best.query.n_adcs,
+        dt,
+        n_big as f64 / dt / 1e6
+    );
+    report.metric("streaming_points", n_big as f64);
+    report.metric("streaming_elapsed_s", dt);
+    report.metric("streaming_mpts_per_s", n_big as f64 / dt / 1e6);
+
+    // --- mapper / rollup ----------------------------------------------------
     let arch = raella(RaellaVariant::Medium);
     let layer = large_tensor_layer();
-    bench.run("mapper: map_layer", || {
+    let s_map = bench.run("mapper: map_layer", || {
         std::hint::black_box(map_layer(&arch, &layer).unwrap());
     });
-    bench.run("rollup: layer_energy", || {
+    report.case("map_layer", &s_map, 1);
+    let s_roll = bench.run("rollup: layer_energy", || {
         std::hint::black_box(layer_energy(&arch, &model, &layer).unwrap());
     });
+    report.case("layer_energy", &s_roll, 1);
 
-    // --- PJRT path ------------------------------------------------------------
+    // --- PJRT path ----------------------------------------------------------
     match Manifest::locate().and_then(|m| AdcModelEngine::load(&m)) {
         Ok(engine) => {
+            let queries = spec.points();
             let batch = engine.batch_size();
             let full: Vec<AdcQuery> = queries.iter().cycle().take(batch).copied().collect();
-            let slow = Bench::slow();
+            let slow = Bench::auto_slow();
             let st = slow.run("pjrt: one full batch (batch_size pts)", || {
                 std::hint::black_box(engine.eval(&full, &model.coefs).unwrap());
             });
+            report.case("pjrt full batch", &st, batch);
             println!(
                 "  -> pjrt throughput: {:.2} Mpts/s",
                 batch as f64 / st.median_s / 1e6
@@ -81,4 +179,7 @@ fn main() {
         }
         Err(e) => println!("pjrt benches skipped: {e}"),
     }
+
+    let path = report.write().expect("writing bench report");
+    println!("\nwrote perf trajectory to {path}");
 }

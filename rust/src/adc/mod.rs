@@ -14,17 +14,23 @@ pub mod coeffs;
 pub mod enob;
 pub mod fit;
 pub mod plugin;
+pub mod prepared;
 pub mod tuning;
 
 pub use coeffs::Coefficients;
 pub use fit::{FitReport, fit_model};
 pub use plugin::Estimator;
+pub use prepared::{PreparedModel, PreparedRow};
 pub use tuning::TuningPoint;
 
 use crate::util::logspace::{log10, pow10};
 
 /// Architecture-level query: the model's four inputs (paper Fig. 1).
-#[derive(Clone, Copy, Debug, PartialEq)]
+///
+/// `Default` is the all-zero query — an invalid placeholder (it fails
+/// [`AdcQuery::validate`]) used only to pre-fill output buffers that
+/// workers overwrite in place.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct AdcQuery {
     /// Effective number of bits (resolution after nonidealities).
     pub enob: f64,
@@ -62,7 +68,11 @@ impl AdcQuery {
 }
 
 /// Model outputs for one query.
-#[derive(Clone, Copy, Debug, PartialEq)]
+///
+/// `Default` is the all-zero record — a placeholder the sweep engine
+/// pre-fills output buffers with so workers can overwrite disjoint slices
+/// in place (see `exec::Pool::fill_with`), never a meaningful result.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct AdcMetrics {
     /// Energy per convert, picojoules.
     pub energy_pj_per_convert: f64,
@@ -72,6 +82,21 @@ pub struct AdcMetrics {
     pub total_power_w: f64,
     /// Aggregate area across all ADCs, square micrometers.
     pub total_area_um2: f64,
+}
+
+impl AdcMetrics {
+    /// The four metrics as raw IEEE-754 bit patterns, in field order —
+    /// the comparison key for the *bit-identity* contract between
+    /// [`AdcModel::eval`] and the prepared sweep kernel (equality here is
+    /// stricter than `==`, which would accept e.g. `0.0 == -0.0`).
+    pub fn to_bits(&self) -> [u64; 4] {
+        [
+            self.energy_pj_per_convert.to_bits(),
+            self.area_um2_per_adc.to_bits(),
+            self.total_power_w.to_bits(),
+            self.total_area_um2.to_bits(),
+        ]
+    }
 }
 
 /// The ADC energy/area model: fitted coefficients plus optional user tuning.

@@ -1,0 +1,204 @@
+//! Invariant-hoisted ADC model kernel for sweep hot loops.
+//!
+//! [`AdcModel::eval`] recomputes, for every design point, quantities that
+//! are constant along a sweep's throughput axis: `log10(tech_nm/32)`, the
+//! per-ENOB coefficient partials `a0 + a1·enob + a2·log_t` and
+//! `b0 + b1·enob + b2·log_t`, the area partial `d0 + d1·log_t`, and the
+//! tuning offsets. [`PreparedModel::row`] hoists all of them into a
+//! [`PreparedRow`], reducing the per-point cost to a few multiply-adds
+//! plus the two unavoidable `pow10` calls — and, when the caller already
+//! knows the log-domain throughput (log-spaced axes do; see
+//! [`crate::dse::sweep::SweepSpec`]), zero `log10` calls in the inner
+//! loop.
+//!
+//! ## Bitwise equivalence
+//!
+//! The hoisted expressions keep the *exact* operation order and
+//! association of [`AdcModel::eval`] (each partial is a left-associated
+//! prefix of the original expression), and Rust never re-associates or
+//! fuses float arithmetic, so given the same `log_f` bits a
+//! [`PreparedRow`] produces bit-identical [`AdcMetrics`] — asserted by
+//! the tests below and the `sweep_stream_properties` integration suite,
+//! which require exact bit equality (stronger than the 1-ulp contract).
+
+use super::{AdcMetrics, AdcModel, AdcQuery};
+use crate::util::logspace::{log10, pow10};
+
+/// A model prepared for row-major sweep evaluation.
+///
+/// Thin wrapper that owns a copy of the [`AdcModel`] and mints
+/// [`PreparedRow`]s; keeping it a distinct type makes the intended
+/// call shape explicit (prepare once, mint one row per (ENOB, tech),
+/// evaluate many throughput points per row).
+#[derive(Clone, Copy, Debug)]
+pub struct PreparedModel {
+    model: AdcModel,
+}
+
+impl PreparedModel {
+    /// Prepare a model for row evaluation.
+    pub fn new(model: &AdcModel) -> PreparedModel {
+        PreparedModel { model: *model }
+    }
+
+    /// The wrapped model.
+    pub fn model(&self) -> &AdcModel {
+        &self.model
+    }
+
+    /// Hoist everything constant for one (ENOB, tech node) row.
+    pub fn row(&self, enob: f64, tech_nm: f64) -> PreparedRow {
+        let c = &self.model.coefs;
+        let log_t = log10(tech_nm / 32.0);
+        PreparedRow {
+            // Left-associated prefixes of the expressions in
+            // `Coefficients::{log_energy_pj, log_area_um2}` — do not
+            // re-group, bitwise equivalence depends on it.
+            e_min: c.a0 + c.a1 * enob + c.a2 * log_t,
+            trade_base: c.b0 + c.b1 * enob + c.b2 * log_t,
+            b3: c.b3,
+            area_base: c.d0 + c.d1 * log_t,
+            d2: c.d2,
+            d3: c.d3,
+            energy_offset: self.model.energy_offset_decades,
+            area_offset: self.model.area_offset_decades,
+        }
+    }
+}
+
+/// Per-(ENOB, tech) constants for the model's throughput axis.
+#[derive(Clone, Copy, Debug)]
+pub struct PreparedRow {
+    /// Minimum-energy bound `a0 + a1·enob + a2·log_t` (log10 pJ, untuned).
+    e_min: f64,
+    /// Tradeoff bound sans throughput term `b0 + b1·enob + b2·log_t`.
+    trade_base: f64,
+    /// Tradeoff bound throughput slope.
+    b3: f64,
+    /// Area partial `d0 + d1·log_t`.
+    area_base: f64,
+    /// Area throughput exponent.
+    d2: f64,
+    /// Area energy exponent.
+    d3: f64,
+    /// Tuning offset added to log-energy (after the two-bound max).
+    energy_offset: f64,
+    /// Tuning offset added to log-area.
+    area_offset: f64,
+}
+
+impl PreparedRow {
+    /// Evaluate one point of the row given the log10 *per-ADC* throughput
+    /// plus the raw totals the aggregate metrics need. `log_f` must equal
+    /// `log10(total_throughput / n_adcs)` bit-for-bit for the result to
+    /// be bit-identical to [`AdcModel::eval`]; sweep drivers cache those
+    /// values once per (throughput, n_adcs) pair.
+    #[inline]
+    pub fn eval_log_f(&self, log_f: f64, total_throughput: f64, n_adcs: u32) -> AdcMetrics {
+        let log_e = self.e_min.max(self.trade_base + self.b3 * log_f) + self.energy_offset;
+        let log_area = self.area_base + self.d2 * log_f + self.d3 * log_e + self.area_offset;
+        let energy_pj = pow10(log_e);
+        let area = pow10(log_area);
+        AdcMetrics {
+            energy_pj_per_convert: energy_pj,
+            area_um2_per_adc: area,
+            total_power_w: energy_pj * 1e-12 * total_throughput,
+            total_area_um2: area * n_adcs as f64,
+        }
+    }
+
+    /// Evaluate a full query through the row (computes `log_f` the same
+    /// way [`AdcModel::eval`] does). The query's ENOB / tech node must be
+    /// the ones this row was prepared for.
+    #[inline]
+    pub fn eval_query(&self, q: &AdcQuery) -> AdcMetrics {
+        self.eval_log_f(log10(q.throughput_per_adc()), q.total_throughput, q.n_adcs)
+    }
+
+    /// log10 energy (pJ/convert) at the given log10 per-ADC throughput —
+    /// the row's scalar core, exposed for rollups that never need areas.
+    #[inline]
+    pub fn log_energy_pj(&self, log_f: f64) -> f64 {
+        self.e_min.max(self.trade_base + self.b3 * log_f) + self.energy_offset
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adc::tuning::TuningPoint;
+
+    fn bits(m: &AdcMetrics) -> [u64; 4] {
+        m.to_bits()
+    }
+
+    #[test]
+    fn row_matches_eval_bit_for_bit() {
+        let model = AdcModel::default();
+        let prepared = PreparedModel::new(&model);
+        for enob in [2.0, 4.5, 7.0, 8.0, 12.0, 13.9] {
+            for tech in [16.0, 32.0, 65.0, 130.0] {
+                let row = prepared.row(enob, tech);
+                for total in [1e4, 3.3e6, 1.3e9, 4e10] {
+                    for n in [1u32, 3, 8, 32] {
+                        let q = AdcQuery {
+                            enob,
+                            total_throughput: total,
+                            tech_nm: tech,
+                            n_adcs: n,
+                        };
+                        assert_eq!(
+                            bits(&row.eval_query(&q)),
+                            bits(&model.eval(&q)),
+                            "enob={enob} tech={tech} total={total} n={n}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tuned_model_offsets_ride_through() {
+        let point = TuningPoint {
+            query: AdcQuery { enob: 7.0, total_throughput: 1e9, tech_nm: 32.0, n_adcs: 1 },
+            energy_pj_per_convert: 3.3,
+            area_um2: Some(5e4),
+        };
+        let tuned = AdcModel::default().tuned_to(&point);
+        assert!(tuned.energy_offset_decades != 0.0);
+        let prepared = PreparedModel::new(&tuned);
+        for (enob, tech, total, n) in
+            [(5.0, 65.0, 1e8, 2u32), (9.0, 16.0, 1e10, 8), (7.0, 32.0, 1e9, 1)]
+        {
+            let q = AdcQuery { enob, total_throughput: total, tech_nm: tech, n_adcs: n };
+            let row = prepared.row(enob, tech);
+            assert_eq!(bits(&row.eval_query(&q)), bits(&tuned.eval(&q)));
+        }
+    }
+
+    #[test]
+    fn cached_log_f_equals_evals_log_f_bits() {
+        // The sweep caches log10(total/n) per (throughput, n_adcs) pair;
+        // that cache entry must be the exact value eval derives.
+        for total in [1.3e9, 7.7e5, 4e10] {
+            for n in [1u32, 2, 16] {
+                let q = AdcQuery { enob: 8.0, total_throughput: total, tech_nm: 32.0, n_adcs: n };
+                let cached = log10(total / n as f64);
+                assert_eq!(cached.to_bits(), log10(q.throughput_per_adc()).to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn log_energy_matches_full_eval() {
+        let model = AdcModel::default();
+        let row = PreparedModel::new(&model).row(8.0, 32.0);
+        for total in [1e5, 1e9] {
+            let q = AdcQuery { enob: 8.0, total_throughput: total, tech_nm: 32.0, n_adcs: 1 };
+            let log_f = log10(q.throughput_per_adc());
+            let e = pow10(row.log_energy_pj(log_f));
+            assert_eq!(e.to_bits(), model.eval(&q).energy_pj_per_convert.to_bits());
+        }
+    }
+}

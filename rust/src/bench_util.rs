@@ -5,8 +5,37 @@
 //! times can be sub-nanosecond, below `Duration` resolution) with
 //! human-readable reporting. Bench targets are `harness = false` binaries
 //! that call [`Bench::run`].
+//!
+//! ## Quick mode
+//!
+//! Setting `CIMDSE_BENCH_QUICK` (to anything but `0` or empty) shrinks
+//! every bench: [`Bench::auto`] / [`Bench::auto_slow`] cut the warm-up /
+//! measurement budgets ~10x and the bench binaries use [`scale`] to pick
+//! smaller grids. `ci.sh` runs `perf_hotpaths` this way on every run, so
+//! the perf trajectory artifact ([`JsonReport`] → `BENCH_sweep.json`)
+//! stays fresh without figure-bench runtimes.
 
+use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
+
+use crate::config::Value;
+use crate::error::Result;
+
+/// Environment variable that switches all benches to quick mode.
+pub const QUICK_ENV: &str = "CIMDSE_BENCH_QUICK";
+
+/// Whether quick mode is active (`CIMDSE_BENCH_QUICK` set, non-empty,
+/// and not `0`).
+pub fn quick() -> bool {
+    std::env::var(QUICK_ENV).map(|v| !v.is_empty() && v != "0").unwrap_or(false)
+}
+
+/// Pick a size knob by mode: `full` normally, `quick_value` under
+/// [`quick`]. Bench binaries route every grid/iteration choice through
+/// this so quick mode shrinks them all.
+pub fn scale(full: usize, quick_value: usize) -> usize {
+    if quick() { quick_value } else { full }
+}
 
 /// Measurement statistics for one benchmark case (all times in seconds
 /// per iteration).
@@ -77,6 +106,32 @@ impl Bench {
         }
     }
 
+    /// The default budget, shrunk ~10x when [`quick`] mode is active.
+    pub fn auto() -> Self {
+        if quick() {
+            Bench {
+                warmup: Duration::from_millis(30),
+                measure: Duration::from_millis(120),
+                samples: 6,
+            }
+        } else {
+            Bench::default()
+        }
+    }
+
+    /// The slow-case budget, shrunk ~10x when [`quick`] mode is active.
+    pub fn auto_slow() -> Self {
+        if quick() {
+            Bench {
+                warmup: Duration::from_millis(30),
+                measure: Duration::from_millis(250),
+                samples: 5,
+            }
+        } else {
+            Bench::slow()
+        }
+    }
+
     /// Run `f` repeatedly and return statistics. `f` should include any
     /// per-iteration state internally; use `std::hint::black_box` on
     /// inputs/outputs to defeat const-folding.
@@ -130,6 +185,92 @@ impl Bench {
     }
 }
 
+/// Machine-readable bench report, serialized as `BENCH_<name>.json` so
+/// every future perf PR has a trajectory to compare against.
+///
+/// Schema (all numbers f64; `cases.<name>` keys come from
+/// [`JsonReport::case`], `derived.<name>` from [`JsonReport::metric`]):
+///
+/// ```json
+/// {
+///   "schema": 1,
+///   "bench": "sweep",
+///   "quick": false,
+///   "workers": 8,
+///   "cases": {
+///     "<case>": {
+///       "median_s": 1.1e-3, "mean_s": 1.2e-3, "stddev_s": 1e-5,
+///       "min_s": 1.0e-3, "iters_per_sample": 40, "samples": 20,
+///       "points": 7776, "mpts_per_s": 7.07
+///     }
+///   },
+///   "derived": { "<metric>": 5.2 }
+/// }
+/// ```
+#[derive(Clone, Debug)]
+pub struct JsonReport {
+    bench: String,
+    cases: BTreeMap<String, Value>,
+    derived: BTreeMap<String, Value>,
+}
+
+impl JsonReport {
+    /// Start a report for the named bench.
+    pub fn new(bench: &str) -> JsonReport {
+        JsonReport { bench: bench.to_string(), cases: BTreeMap::new(), derived: BTreeMap::new() }
+    }
+
+    /// Record one measured case; `points` is the work size per iteration
+    /// (used to derive Mpoints/s throughput).
+    pub fn case(&mut self, name: &str, stats: &Stats, points: usize) {
+        let mut t = BTreeMap::new();
+        t.insert("median_s".to_string(), Value::Number(stats.median_s));
+        t.insert("mean_s".to_string(), Value::Number(stats.mean_s));
+        t.insert("stddev_s".to_string(), Value::Number(stats.stddev_s));
+        t.insert("min_s".to_string(), Value::Number(stats.min_s));
+        t.insert(
+            "iters_per_sample".to_string(),
+            Value::Number(stats.iters_per_sample as f64),
+        );
+        t.insert("samples".to_string(), Value::Number(stats.samples as f64));
+        t.insert("points".to_string(), Value::Number(points as f64));
+        t.insert(
+            "mpts_per_s".to_string(),
+            Value::Number(points as f64 / stats.median_s / 1e6),
+        );
+        self.cases.insert(name.to_string(), Value::Table(t));
+    }
+
+    /// Record a derived scalar (speedup ratio, scaling factor, ...).
+    pub fn metric(&mut self, name: &str, value: f64) {
+        self.derived.insert(name.to_string(), Value::Number(value));
+    }
+
+    /// The report as a config [`Value`] tree.
+    pub fn to_value(&self) -> Value {
+        let mut root = BTreeMap::new();
+        root.insert("schema".to_string(), Value::Number(1.0));
+        root.insert("bench".to_string(), Value::String(self.bench.clone()));
+        root.insert("quick".to_string(), Value::Bool(quick()));
+        root.insert(
+            "workers".to_string(),
+            Value::Number(crate::exec::default_workers() as f64),
+        );
+        root.insert("cases".to_string(), Value::Table(self.cases.clone()));
+        root.insert("derived".to_string(), Value::Table(self.derived.clone()));
+        Value::Table(root)
+    }
+
+    /// Serialize and write the report (path default: `BENCH_<name>.json`
+    /// in the working directory, overridden by `CIMDSE_BENCH_OUT`).
+    pub fn write(&self) -> Result<String> {
+        let path = std::env::var("CIMDSE_BENCH_OUT")
+            .unwrap_or_else(|_| format!("BENCH_{}.json", self.bench));
+        std::fs::write(&path, self.to_value().to_json_string()? + "\n")?;
+        Ok(path)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -170,5 +311,47 @@ mod tests {
         assert_eq!(fmt_secs(2e-3), "2.000 ms");
         assert_eq!(fmt_secs(2e-6), "2.000 µs");
         assert_eq!(fmt_secs(2e-9), "2.0 ns");
+    }
+
+    #[test]
+    fn json_report_round_trips_and_has_required_keys() {
+        let stats = Stats {
+            iters_per_sample: 40,
+            samples: 20,
+            median_s: 1.1e-3,
+            mean_s: 1.2e-3,
+            stddev_s: 1e-5,
+            min_s: 1.0e-3,
+        };
+        let mut report = JsonReport::new("sweep");
+        report.case("sweep: native serial", &stats, 7776);
+        report.metric("speedup_prepared_vs_serial", 5.2);
+        let text = report.to_value().to_json_string().unwrap();
+        let doc = crate::config::parse_json(&text).unwrap();
+        assert_eq!(doc.require_usize("schema").unwrap(), 1);
+        assert_eq!(doc.require_str("bench").unwrap(), "sweep");
+        assert!(doc.get("cases.sweep: native serial.median_s").is_some());
+        let mpts = doc
+            .require_f64("cases.sweep: native serial.mpts_per_s")
+            .unwrap();
+        assert!((mpts - 7776.0 / 1.1e-3 / 1e6).abs() < 1e-9);
+        assert_eq!(
+            doc.require_f64("derived.speedup_prepared_vs_serial").unwrap(),
+            5.2
+        );
+        assert!(doc.get("workers").is_some() && doc.get("quick").is_some());
+    }
+
+    #[test]
+    fn scale_picks_by_mode() {
+        // The env knob is process-global; just exercise the non-quick
+        // branch deterministically when the variable is unset.
+        if std::env::var(QUICK_ENV).is_err() {
+            assert!(!quick());
+            assert_eq!(scale(40, 12), 40);
+            assert_eq!(Bench::auto().samples, Bench::default().samples);
+        } else {
+            assert_eq!(scale(40, 12), if quick() { 12 } else { 40 });
+        }
     }
 }

@@ -108,6 +108,10 @@ pub struct AccelPoint {
 }
 
 /// Evaluate every candidate on the workload (threaded).
+///
+/// `workers = 1` evaluates serially on the calling thread; any other
+/// value routes through the shared [`crate::exec::Pool::global`], whose
+/// fixed width (not `workers`) governs the actual parallelism.
 pub fn run_accel_sweep(
     spec: &AccelSweepSpec,
     model: &AdcModel,

@@ -4,6 +4,22 @@
 //! the native Rust model (threaded) or the AOT-compiled PJRT artifact
 //! ([`Evaluator`]), extracts Pareto fronts ([`pareto`]), and regenerates
 //! the paper's figures ([`figures`]).
+//!
+//! ## The sweep hot path
+//!
+//! Three tiers, fastest first (all bit-identical — see
+//! `tests/sweep_stream_properties.rs`):
+//!
+//! * [`run_sweep_fold`] — streaming rollup over the grid through the
+//!   invariant-hoisted [`PreparedModel`] kernel: per-(ENOB, tech) row
+//!   constants and the per-(throughput, n_adcs) `log10` table are
+//!   computed once, queries are generated per chunk by odometer, and
+//!   nothing sweep-sized is ever materialized. Use for Pareto/min-EAP
+//!   style summaries of grids with millions of points.
+//! * [`run_sweep_prepared`] — same kernel, materialized
+//!   `Vec<EvaluatedPoint>` output (filled in place by the pool).
+//! * [`run_sweep`] — the general path over any [`Evaluator`] (native or
+//!   PJRT), generating queries chunk-by-chunk instead of up front.
 
 pub mod accel;
 pub mod figures;
@@ -11,13 +27,18 @@ pub mod pareto;
 pub mod sweep;
 
 pub use accel::{AccelPoint, AccelSweepSpec, run_accel_sweep};
-pub use pareto::pareto_front;
+pub use pareto::{StreamingFront, pareto_front};
 pub use sweep::SweepSpec;
 
-use crate::adc::{AdcMetrics, AdcModel, AdcQuery};
-use crate::error::Result;
-use crate::exec::parallel_chunks;
+use crate::adc::{AdcMetrics, AdcModel, AdcQuery, PreparedModel, PreparedRow};
+use crate::error::{Error, Result};
+use crate::exec::Pool;
 use crate::runtime::AdcModelEngine;
+
+/// Queries generated per chunk by the streaming sweep drivers: large
+/// enough to amortize dispatch, small enough that a chunk's queries and
+/// metrics stay cache-resident instead of sweep-sized.
+const SWEEP_CHUNK: usize = 16 * 1024;
 
 /// A design-point evaluator: queries in, ADC metrics out.
 pub trait Evaluator {
@@ -26,22 +47,33 @@ pub trait Evaluator {
 
     /// Human-readable backend name.
     fn backend_name(&self) -> &'static str;
+
+    /// Preferred batch-size multiple for [`run_sweep`]'s chunking, if the
+    /// backend pads partial batches (the PJRT artifact does: every chunk
+    /// not a multiple of its compiled batch wastes device work on pad
+    /// rows). `None` means any chunk size is fine.
+    fn batch_hint(&self) -> Option<usize> {
+        None
+    }
 }
 
-/// Native Rust evaluation, threaded across `workers`.
+/// Native Rust evaluation, threaded across the shared [`Pool::global`].
 pub struct NativeEvaluator {
     /// The model to evaluate.
     pub model: AdcModel,
-    /// Worker thread count (1 = serial).
+    /// `1` = serial on the calling thread; anything else routes through
+    /// the shared pool (its fixed width governs actual parallelism).
     pub workers: usize,
-    /// Chunk size per dispatch (amortizes thread hand-off).
+    /// Chunk size per work item (amortizes claim overhead).
     pub chunk: usize,
 }
 
 impl NativeEvaluator {
-    /// Evaluator with sensible defaults.
+    /// Evaluator with sensible defaults. The 1024-point chunk keeps
+    /// claims ~100 µs of work — big enough to amortize a deque pop, small
+    /// enough that even a fig-sized sweep fans out across the pool.
     pub fn new(model: AdcModel) -> Self {
-        NativeEvaluator { model, workers: crate::exec::default_workers(), chunk: 4096 }
+        NativeEvaluator { model, workers: crate::exec::default_workers(), chunk: 1024 }
     }
 
     /// Serial evaluator (useful for micro-benchmarks).
@@ -52,10 +84,18 @@ impl NativeEvaluator {
 
 impl Evaluator for NativeEvaluator {
     fn eval(&self, queries: &[AdcQuery]) -> Result<Vec<AdcMetrics>> {
-        let chunk = self.chunk.min(queries.len().max(1));
-        Ok(parallel_chunks(queries, chunk, self.workers, |qs| {
-            qs.iter().map(|q| self.model.eval(q)).collect()
-        }))
+        if self.workers == 1 || queries.len() <= 1 {
+            return Ok(queries.iter().map(|q| self.model.eval(q)).collect());
+        }
+        // Zero-copy result path: workers overwrite disjoint chunk slices
+        // of the pre-sized output in place (no lock, no stitch).
+        let mut out = vec![AdcMetrics::default(); queries.len()];
+        Pool::global().fill_chunk_ranges(&mut out, self.chunk, |start, slice| {
+            for (i, slot) in slice.iter_mut().enumerate() {
+                *slot = self.model.eval(&queries[start + i]);
+            }
+        });
+        Ok(out)
     }
 
     fn backend_name(&self) -> &'static str {
@@ -88,10 +128,17 @@ impl Evaluator for PjrtEvaluator {
     fn backend_name(&self) -> &'static str {
         "pjrt"
     }
+
+    fn batch_hint(&self) -> Option<usize> {
+        Some(self.engine.batch_size())
+    }
 }
 
 /// One evaluated design point.
-#[derive(Clone, Copy, Debug)]
+///
+/// `Default` is an all-zero placeholder for in-place buffer fills, never
+/// a meaningful result.
+#[derive(Clone, Copy, Debug, Default)]
 pub struct EvaluatedPoint {
     /// The query.
     pub query: AdcQuery,
@@ -99,30 +146,259 @@ pub struct EvaluatedPoint {
     pub metrics: AdcMetrics,
 }
 
-/// Evaluate a whole sweep.
+/// Evaluate a whole sweep, generating queries chunk-by-chunk (the full
+/// query vector is never materialized; the evaluated output of course is).
 pub fn run_sweep(spec: &SweepSpec, evaluator: &dyn Evaluator) -> Result<Vec<EvaluatedPoint>> {
-    let queries = spec.points();
-    let metrics = evaluator.eval(&queries)?;
-    Ok(queries
-        .into_iter()
-        .zip(metrics)
-        .map(|(query, metrics)| EvaluatedPoint { query, metrics })
-        .collect())
+    let n = spec.checked_len().ok_or_else(|| {
+        Error::Numeric(
+            "sweep grid length overflows usize; split the spec into sub-range specs".into(),
+        )
+    })?;
+    // Round the chunk up to a whole multiple of the backend's batch so a
+    // padding evaluator (PJRT) pads at most once per chunk tail instead
+    // of on every chunk.
+    let chunk = match evaluator.batch_hint() {
+        Some(batch) if batch > 0 => SWEEP_CHUNK.div_ceil(batch) * batch,
+        _ => SWEEP_CHUNK,
+    };
+    let mut out = Vec::with_capacity(n);
+    let mut buf: Vec<AdcQuery> = Vec::with_capacity(chunk.min(n));
+    let mut start = 0usize;
+    while start < n {
+        let end = (start + chunk).min(n);
+        buf.clear();
+        spec.fill_range(start..end, &mut buf);
+        let metrics = evaluator.eval(&buf)?;
+        out.extend(
+            buf.iter()
+                .zip(metrics)
+                .map(|(&query, metrics)| EvaluatedPoint { query, metrics }),
+        );
+        start = end;
+    }
+    Ok(out)
+}
+
+/// Per-sweep caches for the invariant-hoisted kernel: one [`PreparedRow`]
+/// per (ENOB, tech) pair and one `log10(total/n)` entry per
+/// (throughput, n_adcs) pair. The inner loop does table lookups and
+/// multiply-adds plus the two `pow10` calls — no `log10`, no division.
+struct PreparedSweep<'a> {
+    spec: &'a SweepSpec,
+    /// `rows[ei * tech_nms.len() + ki]`.
+    rows: Vec<PreparedRow>,
+    /// `log_f[ti * n_adcs.len() + ni]` (bit-exact vs `AdcModel::eval`).
+    log_f: Vec<f64>,
+}
+
+impl<'a> PreparedSweep<'a> {
+    fn new(spec: &'a SweepSpec, model: &AdcModel) -> PreparedSweep<'a> {
+        let prepared = PreparedModel::new(model);
+        let mut rows = Vec::with_capacity(spec.enobs.len() * spec.tech_nms.len());
+        for &enob in &spec.enobs {
+            for &tech in &spec.tech_nms {
+                rows.push(prepared.row(enob, tech));
+            }
+        }
+        PreparedSweep { spec, rows, log_f: spec.log_per_adc_table() }
+    }
+
+    /// Apply `f(index, query, metrics)` to every point of a contiguous
+    /// index range, in grid order (shared odometer iteration —
+    /// [`SweepSpec::for_each_index_in_range`] — so this path cannot
+    /// drift from query materialization).
+    fn for_each_in_range<F: FnMut(usize, &AdcQuery, &AdcMetrics)>(
+        &self,
+        range: std::ops::Range<usize>,
+        mut f: F,
+    ) {
+        let n = self.spec.n_adcs.len();
+        let k = self.spec.tech_nms.len();
+        self.spec.for_each_index_in_range(range, |i, ei, ti, ki, ni| {
+            let query = AdcQuery {
+                enob: self.spec.enobs[ei],
+                total_throughput: self.spec.total_throughputs[ti],
+                tech_nm: self.spec.tech_nms[ki],
+                n_adcs: self.spec.n_adcs[ni],
+            };
+            let metrics = self.rows[ei * k + ki].eval_log_f(
+                self.log_f[ti * n + ni],
+                query.total_throughput,
+                query.n_adcs,
+            );
+            f(i, &query, &metrics);
+        });
+    }
+}
+
+/// Pool chunk size for streaming sweeps: enough chunks for stealing to
+/// balance, large enough to amortize claims.
+fn stream_chunk(n: usize) -> usize {
+    (n / (crate::exec::default_workers() * 8)).clamp(1024, SWEEP_CHUNK).min(n.max(1))
+}
+
+/// Evaluate a whole sweep through the invariant-hoisted kernel,
+/// bit-identical to [`run_sweep`] over a [`NativeEvaluator`] but several
+/// times faster per point (see `BENCH_sweep.json`). `workers = 1` runs
+/// serially; otherwise the shared pool fills the output in place.
+pub fn run_sweep_prepared(
+    spec: &SweepSpec,
+    model: &AdcModel,
+    workers: usize,
+) -> Result<Vec<EvaluatedPoint>> {
+    let n = spec.checked_len().ok_or_else(|| {
+        Error::Numeric(
+            "sweep grid length overflows usize; split the spec into sub-range specs".into(),
+        )
+    })?;
+    let prepared = PreparedSweep::new(spec, model);
+    if workers == 1 || n <= 1 {
+        let mut out = Vec::with_capacity(n);
+        prepared.for_each_in_range(0..n, |_, q, m| {
+            out.push(EvaluatedPoint { query: *q, metrics: *m });
+        });
+        return Ok(out);
+    }
+    let mut out = vec![EvaluatedPoint::default(); n];
+    Pool::global().fill_chunk_ranges(&mut out, stream_chunk(n), |start, slice| {
+        let mut j = 0usize;
+        prepared.for_each_in_range(start..start + slice.len(), |_, q, m| {
+            slice[j] = EvaluatedPoint { query: *q, metrics: *m };
+            j += 1;
+        });
+    });
+    Ok(out)
+}
+
+/// Streaming sweep rollup: evaluate every grid point through the
+/// invariant-hoisted kernel and fold it into an accumulator without ever
+/// holding a `Vec<EvaluatedPoint>` (or the query vector).
+///
+/// * `init` builds a fresh accumulator (one per worker).
+/// * `fold(acc, index, query, metrics)` absorbs one design point.
+/// * `merge` combines two accumulators.
+///
+/// With `workers = 1` points are folded serially in exact grid order.
+/// Otherwise chunk claim order is non-deterministic (work stealing), so
+/// `fold`/`merge` must be insensitive to encounter order — min/max,
+/// counts, [`StreamingFront`], or argmin with index tie-breaks all
+/// qualify and reproduce the materialized result exactly.
+///
+/// # Panics
+///
+/// Unlike [`run_sweep`]/[`run_sweep_prepared`] (which return `Err`),
+/// this panics if the grid's axis product overflows `usize` — streaming
+/// still indexes points with `usize`, so such a spec must be split into
+/// sub-range specs first. Keeping the infallible return preserves the
+/// natural `fold` shape for the ~always case of an indexable grid.
+pub fn run_sweep_fold<A, I, F, M>(
+    spec: &SweepSpec,
+    model: &AdcModel,
+    workers: usize,
+    init: I,
+    fold: F,
+    merge: M,
+) -> A
+where
+    A: Send,
+    I: Fn() -> A + Sync,
+    F: Fn(&mut A, usize, &AdcQuery, &AdcMetrics) + Sync,
+    M: Fn(A, A) -> A,
+{
+    // Streaming still indexes points with usize, so an overflowed grid
+    // cannot be folded either — split it into sub-range specs instead.
+    let n = spec
+        .checked_len()
+        .expect("sweep grid length overflows usize; split the spec into sub-range specs");
+    let prepared = PreparedSweep::new(spec, model);
+    if workers == 1 || n <= 1 {
+        let mut acc = init();
+        prepared.for_each_in_range(0..n, |i, q, m| fold(&mut acc, i, q, m));
+        return acc;
+    }
+    let accs = Pool::global().fold_chunks(n, stream_chunk(n), &init, |acc, range| {
+        prepared.for_each_in_range(range, |i, q, m| fold(acc, i, q, m));
+    });
+    accs.into_iter().reduce(&merge).unwrap_or_else(init)
+}
+
+/// Streaming min-EAP summary: the grid point minimizing
+/// `energy_pj_per_convert × total_area_um2` (ties broken toward the
+/// lowest grid index, so the result is deterministic under stealing).
+/// Returns `None` for an empty grid.
+pub fn sweep_min_eap(
+    spec: &SweepSpec,
+    model: &AdcModel,
+    workers: usize,
+) -> Option<EvaluatedPoint> {
+    type Best = Option<(usize, f64, EvaluatedPoint)>;
+    // total_cmp (not `<`) so even NaN EAPs — only possible from NaN spec
+    // values — rank deterministically (last), matching a materialized
+    // argmin with the same comparator regardless of steal order.
+    let better = |a: &(usize, f64, EvaluatedPoint), b: &(usize, f64, EvaluatedPoint)| {
+        a.1.total_cmp(&b.1).then(a.0.cmp(&b.0)) == std::cmp::Ordering::Less
+    };
+    run_sweep_fold(
+        spec,
+        model,
+        workers,
+        || None,
+        |best: &mut Best, i, q, m| {
+            let eap = m.energy_pj_per_convert * m.total_area_um2;
+            let cand = (i, eap, EvaluatedPoint { query: *q, metrics: *m });
+            if best.as_ref().map_or(true, |cur| better(&cand, cur)) {
+                *best = Some(cand);
+            }
+        },
+        |a, b| match (a, b) {
+            (Some(a), Some(b)) => Some(if better(&a, &b) { a } else { b }),
+            (a, None) => a,
+            (None, b) => b,
+        },
+    )
+    .map(|(_, _, point)| point)
+}
+
+/// Streaming Pareto front over (total power, total area): the indices
+/// [`pareto_front`] would return on the materialized sweep, computed with
+/// front-sized memory. The equivalence holds for finite objectives (any
+/// valid spec); [`StreamingFront`] drops non-finite points, where
+/// `pareto_front`'s behavior is unspecified.
+pub fn sweep_power_area_front(spec: &SweepSpec, model: &AdcModel, workers: usize) -> Vec<usize> {
+    run_sweep_fold(
+        spec,
+        model,
+        workers,
+        StreamingFront::new,
+        |front: &mut StreamingFront, i, _q, m| {
+            front.push(m.total_power_w, m.total_area_um2, i);
+        },
+        StreamingFront::merge,
+    )
+    .into_indices()
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
-    #[test]
-    fn native_parallel_matches_serial() {
-        let model = AdcModel::default();
-        let spec = SweepSpec {
+    fn metric_bits(m: &AdcMetrics) -> [u64; 4] {
+        m.to_bits()
+    }
+
+    fn small_spec() -> SweepSpec {
+        SweepSpec {
             enobs: vec![4.0, 8.0, 12.0],
             total_throughputs: vec![1e6, 1e8, 1e10],
             tech_nms: vec![16.0, 32.0],
             n_adcs: vec![1, 4],
-        };
+        }
+    }
+
+    #[test]
+    fn native_parallel_matches_serial() {
+        let model = AdcModel::default();
+        let spec = small_spec();
         let serial = run_sweep(&spec, &NativeEvaluator::serial(model)).unwrap();
         let par = run_sweep(&spec, &NativeEvaluator::new(model)).unwrap();
         assert_eq!(serial.len(), 3 * 3 * 2 * 2);
@@ -142,5 +418,115 @@ mod tests {
         let out = run_sweep(&spec, &NativeEvaluator::serial(AdcModel::default())).unwrap();
         assert_eq!(out[0].query.enob, 4.0);
         assert_eq!(out[1].query.enob, 8.0);
+    }
+
+    #[test]
+    fn prepared_sweep_is_bit_identical_to_eval_path() {
+        let model = AdcModel::default();
+        let spec = small_spec();
+        let baseline = run_sweep(&spec, &NativeEvaluator::serial(model)).unwrap();
+        for workers in [1usize, 4] {
+            let fast = run_sweep_prepared(&spec, &model, workers).unwrap();
+            assert_eq!(fast.len(), baseline.len());
+            for (a, b) in baseline.iter().zip(&fast) {
+                assert_eq!(a.query, b.query);
+                assert_eq!(metric_bits(&a.metrics), metric_bits(&b.metrics));
+            }
+        }
+    }
+
+    #[test]
+    fn fold_visits_every_point_once_in_order_when_serial() {
+        let model = AdcModel::default();
+        let spec = small_spec();
+        let all = run_sweep_prepared(&spec, &model, 1).unwrap();
+        let indices = run_sweep_fold(
+            &spec,
+            &model,
+            1,
+            Vec::new,
+            |acc: &mut Vec<usize>, i, q, m| {
+                // Serial fold sees the exact materialized values.
+                assert_eq!(all[i].query, *q);
+                assert_eq!(metric_bits(&all[i].metrics), metric_bits(m));
+                acc.push(i);
+            },
+            |mut a, b| {
+                a.extend(b);
+                a
+            },
+        );
+        assert_eq!(indices, (0..spec.len()).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn fold_parallel_covers_every_point() {
+        let model = AdcModel::default();
+        let spec = SweepSpec::dense(6);
+        let count = run_sweep_fold(
+            &spec,
+            &model,
+            4,
+            || 0usize,
+            |acc, _, _, _| *acc += 1,
+            |a, b| a + b,
+        );
+        assert_eq!(count, spec.len());
+    }
+
+    #[test]
+    fn min_eap_matches_materialized_argmin() {
+        let model = AdcModel::default();
+        let spec = SweepSpec::dense(6);
+        let all = run_sweep(&spec, &NativeEvaluator::serial(model)).unwrap();
+        let brute = all
+            .iter()
+            .enumerate()
+            .min_by(|(i, a), (j, b)| {
+                let ea = a.metrics.energy_pj_per_convert * a.metrics.total_area_um2;
+                let eb = b.metrics.energy_pj_per_convert * b.metrics.total_area_um2;
+                ea.total_cmp(&eb).then(i.cmp(j))
+            })
+            .unwrap()
+            .1;
+        for workers in [1usize, 4] {
+            let streamed = sweep_min_eap(&spec, &model, workers).unwrap();
+            assert_eq!(streamed.query, brute.query, "workers={workers}");
+            assert_eq!(metric_bits(&streamed.metrics), metric_bits(&brute.metrics));
+        }
+    }
+
+    #[test]
+    fn streaming_front_matches_materialized_front() {
+        let model = AdcModel::default();
+        let spec = SweepSpec::dense(5);
+        let all = run_sweep(&spec, &NativeEvaluator::serial(model)).unwrap();
+        let objectives: Vec<(f64, f64)> = all
+            .iter()
+            .map(|p| (p.metrics.total_power_w, p.metrics.total_area_um2))
+            .collect();
+        let brute = pareto_front(&objectives);
+        for workers in [1usize, 4] {
+            assert_eq!(
+                sweep_power_area_front(&spec, &model, workers),
+                brute,
+                "workers={workers}"
+            );
+        }
+    }
+
+    #[test]
+    fn empty_grid_rolls_up_to_init() {
+        let model = AdcModel::default();
+        let spec = SweepSpec {
+            enobs: vec![],
+            total_throughputs: vec![1e9],
+            tech_nms: vec![32.0],
+            n_adcs: vec![1],
+        };
+        assert!(run_sweep(&spec, &NativeEvaluator::serial(model)).unwrap().is_empty());
+        assert!(run_sweep_prepared(&spec, &model, 4).unwrap().is_empty());
+        assert!(sweep_min_eap(&spec, &model, 4).is_none());
+        assert!(sweep_power_area_front(&spec, &model, 4).is_empty());
     }
 }

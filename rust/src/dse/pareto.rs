@@ -27,6 +27,79 @@ pub fn pareto_front(points: &[(f64, f64)]) -> Vec<usize> {
     front
 }
 
+/// Incremental Pareto front for streaming sweeps: points are pushed one
+/// at a time (with their original index) and only the current
+/// non-dominated set is retained, so a million-point sweep's front costs
+/// front-sized memory, not sweep-sized.
+///
+/// Deterministic regardless of push/merge order: duplicates keep the
+/// smallest original index, so [`StreamingFront::into_indices`] returns
+/// exactly what [`pareto_front`] would on the materialized point list —
+/// asserted by the property tests below and in `sweep_stream_properties`.
+#[derive(Clone, Debug, Default)]
+pub struct StreamingFront {
+    /// Non-dominated `(a, b, original_index)` triples, unordered.
+    pts: Vec<(f64, f64, usize)>,
+}
+
+impl StreamingFront {
+    /// Empty front.
+    pub fn new() -> StreamingFront {
+        StreamingFront::default()
+    }
+
+    /// Number of points currently on the front.
+    pub fn len(&self) -> usize {
+        self.pts.len()
+    }
+
+    /// Whether the front is empty.
+    pub fn is_empty(&self) -> bool {
+        self.pts.is_empty()
+    }
+
+    /// Offer a point; it is kept only while non-dominated, and evicts any
+    /// resident point it dominates. Non-finite objectives are dropped —
+    /// NaN can neither dominate nor be dominated under `<=`, so keeping
+    /// such points would make the front merge-order dependent
+    /// ([`pareto_front`]'s behavior on NaN input is likewise unspecified;
+    /// the equivalence contract covers finite objectives).
+    pub fn push(&mut self, a: f64, b: f64, index: usize) {
+        if !(a.is_finite() && b.is_finite()) {
+            return;
+        }
+        for &mut (x, y, ref mut idx) in &mut self.pts {
+            if x == a && y == b {
+                // Exact duplicate: keep the earliest index (what the
+                // stable sort inside `pareto_front` keeps).
+                *idx = (*idx).min(index);
+                return;
+            }
+            if x <= a && y <= b {
+                return; // dominated by a resident point
+            }
+        }
+        self.pts.retain(|&(x, y, _)| !(a <= x && b <= y));
+        self.pts.push((a, b, index));
+    }
+
+    /// Merge another front in (used to combine per-worker fronts).
+    pub fn merge(mut self, other: StreamingFront) -> StreamingFront {
+        for (a, b, idx) in other.pts {
+            self.push(a, b, idx);
+        }
+        self
+    }
+
+    /// The front's original indices, sorted by the first objective
+    /// ascending — the same order/content [`pareto_front`] returns.
+    pub fn into_indices(mut self) -> Vec<usize> {
+        self.pts
+            .sort_by(|p, q| p.0.total_cmp(&q.0).then(p.1.total_cmp(&q.1)));
+        self.pts.into_iter().map(|(_, _, i)| i).collect()
+    }
+}
+
 /// Hypervolume-style scalar summary: the best (minimum) product a·b on the
 /// front — a quick "knee" indicator used in sweep reports.
 pub fn best_product(points: &[(f64, f64)]) -> Option<(usize, f64)> {

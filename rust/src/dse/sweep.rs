@@ -1,7 +1,15 @@
 //! Sweep specification: cartesian grids over the model's four inputs.
+//!
+//! Grids can be *materialized* ([`SweepSpec::points`]) or — for the
+//! million-point exploration the streaming engine targets — accessed by
+//! index ([`SweepSpec::point_at`]) and generated per chunk
+//! ([`SweepSpec::fill_range`], [`SweepSpec::chunks`]) so no full query
+//! vector ever exists in memory.
+
+use std::ops::Range;
 
 use crate::adc::AdcQuery;
-use crate::util::logspace::logspace;
+use crate::util::logspace::{log10, logspace};
 
 /// A cartesian sweep over (ENOB, total throughput, tech node, #ADCs).
 #[derive(Clone, Debug)]
@@ -39,9 +47,22 @@ impl SweepSpec {
         }
     }
 
-    /// Number of design points in the grid.
+    /// Number of design points in the grid, if it fits a `usize`.
+    /// `None` means the axis product overflowed — such a grid can still
+    /// be described, but not indexed or materialized.
+    pub fn checked_len(&self) -> Option<usize> {
+        self.enobs
+            .len()
+            .checked_mul(self.total_throughputs.len())?
+            .checked_mul(self.tech_nms.len())?
+            .checked_mul(self.n_adcs.len())
+    }
+
+    /// Number of design points in the grid, saturating at `usize::MAX`
+    /// when the axis product overflows (debug and release builds agree;
+    /// use [`SweepSpec::checked_len`] to detect the cap).
     pub fn len(&self) -> usize {
-        self.enobs.len() * self.total_throughputs.len() * self.tech_nms.len() * self.n_adcs.len()
+        self.checked_len().unwrap_or(usize::MAX)
     }
 
     /// Whether the grid is empty.
@@ -49,9 +70,119 @@ impl SweepSpec {
         self.len() == 0
     }
 
+    /// The `i`-th design point in ENOB-major, n_adcs-minor order — the
+    /// same order [`SweepSpec::points`] materializes. Panics if `i` is
+    /// out of bounds (including a length-overflowed grid).
+    pub fn point_at(&self, i: usize) -> AdcQuery {
+        let n = self.n_adcs.len();
+        let k = self.tech_nms.len();
+        let t = self.total_throughputs.len();
+        assert!(
+            i < self.checked_len().expect("sweep grid length overflows usize"),
+            "point index {i} out of bounds"
+        );
+        AdcQuery {
+            enob: self.enobs[i / (n * k * t)],
+            total_throughput: self.total_throughputs[(i / (n * k)) % t],
+            tech_nm: self.tech_nms[(i / n) % k],
+            n_adcs: self.n_adcs[i % n],
+        }
+    }
+
+    /// Drive `f(i, ei, ti, ki, ni)` over a contiguous index range in
+    /// grid order, handing out the decomposed axis indices (ENOB,
+    /// throughput, tech, n_adcs). The start index is decomposed once and
+    /// the counters tick odometer-style — no per-point div/mod — which
+    /// is the single implementation behind both query materialization
+    /// ([`SweepSpec::fill_range`]) and the prepared-kernel sweep, so the
+    /// two paths cannot drift apart. The range must lie within
+    /// `0..len()`.
+    pub fn for_each_index_in_range<F>(&self, range: Range<usize>, mut f: F)
+    where
+        F: FnMut(usize, usize, usize, usize, usize),
+    {
+        if range.is_empty() {
+            return;
+        }
+        let len = self.checked_len().expect("sweep grid length overflows usize");
+        assert!(range.end <= len, "range {range:?} out of bounds for {len} points");
+        let n = self.n_adcs.len();
+        let k = self.tech_nms.len();
+        let t = self.total_throughputs.len();
+        let mut ni = range.start % n;
+        let mut ki = (range.start / n) % k;
+        let mut ti = (range.start / (n * k)) % t;
+        let mut ei = range.start / (n * k * t);
+        for i in range {
+            f(i, ei, ti, ki, ni);
+            ni += 1;
+            if ni == n {
+                ni = 0;
+                ki += 1;
+                if ki == k {
+                    ki = 0;
+                    ti += 1;
+                    if ti == t {
+                        ti = 0;
+                        ei += 1;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Append the queries for a contiguous index range onto `out`. The
+    /// range must lie within `0..len()`.
+    pub fn fill_range(&self, range: Range<usize>, out: &mut Vec<AdcQuery>) {
+        out.reserve(range.len());
+        self.for_each_index_in_range(range, |_, ei, ti, ki, ni| {
+            out.push(AdcQuery {
+                enob: self.enobs[ei],
+                total_throughput: self.total_throughputs[ti],
+                tech_nm: self.tech_nms[ki],
+                n_adcs: self.n_adcs[ni],
+            });
+        });
+    }
+
+    /// Iterate the grid as `(start_index, Vec<AdcQuery>)` chunks of up to
+    /// `chunk` points, in order, generating each chunk on demand — the
+    /// streaming complement of [`SweepSpec::points`].
+    pub fn chunks(&self, chunk: usize) -> impl Iterator<Item = (usize, Vec<AdcQuery>)> + '_ {
+        assert!(chunk >= 1);
+        let len = self.checked_len().expect("sweep grid length overflows usize");
+        (0..len).step_by(chunk).map(move |start| {
+            let end = (start + chunk).min(len);
+            let mut buf = Vec::new();
+            self.fill_range(start..end, &mut buf);
+            (start, buf)
+        })
+    }
+
+    /// The log10 *per-ADC* throughput table the prepared kernel indexes
+    /// as `table[ti * n_adcs.len() + ni]`: exactly the
+    /// `log10(total/n)` bits [`crate::adc::AdcModel::eval`] derives per
+    /// point, computed once per (throughput, n_adcs) pair instead of once
+    /// per grid point (the inner loop never calls `log10` again).
+    pub fn log_per_adc_table(&self) -> Vec<f64> {
+        let mut out = Vec::with_capacity(self.total_throughputs.len() * self.n_adcs.len());
+        for &total in &self.total_throughputs {
+            for &n in &self.n_adcs {
+                out.push(log10(total / n as f64));
+            }
+        }
+        out
+    }
+
     /// Materialize the cartesian product (ENOB-major, n_adcs-minor order).
+    /// Panics (with a streaming hint) if the grid length overflows; use
+    /// [`SweepSpec::chunks`] / [`crate::dse::run_sweep_fold`] for grids
+    /// that should never be materialized.
     pub fn points(&self) -> Vec<AdcQuery> {
-        let mut out = Vec::with_capacity(self.len());
+        let len = self
+            .checked_len()
+            .expect("sweep grid too large to materialize; stream it with chunks()/run_sweep_fold");
+        let mut out = Vec::with_capacity(len);
         for &enob in &self.enobs {
             for &total_throughput in &self.total_throughputs {
                 for &tech_nm in &self.tech_nms {
@@ -99,5 +230,106 @@ mod tests {
     fn dense_grid_is_dense() {
         let s = SweepSpec::dense(10);
         assert_eq!(s.len(), 10 * 10 * 4 * 6);
+    }
+
+    #[test]
+    fn point_at_matches_points() {
+        let s = SweepSpec {
+            enobs: vec![4.0, 8.0, 12.0],
+            total_throughputs: vec![1e6, 1e8],
+            tech_nms: vec![16.0, 32.0],
+            n_adcs: vec![1, 2, 4],
+        };
+        let pts = s.points();
+        for (i, p) in pts.iter().enumerate() {
+            assert_eq!(&s.point_at(i), p, "index {i}");
+        }
+    }
+
+    #[test]
+    fn fill_range_matches_points_at_odd_boundaries() {
+        let s = SweepSpec::dense(5);
+        let pts = s.points();
+        for (start, end) in [(0usize, 0usize), (0, 1), (3, 17), (0, pts.len()), (599, 600)] {
+            let mut buf = Vec::new();
+            s.fill_range(start..end, &mut buf);
+            assert_eq!(buf.as_slice(), &pts[start..end], "{start}..{end}");
+        }
+    }
+
+    #[test]
+    fn chunks_cover_grid_in_order() {
+        let s = SweepSpec::dense(4);
+        let pts = s.points();
+        for chunk in [1usize, 7, 64, 10_000] {
+            let mut seen = Vec::new();
+            let mut expect_start = 0usize;
+            for (start, buf) in s.chunks(chunk) {
+                assert_eq!(start, expect_start);
+                expect_start += buf.len();
+                seen.extend(buf);
+            }
+            assert_eq!(seen, pts, "chunk={chunk}");
+        }
+    }
+
+    #[test]
+    fn log_table_matches_query_bits() {
+        let s = SweepSpec::dense(6);
+        let table = s.log_per_adc_table();
+        for (ti, &total) in s.total_throughputs.iter().enumerate() {
+            for (ni, &n) in s.n_adcs.iter().enumerate() {
+                let q = AdcQuery { enob: 8.0, total_throughput: total, tech_nm: 32.0, n_adcs: n };
+                assert_eq!(
+                    table[ti * s.n_adcs.len() + ni].to_bits(),
+                    log10(q.throughput_per_adc()).to_bits()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn oversized_grid_saturates_instead_of_overflowing() {
+        // 131072^3 * 131072 = 2^68 > usize::MAX: the axis product must
+        // saturate deterministically, not wrap (debug vs release used to
+        // disagree here).
+        let s = SweepSpec {
+            enobs: vec![8.0; 1 << 17],
+            total_throughputs: vec![1e9; 1 << 17],
+            tech_nms: vec![32.0; 1 << 17],
+            n_adcs: vec![1; 1 << 17],
+        };
+        assert_eq!(s.checked_len(), None);
+        assert_eq!(s.len(), usize::MAX);
+        assert!(!s.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "too large to materialize")]
+    fn oversized_grid_refuses_to_materialize() {
+        let s = SweepSpec {
+            enobs: vec![8.0; 1 << 17],
+            total_throughputs: vec![1e9; 1 << 17],
+            tech_nms: vec![32.0; 1 << 17],
+            n_adcs: vec![1; 1 << 17],
+        };
+        let _ = s.points();
+    }
+
+    #[test]
+    fn empty_axis_means_empty_grid() {
+        let s = SweepSpec {
+            enobs: vec![],
+            total_throughputs: vec![1e9],
+            tech_nms: vec![32.0],
+            n_adcs: vec![1],
+        };
+        assert_eq!(s.len(), 0);
+        assert!(s.is_empty());
+        assert!(s.points().is_empty());
+        assert_eq!(s.chunks(8).count(), 0);
+        let mut buf = Vec::new();
+        s.fill_range(0..0, &mut buf);
+        assert!(buf.is_empty());
     }
 }

@@ -1,11 +1,34 @@
 //! Threaded execution substrate.
 //!
-//! The offline registry has no tokio; the DSE engine's needs are
-//! embarrassingly parallel batch evaluation, which scoped threads plus an
-//! atomic work index cover with less machinery and no unsafe code.
+//! The offline registry has no tokio/rayon; the DSE engine's needs are
+//! embarrassingly parallel batch evaluation. The substrate is a single
+//! persistent [`Pool`] of worker threads (created once, reused across
+//! sweep calls — no per-call thread spawn) with per-worker chunk deques
+//! and work-stealing for uneven items.
+//!
+//! ## Result path is lock-free
+//!
+//! [`Pool::fill_with`] pre-splits the output buffer into disjoint
+//! `&mut` chunk slices (safe `split_at_mut`) that travel *with* the work
+//! items through the steal deques, so workers write results in place:
+//! no per-chunk mutex on the result path, no post-hoc sort/stitch copy.
+//! The only locks are on the *claim* path (one uncontended per-worker
+//! deque lock per chunk claim) and a once-per-worker push in
+//! [`Pool::fold_chunks`].
+//!
+//! ## One `unsafe`
+//!
+//! Dispatching a borrowed closure to persistent (`'static`) worker
+//! threads requires erasing its lifetime — the same technique every
+//! scoped thread-pool uses. The erasure lives in [`Pool::broadcast`],
+//! which does not return until every worker has finished running the
+//! closure, so the erased borrow can never dangle. Everything layered on
+//! top (chunking, stealing, output splitting) is safe code.
 
-use std::sync::Mutex;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::collections::VecDeque;
+use std::ops::Range;
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::{JoinHandle, ThreadId};
 
 /// Number of worker threads to use by default (logical CPUs, capped).
 pub fn default_workers() -> usize {
@@ -15,17 +38,333 @@ pub fn default_workers() -> usize {
         .min(32)
 }
 
-/// Work-claim chunks per worker: enough granularity to load-balance
-/// uneven items without contending on the claim counter per item.
+/// Work-claim chunks per worker: enough granularity for stealing to
+/// load-balance uneven items without a deque transaction per item.
 const CLAIMS_PER_WORKER: usize = 4;
 
-/// Apply `f` to every item in parallel, preserving input order in the
-/// output. `workers = 1` degrades to a plain serial map (no threads).
+thread_local! {
+    /// True on threads owned by a [`Pool`]. Public entry points degrade
+    /// to serial execution when called from a worker, so nested
+    /// parallelism cannot deadlock the pool against itself.
+    static IS_POOL_WORKER: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
+}
+
+/// The closure currently being broadcast to the workers, with its borrow
+/// lifetime erased (see [`Pool::broadcast`] for the safety argument).
+struct Job(*const (dyn Fn(usize) + Sync));
+
+// SAFETY: the pointee is `Sync` (shared calls from many threads are fine)
+// and `broadcast` keeps it alive for the whole time workers can reach it.
+unsafe impl Send for Job {}
+
+struct PoolState {
+    /// Bumped once per broadcast so each worker runs each job exactly once.
+    epoch: u64,
+    job: Option<Job>,
+    /// Workers still running the current job.
+    active: usize,
+    /// First panic payload observed while running the current job.
+    panic: Option<Box<dyn std::any::Any + Send>>,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<PoolState>,
+    /// Workers wait here for a new epoch.
+    work_cv: Condvar,
+    /// The submitter waits here for `active` to reach zero.
+    done_cv: Condvar,
+}
+
+/// A persistent worker pool: threads are spawned once and reused across
+/// calls (asserted by the thread-id stability test below). Construct your
+/// own for an isolated width, or share the process-wide [`Pool::global`].
+pub struct Pool {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+    workers: usize,
+}
+
+impl Pool {
+    /// Spawn a pool with `workers` persistent threads (`workers >= 1`).
+    pub fn new(workers: usize) -> Pool {
+        assert!(workers >= 1, "pool needs at least one worker");
+        let shared = Arc::new(Shared {
+            state: Mutex::new(PoolState {
+                epoch: 0,
+                job: None,
+                active: 0,
+                panic: None,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
+        let handles = (0..workers)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("cimdse-pool-{i}"))
+                    .spawn(move || worker_loop(&shared, i))
+                    .expect("spawning pool worker")
+            })
+            .collect();
+        Pool { shared, handles, workers }
+    }
+
+    /// The process-wide shared pool ([`default_workers`] threads), created
+    /// on first use and reused by every sweep for the rest of the process.
+    pub fn global() -> &'static Pool {
+        static GLOBAL: OnceLock<Pool> = OnceLock::new();
+        GLOBAL.get_or_init(|| Pool::new(default_workers()))
+    }
+
+    /// Number of worker threads.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Thread ids of the persistent workers (stable for the pool's life).
+    pub fn worker_ids(&self) -> Vec<ThreadId> {
+        self.handles.iter().map(|h| h.thread().id()).collect()
+    }
+
+    /// Whether the calling thread is a pool worker (any pool's).
+    pub fn on_worker_thread() -> bool {
+        IS_POOL_WORKER.with(|f| f.get())
+    }
+
+    /// Run `f(worker_index)` once on every worker, returning when all have
+    /// finished. Concurrent submitters queue (first-come, first-served);
+    /// panics in `f` are captured and re-raised on the submitting thread.
+    fn broadcast(&self, f: &(dyn Fn(usize) + Sync)) {
+        // SAFETY: erase the closure borrow's lifetime so it can sit in the
+        // 'static worker-visible slot. The erased pointer is cleared and
+        // this function only returns after every worker has decremented
+        // `active` for this epoch, i.e. after the last use of the borrow,
+        // so it never outlives the data it points to.
+        let job = Job(unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) + Sync), *const (dyn Fn(usize) + Sync)>(f)
+        });
+        let mut st = self.shared.state.lock().unwrap();
+        // Another submitter may own the pool right now (tests and callers
+        // share `Pool::global`): wait for its job to fully drain first.
+        while st.job.is_some() || st.active != 0 {
+            st = self.shared.done_cv.wait(st).unwrap();
+        }
+        st.epoch += 1;
+        st.active = self.workers;
+        st.job = Some(job);
+        self.shared.work_cv.notify_all();
+        while st.active != 0 {
+            st = self.shared.done_cv.wait(st).unwrap();
+        }
+        st.job = None;
+        let panic = st.panic.take();
+        // Wake submitters queued on the slot (workers only notify when
+        // `active` hits zero, which queued submitters may have missed).
+        self.shared.done_cv.notify_all();
+        drop(st);
+        if let Some(payload) = panic {
+            std::panic::resume_unwind(payload);
+        }
+    }
+
+    /// Fill `out[i] = f(i)` for every index, in parallel, writing results
+    /// in place through disjoint `split_at_mut` slices (no lock on the
+    /// result path). See [`Pool::fill_chunk_ranges`] for the chunking and
+    /// stealing mechanics.
+    pub fn fill_with<O, F>(&self, out: &mut [O], chunk: usize, f: F)
+    where
+        O: Send,
+        F: Fn(usize) -> O + Sync,
+    {
+        self.fill_chunk_ranges(out, chunk, |start, slice| {
+            for (i, slot) in slice.iter_mut().enumerate() {
+                *slot = f(start + i);
+            }
+        });
+    }
+
+    /// Fill `out` in parallel, one call of `f(start_index, chunk_slice)`
+    /// per contiguous chunk of up to `chunk` elements (`f` must overwrite
+    /// the whole slice). The output buffer is pre-split into disjoint
+    /// `&mut` chunk slices (safe `split_at_mut`) that travel through the
+    /// per-worker steal deques with their start indices, so results land
+    /// in place — no lock on the result path. Worker `w` claims its own
+    /// contiguous run of chunks first (locality), then steals from the
+    /// back of other workers' deques to balance uneven items.
+    ///
+    /// Degrades to a serial loop when called from inside a pool worker
+    /// (nested parallelism would otherwise deadlock the pool).
+    pub fn fill_chunk_ranges<O, F>(&self, out: &mut [O], chunk: usize, f: F)
+    where
+        O: Send,
+        F: Fn(usize, &mut [O]) + Sync,
+    {
+        if out.is_empty() {
+            return;
+        }
+        let chunk = chunk.clamp(1, out.len());
+        if Pool::on_worker_thread() {
+            let len = out.len();
+            let mut start = 0usize;
+            for slice in out.chunks_mut(chunk) {
+                f(start, slice);
+                start += slice.len();
+            }
+            debug_assert_eq!(start, len);
+            return;
+        }
+        // Deal contiguous (start, slice) chunks across the worker deques:
+        // worker w gets a contiguous run of chunks, preserving locality.
+        let n_chunks = out.len().div_ceil(chunk);
+        let mut deques: Vec<VecDeque<(usize, &mut [O])>> =
+            (0..self.workers).map(|_| VecDeque::new()).collect();
+        let mut rest = out;
+        let mut start = 0usize;
+        let mut ci = 0usize;
+        while !rest.is_empty() {
+            let take = chunk.min(rest.len());
+            let (head, tail) = rest.split_at_mut(take);
+            deques[ci * self.workers / n_chunks].push_back((start, head));
+            start += take;
+            rest = tail;
+            ci += 1;
+        }
+        let queues: Vec<Mutex<VecDeque<(usize, &mut [O])>>> =
+            deques.into_iter().map(Mutex::new).collect();
+        let f = &f;
+        let queues = &queues;
+        self.broadcast(&move |w| {
+            while let Some((start, slice)) = claim(queues, w) {
+                f(start, slice);
+            }
+        });
+    }
+
+    /// Fold the index range `0..n` in parallel: each worker builds a local
+    /// accumulator with `init` and folds every chunk range it claims (own
+    /// deque first, then stolen) with `fold`; the per-worker accumulators
+    /// are returned for the caller to merge. Claim order is
+    /// non-deterministic under stealing, so `fold`/merging must be
+    /// insensitive to chunk order (min/max/count/argmin-by-index style
+    /// rollups; see [`crate::dse::run_sweep_fold`]).
+    pub fn fold_chunks<A, I, F>(&self, n: usize, chunk: usize, init: I, fold: F) -> Vec<A>
+    where
+        A: Send,
+        I: Fn() -> A + Sync,
+        F: Fn(&mut A, Range<usize>) + Sync,
+    {
+        if n == 0 {
+            return Vec::new();
+        }
+        if Pool::on_worker_thread() {
+            let mut acc = init();
+            fold(&mut acc, 0..n);
+            return vec![acc];
+        }
+        let chunk = chunk.clamp(1, n);
+        let n_chunks = n.div_ceil(chunk);
+        let mut deques: Vec<VecDeque<Range<usize>>> =
+            (0..self.workers).map(|_| VecDeque::new()).collect();
+        for ci in 0..n_chunks {
+            let start = ci * chunk;
+            deques[ci * self.workers / n_chunks].push_back(start..(start + chunk).min(n));
+        }
+        let queues: Vec<Mutex<VecDeque<Range<usize>>>> =
+            deques.into_iter().map(Mutex::new).collect();
+        let accs: Mutex<Vec<A>> = Mutex::new(Vec::with_capacity(self.workers));
+        let init = &init;
+        let fold = &fold;
+        let queues_ref = &queues;
+        let accs_ref = &accs;
+        self.broadcast(&move |w| {
+            let mut acc: Option<A> = None;
+            while let Some(range) = claim(queues_ref, w) {
+                fold(acc.get_or_insert_with(init), range);
+            }
+            if let Some(acc) = acc {
+                // One lock per worker per call, after all folding is done.
+                accs_ref.lock().unwrap().push(acc);
+            }
+        });
+        accs.into_inner().unwrap()
+    }
+}
+
+/// Claim a chunk for worker `w`: front of its own deque, else steal from
+/// the back of the others (back-stealing keeps the owner's front pops and
+/// thieves' back pops on opposite ends of a contiguous index run).
+fn claim<T>(queues: &[Mutex<VecDeque<T>>], w: usize) -> Option<T> {
+    if let Some(task) = queues[w].lock().unwrap().pop_front() {
+        return Some(task);
+    }
+    for off in 1..queues.len() {
+        let victim = (w + off) % queues.len();
+        if let Some(task) = queues[victim].lock().unwrap().pop_back() {
+            return Some(task);
+        }
+    }
+    None
+}
+
+fn worker_loop(shared: &Shared, worker_index: usize) {
+    IS_POOL_WORKER.with(|f| f.set(true));
+    let mut seen_epoch = 0u64;
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.epoch != seen_epoch {
+                    if let Some(Job(ptr)) = &st.job {
+                        seen_epoch = st.epoch;
+                        break *ptr;
+                    }
+                }
+                st = shared.work_cv.wait(st).unwrap();
+            }
+        };
+        // SAFETY: `broadcast` keeps the pointee alive (and the pointer in
+        // the slot) until `active` hits zero, which happens strictly after
+        // this call returns and we decrement below.
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            (unsafe { &*job })(worker_index);
+        }));
+        let mut st = shared.state.lock().unwrap();
+        if let Err(payload) = result {
+            st.panic.get_or_insert(payload);
+        }
+        st.active -= 1;
+        if st.active == 0 {
+            shared.done_cv.notify_all();
+        }
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.shared.work_cv.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Apply `f` to every item in parallel on the shared [`Pool::global`],
+/// preserving input order in the output. `workers = 1` degrades to a plain
+/// serial map (no threads); any other value routes through the pool (the
+/// pool's fixed width governs actual parallelism).
 ///
-/// Workers claim *contiguous index ranges* off one atomic counter and
-/// push each finished `(start, Vec<U>)` run into a shared buffer — one
-/// lock acquisition per chunk, not one `Mutex<Option<U>>` per element —
-/// then the runs are stitched back in input order.
+/// Results are written in place through disjoint output-chunk slices —
+/// no lock, no sort, and no per-chunk buffer on the result path.
 pub fn parallel_map<T, U, F>(items: &[T], workers: usize, f: F) -> Vec<U>
 where
     T: Sync,
@@ -36,46 +375,20 @@ where
     if workers == 1 || items.len() <= 1 {
         return items.iter().map(|t| f(t)).collect();
     }
-
-    let chunk = items
-        .len()
-        .div_ceil(workers * CLAIMS_PER_WORKER)
-        .max(1);
-    let n_chunks = items.len().div_ceil(chunk);
-
-    let next_chunk = AtomicUsize::new(0);
-    let runs: Mutex<Vec<(usize, Vec<U>)>> = Mutex::new(Vec::with_capacity(n_chunks));
-
-    std::thread::scope(|scope| {
-        for _ in 0..workers.min(n_chunks) {
-            scope.spawn(|| loop {
-                let ci = next_chunk.fetch_add(1, Ordering::Relaxed);
-                if ci >= n_chunks {
-                    break;
-                }
-                let start = ci * chunk;
-                let end = (start + chunk).min(items.len());
-                let out: Vec<U> = items[start..end].iter().map(|t| f(t)).collect();
-                runs.lock().unwrap().push((start, out));
-            });
-        }
-    });
-
-    let mut runs = runs.into_inner().unwrap();
-    runs.sort_unstable_by_key(|&(start, _)| start);
-    debug_assert_eq!(runs.len(), n_chunks, "worker left a hole");
-    let mut out = Vec::with_capacity(items.len());
-    for (_, mut run) in runs {
-        out.append(&mut run);
-    }
-    debug_assert_eq!(out.len(), items.len());
-    out
+    let pool = Pool::global();
+    let chunk = items.len().div_ceil(pool.workers() * CLAIMS_PER_WORKER).max(1);
+    // `Option<U>` gives the workers initialized slots to overwrite in
+    // place; the final unwrap pass is a move, not a recompute or stitch.
+    let mut out: Vec<Option<U>> = std::iter::repeat_with(|| None).take(items.len()).collect();
+    pool.fill_with(&mut out, chunk, |i| Some(f(&items[i])));
+    out.into_iter()
+        .map(|slot| slot.expect("pool worker left a hole"))
+        .collect()
 }
 
 /// Apply `f` to contiguous chunks of `items` in parallel (one call per
 /// chunk), concatenating per-chunk outputs in order. Lower dispatch
-/// overhead than [`parallel_map`] when per-item work is tiny — this is the
-/// DSE sweep's hot-path shape.
+/// overhead than [`parallel_map`] when per-item work is tiny.
 pub fn parallel_chunks<T, U, F>(items: &[T], chunk: usize, workers: usize, f: F) -> Vec<U>
 where
     T: Sync,
@@ -91,6 +404,7 @@ where
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::collections::BTreeSet;
 
     #[test]
     fn preserves_order() {
@@ -163,5 +477,109 @@ mod tests {
     fn default_workers_reasonable() {
         let w = default_workers();
         assert!((1..=32).contains(&w));
+    }
+
+    #[test]
+    fn fill_with_writes_every_index() {
+        let pool = Pool::new(3);
+        for len in [1usize, 2, 7, 64, 1000] {
+            let mut out = vec![0usize; len];
+            pool.fill_with(&mut out, 5, |i| i * 3);
+            assert!(out.iter().enumerate().all(|(i, &v)| v == i * 3), "len={len}");
+        }
+    }
+
+    #[test]
+    fn fold_chunks_covers_all_indices_exactly_once() {
+        let pool = Pool::new(4);
+        for n in [1usize, 10, 97, 1000] {
+            let accs = pool.fold_chunks(
+                n,
+                7,
+                Vec::new,
+                |acc: &mut Vec<usize>, range| acc.extend(range),
+            );
+            let mut all: Vec<usize> = accs.into_iter().flatten().collect();
+            all.sort_unstable();
+            assert_eq!(all, (0..n).collect::<Vec<_>>(), "n={n}");
+        }
+    }
+
+    #[test]
+    fn pool_is_reused_across_invocations() {
+        // The acceptance-criterion test: two sweep-shaped invocations in
+        // one process are served by the same persistent threads.
+        let pool = Pool::global();
+        let worker_ids: BTreeSet<ThreadId> = pool.worker_ids().into_iter().collect();
+        assert_eq!(worker_ids.len(), pool.workers());
+
+        let observe = || -> BTreeSet<ThreadId> {
+            let mut out: Vec<Option<ThreadId>> = vec![None; 256];
+            pool.fill_with(&mut out, 1, |_| Some(std::thread::current().id()));
+            out.into_iter().map(Option::unwrap).collect()
+        };
+        let first = observe();
+        let second = observe();
+        assert!(!first.is_empty() && !second.is_empty());
+        // Every observed thread is one of the persistent workers — no
+        // spawn-per-call — and the pool reports the same ids afterwards.
+        assert!(first.is_subset(&worker_ids), "{first:?} vs {worker_ids:?}");
+        assert!(second.is_subset(&worker_ids));
+        assert!(!first.contains(&std::thread::current().id()));
+        let after: BTreeSet<ThreadId> = pool.worker_ids().into_iter().collect();
+        assert_eq!(worker_ids, after);
+    }
+
+    #[test]
+    fn nested_use_from_worker_degrades_serially() {
+        let pool = Pool::new(2);
+        let mut out = vec![0u64; 32];
+        // The fill closure itself calls parallel_map: must not deadlock.
+        pool.fill_with(&mut out, 4, |i| {
+            let items = vec![i as u64; 8];
+            parallel_map(&items, 4, |x| x + 1).iter().sum()
+        });
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v, 8 * (i as u64 + 1));
+        }
+    }
+
+    #[test]
+    fn worker_panic_propagates_and_pool_survives() {
+        let pool = Pool::new(2);
+        let boom = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut out = vec![0usize; 16];
+            pool.fill_with(&mut out, 1, |i| {
+                if i == 7 {
+                    panic!("kaboom at 7");
+                }
+                i
+            });
+        }));
+        assert!(boom.is_err(), "panic must reach the submitter");
+        // The pool must still be serviceable after a job panicked.
+        let mut out = vec![0usize; 8];
+        pool.fill_with(&mut out, 2, |i| i + 1);
+        assert_eq!(out, vec![1, 2, 3, 4, 5, 6, 7, 8]);
+    }
+
+    #[test]
+    fn uneven_item_cost_is_balanced_by_stealing() {
+        // Front-loaded cost: without stealing, worker 0 would do almost
+        // all the work; the test only asserts correctness (the balancing
+        // is observable in the perf bench).
+        let pool = Pool::new(4);
+        let mut out = vec![0u64; 400];
+        pool.fill_with(&mut out, 8, |i| {
+            let spin = if i < 40 { 2000 } else { 10 };
+            (0..spin).fold(i as u64, |a, b| a.wrapping_add(b))
+        });
+        let expect: Vec<u64> = (0..400u64)
+            .map(|i| {
+                let spin = if i < 40 { 2000u64 } else { 10 };
+                (0..spin).fold(i, |a, b| a.wrapping_add(b))
+            })
+            .collect();
+        assert_eq!(out, expect);
     }
 }

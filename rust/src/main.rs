@@ -7,6 +7,7 @@
 //! * `sweep`   — DSE over a design-point grid (native or PJRT backend).
 //! * `map`     — map a workload onto a RAELLA variant, report energy/area.
 //! * `figures` — regenerate the paper's Figs. 2–5.
+//! * `bench-report` — validate/summarize a `BENCH_*.json` perf artifact.
 
 use cimdse::adc::{AdcModel, AdcQuery, fit_model, tuning::TuningPoint};
 use cimdse::arch::raella::{RaellaVariant, raella};
@@ -41,6 +42,7 @@ SUBCOMMANDS
   explore  [--workload NAME]                      accelerator-level DSE
   survey   [--n 700] [--seed 1997]                survey analytics (FoM trends)
   figures  [--fig 2|3|4|5|all]                    regenerate paper figures
+  bench-report --path BENCH_sweep.json            validate + summarize a perf artifact
 ";
 
 fn main() {
@@ -60,6 +62,7 @@ fn main() {
         Some("explore") => cmd_explore(&args),
         Some("survey") => cmd_survey(&args),
         Some("figures") => cmd_figures(&args),
+        Some("bench-report") => cmd_bench_report(&args),
         _ => {
             println!("{USAGE}");
             Ok(())
@@ -368,6 +371,62 @@ fn cmd_map(args: &Args) -> Result<()> {
         arrays,
         100.0 * area.adc_fraction(),
     );
+    Ok(())
+}
+
+fn cmd_bench_report(args: &Args) -> Result<()> {
+    // CI gate: parse a `BENCH_*.json` perf artifact (bench_util::JsonReport
+    // schema), validate its shape, and summarize it. Any structural
+    // problem is a hard error so ci.sh fails on missing/malformed output.
+    let path = args
+        .opt("path")
+        .ok_or_else(|| Error::Config("bench-report needs --path <BENCH_*.json>".into()))?;
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| Error::Config(format!("cannot read bench report {path}: {e}")))?;
+    let doc = cimdse::config::parse_json(&text)?;
+    let schema = doc.require_usize("schema")?;
+    if schema != 1 {
+        return Err(Error::Config(format!("unsupported bench report schema {schema}")));
+    }
+    let bench = doc.require_str("bench")?;
+    let cases = match doc.get("cases") {
+        Some(cimdse::config::Value::Table(map)) if !map.is_empty() => map,
+        _ => return Err(Error::Config("bench report has no `cases` table".into())),
+    };
+    let mut t = Table::new(vec!["case", "median", "Mpts/s", "points"]);
+    for (name, case) in cases {
+        let median = case.require_f64("median_s")?;
+        if !(median.is_finite() && median > 0.0) {
+            return Err(Error::Config(format!("case `{name}`: bad median_s {median}")));
+        }
+        t.row(vec![
+            name.clone(),
+            cimdse::bench_util::fmt_secs(median),
+            match case.get("mpts_per_s").and_then(cimdse::config::Value::as_f64) {
+                Some(v) => format!("{v:.2}"),
+                None => "-".into(),
+            },
+            match case.get("points").and_then(cimdse::config::Value::as_f64) {
+                Some(v) => format!("{v:.0}"),
+                None => "-".into(),
+            },
+        ]);
+    }
+    println!(
+        "bench `{bench}` (quick={}, {} workers): {} cases",
+        doc.get("quick").and_then(cimdse::config::Value::as_bool).unwrap_or(false),
+        doc.require_f64("workers")? as usize,
+        cases.len()
+    );
+    println!("{}", t.render());
+    if let Some(cimdse::config::Value::Table(derived)) = doc.get("derived") {
+        for (name, v) in derived {
+            if let Some(x) = v.as_f64() {
+                println!("  {name} = {x:.3}");
+            }
+        }
+    }
+    println!("bench report ok: {path}");
     Ok(())
 }
 

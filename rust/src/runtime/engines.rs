@@ -108,9 +108,12 @@ impl CrossbarEngine {
     /// Run `y = cim_matmul(x, w; adc_step)`; shapes must match the artifact.
     pub fn run(&self, x: &[f32], w: &[f32], adc_step: f32) -> Result<Vec<f32>> {
         let (b, i, o) = self.shape;
+        // Literals borrow their buffers: scalars need named storage that
+        // outlives the execute call.
+        let step_buf = [adc_step];
         let x_lit = literal_f32(x, &[b as i64, i as i64])?;
         let w_lit = literal_f32(w, &[i as i64, o as i64])?;
-        let step = literal_f32(&[adc_step], &[1])?;
+        let step = literal_f32(&step_buf, &[1])?;
         self.exe.run_f32(&[x_lit, w_lit, step])
     }
 }
@@ -149,13 +152,16 @@ impl CimMlpEngine {
         scale1: f32,
     ) -> Result<Vec<f32>> {
         let (b, i, h, o) = self.shape;
+        // Literals borrow their buffers: scalars need named storage that
+        // outlives the execute call.
+        let (step1_buf, step2_buf, scale1_buf) = ([step1], [step2], [scale1]);
         let inputs = [
             literal_f32(x, &[b as i64, i as i64])?,
             literal_f32(w1, &[i as i64, h as i64])?,
             literal_f32(w2, &[h as i64, o as i64])?,
-            literal_f32(&[step1], &[1])?,
-            literal_f32(&[step2], &[1])?,
-            literal_f32(&[scale1], &[1])?,
+            literal_f32(&step1_buf, &[1])?,
+            literal_f32(&step2_buf, &[1])?,
+            literal_f32(&scale1_buf, &[1])?,
         ];
         self.exe.run_f32(&inputs)
     }

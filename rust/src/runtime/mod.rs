@@ -127,20 +127,21 @@ impl Manifest {
     }
 }
 
-/// A host-side f32 literal: flat data plus shape. Backend-independent;
-/// the pjrt backend converts it into an `xla::Literal` (one memcpy) at
-/// execute time, which keeps the DSE batch-marshalling hot path cheap
-/// (EXPERIMENTS.md §Perf).
+/// A host-side f32 literal: *borrowed* flat data plus shape. The data
+/// buffer stays wherever the caller marshalled it; the pjrt backend
+/// copies the borrowed slice straight into an `xla::Literal`, so the DSE
+/// batch-marshalling hot path is a single memcpy (EXPERIMENTS.md §Perf —
+/// the interim owned `Literal` cost a second slice → `Vec` copy here).
 #[derive(Clone, Debug, PartialEq)]
-pub struct Literal {
-    data: Vec<f32>,
+pub struct Literal<'a> {
+    data: &'a [f32],
     shape: Vec<i64>,
 }
 
-impl Literal {
+impl<'a> Literal<'a> {
     /// The flat element buffer.
-    pub fn data(&self) -> &[f32] {
-        &self.data
+    pub fn data(&self) -> &'a [f32] {
+        self.data
     }
 
     /// The literal's shape (row-major dims).
@@ -149,8 +150,8 @@ impl Literal {
     }
 }
 
-/// Build an f32 literal of the given shape from a flat slice.
-pub fn literal_f32(data: &[f32], shape: &[i64]) -> Result<Literal> {
+/// Build an f32 literal of the given shape borrowing a flat slice.
+pub fn literal_f32<'a>(data: &'a [f32], shape: &[i64]) -> Result<Literal<'a>> {
     let expect: i64 = shape.iter().product();
     if expect != data.len() as i64 {
         return Err(Error::Runtime(format!(
@@ -158,7 +159,7 @@ pub fn literal_f32(data: &[f32], shape: &[i64]) -> Result<Literal> {
             data.len()
         )));
     }
-    Ok(Literal { data: data.to_vec(), shape: shape.to_vec() })
+    Ok(Literal { data, shape: shape.to_vec() })
 }
 
 /// A compiled HLO executable on the PJRT backend.
@@ -176,7 +177,7 @@ impl Executable {
     /// Execute with the given input literals and return the flattened f32
     /// output (the unwrapped 1-tuple root — aot.py lowers every graph
     /// with `return_tuple=True`).
-    pub fn run_f32(&self, inputs: &[Literal]) -> Result<Vec<f32>> {
+    pub fn run_f32(&self, inputs: &[Literal<'_>]) -> Result<Vec<f32>> {
         self.inner.run_f32(inputs)
     }
 

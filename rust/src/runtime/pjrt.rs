@@ -33,9 +33,10 @@ pub fn compile(path: &Path) -> Result<BackendExecutable> {
 /// Marshal a host literal into an `xla::Literal`.
 ///
 /// Uses `create_from_shape_and_untyped_data` (one memcpy) rather than
-/// `vec1(..).reshape(..)` (copy + reshape) — this is the DSE batch
-/// marshalling hot path (EXPERIMENTS.md §Perf).
-fn to_xla(lit: &Literal) -> Result<xla::Literal> {
+/// `vec1(..).reshape(..)` (copy + reshape) — and the [`Literal`] borrows
+/// the caller's marshalled buffer, so this single memcpy is the only
+/// copy on the DSE batch marshalling hot path (EXPERIMENTS.md §Perf).
+fn to_xla(lit: &Literal<'_>) -> Result<xla::Literal> {
     let dims: Vec<usize> = lit.shape().iter().map(|&d| d as usize).collect();
     let data = lit.data();
     let bytes = unsafe {
@@ -51,7 +52,7 @@ fn to_xla(lit: &Literal) -> Result<xla::Literal> {
 impl BackendExecutable {
     /// Execute with the given inputs; returns the unwrapped 1-tuple root
     /// as a flat f32 vector.
-    pub fn run_f32(&self, inputs: &[Literal]) -> Result<Vec<f32>> {
+    pub fn run_f32(&self, inputs: &[Literal<'_>]) -> Result<Vec<f32>> {
         let lits: Vec<xla::Literal> =
             inputs.iter().map(to_xla).collect::<Result<Vec<_>>>()?;
         let result = self.exe.execute::<xla::Literal>(&lits)?;

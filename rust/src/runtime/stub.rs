@@ -30,7 +30,7 @@ pub fn compile(_path: &Path) -> Result<BackendExecutable> {
 
 impl BackendExecutable {
     /// Unreachable in practice (compile never succeeds); total anyway.
-    pub fn run_f32(&self, _inputs: &[Literal]) -> Result<Vec<f32>> {
+    pub fn run_f32(&self, _inputs: &[Literal<'_>]) -> Result<Vec<f32>> {
         Err(unavailable())
     }
 

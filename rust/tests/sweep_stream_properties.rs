@@ -1,0 +1,260 @@
+//! Property tests for the streaming sweep engine: the indexed /
+//! chunked / folded / prepared-kernel paths must reproduce the
+//! materialized `run_sweep` + `AdcModel::eval` path *exactly* — same
+//! order, same bits (stronger than the 1-ulp contract) — across
+//! randomized specs including empty and single-axis grids.
+
+use cimdse::adc::{AdcMetrics, AdcModel, AdcQuery, PreparedModel, TuningPoint};
+use cimdse::dse::{
+    NativeEvaluator, SweepSpec, pareto_front, run_sweep, run_sweep_fold, run_sweep_prepared,
+    sweep_min_eap, sweep_power_area_front,
+};
+use cimdse::testing::{Config, check};
+use cimdse::util::Rng;
+use cimdse::util::logspace::log10;
+
+fn metric_bits(m: &AdcMetrics) -> [u64; 4] {
+    m.to_bits()
+}
+
+/// A random spec with 0..=4 values per axis (so empty and single-axis
+/// grids appear regularly), all inside the model's valid ranges.
+fn arbitrary_spec(rng: &mut Rng, allow_empty: bool) -> SweepSpec {
+    let min = usize::from(!allow_empty);
+    let axis_len = |rng: &mut Rng| min + rng.index(5 - min);
+    SweepSpec {
+        enobs: (0..axis_len(rng)).map(|_| rng.uniform(2.0, 14.0)).collect(),
+        total_throughputs: (0..axis_len(rng))
+            .map(|_| 10f64.powf(rng.uniform(4.0, 10.5)))
+            .collect(),
+        tech_nms: (0..axis_len(rng)).map(|_| rng.uniform(7.0, 180.0)).collect(),
+        n_adcs: (0..axis_len(rng)).map(|_| 1 + rng.index(64) as u32).collect(),
+    }
+}
+
+/// A model that is sometimes tuned, so the offset-decade paths are
+/// exercised too.
+fn arbitrary_model(rng: &mut Rng) -> AdcModel {
+    let base = AdcModel::default();
+    if rng.bool(0.5) {
+        return base;
+    }
+    base.tuned_to(&TuningPoint {
+        query: AdcQuery {
+            enob: rng.uniform(4.0, 10.0),
+            total_throughput: 10f64.powf(rng.uniform(6.0, 10.0)),
+            tech_nm: 32.0,
+            n_adcs: 1,
+        },
+        energy_pj_per_convert: 10f64.powf(rng.uniform(-1.0, 1.5)),
+        area_um2: if rng.bool(0.5) { Some(10f64.powf(rng.uniform(2.0, 5.0))) } else { None },
+    })
+}
+
+#[test]
+fn point_at_and_fill_range_match_materialized_points() {
+    check(Config::default().cases(60), |rng| {
+        let spec = arbitrary_spec(rng, true);
+        let pts = spec.points();
+        assert_eq!(pts.len(), spec.len());
+        for (i, p) in pts.iter().enumerate() {
+            assert_eq!(&spec.point_at(i), p);
+        }
+        if !pts.is_empty() {
+            let a = rng.index(pts.len());
+            let b = a + rng.index(pts.len() - a + 1);
+            let mut buf = Vec::new();
+            spec.fill_range(a..b, &mut buf);
+            assert_eq!(buf.as_slice(), &pts[a..b]);
+        }
+    });
+}
+
+#[test]
+fn prepared_row_evaluation_is_bit_identical_to_eval() {
+    check(Config::default().cases(120), |rng| {
+        let model = arbitrary_model(rng);
+        let prepared = PreparedModel::new(&model);
+        let q = AdcQuery {
+            enob: rng.uniform(2.0, 14.0),
+            total_throughput: 10f64.powf(rng.uniform(4.0, 10.5)),
+            tech_nm: rng.uniform(7.0, 180.0),
+            n_adcs: 1 + rng.index(64) as u32,
+        };
+        let row = prepared.row(q.enob, q.tech_nm);
+        assert_eq!(metric_bits(&row.eval_query(&q)), metric_bits(&model.eval(&q)));
+        // And through the sweep's cached-log10 route.
+        let cached = log10(q.total_throughput / q.n_adcs as f64);
+        assert_eq!(
+            metric_bits(&row.eval_log_f(cached, q.total_throughput, q.n_adcs)),
+            metric_bits(&model.eval(&q))
+        );
+    });
+}
+
+#[test]
+fn prepared_sweep_matches_materialized_run_sweep_bitwise() {
+    check(Config::default().cases(40), |rng| {
+        let spec = arbitrary_spec(rng, true);
+        let model = arbitrary_model(rng);
+        let baseline = run_sweep(&spec, &NativeEvaluator::serial(model)).unwrap();
+        for workers in [1usize, 4] {
+            let fast = run_sweep_prepared(&spec, &model, workers).unwrap();
+            assert_eq!(fast.len(), baseline.len(), "workers={workers}");
+            for (a, b) in baseline.iter().zip(&fast) {
+                assert_eq!(a.query, b.query);
+                assert_eq!(metric_bits(&a.metrics), metric_bits(&b.metrics));
+            }
+        }
+    });
+}
+
+#[test]
+fn serial_fold_replays_the_materialized_sweep_in_order() {
+    check(Config::default().cases(40), |rng| {
+        let spec = arbitrary_spec(rng, true);
+        let model = arbitrary_model(rng);
+        let baseline = run_sweep(&spec, &NativeEvaluator::serial(model)).unwrap();
+        let replayed = run_sweep_fold(
+            &spec,
+            &model,
+            1,
+            Vec::new,
+            |acc: &mut Vec<(usize, AdcQuery, AdcMetrics)>, i, q, m| acc.push((i, *q, *m)),
+            |mut a, b| {
+                a.extend(b);
+                a
+            },
+        );
+        assert_eq!(replayed.len(), baseline.len());
+        for (j, (i, q, m)) in replayed.iter().enumerate() {
+            assert_eq!(*i, j, "serial fold must visit points in grid order");
+            assert_eq!(*q, baseline[j].query);
+            assert_eq!(metric_bits(m), metric_bits(&baseline[j].metrics));
+        }
+    });
+}
+
+#[test]
+fn parallel_fold_rollups_match_materialized_exactly() {
+    check(Config::default().cases(25), |rng| {
+        let spec = arbitrary_spec(rng, true);
+        let model = arbitrary_model(rng);
+        let all = run_sweep(&spec, &NativeEvaluator::serial(model)).unwrap();
+
+        // Count rollup.
+        let count = run_sweep_fold(
+            &spec,
+            &model,
+            4,
+            || 0usize,
+            |acc, _, _, _| *acc += 1,
+            |a, b| a + b,
+        );
+        assert_eq!(count, all.len());
+
+        // Min-EAP rollup (deterministic index tie-break).
+        let brute = all
+            .iter()
+            .enumerate()
+            .min_by(|(i, a), (j, b)| {
+                let ea = a.metrics.energy_pj_per_convert * a.metrics.total_area_um2;
+                let eb = b.metrics.energy_pj_per_convert * b.metrics.total_area_um2;
+                ea.total_cmp(&eb).then(i.cmp(j))
+            })
+            .map(|(_, p)| p);
+        for workers in [1usize, 4] {
+            let streamed = sweep_min_eap(&spec, &model, workers);
+            match (brute, streamed) {
+                (None, None) => {}
+                (Some(b), Some(s)) => {
+                    assert_eq!(s.query, b.query, "workers={workers}");
+                    assert_eq!(metric_bits(&s.metrics), metric_bits(&b.metrics));
+                }
+                (b, s) => panic!("mismatch: brute={:?} streamed={:?}", b.is_some(), s.is_some()),
+            }
+        }
+
+        // Pareto-front rollup: exactly `pareto_front` on the materialized
+        // objectives, regardless of worker count / steal order.
+        let objectives: Vec<(f64, f64)> = all
+            .iter()
+            .map(|p| (p.metrics.total_power_w, p.metrics.total_area_um2))
+            .collect();
+        let brute_front = pareto_front(&objectives);
+        for workers in [1usize, 4] {
+            assert_eq!(
+                sweep_power_area_front(&spec, &model, workers),
+                brute_front,
+                "workers={workers}"
+            );
+        }
+    });
+}
+
+#[test]
+fn single_axis_and_single_point_grids() {
+    let model = AdcModel::default();
+    // Single point.
+    let spec = SweepSpec {
+        enobs: vec![8.0],
+        total_throughputs: vec![1e9],
+        tech_nms: vec![32.0],
+        n_adcs: vec![4],
+    };
+    assert_eq!(spec.len(), 1);
+    let all = run_sweep(&spec, &NativeEvaluator::serial(model)).unwrap();
+    let fast = run_sweep_prepared(&spec, &model, 4).unwrap();
+    assert_eq!(all.len(), 1);
+    assert_eq!(metric_bits(&all[0].metrics), metric_bits(&fast[0].metrics));
+    assert_eq!(
+        metric_bits(&sweep_min_eap(&spec, &model, 4).unwrap().metrics),
+        metric_bits(&all[0].metrics)
+    );
+
+    // One long axis, the rest singletons (row-kernel degenerate shapes).
+    let spec = SweepSpec {
+        enobs: vec![7.0],
+        total_throughputs: cimdse::util::logspace::logspace(1e5, 1e10, 41),
+        tech_nms: vec![32.0],
+        n_adcs: vec![1],
+    };
+    let all = run_sweep(&spec, &NativeEvaluator::serial(model)).unwrap();
+    let fast = run_sweep_prepared(&spec, &model, 1).unwrap();
+    for (a, b) in all.iter().zip(&fast) {
+        assert_eq!(metric_bits(&a.metrics), metric_bits(&b.metrics));
+    }
+}
+
+#[test]
+fn empty_grids_stream_to_empty_results() {
+    let model = AdcModel::default();
+    for empty_axis in 0..4usize {
+        let mut spec = SweepSpec {
+            enobs: vec![8.0],
+            total_throughputs: vec![1e9],
+            tech_nms: vec![32.0],
+            n_adcs: vec![1],
+        };
+        match empty_axis {
+            0 => spec.enobs.clear(),
+            1 => spec.total_throughputs.clear(),
+            2 => spec.tech_nms.clear(),
+            _ => spec.n_adcs.clear(),
+        }
+        assert!(spec.is_empty());
+        assert!(run_sweep(&spec, &NativeEvaluator::serial(model)).unwrap().is_empty());
+        assert!(run_sweep_prepared(&spec, &model, 4).unwrap().is_empty());
+        assert!(sweep_min_eap(&spec, &model, 4).is_none());
+        assert!(sweep_power_area_front(&spec, &model, 4).is_empty());
+        let count = run_sweep_fold(
+            &spec,
+            &model,
+            4,
+            || 0usize,
+            |acc, _, _, _| *acc += 1,
+            |a, b| a + b,
+        );
+        assert_eq!(count, 0);
+    }
+}
