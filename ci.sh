@@ -23,6 +23,30 @@ cargo build --benches --all-features || cargo build --benches
 echo "== example targets compile =="
 cargo build --examples
 
+echo "== shard/merge round-trip (3 processes vs single process, bit-identical) =="
+BIN=target/release/cimdse
+SHARD_DIR=$(mktemp -d)
+trap 'rm -rf "$SHARD_DIR"' EXIT
+SPEC_ARGS=(sweep --spec dense --points 6)
+for i in 0 1 2; do
+  "$BIN" "${SPEC_ARGS[@]}" --shard "$i/3" --out "$SHARD_DIR/shard_$i.json"
+done
+"$BIN" merge-shards "$SHARD_DIR"/shard_0.json "$SHARD_DIR"/shard_1.json \
+  "$SHARD_DIR"/shard_2.json --out "$SHARD_DIR/merged.json"
+"$BIN" "${SPEC_ARGS[@]}" --summary-json "$SHARD_DIR/single.json"
+cmp "$SHARD_DIR/merged.json" "$SHARD_DIR/single.json"
+echo "merged shards == single-process summary (byte-identical)"
+
+echo "== shard resume (completed artifact skipped, deleted one rebuilt) =="
+RESUME_OUT=$("$BIN" "${SPEC_ARGS[@]}" --shard 0/3 --out "$SHARD_DIR/shard_0.json")
+echo "$RESUME_OUT" | grep -q "already complete" \
+  || { echo "ci.sh: completed shard was not skipped: $RESUME_OUT" >&2; exit 1; }
+rm "$SHARD_DIR/shard_1.json"
+"$BIN" "${SPEC_ARGS[@]}" --shard 1/3 --out "$SHARD_DIR/shard_1.json"
+"$BIN" merge-shards "$SHARD_DIR"/shard_*.json --out "$SHARD_DIR/merged2.json"
+cmp "$SHARD_DIR/merged.json" "$SHARD_DIR/merged2.json"
+echo "resumed shard set merges identically"
+
 echo "== perf_hotpaths (quick mode) -> BENCH_sweep.json =="
 rm -f BENCH_sweep.json
 CIMDSE_BENCH_QUICK=1 cargo bench --bench perf_hotpaths

@@ -20,6 +20,19 @@ pub struct Args {
 impl Args {
     /// Parse from an iterator of tokens (typically `std::env::args().skip(1)`).
     pub fn parse<I: IntoIterator<Item = String>>(tokens: I) -> Result<Args> {
+        Args::parse_with_flags(tokens, &[])
+    }
+
+    /// [`Args::parse`] with a set of *declared boolean flags*. An
+    /// undeclared `--name` followed by a non-`--` token is recorded as
+    /// `name = token` (option with value); a declared flag never
+    /// consumes the next token, so a following positional (e.g.
+    /// `merge-shards --allow-partial shard_0.json`) is not swallowed,
+    /// and `--flag=value` on a declared flag is a typed error.
+    pub fn parse_with_flags<I: IntoIterator<Item = String>>(
+        tokens: I,
+        boolean_flags: &[&str],
+    ) -> Result<Args> {
         let mut args = Args::default();
         let mut iter = tokens.into_iter().peekable();
         while let Some(tok) = iter.next() {
@@ -28,7 +41,14 @@ impl Args {
                     return Err(Error::Config("bare `--` is not supported".into()));
                 }
                 if let Some((k, v)) = name.split_once('=') {
+                    if boolean_flags.contains(&k) {
+                        return Err(Error::Config(format!(
+                            "--{k} is a flag and takes no value (got `{v}`)"
+                        )));
+                    }
                     args.options.insert(k.to_string(), v.to_string());
+                } else if boolean_flags.contains(&name) {
+                    args.flags.push(name.to_string());
                 } else if iter
                     .peek()
                     .map(|next| !next.starts_with("--"))
@@ -56,6 +76,12 @@ impl Args {
     /// String option with default.
     pub fn opt_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
         self.opt(name).unwrap_or(default)
+    }
+
+    /// Required string option; a typed error names the flag when absent.
+    pub fn require_opt(&self, name: &str) -> Result<&str> {
+        self.opt(name)
+            .ok_or_else(|| Error::Config(format!("missing required option --{name}")))
     }
 
     /// f64 option with default; errors on unparsable input.
@@ -163,5 +189,68 @@ mod tests {
         let a = parse("cmd --dry-run --seed 7");
         assert!(a.flag("dry-run"));
         assert_eq!(a.u64_or("seed", 0).unwrap(), 7);
+    }
+
+    #[test]
+    fn require_opt_errors_name_the_flag() {
+        let a = parse("merge-shards x.json");
+        assert_eq!(a.require_opt("out").unwrap_err().to_string(),
+                   "config error: missing required option --out");
+        let a = parse("sweep --out merged.json");
+        assert_eq!(a.require_opt("out").unwrap(), "merged.json");
+    }
+
+    #[test]
+    fn bare_double_dash_is_a_typed_error_not_a_panic() {
+        let e = Args::parse(["sweep".to_string(), "--".to_string()]).unwrap_err();
+        assert!(matches!(e, Error::Config(_)), "{e}");
+    }
+
+    #[test]
+    fn negative_and_fractional_integers_are_typed_errors() {
+        let a = parse("sweep --points -3");
+        // `-3` is consumed as the option value and fails the usize parse.
+        assert!(a.usize_or("points", 1).is_err());
+        let a = parse("sweep --points 2.5");
+        assert!(a.usize_or("points", 1).is_err());
+        let a = parse("sweep --seed -1");
+        assert!(a.u64_or("seed", 0).is_err());
+    }
+
+    #[test]
+    fn declared_boolean_flags_do_not_swallow_positionals() {
+        let tokens = |s: &str| s.split_whitespace().map(String::from).collect::<Vec<_>>();
+        let a = Args::parse_with_flags(
+            tokens("merge-shards --allow-partial shard_0.json shard_1.json"),
+            &["allow-partial"],
+        )
+        .unwrap();
+        assert!(a.flag("allow-partial"));
+        assert_eq!(a.opt("allow-partial"), None);
+        assert_eq!(
+            a.positionals(),
+            &["shard_0.json".to_string(), "shard_1.json".to_string()]
+        );
+        // Undeclared, the same tokens mis-parse as an option (the reason
+        // the declaration exists).
+        let b = Args::parse(tokens("merge-shards --allow-partial shard_0.json")).unwrap();
+        assert_eq!(b.opt("allow-partial"), Some("shard_0.json"));
+        // Declared flags reject `=value` loudly.
+        let e = Args::parse_with_flags(
+            tokens("merge-shards --allow-partial=yes shard_0.json"),
+            &["allow-partial"],
+        )
+        .unwrap_err();
+        assert!(matches!(e, Error::Config(_)), "{e}");
+    }
+
+    #[test]
+    fn shard_style_values_survive_parsing() {
+        // `1/3` must come through as an opaque option value for
+        // ShardSelector::parse to handle (including its error cases).
+        let a = parse("sweep --shard 1/3 --out s.json");
+        assert_eq!(a.opt("shard"), Some("1/3"));
+        let a = parse("sweep --shard 0/0");
+        assert_eq!(a.opt("shard"), Some("0/0"));
     }
 }

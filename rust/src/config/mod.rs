@@ -15,6 +15,28 @@ use std::collections::BTreeMap;
 
 use crate::error::{Error, Result};
 
+/// Encode an `f64` as its 16-hex-digit IEEE-754 bit pattern
+/// (`"3ff0000000000000"` for `1.0`). Unlike decimal [`Value::Number`]
+/// serialization this is total: NaN and ±inf encode too, and decoding via
+/// [`f64_from_bits_hex`] is bit-exact by construction — the shard
+/// artifacts use it for every payload float so merged results stay
+/// bit-identical across process boundaries.
+pub fn f64_to_bits_hex(x: f64) -> String {
+    format!("{:016x}", x.to_bits())
+}
+
+/// Decode a 16-hex-digit bit pattern produced by [`f64_to_bits_hex`].
+pub fn f64_from_bits_hex(s: &str) -> Result<f64> {
+    if s.len() != 16 || !s.bytes().all(|b| b.is_ascii_hexdigit()) {
+        return Err(Error::Config(format!(
+            "bad f64 bit pattern `{s}` (want exactly 16 hex digits)"
+        )));
+    }
+    let bits = u64::from_str_radix(s, 16)
+        .map_err(|_| Error::Config(format!("bad f64 bit pattern `{s}`")))?;
+    Ok(f64::from_bits(bits))
+}
+
 /// A dynamically-typed configuration value.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Value {
@@ -156,13 +178,15 @@ impl Value {
 
     /// Serialize a table to a TOML-subset document that [`parse_toml`]
     /// round-trips losslessly: scalar / array keys first, then one
-    /// `[dotted.section]` block per nested table (recursively).
+    /// `[dotted.section]` block per nested table (recursively). Strings
+    /// are emitted with the subset's escapes (`\"`, `\\`, `\n`, `\t`).
     ///
     /// Errors on shapes the subset parser cannot represent: a non-table
     /// root, `null`, non-finite numbers, tables inside arrays, nested
-    /// arrays, strings containing `"` or newlines (the parser has no
-    /// string escapes), and keys using characters outside
-    /// `[A-Za-z0-9_-]` (the parser would split on `.`/`=`/`#`).
+    /// arrays, strings containing control characters with no escape
+    /// (anything below 0x20 other than `\n`/`\t`, e.g. `\r` — the parser
+    /// is line-oriented and would mangle them), and keys using characters
+    /// outside `[A-Za-z0-9_-]` (the parser would split on `.`/`=`/`#`).
     pub fn to_toml_string(&self) -> Result<String> {
         fn checked_key(k: &str) -> Result<&str> {
             let bare = !k.is_empty()
@@ -188,12 +212,25 @@ impl Value {
                     Ok(n.to_string())
                 }
                 Value::String(s) => {
-                    if s.contains('"') || s.contains('\n') {
-                        return Err(Error::Config(format!(
-                            "toml serialize: string `{s}` needs escapes the subset lacks"
-                        )));
+                    let mut out = String::with_capacity(s.len() + 2);
+                    out.push('"');
+                    for c in s.chars() {
+                        match c {
+                            '"' => out.push_str("\\\""),
+                            '\\' => out.push_str("\\\\"),
+                            '\n' => out.push_str("\\n"),
+                            '\t' => out.push_str("\\t"),
+                            c if (c as u32) < 0x20 => {
+                                return Err(Error::Config(format!(
+                                    "toml serialize: string {s:?} contains control \
+                                     character {c:?} the subset cannot escape"
+                                )));
+                            }
+                            c => out.push(c),
+                        }
                     }
-                    Ok(format!("\"{s}\""))
+                    out.push('"');
+                    Ok(out)
                 }
                 Value::Array(items) => {
                     let parts = items
@@ -345,7 +382,51 @@ mod tests {
         assert!(null_val.to_toml_string().is_err());
         let nested_arr = table(&[("x", Value::Array(vec![Value::Array(vec![])]))]);
         assert!(nested_arr.to_toml_string().is_err());
-        let bad_string = table(&[("x", Value::String("has \" quote".into()))]);
+        // \r has no escape in the subset (the parser is line-oriented).
+        let bad_string = table(&[("x", Value::String("has \r return".into()))]);
         assert!(bad_string.to_toml_string().is_err());
+    }
+
+    #[test]
+    fn toml_serialize_escapes_roundtrip() {
+        let v = table(&[
+            ("quoted", Value::String("say \"hi\"".into())),
+            ("slashes", Value::String("a\\b\\\\c".into())),
+            ("multiline", Value::String("line1\nline2\ttabbed".into())),
+            ("hashy", Value::String("not # a comment".into())),
+            (
+                "arr",
+                Value::Array(vec![
+                    Value::String("x\"y,z".into()),
+                    Value::String("\\".into()),
+                ]),
+            ),
+        ]);
+        let text = v.to_toml_string().unwrap();
+        assert_eq!(parse_toml(&text).unwrap(), v, "{text}");
+    }
+
+    #[test]
+    fn f64_bits_hex_roundtrips_every_class() {
+        for x in [
+            0.0,
+            -0.0,
+            1.0,
+            -1.3e9,
+            f64::MIN_POSITIVE,
+            f64::MAX,
+            f64::INFINITY,
+            f64::NEG_INFINITY,
+            f64::NAN,
+        ] {
+            let hex = f64_to_bits_hex(x);
+            assert_eq!(hex.len(), 16);
+            let back = f64_from_bits_hex(&hex).unwrap();
+            assert_eq!(back.to_bits(), x.to_bits(), "{x} via {hex}");
+        }
+        assert!(f64_from_bits_hex("").is_err());
+        assert!(f64_from_bits_hex("zzzzzzzzzzzzzzzz").is_err());
+        assert!(f64_from_bits_hex("3ff").is_err());
+        assert!(f64_from_bits_hex("3ff00000000000000").is_err());
     }
 }

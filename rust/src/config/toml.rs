@@ -1,10 +1,19 @@
 //! TOML-subset parser for architecture / workload spec files.
 //!
 //! Supported: `[section]` and `[section.sub]` headers, `key = value` with
-//! strings, numbers (including `1.3e9`), booleans, flat arrays, and `#`
-//! comments. This covers the `configs/*.toml` shipped with the crate;
-//! anything fancier (dates, inline tables, multi-line strings) is
-//! rejected with a line-numbered error.
+//! strings (including the basic escapes `\"`, `\\`, `\n`, `\t`), numbers
+//! (including `1.3e9`), booleans, flat arrays, and `#` comments. This
+//! covers the `configs/*.toml` shipped with the crate; anything fancier
+//! (dates, inline tables, multi-line strings, `\u` escapes) is rejected
+//! with a line-numbered error.
+//!
+//! Compatibility note: `\` inside a string is now always an escape
+//! introducer, exactly as in real TOML basic strings. Earlier revisions
+//! of this subset kept backslashes verbatim, so a pre-escape document
+//! holding `"C:\temp"` decodes differently today (`\t` → tab) — and
+//! unknown escapes like `\x` are hard errors rather than silently kept.
+//! No spec shipped in `configs/` contains a backslash; hand-written
+//! files that do must double them (`"C:\\temp"`).
 
 use std::collections::BTreeMap;
 
@@ -55,14 +64,26 @@ fn err(lineno: usize, msg: &str) -> Error {
     Error::Config(format!("toml parse error on line {}: {msg}", lineno + 1))
 }
 
-/// Strip a `#` comment, respecting string literals.
+/// Strip a `#` comment, respecting string literals (including escaped
+/// quotes inside them — `"\""` does not close the string).
 fn strip_comment(line: &str) -> &str {
     let mut in_str = false;
+    let mut escaped = false;
     for (i, c) in line.char_indices() {
-        match c {
-            '"' => in_str = !in_str,
-            '#' if !in_str => return &line[..i],
-            _ => {}
+        if in_str {
+            if escaped {
+                escaped = false;
+            } else if c == '\\' {
+                escaped = true;
+            } else if c == '"' {
+                in_str = false;
+            }
+        } else {
+            match c {
+                '"' => in_str = true,
+                '#' => return &line[..i],
+                _ => {}
+            }
         }
     }
     line
@@ -108,7 +129,7 @@ fn parse_value(text: &str, lineno: usize) -> Result<Value> {
         let inner = inner
             .strip_suffix('"')
             .ok_or_else(|| err(lineno, "unterminated string"))?;
-        return Ok(Value::String(inner.to_string()));
+        return Ok(Value::String(unescape(inner, lineno)?));
     }
     match text {
         "true" => return Ok(Value::Bool(true)),
@@ -123,19 +144,57 @@ fn parse_value(text: &str, lineno: usize) -> Result<Value> {
         .map_err(|_| err(lineno, &format!("cannot parse value `{text}`")))
 }
 
-/// Split a flat array body on commas outside string literals.
+/// Decode the subset's string escapes (`\"`, `\\`, `\n`, `\t`). A bare
+/// `"` cannot reach here from a well-formed line, but tampered input can
+/// produce one (e.g. via a comment-stripped fragment), so it is rejected
+/// rather than silently kept; so are unknown escapes and a trailing `\`.
+fn unescape(s: &str, lineno: usize) -> Result<String> {
+    let mut out = String::with_capacity(s.len());
+    let mut chars = s.chars();
+    while let Some(c) = chars.next() {
+        match c {
+            '\\' => match chars.next() {
+                Some('"') => out.push('"'),
+                Some('\\') => out.push('\\'),
+                Some('n') => out.push('\n'),
+                Some('t') => out.push('\t'),
+                Some(other) => {
+                    return Err(err(lineno, &format!("unsupported string escape `\\{other}`")));
+                }
+                None => return Err(err(lineno, "trailing `\\` in string")),
+            },
+            '"' => return Err(err(lineno, "unescaped `\"` inside string")),
+            c => out.push(c),
+        }
+    }
+    Ok(out)
+}
+
+/// Split a flat array body on commas outside string literals (escaped
+/// quotes do not close a literal).
 fn split_array_items(body: &str) -> Vec<&str> {
     let mut items = Vec::new();
     let mut start = 0;
     let mut in_str = false;
+    let mut escaped = false;
     for (i, c) in body.char_indices() {
-        match c {
-            '"' => in_str = !in_str,
-            ',' if !in_str => {
-                items.push(&body[start..i]);
-                start = i + 1;
+        if in_str {
+            if escaped {
+                escaped = false;
+            } else if c == '\\' {
+                escaped = true;
+            } else if c == '"' {
+                in_str = false;
             }
-            _ => {}
+        } else {
+            match c {
+                '"' => in_str = true,
+                ',' => {
+                    items.push(&body[start..i]);
+                    start = i + 1;
+                }
+                _ => {}
+            }
         }
     }
     items.push(&body[start..]);
@@ -207,5 +266,31 @@ enabled = true
     #[test]
     fn key_with_same_name_as_section_rejected() {
         assert!(parse_toml("a = 1\n[a]\nb = 2").is_err());
+    }
+
+    #[test]
+    fn string_escapes_decode() {
+        let v = parse_toml(r#"s = "say \"hi\"\n\ttab \\ done""#).unwrap();
+        assert_eq!(v.get("s").unwrap().as_str(), Some("say \"hi\"\n\ttab \\ done"));
+        // Escaped quotes do not end the literal for comment stripping...
+        let v = parse_toml(r##"s = "a\"b" # comment with " quote"##).unwrap();
+        assert_eq!(v.get("s").unwrap().as_str(), Some("a\"b"));
+        // ...nor for array splitting.
+        let v = parse_toml(r#"a = ["x\",y", "z"]"#).unwrap();
+        let items = v.get("a").unwrap().as_array().unwrap();
+        assert_eq!(items[0].as_str(), Some("x\",y"));
+        assert_eq!(items[1].as_str(), Some("z"));
+    }
+
+    #[test]
+    fn bad_escapes_are_line_numbered_errors() {
+        for doc in [
+            "s = \"bad \\x escape\"",
+            "s = \"trailing slash \\\"",
+            "s = \"unterminated \\\" tail",
+        ] {
+            let e = parse_toml(doc).unwrap_err().to_string();
+            assert!(e.contains("line 1"), "{doc:?}: {e}");
+        }
     }
 }

@@ -20,14 +20,24 @@
 //!   `Vec<EvaluatedPoint>` output (filled in place by the pool).
 //! * [`run_sweep`] — the general path over any [`Evaluator`] (native or
 //!   PJRT), generating queries chunk-by-chunk instead of up front.
+//!
+//! Beyond one process, [`shard`] plans disjoint index sub-ranges over a
+//! spec ([`ShardPlan`]), runs each to a self-describing JSON artifact
+//! ([`ShardArtifact`]), and merges any subset back ([`merge_shards`])
+//! bit-identically to the single-process streaming rollups.
 
 pub mod accel;
 pub mod figures;
 pub mod pareto;
+pub mod shard;
 pub mod sweep;
 
 pub use accel::{AccelPoint, AccelSweepSpec, run_accel_sweep};
 pub use pareto::{StreamingFront, pareto_front};
+pub use shard::{
+    MergedSweep, ShardArtifact, ShardPlan, ShardSelector, SweepSummary, merge_shards,
+    sweep_fingerprint,
+};
 pub use sweep::SweepSpec;
 
 use crate::adc::{AdcMetrics, AdcModel, AdcQuery, PreparedModel, PreparedRow};
@@ -310,16 +320,62 @@ where
     let n = spec
         .checked_len()
         .expect("sweep grid length overflows usize; split the spec into sub-range specs");
+    run_sweep_fold_range(spec, model, workers, 0..n, init, fold, merge)
+}
+
+/// [`run_sweep_fold`] restricted to a contiguous sub-range of grid
+/// indices — the building block a shard of a multi-process sweep runs
+/// (see [`shard`]). Fold indices are *global* grid indices, so a rollup
+/// with index tie-breaks (min-EAP, [`StreamingFront`]) merges across
+/// shards exactly as it would in one process. Panics if the grid length
+/// overflows `usize` or the range exceeds it (shard planning goes
+/// through [`ShardPlan::new`], which reports both as typed errors first).
+pub fn run_sweep_fold_range<A, I, F, M>(
+    spec: &SweepSpec,
+    model: &AdcModel,
+    workers: usize,
+    range: std::ops::Range<usize>,
+    init: I,
+    fold: F,
+    merge: M,
+) -> A
+where
+    A: Send,
+    I: Fn() -> A + Sync,
+    F: Fn(&mut A, usize, &AdcQuery, &AdcMetrics) + Sync,
+    M: Fn(A, A) -> A,
+{
+    let len = spec
+        .checked_len()
+        .expect("sweep grid length overflows usize; split the spec into sub-range specs");
+    assert!(
+        range.start <= range.end && range.end <= len,
+        "shard range {range:?} out of bounds for {len} grid points"
+    );
+    let n = range.len();
     let prepared = PreparedSweep::new(spec, model);
     if workers == 1 || n <= 1 {
         let mut acc = init();
-        prepared.for_each_in_range(0..n, |i, q, m| fold(&mut acc, i, q, m));
+        prepared.for_each_in_range(range, |i, q, m| fold(&mut acc, i, q, m));
         return acc;
     }
-    let accs = Pool::global().fold_chunks(n, stream_chunk(n), &init, |acc, range| {
-        prepared.for_each_in_range(range, |i, q, m| fold(acc, i, q, m));
+    let base = range.start;
+    let accs = Pool::global().fold_chunks(n, stream_chunk(n), &init, |acc, chunk| {
+        prepared.for_each_in_range(base + chunk.start..base + chunk.end, |i, q, m| {
+            fold(acc, i, q, m)
+        });
     });
     accs.into_iter().reduce(&merge).unwrap_or_else(init)
+}
+
+/// The min-EAP candidate ordering shared by [`sweep_min_eap`] and the
+/// shard summaries ([`shard::SweepSummary`]): EAP ascending with the grid
+/// index as tie-break. `total_cmp` (not `<`) so even NaN EAPs — only
+/// possible from NaN spec values — rank deterministically (last),
+/// matching a materialized argmin with the same comparator regardless of
+/// steal/merge order.
+pub(crate) fn eap_candidate_better(a: (usize, f64), b: (usize, f64)) -> bool {
+    a.1.total_cmp(&b.1).then(a.0.cmp(&b.0)) == std::cmp::Ordering::Less
 }
 
 /// Streaming min-EAP summary: the grid point minimizing
@@ -332,11 +388,8 @@ pub fn sweep_min_eap(
     workers: usize,
 ) -> Option<EvaluatedPoint> {
     type Best = Option<(usize, f64, EvaluatedPoint)>;
-    // total_cmp (not `<`) so even NaN EAPs — only possible from NaN spec
-    // values — rank deterministically (last), matching a materialized
-    // argmin with the same comparator regardless of steal order.
     let better = |a: &(usize, f64, EvaluatedPoint), b: &(usize, f64, EvaluatedPoint)| {
-        a.1.total_cmp(&b.1).then(a.0.cmp(&b.0)) == std::cmp::Ordering::Less
+        eap_candidate_better((a.0, a.1), (b.0, b.1))
     };
     run_sweep_fold(
         spec,
@@ -512,6 +565,39 @@ mod tests {
                 brute,
                 "workers={workers}"
             );
+        }
+    }
+
+    #[test]
+    fn fold_range_visits_exactly_the_range_with_global_indices() {
+        let model = AdcModel::default();
+        let spec = small_spec();
+        let all = run_sweep_prepared(&spec, &model, 1).unwrap();
+        let n = spec.len();
+        for (start, end) in [(0usize, 0usize), (0, 1), (5, 19), (n - 1, n), (0, n)] {
+            for workers in [1usize, 4] {
+                let visited = run_sweep_fold_range(
+                    &spec,
+                    &model,
+                    workers,
+                    start..end,
+                    Vec::new,
+                    |acc: &mut Vec<(usize, [u64; 4])>, i, q, m| {
+                        assert_eq!(all[i].query, *q);
+                        acc.push((i, m.to_bits()));
+                    },
+                    |mut a, b| {
+                        a.extend(b);
+                        a
+                    },
+                );
+                let mut indices: Vec<usize> = visited.iter().map(|(i, _)| *i).collect();
+                indices.sort_unstable();
+                assert_eq!(indices, (start..end).collect::<Vec<_>>(), "{start}..{end}");
+                for (i, bits) in visited {
+                    assert_eq!(bits, all[i].metrics.to_bits());
+                }
+            }
         }
     }
 

@@ -1,5 +1,8 @@
 //! Pareto-front extraction for (minimize, minimize) objectives.
 
+use crate::config::{Value, f64_from_bits_hex, f64_to_bits_hex};
+use crate::error::{Error, Result};
+
 /// Indices of the Pareto-optimal points among `(a, b)` pairs where both
 /// objectives are minimized. A point is kept iff no other point is <= in
 /// both objectives and < in at least one. Returned indices are sorted by
@@ -98,6 +101,75 @@ impl StreamingFront {
             .sort_by(|p, q| p.0.total_cmp(&q.0).then(p.1.total_cmp(&q.1)));
         self.pts.into_iter().map(|(_, _, i)| i).collect()
     }
+
+    /// Non-consuming [`StreamingFront::into_indices`].
+    pub fn indices(&self) -> Vec<usize> {
+        self.clone().into_indices()
+    }
+
+    /// The resident `(a, b, original_index)` triples, unordered.
+    pub fn points(&self) -> &[(f64, f64, usize)] {
+        &self.pts
+    }
+
+    /// Rebuild a front by re-offering every triple — the dominance
+    /// invariant is re-established even if the input is not a valid front
+    /// (extra dominated points are simply dropped again).
+    pub fn from_points<I: IntoIterator<Item = (f64, f64, usize)>>(points: I) -> StreamingFront {
+        let mut front = StreamingFront::new();
+        for (a, b, index) in points {
+            front.push(a, b, index);
+        }
+        front
+    }
+
+    /// Serialize as a canonical [`Value`]: `[[a_hex, b_hex, index], ...]`
+    /// sorted by objectives ascending. Objectives travel as IEEE-754 bit
+    /// patterns ([`f64_to_bits_hex`]) so a front written by one process
+    /// and merged in another stays bit-identical to an in-process merge.
+    pub fn to_value(&self) -> Value {
+        let mut pts = self.pts.clone();
+        pts.sort_by(|p, q| p.0.total_cmp(&q.0).then(p.1.total_cmp(&q.1)));
+        Value::Array(
+            pts.into_iter()
+                .map(|(a, b, index)| {
+                    Value::Array(vec![
+                        Value::String(f64_to_bits_hex(a)),
+                        Value::String(f64_to_bits_hex(b)),
+                        Value::Number(index as f64),
+                    ])
+                })
+                .collect(),
+        )
+    }
+
+    /// Inverse of [`StreamingFront::to_value`] (points are re-offered, so
+    /// a tampered payload degrades to a smaller front, never a panic).
+    pub fn from_value(v: &Value) -> Result<StreamingFront> {
+        let items = v
+            .as_array()
+            .ok_or_else(|| Error::Config("front payload is not an array".into()))?;
+        let mut front = StreamingFront::new();
+        for (i, item) in items.iter().enumerate() {
+            let triple = item
+                .as_array()
+                .filter(|t| t.len() == 3)
+                .ok_or_else(|| {
+                    Error::Config(format!("front entry {i} is not an [a, b, index] triple"))
+                })?;
+            let a = f64_from_bits_hex(triple[0].as_str().ok_or_else(|| {
+                Error::Config(format!("front entry {i}: objective `a` is not a bit string"))
+            })?)?;
+            let b = f64_from_bits_hex(triple[1].as_str().ok_or_else(|| {
+                Error::Config(format!("front entry {i}: objective `b` is not a bit string"))
+            })?)?;
+            let index = triple[2].as_usize().ok_or_else(|| {
+                Error::Config(format!("front entry {i}: index is not a non-negative integer"))
+            })?;
+            front.push(a, b, index);
+        }
+        Ok(front)
+    }
 }
 
 /// Hypervolume-style scalar summary: the best (minimum) product a·b on the
@@ -191,5 +263,62 @@ mod tests {
         let (i, p) = best_product(&pts).unwrap();
         assert_eq!(i, 1);
         assert!((p - 9.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn streaming_front_drops_non_finite_without_panicking() {
+        let mut f = StreamingFront::new();
+        f.push(f64::NAN, 1.0, 0);
+        f.push(1.0, f64::NAN, 1);
+        f.push(f64::INFINITY, 1.0, 2);
+        f.push(1.0, f64::NEG_INFINITY, 3);
+        f.push(f64::NAN, f64::INFINITY, 4);
+        assert!(f.is_empty());
+        f.push(2.0, 2.0, 5);
+        assert_eq!(f.len(), 1);
+        // Merging fronts that saw non-finite pushes never panics either.
+        let merged = f.clone().merge(StreamingFront::from_points(vec![
+            (f64::NAN, 0.0, 6),
+            (1.0, 3.0, 7),
+        ]));
+        assert_eq!(merged.into_indices(), vec![7, 5]);
+    }
+
+    #[test]
+    fn streaming_front_serialization_is_bit_exact() {
+        let mut f = StreamingFront::new();
+        // Values with tricky bit patterns: subnormal, -0.0-adjacent, huge.
+        f.push(f64::MIN_POSITIVE, 1e300, 3);
+        f.push(1e300, f64::MIN_POSITIVE, 9);
+        f.push(0.5, 0.25, 4);
+        let v = f.to_value();
+        let back = StreamingFront::from_value(&v).unwrap();
+        let mut a: Vec<(u64, u64, usize)> =
+            f.points().iter().map(|&(x, y, i)| (x.to_bits(), y.to_bits(), i)).collect();
+        let mut b: Vec<(u64, u64, usize)> =
+            back.points().iter().map(|&(x, y, i)| (x.to_bits(), y.to_bits(), i)).collect();
+        a.sort_unstable();
+        b.sort_unstable();
+        assert_eq!(a, b);
+        // And through the JSON text layer.
+        let text = v.to_json_string().unwrap();
+        let reparsed = StreamingFront::from_value(&crate::config::parse_json(&text).unwrap())
+            .unwrap();
+        assert_eq!(reparsed.indices(), f.indices());
+    }
+
+    #[test]
+    fn streaming_front_from_value_rejects_malformed_payloads() {
+        use crate::config::parse_json;
+        for text in [
+            "{}",
+            "[[1, 2, 3]]",
+            "[[\"3ff0000000000000\", \"zz\", 0]]",
+            "[[\"3ff0000000000000\", \"3ff0000000000000\"]]",
+            "[[\"3ff0000000000000\", \"3ff0000000000000\", -1]]",
+        ] {
+            let v = parse_json(text).unwrap();
+            assert!(StreamingFront::from_value(&v).is_err(), "{text}");
+        }
     }
 }

@@ -1,0 +1,1188 @@
+//! Sharded multi-process sweeps.
+//!
+//! The streaming engine ([`super::run_sweep_fold`]) saturates one
+//! machine; this
+//! module turns it into the building block for multi-process scale-out:
+//!
+//! * [`ShardPlan`] partitions a [`SweepSpec`]'s index space into disjoint
+//!   contiguous sub-ranges (stable under [`SweepSpec::point_at`] /
+//!   `for_each_index_in_range`, so shard membership is a pure function of
+//!   the spec and the shard count).
+//! * [`ShardArtifact::compute`] runs one shard through the
+//!   invariant-hoisted kernel ([`run_sweep_fold_range`]) into a
+//!   [`SweepSummary`] — the streamed fold (per-metric extrema), min-EAP
+//!   candidate, and power/area [`StreamingFront`] — and serializes it as
+//!   a self-describing JSON document via the [`crate::config::Value`]
+//!   layer. Every payload float travels as its IEEE-754 bit pattern
+//!   ([`f64_to_bits_hex`]), so nothing is lost at the process boundary.
+//! * [`merge_shards`] folds any subset of artifacts back together. Each
+//!   rollup is insensitive to encounter order (extrema under `total_cmp`,
+//!   argmin with grid-index tie-break, the order-independent
+//!   [`StreamingFront`]), so the merged result of a complete shard set is
+//!   **bit-identical** to the single-process [`super::sweep_min_eap`] /
+//!   [`super::sweep_power_area_front`] / fold outputs — asserted across
+//!   real process boundaries by `tests/shard_roundtrip.rs`.
+//!
+//! Artifacts carry a fingerprint ([`sweep_fingerprint`]) over the exact
+//! bits of the spec axes and model coefficients. Merging artifacts from
+//! different sweeps is a typed error, and a completed artifact can be
+//! recognized (fingerprint + range match) and skipped on re-run — the
+//! resume semantics behind `cimdse sweep --shard i/N`.
+
+use std::collections::BTreeMap;
+use std::ops::Range;
+
+use crate::adc::{AdcMetrics, AdcModel, AdcQuery, Coefficients};
+use crate::config::{Value, f64_from_bits_hex, f64_to_bits_hex, parse_json};
+use crate::error::{Error, Result};
+
+use super::sweep::SweepSpec;
+use super::{EvaluatedPoint, StreamingFront, eap_candidate_better, run_sweep_fold_range};
+
+/// Artifact schema version; bump on breaking payload changes.
+const ARTIFACT_SCHEMA: usize = 1;
+
+/// `kind` tag distinguishing shard artifacts from other JSON documents.
+const ARTIFACT_KIND: &str = "cimdse-shard-artifact";
+
+/// Metric names in [`AdcMetrics::to_bits`] field order — the keys used by
+/// the extrema payload.
+pub const METRIC_NAMES: [&str; 4] =
+    ["energy_pj_per_convert", "area_um2_per_adc", "total_power_w", "total_area_um2"];
+
+fn metric_values(m: &AdcMetrics) -> [f64; 4] {
+    [m.energy_pj_per_convert, m.area_um2_per_adc, m.total_power_w, m.total_area_um2]
+}
+
+/// 64-bit FNV-1a over a byte string (stable, dependency-free).
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut hash = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        hash ^= b as u64;
+        hash = hash.wrapping_mul(0x100_0000_01b3);
+    }
+    hash
+}
+
+/// Fingerprint of a (spec, model) pair: 16 hex digits of FNV-1a over
+/// [`sweep_canonical`]. Two sweeps share a fingerprint iff their shards
+/// are interchangeable — same grid order, same per-point bits. (FNV is
+/// not collision-resistant, so [`merge_shards`] compares the full
+/// canonical strings, not just this digest.)
+pub fn sweep_fingerprint(spec: &SweepSpec, model: &AdcModel) -> String {
+    format!("{:016x}", fnv1a64(sweep_canonical(spec, model).as_bytes()))
+}
+
+/// The canonical byte string a sweep is identified by: every axis value,
+/// coefficient, and tuning offset as exact IEEE-754 bit patterns.
+fn sweep_canonical(spec: &SweepSpec, model: &AdcModel) -> String {
+    let mut canon = String::from("cimdse-sweep-v1;");
+    let mut axis = |name: &str, xs: &[f64]| {
+        canon.push_str(name);
+        canon.push('=');
+        for &x in xs {
+            canon.push_str(&f64_to_bits_hex(x));
+            canon.push(',');
+        }
+        canon.push(';');
+    };
+    axis("enobs", &spec.enobs);
+    axis("total_throughputs", &spec.total_throughputs);
+    axis("tech_nms", &spec.tech_nms);
+    canon.push_str("n_adcs=");
+    for &n in &spec.n_adcs {
+        canon.push_str(&n.to_string());
+        canon.push(',');
+    }
+    canon.push_str(";model=");
+    for c in model.coefs.to_vec() {
+        canon.push_str(&f64_to_bits_hex(c));
+        canon.push(',');
+    }
+    canon.push_str(&f64_to_bits_hex(model.energy_offset_decades));
+    canon.push(',');
+    canon.push_str(&f64_to_bits_hex(model.area_offset_decades));
+    canon
+}
+
+/// A validated `index/n_shards` selection (e.g. from `--shard 2/7`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardSelector {
+    index: usize,
+    n_shards: usize,
+}
+
+impl ShardSelector {
+    /// Build a selector, rejecting `n_shards == 0` and out-of-range
+    /// indices with typed errors.
+    pub fn new(index: usize, n_shards: usize) -> Result<ShardSelector> {
+        if n_shards == 0 {
+            return Err(Error::Config("shard count must be >= 1, got 0".into()));
+        }
+        if index >= n_shards {
+            return Err(Error::Config(format!(
+                "shard index {index} out of range for {n_shards} shards (valid: 0..{n_shards})"
+            )));
+        }
+        Ok(ShardSelector { index, n_shards })
+    }
+
+    /// Parse an `index/n_shards` spec like `"2/7"`.
+    pub fn parse(s: &str) -> Result<ShardSelector> {
+        let (index, n_shards) = s.split_once('/').ok_or_else(|| {
+            Error::Config(format!("shard spec `{s}` is not of the form `index/n_shards`"))
+        })?;
+        let index: usize = index.trim().parse().map_err(|_| {
+            Error::Config(format!("shard spec `{s}`: `{index}` is not a shard index"))
+        })?;
+        let n_shards: usize = n_shards.trim().parse().map_err(|_| {
+            Error::Config(format!("shard spec `{s}`: `{n_shards}` is not a shard count"))
+        })?;
+        ShardSelector::new(index, n_shards)
+    }
+
+    /// The selected shard index (`< n_shards`).
+    pub fn index(&self) -> usize {
+        self.index
+    }
+
+    /// Total shard count (`>= 1`).
+    pub fn n_shards(&self) -> usize {
+        self.n_shards
+    }
+}
+
+impl std::fmt::Display for ShardSelector {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}/{}", self.index, self.n_shards)
+    }
+}
+
+/// A partition of a spec's index space into `n_shards` disjoint
+/// contiguous ranges whose union is exactly `0..len`. Ranges are balanced
+/// (sizes differ by at most one, larger shards first), and depend only on
+/// `(len, n_shards)` — every process planning the same spec computes the
+/// same partition.
+#[derive(Clone, Copy, Debug)]
+pub struct ShardPlan {
+    len: usize,
+    n_shards: usize,
+}
+
+impl ShardPlan {
+    /// Plan `n_shards` sub-ranges over `spec`'s grid. Typed errors for a
+    /// zero shard count, a grid whose axis product overflows `usize`, and
+    /// a grid too large for f64-exact artifact indices (> 2^53 points —
+    /// such a sweep could not finish anyway).
+    pub fn new(spec: &SweepSpec, n_shards: usize) -> Result<ShardPlan> {
+        if n_shards == 0 {
+            return Err(Error::Config("cannot plan a sweep over 0 shards".into()));
+        }
+        let len = spec.checked_len().ok_or_else(|| {
+            Error::Numeric(
+                "sweep grid length overflows usize; split the spec into sub-range specs".into(),
+            )
+        })?;
+        if len as u64 > (1u64 << 53) {
+            return Err(Error::Numeric(format!(
+                "sweep grid has {len} points; shard artifacts index points as f64-exact \
+                 integers (limit 2^53)"
+            )));
+        }
+        Ok(ShardPlan { len, n_shards })
+    }
+
+    /// Total grid points being partitioned.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Whether the underlying grid is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Number of shards in the plan.
+    pub fn n_shards(&self) -> usize {
+        self.n_shards
+    }
+
+    /// The index sub-range of shard `shard`. Panics if `shard` is out of
+    /// range (construct selectors via [`ShardSelector`] to get a typed
+    /// error instead).
+    pub fn range(&self, shard: usize) -> Range<usize> {
+        assert!(
+            shard < self.n_shards,
+            "shard {shard} out of range for a {}-shard plan",
+            self.n_shards
+        );
+        let base = self.len / self.n_shards;
+        let extra = self.len % self.n_shards;
+        let start = shard * base + shard.min(extra);
+        let end = start + base + usize::from(shard < extra);
+        start..end
+    }
+
+    /// All shard ranges in order (disjoint, covering `0..len`).
+    pub fn ranges(&self) -> impl Iterator<Item = Range<usize>> + '_ {
+        (0..self.n_shards).map(|i| self.range(i))
+    }
+}
+
+/// Per-metric minima/maxima over the points a summary absorbed, under
+/// `total_cmp` ordering (order-independent even for NaN/±inf metrics).
+/// Indexed in [`METRIC_NAMES`] order.
+#[derive(Clone, Copy, Debug)]
+pub struct MetricExtrema {
+    /// Per-metric minimum.
+    pub min: [f64; 4],
+    /// Per-metric maximum.
+    pub max: [f64; 4],
+}
+
+/// The streamed rollup a shard (or a whole single-process sweep) carries:
+/// point count, per-metric extrema, the min-EAP candidate (with its grid
+/// index for deterministic tie-breaks), and the power/area Pareto front.
+///
+/// Every component is insensitive to fold/merge order, so
+/// `merge(a, b) == merge(b, a)` bit-for-bit and a shard-wise computation
+/// merged in any order reproduces [`SweepSummary::compute`] exactly.
+#[derive(Clone, Debug, Default)]
+pub struct SweepSummary {
+    count: usize,
+    extrema: Option<MetricExtrema>,
+    best: Option<(usize, f64, EvaluatedPoint)>,
+    front: StreamingFront,
+}
+
+impl SweepSummary {
+    /// Empty summary (the fold identity: `merge(new(), s) == s`).
+    pub fn new() -> SweepSummary {
+        SweepSummary::default()
+    }
+
+    /// Absorb one evaluated grid point.
+    pub fn absorb(&mut self, index: usize, query: &AdcQuery, metrics: &AdcMetrics) {
+        self.count += 1;
+        let vals = metric_values(metrics);
+        match &mut self.extrema {
+            None => self.extrema = Some(MetricExtrema { min: vals, max: vals }),
+            Some(e) => {
+                for k in 0..4 {
+                    if vals[k].total_cmp(&e.min[k]).is_lt() {
+                        e.min[k] = vals[k];
+                    }
+                    if vals[k].total_cmp(&e.max[k]).is_gt() {
+                        e.max[k] = vals[k];
+                    }
+                }
+            }
+        }
+        // Same EAP expression and comparator as `sweep_min_eap`, so the
+        // merged argmin cannot drift from the single-process path.
+        let eap = metrics.energy_pj_per_convert * metrics.total_area_um2;
+        if self
+            .best
+            .as_ref()
+            .map_or(true, |cur| eap_candidate_better((index, eap), (cur.0, cur.1)))
+        {
+            self.best = Some((index, eap, EvaluatedPoint { query: *query, metrics: *metrics }));
+        }
+        self.front.push(metrics.total_power_w, metrics.total_area_um2, index);
+    }
+
+    /// Combine two summaries (commutative and associative).
+    pub fn merge(mut self, other: SweepSummary) -> SweepSummary {
+        self.count += other.count;
+        self.extrema = match (self.extrema, other.extrema) {
+            (Some(mut a), Some(b)) => {
+                for k in 0..4 {
+                    if b.min[k].total_cmp(&a.min[k]).is_lt() {
+                        a.min[k] = b.min[k];
+                    }
+                    if b.max[k].total_cmp(&a.max[k]).is_gt() {
+                        a.max[k] = b.max[k];
+                    }
+                }
+                Some(a)
+            }
+            (a, None) => a,
+            (None, b) => b,
+        };
+        self.best = match (self.best, other.best) {
+            (Some(a), Some(b)) => {
+                Some(if eap_candidate_better((a.0, a.1), (b.0, b.1)) { a } else { b })
+            }
+            (a, None) => a,
+            (None, b) => b,
+        };
+        self.front = self.front.merge(other.front);
+        self
+    }
+
+    /// Streamed summary of a contiguous index range of `spec`'s grid.
+    pub fn compute_range(
+        spec: &SweepSpec,
+        model: &AdcModel,
+        workers: usize,
+        range: Range<usize>,
+    ) -> SweepSummary {
+        run_sweep_fold_range(
+            spec,
+            model,
+            workers,
+            range,
+            SweepSummary::new,
+            |acc: &mut SweepSummary, i, q, m| acc.absorb(i, q, m),
+            SweepSummary::merge,
+        )
+    }
+
+    /// Streamed summary of the whole grid — the single-process reference
+    /// every complete shard merge must reproduce bit-identically.
+    pub fn compute(spec: &SweepSpec, model: &AdcModel, workers: usize) -> SweepSummary {
+        let len = spec.checked_len().expect(
+            "sweep grid length overflows usize; split the spec into sub-range specs",
+        );
+        SweepSummary::compute_range(spec, model, workers, 0..len)
+    }
+
+    /// Points absorbed.
+    pub fn count(&self) -> usize {
+        self.count
+    }
+
+    /// Per-metric extrema (`None` iff no points were absorbed).
+    pub fn extrema(&self) -> Option<&MetricExtrema> {
+        self.extrema.as_ref()
+    }
+
+    /// The minimum-EAP design point (ties broken toward the lowest grid
+    /// index) — equals [`super::sweep_min_eap`] on the same coverage.
+    pub fn min_eap(&self) -> Option<&EvaluatedPoint> {
+        self.best.as_ref().map(|(_, _, p)| p)
+    }
+
+    /// Grid index of the min-EAP point.
+    pub fn min_eap_index(&self) -> Option<usize> {
+        self.best.as_ref().map(|(i, _, _)| *i)
+    }
+
+    /// The power/area Pareto front accumulated so far.
+    pub fn front(&self) -> &StreamingFront {
+        &self.front
+    }
+
+    /// Front indices in [`super::pareto_front`] order — equals
+    /// [`super::sweep_power_area_front`] on the same coverage.
+    pub fn front_indices(&self) -> Vec<usize> {
+        self.front.indices()
+    }
+
+    /// Canonical [`Value`] payload. All floats travel as IEEE-754 bit
+    /// patterns; two summaries are bit-identical iff their serialized
+    /// JSON strings are byte-identical (tables are sorted), which is what
+    /// the CI round-trip diffs.
+    pub fn to_value(&self) -> Value {
+        let mut map = BTreeMap::new();
+        map.insert("schema".to_string(), Value::Number(ARTIFACT_SCHEMA as f64));
+        map.insert("count".to_string(), Value::Number(self.count as f64));
+        map.insert(
+            "extrema".to_string(),
+            match &self.extrema {
+                None => Value::Null,
+                Some(e) => {
+                    let mut t = BTreeMap::new();
+                    for (k, name) in METRIC_NAMES.iter().enumerate() {
+                        let mut pair = BTreeMap::new();
+                        pair.insert("min".to_string(), Value::String(f64_to_bits_hex(e.min[k])));
+                        pair.insert("max".to_string(), Value::String(f64_to_bits_hex(e.max[k])));
+                        t.insert(name.to_string(), Value::Table(pair));
+                    }
+                    Value::Table(t)
+                }
+            },
+        );
+        map.insert(
+            "min_eap".to_string(),
+            match &self.best {
+                None => Value::Null,
+                Some((index, eap, point)) => {
+                    let mut t = BTreeMap::new();
+                    t.insert("index".to_string(), Value::Number(*index as f64));
+                    t.insert("eap".to_string(), Value::String(f64_to_bits_hex(*eap)));
+                    t.insert("query".to_string(), query_to_value(&point.query));
+                    t.insert("metrics".to_string(), metrics_to_value(&point.metrics));
+                    Value::Table(t)
+                }
+            },
+        );
+        map.insert("front".to_string(), self.front.to_value());
+        Value::Table(map)
+    }
+
+    /// Inverse of [`SweepSummary::to_value`], with typed errors.
+    pub fn from_value(v: &Value) -> Result<SweepSummary> {
+        let schema = v.require_usize("schema")?;
+        if schema != ARTIFACT_SCHEMA {
+            return Err(Error::Config(format!("unsupported summary schema {schema}")));
+        }
+        let count = v.require_usize("count")?;
+        let extrema = match v.get("extrema") {
+            None | Some(Value::Null) => None,
+            Some(e) => {
+                let mut min = [0.0f64; 4];
+                let mut max = [0.0f64; 4];
+                for (k, name) in METRIC_NAMES.iter().enumerate() {
+                    min[k] = hex_field(e, &format!("{name}.min"))?;
+                    max[k] = hex_field(e, &format!("{name}.max"))?;
+                }
+                Some(MetricExtrema { min, max })
+            }
+        };
+        let best = match v.get("min_eap") {
+            None | Some(Value::Null) => None,
+            Some(b) => {
+                let index = b.require_usize("index")?;
+                let eap = hex_field(b, "eap")?;
+                let query = query_from_value(
+                    b.get("query")
+                        .ok_or_else(|| Error::Config("min_eap payload lacks `query`".into()))?,
+                )?;
+                let metrics = metrics_from_value(
+                    b.get("metrics")
+                        .ok_or_else(|| Error::Config("min_eap payload lacks `metrics`".into()))?,
+                )?;
+                Some((index, eap, EvaluatedPoint { query, metrics }))
+            }
+        };
+        let front = StreamingFront::from_value(
+            v.get("front")
+                .ok_or_else(|| Error::Config("summary payload lacks `front`".into()))?,
+        )?;
+        if count == 0 && (extrema.is_some() || best.is_some() || !front.is_empty()) {
+            return Err(Error::Config(
+                "summary claims 0 points but carries a non-empty payload".into(),
+            ));
+        }
+        Ok(SweepSummary { count, extrema, best, front })
+    }
+
+    /// The canonical JSON text of [`SweepSummary::to_value`].
+    pub fn to_json_string(&self) -> Result<String> {
+        self.to_value().to_json_string()
+    }
+}
+
+/// Fetch a bit-pattern-encoded f64 at a dotted path.
+fn hex_field(v: &Value, path: &str) -> Result<f64> {
+    f64_from_bits_hex(v.require_str(path)?)
+}
+
+/// FNV-1a over a summary's canonical JSON — the artifact's payload
+/// checksum ([`ShardArtifact`] stores it as `summary_fnv`), so a
+/// truncated or hand-edited payload fails to load instead of silently
+/// skewing a merge. Serialization is total here: every float travels as
+/// a bit-hex string and the only `Value::Number`s are finite usize
+/// casts, so the canonical text always exists.
+fn summary_checksum(summary: &SweepSummary) -> String {
+    let canon = summary
+        .to_json_string()
+        .expect("summary serialization is total (bit-hex floats, finite counts)");
+    format!("{:016x}", fnv1a64(canon.as_bytes()))
+}
+
+fn query_to_value(q: &AdcQuery) -> Value {
+    let mut map = BTreeMap::new();
+    map.insert("enob".to_string(), Value::String(f64_to_bits_hex(q.enob)));
+    map.insert(
+        "total_throughput".to_string(),
+        Value::String(f64_to_bits_hex(q.total_throughput)),
+    );
+    map.insert("tech_nm".to_string(), Value::String(f64_to_bits_hex(q.tech_nm)));
+    map.insert("n_adcs".to_string(), Value::Number(q.n_adcs as f64));
+    Value::Table(map)
+}
+
+fn query_from_value(v: &Value) -> Result<AdcQuery> {
+    let n_adcs = v.require_usize("n_adcs")?;
+    if n_adcs > u32::MAX as usize {
+        return Err(Error::Config(format!("query n_adcs {n_adcs} exceeds u32")));
+    }
+    Ok(AdcQuery {
+        enob: hex_field(v, "enob")?,
+        total_throughput: hex_field(v, "total_throughput")?,
+        tech_nm: hex_field(v, "tech_nm")?,
+        n_adcs: n_adcs as u32,
+    })
+}
+
+fn metrics_to_value(m: &AdcMetrics) -> Value {
+    let vals = metric_values(m);
+    let mut map = BTreeMap::new();
+    for (k, name) in METRIC_NAMES.iter().enumerate() {
+        map.insert(name.to_string(), Value::String(f64_to_bits_hex(vals[k])));
+    }
+    Value::Table(map)
+}
+
+fn metrics_from_value(v: &Value) -> Result<AdcMetrics> {
+    Ok(AdcMetrics {
+        energy_pj_per_convert: hex_field(v, METRIC_NAMES[0])?,
+        area_um2_per_adc: hex_field(v, METRIC_NAMES[1])?,
+        total_power_w: hex_field(v, METRIC_NAMES[2])?,
+        total_area_um2: hex_field(v, METRIC_NAMES[3])?,
+    })
+}
+
+fn model_to_value(model: &AdcModel) -> Value {
+    let mut map = BTreeMap::new();
+    map.insert(
+        "coefs".to_string(),
+        Value::Array(
+            model
+                .coefs
+                .to_vec()
+                .into_iter()
+                .map(|c| Value::String(f64_to_bits_hex(c)))
+                .collect(),
+        ),
+    );
+    map.insert(
+        "energy_offset_decades".to_string(),
+        Value::String(f64_to_bits_hex(model.energy_offset_decades)),
+    );
+    map.insert(
+        "area_offset_decades".to_string(),
+        Value::String(f64_to_bits_hex(model.area_offset_decades)),
+    );
+    Value::Table(map)
+}
+
+fn model_from_value(v: &Value) -> Result<AdcModel> {
+    let arr = v
+        .get("coefs")
+        .and_then(Value::as_array)
+        .ok_or_else(|| Error::Config("model payload lacks a `coefs` array".into()))?;
+    if arr.len() != 11 {
+        return Err(Error::Config(format!(
+            "model payload has {} coefficients, want 11",
+            arr.len()
+        )));
+    }
+    let coefs = arr
+        .iter()
+        .enumerate()
+        .map(|(i, item)| {
+            f64_from_bits_hex(item.as_str().ok_or_else(|| {
+                Error::Config(format!("model coefficient {i} is not a bit string"))
+            })?)
+        })
+        .collect::<Result<Vec<f64>>>()?;
+    Ok(AdcModel {
+        coefs: Coefficients::from_slice(&coefs),
+        energy_offset_decades: hex_field(v, "energy_offset_decades")?,
+        area_offset_decades: hex_field(v, "area_offset_decades")?,
+    })
+}
+
+/// One shard's completed work: the summary over its index sub-range plus
+/// everything needed to validate and merge it later (fingerprint, the
+/// full spec and model, the shard geometry).
+#[derive(Clone, Debug)]
+pub struct ShardArtifact {
+    fingerprint: String,
+    selector: ShardSelector,
+    start: usize,
+    end: usize,
+    total: usize,
+    spec: SweepSpec,
+    model: AdcModel,
+    summary: SweepSummary,
+}
+
+impl ShardArtifact {
+    /// Run shard `selector` of `spec` through the streaming kernel.
+    pub fn compute(
+        spec: &SweepSpec,
+        model: &AdcModel,
+        selector: ShardSelector,
+        workers: usize,
+    ) -> Result<ShardArtifact> {
+        let plan = ShardPlan::new(spec, selector.n_shards())?;
+        let range = plan.range(selector.index());
+        let summary = SweepSummary::compute_range(spec, model, workers, range.clone());
+        Ok(ShardArtifact {
+            fingerprint: sweep_fingerprint(spec, model),
+            selector,
+            start: range.start,
+            end: range.end,
+            total: plan.len(),
+            spec: spec.clone(),
+            model: *model,
+            summary,
+        })
+    }
+
+    /// The sweep fingerprint this shard belongs to.
+    pub fn fingerprint(&self) -> &str {
+        &self.fingerprint
+    }
+
+    /// Which shard of how many this artifact is.
+    pub fn selector(&self) -> ShardSelector {
+        self.selector
+    }
+
+    /// The grid index sub-range this shard covered.
+    pub fn range(&self) -> Range<usize> {
+        self.start..self.end
+    }
+
+    /// Total grid points of the full sweep.
+    pub fn total(&self) -> usize {
+        self.total
+    }
+
+    /// The embedded sweep spec.
+    pub fn spec(&self) -> &SweepSpec {
+        &self.spec
+    }
+
+    /// The embedded model.
+    pub fn model(&self) -> &AdcModel {
+        &self.model
+    }
+
+    /// The shard's streamed summary.
+    pub fn summary(&self) -> &SweepSummary {
+        &self.summary
+    }
+
+    /// Serialize as a self-describing [`Value`] document.
+    pub fn to_value(&self) -> Value {
+        let mut shard = BTreeMap::new();
+        shard.insert("index".to_string(), Value::Number(self.selector.index() as f64));
+        shard.insert("n_shards".to_string(), Value::Number(self.selector.n_shards() as f64));
+        shard.insert("start".to_string(), Value::Number(self.start as f64));
+        shard.insert("end".to_string(), Value::Number(self.end as f64));
+        shard.insert("total".to_string(), Value::Number(self.total as f64));
+        let mut map = BTreeMap::new();
+        map.insert("kind".to_string(), Value::String(ARTIFACT_KIND.to_string()));
+        map.insert("schema".to_string(), Value::Number(ARTIFACT_SCHEMA as f64));
+        map.insert("fingerprint".to_string(), Value::String(self.fingerprint.clone()));
+        map.insert("shard".to_string(), Value::Table(shard));
+        map.insert("spec".to_string(), self.spec.to_value());
+        map.insert("model".to_string(), model_to_value(&self.model));
+        map.insert("summary".to_string(), self.summary.to_value());
+        map.insert("summary_fnv".to_string(), Value::String(summary_checksum(&self.summary)));
+        Value::Table(map)
+    }
+
+    /// Parse and validate an artifact document. Beyond shape errors, this
+    /// re-derives the fingerprint and the shard's planned range from the
+    /// embedded spec/model and rejects any disagreement with the stored
+    /// values — a truncated or hand-edited artifact fails loudly instead
+    /// of silently skewing a merge.
+    pub fn from_value(v: &Value) -> Result<ShardArtifact> {
+        match v.get("kind").and_then(Value::as_str) {
+            Some(ARTIFACT_KIND) => {}
+            other => {
+                return Err(Error::Config(format!(
+                    "not a shard artifact (kind = {other:?}, want `{ARTIFACT_KIND}`)"
+                )));
+            }
+        }
+        let schema = v.require_usize("schema")?;
+        if schema != ARTIFACT_SCHEMA {
+            return Err(Error::Config(format!("unsupported shard artifact schema {schema}")));
+        }
+        let fingerprint = v.require_str("fingerprint")?.to_string();
+        let spec = SweepSpec::from_value(
+            v.get("spec").ok_or_else(|| Error::Config("artifact lacks `spec`".into()))?,
+        )?;
+        let model = model_from_value(
+            v.get("model").ok_or_else(|| Error::Config("artifact lacks `model`".into()))?,
+        )?;
+        let expected = sweep_fingerprint(&spec, &model);
+        if fingerprint != expected {
+            return Err(Error::Config(format!(
+                "shard artifact fingerprint `{fingerprint}` does not match its own \
+                 spec/model (expect `{expected}`) — artifact corrupted or hand-edited"
+            )));
+        }
+        let selector =
+            ShardSelector::new(v.require_usize("shard.index")?, v.require_usize("shard.n_shards")?)?;
+        let start = v.require_usize("shard.start")?;
+        let end = v.require_usize("shard.end")?;
+        let total = v.require_usize("shard.total")?;
+        let plan = ShardPlan::new(&spec, selector.n_shards())?;
+        let planned = plan.range(selector.index());
+        if total != plan.len() || start != planned.start || end != planned.end {
+            return Err(Error::Config(format!(
+                "shard {selector} claims range {start}..{end} of {total} points but the \
+                 embedded spec plans {}..{} of {}",
+                planned.start,
+                planned.end,
+                plan.len()
+            )));
+        }
+        let summary = SweepSummary::from_value(
+            v.get("summary").ok_or_else(|| Error::Config("artifact lacks `summary`".into()))?,
+        )?;
+        // Payload integrity: the stored checksum must match the parsed
+        // summary's canonical serialization (round-tripping canonical
+        // JSON is the identity, so any edited/corrupted byte of the
+        // payload shows up here).
+        let stored_fnv = v.require_str("summary_fnv")?;
+        let actual_fnv = summary_checksum(&summary);
+        if stored_fnv != actual_fnv {
+            return Err(Error::Config(format!(
+                "shard {selector} summary checksum `{stored_fnv}` does not match its \
+                 payload (expect `{actual_fnv}`) — summary corrupted or hand-edited"
+            )));
+        }
+        if summary.count() != end - start {
+            return Err(Error::Config(format!(
+                "shard {selector} summary covers {} points, want {} for range {start}..{end}",
+                summary.count(),
+                end - start
+            )));
+        }
+        // Every payload index must fall inside the shard's own range.
+        if let Some(i) = summary.min_eap_index() {
+            if !(start..end).contains(&i) {
+                return Err(Error::Config(format!(
+                    "shard {selector} min-EAP index {i} outside its range {start}..{end}"
+                )));
+            }
+        }
+        for &(_, _, i) in summary.front().points() {
+            if !(start..end).contains(&i) {
+                return Err(Error::Config(format!(
+                    "shard {selector} front index {i} outside its range {start}..{end}"
+                )));
+            }
+        }
+        Ok(ShardArtifact { fingerprint, selector, start, end, total, spec, model, summary })
+    }
+
+    /// The artifact as canonical JSON text (newline-terminated).
+    pub fn to_json_string(&self) -> Result<String> {
+        Ok(self.to_value().to_json_string()? + "\n")
+    }
+
+    /// Write the artifact to `path`.
+    pub fn write(&self, path: &str) -> Result<()> {
+        std::fs::write(path, self.to_json_string()?)
+            .map_err(|e| Error::Config(format!("cannot write shard artifact {path}: {e}")))
+    }
+
+    /// Load and validate an artifact from `path`.
+    pub fn load(path: &str) -> Result<ShardArtifact> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::Config(format!("cannot read shard artifact {path}: {e}")))?;
+        let doc = parse_json(&text)
+            .map_err(|e| Error::Config(format!("shard artifact {path}: {e}")))?;
+        ShardArtifact::from_value(&doc)
+            .map_err(|e| Error::Config(format!("shard artifact {path}: {e}")))
+    }
+
+    /// Resume probe: `Some(artifact)` iff `path` holds a valid artifact
+    /// for exactly this fingerprint and index range — the signal that a
+    /// shard finished in an earlier run and can be skipped. Any failure
+    /// (missing file, parse error, mismatch) is `None`: the shard is
+    /// simply recomputed.
+    pub fn load_if_complete(
+        path: &str,
+        fingerprint: &str,
+        range: &Range<usize>,
+    ) -> Option<ShardArtifact> {
+        let artifact = ShardArtifact::load(path).ok()?;
+        (artifact.fingerprint() == fingerprint && artifact.range() == *range).then_some(artifact)
+    }
+}
+
+/// The result of merging shard artifacts: the combined summary plus
+/// coverage accounting (which index ranges are still missing).
+#[derive(Clone, Debug)]
+pub struct MergedSweep {
+    /// The sweep fingerprint all merged shards share.
+    pub fingerprint: String,
+    /// The sweep spec (from the artifacts).
+    pub spec: SweepSpec,
+    /// The merged rollup.
+    pub summary: SweepSummary,
+    /// Grid points covered by the merged shards.
+    pub covered: usize,
+    /// Total grid points of the sweep.
+    pub total: usize,
+    /// Index ranges no merged shard covered (empty iff complete).
+    pub missing: Vec<Range<usize>>,
+}
+
+impl MergedSweep {
+    /// Whether every grid point was covered — only then is the summary
+    /// comparable to the single-process [`SweepSummary::compute`].
+    pub fn is_complete(&self) -> bool {
+        self.covered == self.total
+    }
+}
+
+/// Merge any subset of shard artifacts (in any order). Typed errors for
+/// an empty input, mismatched fingerprints (shards of different sweeps),
+/// and overlapping index ranges (e.g. shards of the same sweep planned
+/// with different shard counts).
+pub fn merge_shards(artifacts: &[ShardArtifact]) -> Result<MergedSweep> {
+    let first = artifacts
+        .first()
+        .ok_or_else(|| Error::Config("no shard artifacts to merge".into()))?;
+    // Compare the full canonical spec/model strings, not just the 64-bit
+    // FNV digest — FNV is not collision-resistant, and merging shards of
+    // two different sweeps must be impossible, not merely unlikely.
+    let first_canonical = sweep_canonical(&first.spec, &first.model);
+    for a in &artifacts[1..] {
+        if a.fingerprint != first.fingerprint
+            || sweep_canonical(&a.spec, &a.model) != first_canonical
+        {
+            return Err(Error::Config(format!(
+                "shard artifact fingerprint mismatch: shard {} has `{}` but shard {} has \
+                 `{}` — the artifacts belong to different sweeps (spec or model differs)",
+                first.selector, first.fingerprint, a.selector, a.fingerprint
+            )));
+        }
+    }
+    // Identical canonical strings imply identical spec/model bits, so
+    // `total` agrees across artifacts too.
+    let total = first.total;
+    let mut occupied: Vec<Range<usize>> = artifacts
+        .iter()
+        .map(ShardArtifact::range)
+        .filter(|r| !r.is_empty())
+        .collect();
+    occupied.sort_by_key(|r| (r.start, r.end));
+    for w in occupied.windows(2) {
+        if w[1].start < w[0].end {
+            return Err(Error::Config(format!(
+                "shard ranges overlap: {:?} and {:?} (merging shards from different \
+                 shard counts of the same sweep?)",
+                w[0], w[1]
+            )));
+        }
+    }
+    let covered = occupied.iter().map(|r| r.len()).sum();
+    let mut missing = Vec::new();
+    let mut cursor = 0usize;
+    for r in &occupied {
+        if r.start > cursor {
+            missing.push(cursor..r.start);
+        }
+        cursor = r.end;
+    }
+    if cursor < total {
+        missing.push(cursor..total);
+    }
+    let summary = artifacts
+        .iter()
+        .map(|a| a.summary.clone())
+        .fold(SweepSummary::new(), SweepSummary::merge);
+    Ok(MergedSweep {
+        fingerprint: first.fingerprint.clone(),
+        spec: first.spec.clone(),
+        summary,
+        covered,
+        total,
+        missing,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{sweep_min_eap, sweep_power_area_front};
+    use super::*;
+
+    fn small_spec() -> SweepSpec {
+        SweepSpec {
+            enobs: vec![4.0, 8.0, 12.0],
+            total_throughputs: vec![1e6, 1e8, 1e10],
+            tech_nms: vec![16.0, 32.0],
+            n_adcs: vec![1, 4],
+        }
+    }
+
+    fn oversized_spec() -> SweepSpec {
+        SweepSpec {
+            enobs: vec![8.0; 1 << 17],
+            total_throughputs: vec![1e9; 1 << 17],
+            tech_nms: vec![32.0; 1 << 17],
+            n_adcs: vec![1; 1 << 17],
+        }
+    }
+
+    #[test]
+    fn selector_parses_and_rejects() {
+        let s = ShardSelector::parse("2/7").unwrap();
+        assert_eq!((s.index(), s.n_shards()), (2, 7));
+        assert_eq!(s.to_string(), "2/7");
+        assert_eq!(ShardSelector::parse(" 0 / 1 ").unwrap().n_shards(), 1);
+        for bad in ["0/0", "3/2", "2/2", "junk", "1", "1/", "/3", "-1/3", "1.5/3", "", "1/3/5"] {
+            let err = ShardSelector::parse(bad);
+            assert!(err.is_err(), "`{bad}` should be rejected");
+            assert!(
+                matches!(err.unwrap_err(), Error::Config(_)),
+                "`{bad}` should be a typed config error"
+            );
+        }
+    }
+
+    #[test]
+    fn plan_partitions_exactly() {
+        for len in [0usize, 1, 2, 5, 36, 600] {
+            let spec = SweepSpec {
+                enobs: vec![8.0; len],
+                total_throughputs: vec![1e9],
+                tech_nms: vec![32.0],
+                n_adcs: vec![1],
+            };
+            for n_shards in [1usize, 2, 3, 7, 13, 64] {
+                let plan = ShardPlan::new(&spec, n_shards).unwrap();
+                let mut cursor = 0usize;
+                let mut sizes = Vec::new();
+                for r in plan.ranges() {
+                    assert_eq!(r.start, cursor, "len={len} n={n_shards}");
+                    cursor = r.end;
+                    sizes.push(r.len());
+                }
+                assert_eq!(cursor, len, "union must cover the grid");
+                let (lo, hi) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+                assert!(hi - lo <= 1, "balanced split: {sizes:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn plan_rejects_zero_shards_and_overflowed_grids() {
+        let spec = small_spec();
+        assert!(matches!(ShardPlan::new(&spec, 0), Err(Error::Config(_))));
+        assert!(matches!(ShardPlan::new(&oversized_spec(), 4), Err(Error::Numeric(_))));
+    }
+
+    #[test]
+    fn summary_matches_single_process_rollups() {
+        let spec = small_spec();
+        let model = AdcModel::default();
+        for workers in [1usize, 4] {
+            let summary = SweepSummary::compute(&spec, &model, workers);
+            assert_eq!(summary.count(), spec.len());
+            let expect = sweep_min_eap(&spec, &model, 1).unwrap();
+            let got = summary.min_eap().unwrap();
+            assert_eq!(got.query, expect.query);
+            assert_eq!(got.metrics.to_bits(), expect.metrics.to_bits());
+            assert_eq!(summary.front_indices(), sweep_power_area_front(&spec, &model, 1));
+            let e = summary.extrema().unwrap();
+            for k in 0..4 {
+                assert!(e.min[k] <= e.max[k]);
+            }
+        }
+    }
+
+    #[test]
+    fn summary_json_roundtrip_is_bit_exact() {
+        let spec = small_spec();
+        let model = AdcModel::default();
+        let summary = SweepSummary::compute(&spec, &model, 4);
+        let text = summary.to_json_string().unwrap();
+        let back = SweepSummary::from_value(&parse_json(&text).unwrap()).unwrap();
+        assert_eq!(back.to_json_string().unwrap(), text);
+        // Empty summary too.
+        let empty = SweepSummary::new();
+        let text = empty.to_json_string().unwrap();
+        let back = SweepSummary::from_value(&parse_json(&text).unwrap()).unwrap();
+        assert_eq!(back.count(), 0);
+        assert!(back.min_eap().is_none() && back.extrema().is_none());
+        assert_eq!(back.to_json_string().unwrap(), text);
+    }
+
+    #[test]
+    fn sharded_merge_reproduces_single_process_bitwise() {
+        let spec = small_spec();
+        let model = AdcModel::default();
+        let reference = SweepSummary::compute(&spec, &model, 4).to_json_string().unwrap();
+        for n_shards in [1usize, 3, 5, 36, 50] {
+            let mut artifacts: Vec<ShardArtifact> = (0..n_shards)
+                .map(|i| {
+                    ShardArtifact::compute(
+                        &spec,
+                        &model,
+                        ShardSelector::new(i, n_shards).unwrap(),
+                        2,
+                    )
+                    .unwrap()
+                })
+                .collect();
+            // Merge order must not matter: rotate and reverse.
+            artifacts.rotate_left(n_shards / 2);
+            artifacts.reverse();
+            let merged = merge_shards(&artifacts).unwrap();
+            assert!(merged.is_complete(), "n_shards={n_shards}");
+            assert!(merged.missing.is_empty());
+            assert_eq!(
+                merged.summary.to_json_string().unwrap(),
+                reference,
+                "n_shards={n_shards}"
+            );
+        }
+    }
+
+    #[test]
+    fn empty_and_single_point_shards_merge_cleanly() {
+        // 50 shards over 36 points: 14 shards are empty, the rest single
+        // or double points — and an entirely empty grid.
+        let empty = SweepSpec { enobs: vec![], ..small_spec() };
+        let model = AdcModel::default();
+        for spec in [small_spec(), empty] {
+            let n_shards = 50usize;
+            let artifacts: Vec<ShardArtifact> = (0..n_shards)
+                .map(|i| {
+                    ShardArtifact::compute(
+                        &spec,
+                        &model,
+                        ShardSelector::new(i, n_shards).unwrap(),
+                        1,
+                    )
+                    .unwrap()
+                })
+                .collect();
+            let merged = merge_shards(&artifacts).unwrap();
+            assert!(merged.is_complete());
+            assert_eq!(merged.summary.count(), spec.len());
+            assert_eq!(
+                merged.summary.to_json_string().unwrap(),
+                SweepSummary::compute(&spec, &model, 1).to_json_string().unwrap()
+            );
+        }
+    }
+
+    #[test]
+    fn artifact_json_roundtrip_and_resume_probe() {
+        let spec = small_spec();
+        let model = AdcModel::default();
+        let artifact =
+            ShardArtifact::compute(&spec, &model, ShardSelector::new(1, 3).unwrap(), 2).unwrap();
+        let text = artifact.to_json_string().unwrap();
+        let back = ShardArtifact::from_value(&parse_json(&text).unwrap()).unwrap();
+        assert_eq!(back.fingerprint(), artifact.fingerprint());
+        assert_eq!(back.range(), artifact.range());
+        assert_eq!(back.to_json_string().unwrap(), text);
+
+        let path = std::env::temp_dir()
+            .join(format!("cimdse_shard_unit_{}.json", std::process::id()));
+        let path = path.to_str().unwrap().to_string();
+        artifact.write(&path).unwrap();
+        let fp = sweep_fingerprint(&spec, &model);
+        assert!(ShardArtifact::load_if_complete(&path, &fp, &artifact.range()).is_some());
+        // Wrong fingerprint or range: not a resume hit.
+        assert!(ShardArtifact::load_if_complete(&path, "0000000000000000", &artifact.range())
+            .is_none());
+        assert!(ShardArtifact::load_if_complete(&path, &fp, &(0..1)).is_none());
+        // Corrupt file: typed error from load, None from the probe.
+        std::fs::write(&path, "{ not json").unwrap();
+        assert!(matches!(ShardArtifact::load(&path), Err(Error::Config(_))));
+        assert!(ShardArtifact::load_if_complete(&path, &fp, &artifact.range()).is_none());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn merge_rejects_mixed_and_overlapping_artifacts() {
+        let spec = small_spec();
+        let model = AdcModel::default();
+        let tuned = AdcModel { energy_offset_decades: 0.1, ..model };
+        let a = ShardArtifact::compute(&spec, &model, ShardSelector::new(0, 2).unwrap(), 1)
+            .unwrap();
+        let b = ShardArtifact::compute(&spec, &tuned, ShardSelector::new(1, 2).unwrap(), 1)
+            .unwrap();
+        assert_ne!(a.fingerprint(), b.fingerprint());
+        let err = merge_shards(&[a.clone(), b]).unwrap_err().to_string();
+        assert!(err.contains("fingerprint"), "{err}");
+
+        // Same sweep, different shard counts: ranges overlap.
+        let whole = ShardArtifact::compute(&spec, &model, ShardSelector::new(0, 1).unwrap(), 1)
+            .unwrap();
+        let err = merge_shards(&[a.clone(), whole]).unwrap_err().to_string();
+        assert!(err.contains("overlap"), "{err}");
+
+        assert!(merge_shards(&[]).is_err());
+
+        // A valid subset merges but reports what is missing.
+        let merged = merge_shards(&[a]).unwrap();
+        assert!(!merged.is_complete());
+        assert_eq!(merged.covered + merged.missing.iter().map(|r| r.len()).sum::<usize>(), 36);
+        assert_eq!(merged.missing, vec![18..36]);
+    }
+
+    #[test]
+    fn from_value_rejects_tampered_artifacts() {
+        let spec = small_spec();
+        let model = AdcModel::default();
+        let artifact =
+            ShardArtifact::compute(&spec, &model, ShardSelector::new(0, 2).unwrap(), 1).unwrap();
+        let good = artifact.to_json_string().unwrap();
+        // Stored fingerprint that disagrees with the embedded spec/model.
+        let tampered = good.replace(&artifact.fingerprint().to_string(), "deadbeefdeadbeef");
+        let err = ShardArtifact::from_value(&parse_json(&tampered).unwrap())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("fingerprint"), "{err}");
+        // Wrong kind.
+        let err = ShardArtifact::from_value(&parse_json("{\"kind\": \"x\"}").unwrap())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("kind"), "{err}");
+
+        // A single flipped payload hex digit (here: the energy extremum)
+        // trips the summary checksum.
+        let hex = f64_to_bits_hex(artifact.summary().extrema().unwrap().min[0]);
+        let mut flipped: Vec<char> = hex.chars().collect();
+        flipped[15] = if flipped[15] == '0' { '1' } else { '0' };
+        let flipped: String = flipped.into_iter().collect();
+        let tampered = good.replacen(&hex, &flipped, 1);
+        assert_ne!(tampered, good, "the tamper must actually change the payload");
+        let err = ShardArtifact::from_value(&parse_json(&tampered).unwrap())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("checksum"), "{err}");
+
+        // Nulling the payload while keeping the count is caught too.
+        let parsed = parse_json(&good).unwrap();
+        let orig_count = parsed.get("summary.count").cloned().unwrap();
+        let mut root = match parsed {
+            Value::Table(map) => map,
+            _ => unreachable!("artifacts are tables"),
+        };
+        let mut doctored = match SweepSummary::new().to_value() {
+            Value::Table(map) => map,
+            _ => unreachable!("summaries are tables"),
+        };
+        doctored.insert("count".into(), orig_count);
+        root.insert("summary".into(), Value::Table(doctored));
+        let err = ShardArtifact::from_value(&Value::Table(root)).unwrap_err().to_string();
+        assert!(err.contains("checksum"), "{err}");
+    }
+
+    #[test]
+    fn fingerprint_tracks_every_input_bit() {
+        let spec = small_spec();
+        let model = AdcModel::default();
+        let base = sweep_fingerprint(&spec, &model);
+        assert_eq!(base.len(), 16);
+        let mut spec2 = spec.clone();
+        spec2.enobs[0] = 4.000000000000001;
+        assert_ne!(base, sweep_fingerprint(&spec2, &model));
+        let mut spec3 = spec.clone();
+        spec3.n_adcs[0] = 2;
+        assert_ne!(base, sweep_fingerprint(&spec3, &model));
+        let tuned = AdcModel { area_offset_decades: 1e-300, ..model };
+        assert_ne!(base, sweep_fingerprint(&spec, &tuned));
+        assert_eq!(base, sweep_fingerprint(&spec.clone(), &model));
+    }
+}

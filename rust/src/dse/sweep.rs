@@ -9,6 +9,8 @@
 use std::ops::Range;
 
 use crate::adc::AdcQuery;
+use crate::config::Value;
+use crate::error::{Error, Result};
 use crate::util::logspace::{log10, logspace};
 
 /// A cartesian sweep over (ENOB, total throughput, tech node, #ADCs).
@@ -174,6 +176,67 @@ impl SweepSpec {
         out
     }
 
+    /// Serialize the four axes as a config [`Value`] table. Finite f64
+    /// axis values round-trip bit-exactly through the JSON layer (Rust's
+    /// `Display` prints the shortest decimal that parses back to the
+    /// identical bits); non-finite axis values are rejected by
+    /// [`Value::to_json_string`] downstream, matching
+    /// [`crate::adc::AdcQuery::validate`]'s view that they are caller
+    /// bugs.
+    pub fn to_value(&self) -> Value {
+        let axis = |xs: &[f64]| Value::Array(xs.iter().map(|&x| Value::Number(x)).collect());
+        let mut map = std::collections::BTreeMap::new();
+        map.insert("enobs".to_string(), axis(&self.enobs));
+        map.insert("total_throughputs".to_string(), axis(&self.total_throughputs));
+        map.insert("tech_nms".to_string(), axis(&self.tech_nms));
+        map.insert(
+            "n_adcs".to_string(),
+            Value::Array(self.n_adcs.iter().map(|&n| Value::Number(n as f64)).collect()),
+        );
+        Value::Table(map)
+    }
+
+    /// Inverse of [`SweepSpec::to_value`], with typed errors on missing
+    /// or mistyped axes.
+    pub fn from_value(v: &Value) -> Result<SweepSpec> {
+        fn f64_axis(v: &Value, key: &str) -> Result<Vec<f64>> {
+            let arr = v
+                .get(key)
+                .and_then(Value::as_array)
+                .ok_or_else(|| Error::Config(format!("spec axis `{key}` missing or not an array")))?;
+            arr.iter()
+                .enumerate()
+                .map(|(i, item)| {
+                    item.as_f64().ok_or_else(|| {
+                        Error::Config(format!("spec axis `{key}[{i}]` is not a number"))
+                    })
+                })
+                .collect()
+        }
+        let n_adcs_vals = v
+            .get("n_adcs")
+            .and_then(Value::as_array)
+            .ok_or_else(|| Error::Config("spec axis `n_adcs` missing or not an array".into()))?;
+        let n_adcs = n_adcs_vals
+            .iter()
+            .enumerate()
+            .map(|(i, item)| {
+                item.as_usize()
+                    .filter(|&n| n <= u32::MAX as usize)
+                    .map(|n| n as u32)
+                    .ok_or_else(|| {
+                        Error::Config(format!("spec axis `n_adcs[{i}]` is not a u32 integer"))
+                    })
+            })
+            .collect::<Result<Vec<u32>>>()?;
+        Ok(SweepSpec {
+            enobs: f64_axis(v, "enobs")?,
+            total_throughputs: f64_axis(v, "total_throughputs")?,
+            tech_nms: f64_axis(v, "tech_nms")?,
+            n_adcs,
+        })
+    }
+
     /// Materialize the cartesian product (ENOB-major, n_adcs-minor order).
     /// Panics (with a streaming hint) if the grid length overflows; use
     /// [`SweepSpec::chunks`] / [`crate::dse::run_sweep_fold`] for grids
@@ -314,6 +377,39 @@ mod tests {
             n_adcs: vec![1; 1 << 17],
         };
         let _ = s.points();
+    }
+
+    #[test]
+    fn spec_value_roundtrip_is_bit_exact() {
+        let spec = SweepSpec {
+            enobs: vec![2.0, 7.3000000000000007, 13.999999999999998],
+            total_throughputs: vec![1.3e9, 4e10, f64::MIN_POSITIVE],
+            tech_nms: vec![16.0, 32.0],
+            n_adcs: vec![1, u32::MAX],
+        };
+        let text = spec.to_value().to_json_string().unwrap();
+        let back = SweepSpec::from_value(&crate::config::parse_json(&text).unwrap()).unwrap();
+        let bits = |xs: &[f64]| xs.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&back.enobs), bits(&spec.enobs));
+        assert_eq!(bits(&back.total_throughputs), bits(&spec.total_throughputs));
+        assert_eq!(bits(&back.tech_nms), bits(&spec.tech_nms));
+        assert_eq!(back.n_adcs, spec.n_adcs);
+    }
+
+    #[test]
+    fn spec_from_value_rejects_malformed_input() {
+        use crate::config::parse_json;
+        for text in [
+            "{}",
+            r#"{"enobs": [8], "total_throughputs": [1e9], "tech_nms": [32]}"#,
+            r#"{"enobs": [8], "total_throughputs": [1e9], "tech_nms": [32], "n_adcs": [1.5]}"#,
+            r#"{"enobs": [8], "total_throughputs": [1e9], "tech_nms": [32], "n_adcs": [-1]}"#,
+            r#"{"enobs": ["x"], "total_throughputs": [1e9], "tech_nms": [32], "n_adcs": [1]}"#,
+            r#"{"enobs": 8, "total_throughputs": [1e9], "tech_nms": [32], "n_adcs": [1]}"#,
+        ] {
+            let v = parse_json(text).unwrap();
+            assert!(SweepSpec::from_value(&v).is_err(), "{text}");
+        }
     }
 
     #[test]

@@ -4,7 +4,10 @@
 //!
 //! * `fit`     — synthesize the survey, fit the model, report coefficients.
 //! * `model`   — evaluate one ADC design point (optionally tuned).
-//! * `sweep`   — DSE over a design-point grid (native or PJRT backend).
+//! * `sweep`   — DSE over a design-point grid (native or PJRT backend);
+//!   `--shard i/N` runs one index sub-range to a resumable JSON artifact.
+//! * `merge-shards` — merge shard artifacts bit-identically to the
+//!   single-process streaming sweep.
 //! * `map`     — map a workload onto a RAELLA variant, report energy/area.
 //! * `figures` — regenerate the paper's Figs. 2–5.
 //! * `bench-report` — validate/summarize a `BENCH_*.json` perf artifact.
@@ -13,7 +16,8 @@ use cimdse::adc::{AdcModel, AdcQuery, fit_model, tuning::TuningPoint};
 use cimdse::arch::raella::{RaellaVariant, raella};
 use cimdse::cli::Args;
 use cimdse::dse::{
-    NativeEvaluator, PjrtEvaluator, SweepSpec, figures, pareto_front, run_sweep,
+    NativeEvaluator, PjrtEvaluator, ShardArtifact, ShardPlan, ShardSelector, SweepSpec,
+    SweepSummary, figures, merge_shards, pareto_front, run_sweep, sweep_fingerprint,
 };
 use cimdse::energy::{AreaScope, accel_area, layer_energy, workload_energy};
 use cimdse::report::Table;
@@ -35,7 +39,13 @@ SUBCOMMANDS
            [--tune-energy PJ] [--tune-area UM2]   evaluate one design point
   estimate --class adc --resolution B --throughput F [...]
                                                   Accelergy-style plug-in query
-  sweep    [--backend native|pjrt] [--points 12]  dense DSE + Pareto front
+  sweep    [--backend native|pjrt] [--spec dense|fig5] [--points 12]
+           [--enob 7] [--tsteps 12]               dense DSE + Pareto front
+           [--summary-json PATH]                  streamed fold/min-EAP/front summary
+           [--shard i/N] [--out shard_i.json]     run one shard to a resumable artifact
+  merge-shards FILE... [--out merged.json]
+           [--allow-partial]                      merge shard artifacts (bit-identical
+                                                  to the single-process sweep)
   map      [--arch s|m|l|xl] [--arch-file TOML]
            [--workload resnet18|vgg16|lenet] [--workload-file TOML]
            [--layer NAME]                         map a DNN onto a CiM arch
@@ -45,8 +55,12 @@ SUBCOMMANDS
   bench-report --path BENCH_sweep.json            validate + summarize a perf artifact
 ";
 
+/// Boolean flags across all subcommands: declaring them keeps the parser
+/// from consuming a following positional as the flag's "value".
+const BOOLEAN_FLAGS: &[&str] = &["allow-partial"];
+
 fn main() {
-    let args = match Args::parse(std::env::args().skip(1)) {
+    let args = match Args::parse_with_flags(std::env::args().skip(1), BOOLEAN_FLAGS) {
         Ok(a) => a,
         Err(e) => {
             eprintln!("error: {e}\n{USAGE}");
@@ -58,6 +72,7 @@ fn main() {
         Some("model") => cmd_model(&args),
         Some("estimate") => cmd_estimate(&args),
         Some("sweep") => cmd_sweep(&args),
+        Some("merge-shards") => cmd_merge_shards(&args),
         Some("map") => cmd_map(&args),
         Some("explore") => cmd_explore(&args),
         Some("survey") => cmd_survey(&args),
@@ -176,10 +191,178 @@ fn cmd_model(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// The sweep grid selected on the command line. Shard processes of one
+/// sweep must pass identical `--spec`-family and `--n`/`--seed` flags;
+/// the artifact fingerprint catches any accidental divergence at merge
+/// time.
+fn sweep_spec_from_args(args: &Args) -> Result<SweepSpec> {
+    match args.opt_or("spec", "dense") {
+        "dense" => {
+            let points = args.usize_or("points", 12)?;
+            if points < 2 {
+                return Err(Error::Config("--points must be >= 2".into()));
+            }
+            Ok(SweepSpec::dense(points))
+        }
+        "fig5" => {
+            let tsteps = args.usize_or("tsteps", 12)?;
+            if tsteps < 2 {
+                return Err(Error::Config("--tsteps must be >= 2".into()));
+            }
+            Ok(SweepSpec::fig5(args.f64_or("enob", 7.0)?, tsteps))
+        }
+        other => Err(Error::Config(format!("unknown sweep spec `{other}` (dense|fig5)"))),
+    }
+}
+
+/// Human summary of a streamed sweep rollup (shared by `--summary-json`
+/// and `merge-shards`).
+fn print_sweep_summary(spec: &SweepSpec, summary: &SweepSummary) {
+    println!(
+        "  grid: {} ENOBs x {} throughputs x {} nodes x {} ADC counts = {} points \
+         ({} evaluated)",
+        spec.enobs.len(),
+        spec.total_throughputs.len(),
+        spec.tech_nms.len(),
+        spec.n_adcs.len(),
+        spec.len(),
+        summary.count()
+    );
+    match summary.min_eap() {
+        None => println!("  (no points evaluated)"),
+        Some(p) => println!(
+            "  min-EAP point: ENOB {:.1}, {} total, {} nm, {} ADCs -> {}/convert, {} total",
+            p.query.enob,
+            fmt_throughput(p.query.total_throughput),
+            p.query.tech_nm,
+            p.query.n_adcs,
+            fmt_energy_pj(p.metrics.energy_pj_per_convert),
+            fmt_area_um2(p.metrics.total_area_um2),
+        ),
+    }
+    println!("  power-area Pareto front: {} points", summary.front().len());
+    if let Some(e) = summary.extrema() {
+        println!(
+            "  energy/convert range: {} .. {}",
+            fmt_energy_pj(e.min[0]),
+            fmt_energy_pj(e.max[0])
+        );
+    }
+}
+
+/// Shard mode of `sweep`: run one planned index sub-range to an artifact,
+/// skipping work whose artifact is already on disk (resume).
+fn cmd_sweep_shard(
+    args: &Args,
+    spec: &SweepSpec,
+    model: &AdcModel,
+    shard_spec: &str,
+) -> Result<()> {
+    if args.opt_or("backend", "native") != "native" {
+        return Err(Error::Config(
+            "--shard runs on the native streaming backend only".into(),
+        ));
+    }
+    let selector = ShardSelector::parse(shard_spec)?;
+    let plan = ShardPlan::new(spec, selector.n_shards())?;
+    let range = plan.range(selector.index());
+    let fingerprint = sweep_fingerprint(spec, model);
+    let out = match args.opt("out") {
+        Some(p) => p.to_string(),
+        None => format!("shard_{}.json", selector.index()),
+    };
+    if ShardArtifact::load_if_complete(&out, &fingerprint, &range).is_some() {
+        println!(
+            "shard {selector}: {out} already complete (fingerprint {fingerprint}, points \
+             [{}..{})); skipping",
+            range.start, range.end
+        );
+        return Ok(());
+    }
+    let artifact =
+        ShardArtifact::compute(spec, model, selector, cimdse::exec::default_workers())?;
+    artifact.write(&out)?;
+    println!(
+        "shard {selector}: evaluated {} of {} grid points [{}..{}) -> {out} (fingerprint \
+         {fingerprint})",
+        artifact.summary().count(),
+        plan.len(),
+        range.start,
+        range.end
+    );
+    Ok(())
+}
+
+fn cmd_merge_shards(args: &Args) -> Result<()> {
+    // `--allow-partial` is a declared boolean flag (`BOOLEAN_FLAGS`), so
+    // flag-first invocations cannot swallow a following file path.
+    let files = args.positionals();
+    if files.is_empty() {
+        return Err(Error::Config(
+            "merge-shards needs at least one shard artifact path".into(),
+        ));
+    }
+    let artifacts = files
+        .iter()
+        .map(|p| ShardArtifact::load(p))
+        .collect::<Result<Vec<_>>>()?;
+    let merged = merge_shards(&artifacts)?;
+    if !merged.is_complete() && !args.flag("allow-partial") {
+        let gaps: Vec<String> = merged
+            .missing
+            .iter()
+            .map(|r| format!("{}..{}", r.start, r.end))
+            .collect();
+        return Err(Error::Config(format!(
+            "merged shards cover {} of {} grid points (missing index ranges: {}); re-run \
+             the missing shards or pass --allow-partial",
+            merged.covered,
+            merged.total,
+            gaps.join(", ")
+        )));
+    }
+    println!(
+        "merged {} shard artifact(s): {}/{} grid points (fingerprint {})",
+        artifacts.len(),
+        merged.covered,
+        merged.total,
+        merged.fingerprint
+    );
+    print_sweep_summary(&merged.spec, &merged.summary);
+    if let Some(path) = args.opt("out") {
+        std::fs::write(path, merged.summary.to_json_string()? + "\n")?;
+        println!("wrote merged summary to {path}");
+    }
+    Ok(())
+}
+
 fn cmd_sweep(args: &Args) -> Result<()> {
     let model = fitted_model(args.usize_or("n", 700)?, args.u64_or("seed", 1997)?)?;
-    let points = args.usize_or("points", 12)?;
-    let spec = SweepSpec::dense(points);
+    let spec = sweep_spec_from_args(args)?;
+    if let Some(shard_spec) = args.opt("shard") {
+        if args.opt("summary-json").is_some() {
+            return Err(Error::Config(
+                "--shard and --summary-json are mutually exclusive (a shard writes its \
+                 artifact to --out; merge artifacts with `merge-shards --out`)"
+                    .into(),
+            ));
+        }
+        return cmd_sweep_shard(args, &spec, &model, shard_spec);
+    }
+    if let Some(path) = args.opt("summary-json") {
+        if args.opt_or("backend", "native") != "native" {
+            return Err(Error::Config(
+                "--summary-json runs on the native streaming backend only".into(),
+            ));
+        }
+        // Single-process streaming rollup — byte-identical to what
+        // `merge-shards --out` writes for a complete shard set.
+        let summary = SweepSummary::compute(&spec, &model, cimdse::exec::default_workers());
+        std::fs::write(path, summary.to_json_string()? + "\n")?;
+        print_sweep_summary(&spec, &summary);
+        println!("wrote sweep summary to {path}");
+        return Ok(());
+    }
     let backend = args.opt_or("backend", "native");
 
     let evaluated = match backend {
@@ -378,9 +561,7 @@ fn cmd_bench_report(args: &Args) -> Result<()> {
     // CI gate: parse a `BENCH_*.json` perf artifact (bench_util::JsonReport
     // schema), validate its shape, and summarize it. Any structural
     // problem is a hard error so ci.sh fails on missing/malformed output.
-    let path = args
-        .opt("path")
-        .ok_or_else(|| Error::Config("bench-report needs --path <BENCH_*.json>".into()))?;
+    let path = args.require_opt("path")?;
     let text = std::fs::read_to_string(path)
         .map_err(|e| Error::Config(format!("cannot read bench report {path}: {e}")))?;
     let doc = cimdse::config::parse_json(&text)?;

@@ -1,0 +1,249 @@
+//! Golden-figure regression suite: pins the paper-facing outputs —
+//! Fig. 2 model energy lines, Fig. 3 model area lines, and the Fig. 5
+//! EAP surface — to checked-in expected values
+//! (`tests/golden_figures.json`) with explicit tolerances, so model
+//! refactors cannot silently drift from the paper's numbers.
+//!
+//! Everything is computed from [`AdcModel::default`] (the generator
+//! truth), so the goldens are deterministic: pure closed-form float math
+//! with no survey fit in the loop. The relative tolerance (1e-9, stored
+//! in the golden file) absorbs last-ulp libm differences across
+//! platforms while still catching any real coefficient or formula
+//! change, which moves results by many orders more.
+//!
+//! To intentionally re-baseline after a deliberate model change:
+//! `CIMDSE_UPDATE_GOLDEN=1 cargo test --test golden_figures` rewrites
+//! the golden file from the current implementation; commit the diff.
+//! The file uses the same compact sorted-key layout `write_golden`
+//! emits; a re-baseline may still respell individual numbers (shortest
+//! round-trip decimal, e.g. `1e-09` vs `0.000000001`) without changing
+//! their parsed bits.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use cimdse::adc::AdcModel;
+use cimdse::config::{Value, parse_json};
+use cimdse::dse::figures::{Fig5Cell, fig2, fig3, fig5};
+use cimdse::survey::generator::{SurveyConfig, generate_survey};
+
+const LINE_POINTS: usize = 7;
+const FIG5_STEPS: usize = 4;
+const FIG5_NADCS: [u32; 5] = [1, 2, 4, 8, 16];
+
+fn golden_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden_figures.json")
+}
+
+fn assert_close(actual: f64, expected: f64, rel_tol: f64, ctx: &str) {
+    let scale = actual.abs().max(expected.abs());
+    assert!(
+        (actual - expected).abs() <= rel_tol * scale,
+        "{ctx}: actual {actual:e} vs golden {expected:e} (rel err {:.3e} > {rel_tol:e})",
+        (actual - expected).abs() / scale
+    );
+}
+
+fn f64_list(v: &Value, path: &str) -> Vec<f64> {
+    v.get(path)
+        .and_then(Value::as_array)
+        .unwrap_or_else(|| panic!("golden file lacks array `{path}`"))
+        .iter()
+        .map(|x| x.as_f64().unwrap_or_else(|| panic!("non-number in `{path}`")))
+        .collect()
+}
+
+fn f64_rows(v: &Value, path: &str) -> Vec<Vec<f64>> {
+    v.get(path)
+        .and_then(Value::as_array)
+        .unwrap_or_else(|| panic!("golden file lacks array `{path}`"))
+        .iter()
+        .enumerate()
+        .map(|(i, row)| {
+            row.as_array()
+                .unwrap_or_else(|| panic!("`{path}[{i}]` is not an array"))
+                .iter()
+                .map(|x| x.as_f64().unwrap())
+                .collect()
+        })
+        .collect()
+}
+
+/// The computed figure data, in the golden file's layout.
+struct Computed {
+    throughputs_23: Vec<f64>,
+    fig2_values: Vec<Vec<f64>>,
+    fig3_values: Vec<Vec<f64>>,
+    fig5_throughputs: Vec<f64>,
+    fig5_energy: Vec<Vec<f64>>,
+    fig5_area: Vec<Vec<f64>>,
+    fig5_eap: Vec<Vec<f64>>,
+    fig5_optimal: Vec<u32>,
+}
+
+fn compute() -> Computed {
+    let model = AdcModel::default();
+    let survey = generate_survey(&SurveyConfig::default());
+    let d2 = fig2(&survey, &model, LINE_POINTS);
+    let d3 = fig3(&survey, &model, LINE_POINTS);
+    assert_eq!(d2.lines.len(), 3);
+    let throughputs_23: Vec<f64> = d2.lines[0].1.iter().map(|p| p.0).collect();
+    let line_values = |lines: &[(f64, Vec<(f64, f64)>)]| -> Vec<Vec<f64>> {
+        lines.iter().map(|(_, pts)| pts.iter().map(|p| p.1).collect()).collect()
+    };
+
+    let cells = fig5(&model, FIG5_STEPS).unwrap();
+    assert_eq!(cells.len(), FIG5_STEPS * FIG5_NADCS.len());
+    let mut fig5_throughputs = Vec::new();
+    let mut fig5_energy = Vec::new();
+    let mut fig5_area = Vec::new();
+    let mut fig5_eap = Vec::new();
+    let mut fig5_optimal = Vec::new();
+    for group in cells.chunks(FIG5_NADCS.len()) {
+        fig5_throughputs.push(group[0].total_throughput);
+        let ns: Vec<u32> = group.iter().map(|c| c.n_adcs).collect();
+        assert_eq!(ns, FIG5_NADCS, "fig5 cell order changed");
+        assert!(group.iter().all(|c| c.total_throughput == group[0].total_throughput));
+        fig5_energy.push(group.iter().map(|c| c.energy_pj).collect());
+        fig5_area.push(group.iter().map(|c| c.area_um2).collect());
+        fig5_eap.push(group.iter().map(|c| c.eap).collect());
+        let best: &Fig5Cell = group.iter().min_by(|a, b| a.eap.total_cmp(&b.eap)).unwrap();
+        fig5_optimal.push(best.n_adcs);
+    }
+    Computed {
+        throughputs_23,
+        fig2_values: line_values(&d2.lines),
+        fig3_values: line_values(&d3.lines),
+        fig5_throughputs,
+        fig5_energy,
+        fig5_area,
+        fig5_eap,
+        fig5_optimal,
+    }
+}
+
+fn write_golden(c: &Computed) {
+    fn rows(vals: &[Vec<f64>]) -> Value {
+        Value::Array(
+            vals.iter()
+                .map(|row| Value::Array(row.iter().map(|&x| Value::Number(x)).collect()))
+                .collect(),
+        )
+    }
+    fn list(vals: &[f64]) -> Value {
+        Value::Array(vals.iter().map(|&x| Value::Number(x)).collect())
+    }
+    let fig23 = |values: &[Vec<f64>], throughputs: &[f64]| {
+        let mut t = BTreeMap::new();
+        t.insert("line_points".into(), Value::Number(LINE_POINTS as f64));
+        t.insert("enobs".into(), list(&[4.0, 8.0, 12.0]));
+        t.insert("throughputs".into(), list(throughputs));
+        t.insert("values".into(), rows(values));
+        Value::Table(t)
+    };
+    let mut f5 = BTreeMap::new();
+    f5.insert("throughput_steps".into(), Value::Number(FIG5_STEPS as f64));
+    f5.insert("throughputs".into(), list(&c.fig5_throughputs));
+    f5.insert(
+        "n_adcs".into(),
+        Value::Array(FIG5_NADCS.iter().map(|&n| Value::Number(n as f64)).collect()),
+    );
+    f5.insert("energy_pj".into(), rows(&c.fig5_energy));
+    f5.insert("area_um2".into(), rows(&c.fig5_area));
+    f5.insert("eap".into(), rows(&c.fig5_eap));
+    f5.insert(
+        "optimal_n_adcs".into(),
+        Value::Array(c.fig5_optimal.iter().map(|&n| Value::Number(n as f64)).collect()),
+    );
+    let mut root = BTreeMap::new();
+    root.insert("schema".into(), Value::Number(1.0));
+    root.insert("model".into(), Value::String("generator_truth".into()));
+    root.insert("rel_tol".into(), Value::Number(1e-9));
+    root.insert("fig2_energy".into(), fig23(&c.fig2_values, &c.throughputs_23));
+    root.insert("fig3_area".into(), fig23(&c.fig3_values, &c.throughputs_23));
+    root.insert("fig5_eap".into(), Value::Table(f5));
+    let text = Value::Table(root).to_json_string().unwrap() + "\n";
+    std::fs::write(golden_path(), text).unwrap();
+    eprintln!("golden_figures: rewrote {:?} from the current model", golden_path());
+}
+
+#[test]
+fn figures_match_golden_values() {
+    let computed = compute();
+    if std::env::var("CIMDSE_UPDATE_GOLDEN").map(|v| v == "1").unwrap_or(false) {
+        write_golden(&computed);
+    }
+    let text = std::fs::read_to_string(golden_path()).unwrap_or_else(|e| {
+        panic!(
+            "missing golden file {:?} ({e}); regenerate with CIMDSE_UPDATE_GOLDEN=1",
+            golden_path()
+        )
+    });
+    let golden = parse_json(&text).unwrap();
+    assert_eq!(golden.require_usize("schema").unwrap(), 1);
+    assert_eq!(golden.require_str("model").unwrap(), "generator_truth");
+    let rel_tol = golden.require_f64("rel_tol").unwrap();
+    assert!(rel_tol > 0.0 && rel_tol <= 1e-6, "tolerance must stay tight, got {rel_tol}");
+
+    for (fig, computed_vals) in
+        [("fig2_energy", &computed.fig2_values), ("fig3_area", &computed.fig3_values)]
+    {
+        let section = golden.get(fig).unwrap_or_else(|| panic!("golden lacks `{fig}`"));
+        assert_eq!(section.require_usize("line_points").unwrap(), LINE_POINTS);
+        let throughputs = f64_list(section, "throughputs");
+        assert_eq!(throughputs.len(), LINE_POINTS);
+        for (j, (&got, &want)) in
+            computed.throughputs_23.iter().zip(&throughputs).enumerate()
+        {
+            // The x-grid itself is part of the contract (logspace drift
+            // would silently re-anchor every pinned value).
+            assert_close(got, want, 1e-12, &format!("{fig} throughput[{j}]"));
+        }
+        let rows = f64_rows(section, "values");
+        assert_eq!(rows.len(), 3, "{fig}: one row per ENOB line");
+        let enobs = f64_list(section, "enobs");
+        for (i, row) in rows.iter().enumerate() {
+            assert_eq!(row.len(), LINE_POINTS);
+            for (j, &want) in row.iter().enumerate() {
+                assert_close(
+                    computed_vals[i][j],
+                    want,
+                    rel_tol,
+                    &format!("{fig} ENOB {} point {j}", enobs[i]),
+                );
+            }
+        }
+    }
+
+    let f5 = golden.get("fig5_eap").expect("golden lacks `fig5_eap`");
+    assert_eq!(f5.require_usize("throughput_steps").unwrap(), FIG5_STEPS);
+    let throughputs = f64_list(f5, "throughputs");
+    assert_eq!(throughputs.len(), FIG5_STEPS);
+    for (j, (&got, &want)) in computed.fig5_throughputs.iter().zip(&throughputs).enumerate() {
+        assert_close(got, want, 1e-12, &format!("fig5 throughput[{j}]"));
+    }
+    for (name, computed_rows) in [
+        ("energy_pj", &computed.fig5_energy),
+        ("area_um2", &computed.fig5_area),
+        ("eap", &computed.fig5_eap),
+    ] {
+        let rows = f64_rows(f5, name);
+        assert_eq!(rows.len(), FIG5_STEPS, "fig5 `{name}`");
+        for (ti, row) in rows.iter().enumerate() {
+            assert_eq!(row.len(), FIG5_NADCS.len());
+            for (ni, &want) in row.iter().enumerate() {
+                assert_close(
+                    computed_rows[ti][ni],
+                    want,
+                    rel_tol,
+                    &format!("fig5 {name} tp[{ti}] n_adcs={}", FIG5_NADCS[ni]),
+                );
+            }
+        }
+    }
+    // The per-throughput EAP-optimal ADC count is pinned exactly (the
+    // golden optima have >=2% EAP margins, far above the tolerance).
+    let optimal = f64_list(f5, "optimal_n_adcs");
+    let optimal: Vec<u32> = optimal.iter().map(|&x| x as u32).collect();
+    assert_eq!(computed.fig5_optimal, optimal, "fig5 optimal n_adcs per throughput");
+}

@@ -131,6 +131,60 @@ fn prop_survey_csv_roundtrip_random_subsets() {
     });
 }
 
+/// Randomized strings over an adversarial alphabet (quotes, backslashes,
+/// newlines, tabs, comment/array/assignment metacharacters) survive a
+/// TOML print+parse cycle bit-for-bit, standalone and inside arrays —
+/// the round-trip contract of the subset's `\"` `\\` `\n` `\t` escapes.
+#[test]
+fn prop_toml_escaped_strings_roundtrip() {
+    const ALPHABET: &[char] = &[
+        'a', 'Z', '0', ' ', '"', '\\', '\n', '\t', '#', '[', ']', ',', '=', '.', '/', 'é',
+    ];
+    check(Config::default().cases(400).seed(33), |rng: &mut Rng| {
+        let rand_string = |rng: &mut Rng| -> String {
+            (0..rng.index(18)).map(|_| ALPHABET[rng.index(ALPHABET.len())]).collect()
+        };
+        let mut map = BTreeMap::new();
+        map.insert("plain".to_string(), Value::String(rand_string(rng)));
+        map.insert(
+            "arr".to_string(),
+            Value::Array(vec![
+                Value::String(rand_string(rng)),
+                Value::String(rand_string(rng)),
+                Value::Number(1.5),
+            ]),
+        );
+        let mut section = BTreeMap::new();
+        section.insert("nested".to_string(), Value::String(rand_string(rng)));
+        map.insert("sec".to_string(), Value::Table(section));
+        let v = Value::Table(map);
+        let text = v.to_toml_string().unwrap_or_else(|e| panic!("serialize {v:?}: {e}"));
+        let parsed = parse_toml(&text).unwrap_or_else(|e| panic!("parse {text:?}: {e}"));
+        assert_eq!(parsed, v, "round-trip mismatch for {text:?}");
+    });
+}
+
+/// Hand-picked worst cases for the escape scanner: strings that end in
+/// backslashes or quotes, and quotes adjacent to comment/array syntax.
+#[test]
+fn toml_escape_pathological_cases_roundtrip() {
+    for s in [
+        "", "\\", "\\\\", "\"", "\\\"", "a\\", "\"b", "a\"b\"c", "\n", "\t\n\t", "x#y",
+        "a,b]c[", "= \"#\" =", "ends with quote\"", "\"starts with quote",
+    ] {
+        let mut map = BTreeMap::new();
+        map.insert("s".to_string(), Value::String(s.to_string()));
+        map.insert(
+            "a".to_string(),
+            Value::Array(vec![Value::String(s.to_string()), Value::Bool(true)]),
+        );
+        let v = Value::Table(map);
+        let text = v.to_toml_string().unwrap();
+        let parsed = parse_toml(&text).unwrap_or_else(|e| panic!("{s:?} via {text:?}: {e}"));
+        assert_eq!(parsed, v, "{s:?} via {text:?}");
+    }
+}
+
 /// Every example spec shipped under `configs/` must parse through the
 /// config layer and re-serialize losslessly (value-identical after a
 /// second parse). This is the canary for parser/serializer drift.

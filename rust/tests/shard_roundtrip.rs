@@ -1,0 +1,277 @@
+//! Multi-process shard/merge round-trip: the acceptance contract of the
+//! sharded sweep driver.
+//!
+//! For two non-trivial specs, N ∈ {1, 3, 7} separate `cimdse sweep
+//! --shard i/N` *process* invocations followed by a merge must reproduce
+//! the single-process streaming results bit-identically (`to_bits`-level
+//! for every payload float, byte-level for the canonical summary JSON).
+//! Also covers resume semantics (a completed artifact is detected by
+//! fingerprint and skipped; a deleted one is rebuilt) and the negative
+//! paths: malformed `--shard` specs, missing files, and
+//! fingerprint-mismatched artifacts are typed errors, never panics.
+
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+use cimdse::adc::{AdcModel, fit_model};
+use cimdse::dse::{
+    ShardArtifact, SweepSpec, SweepSummary, merge_shards, sweep_min_eap,
+    sweep_power_area_front,
+};
+use cimdse::survey::generator::{SurveyConfig, generate_survey};
+
+fn bin() -> &'static str {
+    env!("CARGO_BIN_EXE_cimdse")
+}
+
+/// Fresh per-test scratch directory (unique per process and tag so
+/// `cargo test` threads cannot collide).
+fn tmpdir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("cimdse_shard_rt_{}_{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Run the binary expecting success; returns stdout.
+fn run_ok(args: &[&str]) -> String {
+    let out = Command::new(bin()).args(args).output().unwrap();
+    assert!(
+        out.status.success(),
+        "cimdse {args:?} failed\nstdout: {}\nstderr: {}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    String::from_utf8_lossy(&out.stdout).into_owned()
+}
+
+/// Run the binary expecting a *typed* failure: nonzero exit that is not
+/// the panic code (101), an `error:` line on stderr, and no panic trace.
+fn run_err(args: &[&str]) -> String {
+    let out = Command::new(bin()).args(args).output().unwrap();
+    let stderr = String::from_utf8_lossy(&out.stderr).into_owned();
+    assert!(!out.status.success(), "cimdse {args:?} unexpectedly succeeded");
+    assert_ne!(out.status.code(), Some(101), "cimdse {args:?} panicked: {stderr}");
+    assert!(stderr.contains("error:"), "cimdse {args:?} stderr lacks `error:`: {stderr}");
+    assert!(!stderr.contains("panicked"), "cimdse {args:?} panicked: {stderr}");
+    stderr
+}
+
+/// The model the binary's `sweep` subcommand uses with default flags
+/// (`--n 700 --seed 1997`) — the library-side reference must be built
+/// from the identical fit for bit-comparisons to be meaningful.
+fn cli_model() -> AdcModel {
+    let survey = generate_survey(&SurveyConfig {
+        n_records: 700,
+        seed: 1997,
+        ..SurveyConfig::default()
+    });
+    AdcModel::new(fit_model(&survey).unwrap().coefs)
+}
+
+/// The two sweep grids under test, as (tag, CLI flags, library spec).
+fn test_specs() -> Vec<(&'static str, Vec<&'static str>, SweepSpec)> {
+    vec![
+        // 5×5×4×6 = 600-point dense interpolation grid.
+        ("dense5", vec!["--spec", "dense", "--points", "5"], SweepSpec::dense(5)),
+        // 1×6×1×5 = 30-point Fig. 5 grid (7 shards ⇒ uneven 5/5/4/4/4/4/4 split).
+        ("fig5", vec!["--spec", "fig5", "--enob", "7", "--tsteps", "6"], SweepSpec::fig5(7.0, 6)),
+    ]
+}
+
+fn shard_files(dir: &Path, n: usize) -> Vec<String> {
+    (0..n).map(|i| dir.join(format!("shard_{i}.json")).to_str().unwrap().to_string()).collect()
+}
+
+fn run_shard(cli: &[&str], shard: &str, out: &str) -> String {
+    let mut args = vec!["sweep"];
+    args.extend_from_slice(cli);
+    args.extend_from_slice(&["--shard", shard, "--out", out]);
+    run_ok(&args)
+}
+
+#[test]
+fn multi_process_shards_merge_bit_identical_for_1_3_7() {
+    let model = cli_model();
+    for (tag, cli, spec) in test_specs() {
+        let reference = SweepSummary::compute(&spec, &model, 4);
+        let ref_json = reference.to_json_string().unwrap();
+        // The reference summary itself matches the public streaming
+        // entry points (guards against the summary fold drifting).
+        assert_eq!(reference.count(), spec.len());
+        assert_eq!(reference.front_indices(), sweep_power_area_front(&spec, &model, 4));
+        let brute = sweep_min_eap(&spec, &model, 1).unwrap();
+        assert_eq!(reference.min_eap().unwrap().metrics.to_bits(), brute.metrics.to_bits());
+
+        for n in [1usize, 3, 7] {
+            let dir = tmpdir(&format!("{tag}_{n}"));
+            let files = shard_files(&dir, n);
+            for (i, out) in files.iter().enumerate() {
+                let stdout = run_shard(&cli, &format!("{i}/{n}"), out);
+                assert!(
+                    stdout.contains(&format!("shard {i}/{n}")),
+                    "{tag} {i}/{n}: {stdout}"
+                );
+            }
+
+            // Library-level merge in reversed order: bit-identical to the
+            // single-process streaming rollup.
+            let mut artifacts: Vec<ShardArtifact> =
+                files.iter().map(|p| ShardArtifact::load(p).unwrap()).collect();
+            artifacts.reverse();
+            let merged = merge_shards(&artifacts).unwrap();
+            assert!(merged.is_complete(), "{tag} n={n}");
+            assert_eq!(
+                merged.summary.to_json_string().unwrap(),
+                ref_json,
+                "{tag} n={n}: merged summary must be bit-identical"
+            );
+            let m = merged.summary.min_eap().unwrap();
+            assert_eq!(m.query, brute.query, "{tag} n={n}");
+            assert_eq!(m.metrics.to_bits(), brute.metrics.to_bits(), "{tag} n={n}");
+
+            // Binary-level round-trip: `merge-shards --out` and the
+            // single-process `sweep --summary-json` write byte-identical
+            // files.
+            let merged_path = dir.join("merged.json");
+            let mut margs = vec!["merge-shards"];
+            margs.extend(files.iter().map(String::as_str));
+            let merged_str = merged_path.to_str().unwrap();
+            margs.extend_from_slice(&["--out", merged_str]);
+            run_ok(&margs);
+
+            let single_path = dir.join("single.json");
+            let single_str = single_path.to_str().unwrap();
+            let mut sargs = vec!["sweep"];
+            sargs.extend_from_slice(&cli);
+            sargs.extend_from_slice(&["--summary-json", single_str]);
+            run_ok(&sargs);
+
+            let merged_bytes = std::fs::read(&merged_path).unwrap();
+            let single_bytes = std::fs::read(&single_path).unwrap();
+            assert_eq!(merged_bytes, single_bytes, "{tag} n={n}: file bytes must match");
+            assert_eq!(
+                String::from_utf8(single_bytes).unwrap(),
+                format!("{ref_json}\n"),
+                "{tag} n={n}: binary summary must equal the library reference"
+            );
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+    }
+}
+
+#[test]
+fn resume_skips_completed_shards_and_rebuilds_deleted_ones() {
+    let dir = tmpdir("resume");
+    let cli = ["--spec", "dense", "--points", "5"];
+    let n = 3usize;
+    let files = shard_files(&dir, n);
+    for (i, out) in files.iter().enumerate() {
+        let stdout = run_shard(&cli, &format!("{i}/{n}"), out);
+        assert!(stdout.contains("evaluated"), "first run must compute: {stdout}");
+    }
+    // Re-running a completed shard is a fingerprint-verified no-op.
+    let stdout = run_shard(&cli, "1/3", &files[1]);
+    assert!(
+        stdout.contains("already complete") && stdout.contains("skipping"),
+        "{stdout}"
+    );
+    // A different spec does NOT resume from the same artifact (the
+    // fingerprint differs), it recomputes and overwrites.
+    let stdout = run_shard(&["--spec", "dense", "--points", "4"], "1/3", &files[1]);
+    assert!(stdout.contains("evaluated"), "fingerprint change must recompute: {stdout}");
+    // Restore shard 1 for the original spec, then kill shard 2 and
+    // re-run the whole set: only shard 2 recomputes.
+    run_shard(&cli, "1/3", &files[1]);
+    std::fs::remove_file(&files[2]).unwrap();
+    let mut recomputed = 0;
+    for (i, out) in files.iter().enumerate() {
+        let stdout = run_shard(&cli, &format!("{i}/{n}"), out);
+        if stdout.contains("evaluated") {
+            recomputed += 1;
+            assert_eq!(i, 2, "only the deleted shard may recompute: {stdout}");
+        } else {
+            assert!(stdout.contains("already complete"), "{stdout}");
+        }
+    }
+    assert_eq!(recomputed, 1);
+    // The resumed set still merges bit-identically.
+    let artifacts: Vec<ShardArtifact> =
+        files.iter().map(|p| ShardArtifact::load(p).unwrap()).collect();
+    let merged = merge_shards(&artifacts).unwrap();
+    assert!(merged.is_complete());
+    let reference = SweepSummary::compute(&SweepSpec::dense(5), &cli_model(), 4);
+    assert_eq!(
+        merged.summary.to_json_string().unwrap(),
+        reference.to_json_string().unwrap()
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn malformed_shard_specs_are_typed_errors() {
+    for bad in ["0/0", "3/2", "junk", "1/", "/3", "1.5/3", "0x1/3"] {
+        let stderr = run_err(&["sweep", "--spec", "dense", "--points", "4", "--shard", bad]);
+        assert!(stderr.contains("error: config error"), "`{bad}`: {stderr}");
+    }
+    // Unknown spec name and undersized grids are typed errors too.
+    let stderr = run_err(&["sweep", "--spec", "nope", "--shard", "0/2"]);
+    assert!(stderr.contains("unknown sweep spec"), "{stderr}");
+    let stderr = run_err(&["sweep", "--points", "1", "--shard", "0/2"]);
+    assert!(stderr.contains("--points"), "{stderr}");
+    // Shard mode refuses the PJRT backend explicitly.
+    let stderr = run_err(&[
+        "sweep", "--spec", "dense", "--points", "4", "--backend", "pjrt", "--shard", "0/2",
+    ]);
+    assert!(stderr.contains("native"), "{stderr}");
+    // --shard and --summary-json are mutually exclusive (a silent
+    // missing summary file would break downstream scripts).
+    let stderr = run_err(&[
+        "sweep", "--spec", "dense", "--points", "4", "--shard", "0/2", "--summary-json",
+        "/tmp/never_written.json",
+    ]);
+    assert!(stderr.contains("mutually exclusive"), "{stderr}");
+}
+
+#[test]
+fn merge_shards_negative_paths_are_typed_errors() {
+    let dir = tmpdir("merge_neg");
+    // No inputs / missing file.
+    let stderr = run_err(&["merge-shards"]);
+    assert!(stderr.contains("at least one"), "{stderr}");
+    let missing = dir.join("not_there.json");
+    let stderr = run_err(&["merge-shards", missing.to_str().unwrap()]);
+    assert!(stderr.contains("cannot read"), "{stderr}");
+
+    // Build artifacts from two different sweeps and one overlapping plan.
+    let a = dir.join("a.json");
+    let b_other_spec = dir.join("b.json");
+    let c_overlap = dir.join("c.json");
+    run_shard(&["--spec", "dense", "--points", "4"], "0/2", a.to_str().unwrap());
+    run_shard(&["--spec", "dense", "--points", "5"], "1/2", b_other_spec.to_str().unwrap());
+    run_shard(&["--spec", "dense", "--points", "4"], "0/1", c_overlap.to_str().unwrap());
+
+    let stderr = run_err(&["merge-shards", a.to_str().unwrap(), b_other_spec.to_str().unwrap()]);
+    assert!(stderr.contains("fingerprint"), "{stderr}");
+    let stderr = run_err(&["merge-shards", a.to_str().unwrap(), c_overlap.to_str().unwrap()]);
+    assert!(stderr.contains("overlap"), "{stderr}");
+
+    // Incomplete coverage: refused by default (naming the gap), accepted
+    // with --allow-partial.
+    let stderr = run_err(&["merge-shards", a.to_str().unwrap()]);
+    assert!(stderr.contains("allow-partial"), "{stderr}");
+    assert!(stderr.contains("192..384"), "gap range should be named: {stderr}");
+    let stdout = run_ok(&["merge-shards", a.to_str().unwrap(), "--allow-partial"]);
+    assert!(stdout.contains("192/384"), "{stdout}");
+    // Flag-first order: the parser consumes the first path as the flag's
+    // value; merge-shards must recover it rather than merge one file short.
+    let stdout = run_ok(&["merge-shards", "--allow-partial", a.to_str().unwrap()]);
+    assert!(stdout.contains("192/384"), "flag-first must still load the file: {stdout}");
+
+    // A corrupted artifact is a typed load error.
+    let garbled = dir.join("garbled.json");
+    std::fs::write(&garbled, "{\"kind\": \"cimdse-shard-artifact\", \"schema\": 1}").unwrap();
+    let stderr = run_err(&["merge-shards", garbled.to_str().unwrap()]);
+    assert!(stderr.contains("error: config error"), "{stderr}");
+    let _ = std::fs::remove_dir_all(&dir);
+}

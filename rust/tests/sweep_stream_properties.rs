@@ -6,8 +6,8 @@
 
 use cimdse::adc::{AdcMetrics, AdcModel, AdcQuery, PreparedModel, TuningPoint};
 use cimdse::dse::{
-    NativeEvaluator, SweepSpec, pareto_front, run_sweep, run_sweep_fold, run_sweep_prepared,
-    sweep_min_eap, sweep_power_area_front,
+    NativeEvaluator, ShardPlan, StreamingFront, SweepSpec, pareto_front, run_sweep,
+    run_sweep_fold, run_sweep_prepared, sweep_min_eap, sweep_power_area_front,
 };
 use cimdse::testing::{Config, check};
 use cimdse::util::Rng;
@@ -223,6 +223,105 @@ fn single_axis_and_single_point_grids() {
     let fast = run_sweep_prepared(&spec, &model, 1).unwrap();
     for (a, b) in all.iter().zip(&fast) {
         assert_eq!(metric_bits(&a.metrics), metric_bits(&b.metrics));
+    }
+}
+
+/// NaN/±inf objectives: the front must never panic, must drop the
+/// non-finite points, and must stay order-independent — and on the finite
+/// subset it must match the materialized `pareto_front` exactly however
+/// the pushes are split across sub-fronts and merged.
+#[test]
+fn front_merge_with_non_finite_objectives_never_panics_and_matches_finite_front() {
+    check(Config::default().cases(150).seed(41), |rng| {
+        let n = rng.index(40);
+        let coord = |rng: &mut Rng| match rng.index(8) {
+            0 => f64::NAN,
+            1 => f64::INFINITY,
+            2 => f64::NEG_INFINITY,
+            // Coarse values so duplicates and dominance ties are common.
+            _ => rng.uniform(0.0, 4.0).round(),
+        };
+        let pts: Vec<(f64, f64)> = (0..n).map(|_| (coord(rng), coord(rng))).collect();
+
+        // One front fed directly...
+        let mut whole = StreamingFront::new();
+        for (i, &(a, b)) in pts.iter().enumerate() {
+            whole.push(a, b, i);
+        }
+        // ...versus a random split into sub-fronts merged in random order
+        // (the multi-process merge shape).
+        let k = 1 + rng.index(5);
+        let mut parts: Vec<StreamingFront> = (0..k).map(|_| StreamingFront::new()).collect();
+        for (i, &(a, b)) in pts.iter().enumerate() {
+            parts[rng.index(k)].push(a, b, i);
+        }
+        rng.shuffle(&mut parts);
+        let merged = parts
+            .into_iter()
+            .fold(StreamingFront::new(), |acc, part| acc.merge(part));
+        assert_eq!(merged.indices(), whole.indices());
+
+        // Ground truth: pareto_front over only the finite points, with
+        // indices mapped back to the original list.
+        let finite: Vec<(usize, (f64, f64))> = pts
+            .iter()
+            .copied()
+            .enumerate()
+            .filter(|(_, (a, b))| a.is_finite() && b.is_finite())
+            .collect();
+        let objectives: Vec<(f64, f64)> = finite.iter().map(|&(_, p)| p).collect();
+        let brute: Vec<usize> =
+            pareto_front(&objectives).into_iter().map(|j| finite[j].0).collect();
+        assert_eq!(whole.into_indices(), brute);
+    });
+}
+
+/// Shard planning composes with the spec's index machinery on degenerate
+/// shapes: empty grids, single-point grids, and more shards than points
+/// (so most shard ranges are empty) all partition exactly and every
+/// sub-range is materializable via `fill_range`.
+#[test]
+fn shard_plans_cover_degenerate_specs_exactly() {
+    check(Config::default().cases(80).seed(55), |rng| {
+        let spec = arbitrary_spec(rng, true);
+        let pts = spec.points();
+        for n_shards in [1usize, 2, 7, pts.len().max(1), pts.len() + 3] {
+            let plan = ShardPlan::new(&spec, n_shards).unwrap();
+            assert_eq!(plan.len(), pts.len());
+            let mut seen = Vec::new();
+            for shard in 0..n_shards {
+                let range = plan.range(shard);
+                let mut buf = Vec::new();
+                spec.fill_range(range.clone(), &mut buf);
+                assert_eq!(buf.len(), range.len());
+                for (offset, q) in buf.iter().enumerate() {
+                    assert_eq!(q, &spec.point_at(range.start + offset));
+                }
+                seen.extend(buf);
+            }
+            assert_eq!(seen, pts, "shards must tile the grid in order");
+        }
+    });
+}
+
+/// `checked_len` overflow surfaces as a typed planning error (no panic),
+/// while `len()` still saturates for display purposes.
+#[test]
+fn overflowing_grids_are_typed_shard_planning_errors() {
+    let spec = SweepSpec {
+        enobs: vec![8.0; 1 << 17],
+        total_throughputs: vec![1e9; 1 << 17],
+        tech_nms: vec![32.0; 1 << 17],
+        n_adcs: vec![1; 1 << 17],
+    };
+    assert_eq!(spec.checked_len(), None);
+    assert_eq!(spec.len(), usize::MAX);
+    for n_shards in [1usize, 7] {
+        let err = ShardPlan::new(&spec, n_shards).unwrap_err();
+        assert!(
+            matches!(err, cimdse::Error::Numeric(_)),
+            "want a typed numeric error, got {err}"
+        );
     }
 }
 
