@@ -1,0 +1,39 @@
+# cimdse — top-level convenience targets.
+#
+# `make artifacts` is the one step that needs Python: it lowers the
+# JAX/Pallas graphs under python/compile/ to HLO *text* artifacts plus
+# the shape-contract manifest (see rust/configs/manifest.example.json),
+# which the Rust runtime loads via PJRT. Python never runs after this.
+
+PYTHON ?= python3
+ARTIFACTS_DIR ?= artifacts
+
+.PHONY: artifacts build test ci clean-artifacts
+
+## Lower the JAX graphs to $(ARTIFACTS_DIR)/*.hlo.txt + manifest.json.
+artifacts:
+	@$(PYTHON) -c "import jax" 2>/dev/null || { \
+	  echo "error: 'make artifacts' needs JAX, which this Python cannot import."; \
+	  echo "       Install it (e.g. 'pip install jax') or point PYTHON at an"; \
+	  echo "       environment that has it: 'make artifacts PYTHON=/path/to/python'."; \
+	  echo "       The Rust crate itself builds and tests fine without artifacts:"; \
+	  echo "       the PJRT backend self-skips until they exist (rust/README.md)."; \
+	  exit 1; } >&2
+	cd python && $(PYTHON) -m compile.aot --out-dir $(abspath $(ARTIFACTS_DIR))
+	@echo "artifacts ready in ./$(ARTIFACTS_DIR) (manifest + HLO text)"
+
+## Build the Rust crate (release).
+build:
+	cd rust && cargo build --release
+
+## Tier-1 tests (ROADMAP.md's verify line).
+test:
+	cd rust && cargo build --release && cargo test -q
+
+## Full CI: tier-1 + bench/example compile checks + shard and serve
+## smoke tests + perf artifacts.
+ci:
+	./ci.sh
+
+clean-artifacts:
+	rm -rf $(ARTIFACTS_DIR)

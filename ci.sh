@@ -26,7 +26,8 @@ cargo build --examples
 echo "== shard/merge round-trip (3 processes vs single process, bit-identical) =="
 BIN=target/release/cimdse
 SHARD_DIR=$(mktemp -d)
-trap 'rm -rf "$SHARD_DIR"' EXIT
+SERVE_PID=""
+trap '{ [ -n "$SERVE_PID" ] && kill "$SERVE_PID" 2>/dev/null; rm -rf "$SHARD_DIR"; } || true' EXIT
 SPEC_ARGS=(sweep --spec dense --points 6)
 for i in 0 1 2; do
   "$BIN" "${SPEC_ARGS[@]}" --shard "$i/3" --out "$SHARD_DIR/shard_$i.json"
@@ -46,6 +47,55 @@ rm "$SHARD_DIR/shard_1.json"
 "$BIN" merge-shards "$SHARD_DIR"/shard_*.json --out "$SHARD_DIR/merged2.json"
 cmp "$SHARD_DIR/merged.json" "$SHARD_DIR/merged2.json"
 echo "resumed shard set merges identically"
+
+echo "== serve smoke test (daemon on an ephemeral port) =="
+SERVE_LOG="$SHARD_DIR/serve.log"
+"$BIN" serve --addr 127.0.0.1:0 > "$SERVE_LOG" 2>&1 &
+SERVE_PID=$!
+ADDR=""
+for _ in $(seq 1 200); do
+  ADDR=$(sed -n 's/.*listening on \([0-9.:]*\).*/\1/p' "$SERVE_LOG" | head -n 1)
+  [ -n "$ADDR" ] && break
+  kill -0 "$SERVE_PID" 2>/dev/null \
+    || { echo "ci.sh: serve died before binding" >&2; cat "$SERVE_LOG" >&2; exit 1; }
+  sleep 0.1
+done
+[ -n "$ADDR" ] || { echo "ci.sh: serve never reported its address" >&2; cat "$SERVE_LOG" >&2; exit 1; }
+echo "daemon at $ADDR"
+
+# Served eval must be byte-identical to the direct `model` subcommand.
+EVAL_ARGS=(--enob 7 --throughput 1.3e9 --tech 32 --n-adcs 8)
+"$BIN" query --addr "$ADDR" --op eval "${EVAL_ARGS[@]}" > "$SHARD_DIR/served_eval.txt"
+"$BIN" model "${EVAL_ARGS[@]}" > "$SHARD_DIR/direct_eval.txt"
+diff "$SHARD_DIR/served_eval.txt" "$SHARD_DIR/direct_eval.txt"
+echo "served eval == direct model output"
+# Second query on the same model: must land a prepared-model cache hit.
+"$BIN" query --addr "$ADDR" --op eval "${EVAL_ARGS[@]}" > /dev/null
+
+# Served sweep summary must be byte-identical to `sweep --summary-json`.
+"$BIN" query --addr "$ADDR" --op sweep --spec dense --points 5 \
+  --out "$SHARD_DIR/served_summary.json"
+"$BIN" sweep --spec dense --points 5 --summary-json "$SHARD_DIR/direct_summary.json"
+cmp "$SHARD_DIR/served_summary.json" "$SHARD_DIR/direct_summary.json"
+echo "served sweep summary == direct summary (byte-identical)"
+
+"$BIN" query --addr "$ADDR" --op metrics | tee "$SHARD_DIR/metrics.txt"
+grep -Eq 'cache +[1-9][0-9]* hits' "$SHARD_DIR/metrics.txt" \
+  || { echo "ci.sh: expected nonzero cache hits on a repeated model" >&2; exit 1; }
+
+"$BIN" query --addr "$ADDR" --op shutdown
+wait "$SERVE_PID" \
+  || { echo "ci.sh: serve did not exit cleanly after shutdown" >&2; cat "$SERVE_LOG" >&2; exit 1; }
+SERVE_PID=""
+grep -q "drained cleanly" "$SERVE_LOG" \
+  || { echo "ci.sh: serve log lacks graceful-drain confirmation" >&2; cat "$SERVE_LOG" >&2; exit 1; }
+echo "daemon drained cleanly (exit 0)"
+
+echo "== bench_serve (quick mode) -> BENCH_serve.json =="
+rm -f BENCH_serve.json
+CIMDSE_BENCH_QUICK=1 cargo bench --bench bench_serve
+test -s BENCH_serve.json || { echo "ci.sh: BENCH_serve.json missing or empty" >&2; exit 1; }
+cargo run --quiet --release -- bench-report --path BENCH_serve.json
 
 echo "== perf_hotpaths (quick mode) -> BENCH_sweep.json =="
 rm -f BENCH_sweep.json

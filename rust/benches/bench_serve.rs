@@ -1,0 +1,115 @@
+//! Bench: serving-daemon request throughput.
+//!
+//! Spins up an in-process `service::Server` on an ephemeral port and
+//! measures `eval` requests/s at 1/4/16 concurrent client connections,
+//! on a cached model (every request reuses the default model — pure
+//! protocol + cache-hit path) vs uncached models (every request carries
+//! a fresh tuning offset, forcing a fingerprint miss and a prepare).
+//!
+//! Writes the machine-readable report to `BENCH_serve.json`
+//! (`bench_util::JsonReport` schema, validated by
+//! `cimdse bench-report`); honors `CIMDSE_BENCH_QUICK` like every other
+//! bench. Run with `cargo bench --bench bench_serve`.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::thread;
+
+use cimdse::adc::{AdcModel, AdcQuery};
+use cimdse::bench_util::{Bench, JsonReport, quick, scale};
+use cimdse::service::{Client, ServeOptions, Server};
+
+/// Monotonic counter so every "uncached" request names a distinct model.
+static UNCACHED_SEQ: AtomicU64 = AtomicU64::new(1);
+
+fn query_for(i: usize) -> AdcQuery {
+    AdcQuery {
+        enob: 2.0 + (i % 12) as f64,
+        total_throughput: 1e6 * 10f64.powi((i % 5) as i32),
+        tech_nm: 32.0,
+        n_adcs: 1 + (i % 8) as u32,
+    }
+}
+
+/// A model no prior request has used (distinct fingerprint every call).
+fn fresh_model() -> AdcModel {
+    let seq = UNCACHED_SEQ.fetch_add(1, Ordering::Relaxed);
+    AdcModel {
+        energy_offset_decades: seq as f64 * 1e-9,
+        ..AdcModel::default()
+    }
+}
+
+/// One iteration: every pre-connected client issues `per_client` eval
+/// frames from its own thread. Connections persist across iterations —
+/// the daemon's whole point — so the measurement is request throughput,
+/// not TCP/accept churn.
+fn drive(clients: &mut [Client], per_client: usize, cached: bool) {
+    thread::scope(|s| {
+        for (c, client) in clients.iter_mut().enumerate() {
+            s.spawn(move || {
+                for i in 0..per_client {
+                    let q = query_for(c * per_client + i);
+                    let model = if cached { None } else { Some(fresh_model()) };
+                    client
+                        .eval_metrics(&q, model.as_ref())
+                        .expect("bench eval");
+                }
+            });
+        }
+    });
+}
+
+fn main() {
+    let bench = Bench::auto();
+    let mut report = JsonReport::new("serve");
+    if quick() {
+        println!("(CIMDSE_BENCH_QUICK: reduced budgets and request counts)\n");
+    }
+
+    let server = Server::bind(ServeOptions {
+        addr: "127.0.0.1:0".to_string(),
+        model: AdcModel::default(),
+        // Smaller than the uncached stream so misses also exercise
+        // eviction, the cache's steady state under model churn.
+        cache_capacity: 16,
+        workers: cimdse::exec::default_workers(),
+    })
+    .expect("bind bench server");
+    let addr = server.local_addr().to_string();
+    let handle = server.handle();
+    let serve_thread = thread::spawn(move || server.serve().expect("serve"));
+
+    let per_client = scale(64, 16);
+    let mut baseline_rps = None;
+    for &clients in &[1usize, 4, 16] {
+        let mut pool: Vec<Client> = (0..clients)
+            .map(|_| Client::connect(&addr).expect("bench client connect"))
+            .collect();
+        let requests = clients * per_client;
+        for cached in [true, false] {
+            let label = format!(
+                "eval x{requests}: {clients} client(s), {} model",
+                if cached { "cached" } else { "uncached" }
+            );
+            let stats = bench.run(&label, || drive(&mut pool, per_client, cached));
+            // `points` = requests per iteration, so mpts_per_s in the
+            // report is literally Mrequests/s.
+            report.case(&label, &stats, requests);
+            let rps = requests as f64 / stats.median_s;
+            println!("  -> {rps:.0} requests/s");
+            if cached {
+                if clients == 1 {
+                    baseline_rps = Some(rps);
+                } else if let Some(base) = baseline_rps {
+                    report.metric(&format!("scaling_cached_{clients}_clients"), rps / base);
+                }
+            }
+        }
+    }
+
+    handle.shutdown();
+    serve_thread.join().expect("serve thread");
+
+    let path = report.write().expect("writing bench report");
+    println!("\nwrote serve throughput report to {path}");
+}

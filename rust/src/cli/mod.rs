@@ -29,6 +29,11 @@ impl Args {
     /// consumes the next token, so a following positional (e.g.
     /// `merge-shards --allow-partial shard_0.json`) is not swallowed,
     /// and `--flag=value` on a declared flag is a typed error.
+    ///
+    /// Repeating an option or a flag (`--points 4 --points 8`,
+    /// `--allow-partial --allow-partial`, or any option/flag mix on one
+    /// name) is a typed [`Error::Config`] naming the flag — a silent
+    /// last-wins would make the dropped value look accepted.
     pub fn parse_with_flags<I: IntoIterator<Item = String>>(
         tokens: I,
         boolean_flags: &[&str],
@@ -46,8 +51,10 @@ impl Args {
                             "--{k} is a flag and takes no value (got `{v}`)"
                         )));
                     }
+                    args.reject_duplicate(k)?;
                     args.options.insert(k.to_string(), v.to_string());
                 } else if boolean_flags.contains(&name) {
+                    args.reject_duplicate(name)?;
                     args.flags.push(name.to_string());
                 } else if iter
                     .peek()
@@ -55,8 +62,10 @@ impl Args {
                     .unwrap_or(false)
                 {
                     let value = iter.next().unwrap();
+                    args.reject_duplicate(name)?;
                     args.options.insert(name.to_string(), value);
                 } else {
+                    args.reject_duplicate(name)?;
                     args.flags.push(name.to_string());
                 }
             } else if args.subcommand.is_none() {
@@ -66,6 +75,14 @@ impl Args {
             }
         }
         Ok(args)
+    }
+
+    /// Typed error if `name` was already seen as an option or a flag.
+    fn reject_duplicate(&self, name: &str) -> Result<()> {
+        if self.options.contains_key(name) || self.flags.iter().any(|f| f == name) {
+            return Err(Error::Config(format!("--{name} given more than once")));
+        }
+        Ok(())
     }
 
     /// String option value.
@@ -242,6 +259,45 @@ mod tests {
         )
         .unwrap_err();
         assert!(matches!(e, Error::Config(_)), "{e}");
+    }
+
+    #[test]
+    fn duplicate_options_are_typed_errors_naming_the_flag() {
+        // Last-wins used to silently drop `--points 4` here.
+        let e = Args::parse("sweep --points 4 --points 8".split_whitespace().map(String::from))
+            .unwrap_err();
+        assert!(matches!(e, Error::Config(_)), "{e}");
+        assert!(e.to_string().contains("--points"), "{e}");
+        assert!(e.to_string().contains("more than once"), "{e}");
+        // `--k=v` and `--k v` spellings collide too, in either order.
+        for cmd in ["sweep --out=a.json --out b.json", "sweep --out a.json --out=b.json"] {
+            let e = Args::parse(cmd.split_whitespace().map(String::from)).unwrap_err();
+            assert!(e.to_string().contains("--out"), "`{cmd}`: {e}");
+        }
+        // Distinct options are of course still fine.
+        let a = parse("sweep --points 4 --tsteps 8");
+        assert_eq!(a.opt("points"), Some("4"));
+        assert_eq!(a.opt("tsteps"), Some("8"));
+    }
+
+    #[test]
+    fn duplicate_flags_are_typed_errors_naming_the_flag() {
+        let tokens = |s: &str| s.split_whitespace().map(String::from).collect::<Vec<_>>();
+        // Declared boolean flag repeated.
+        let e = Args::parse_with_flags(
+            tokens("merge-shards --allow-partial --allow-partial a.json"),
+            &["allow-partial"],
+        )
+        .unwrap_err();
+        assert!(matches!(e, Error::Config(_)), "{e}");
+        assert!(e.to_string().contains("--allow-partial"), "{e}");
+        // Undeclared flag repeated.
+        let e = Args::parse(tokens("cmd --verbose --verbose")).unwrap_err();
+        assert!(e.to_string().contains("--verbose"), "{e}");
+        // Flag/option mix on one name: the first `--dry-run` is consumed
+        // as a flag (next token is another `--`), the second as an option.
+        let e = Args::parse(tokens("sweep --dry-run --dry-run 3")).unwrap_err();
+        assert!(e.to_string().contains("--dry-run"), "{e}");
     }
 
     #[test]

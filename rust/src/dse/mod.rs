@@ -36,7 +36,7 @@ pub use accel::{AccelPoint, AccelSweepSpec, run_accel_sweep};
 pub use pareto::{StreamingFront, pareto_front};
 pub use shard::{
     MergedSweep, ShardArtifact, ShardPlan, ShardSelector, SweepSummary, merge_shards,
-    sweep_fingerprint,
+    model_fingerprint, sweep_fingerprint,
 };
 pub use sweep::SweepSpec;
 

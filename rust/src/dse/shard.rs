@@ -50,7 +50,7 @@ const ARTIFACT_KIND: &str = "cimdse-shard-artifact";
 pub const METRIC_NAMES: [&str; 4] =
     ["energy_pj_per_convert", "area_um2_per_adc", "total_power_w", "total_area_um2"];
 
-fn metric_values(m: &AdcMetrics) -> [f64; 4] {
+pub(crate) fn metric_values(m: &AdcMetrics) -> [f64; 4] {
     [m.energy_pj_per_convert, m.area_um2_per_adc, m.total_power_w, m.total_area_um2]
 }
 
@@ -535,7 +535,21 @@ fn metrics_from_value(v: &Value) -> Result<AdcMetrics> {
     })
 }
 
-fn model_to_value(model: &AdcModel) -> Value {
+/// Fingerprint of a model alone: 16 hex digits of FNV-1a over the
+/// model's canonical JSON ([`model_to_value`] — every coefficient and
+/// tuning offset as IEEE-754 bit-hex, tables sorted). Bit-identical
+/// models always share a fingerprint; FNV-1a is *not*
+/// collision-resistant, so consumers that must never conflate two
+/// models (the `service::` prepared-model cache) compare the model
+/// bits as well.
+pub fn model_fingerprint(model: &AdcModel) -> String {
+    let canon = model_to_value(model)
+        .to_json_string()
+        .expect("model serialization is total (bit-hex floats)");
+    format!("{:016x}", fnv1a64(canon.as_bytes()))
+}
+
+pub(crate) fn model_to_value(model: &AdcModel) -> Value {
     let mut map = BTreeMap::new();
     map.insert(
         "coefs".to_string(),
@@ -559,7 +573,7 @@ fn model_to_value(model: &AdcModel) -> Value {
     Value::Table(map)
 }
 
-fn model_from_value(v: &Value) -> Result<AdcModel> {
+pub(crate) fn model_from_value(v: &Value) -> Result<AdcModel> {
     let arr = v
         .get("coefs")
         .and_then(Value::as_array)
@@ -1167,6 +1181,23 @@ mod tests {
         root.insert("summary".into(), Value::Table(doctored));
         let err = ShardArtifact::from_value(&Value::Table(root)).unwrap_err().to_string();
         assert!(err.contains("checksum"), "{err}");
+    }
+
+    #[test]
+    fn model_fingerprint_tracks_model_bits_only() {
+        let model = AdcModel::default();
+        let base = model_fingerprint(&model);
+        assert_eq!(base.len(), 16);
+        assert_eq!(base, model_fingerprint(&model.clone()));
+        let tuned = AdcModel { energy_offset_decades: 1e-300, ..model };
+        assert_ne!(base, model_fingerprint(&tuned));
+        let mut coefs = model.coefs;
+        coefs.a0 += 1e-12;
+        assert_ne!(base, model_fingerprint(&AdcModel { coefs, ..model }));
+        // Round-tripping the model through its canonical value keeps the
+        // fingerprint (the cache key survives the wire).
+        let back = model_from_value(&model_to_value(&model)).unwrap();
+        assert_eq!(base, model_fingerprint(&back));
     }
 
     #[test]

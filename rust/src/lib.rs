@@ -21,6 +21,12 @@
 //! * [`dse`] — the design-space exploration engine: sweeps, Pareto fronts,
 //!   and threaded evaluation over the native model or the AOT-compiled
 //!   PJRT artifact.
+//! * [`service`] — the persistent serving daemon (`cimdse serve`): a
+//!   newline-delimited JSON protocol over `std::net`, a prepared-model
+//!   LRU cache, request metrics, and the `cimdse query` client — so
+//!   eval/sweep-heavy studies amortize model prep and pool spin-up
+//!   across thousands of requests instead of paying a process launch
+//!   each (see rust/docs/protocol.md).
 //! * [`runtime`] — the PJRT bridge: loads `artifacts/*.hlo.txt` (lowered
 //!   once from JAX/Pallas by `make artifacts`) and executes them on the
 //!   CPU PJRT client; Python is never on this path. The real backend is
@@ -49,6 +55,7 @@ pub mod exec;
 pub mod mapper;
 pub mod report;
 pub mod runtime;
+pub mod service;
 pub mod stats;
 pub mod survey;
 pub mod testing;

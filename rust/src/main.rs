@@ -11,6 +11,12 @@
 //! * `map`     — map a workload onto a RAELLA variant, report energy/area.
 //! * `figures` — regenerate the paper's Figs. 2–5.
 //! * `bench-report` — validate/summarize a `BENCH_*.json` perf artifact.
+//! * `serve`   — long-lived daemon speaking the newline-delimited JSON
+//!   protocol (rust/docs/protocol.md): prepared-model cache, shared
+//!   persistent pool, graceful drain.
+//! * `query`   — client for the daemon (`eval`/`sweep`/`accel`/
+//!   `metrics`/`shutdown`); output matches the direct subcommands so
+//!   served results can be diffed against library ones.
 
 use cimdse::adc::{AdcModel, AdcQuery, fit_model, tuning::TuningPoint};
 use cimdse::arch::raella::{RaellaVariant, raella};
@@ -53,6 +59,13 @@ SUBCOMMANDS
   survey   [--n 700] [--seed 1997]                survey analytics (FoM trends)
   figures  [--fig 2|3|4|5|all]                    regenerate paper figures
   bench-report --path BENCH_sweep.json            validate + summarize a perf artifact
+  serve    [--addr 127.0.0.1:0] [--cache 32]
+           [--n 700] [--seed 1997]                long-lived serving daemon (NDJSON
+                                                  protocol; see rust/docs/protocol.md)
+  query    --addr HOST:PORT --op eval|sweep|accel|metrics|shutdown
+           [eval: --enob B --throughput F --tech 32 --n-adcs 1]
+           [sweep: --spec dense|fig5 --points N --out PATH]
+           [accel: --workload NAME]               query a running daemon
 ";
 
 /// Boolean flags across all subcommands: declaring them keeps the parser
@@ -78,6 +91,8 @@ fn main() {
         Some("survey") => cmd_survey(&args),
         Some("figures") => cmd_figures(&args),
         Some("bench-report") => cmd_bench_report(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("query") => cmd_query(&args),
         _ => {
             println!("{USAGE}");
             Ok(())
@@ -143,11 +158,19 @@ fn cmd_fit(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `--n-adcs` as a u32, rejecting values a plain `as` cast would
+/// silently truncate (the wire and artifact parsers both enforce the
+/// same bound).
+fn n_adcs_arg(args: &Args) -> Result<u32> {
+    let n = args.usize_or("n-adcs", 1)?;
+    u32::try_from(n).map_err(|_| Error::Config(format!("--n-adcs {n} exceeds u32")))
+}
+
 fn cmd_model(args: &Args) -> Result<()> {
     let enob = args.f64_or("enob", 8.0)?;
     let throughput = args.f64_or("throughput", 1e9)?;
     let tech_nm = args.f64_or("tech", 32.0)?;
-    let n_adcs = args.usize_or("n-adcs", 1)? as u32;
+    let n_adcs = n_adcs_arg(args)?;
     let query = AdcQuery { enob, total_throughput: throughput, tech_nm, n_adcs };
     query.validate()?;
 
@@ -171,9 +194,18 @@ fn cmd_model(args: &Args) -> Result<()> {
     }
 
     let m = model.eval(&query);
+    print_model_point(&query, &m, model.crossover_throughput(enob, tech_nm));
+    Ok(())
+}
+
+/// The `model` subcommand's output block — shared with `query --op eval`
+/// so a served evaluation can be `diff`ed against the direct one
+/// (ci.sh's serve smoke test does exactly that).
+fn print_model_point(query: &AdcQuery, m: &cimdse::adc::AdcMetrics, crossover: f64) {
+    let AdcQuery { enob, total_throughput, tech_nm, n_adcs } = *query;
     println!("ADC design point:");
     println!("  ENOB             {enob}");
-    println!("  total throughput {}", fmt_throughput(throughput));
+    println!("  total throughput {}", fmt_throughput(total_throughput));
     println!("  tech node        {tech_nm} nm");
     println!(
         "  n ADCs           {n_adcs}  (per-ADC {})",
@@ -186,9 +218,8 @@ fn cmd_model(args: &Args) -> Result<()> {
     println!("  total area       {}", fmt_area_um2(m.total_area_um2));
     println!(
         "  energy knee      {} (tradeoff bound beyond this)",
-        fmt_throughput(model.crossover_throughput(enob, tech_nm))
+        fmt_throughput(crossover)
     );
-    Ok(())
 }
 
 /// The sweep grid selected on the command line. Shard processes of one
@@ -459,6 +490,27 @@ fn cmd_estimate(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// One row of the accelerator-DSE Pareto table:
+/// (config, energy_pj, area_um2, adc_energy_fraction, latency_s).
+type AccelRow = (String, f64, f64, f64, f64);
+
+/// The accelerator-DSE Pareto table — shared by `explore` and
+/// `query --op accel` so served output cannot drift from the direct
+/// subcommand's format.
+fn accel_front_table(rows: impl Iterator<Item = AccelRow>) -> Table {
+    let mut t = Table::new(vec!["config", "energy", "area", "ADC E%", "latency (ms)"]);
+    for (config, energy_pj, area_um2, adc_fraction, latency_s) in rows {
+        t.row(vec![
+            config,
+            fmt_energy_pj(energy_pj),
+            fmt_area_um2(area_um2),
+            format!("{:.0}%", 100.0 * adc_fraction),
+            format!("{:.2}", latency_s * 1e3),
+        ]);
+    }
+    t
+}
+
 fn cmd_explore(args: &Args) -> Result<()> {
     use cimdse::dse::accel::{AccelSweepSpec, accel_pareto, run_accel_sweep};
     let model = fitted_model(args.usize_or("n", 700)?, args.u64_or("seed", 1997)?)?;
@@ -472,16 +524,15 @@ fn cmd_explore(args: &Args) -> Result<()> {
     let points = run_accel_sweep(&spec, &model, &workload, cimdse::exec::default_workers())?;
     let mut front: Vec<_> = accel_pareto(&points).iter().map(|&i| &points[i]).collect();
     front.sort_by(|a, b| a.eap.total_cmp(&b.eap));
-    let mut t = Table::new(vec!["config", "energy", "area", "ADC E%", "latency (ms)"]);
-    for p in front.iter().take(args.usize_or("top", 12)?) {
-        t.row(vec![
+    let t = accel_front_table(front.iter().take(args.usize_or("top", 12)?).map(|p| {
+        (
             p.arch.name.clone(),
-            fmt_energy_pj(p.energy_pj),
-            fmt_area_um2(p.area_um2),
-            format!("{:.0}%", 100.0 * p.adc_energy_fraction),
-            format!("{:.2}", p.latency_s * 1e3),
-        ]);
-    }
+            p.energy_pj,
+            p.area_um2,
+            p.adc_energy_fraction,
+            p.latency_s,
+        )
+    }));
     println!(
         "{} Pareto-optimal configurations (showing best-EAP first):\n{}",
         front.len(),
@@ -608,6 +659,132 @@ fn cmd_bench_report(args: &Args) -> Result<()> {
         }
     }
     println!("bench report ok: {path}");
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    use std::io::Write as _;
+    let n = args.usize_or("n", 700)?;
+    let seed = args.u64_or("seed", 1997)?;
+    let cache = args.usize_or("cache", 32)?;
+    if cache == 0 {
+        return Err(Error::Config("--cache must be >= 1".into()));
+    }
+    // Same default fit as `model`/`sweep`, so served responses diff
+    // cleanly against the direct subcommands.
+    let model = fitted_model(n, seed)?;
+    let options = cimdse::service::ServeOptions {
+        addr: args.opt_or("addr", "127.0.0.1:0").to_string(),
+        model,
+        cache_capacity: cache,
+        workers: cimdse::exec::default_workers(),
+    };
+    let workers = options.workers;
+    let server = cimdse::service::Server::bind(options)?;
+    println!(
+        "cimdse serve: listening on {} ({workers} workers, cache {cache}, model fit \
+         n={n} seed={seed})",
+        server.local_addr()
+    );
+    // Scripts poll stdout for the line above; don't let it sit in the
+    // pipe buffer.
+    std::io::stdout().flush()?;
+    server.serve()?;
+    println!("cimdse serve: drained cleanly");
+    Ok(())
+}
+
+fn cmd_query(args: &Args) -> Result<()> {
+    use cimdse::config::Value;
+    let addr = args.require_opt("addr")?;
+    let op = args.opt_or("op", "metrics");
+    let mut client = cimdse::service::Client::connect(addr)?;
+    match op {
+        "eval" => {
+            let query = AdcQuery {
+                enob: args.f64_or("enob", 8.0)?,
+                total_throughput: args.f64_or("throughput", 1e9)?,
+                tech_nm: args.f64_or("tech", 32.0)?,
+                n_adcs: n_adcs_arg(args)?,
+            };
+            query.validate()?;
+            // bits=true: the response floats travel as IEEE-754 bit-hex,
+            // so what we print is exactly what the server computed.
+            let result = client.eval(&query, None, true)?;
+            let point = result
+                .get("points")
+                .and_then(Value::as_array)
+                .and_then(<[Value]>::first)
+                .ok_or_else(|| Error::Runtime("query: eval result has no points".into()))?;
+            let metrics = cimdse::service::protocol::metrics_from_value(
+                point
+                    .get("metrics")
+                    .ok_or_else(|| Error::Runtime("query: point lacks `metrics`".into()))?,
+            )
+            .map_err(|r| Error::Runtime(format!("query: bad metrics payload: {}", r.message)))?;
+            let crossover = cimdse::service::protocol::flex_f64(
+                point.get("crossover_throughput").ok_or_else(|| {
+                    Error::Runtime("query: point lacks `crossover_throughput`".into())
+                })?,
+                "crossover_throughput",
+            )
+            .map_err(|r| Error::Runtime(format!("query: bad crossover: {}", r.message)))?;
+            print_model_point(&query, &metrics, crossover);
+        }
+        "sweep" => {
+            let spec = sweep_spec_from_args(args)?;
+            let (_result, summary) = client.sweep(&spec, None)?;
+            print_sweep_summary(&spec, &summary);
+            if let Some(path) = args.opt("out") {
+                // Canonical summary JSON — byte-identical to what
+                // `cimdse sweep --summary-json` writes for the same spec
+                // and model (ci.sh cmp's the two files).
+                std::fs::write(path, summary.to_json_string()? + "\n")?;
+                println!("wrote served sweep summary to {path}");
+            }
+        }
+        "accel" => {
+            let result = client.accel(args.opt_or("workload", "resnet18"), None)?;
+            let front = result
+                .get("front")
+                .and_then(Value::as_array)
+                .ok_or_else(|| Error::Runtime("query: accel result lacks `front`".into()))?;
+            let rows = front
+                .iter()
+                .take(args.usize_or("top", 12)?)
+                .map(|p| {
+                    Ok((
+                        p.require_str("config")?.to_string(),
+                        p.require_f64("energy_pj")?,
+                        p.require_f64("area_um2")?,
+                        p.require_f64("adc_energy_fraction")?,
+                        p.require_f64("latency_s")?,
+                    ))
+                })
+                .collect::<Result<Vec<AccelRow>>>()?;
+            println!(
+                "{} on {}: {} candidates, {} Pareto-optimal (best-EAP first):\n{}",
+                result.require_str("workload")?,
+                addr,
+                result.require_f64("candidates")? as usize,
+                front.len(),
+                accel_front_table(rows.into_iter()).render()
+            );
+        }
+        "metrics" => {
+            let snapshot = client.metrics()?;
+            print!("{}", cimdse::service::ServiceMetrics::render(&snapshot)?);
+        }
+        "shutdown" => {
+            client.shutdown()?;
+            println!("server draining");
+        }
+        other => {
+            return Err(Error::Config(format!(
+                "unknown query op `{other}` (eval|sweep|accel|metrics|shutdown)"
+            )));
+        }
+    }
     Ok(())
 }
 

@@ -1,0 +1,254 @@
+//! LRU cache of prepared models, keyed by the model's canonical-JSON
+//! FNV-1a fingerprint ([`crate::dse::model_fingerprint`]).
+//!
+//! Every request that names (or defaults) a model resolves through
+//! here. To be precise about what that buys today:
+//! [`PreparedModel::new`] is currently a cheap copy (the row hoisting
+//! happens per-(ENOB, tech) at eval time), so the cache's present
+//! value is model-*identity* tracking — the hit/miss/collision
+//! counters surfaced by the `metrics` frame (and asserted by the CI
+//! smoke test), which tell a study it really is reusing one model —
+//! plus one shared `Arc` per distinct model instead of a per-request
+//! allocation, and the seam where heavier prepared state (e.g.
+//! precomputed row tables) can land later without touching the
+//! protocol. Connection threads evaluate outside the cache lock; only
+//! the lookup itself (a map probe + 13-float bit compare) holds it.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::adc::{AdcModel, PreparedModel};
+
+/// Cache counters, as reported by the `metrics` frame.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CacheStats {
+    /// Lookups served from the cache.
+    pub hits: u64,
+    /// Lookups that had to prepare a model.
+    pub misses: u64,
+    /// Models evicted to stay within capacity.
+    pub evictions: u64,
+    /// Lookups whose fingerprint matched a cached entry holding
+    /// *different* model bits (64-bit FNV-1a is not collision-resistant;
+    /// such lookups are served uncached so a hit can never change a
+    /// response).
+    pub collisions: u64,
+    /// Models currently cached.
+    pub entries: usize,
+    /// Maximum models kept.
+    pub capacity: usize,
+}
+
+struct CacheEntry {
+    /// Monotonic use tick; the smallest tick is the LRU victim.
+    last_used: u64,
+    prepared: Arc<PreparedModel>,
+}
+
+/// Exact bit equality of two models (stricter than `PartialEq`, which
+/// conflates ±0.0 and never matches NaN) — the hit criterion, matching
+/// how [`crate::dse::model_fingerprint`] identifies a model. Field-wise
+/// on the stack (no allocation): this runs under the cache lock on
+/// every request that names a cached model.
+fn same_bits(a: &AdcModel, b: &AdcModel) -> bool {
+    let (ca, cb) = (&a.coefs, &b.coefs);
+    [
+        (ca.a0, cb.a0),
+        (ca.a1, cb.a1),
+        (ca.a2, cb.a2),
+        (ca.b0, cb.b0),
+        (ca.b1, cb.b1),
+        (ca.b2, cb.b2),
+        (ca.b3, cb.b3),
+        (ca.d0, cb.d0),
+        (ca.d1, cb.d1),
+        (ca.d2, cb.d2),
+        (ca.d3, cb.d3),
+        (a.energy_offset_decades, b.energy_offset_decades),
+        (a.area_offset_decades, b.area_offset_decades),
+    ]
+    .iter()
+    .all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+/// An LRU map `fingerprint -> Arc<PreparedModel>`.
+pub struct PreparedCache {
+    capacity: usize,
+    tick: u64,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+    collisions: u64,
+    entries: BTreeMap<String, CacheEntry>,
+}
+
+impl PreparedCache {
+    /// Cache holding at most `capacity` prepared models (`>= 1`).
+    pub fn new(capacity: usize) -> PreparedCache {
+        assert!(capacity >= 1, "prepared-model cache needs capacity >= 1");
+        PreparedCache {
+            capacity,
+            tick: 0,
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+            collisions: 0,
+            entries: BTreeMap::new(),
+        }
+    }
+
+    /// Fetch the prepared model for `fingerprint`, preparing (and
+    /// caching) `model` on a miss. Returns the shared prepared model
+    /// and whether this lookup was a hit. The caller computes the
+    /// fingerprint (it already needs it for logging/metrics), which
+    /// also keeps this map oblivious to model semantics.
+    ///
+    /// A hit requires the cached model's *bits* to equal `model`, not
+    /// just the fingerprint: models are client-supplied and 64-bit
+    /// FNV-1a is not collision-resistant, so a colliding lookup is
+    /// served with a freshly prepared (uncached) model rather than the
+    /// wrong cached one — a hit can never change a response.
+    pub fn get_or_prepare(
+        &mut self,
+        fingerprint: &str,
+        model: &AdcModel,
+    ) -> (Arc<PreparedModel>, bool) {
+        self.tick += 1;
+        if let Some(entry) = self.entries.get_mut(fingerprint) {
+            if same_bits(entry.prepared.model(), model) {
+                entry.last_used = self.tick;
+                self.hits += 1;
+                return (Arc::clone(&entry.prepared), true);
+            }
+            // Fingerprint collision: leave the resident entry alone
+            // (replacing would thrash both models) and serve uncached.
+            self.collisions += 1;
+            self.misses += 1;
+            return (Arc::new(PreparedModel::new(model)), false);
+        }
+        self.misses += 1;
+        let prepared = Arc::new(PreparedModel::new(model));
+        self.entries.insert(
+            fingerprint.to_string(),
+            CacheEntry { last_used: self.tick, prepared: Arc::clone(&prepared) },
+        );
+        while self.entries.len() > self.capacity {
+            let victim = self
+                .entries
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| k.clone())
+                .expect("non-empty cache has an LRU victim");
+            self.entries.remove(&victim);
+            self.evictions += 1;
+        }
+        (prepared, false)
+    }
+
+    /// Current counters.
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits,
+            misses: self.misses,
+            evictions: self.evictions,
+            collisions: self.collisions,
+            entries: self.entries.len(),
+            capacity: self.capacity,
+        }
+    }
+
+    /// Number of cached models.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Whether the cache is empty.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dse::model_fingerprint;
+
+    fn offset_model(offset: f64) -> AdcModel {
+        AdcModel { energy_offset_decades: offset, ..AdcModel::default() }
+    }
+
+    #[test]
+    fn hit_and_miss_counters() {
+        let mut cache = PreparedCache::new(4);
+        let model = AdcModel::default();
+        let fp = model_fingerprint(&model);
+        let (a, hit) = cache.get_or_prepare(&fp, &model);
+        assert!(!hit);
+        let (b, hit) = cache.get_or_prepare(&fp, &model);
+        assert!(hit);
+        assert!(Arc::ptr_eq(&a, &b), "hit must return the cached instance");
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.entries, s.capacity), (1, 1, 1, 4));
+    }
+
+    #[test]
+    fn evicts_least_recently_used_first() {
+        let mut cache = PreparedCache::new(2);
+        let m1 = offset_model(0.1);
+        let m2 = offset_model(0.2);
+        let m3 = offset_model(0.3);
+        let (f1, f2, f3) =
+            (model_fingerprint(&m1), model_fingerprint(&m2), model_fingerprint(&m3));
+        cache.get_or_prepare(&f1, &m1);
+        cache.get_or_prepare(&f2, &m2);
+        // Touch m1 so m2 becomes the LRU victim.
+        assert!(cache.get_or_prepare(&f1, &m1).1);
+        cache.get_or_prepare(&f3, &m3);
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.stats().evictions, 1);
+        assert!(cache.get_or_prepare(&f1, &m1).1, "m1 must survive");
+        assert!(!cache.get_or_prepare(&f2, &m2).1, "m2 must have been evicted");
+    }
+
+    #[test]
+    fn fingerprint_collision_is_served_uncached_with_the_right_model() {
+        let mut cache = PreparedCache::new(4);
+        let m1 = offset_model(0.1);
+        let m2 = offset_model(0.2);
+        let fp = model_fingerprint(&m1);
+        let (a, hit) = cache.get_or_prepare(&fp, &m1);
+        assert!(!hit);
+        // Same key, different bits (a forced collision): not a hit, and
+        // the returned prepared model carries the *requested* bits.
+        let (b, hit) = cache.get_or_prepare(&fp, &m2);
+        assert!(!hit);
+        assert_eq!(b.model(), &m2);
+        assert!(!Arc::ptr_eq(&a, &b));
+        // The resident entry is untouched and still hits for its owner.
+        assert!(cache.get_or_prepare(&fp, &m1).1);
+        let s = cache.stats();
+        assert_eq!((s.collisions, s.entries), (1, 1));
+    }
+
+    #[test]
+    fn cached_model_evaluates_bit_identically() {
+        let mut cache = PreparedCache::new(1);
+        let model = offset_model(0.05);
+        let fp = model_fingerprint(&model);
+        let (prepared, _) = cache.get_or_prepare(&fp, &model);
+        let q = crate::adc::AdcQuery {
+            enob: 7.0,
+            total_throughput: 1.3e9,
+            tech_nm: 32.0,
+            n_adcs: 8,
+        };
+        let via_cache = prepared.row(q.enob, q.tech_nm).eval_query(&q);
+        assert_eq!(via_cache.to_bits(), model.eval(&q).to_bits());
+    }
+
+    #[test]
+    #[should_panic(expected = "capacity")]
+    fn zero_capacity_is_a_caller_bug() {
+        let _ = PreparedCache::new(0);
+    }
+}

@@ -1,0 +1,187 @@
+//! Blocking client for the serving daemon — powers `cimdse query` and
+//! lets tests/CI/scripts hit the daemon without hand-rolling sockets.
+//!
+//! One [`Client`] wraps one connection; requests are answered in order
+//! (send a frame, read a line). Server-side error frames surface as
+//! [`Error::Runtime`] carrying the stable protocol code.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+use crate::adc::{AdcModel, AdcQuery};
+use crate::config::{Value, parse_json};
+use crate::dse::{SweepSpec, SweepSummary};
+use crate::error::{Error, Result};
+
+use super::protocol;
+
+/// A connected protocol client.
+pub struct Client {
+    writer: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    /// Connect to a serving daemon at `addr` (e.g. `127.0.0.1:4117`).
+    pub fn connect(addr: &str) -> Result<Client> {
+        let stream = TcpStream::connect(addr)
+            .map_err(|e| Error::Runtime(format!("query: cannot connect to {addr}: {e}")))?;
+        let reader = BufReader::new(
+            stream
+                .try_clone()
+                .map_err(|e| Error::Runtime(format!("query: clone stream: {e}")))?,
+        );
+        Ok(Client { writer: stream, reader })
+    }
+
+    /// Send one raw frame line and read the response line (uninterpreted).
+    pub fn request_line(&mut self, line: &str) -> Result<Value> {
+        debug_assert!(!line.contains('\n'), "frames are single lines");
+        let mut bytes = Vec::with_capacity(line.len() + 1);
+        bytes.extend_from_slice(line.as_bytes());
+        bytes.push(b'\n');
+        self.writer
+            .write_all(&bytes)
+            .and_then(|_| self.writer.flush())
+            .map_err(|e| Error::Runtime(format!("query: send failed: {e}")))?;
+        let mut response = String::new();
+        let n = self
+            .reader
+            .read_line(&mut response)
+            .map_err(|e| Error::Runtime(format!("query: read failed: {e}")))?;
+        if n == 0 {
+            return Err(Error::Runtime("query: server closed the connection".into()));
+        }
+        parse_json(response.trim_end())
+            .map_err(|e| Error::Runtime(format!("query: unparsable response: {e}")))
+    }
+
+    /// Send a frame [`Value`] and return the response's `result`,
+    /// converting server error frames into [`Error::Runtime`].
+    pub fn call(&mut self, frame: &Value) -> Result<Value> {
+        let response = self.request_line(&frame.to_json_string()?)?;
+        into_result(response)
+    }
+
+    /// `eval` one design point. `bits` selects bit-hex response floats.
+    /// Returns the full result table (`points`, `cache`, `count`).
+    pub fn eval(
+        &mut self,
+        query: &AdcQuery,
+        model: Option<&AdcModel>,
+        bits: bool,
+    ) -> Result<Value> {
+        let mut map = std::collections::BTreeMap::new();
+        map.insert("op".to_string(), Value::String("eval".to_string()));
+        map.insert("query".to_string(), protocol::query_to_value(query));
+        map.insert("bits".to_string(), Value::Bool(bits));
+        if let Some(m) = model {
+            map.insert("model".to_string(), protocol::model_to_value(m));
+        }
+        self.call(&Value::Table(map))
+    }
+
+    /// `eval` convenience: the metrics of one design point, decoded.
+    pub fn eval_metrics(
+        &mut self,
+        query: &AdcQuery,
+        model: Option<&AdcModel>,
+    ) -> Result<crate::adc::AdcMetrics> {
+        let result = self.eval(query, model, true)?;
+        let points = result
+            .get("points")
+            .and_then(Value::as_array)
+            .ok_or_else(|| Error::Runtime("query: eval result lacks `points`".into()))?;
+        let point = points
+            .first()
+            .ok_or_else(|| Error::Runtime("query: eval result has no points".into()))?;
+        let metrics = point
+            .get("metrics")
+            .ok_or_else(|| Error::Runtime("query: eval point lacks `metrics`".into()))?;
+        protocol::metrics_from_value(metrics)
+            .map_err(|r| Error::Runtime(format!("query: bad metrics payload: {}", r.message)))
+    }
+
+    /// `sweep` an inline spec; returns the full result table plus the
+    /// decoded summary (bit-identical to the library rollup).
+    pub fn sweep(
+        &mut self,
+        spec: &SweepSpec,
+        model: Option<&AdcModel>,
+    ) -> Result<(Value, SweepSummary)> {
+        let mut map = std::collections::BTreeMap::new();
+        map.insert("op".to_string(), Value::String("sweep".to_string()));
+        map.insert("spec".to_string(), spec.to_value());
+        if let Some(m) = model {
+            map.insert("model".to_string(), protocol::model_to_value(m));
+        }
+        let result = self.call(&Value::Table(map))?;
+        let summary = result
+            .get("summary")
+            .ok_or_else(|| Error::Runtime("query: sweep result lacks `summary`".into()))?;
+        let summary = SweepSummary::from_value(summary)?;
+        Ok((result, summary))
+    }
+
+    /// `accel` over a zoo workload with default knobs.
+    pub fn accel(&mut self, workload: &str, model: Option<&AdcModel>) -> Result<Value> {
+        let mut map = std::collections::BTreeMap::new();
+        map.insert("op".to_string(), Value::String("accel".to_string()));
+        map.insert("workload".to_string(), Value::String(workload.to_string()));
+        if let Some(m) = model {
+            map.insert("model".to_string(), protocol::model_to_value(m));
+        }
+        self.call(&Value::Table(map))
+    }
+
+    /// Fetch the server's `metrics` snapshot.
+    pub fn metrics(&mut self) -> Result<Value> {
+        let mut map = std::collections::BTreeMap::new();
+        map.insert("op".to_string(), Value::String("metrics".to_string()));
+        self.call(&Value::Table(map))
+    }
+
+    /// Request a graceful drain.
+    pub fn shutdown(&mut self) -> Result<()> {
+        let mut map = std::collections::BTreeMap::new();
+        map.insert("op".to_string(), Value::String("shutdown".to_string()));
+        self.call(&Value::Table(map)).map(|_| ())
+    }
+}
+
+/// Split a response frame into its `result`, mapping error frames to
+/// [`Error::Runtime`] with the stable code in the message.
+pub fn into_result(response: Value) -> Result<Value> {
+    match response.get("ok").and_then(Value::as_bool) {
+        Some(true) => response
+            .get("result")
+            .cloned()
+            .ok_or_else(|| Error::Runtime("query: ok response lacks `result`".into())),
+        Some(false) => {
+            let code = response.get("error.code").and_then(Value::as_str).unwrap_or("?");
+            let message =
+                response.get("error.message").and_then(Value::as_str).unwrap_or("?");
+            Err(Error::Runtime(format!("server error [{code}]: {message}")))
+        }
+        None => Err(Error::Runtime("query: response lacks an `ok` field".into())),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn into_result_maps_frames() {
+        let ok = parse_json(r#"{"ok": true, "op": "metrics", "result": {"x": 1}}"#).unwrap();
+        assert_eq!(into_result(ok).unwrap().require_f64("x").unwrap(), 1.0);
+        let err = parse_json(
+            r#"{"ok": false, "error": {"code": "unknown-op", "message": "nope"}}"#,
+        )
+        .unwrap();
+        let e = into_result(err).unwrap_err().to_string();
+        assert!(e.contains("unknown-op") && e.contains("nope"), "{e}");
+        let junk = parse_json(r#"{"weird": 1}"#).unwrap();
+        assert!(into_result(junk).is_err());
+    }
+}

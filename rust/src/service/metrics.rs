@@ -1,0 +1,234 @@
+//! Service observability: request counters, latency quantiles, cache
+//! stats, uptime — served as a `metrics` frame and printable.
+//!
+//! Latencies are kept in a fixed-size ring (the most recent
+//! [`LATENCY_WINDOW`] requests); p50/p99 come from
+//! [`crate::stats::quantile`] over a snapshot of the ring, so the cost
+//! of a `metrics` request is O(window), never O(history).
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::config::Value;
+use crate::error::Result;
+use crate::stats::quantile;
+
+use super::cache::CacheStats;
+
+/// Number of recent request latencies retained for the quantiles.
+pub const LATENCY_WINDOW: usize = 4096;
+
+#[derive(Default)]
+struct Inner {
+    /// Successful requests per op.
+    requests: BTreeMap<String, u64>,
+    /// Error frames sent (malformed/unknown/rejected requests).
+    error_frames: u64,
+    /// Connections accepted over the server's lifetime.
+    connections: u64,
+    /// Ring buffer of request latencies (seconds).
+    latencies: Vec<f64>,
+    /// Next ring slot to overwrite once the ring is full.
+    next_slot: usize,
+    /// Total latencies ever recorded (>= ring occupancy).
+    recorded: u64,
+}
+
+/// Shared, thread-safe service counters.
+pub struct ServiceMetrics {
+    start: Instant,
+    inner: Mutex<Inner>,
+}
+
+impl Default for ServiceMetrics {
+    fn default() -> Self {
+        ServiceMetrics::new()
+    }
+}
+
+impl ServiceMetrics {
+    /// Fresh counters; uptime starts now.
+    pub fn new() -> ServiceMetrics {
+        ServiceMetrics { start: Instant::now(), inner: Mutex::new(Inner::default()) }
+    }
+
+    /// Record an accepted connection.
+    pub fn connection_opened(&self) {
+        self.inner.lock().unwrap().connections += 1;
+    }
+
+    /// Record one successfully served request and its latency.
+    pub fn record_request(&self, op: &str, latency_s: f64) {
+        let mut inner = self.inner.lock().unwrap();
+        *inner.requests.entry(op.to_string()).or_insert(0) += 1;
+        inner.recorded += 1;
+        if inner.latencies.len() < LATENCY_WINDOW {
+            inner.latencies.push(latency_s);
+        } else {
+            let slot = inner.next_slot;
+            inner.latencies[slot] = latency_s;
+            inner.next_slot = (slot + 1) % LATENCY_WINDOW;
+        }
+    }
+
+    /// Record an error frame sent to a client.
+    pub fn record_error_frame(&self) {
+        self.inner.lock().unwrap().error_frames += 1;
+    }
+
+    /// Snapshot everything as the `metrics` frame payload.
+    pub fn snapshot(&self, cache: &CacheStats) -> Value {
+        // Copy what we need and release the lock before the O(n log n)
+        // quantile sorts, so connection threads recording latencies are
+        // never stalled behind a metrics request.
+        let (requests_counts, error_frames, connections, latencies, recorded) = {
+            let inner = self.inner.lock().unwrap();
+            (
+                inner.requests.clone(),
+                inner.error_frames,
+                inner.connections,
+                inner.latencies.clone(),
+                inner.recorded,
+            )
+        };
+        let mut requests = BTreeMap::new();
+        let mut total = 0u64;
+        for (op, n) in &requests_counts {
+            requests.insert(op.clone(), Value::Number(*n as f64));
+            total += n;
+        }
+        let mut latency = BTreeMap::new();
+        latency.insert("samples".to_string(), Value::Number(latencies.len() as f64));
+        latency.insert("recorded".to_string(), Value::Number(recorded as f64));
+        if !latencies.is_empty() {
+            latency.insert("p50_s".to_string(), Value::Number(quantile(&latencies, 0.50)));
+            latency.insert("p99_s".to_string(), Value::Number(quantile(&latencies, 0.99)));
+        }
+        let mut cache_map = BTreeMap::new();
+        cache_map.insert("hits".to_string(), Value::Number(cache.hits as f64));
+        cache_map.insert("misses".to_string(), Value::Number(cache.misses as f64));
+        cache_map.insert("evictions".to_string(), Value::Number(cache.evictions as f64));
+        cache_map.insert("collisions".to_string(), Value::Number(cache.collisions as f64));
+        cache_map.insert("entries".to_string(), Value::Number(cache.entries as f64));
+        cache_map.insert("capacity".to_string(), Value::Number(cache.capacity as f64));
+        let mut map = BTreeMap::new();
+        map.insert("uptime_s".to_string(), Value::Number(self.start.elapsed().as_secs_f64()));
+        map.insert("connections".to_string(), Value::Number(connections as f64));
+        map.insert("requests_total".to_string(), Value::Number(total as f64));
+        map.insert("requests".to_string(), Value::Table(requests));
+        map.insert("error_frames".to_string(), Value::Number(error_frames as f64));
+        map.insert("latency".to_string(), Value::Table(latency));
+        map.insert("cache".to_string(), Value::Table(cache_map));
+        Value::Table(map)
+    }
+
+    /// Render a `metrics` frame payload for humans. A static function
+    /// over the [`Value`] so `cimdse query --op metrics` prints exactly
+    /// what the server would.
+    pub fn render(v: &Value) -> Result<String> {
+        let num = |path: &str| -> Result<f64> { v.require_f64(path) };
+        let mut out = String::from("cimdse service metrics:\n");
+        out.push_str(&format!("  uptime          {:.1} s\n", num("uptime_s")?));
+        out.push_str(&format!("  connections     {:.0}\n", num("connections")?));
+        let mut per_op = Vec::new();
+        if let Some(Value::Table(requests)) = v.get("requests") {
+            for (op, n) in requests {
+                if let Some(n) = n.as_f64() {
+                    per_op.push(format!("{op} {n:.0}"));
+                }
+            }
+        }
+        out.push_str(&format!(
+            "  requests        {:.0} total ({})\n",
+            num("requests_total")?,
+            if per_op.is_empty() { "none".to_string() } else { per_op.join(", ") }
+        ));
+        out.push_str(&format!("  error frames    {:.0}\n", num("error_frames")?));
+        match (v.get("latency.p50_s").and_then(Value::as_f64),
+               v.get("latency.p99_s").and_then(Value::as_f64)) {
+            (Some(p50), Some(p99)) => out.push_str(&format!(
+                "  latency         p50 {}  p99 {}  ({:.0} samples)\n",
+                crate::bench_util::fmt_secs(p50),
+                crate::bench_util::fmt_secs(p99),
+                num("latency.samples")?
+            )),
+            _ => out.push_str("  latency         (no samples yet)\n"),
+        }
+        out.push_str(&format!(
+            "  cache           {:.0} hits, {:.0} misses, {:.0} evictions, {:.0}/{:.0} entries\n",
+            num("cache.hits")?,
+            num("cache.misses")?,
+            num("cache.evictions")?,
+            num("cache.entries")?,
+            num("cache.capacity")?
+        ));
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats() -> CacheStats {
+        CacheStats { hits: 3, misses: 2, evictions: 1, collisions: 0, entries: 2, capacity: 8 }
+    }
+
+    #[test]
+    fn snapshot_counts_and_quantiles() {
+        let m = ServiceMetrics::new();
+        m.connection_opened();
+        m.connection_opened();
+        for i in 0..100 {
+            m.record_request("eval", (i + 1) as f64 * 1e-3);
+        }
+        m.record_request("sweep", 0.5);
+        m.record_error_frame();
+        let v = m.snapshot(&stats());
+        assert_eq!(v.require_f64("requests_total").unwrap(), 101.0);
+        assert_eq!(v.require_f64("requests.eval").unwrap(), 100.0);
+        assert_eq!(v.require_f64("requests.sweep").unwrap(), 1.0);
+        assert_eq!(v.require_f64("connections").unwrap(), 2.0);
+        assert_eq!(v.require_f64("error_frames").unwrap(), 1.0);
+        assert_eq!(v.require_f64("cache.hits").unwrap(), 3.0);
+        let p50 = v.require_f64("latency.p50_s").unwrap();
+        let p99 = v.require_f64("latency.p99_s").unwrap();
+        assert!(p50 > 0.0 && p99 >= p50, "p50={p50} p99={p99}");
+        assert!(v.require_f64("uptime_s").unwrap() >= 0.0);
+    }
+
+    #[test]
+    fn latency_ring_is_bounded() {
+        let m = ServiceMetrics::new();
+        for i in 0..(LATENCY_WINDOW + 100) {
+            m.record_request("eval", i as f64);
+        }
+        let v = m.snapshot(&stats());
+        assert_eq!(v.require_f64("latency.samples").unwrap(), LATENCY_WINDOW as f64);
+        assert_eq!(
+            v.require_f64("latency.recorded").unwrap(),
+            (LATENCY_WINDOW + 100) as f64
+        );
+        // The oldest 100 samples were overwritten, so the minimum
+        // surviving latency is >= 100.
+        assert!(v.require_f64("latency.p50_s").unwrap() >= 100.0);
+    }
+
+    #[test]
+    fn render_is_stable_and_complete() {
+        let m = ServiceMetrics::new();
+        m.record_request("eval", 1e-3);
+        m.record_request("eval", 2e-3);
+        let text = ServiceMetrics::render(&m.snapshot(&stats())).unwrap();
+        assert!(text.contains("cimdse service metrics"), "{text}");
+        assert!(text.contains("requests        2 total (eval 2)"), "{text}");
+        assert!(text.contains("cache           3 hits, 2 misses"), "{text}");
+        assert!(text.contains("latency         p50"), "{text}");
+        // Renders an empty snapshot too (no latency samples).
+        let empty = ServiceMetrics::new();
+        let text =
+            ServiceMetrics::render(&empty.snapshot(&CacheStats::default())).unwrap();
+        assert!(text.contains("(no samples yet)"), "{text}");
+    }
+}

@@ -1,0 +1,44 @@
+//! The persistent serving daemon (`cimdse serve`) and its client
+//! (`cimdse query`).
+//!
+//! Every CLI invocation pays a full process launch, a survey fit, and a
+//! fresh thread-pool spin-up before it evaluates a single point.
+//! Comparative studies (ADC-less designs, collaborative digitization)
+//! fire thousands of small eval/sweep queries — exactly the workload a
+//! long-lived endpoint amortizes. This subsystem turns the engine into
+//! that endpoint using `std::net` only (the crate stays
+//! zero-dependency):
+//!
+//! * [`protocol`] — newline-delimited JSON frames over the
+//!   [`crate::config::Value`] layer: `eval`, `sweep`, `accel`,
+//!   `metrics`, `shutdown`; typed error frames with stable codes;
+//!   floats optionally bit-hex exact per the `dse::shard` convention.
+//! * [`server`] — accept loop + per-connection reader threads feeding
+//!   the one shared persistent [`crate::exec::Pool`]; graceful drain on
+//!   shutdown.
+//! * [`cache`] — LRU of [`crate::adc::PreparedModel`] keyed by the
+//!   model's canonical-JSON FNV-1a fingerprint
+//!   ([`crate::dse::model_fingerprint`]), with hit/miss counters.
+//! * [`metrics`] — requests served, cache hits, p50/p99 latency via
+//!   [`crate::stats::quantile`], uptime — served as a frame and
+//!   printable.
+//! * [`client`] — the blocking client behind `cimdse query`.
+//!
+//! Served responses are **bit-identical** to the corresponding direct
+//! library calls: `eval` goes through the prepared row kernel (exact
+//! bits vs [`crate::adc::AdcModel::eval`] by construction) and `sweep`
+//! returns the canonical [`crate::dse::SweepSummary`] payload —
+//! asserted across a real socket by `tests/serve_roundtrip.rs`. The
+//! frame grammar is specified in `rust/docs/protocol.md`.
+
+pub mod cache;
+pub mod client;
+pub mod metrics;
+pub mod protocol;
+pub mod server;
+
+pub use cache::{CacheStats, PreparedCache};
+pub use client::Client;
+pub use metrics::ServiceMetrics;
+pub use protocol::{MAX_FRAME_BYTES, Reject, Request};
+pub use server::{ServeOptions, Server, ServerHandle};

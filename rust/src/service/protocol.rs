@@ -1,0 +1,615 @@
+//! Wire protocol: newline-delimited JSON frames over the
+//! [`crate::config::Value`] layer.
+//!
+//! ## Frame grammar
+//!
+//! Every request is one JSON object on one line (`\n`-terminated, at
+//! most [`MAX_FRAME_BYTES`] bytes). The `op` field selects the
+//! operation (`eval`, `sweep`, `accel`, `metrics`, `shutdown`); an
+//! optional scalar `id` (string or number) is echoed back verbatim so
+//! pipelining clients can match responses. Responses are one JSON
+//! object per line: `{"ok": true, "op": ..., "result": {...}}` on
+//! success, `{"ok": false, "error": {"code": ..., "message": ...}}` on
+//! failure. Error frames use the stable codes below and never cost the
+//! client its connection — the server answers and keeps reading.
+//!
+//! ## Float convention
+//!
+//! Request floats may be JSON numbers *or* 16-hex-digit IEEE-754 bit
+//! patterns per the `dse::shard` convention ([`crate::config::f64_from_bits_hex`]).
+//! Two exceptions share their shape verbatim with shard artifacts so
+//! the wire and artifact parsers are literally the same code: `model`
+//! payloads are bit-hex only ([`model_to_value`]) and sweep `spec`
+//! axes are numbers only ([`SweepSpec::to_value`], which round-trips
+//! finite f64 bits losslessly). Responses use numbers by
+//! default (Rust prints the shortest decimal that parses back to
+//! identical bits, so finite floats round-trip exactly; non-finite
+//! values fall back to bit-hex); `"bits": true` on an `eval` request
+//! switches its response floats to bit-hex, and `sweep` summaries
+//! always travel bit-hex (they reuse the shard artifact payload). See
+//! `rust/docs/protocol.md` for the full grammar.
+
+use std::collections::BTreeMap;
+
+use crate::adc::{AdcMetrics, AdcModel, AdcQuery};
+use crate::config::{Value, f64_from_bits_hex, f64_to_bits_hex};
+use crate::dse::accel::AccelSweepSpec;
+use crate::dse::{SweepSpec, shard};
+
+/// Hard cap on one request frame (bytes, newline excluded). A frame
+/// that grows past this yields an [`CODE_OVERSIZED_FRAME`] error frame
+/// and the rest of the line is discarded.
+pub const MAX_FRAME_BYTES: usize = 1 << 20;
+
+/// Largest `queries` batch one `eval` frame may carry (bounds response
+/// size; sweeps are the tool for bigger grids).
+pub const MAX_EVAL_BATCH: usize = 4096;
+
+/// Error code: the frame was not parseable JSON (or not UTF-8).
+pub const CODE_MALFORMED_JSON: &str = "malformed-json";
+/// Error code: the frame parsed but is not a JSON object with an `op`.
+pub const CODE_BAD_FRAME: &str = "bad-frame";
+/// Error code: the `op` value is not a known operation.
+pub const CODE_UNKNOWN_OP: &str = "unknown-op";
+/// Error code: a field is missing, mistyped, or semantically invalid.
+pub const CODE_BAD_REQUEST: &str = "bad-request";
+/// Error code: the request line exceeded [`MAX_FRAME_BYTES`].
+pub const CODE_OVERSIZED_FRAME: &str = "oversized-frame";
+/// Error code: the server failed internally while serving a valid
+/// request (should not happen; kept for forward compatibility).
+pub const CODE_INTERNAL: &str = "internal";
+
+/// A typed protocol rejection: stable machine code + human message.
+#[derive(Clone, Debug)]
+pub struct Reject {
+    /// One of the `CODE_*` constants.
+    pub code: &'static str,
+    /// Human-readable detail (not part of the stable surface).
+    pub message: String,
+}
+
+impl Reject {
+    /// Build a rejection.
+    pub fn new(code: &'static str, message: impl Into<String>) -> Reject {
+        Reject { code, message: message.into() }
+    }
+
+    fn bad(message: impl Into<String>) -> Reject {
+        Reject::new(CODE_BAD_REQUEST, message)
+    }
+}
+
+/// A parsed, validated request frame.
+#[derive(Clone, Debug)]
+pub enum Request {
+    /// Evaluate one or more design points.
+    Eval(EvalRequest),
+    /// Stream a whole sweep grid to its summary rollup.
+    Sweep(SweepRequest),
+    /// Accelerator-level DSE over a workload from the zoo.
+    Accel(AccelRequest),
+    /// Server counters / latency quantiles / cache stats.
+    Metrics,
+    /// Graceful drain: stop accepting, finish in-flight work, exit.
+    Shutdown,
+}
+
+impl Request {
+    /// The op name this request was parsed from.
+    pub fn op(&self) -> &'static str {
+        match self {
+            Request::Eval(_) => "eval",
+            Request::Sweep(_) => "sweep",
+            Request::Accel(_) => "accel",
+            Request::Metrics => "metrics",
+            Request::Shutdown => "shutdown",
+        }
+    }
+}
+
+/// `op: "eval"` payload.
+#[derive(Clone, Debug)]
+pub struct EvalRequest {
+    /// The design points to evaluate (singular `query` arrives as one).
+    pub queries: Vec<AdcQuery>,
+    /// Model override; `None` uses the server's default model.
+    pub model: Option<AdcModel>,
+    /// Encode response floats as IEEE-754 bit-hex strings.
+    pub bits: bool,
+}
+
+/// `op: "sweep"` payload.
+#[derive(Clone, Debug)]
+pub struct SweepRequest {
+    /// The inline sweep grid.
+    pub spec: SweepSpec,
+    /// Model override; `None` uses the server's default model.
+    pub model: Option<AdcModel>,
+}
+
+/// `op: "accel"` payload.
+#[derive(Clone, Debug)]
+pub struct AccelRequest {
+    /// Workload name resolved through [`crate::workload::zoo::by_name`].
+    pub workload: String,
+    /// The architecture knob grid (defaults filled per axis).
+    pub spec: AccelSweepSpec,
+    /// Model override; `None` uses the server's default model.
+    pub model: Option<AdcModel>,
+}
+
+/// Encode one response float per the frame's convention. Non-finite
+/// values are always bit-hex regardless of `bits`: JSON has no
+/// inf/NaN literal, and degrading a valid request's response over an
+/// overflowed metric (e.g. an extreme client-supplied model) would
+/// cost the client its `id` echo.
+pub fn fnum(x: f64, bits: bool) -> Value {
+    if bits || !x.is_finite() { Value::String(f64_to_bits_hex(x)) } else { Value::Number(x) }
+}
+
+/// Decode a request float: JSON number or 16-hex-digit bit pattern.
+pub fn flex_f64(v: &Value, what: &str) -> Result<f64, Reject> {
+    match v {
+        Value::Number(n) => Ok(*n),
+        Value::String(s) => f64_from_bits_hex(s)
+            .map_err(|_| Reject::bad(format!("`{what}` is not a number or f64 bit-hex string"))),
+        _ => Err(Reject::bad(format!("`{what}` is not a number or f64 bit-hex string"))),
+    }
+}
+
+fn flex_field(table: &Value, key: &str) -> Result<Option<f64>, Reject> {
+    match table.get(key) {
+        None | Some(Value::Null) => Ok(None),
+        Some(v) => flex_f64(v, key).map(Some),
+    }
+}
+
+fn require_flex(table: &Value, key: &str) -> Result<f64, Reject> {
+    flex_field(table, key)?.ok_or_else(|| Reject::bad(format!("missing field `{key}`")))
+}
+
+/// The model payload as a [`Value`] (bit-hex floats — the same shape
+/// shard artifacts embed, and what [`model_from_value`] parses).
+pub fn model_to_value(model: &AdcModel) -> Value {
+    shard::model_to_value(model)
+}
+
+/// Parse a model payload — a thin wrapper over the one canonical
+/// parser ([`shard::model_from_value`], the same code that loads shard
+/// artifacts), so the wire and artifact model shapes can never drift.
+/// Model floats therefore travel as bit-hex strings (the
+/// [`model_to_value`] shape) — the only encoding that transmits the
+/// exact bits the fingerprint is computed over.
+pub fn model_from_value(v: &Value) -> Result<AdcModel, Reject> {
+    shard::model_from_value(v).map_err(|e| Reject::bad(e.to_string()))
+}
+
+/// Encode a metric record per the frame's float convention. Field
+/// names and order come from the one canonical list shard artifacts
+/// use ([`shard::METRIC_NAMES`] / `metric_values`), so the wire and
+/// artifact metric shapes cannot drift.
+pub fn metrics_to_value(m: &AdcMetrics, bits: bool) -> Value {
+    let mut map = BTreeMap::new();
+    for (name, val) in shard::METRIC_NAMES.iter().zip(shard::metric_values(m)) {
+        map.insert(name.to_string(), fnum(val, bits));
+    }
+    Value::Table(map)
+}
+
+/// Decode a metric record (numbers or bit-hex).
+pub fn metrics_from_value(v: &Value) -> Result<AdcMetrics, Reject> {
+    Ok(AdcMetrics {
+        energy_pj_per_convert: require_flex(v, shard::METRIC_NAMES[0])?,
+        area_um2_per_adc: require_flex(v, shard::METRIC_NAMES[1])?,
+        total_power_w: require_flex(v, shard::METRIC_NAMES[2])?,
+        total_area_um2: require_flex(v, shard::METRIC_NAMES[3])?,
+    })
+}
+
+/// Encode a query echo (plain numbers for humans; [`fnum`] falls back
+/// to bit-hex for non-finite fields — `validate` bounds every field
+/// except `total_throughput`, which admits +inf — so the echo can
+/// never make a response unserializable).
+pub fn query_to_value(q: &AdcQuery) -> Value {
+    let mut map = BTreeMap::new();
+    map.insert("enob".to_string(), fnum(q.enob, false));
+    map.insert("total_throughput".to_string(), fnum(q.total_throughput, false));
+    map.insert("tech_nm".to_string(), fnum(q.tech_nm, false));
+    map.insert("n_adcs".to_string(), Value::Number(q.n_adcs as f64));
+    Value::Table(map)
+}
+
+fn query_from_value(v: &Value) -> Result<AdcQuery, Reject> {
+    if !matches!(v, Value::Table(_)) {
+        return Err(Reject::bad("query must be a JSON object"));
+    }
+    let n_adcs = match v.get("n_adcs") {
+        None | Some(Value::Null) => 1u32,
+        Some(n) => n
+            .as_usize()
+            .filter(|&n| n >= 1 && n <= u32::MAX as usize)
+            .ok_or_else(|| Reject::bad("`n_adcs` is not a positive u32 integer"))?
+            as u32,
+    };
+    let q = AdcQuery {
+        enob: require_flex(v, "enob")?,
+        total_throughput: require_flex(v, "total_throughput")?,
+        tech_nm: flex_field(v, "tech_nm")?.unwrap_or(32.0),
+        n_adcs,
+    };
+    q.validate().map_err(|e| Reject::bad(e.to_string()))?;
+    Ok(q)
+}
+
+fn model_field(v: &Value) -> Result<Option<AdcModel>, Reject> {
+    match v.get("model") {
+        None | Some(Value::Null) => Ok(None),
+        Some(m) => model_from_value(m).map(Some),
+    }
+}
+
+/// The scalar `id` of a frame, if it carries one (string or number;
+/// anything else is ignored rather than rejected).
+pub fn frame_id(v: &Value) -> Option<Value> {
+    match v.get("id") {
+        Some(id @ (Value::String(_) | Value::Number(_))) => Some(id.clone()),
+        _ => None,
+    }
+}
+
+/// Parse a decoded frame into a typed [`Request`].
+///
+/// The caller has already parsed the JSON; this validates shape and
+/// semantics. Returns `(op_if_known, result)` so error frames can still
+/// echo the op the client asked for.
+pub fn parse_request(v: &Value) -> (Option<String>, Result<Request, Reject>) {
+    if !matches!(v, Value::Table(_)) {
+        return (
+            None,
+            Err(Reject::new(CODE_BAD_FRAME, "frame is not a JSON object")),
+        );
+    }
+    let op = match v.get("op").and_then(Value::as_str) {
+        Some(op) => op.to_string(),
+        None => {
+            return (
+                None,
+                Err(Reject::new(CODE_BAD_FRAME, "frame lacks a string `op` field")),
+            );
+        }
+    };
+    let parsed = match op.as_str() {
+        "eval" => parse_eval(v),
+        "sweep" => parse_sweep(v),
+        "accel" => parse_accel(v),
+        "metrics" => Ok(Request::Metrics),
+        "shutdown" => Ok(Request::Shutdown),
+        other => Err(Reject::new(
+            CODE_UNKNOWN_OP,
+            format!("unknown op `{other}` (eval|sweep|accel|metrics|shutdown)"),
+        )),
+    };
+    (Some(op), parsed)
+}
+
+fn parse_eval(v: &Value) -> Result<Request, Reject> {
+    let queries = match (v.get("query"), v.get("queries")) {
+        (Some(_), Some(_)) => {
+            return Err(Reject::bad("give either `query` or `queries`, not both"));
+        }
+        (Some(q), None) => vec![query_from_value(q)?],
+        (None, Some(Value::Array(items))) => {
+            if items.is_empty() {
+                return Err(Reject::bad("`queries` is empty"));
+            }
+            if items.len() > MAX_EVAL_BATCH {
+                return Err(Reject::bad(format!(
+                    "`queries` has {} entries (max {MAX_EVAL_BATCH}); use `sweep` for grids",
+                    items.len()
+                )));
+            }
+            items
+                .iter()
+                .map(query_from_value)
+                .collect::<Result<Vec<_>, Reject>>()?
+        }
+        (None, Some(_)) => return Err(Reject::bad("`queries` is not an array")),
+        (None, None) => return Err(Reject::bad("eval needs a `query` or `queries` field")),
+    };
+    let bits = match v.get("bits") {
+        None | Some(Value::Null) => false,
+        Some(b) => b.as_bool().ok_or_else(|| Reject::bad("`bits` is not a boolean"))?,
+    };
+    Ok(Request::Eval(EvalRequest { queries, model: model_field(v)?, bits }))
+}
+
+fn parse_sweep(v: &Value) -> Result<Request, Reject> {
+    let spec_value = v
+        .get("spec")
+        .ok_or_else(|| Reject::bad("sweep needs an inline `spec` object"))?;
+    let spec = SweepSpec::from_value(spec_value).map_err(|e| Reject::bad(e.to_string()))?;
+    if spec.checked_len().is_none() {
+        return Err(Reject::bad(
+            "sweep grid length overflows usize; split the spec into sub-range specs",
+        ));
+    }
+    Ok(Request::Sweep(SweepRequest { spec, model: model_field(v)? }))
+}
+
+fn parse_accel(v: &Value) -> Result<Request, Reject> {
+    let workload = match v.get("workload") {
+        None | Some(Value::Null) => "resnet18".to_string(),
+        Some(w) => w
+            .as_str()
+            .ok_or_else(|| Reject::bad("`workload` is not a string"))?
+            .to_string(),
+    };
+    let mut spec = AccelSweepSpec::default();
+    if let Some(xs) = v.get("sum_sizes") {
+        spec.sum_sizes = usize_axis(xs, "sum_sizes")?;
+    }
+    if let Some(xs) = v.get("enobs") {
+        spec.enobs = f64_axis(xs, "enobs")?;
+    }
+    if let Some(xs) = v.get("n_adcs") {
+        spec.n_adcs = usize_axis(xs, "n_adcs")?
+            .into_iter()
+            .map(|n| {
+                u32::try_from(n).map_err(|_| Reject::bad("`n_adcs` entry exceeds u32"))
+            })
+            .collect::<Result<Vec<u32>, Reject>>()?;
+    }
+    if let Some(xs) = v.get("total_throughputs") {
+        spec.total_throughputs = f64_axis(xs, "total_throughputs")?;
+    }
+    if let Some(x) = flex_field(v, "max_clipped_bits")? {
+        spec.max_clipped_bits = x;
+    }
+    Ok(Request::Accel(AccelRequest { workload, spec, model: model_field(v)? }))
+}
+
+fn f64_axis(v: &Value, what: &str) -> Result<Vec<f64>, Reject> {
+    v.as_array()
+        .ok_or_else(|| Reject::bad(format!("`{what}` is not an array")))?
+        .iter()
+        .enumerate()
+        .map(|(i, item)| flex_f64(item, &format!("{what}[{i}]")))
+        .collect()
+}
+
+fn usize_axis(v: &Value, what: &str) -> Result<Vec<usize>, Reject> {
+    v.as_array()
+        .ok_or_else(|| Reject::bad(format!("`{what}` is not an array")))?
+        .iter()
+        .enumerate()
+        .map(|(i, item)| {
+            item.as_usize()
+                .ok_or_else(|| Reject::bad(format!("`{what}[{i}]` is not a non-negative integer")))
+        })
+        .collect()
+}
+
+/// Serialize a success frame (one line, no trailing newline).
+pub fn ok_frame(op: &str, id: Option<&Value>, result: Value) -> String {
+    let mut map = BTreeMap::new();
+    map.insert("ok".to_string(), Value::Bool(true));
+    map.insert("op".to_string(), Value::String(op.to_string()));
+    if let Some(id) = id {
+        map.insert("id".to_string(), id.clone());
+    }
+    map.insert("result".to_string(), result);
+    frame_text(Value::Table(map))
+}
+
+/// Serialize a typed error frame (one line, no trailing newline).
+pub fn error_frame(op: Option<&str>, id: Option<&Value>, reject: &Reject) -> String {
+    let mut err = BTreeMap::new();
+    err.insert("code".to_string(), Value::String(reject.code.to_string()));
+    err.insert("message".to_string(), Value::String(reject.message.clone()));
+    let mut map = BTreeMap::new();
+    map.insert("ok".to_string(), Value::Bool(false));
+    if let Some(op) = op {
+        map.insert("op".to_string(), Value::String(op.to_string()));
+    }
+    if let Some(id) = id {
+        map.insert("id".to_string(), id.clone());
+    }
+    map.insert("error".to_string(), Value::Table(err));
+    frame_text(Value::Table(map))
+}
+
+/// Canonical single-line text of a frame. Serialization of a response
+/// is total in practice (strings escape `\n`, response floats are
+/// bit-hex whenever non-finite); if it ever fails anyway, degrade to a
+/// minimal internal-error frame — built through the [`Value`] layer,
+/// whose string escaping is total, so even the fallback is valid JSON —
+/// rather than panicking the connection thread.
+fn frame_text(v: Value) -> String {
+    v.to_json_string().unwrap_or_else(|e| {
+        let mut err = BTreeMap::new();
+        err.insert("code".to_string(), Value::String(CODE_INTERNAL.to_string()));
+        err.insert(
+            "message".to_string(),
+            Value::String(format!("response serialization failed: {e}")),
+        );
+        let mut map = BTreeMap::new();
+        map.insert("ok".to_string(), Value::Bool(false));
+        map.insert("error".to_string(), Value::Table(err));
+        Value::Table(map)
+            .to_json_string()
+            .expect("bool/string-only frame always serializes")
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::parse_json;
+
+    fn req(text: &str) -> (Option<String>, Result<Request, Reject>) {
+        parse_request(&parse_json(text).unwrap())
+    }
+
+    #[test]
+    fn eval_single_query_with_defaults() {
+        let (op, r) = req(r#"{"op": "eval", "query": {"enob": 7, "total_throughput": 1.3e9}}"#);
+        assert_eq!(op.as_deref(), Some("eval"));
+        match r.unwrap() {
+            Request::Eval(e) => {
+                assert_eq!(e.queries.len(), 1);
+                assert_eq!(e.queries[0].tech_nm, 32.0);
+                assert_eq!(e.queries[0].n_adcs, 1);
+                assert!(!e.bits && e.model.is_none());
+            }
+            other => panic!("wrong request: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn eval_accepts_bit_hex_floats() {
+        let hex = f64_to_bits_hex(7.0);
+        let text = format!(
+            r#"{{"op": "eval", "bits": true, "query": {{"enob": "{hex}", "total_throughput": 1e9}}}}"#
+        );
+        match req(&text).1.unwrap() {
+            Request::Eval(e) => {
+                assert_eq!(e.queries[0].enob.to_bits(), 7.0f64.to_bits());
+                assert!(e.bits);
+            }
+            other => panic!("wrong request: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn eval_rejections_are_typed() {
+        for (text, needle) in [
+            (r#"{"op": "eval"}"#, "query"),
+            (r#"{"op": "eval", "queries": []}"#, "empty"),
+            (r#"{"op": "eval", "query": {"enob": 7}}"#, "total_throughput"),
+            (r#"{"op": "eval", "query": {"enob": -1, "total_throughput": 1e9}}"#, "ENOB"),
+            (
+                r#"{"op": "eval", "query": {"enob": 7, "total_throughput": 1e9, "n_adcs": 0}}"#,
+                "n_adcs",
+            ),
+            (
+                r#"{"op": "eval", "query": {"enob": 7, "total_throughput": 1e9}, "queries": []}"#,
+                "not both",
+            ),
+            (r#"{"op": "eval", "query": {"enob": 7, "total_throughput": 1e9}, "bits": 3}"#, "bits"),
+        ] {
+            let (_, r) = req(text);
+            let e = r.expect_err(text);
+            assert_eq!(e.code, CODE_BAD_REQUEST, "{text}");
+            assert!(e.message.contains(needle), "{text}: {}", e.message);
+        }
+    }
+
+    #[test]
+    fn frame_level_rejections_have_stable_codes() {
+        let (op, r) = parse_request(&Value::Array(vec![]));
+        assert!(op.is_none());
+        assert_eq!(r.unwrap_err().code, CODE_BAD_FRAME);
+        let (op, r) = req(r#"{"no_op": 1}"#);
+        assert!(op.is_none());
+        assert_eq!(r.unwrap_err().code, CODE_BAD_FRAME);
+        let (op, r) = req(r#"{"op": "divide"}"#);
+        assert_eq!(op.as_deref(), Some("divide"));
+        let e = r.unwrap_err();
+        assert_eq!(e.code, CODE_UNKNOWN_OP);
+        assert!(e.message.contains("divide"), "{}", e.message);
+    }
+
+    #[test]
+    fn sweep_parses_inline_spec_and_rejects_bad_ones() {
+        let (_, r) = req(
+            r#"{"op": "sweep", "spec": {"enobs": [4, 8], "total_throughputs": [1e9],
+                "tech_nms": [32], "n_adcs": [1, 2]}}"#,
+        );
+        match r.unwrap() {
+            Request::Sweep(s) => assert_eq!(s.spec.len(), 4),
+            other => panic!("wrong request: {other:?}"),
+        }
+        let (_, r) = req(r#"{"op": "sweep"}"#);
+        assert_eq!(r.unwrap_err().code, CODE_BAD_REQUEST);
+        let (_, r) = req(r#"{"op": "sweep", "spec": {"enobs": [4]}}"#);
+        assert_eq!(r.unwrap_err().code, CODE_BAD_REQUEST);
+    }
+
+    #[test]
+    fn accel_defaults_and_overrides() {
+        let (_, r) = req(r#"{"op": "accel"}"#);
+        match r.unwrap() {
+            Request::Accel(a) => {
+                assert_eq!(a.workload, "resnet18");
+                assert_eq!(a.spec.sum_sizes, AccelSweepSpec::default().sum_sizes);
+            }
+            other => panic!("wrong request: {other:?}"),
+        }
+        let (_, r) = req(
+            r#"{"op": "accel", "workload": "lenet", "sum_sizes": [128, 512],
+                "enobs": [6, 8], "n_adcs": [2], "max_clipped_bits": 4.5}"#,
+        );
+        match r.unwrap() {
+            Request::Accel(a) => {
+                assert_eq!(a.workload, "lenet");
+                assert_eq!(a.spec.sum_sizes, vec![128, 512]);
+                assert_eq!(a.spec.n_adcs, vec![2]);
+                assert_eq!(a.spec.max_clipped_bits, 4.5);
+            }
+            other => panic!("wrong request: {other:?}"),
+        }
+        let (_, r) = req(r#"{"op": "accel", "sum_sizes": [-1]}"#);
+        assert_eq!(r.unwrap_err().code, CODE_BAD_REQUEST);
+    }
+
+    #[test]
+    fn model_roundtrips_and_fingerprint_survives_the_wire() {
+        let model = AdcModel { energy_offset_decades: 0.25, ..AdcModel::default() };
+        let back = model_from_value(&model_to_value(&model)).unwrap();
+        assert_eq!(
+            crate::dse::model_fingerprint(&back),
+            crate::dse::model_fingerprint(&model)
+        );
+        let e = model_from_value(&parse_json(r#"{"coefs": [1, 2]}"#).unwrap()).unwrap_err();
+        assert!(e.message.contains("11"), "{}", e.message);
+    }
+
+    #[test]
+    fn frames_are_single_lines_and_echo_ids() {
+        let id = Value::Number(7.0);
+        let ok = ok_frame("eval", Some(&id), Value::Table(BTreeMap::new()));
+        assert!(!ok.contains('\n'), "{ok}");
+        let doc = parse_json(&ok).unwrap();
+        assert_eq!(doc.get("ok").and_then(Value::as_bool), Some(true));
+        assert_eq!(doc.get("id").and_then(Value::as_f64), Some(7.0));
+        assert_eq!(doc.require_str("op").unwrap(), "eval");
+
+        let err = error_frame(None, None, &Reject::new(CODE_UNKNOWN_OP, "nope\nnl"));
+        assert!(!err.contains('\n'), "{err}");
+        let doc = parse_json(&err).unwrap();
+        assert_eq!(doc.get("ok").and_then(Value::as_bool), Some(false));
+        assert_eq!(doc.require_str("error.code").unwrap(), CODE_UNKNOWN_OP);
+
+        // id echo only for scalar ids.
+        let frame = parse_json(r#"{"op": "metrics", "id": "abc"}"#).unwrap();
+        assert_eq!(frame_id(&frame), Some(Value::String("abc".into())));
+        let frame = parse_json(r#"{"op": "metrics", "id": [1]}"#).unwrap();
+        assert_eq!(frame_id(&frame), None);
+    }
+
+    #[test]
+    fn metrics_value_roundtrip_both_conventions() {
+        let m = AdcMetrics {
+            energy_pj_per_convert: 3.3,
+            area_um2_per_adc: 5e4,
+            total_power_w: 1.2e-3,
+            total_area_um2: 4e5,
+        };
+        for bits in [false, true] {
+            let v = metrics_to_value(&m, bits);
+            let text = v.to_json_string().unwrap();
+            let back = metrics_from_value(&parse_json(&text).unwrap()).unwrap();
+            assert_eq!(back.to_bits(), m.to_bits(), "bits={bits}");
+        }
+    }
+}

@@ -1,0 +1,642 @@
+//! The serving daemon: accept loop, per-connection reader threads, and
+//! request dispatch onto the shared persistent [`crate::exec::Pool`].
+//!
+//! ## Threading model
+//!
+//! One nonblocking accept loop (the thread that called
+//! [`Server::serve`]) spawns one reader thread per connection. Reader
+//! threads parse frames and dispatch them; `eval` answers on the
+//! connection thread (the work is tiny), while `sweep`/`accel` route
+//! through the process-wide [`crate::exec::Pool::global`] — concurrent
+//! sweeps queue on the pool's broadcast slot first-come first-served,
+//! so the daemon never oversubscribes the machine no matter how many
+//! clients are connected.
+//!
+//! ## Shutdown
+//!
+//! A `shutdown` frame answers, then flips the shared drain flag. The
+//! accept loop stops accepting; reader threads notice the flag at their
+//! next frame boundary (both reads and writes time out every
+//! [`READ_TIMEOUT`], so even a thread mid-write to a client that
+//! stopped reading re-checks the flag and abandons the stalled
+//! connection) and close; [`Server::serve`] joins them all and
+//! returns. In-flight requests always finish computing — drain is
+//! graceful and bounded by construction.
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::adc::{AdcModel, PreparedModel};
+use crate::config::{Value, parse_json};
+use crate::dse::{SweepSummary, model_fingerprint};
+use crate::error::{Error, Result};
+use crate::exec::default_workers;
+
+use super::cache::PreparedCache;
+use super::metrics::ServiceMetrics;
+use super::protocol::{
+    AccelRequest, CODE_BAD_REQUEST, CODE_MALFORMED_JSON, CODE_OVERSIZED_FRAME, EvalRequest,
+    MAX_FRAME_BYTES, Reject, Request, SweepRequest, error_frame, fnum, frame_id,
+    metrics_to_value, ok_frame, parse_request,
+};
+
+/// Read timeout of connection sockets — the upper bound on how stale
+/// the drain flag can go unnoticed by a blocked reader thread.
+const READ_TIMEOUT: Duration = Duration::from_millis(100);
+
+/// Poll interval of the nonblocking accept loop (bounds connect
+/// latency and drain-flag staleness for the acceptor).
+const ACCEPT_POLL: Duration = Duration::from_millis(25);
+
+/// Configuration for [`Server::bind`].
+#[derive(Clone, Debug)]
+pub struct ServeOptions {
+    /// Bind address (`127.0.0.1:0` picks an ephemeral port).
+    pub addr: String,
+    /// The default model used by requests that carry no `model` field.
+    pub model: AdcModel,
+    /// Prepared-model cache capacity.
+    pub cache_capacity: usize,
+    /// Worker hint for sweep/accel evaluation (`1` = serial; anything
+    /// else routes through the shared pool, whose fixed width governs
+    /// actual parallelism).
+    pub workers: usize,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            addr: "127.0.0.1:0".to_string(),
+            model: AdcModel::default(),
+            cache_capacity: 32,
+            workers: default_workers(),
+        }
+    }
+}
+
+struct ServerShared {
+    default_model: AdcModel,
+    default_fingerprint: String,
+    workers: usize,
+    cache: std::sync::Mutex<PreparedCache>,
+    metrics: ServiceMetrics,
+    shutdown: AtomicBool,
+}
+
+/// A bound (but not yet serving) daemon. [`Server::serve`] consumes it
+/// and blocks until a graceful shutdown completes.
+pub struct Server {
+    listener: TcpListener,
+    local_addr: SocketAddr,
+    shared: Arc<ServerShared>,
+}
+
+/// A cloneable handle for triggering shutdown from another thread
+/// (tests, signal handlers) without a socket round-trip.
+#[derive(Clone)]
+pub struct ServerHandle {
+    shared: Arc<ServerShared>,
+}
+
+impl ServerHandle {
+    /// Flip the drain flag; the server finishes in-flight work and
+    /// [`Server::serve`] returns.
+    pub fn shutdown(&self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+    }
+
+    /// Whether drain has been requested.
+    pub fn is_shutting_down(&self) -> bool {
+        self.shared.shutdown.load(Ordering::SeqCst)
+    }
+}
+
+impl Server {
+    /// Bind the listener and precompute the default model fingerprint.
+    pub fn bind(options: ServeOptions) -> Result<Server> {
+        let listener = TcpListener::bind(&options.addr).map_err(|e| {
+            Error::Runtime(format!("serve: cannot bind {}: {e}", options.addr))
+        })?;
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| Error::Runtime(format!("serve: set_nonblocking: {e}")))?;
+        let local_addr = listener
+            .local_addr()
+            .map_err(|e| Error::Runtime(format!("serve: local_addr: {e}")))?;
+        let shared = Arc::new(ServerShared {
+            default_fingerprint: model_fingerprint(&options.model),
+            default_model: options.model,
+            workers: options.workers.max(1),
+            cache: std::sync::Mutex::new(PreparedCache::new(options.cache_capacity)),
+            metrics: ServiceMetrics::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        Ok(Server { listener, local_addr, shared })
+    }
+
+    /// The address actually bound (resolves `:0` ephemeral ports).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// A shutdown handle usable from other threads.
+    pub fn handle(&self) -> ServerHandle {
+        ServerHandle { shared: Arc::clone(&self.shared) }
+    }
+
+    /// Accept connections until a shutdown is requested, then drain:
+    /// join every connection thread (letting in-flight requests finish)
+    /// and return.
+    pub fn serve(self) -> Result<()> {
+        let mut handles: Vec<JoinHandle<()>> = Vec::new();
+        loop {
+            if self.shared.shutdown.load(Ordering::SeqCst) {
+                break;
+            }
+            match self.listener.accept() {
+                Ok((stream, _peer)) => {
+                    self.shared.metrics.connection_opened();
+                    let shared = Arc::clone(&self.shared);
+                    handles.push(std::thread::spawn(move || handle_connection(stream, &shared)));
+                    // Reap finished threads so a long-lived daemon's
+                    // handle list stays bounded by live connections.
+                    handles.retain(|h| !h.is_finished());
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                    std::thread::sleep(ACCEPT_POLL);
+                }
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(e) => {
+                    // Transient accept failures (EMFILE/ENFILE under fd
+                    // pressure, ECONNABORTED races) must not kill a
+                    // long-lived daemon that still has healthy
+                    // connections: note it, back off, keep serving.
+                    // The sleep bounds the retry rate while the
+                    // condition (e.g. fd exhaustion) clears.
+                    eprintln!("cimdse serve: accept failed (retrying): {e}");
+                    std::thread::sleep(ACCEPT_POLL);
+                }
+            }
+        }
+        drop(self.listener);
+        for h in handles {
+            let _ = h.join();
+        }
+        Ok(())
+    }
+}
+
+/// What the bounded line reader hands back per call.
+enum FrameRead {
+    /// One complete frame (without its newline).
+    Frame(Vec<u8>),
+    /// The line exceeded [`MAX_FRAME_BYTES`]; its remainder has been /
+    /// will be discarded up to the next newline.
+    Oversized,
+    /// Peer closed (possibly mid-frame) or drain was requested.
+    Closed,
+}
+
+/// Reads `\n`-delimited frames with a hard size cap, surviving read
+/// timeouts (used to poll the drain flag) and discarding the tail of
+/// oversized lines so the connection can resynchronize.
+struct LineReader {
+    stream: TcpStream,
+    buf: Vec<u8>,
+    /// Bytes of `buf` already scanned for a newline — only newly read
+    /// bytes are searched, keeping per-frame cost linear in frame size
+    /// instead of quadratic in the number of reads.
+    scanned: usize,
+    /// Discarding until the next newline after an oversized frame.
+    discarding: bool,
+}
+
+impl LineReader {
+    fn new(stream: TcpStream) -> LineReader {
+        LineReader { stream, buf: Vec::new(), scanned: 0, discarding: false }
+    }
+
+    fn next_frame(&mut self, shutdown: &AtomicBool) -> FrameRead {
+        let mut chunk = [0u8; 8192];
+        loop {
+            // Serve / discard whatever is already buffered first.
+            if let Some(rel) = self.buf[self.scanned..].iter().position(|&b| b == b'\n') {
+                let pos = self.scanned + rel;
+                let mut line: Vec<u8> = self.buf.drain(..=pos).collect();
+                self.scanned = 0;
+                line.pop(); // the newline
+                if line.last() == Some(&b'\r') {
+                    line.pop();
+                }
+                if self.discarding {
+                    self.discarding = false;
+                    continue; // the tail of an oversized line
+                }
+                if line.len() > MAX_FRAME_BYTES {
+                    // A whole oversized line arrived in one gulp: the
+                    // newline is already consumed, nothing to discard.
+                    return FrameRead::Oversized;
+                }
+                return FrameRead::Frame(line);
+            }
+            self.scanned = self.buf.len();
+            if self.discarding {
+                self.buf.clear();
+                self.scanned = 0;
+            } else if self.buf.len() > MAX_FRAME_BYTES {
+                self.discarding = true;
+                self.buf.clear();
+                self.scanned = 0;
+                return FrameRead::Oversized;
+            }
+            match self.stream.read(&mut chunk) {
+                Ok(0) => return FrameRead::Closed,
+                Ok(n) => self.buf.extend_from_slice(&chunk[..n]),
+                Err(e)
+                    if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut =>
+                {
+                    if shutdown.load(Ordering::SeqCst) {
+                        return FrameRead::Closed;
+                    }
+                }
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(_) => return FrameRead::Closed,
+            }
+        }
+    }
+}
+
+fn handle_connection(stream: TcpStream, shared: &ServerShared) {
+    // Accepted sockets can inherit the listener's nonblocking mode;
+    // force blocking with timeouts so both reads and writes poll the
+    // drain flag (a client that stops *reading* must not wedge drain
+    // by blocking a response write forever).
+    let _ = stream.set_nonblocking(false);
+    let _ = stream.set_read_timeout(Some(READ_TIMEOUT));
+    let _ = stream.set_write_timeout(Some(READ_TIMEOUT));
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let mut reader = LineReader::new(stream);
+    loop {
+        let line = match reader.next_frame(&shared.shutdown) {
+            FrameRead::Frame(line) => line,
+            FrameRead::Oversized => {
+                let reject = Reject::new(
+                    CODE_OVERSIZED_FRAME,
+                    format!("request frame exceeds {MAX_FRAME_BYTES} bytes"),
+                );
+                shared.metrics.record_error_frame();
+                let frame = error_frame(None, None, &reject);
+                if write_line(&mut writer, &frame, &shared.shutdown).is_err() {
+                    return;
+                }
+                continue;
+            }
+            FrameRead::Closed => return,
+        };
+        if line.iter().all(|b| b.is_ascii_whitespace()) {
+            continue; // blank keep-alive lines are not frames
+        }
+        let response = process_frame(&line, shared);
+        if write_line(&mut writer, &response, &shared.shutdown).is_err() {
+            return;
+        }
+        if shared.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+    }
+}
+
+fn write_line(
+    writer: &mut TcpStream,
+    line: &str,
+    shutdown: &AtomicBool,
+) -> std::io::Result<()> {
+    // One buffer per response: line + newline in a single chunk. The
+    // manual offset loop (rather than `write_all`) is what keeps drain
+    // graceful against a client that stops reading: each write-timeout
+    // wakeup re-checks the drain flag, and a requested shutdown
+    // abandons the stalled connection instead of blocking
+    // [`Server::serve`]'s join forever. A merely *slow* reader is
+    // retried indefinitely while the server is up.
+    let mut bytes = Vec::with_capacity(line.len() + 1);
+    bytes.extend_from_slice(line.as_bytes());
+    bytes.push(b'\n');
+    let mut off = 0usize;
+    while off < bytes.len() {
+        match writer.write(&bytes[off..]) {
+            Ok(0) => {
+                return Err(std::io::Error::new(
+                    ErrorKind::WriteZero,
+                    "connection closed mid-response",
+                ));
+            }
+            Ok(n) => off += n,
+            Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {
+                if shutdown.load(Ordering::SeqCst) {
+                    return Err(e);
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    writer.flush()
+}
+
+/// Parse + dispatch one frame; always returns a response line (success
+/// or typed error — a malformed frame never costs the connection).
+fn process_frame(line: &[u8], shared: &ServerShared) -> String {
+    let text = match std::str::from_utf8(line) {
+        Ok(t) => t,
+        Err(_) => {
+            shared.metrics.record_error_frame();
+            return error_frame(
+                None,
+                None,
+                &Reject::new(CODE_MALFORMED_JSON, "frame is not valid UTF-8"),
+            );
+        }
+    };
+    let doc = match parse_json(text) {
+        Ok(v) => v,
+        Err(e) => {
+            shared.metrics.record_error_frame();
+            return error_frame(None, None, &Reject::new(CODE_MALFORMED_JSON, e.to_string()));
+        }
+    };
+    let id = frame_id(&doc);
+    let (op, request) = parse_request(&doc);
+    let request = match request {
+        Ok(r) => r,
+        Err(reject) => {
+            shared.metrics.record_error_frame();
+            return error_frame(op.as_deref(), id.as_ref(), &reject);
+        }
+    };
+    let op = request.op();
+    let start = Instant::now();
+    match dispatch(&request, shared) {
+        Ok(result) => {
+            shared.metrics.record_request(op, start.elapsed().as_secs_f64());
+            ok_frame(op, id.as_ref(), result)
+        }
+        Err(reject) => {
+            shared.metrics.record_error_frame();
+            error_frame(Some(op), id.as_ref(), &reject)
+        }
+    }
+}
+
+/// Resolve the request's model through the prepared cache. Returns the
+/// shared prepared model, its fingerprint, and whether it was a hit.
+fn lookup_model(
+    shared: &ServerShared,
+    model: Option<&AdcModel>,
+) -> (Arc<PreparedModel>, String, bool) {
+    let (fingerprint, model) = match model {
+        Some(m) => (model_fingerprint(m), *m),
+        None => (shared.default_fingerprint.clone(), shared.default_model),
+    };
+    let (prepared, hit) =
+        shared.cache.lock().unwrap().get_or_prepare(&fingerprint, &model);
+    (prepared, fingerprint, hit)
+}
+
+fn cache_value(fingerprint: &str, hit: bool) -> Value {
+    let mut map = std::collections::BTreeMap::new();
+    map.insert("fingerprint".to_string(), Value::String(fingerprint.to_string()));
+    map.insert("hit".to_string(), Value::Bool(hit));
+    Value::Table(map)
+}
+
+fn dispatch(request: &Request, shared: &ServerShared) -> std::result::Result<Value, Reject> {
+    match request {
+        Request::Eval(req) => dispatch_eval(req, shared),
+        Request::Sweep(req) => dispatch_sweep(req, shared),
+        Request::Accel(req) => dispatch_accel(req, shared),
+        Request::Metrics => {
+            let cache = shared.cache.lock().unwrap().stats();
+            Ok(shared.metrics.snapshot(&cache))
+        }
+        Request::Shutdown => {
+            shared.shutdown.store(true, Ordering::SeqCst);
+            let mut map = std::collections::BTreeMap::new();
+            map.insert("draining".to_string(), Value::Bool(true));
+            Ok(Value::Table(map))
+        }
+    }
+}
+
+fn dispatch_eval(req: &EvalRequest, shared: &ServerShared) -> std::result::Result<Value, Reject> {
+    let (prepared, fingerprint, hit) = lookup_model(shared, req.model.as_ref());
+    let model = prepared.model();
+    let points: Vec<Value> = req
+        .queries
+        .iter()
+        .map(|q| {
+            // The prepared row is bit-identical to `AdcModel::eval` by
+            // construction (adc::prepared's exact-bits contract), so a
+            // served response equals the direct library call.
+            let metrics = prepared.row(q.enob, q.tech_nm).eval_query(q);
+            let mut map = std::collections::BTreeMap::new();
+            map.insert("query".to_string(), super::protocol::query_to_value(q));
+            map.insert("metrics".to_string(), metrics_to_value(&metrics, req.bits));
+            map.insert(
+                "crossover_throughput".to_string(),
+                fnum(model.crossover_throughput(q.enob, q.tech_nm), req.bits),
+            );
+            Value::Table(map)
+        })
+        .collect();
+    let mut map = std::collections::BTreeMap::new();
+    map.insert("count".to_string(), Value::Number(points.len() as f64));
+    map.insert("points".to_string(), Value::Array(points));
+    map.insert("cache".to_string(), cache_value(&fingerprint, hit));
+    Ok(Value::Table(map))
+}
+
+fn dispatch_sweep(req: &SweepRequest, shared: &ServerShared) -> std::result::Result<Value, Reject> {
+    let (prepared, fingerprint, hit) = lookup_model(shared, req.model.as_ref());
+    // The streamed rollup over the shared pool — the identical fold the
+    // CLI's `sweep --summary-json` runs, so the summary payload (bit-hex
+    // floats) is byte-identical to the direct library call.
+    let summary = SweepSummary::compute(&req.spec, prepared.model(), shared.workers);
+    let mut map = std::collections::BTreeMap::new();
+    map.insert("points".to_string(), Value::Number(summary.count() as f64));
+    map.insert("summary".to_string(), summary.to_value());
+    map.insert("cache".to_string(), cache_value(&fingerprint, hit));
+    Ok(Value::Table(map))
+}
+
+fn dispatch_accel(req: &AccelRequest, shared: &ServerShared) -> std::result::Result<Value, Reject> {
+    use crate::dse::accel::{accel_pareto, run_accel_sweep};
+    let workload = crate::workload::zoo::by_name(&req.workload)
+        .map_err(|e| Reject::new(CODE_BAD_REQUEST, e.to_string()))?;
+    let (prepared, fingerprint, hit) = lookup_model(shared, req.model.as_ref());
+    let points = run_accel_sweep(&req.spec, prepared.model(), &workload, shared.workers)
+        .map_err(|e| Reject::new(CODE_BAD_REQUEST, e.to_string()))?;
+    let mut front: Vec<&crate::dse::AccelPoint> =
+        accel_pareto(&points).iter().map(|&i| &points[i]).collect();
+    front.sort_by(|a, b| a.eap.total_cmp(&b.eap));
+    // fnum (not raw Number): an extreme client-supplied model can
+    // overflow these to ±inf, which must degrade to bit-hex, not to an
+    // unserializable response that loses the id echo.
+    let front: Vec<Value> = front
+        .iter()
+        .map(|p| {
+            let mut map = std::collections::BTreeMap::new();
+            map.insert("config".to_string(), Value::String(p.arch.name.clone()));
+            map.insert("energy_pj".to_string(), fnum(p.energy_pj, false));
+            map.insert("area_um2".to_string(), fnum(p.area_um2, false));
+            map.insert(
+                "adc_energy_fraction".to_string(),
+                fnum(p.adc_energy_fraction, false),
+            );
+            map.insert("latency_s".to_string(), fnum(p.latency_s, false));
+            map.insert("eap".to_string(), fnum(p.eap, false));
+            Value::Table(map)
+        })
+        .collect();
+    let mut map = std::collections::BTreeMap::new();
+    map.insert("workload".to_string(), Value::String(workload.name.clone()));
+    map.insert("candidates".to_string(), Value::Number(points.len() as f64));
+    map.insert("front".to_string(), Value::Array(front));
+    map.insert("cache".to_string(), cache_value(&fingerprint, hit));
+    Ok(Value::Table(map))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shared_for_test() -> ServerShared {
+        let model = AdcModel::default();
+        ServerShared {
+            default_fingerprint: model_fingerprint(&model),
+            default_model: model,
+            workers: 2,
+            cache: std::sync::Mutex::new(PreparedCache::new(4)),
+            metrics: ServiceMetrics::new(),
+            shutdown: AtomicBool::new(false),
+        }
+    }
+
+    fn ok_result(shared: &ServerShared, line: &str) -> Value {
+        let resp = parse_json(&process_frame(line.as_bytes(), shared)).unwrap();
+        assert_eq!(
+            resp.get("ok").and_then(Value::as_bool),
+            Some(true),
+            "{line} -> {resp:?}"
+        );
+        resp.get("result").unwrap().clone()
+    }
+
+    fn err_code(shared: &ServerShared, line: &str) -> String {
+        let resp = parse_json(&process_frame(line.as_bytes(), shared)).unwrap();
+        assert_eq!(resp.get("ok").and_then(Value::as_bool), Some(false), "{line}");
+        resp.require_str("error.code").unwrap().to_string()
+    }
+
+    #[test]
+    fn eval_frame_is_bit_identical_to_direct_eval() {
+        let shared = shared_for_test();
+        let q = crate::adc::AdcQuery {
+            enob: 7.5,
+            total_throughput: 1.3e9,
+            tech_nm: 32.0,
+            n_adcs: 8,
+        };
+        let result = ok_result(
+            &shared,
+            &format!(
+                r#"{{"op": "eval", "bits": true, "query": {{"enob": 7.5,
+                   "total_throughput": 1.3e9, "tech_nm": 32, "n_adcs": 8}}}}"#
+            ),
+        );
+        let point = &result.get("points").and_then(Value::as_array).unwrap()[0];
+        let metrics =
+            super::super::protocol::metrics_from_value(point.get("metrics").unwrap()).unwrap();
+        assert_eq!(metrics.to_bits(), shared.default_model.eval(&q).to_bits());
+        // Second identical call: cache hit.
+        let result = ok_result(
+            &shared,
+            r#"{"op": "eval", "query": {"enob": 7.5, "total_throughput": 1.3e9, "n_adcs": 8}}"#,
+        );
+        assert_eq!(result.get("cache.hit").and_then(Value::as_bool), Some(true));
+    }
+
+    #[test]
+    fn sweep_frame_summary_matches_direct_compute_bytes() {
+        let shared = shared_for_test();
+        let spec = crate::dse::SweepSpec {
+            enobs: vec![4.0, 8.0],
+            total_throughputs: vec![1e8, 1e9],
+            tech_nms: vec![32.0],
+            n_adcs: vec![1, 4],
+        };
+        let frame = format!(
+            r#"{{"op": "sweep", "spec": {}}}"#,
+            spec.to_value().to_json_string().unwrap()
+        );
+        let result = ok_result(&shared, &frame);
+        let served = result.get("summary").unwrap().to_json_string().unwrap();
+        let direct = SweepSummary::compute(&spec, &shared.default_model, 2)
+            .to_value()
+            .to_json_string()
+            .unwrap();
+        assert_eq!(served, direct, "served sweep summary must be byte-identical");
+    }
+
+    #[test]
+    fn typed_error_frames_for_every_negative_path() {
+        let shared = shared_for_test();
+        assert_eq!(err_code(&shared, "{ not json"), CODE_MALFORMED_JSON);
+        assert_eq!(err_code(&shared, "[1, 2]"), super::super::protocol::CODE_BAD_FRAME);
+        assert_eq!(err_code(&shared, r#"{"op": "nope"}"#), super::super::protocol::CODE_UNKNOWN_OP);
+        assert_eq!(err_code(&shared, r#"{"op": "eval"}"#), CODE_BAD_REQUEST);
+        assert_eq!(
+            err_code(&shared, r#"{"op": "accel", "workload": "alexnet"}"#),
+            CODE_BAD_REQUEST
+        );
+        assert_eq!(
+            process_frame(&[0xff, 0xfe, b'{'], &shared),
+            error_frame(
+                None,
+                None,
+                &Reject::new(CODE_MALFORMED_JSON, "frame is not valid UTF-8")
+            )
+        );
+        let snapshot = ok_result(&shared, r#"{"op": "metrics"}"#);
+        assert_eq!(snapshot.require_f64("error_frames").unwrap(), 6.0);
+    }
+
+    #[test]
+    fn shutdown_frame_answers_then_flips_the_flag() {
+        let shared = shared_for_test();
+        assert!(!shared.shutdown.load(Ordering::SeqCst));
+        let result = ok_result(&shared, r#"{"op": "shutdown"}"#);
+        assert_eq!(result.get("draining").and_then(Value::as_bool), Some(true));
+        assert!(shared.shutdown.load(Ordering::SeqCst));
+    }
+
+    #[test]
+    fn id_is_echoed_on_success_and_error() {
+        let shared = shared_for_test();
+        let resp = parse_json(&process_frame(
+            br#"{"op": "metrics", "id": "req-1"}"#,
+            &shared,
+        ))
+        .unwrap();
+        assert_eq!(resp.require_str("id").unwrap(), "req-1");
+        let resp =
+            parse_json(&process_frame(br#"{"op": "nope", "id": 42}"#, &shared)).unwrap();
+        assert_eq!(resp.get("id").and_then(Value::as_f64), Some(42.0));
+    }
+}

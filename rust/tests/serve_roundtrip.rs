@@ -1,0 +1,401 @@
+//! Socket-level contract of the serving daemon.
+//!
+//! The acceptance criterion: a served `eval` / `sweep` response is
+//! **bit-identical** to the corresponding direct library call, asserted
+//! across a real TCP socket — plus a concurrent-client stress test
+//! (N threads × M interleaved eval/sweep frames, every response
+//! byte-compared against direct library output) and the negative paths:
+//! malformed JSON, unknown op, oversized frame, and mid-frame
+//! disconnect each yield a typed error frame or a clean close, never a
+//! server panic. A final process-level test drives the real
+//! `cimdse serve` / `cimdse query` binaries end to end.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::process::{Child, Command, Stdio};
+use std::thread;
+use std::time::Duration;
+
+use cimdse::adc::{AdcModel, AdcQuery};
+use cimdse::config::{Value, parse_json};
+use cimdse::dse::{SweepSpec, SweepSummary};
+use cimdse::service::protocol::{
+    CODE_BAD_FRAME, CODE_BAD_REQUEST, CODE_MALFORMED_JSON, CODE_OVERSIZED_FRAME,
+    CODE_UNKNOWN_OP, MAX_FRAME_BYTES,
+};
+use cimdse::service::{Client, ServeOptions, Server, ServerHandle};
+
+/// Spin up an in-process server on an ephemeral port; returns its
+/// address string, a shutdown handle, and the serve-thread join handle.
+fn start_server(model: AdcModel) -> (String, ServerHandle, thread::JoinHandle<()>) {
+    let server = Server::bind(ServeOptions {
+        addr: "127.0.0.1:0".to_string(),
+        model,
+        cache_capacity: 8,
+        workers: 2,
+    })
+    .expect("bind");
+    let addr = server.local_addr().to_string();
+    let handle = server.handle();
+    let join = thread::spawn(move || server.serve().expect("serve"));
+    (addr, handle, join)
+}
+
+fn stop_server(addr: &str, join: thread::JoinHandle<()>) {
+    let mut client = Client::connect(addr).expect("connect for shutdown");
+    client.shutdown().expect("shutdown ack");
+    join.join().expect("serve thread exits cleanly");
+}
+
+/// Raw-socket helper: send one line, read one response line.
+fn raw_roundtrip(stream: &mut TcpStream, reader: &mut BufReader<TcpStream>, line: &str) -> Value {
+    stream.write_all(line.as_bytes()).unwrap();
+    stream.write_all(b"\n").unwrap();
+    stream.flush().unwrap();
+    let mut response = String::new();
+    let n = reader.read_line(&mut response).unwrap();
+    assert!(n > 0, "server closed instead of answering `{line}`");
+    parse_json(response.trim_end()).expect("response parses")
+}
+
+fn raw_pair(addr: &str) -> (TcpStream, BufReader<TcpStream>) {
+    let stream = TcpStream::connect(addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let reader = BufReader::new(stream.try_clone().unwrap());
+    (stream, reader)
+}
+
+fn err_code(v: &Value) -> &str {
+    assert_eq!(v.get("ok").and_then(Value::as_bool), Some(false), "{v:?}");
+    v.require_str("error.code").unwrap()
+}
+
+fn small_spec() -> SweepSpec {
+    SweepSpec {
+        enobs: vec![4.0, 8.0, 12.0],
+        total_throughputs: vec![1e6, 1e8, 1e10],
+        tech_nms: vec![16.0, 32.0],
+        n_adcs: vec![1, 4],
+    }
+}
+
+#[test]
+fn served_eval_is_bit_identical_to_direct_eval() {
+    let model = AdcModel::default();
+    let (addr, _handle, join) = start_server(model);
+    let mut client = Client::connect(&addr).unwrap();
+    for (enob, total, tech, n) in [
+        (7.0, 1.3e9, 32.0, 8u32),
+        (4.5, 1e6, 16.0, 1),
+        (12.0, 4e10, 65.0, 32),
+        (2.1, 1e4, 130.0, 2),
+    ] {
+        let q = AdcQuery { enob, total_throughput: total, tech_nm: tech, n_adcs: n };
+        let served = client.eval_metrics(&q, None).unwrap();
+        assert_eq!(
+            served.to_bits(),
+            model.eval(&q).to_bits(),
+            "served eval must be bit-identical (enob={enob} total={total})"
+        );
+        // Tuned model rides through the wire bit-exactly too.
+        let tuned = AdcModel { energy_offset_decades: 0.125, ..model };
+        let served = client.eval_metrics(&q, Some(&tuned)).unwrap();
+        assert_eq!(served.to_bits(), tuned.eval(&q).to_bits());
+    }
+    stop_server(&addr, join);
+}
+
+#[test]
+fn served_sweep_summary_is_byte_identical_to_direct_rollup() {
+    let model = AdcModel::default();
+    let (addr, _handle, join) = start_server(model);
+    let mut client = Client::connect(&addr).unwrap();
+    for spec in [small_spec(), SweepSpec::dense(5), SweepSpec::fig5(7.0, 6)] {
+        let (result, summary) = client.sweep(&spec, None).unwrap();
+        let direct = SweepSummary::compute(&spec, &model, 4);
+        assert_eq!(
+            summary.to_json_string().unwrap(),
+            direct.to_json_string().unwrap(),
+            "served summary must be byte-identical to the direct rollup"
+        );
+        // And the raw payload on the wire is the canonical serialization.
+        assert_eq!(
+            result.get("summary").unwrap().to_json_string().unwrap(),
+            direct.to_value().to_json_string().unwrap()
+        );
+    }
+    stop_server(&addr, join);
+}
+
+#[test]
+fn concurrent_clients_see_bit_identical_responses() {
+    let model = AdcModel::default();
+    let (addr, _handle, join) = start_server(model);
+    const THREADS: usize = 6;
+    const ROUNDS: usize = 10;
+    let spec = SweepSpec::fig5(7.0, 4);
+    let direct_summary = SweepSummary::compute(&spec, &model, 2).to_json_string().unwrap();
+    thread::scope(|s| {
+        for t in 0..THREADS {
+            let addr = addr.clone();
+            let spec = spec.clone();
+            let direct_summary = direct_summary.clone();
+            s.spawn(move || {
+                let mut client = Client::connect(&addr).expect("connect");
+                for i in 0..ROUNDS {
+                    // Interleave eval and sweep frames on one connection.
+                    let q = AdcQuery {
+                        enob: 2.0 + ((t + i) % 12) as f64,
+                        total_throughput: 1e6 * 10f64.powi((i % 4) as i32),
+                        tech_nm: 32.0,
+                        n_adcs: 1 + (t as u32 % 4),
+                    };
+                    let served = client.eval_metrics(&q, None).expect("eval");
+                    assert_eq!(served.to_bits(), model.eval(&q).to_bits(), "t={t} i={i}");
+                    if i % 3 == 0 {
+                        let (_, summary) = client.sweep(&spec, None).expect("sweep");
+                        assert_eq!(
+                            summary.to_json_string().unwrap(),
+                            direct_summary,
+                            "t={t} i={i}"
+                        );
+                    }
+                }
+            });
+        }
+    });
+    // The shared default model means every lookup after the first hits.
+    let mut client = Client::connect(&addr).unwrap();
+    let snapshot = client.metrics().unwrap();
+    assert!(snapshot.require_f64("cache.hits").unwrap() > 0.0);
+    assert!(
+        snapshot.require_f64("requests_total").unwrap() >= (THREADS * ROUNDS) as f64,
+        "{snapshot:?}"
+    );
+    assert!(snapshot.require_f64("latency.p50_s").unwrap() >= 0.0);
+    stop_server(&addr, join);
+}
+
+#[test]
+fn malformed_input_yields_typed_error_frames_not_disconnects() {
+    let (addr, _handle, join) = start_server(AdcModel::default());
+    let (mut stream, mut reader) = raw_pair(&addr);
+
+    let resp = raw_roundtrip(&mut stream, &mut reader, "{ this is not json");
+    assert_eq!(err_code(&resp), CODE_MALFORMED_JSON);
+
+    let resp = raw_roundtrip(&mut stream, &mut reader, "[1, 2, 3]");
+    assert_eq!(err_code(&resp), CODE_BAD_FRAME);
+
+    let resp = raw_roundtrip(&mut stream, &mut reader, r#"{"op": "frobnicate"}"#);
+    assert_eq!(err_code(&resp), CODE_UNKNOWN_OP);
+
+    let resp = raw_roundtrip(&mut stream, &mut reader, r#"{"op": "eval", "id": 9}"#);
+    assert_eq!(err_code(&resp), CODE_BAD_REQUEST);
+    assert_eq!(resp.get("id").and_then(Value::as_f64), Some(9.0), "id echoes on errors");
+
+    // After all that abuse the connection still serves real requests.
+    let resp = raw_roundtrip(
+        &mut stream,
+        &mut reader,
+        r#"{"op": "eval", "query": {"enob": 7, "total_throughput": 1e9}}"#,
+    );
+    assert_eq!(resp.get("ok").and_then(Value::as_bool), Some(true), "{resp:?}");
+    stop_server(&addr, join);
+}
+
+#[test]
+fn oversized_frames_are_rejected_and_the_connection_recovers() {
+    let (addr, _handle, join) = start_server(AdcModel::default());
+    let (mut stream, mut reader) = raw_pair(&addr);
+    // A single line well past the cap (sent in chunks, no newline until
+    // the end).
+    let chunk = vec![b'x'; 64 * 1024];
+    let mut sent = 0usize;
+    while sent <= MAX_FRAME_BYTES + chunk.len() {
+        stream.write_all(&chunk).unwrap();
+        sent += chunk.len();
+    }
+    stream.write_all(b"\n").unwrap();
+    stream.flush().unwrap();
+    let mut response = String::new();
+    reader.read_line(&mut response).unwrap();
+    let resp = parse_json(response.trim_end()).unwrap();
+    assert_eq!(err_code(&resp), CODE_OVERSIZED_FRAME);
+    // The tail of the oversized line was discarded; the next frame works.
+    let resp = raw_roundtrip(&mut stream, &mut reader, r#"{"op": "metrics"}"#);
+    assert_eq!(resp.get("ok").and_then(Value::as_bool), Some(true), "{resp:?}");
+    stop_server(&addr, join);
+}
+
+#[test]
+fn mid_frame_disconnect_is_a_clean_close_not_a_panic() {
+    let (addr, _handle, join) = start_server(AdcModel::default());
+    {
+        let mut stream = TcpStream::connect(&addr).unwrap();
+        stream.write_all(br#"{"op": "eval", "query": {"en"#).unwrap();
+        stream.flush().unwrap();
+        // Drop mid-frame.
+    }
+    {
+        // A second client disconnects mid-line after an oversized burst.
+        let mut stream = TcpStream::connect(&addr).unwrap();
+        stream.write_all(&vec![b'y'; 256 * 1024]).unwrap();
+        stream.flush().unwrap();
+    }
+    // Give the reader threads a moment to observe the closes.
+    thread::sleep(Duration::from_millis(200));
+    // The server survived both and still answers.
+    let mut client = Client::connect(&addr).unwrap();
+    let q = AdcQuery { enob: 7.0, total_throughput: 1e9, tech_nm: 32.0, n_adcs: 1 };
+    assert!(client.eval_metrics(&q, None).is_ok());
+    stop_server(&addr, join);
+}
+
+#[test]
+fn graceful_shutdown_drains_and_stops_accepting() {
+    let (addr, handle, join) = start_server(AdcModel::default());
+    assert!(!handle.is_shutting_down());
+    let mut client = Client::connect(&addr).unwrap();
+    client.shutdown().unwrap();
+    assert!(handle.is_shutting_down());
+    join.join().expect("serve returns after drain");
+    // The listener is gone: new connections are refused (or reset).
+    thread::sleep(Duration::from_millis(50));
+    let refused = TcpStream::connect(&addr);
+    if let Ok(stream) = refused {
+        // Some platforms accept briefly from the backlog; the socket
+        // must at least be dead (EOF on read).
+        stream.set_read_timeout(Some(Duration::from_secs(2))).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut s = stream;
+        s.write_all(b"{\"op\": \"metrics\"}\n").ok();
+        let mut line = String::new();
+        let n = reader.read_line(&mut line).unwrap_or(0);
+        assert_eq!(n, 0, "drained server must not serve: {line}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Process-level: the real binaries, end to end.
+// ---------------------------------------------------------------------------
+
+fn bin() -> &'static str {
+    env!("CARGO_BIN_EXE_cimdse")
+}
+
+/// Spawn `cimdse serve` and wait for its "listening on" line.
+fn spawn_serve_binary(extra: &[&str]) -> (Child, String) {
+    let mut child = Command::new(bin())
+        .arg("serve")
+        .args(["--addr", "127.0.0.1:0"])
+        .args(extra)
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .spawn()
+        .expect("spawn cimdse serve");
+    let stdout = child.stdout.take().expect("child stdout");
+    let mut reader = BufReader::new(stdout);
+    let mut line = String::new();
+    reader.read_line(&mut line).expect("read serve banner");
+    let addr = line
+        .split("listening on ")
+        .nth(1)
+        .and_then(|rest| rest.split_whitespace().next())
+        .unwrap_or_else(|| panic!("no address in serve banner: {line}"))
+        .to_string();
+    // Keep draining the child's stdout in the background so it can
+    // never block on a full pipe.
+    thread::spawn(move || {
+        let mut sink = String::new();
+        let _ = reader.read_to_string(&mut sink);
+    });
+    (child, addr)
+}
+
+fn run_capture(args: &[&str]) -> String {
+    let out = Command::new(bin()).args(args).output().unwrap();
+    assert!(
+        out.status.success(),
+        "cimdse {args:?} failed\nstdout: {}\nstderr: {}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    String::from_utf8_lossy(&out.stdout).into_owned()
+}
+
+#[test]
+fn serve_and_query_binaries_roundtrip_end_to_end() {
+    let (mut child, addr) = spawn_serve_binary(&[]);
+    let result = std::panic::catch_unwind(|| {
+        // Served eval output is byte-identical to the direct `model`
+        // subcommand (same default fit, shared printer, bit-hex floats
+        // on the wire).
+        let eval_args =
+            ["--enob", "7", "--throughput", "1.3e9", "--tech", "32", "--n-adcs", "8"];
+        let mut query: Vec<&str> =
+            vec!["query", "--addr", &addr, "--op", "eval"];
+        query.extend_from_slice(&eval_args);
+        let served = run_capture(&query);
+        let mut direct: Vec<&str> = vec!["model"];
+        direct.extend_from_slice(&eval_args);
+        let direct = run_capture(&direct);
+        assert_eq!(served, direct, "served eval output must match `cimdse model`");
+
+        // Served sweep summary file is byte-identical to
+        // `sweep --summary-json`.
+        let dir = std::env::temp_dir()
+            .join(format!("cimdse_serve_rt_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let served_path = dir.join("served.json");
+        let direct_path = dir.join("direct.json");
+        run_capture(&[
+            "query", "--addr", &addr, "--op", "sweep", "--spec", "dense", "--points", "5",
+            "--out", served_path.to_str().unwrap(),
+        ]);
+        run_capture(&[
+            "sweep", "--spec", "dense", "--points", "5", "--summary-json",
+            direct_path.to_str().unwrap(),
+        ]);
+        assert_eq!(
+            std::fs::read(&served_path).unwrap(),
+            std::fs::read(&direct_path).unwrap(),
+            "served summary file must be byte-identical"
+        );
+
+        // Metrics show the repeated default model hitting the cache
+        // (eval + sweep share one fingerprint).
+        let metrics = run_capture(&["query", "--addr", &addr, "--op", "metrics"]);
+        assert!(metrics.contains("cimdse service metrics"), "{metrics}");
+        let hits_line = metrics
+            .lines()
+            .find(|l| l.trim_start().starts_with("cache"))
+            .unwrap_or_else(|| panic!("no cache line: {metrics}"));
+        let hits: u64 = hits_line
+            .trim_start()
+            .trim_start_matches("cache")
+            .trim_start()
+            .split_whitespace()
+            .next()
+            .unwrap()
+            .parse()
+            .unwrap_or_else(|_| panic!("unparsable cache line: {hits_line}"));
+        assert!(hits >= 1, "repeated model must hit the cache: {hits_line}");
+
+        let _ = std::fs::remove_dir_all(&dir);
+        run_capture(&["query", "--addr", &addr, "--op", "shutdown"])
+    });
+    match result {
+        Ok(shutdown_stdout) => {
+            assert!(shutdown_stdout.contains("draining"), "{shutdown_stdout}");
+            let status = child.wait().expect("serve exits");
+            assert!(status.success(), "serve must exit 0 after graceful drain: {status:?}");
+        }
+        Err(panic) => {
+            let _ = child.kill();
+            let _ = child.wait();
+            std::panic::resume_unwind(panic);
+        }
+    }
+}
