@@ -27,7 +27,22 @@ echo "== shard/merge round-trip (3 processes vs single process, bit-identical) =
 BIN=target/release/cimdse
 SHARD_DIR=$(mktemp -d)
 SERVE_PID=""
-trap '{ [ -n "$SERVE_PID" ] && kill "$SERVE_PID" 2>/dev/null; rm -rf "$SHARD_DIR"; } || true' EXIT
+W1_PID=""
+W2_PID=""
+trap '{ for P in "$SERVE_PID" "$W1_PID" "$W2_PID"; do [ -n "$P" ] && kill "$P" 2>/dev/null; done; rm -rf "$SHARD_DIR"; } || true' EXIT
+
+# Poll a serve log for the "listening on" banner; prints the address.
+serve_addr() {
+  local log="$1" pid="$2" addr=""
+  for _ in $(seq 1 200); do
+    addr=$(sed -n 's/.*listening on \([0-9.:]*\).*/\1/p' "$log" | head -n 1)
+    [ -n "$addr" ] && { echo "$addr"; return 0; }
+    kill -0 "$pid" 2>/dev/null \
+      || { echo "ci.sh: serve died before binding" >&2; cat "$log" >&2; return 1; }
+    sleep 0.1
+  done
+  echo "ci.sh: serve never reported its address" >&2; cat "$log" >&2; return 1
+}
 SPEC_ARGS=(sweep --spec dense --points 6)
 for i in 0 1 2; do
   "$BIN" "${SPEC_ARGS[@]}" --shard "$i/3" --out "$SHARD_DIR/shard_$i.json"
@@ -52,15 +67,7 @@ echo "== serve smoke test (daemon on an ephemeral port) =="
 SERVE_LOG="$SHARD_DIR/serve.log"
 "$BIN" serve --addr 127.0.0.1:0 > "$SERVE_LOG" 2>&1 &
 SERVE_PID=$!
-ADDR=""
-for _ in $(seq 1 200); do
-  ADDR=$(sed -n 's/.*listening on \([0-9.:]*\).*/\1/p' "$SERVE_LOG" | head -n 1)
-  [ -n "$ADDR" ] && break
-  kill -0 "$SERVE_PID" 2>/dev/null \
-    || { echo "ci.sh: serve died before binding" >&2; cat "$SERVE_LOG" >&2; exit 1; }
-  sleep 0.1
-done
-[ -n "$ADDR" ] || { echo "ci.sh: serve never reported its address" >&2; cat "$SERVE_LOG" >&2; exit 1; }
+ADDR=$(serve_addr "$SERVE_LOG" "$SERVE_PID")
 echo "daemon at $ADDR"
 
 # Served eval must be byte-identical to the direct `model` subcommand.
@@ -90,6 +97,43 @@ SERVE_PID=""
 grep -q "drained cleanly" "$SERVE_LOG" \
   || { echo "ci.sh: serve log lacks graceful-drain confirmation" >&2; cat "$SERVE_LOG" >&2; exit 1; }
 echo "daemon drained cleanly (exit 0)"
+
+echo "== distributed sweep over 2 local workers (cmp vs single process) =="
+"$BIN" serve --addr 127.0.0.1:0 > "$SHARD_DIR/w1.log" 2>&1 &
+W1_PID=$!
+"$BIN" serve --addr 127.0.0.1:0 > "$SHARD_DIR/w2.log" 2>&1 &
+W2_PID=$!
+A1=$(serve_addr "$SHARD_DIR/w1.log" "$W1_PID")
+A2=$(serve_addr "$SHARD_DIR/w2.log" "$W2_PID")
+echo "workers at $A1 and $A2"
+DIST_ARGS=(sweep --spec dense --points 6 --workers "$A1,$A2" --shards 6 \
+  --out "$SHARD_DIR/dist" --summary-json "$SHARD_DIR/dist_summary.json")
+"$BIN" "${DIST_ARGS[@]}" | tee "$SHARD_DIR/dist.txt"
+"$BIN" sweep --spec dense --points 6 --summary-json "$SHARD_DIR/dist_single.json"
+cmp "$SHARD_DIR/dist_summary.json" "$SHARD_DIR/dist_single.json"
+echo "distributed summary == single-process summary (byte-identical)"
+
+# Both workers must have served at least one shard (the affinity
+# scheduler guarantees a healthy worker is never starved) — asserted
+# through each daemon's own `metrics` op.
+for A in "$A1" "$A2"; do
+  "$BIN" query --addr "$A" --op metrics | grep -Eq 'shard [1-9]' \
+    || { echo "ci.sh: worker $A served no shard requests" >&2; exit 1; }
+done
+echo "both workers served >= 1 shard (metrics op)"
+
+# Resume: with every artifact on disk, a re-run computes nothing — it
+# must succeed even though both worker addresses are now dead.
+"$BIN" query --addr "$A1" --op shutdown
+"$BIN" query --addr "$A2" --op shutdown
+wait "$W1_PID" && wait "$W2_PID" \
+  || { echo "ci.sh: a worker did not drain cleanly" >&2; exit 1; }
+W1_PID=""; W2_PID=""
+RESUME_OUT=$("$BIN" "${DIST_ARGS[@]/dist_summary/dist_summary2}")
+echo "$RESUME_OUT" | grep -q "0 computed, 6 resumed" \
+  || { echo "ci.sh: distributed resume did not skip completed shards: $RESUME_OUT" >&2; exit 1; }
+cmp "$SHARD_DIR/dist_summary.json" "$SHARD_DIR/dist_summary2.json"
+echo "distributed resume skipped all shards and merged identically"
 
 echo "== bench_serve (quick mode) -> BENCH_serve.json =="
 rm -f BENCH_serve.json

@@ -73,6 +73,7 @@ fn main() {
         // eviction, the cache's steady state under model churn.
         cache_capacity: 16,
         workers: cimdse::exec::default_workers(),
+        max_sweep_points: None,
     })
     .expect("bind bench server");
     let addr = server.local_addr().to_string();

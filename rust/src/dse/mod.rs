@@ -35,8 +35,9 @@ pub mod sweep;
 pub use accel::{AccelPoint, AccelSweepSpec, run_accel_sweep};
 pub use pareto::{StreamingFront, pareto_front};
 pub use shard::{
-    MergedSweep, ShardArtifact, ShardPlan, ShardSelector, SweepSummary, merge_shards,
-    model_fingerprint, sweep_fingerprint,
+    MergedSweep, ShardArtifact, ShardPlan, ShardSelector, SweepSummary,
+    artifact_file_name as shard_artifact_file_name, merge_shards, model_fingerprint,
+    sweep_fingerprint,
 };
 pub use sweep::SweepSpec;
 

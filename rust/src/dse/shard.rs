@@ -600,6 +600,14 @@ pub(crate) fn model_from_value(v: &Value) -> Result<AdcModel> {
     })
 }
 
+/// The on-disk file-name convention for shard `index`'s artifact —
+/// `shard_<index>.json`. One definition shared by `cimdse sweep --shard`
+/// (its default `--out`) and the distributed launcher's artifact
+/// directory, so a directory written by either is resumable by both.
+pub fn artifact_file_name(index: usize) -> String {
+    format!("shard_{index}.json")
+}
+
 /// One shard's completed work: the summary over its index sub-range plus
 /// everything needed to validate and merge it later (fingerprint, the
 /// full spec and model, the shard geometry).

@@ -5,7 +5,10 @@
 //! * `fit`     — synthesize the survey, fit the model, report coefficients.
 //! * `model`   — evaluate one ADC design point (optionally tuned).
 //! * `sweep`   — DSE over a design-point grid (native or PJRT backend);
-//!   `--shard i/N` runs one index sub-range to a resumable JSON artifact.
+//!   `--shard i/N` runs one index sub-range to a resumable JSON artifact;
+//!   `--workers host:port,...` schedules every shard across `serve`
+//!   daemons (retrying/reassigning on worker failure) and merges
+//!   bit-identically to the single-process run.
 //! * `merge-shards` — merge shard artifacts bit-identically to the
 //!   single-process streaming sweep.
 //! * `map`     — map a workload onto a RAELLA variant, report energy/area.
@@ -49,6 +52,15 @@ SUBCOMMANDS
            [--enob 7] [--tsteps 12]               dense DSE + Pareto front
            [--summary-json PATH]                  streamed fold/min-EAP/front summary
            [--shard i/N] [--out shard_i.json]     run one shard to a resumable artifact
+           [--workers HOST:PORT,... [--shards N]
+            [--out DIR] [--timeout-ms 60000]
+            [--launch-json PATH]]                 distributed sweep over serve daemons
+                                                  (resumable; summary byte-identical
+                                                  to the single-process run; the
+                                                  timeout must exceed the slowest
+                                                  shard's compute time — raise it or
+                                                  use more/smaller shards; 0 = wait
+                                                  forever)
   merge-shards FILE... [--out merged.json]
            [--allow-partial]                      merge shard artifacts (bit-identical
                                                   to the single-process sweep)
@@ -60,8 +72,11 @@ SUBCOMMANDS
   figures  [--fig 2|3|4|5|all]                    regenerate paper figures
   bench-report --path BENCH_sweep.json            validate + summarize a perf artifact
   serve    [--addr 127.0.0.1:0] [--cache 32]
-           [--n 700] [--seed 1997]                long-lived serving daemon (NDJSON
-                                                  protocol; see rust/docs/protocol.md)
+           [--n 700] [--seed 1997]
+           [--max-sweep-points N]                 long-lived serving daemon (NDJSON
+                                                  protocol; see rust/docs/protocol.md);
+                                                  sweep/shard requests over N points
+                                                  get a typed `over-budget` error
   query    --addr HOST:PORT --op eval|sweep|accel|metrics|shutdown
            [eval: --enob B --throughput F --tech 32 --n-adcs 1]
            [sweep: --spec dense|fig5 --points N --out PATH]
@@ -300,7 +315,7 @@ fn cmd_sweep_shard(
     let fingerprint = sweep_fingerprint(spec, model);
     let out = match args.opt("out") {
         Some(p) => p.to_string(),
-        None => format!("shard_{}.json", selector.index()),
+        None => cimdse::dse::shard_artifact_file_name(selector.index()),
     };
     if ShardArtifact::load_if_complete(&out, &fingerprint, &range).is_some() {
         println!(
@@ -321,6 +336,94 @@ fn cmd_sweep_shard(
         range.start,
         range.end
     );
+    Ok(())
+}
+
+/// Distributed mode of `sweep`: schedule the grid's shards across a
+/// fleet of `cimdse serve` daemons and merge the artifacts. The merged
+/// summary (and any `--summary-json` file) is byte-identical to the
+/// single-process `sweep --summary-json` over the same spec and model:
+/// the launcher sends this process's fitted model with every `shard`
+/// request, shard artifacts are bit-exact, and the merge is
+/// order-independent — so which worker computed what can never leak
+/// into the result.
+fn cmd_sweep_workers(
+    args: &Args,
+    spec: &SweepSpec,
+    model: &AdcModel,
+    workers: &str,
+) -> Result<()> {
+    use cimdse::service::{LaunchOptions, run_distributed_sweep};
+    if args.opt_or("backend", "native") != "native" {
+        return Err(Error::Config(
+            "--workers runs on the native streaming backend only (each worker daemon \
+             evaluates natively)"
+                .into(),
+        ));
+    }
+    let addrs: Vec<String> = workers
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    if addrs.is_empty() {
+        return Err(Error::Config(
+            "--workers needs at least one host:port address (comma-separated)".into(),
+        ));
+    }
+    // Default: 4 shards per worker — enough slack for the queue to
+    // balance uneven workers, small enough that redoing a lost shard is
+    // cheap. Resume requires re-running with the same shard count (the
+    // planned ranges must match the artifacts on disk).
+    let n_shards = args.usize_or("shards", 4 * addrs.len())?;
+    if n_shards == 0 {
+        return Err(Error::Config("--shards must be >= 1".into()));
+    }
+    let timeout_ms = args.u64_or("timeout-ms", 60_000)?;
+    let mut options = LaunchOptions::new(addrs, n_shards);
+    options.read_timeout =
+        (timeout_ms > 0).then(|| std::time::Duration::from_millis(timeout_ms));
+    options.out_dir = args.opt("out").map(std::path::PathBuf::from);
+    let report = run_distributed_sweep(spec, model, &options)?;
+    println!(
+        "distributed sweep: {} shards over {} workers ({} computed, {} resumed, {} \
+         reassignments; fingerprint {})",
+        report.n_shards,
+        report.workers.len(),
+        report.computed,
+        report.resumed,
+        report.retries,
+        report.merged.fingerprint
+    );
+    for w in &report.workers {
+        let latency = match (w.latency_quantile_s(0.50), w.latency_quantile_s(0.99)) {
+            (Some(p50), Some(p99)) => format!(
+                "shard latency p50 {}  p99 {}",
+                cimdse::bench_util::fmt_secs(p50),
+                cimdse::bench_util::fmt_secs(p99)
+            ),
+            _ => "no shards completed".to_string(),
+        };
+        println!(
+            "  worker {:<21}  {} shards, {} failures{}  {latency}",
+            w.addr,
+            w.shards_served,
+            w.failures,
+            if w.retired { " (retired)," } else { "," }
+        );
+    }
+    print_sweep_summary(spec, &report.merged.summary);
+    if let Some(path) = args.opt("summary-json") {
+        // The canonical summary only — byte-identical to the
+        // single-process `sweep --summary-json` (launcher observability
+        // goes to stdout / --launch-json, never into this file).
+        std::fs::write(path, report.merged.summary.to_json_string()? + "\n")?;
+        println!("wrote distributed sweep summary to {path}");
+    }
+    if let Some(path) = args.opt("launch-json") {
+        std::fs::write(path, report.to_value().to_json_string()? + "\n")?;
+        println!("wrote launch report to {path}");
+    }
     Ok(())
 }
 
@@ -371,6 +474,14 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     let model = fitted_model(args.usize_or("n", 700)?, args.u64_or("seed", 1997)?)?;
     let spec = sweep_spec_from_args(args)?;
     if let Some(shard_spec) = args.opt("shard") {
+        if args.opt("workers").is_some() {
+            return Err(Error::Config(
+                "--shard and --workers are mutually exclusive (--shard runs one \
+                 sub-range in this process; --workers schedules every shard across \
+                 serving daemons)"
+                    .into(),
+            ));
+        }
         if args.opt("summary-json").is_some() {
             return Err(Error::Config(
                 "--shard and --summary-json are mutually exclusive (a shard writes its \
@@ -379,6 +490,9 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             ));
         }
         return cmd_sweep_shard(args, &spec, &model, shard_spec);
+    }
+    if let Some(workers) = args.opt("workers") {
+        return cmd_sweep_workers(args, &spec, &model, workers);
     }
     if let Some(path) = args.opt("summary-json") {
         if args.opt_or("backend", "native") != "native" {
@@ -670,6 +784,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if cache == 0 {
         return Err(Error::Config("--cache must be >= 1".into()));
     }
+    let max_sweep_points = match args.opt("max-sweep-points") {
+        None => None,
+        Some(_) => {
+            let budget = args.usize_or("max-sweep-points", 0)?;
+            if budget == 0 {
+                return Err(Error::Config(
+                    "--max-sweep-points must be >= 1 (omit the flag for no budget)".into(),
+                ));
+            }
+            Some(budget)
+        }
+    };
     // Same default fit as `model`/`sweep`, so served responses diff
     // cleanly against the direct subcommands.
     let model = fitted_model(n, seed)?;
@@ -678,12 +804,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
         model,
         cache_capacity: cache,
         workers: cimdse::exec::default_workers(),
+        max_sweep_points,
     };
     let workers = options.workers;
+    let budget = match max_sweep_points {
+        Some(b) => format!(", budget {b} pts"),
+        None => String::new(),
+    };
     let server = cimdse::service::Server::bind(options)?;
     println!(
         "cimdse serve: listening on {} ({workers} workers, cache {cache}, model fit \
-         n={n} seed={seed})",
+         n={n} seed={seed}{budget})",
         server.local_addr()
     );
     // Scripts poll stdout for the line above; don't let it sit in the

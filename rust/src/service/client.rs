@@ -5,12 +5,13 @@
 //! (send a frame, read a line). Server-side error frames surface as
 //! [`Error::Runtime`] carrying the stable protocol code.
 
-use std::io::{BufRead, BufReader, Write};
-use std::net::TcpStream;
+use std::io::{BufRead, BufReader, ErrorKind, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
 
 use crate::adc::{AdcModel, AdcQuery};
 use crate::config::{Value, parse_json};
-use crate::dse::{SweepSpec, SweepSummary};
+use crate::dse::{ShardArtifact, ShardSelector, SweepSpec, SweepSummary};
 use crate::error::{Error, Result};
 
 use super::protocol;
@@ -22,16 +23,72 @@ pub struct Client {
 }
 
 impl Client {
-    /// Connect to a serving daemon at `addr` (e.g. `127.0.0.1:4117`).
+    /// Connect to a serving daemon at `addr` (e.g. `127.0.0.1:4117`)
+    /// with no I/O deadline (blocking reads wait forever — fine for
+    /// interactive use; automation should prefer
+    /// [`Client::connect_with_timeout`]).
     pub fn connect(addr: &str) -> Result<Client> {
-        let stream = TcpStream::connect(addr)
-            .map_err(|e| Error::Runtime(format!("query: cannot connect to {addr}: {e}")))?;
+        Client::connect_with_timeout(addr, None)
+    }
+
+    /// Connect with an I/O deadline. `timeout` bounds the TCP connect
+    /// *and* every subsequent read/write: a worker that accepts the
+    /// connection and then hangs (or stops reading) surfaces as a typed
+    /// [`Error::Runtime`] after `timeout` instead of wedging the caller
+    /// forever — the property the shard launcher relies on to reassign
+    /// work from a stuck worker. `None` means no deadline. A timed-out
+    /// client is not resynchronizable (a response may arrive later and
+    /// desync the frame stream); drop it and reconnect.
+    pub fn connect_with_timeout(addr: &str, timeout: Option<Duration>) -> Result<Client> {
+        let stream = match timeout {
+            None => TcpStream::connect(addr)
+                .map_err(|e| Error::Runtime(format!("query: cannot connect to {addr}: {e}")))?,
+            Some(t) => {
+                let resolved = addr
+                    .to_socket_addrs()
+                    .map_err(|e| Error::Runtime(format!("query: cannot resolve {addr}: {e}")))?;
+                let mut stream = None;
+                let mut last_err = None;
+                for a in resolved {
+                    match TcpStream::connect_timeout(&a, t) {
+                        Ok(s) => {
+                            stream = Some(s);
+                            break;
+                        }
+                        Err(e) => last_err = Some(e),
+                    }
+                }
+                stream.ok_or_else(|| match last_err {
+                    Some(e) => {
+                        Error::Runtime(format!("query: cannot connect to {addr}: {e}"))
+                    }
+                    None => Error::Runtime(format!(
+                        "query: {addr} resolved to no addresses"
+                    )),
+                })?
+            }
+        };
+        stream
+            .set_read_timeout(timeout)
+            .and_then(|_| stream.set_write_timeout(timeout))
+            .map_err(|e| Error::Runtime(format!("query: set timeout on {addr}: {e}")))?;
         let reader = BufReader::new(
             stream
                 .try_clone()
                 .map_err(|e| Error::Runtime(format!("query: clone stream: {e}")))?,
         );
         Ok(Client { writer: stream, reader })
+    }
+
+    /// Change the read/write deadline of an established connection
+    /// (`None` removes it). See [`Client::connect_with_timeout`] for the
+    /// semantics of a deadline that fires.
+    pub fn set_io_timeout(&self, timeout: Option<Duration>) -> Result<()> {
+        let stream = self.reader.get_ref();
+        stream
+            .set_read_timeout(timeout)
+            .and_then(|_| self.writer.set_write_timeout(timeout))
+            .map_err(|e| Error::Runtime(format!("query: set timeout: {e}")))
     }
 
     /// Send one raw frame line and read the response line (uninterpreted).
@@ -45,10 +102,17 @@ impl Client {
             .and_then(|_| self.writer.flush())
             .map_err(|e| Error::Runtime(format!("query: send failed: {e}")))?;
         let mut response = String::new();
-        let n = self
-            .reader
-            .read_line(&mut response)
-            .map_err(|e| Error::Runtime(format!("query: read failed: {e}")))?;
+        let n = self.reader.read_line(&mut response).map_err(|e| {
+            if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) {
+                Error::Runtime(
+                    "query: read timed out waiting for a response (hung worker?); \
+                     the connection is no longer usable"
+                        .into(),
+                )
+            } else {
+                Error::Runtime(format!("query: read failed: {e}"))
+            }
+        })?;
         if n == 0 {
             return Err(Error::Runtime("query: server closed the connection".into()));
         }
@@ -123,6 +187,34 @@ impl Client {
         Ok((result, summary))
     }
 
+    /// `shard` one index sub-range of a sweep remotely (the wire form of
+    /// `cimdse sweep --shard i/N`). The returned artifact has passed the
+    /// full [`ShardArtifact::from_value`] validation — fingerprint vs
+    /// embedded spec/model, planned-range agreement, and the summary
+    /// payload checksum — so a corrupted or tampered response (even a
+    /// single flipped payload bit) surfaces as a typed error here, never
+    /// as a silently skewed merge.
+    pub fn shard(
+        &mut self,
+        spec: &SweepSpec,
+        model: Option<&AdcModel>,
+        selector: ShardSelector,
+    ) -> Result<ShardArtifact> {
+        let mut map = std::collections::BTreeMap::new();
+        map.insert("op".to_string(), Value::String("shard".to_string()));
+        map.insert("spec".to_string(), spec.to_value());
+        map.insert("shard".to_string(), Value::String(selector.to_string()));
+        if let Some(m) = model {
+            map.insert("model".to_string(), protocol::model_to_value(m));
+        }
+        let result = self.call(&Value::Table(map))?;
+        let artifact = result
+            .get("artifact")
+            .ok_or_else(|| Error::Runtime("query: shard result lacks `artifact`".into()))?;
+        ShardArtifact::from_value(artifact)
+            .map_err(|e| Error::Runtime(format!("query: shard artifact rejected: {e}")))
+    }
+
     /// `accel` over a zoo workload with default knobs.
     pub fn accel(&mut self, workload: &str, model: Option<&AdcModel>) -> Result<Value> {
         let mut map = std::collections::BTreeMap::new();
@@ -170,6 +262,50 @@ pub fn into_result(response: Value) -> Result<Value> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    /// A server that accepts and never replies must not wedge a client
+    /// with a deadline: the read times out with a typed error naming the
+    /// hang (the guarantee the shard launcher's reassignment rests on).
+    #[test]
+    fn read_timeout_unwedges_a_hung_worker() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let hold = std::thread::spawn(move || {
+            // Accept, read the request, never answer; keep the socket
+            // open until the client has given up.
+            let (mut stream, _) = listener.accept().unwrap();
+            let mut buf = [0u8; 1024];
+            use std::io::Read as _;
+            let _ = stream.read(&mut buf);
+            std::thread::sleep(Duration::from_secs(2));
+        });
+        let mut client =
+            Client::connect_with_timeout(&addr, Some(Duration::from_millis(200))).unwrap();
+        let start = std::time::Instant::now();
+        let err = client.metrics().unwrap_err().to_string();
+        assert!(err.contains("timed out"), "{err}");
+        assert!(
+            start.elapsed() < Duration::from_secs(2),
+            "timeout must fire well before the worker lets go ({:?})",
+            start.elapsed()
+        );
+        hold.join().unwrap();
+    }
+
+    #[test]
+    fn connect_timeout_surfaces_refused_connections_as_typed_errors() {
+        // Bind-then-drop: the port was just free, so connecting is
+        // (near-)instantly refused rather than black-holed.
+        let addr = {
+            let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+            listener.local_addr().unwrap().to_string()
+        };
+        let err = Client::connect_with_timeout(&addr, Some(Duration::from_millis(500)))
+            .map(|_| ())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("cannot connect"), "{err}");
+    }
 
     #[test]
     fn into_result_maps_frames() {

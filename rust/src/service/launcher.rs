@@ -1,0 +1,654 @@
+//! Cross-machine sweep scale-out: a work-queue scheduler that leases
+//! shards of one sweep to `cimdse serve` workers over the `shard`
+//! protocol op, survives worker failure, and merges the artifacts
+//! bit-identically to the single-process streaming rollup.
+//!
+//! ## Scheduling
+//!
+//! [`run_distributed_sweep`] plans the grid into `n_shards` disjoint
+//! index sub-ranges ([`ShardPlan`]) and spawns one connection thread
+//! per worker address. Each thread leases shards from a shared queue
+//! with *affinity first, stealing second*: a worker prefers shards
+//! pre-assigned to it round-robin (`index % n_workers`), may always
+//! take a shard another worker already failed (its owner is suspect)
+//! or whose owner has provably started leasing (a live owner still
+//! completes what it holds), and falls back to stealing anything
+//! pending after a short grace period — so a healthy worker is never
+//! starved of its first shard by a faster peer racing it to the
+//! queue, while a dead worker's backlog drains onto the survivors
+//! within milliseconds of the first failure.
+//!
+//! ## Fault model
+//!
+//! Every way a worker can disappoint — refused connection, death
+//! mid-shard (EOF), a response that times out ([`LaunchOptions::read_timeout`]),
+//! a typed error frame (e.g. `over-budget`), or a *corrupted artifact*
+//! (the client re-validates fingerprint, planned range, and the
+//! payload checksum, so even one flipped bit is caught) — is handled
+//! the same way: the shard goes back on the queue for someone else,
+//! the worker's failure streak grows, and a worker that fails
+//! [`LaunchOptions::worker_failure_limit`] times in a row is retired.
+//! A shard that fails [`LaunchOptions::max_attempts`] times, or the
+//! retirement of the last worker with shards still pending, fails the
+//! whole launch with a typed error — a distributed sweep either
+//! produces the exact single-process bytes or says loudly why not.
+//!
+//! ## Resume
+//!
+//! With an artifact directory ([`LaunchOptions::out_dir`]), completed
+//! shards are written as `shard_<i>.json` (the `cimdse sweep --shard`
+//! convention, [`artifact_file_name`]) *before* they count as
+//! done, and a re-run probes each path with
+//! [`ShardArtifact::load_if_complete`] — same fingerprint + range ⇒
+//! skipped, exactly like the single-machine resume semantics.
+
+use std::collections::VecDeque;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::adc::AdcModel;
+use crate::config::Value;
+use crate::dse::shard::artifact_file_name;
+use crate::dse::{
+    MergedSweep, ShardArtifact, ShardPlan, ShardSelector, SweepSpec, merge_shards,
+    sweep_fingerprint,
+};
+use crate::error::{Error, Result};
+use crate::stats::quantile;
+
+use super::client::Client;
+
+/// How long a worker with an empty affinity backlog waits before
+/// stealing a pristine shard owned by a peer that has not failed yet.
+/// Long enough for every healthy peer thread to lease its first shard,
+/// short enough to be invisible next to real sweep work.
+const STEAL_GRACE: Duration = Duration::from_millis(50);
+
+/// Idle poll interval while other workers hold all remaining shards.
+const LEASE_POLL: Duration = Duration::from_millis(10);
+
+/// Configuration for [`run_distributed_sweep`].
+#[derive(Clone, Debug)]
+pub struct LaunchOptions {
+    /// Worker daemon addresses (`host:port`). Duplicates are allowed —
+    /// two entries for one daemon just open two connections.
+    pub workers: Vec<String>,
+    /// How many shards to plan the grid into. More shards than workers
+    /// (the CLI defaults to 4x) keeps the fleet load-balanced and makes
+    /// lost work cheap to redo.
+    pub n_shards: usize,
+    /// Directory for `shard_<i>.json` artifacts: written as shards
+    /// complete, probed for resume on the next run. `None` keeps
+    /// everything in memory.
+    pub out_dir: Option<PathBuf>,
+    /// Per-request I/O deadline (connect/read/write) on worker
+    /// connections; a worker that hangs past it forfeits the shard.
+    /// The protocol has no response streaming or cancellation, so this
+    /// deadline also bounds a shard's **server-side compute time**:
+    /// size it above the slowest shard (or raise `n_shards` so shards
+    /// shrink), or healthy-but-busy workers will be misdiagnosed as
+    /// hung and their still-running computations orphaned on the
+    /// worker's pool. `None` trusts workers to always answer — only
+    /// sensible interactively.
+    pub read_timeout: Option<Duration>,
+    /// A shard failing this many times (across all workers) fails the
+    /// launch.
+    pub max_attempts: usize,
+    /// Consecutive failures after which a worker is retired for the
+    /// rest of the launch.
+    pub worker_failure_limit: usize,
+}
+
+impl LaunchOptions {
+    /// Options with production-shaped defaults: a 60 s I/O deadline, a
+    /// 3-strike worker retirement, and a per-shard attempt cap sized so
+    /// every worker can strike out on a shard before the launch gives
+    /// up.
+    pub fn new(workers: Vec<String>, n_shards: usize) -> LaunchOptions {
+        let worker_failure_limit = 3;
+        LaunchOptions {
+            max_attempts: workers.len().max(1) * worker_failure_limit + 1,
+            workers,
+            n_shards,
+            out_dir: None,
+            read_timeout: Some(Duration::from_secs(60)),
+            worker_failure_limit,
+        }
+    }
+}
+
+/// Per-worker accounting, reported by [`LaunchReport::workers`].
+#[derive(Clone, Debug)]
+pub struct WorkerReport {
+    /// The worker's address as given in [`LaunchOptions::workers`].
+    pub addr: String,
+    /// Shards this worker completed successfully.
+    pub shards_served: usize,
+    /// Failed shard attempts charged to this worker (connect errors,
+    /// EOFs, timeouts, error frames, rejected artifacts).
+    pub failures: usize,
+    /// Whether the worker was retired for hitting
+    /// [`LaunchOptions::worker_failure_limit`].
+    pub retired: bool,
+    /// Wall-clock seconds per completed shard (request to validated
+    /// artifact), in completion order.
+    pub latencies_s: Vec<f64>,
+}
+
+impl WorkerReport {
+    fn new(addr: &str) -> WorkerReport {
+        WorkerReport {
+            addr: addr.to_string(),
+            shards_served: 0,
+            failures: 0,
+            retired: false,
+            latencies_s: Vec::new(),
+        }
+    }
+
+    /// Linear-interpolated latency quantile over this worker's completed
+    /// shards (`None` if it completed none).
+    pub fn latency_quantile_s(&self, q: f64) -> Option<f64> {
+        (!self.latencies_s.is_empty()).then(|| quantile(&self.latencies_s, q))
+    }
+}
+
+/// What [`run_distributed_sweep`] hands back: the merged sweep (its
+/// summary byte-identical to [`crate::dse::SweepSummary::compute`]) plus
+/// scheduler observability.
+#[derive(Clone, Debug)]
+pub struct LaunchReport {
+    /// The complete merged sweep.
+    pub merged: MergedSweep,
+    /// Per-worker accounting, in [`LaunchOptions::workers`] order.
+    pub workers: Vec<WorkerReport>,
+    /// Shards the grid was planned into.
+    pub n_shards: usize,
+    /// Shards skipped because a valid artifact was already on disk.
+    pub resumed: usize,
+    /// Shards computed by workers this run.
+    pub computed: usize,
+    /// Shard attempts that failed and were requeued onto the fleet.
+    pub retries: u64,
+}
+
+impl LaunchReport {
+    /// The report as a JSON-serializable [`Value`] (all numbers finite),
+    /// for `cimdse sweep --workers ... --launch-json`.
+    pub fn to_value(&self) -> Value {
+        let mut workers = Vec::with_capacity(self.workers.len());
+        for w in &self.workers {
+            let mut t = std::collections::BTreeMap::new();
+            t.insert("addr".to_string(), Value::String(w.addr.clone()));
+            t.insert("shards".to_string(), Value::Number(w.shards_served as f64));
+            t.insert("failures".to_string(), Value::Number(w.failures as f64));
+            t.insert("retired".to_string(), Value::Bool(w.retired));
+            if let (Some(p50), Some(p99)) =
+                (w.latency_quantile_s(0.50), w.latency_quantile_s(0.99))
+            {
+                t.insert("latency_p50_s".to_string(), Value::Number(p50));
+                t.insert("latency_p99_s".to_string(), Value::Number(p99));
+            }
+            workers.push(Value::Table(t));
+        }
+        let mut map = std::collections::BTreeMap::new();
+        map.insert("kind".to_string(), Value::String("cimdse-launch-report".to_string()));
+        map.insert("fingerprint".to_string(), Value::String(self.merged.fingerprint.clone()));
+        map.insert("points".to_string(), Value::Number(self.merged.total as f64));
+        map.insert("n_shards".to_string(), Value::Number(self.n_shards as f64));
+        map.insert("resumed".to_string(), Value::Number(self.resumed as f64));
+        map.insert("computed".to_string(), Value::Number(self.computed as f64));
+        map.insert("retries".to_string(), Value::Number(self.retries as f64));
+        map.insert("workers".to_string(), Value::Array(workers));
+        Value::Table(map)
+    }
+}
+
+/// Where shard `index`'s artifact lives under `dir`.
+pub fn artifact_path(dir: &Path, index: usize) -> PathBuf {
+    dir.join(artifact_file_name(index))
+}
+
+/// Shared scheduler state. Invariant:
+/// `completed + in_flight + pending.len() == n_shards` at every lock
+/// release, so `pending` empty + nothing in flight ⇔ all shards done.
+struct LaunchState {
+    pending: VecDeque<usize>,
+    attempts: Vec<usize>,
+    /// `leased_once[w]`: worker `w` has taken at least one lease — it is
+    /// alive, so its pristine backlog is safe to steal (a healthy owner
+    /// still completes whatever it already holds).
+    leased_once: Vec<bool>,
+    artifacts: Vec<Option<ShardArtifact>>,
+    completed: usize,
+    in_flight: usize,
+    active_workers: usize,
+    retries: u64,
+    failed: Option<String>,
+}
+
+enum Lease {
+    Shard(usize),
+    Wait,
+    Done,
+}
+
+/// Lease the next shard for worker `w`: own (round-robin) shards first;
+/// then any foreign shard that is fair game — its owner already failed
+/// an attempt, or has provably started leasing (so stealing its backlog
+/// cannot starve it of its first shard), or the [`STEAL_GRACE`]
+/// fallback has passed.
+fn lease(state: &Mutex<LaunchState>, w: usize, n_workers: usize, started: Instant) -> Lease {
+    let mut s = state.lock().unwrap();
+    if s.failed.is_some() || s.completed == s.artifacts.len() {
+        return Lease::Done;
+    }
+    let grace_over = started.elapsed() >= STEAL_GRACE;
+    let position = s.pending.iter().position(|&i| i % n_workers == w).or_else(|| {
+        s.pending.iter().position(|&i| {
+            s.attempts[i] > 0 || s.leased_once[i % n_workers] || grace_over
+        })
+    });
+    match position {
+        Some(pos) => {
+            let i = s.pending.remove(pos).expect("position is in bounds");
+            s.in_flight += 1;
+            s.leased_once[w] = true;
+            Lease::Shard(i)
+        }
+        None => Lease::Wait,
+    }
+}
+
+fn complete(state: &Mutex<LaunchState>, index: usize, artifact: ShardArtifact) {
+    let mut s = state.lock().unwrap();
+    s.in_flight -= 1;
+    debug_assert!(s.artifacts[index].is_none(), "shard {index} completed twice");
+    s.artifacts[index] = Some(artifact);
+    s.completed += 1;
+}
+
+/// Requeue a failed shard (or fail the launch once it has burned
+/// `max_attempts`).
+fn requeue(state: &Mutex<LaunchState>, index: usize, error: &Error, options: &LaunchOptions) {
+    let mut s = state.lock().unwrap();
+    s.in_flight -= 1;
+    s.retries += 1;
+    s.attempts[index] += 1;
+    if s.attempts[index] >= options.max_attempts {
+        if s.failed.is_none() {
+            s.failed = Some(format!(
+                "shard {index} failed {} attempts across the fleet; last error: {error}",
+                s.attempts[index]
+            ));
+        }
+    } else {
+        s.pending.push_back(index);
+    }
+}
+
+/// A fatal local problem (e.g. the artifact directory went read-only):
+/// no point retrying on another worker.
+fn fail_launch(state: &Mutex<LaunchState>, message: String) {
+    let mut s = state.lock().unwrap();
+    if s.failed.is_none() {
+        s.failed = Some(message);
+    }
+}
+
+/// Worker-thread exit bookkeeping; the last worker out with shards
+/// still pending turns the stall into a typed launch failure.
+fn worker_exited(state: &Mutex<LaunchState>) {
+    let mut s = state.lock().unwrap();
+    s.active_workers -= 1;
+    if s.active_workers == 0 && s.completed < s.artifacts.len() && s.failed.is_none() {
+        let remaining: Vec<String> = (0..s.artifacts.len())
+            .filter(|&i| s.artifacts[i].is_none())
+            .map(|i| i.to_string())
+            .collect();
+        s.failed = Some(format!(
+            "every worker was retired with shards {} still incomplete — workers \
+             dead/unreachable, the fleet kept returning bad artifacts, or healthy \
+             workers timed out on shards bigger than the I/O deadline allows \
+             (raise --timeout-ms or increase --shards so shards shrink)",
+            remaining.join(", ")
+        ));
+    }
+}
+
+/// One leased shard against one worker: (re)connect, request, validate.
+fn run_one(
+    client: &mut Option<Client>,
+    addr: &str,
+    spec: &SweepSpec,
+    model: &AdcModel,
+    plan: &ShardPlan,
+    fingerprint: &str,
+    index: usize,
+    options: &LaunchOptions,
+) -> Result<ShardArtifact> {
+    if client.is_none() {
+        *client = Some(Client::connect_with_timeout(addr, options.read_timeout)?);
+    }
+    let selector = ShardSelector::new(index, plan.n_shards())?;
+    let artifact = client
+        .as_mut()
+        .expect("connected above")
+        .shard(spec, Some(model), selector)?;
+    // `Client::shard` already validated the artifact against itself
+    // (fingerprint vs embedded spec/model, range vs plan, payload
+    // checksum); these two checks pin it to *this* sweep and *this*
+    // shard, so a confused worker answering for some other job is a
+    // typed failure, not a merge-time surprise.
+    if artifact.fingerprint() != fingerprint {
+        return Err(Error::Runtime(format!(
+            "worker {addr} answered shard {selector} with an artifact for a different \
+             sweep (fingerprint {}, want {fingerprint})",
+            artifact.fingerprint()
+        )));
+    }
+    if artifact.range() != plan.range(index) {
+        return Err(Error::Runtime(format!(
+            "worker {addr} answered shard {selector} with range {:?}, want {:?}",
+            artifact.range(),
+            plan.range(index)
+        )));
+    }
+    Ok(artifact)
+}
+
+fn worker_loop(
+    w: usize,
+    addr: &str,
+    spec: &SweepSpec,
+    model: &AdcModel,
+    plan: &ShardPlan,
+    fingerprint: &str,
+    options: &LaunchOptions,
+    state: &Mutex<LaunchState>,
+    report: &Mutex<WorkerReport>,
+    started: Instant,
+) {
+    let n_workers = options.workers.len();
+    let mut client: Option<Client> = None;
+    let mut consecutive = 0usize;
+    loop {
+        let index = match lease(state, w, n_workers, started) {
+            Lease::Done => break,
+            Lease::Wait => {
+                std::thread::sleep(LEASE_POLL);
+                continue;
+            }
+            Lease::Shard(i) => i,
+        };
+        let shard_started = Instant::now();
+        match run_one(&mut client, addr, spec, model, plan, fingerprint, index, options) {
+            Ok(artifact) => {
+                // Persist before counting the shard complete, so a
+                // launcher killed between the two leaves a resumable
+                // artifact rather than a phantom completion.
+                if let Some(dir) = &options.out_dir {
+                    let path = artifact_path(dir, index);
+                    if let Err(e) = artifact.write(&path.to_string_lossy()) {
+                        fail_launch(state, format!("cannot persist shard {index}: {e}"));
+                        break;
+                    }
+                }
+                let mut r = report.lock().unwrap();
+                r.shards_served += 1;
+                r.latencies_s.push(shard_started.elapsed().as_secs_f64());
+                drop(r);
+                consecutive = 0;
+                complete(state, index, artifact);
+            }
+            Err(e) => {
+                // Whatever went wrong, the connection's framing can no
+                // longer be trusted; reconnect for the next attempt.
+                client = None;
+                consecutive += 1;
+                report.lock().unwrap().failures += 1;
+                requeue(state, index, &e, options);
+                if consecutive >= options.worker_failure_limit {
+                    report.lock().unwrap().retired = true;
+                    break;
+                }
+            }
+        }
+    }
+    worker_exited(state);
+}
+
+/// Run `spec` as a distributed sweep across the worker fleet and merge
+/// the result. On success the merged summary is **byte-identical** to
+/// the single-process [`crate::dse::SweepSummary::compute`] over the
+/// same spec and model — shard artifacts are bit-exact and
+/// [`merge_shards`] is order-independent, so neither which worker
+/// computed a shard nor the order results arrived can leak into the
+/// output (asserted under every injected fault by
+/// `tests/launcher_faults.rs`).
+pub fn run_distributed_sweep(
+    spec: &SweepSpec,
+    model: &AdcModel,
+    options: &LaunchOptions,
+) -> Result<LaunchReport> {
+    if options.workers.is_empty() {
+        return Err(Error::Config(
+            "distributed sweep needs at least one worker address".into(),
+        ));
+    }
+    if options.max_attempts == 0 || options.worker_failure_limit == 0 {
+        return Err(Error::Config(
+            "max_attempts and worker_failure_limit must be >= 1".into(),
+        ));
+    }
+    let plan = ShardPlan::new(spec, options.n_shards)?;
+    let fingerprint = sweep_fingerprint(spec, model);
+    let mut artifacts: Vec<Option<ShardArtifact>> = vec![None; plan.n_shards()];
+    let mut resumed = 0usize;
+    if let Some(dir) = &options.out_dir {
+        std::fs::create_dir_all(dir).map_err(|e| {
+            Error::Config(format!("cannot create artifact dir {}: {e}", dir.display()))
+        })?;
+        for (i, slot) in artifacts.iter_mut().enumerate() {
+            let path = artifact_path(dir, i);
+            if let Some(artifact) = ShardArtifact::load_if_complete(
+                &path.to_string_lossy(),
+                &fingerprint,
+                &plan.range(i),
+            ) {
+                *slot = Some(artifact);
+                resumed += 1;
+            }
+        }
+    }
+    let pending: VecDeque<usize> =
+        (0..plan.n_shards()).filter(|&i| artifacts[i].is_none()).collect();
+    let computed = pending.len();
+    let state = Mutex::new(LaunchState {
+        pending,
+        attempts: vec![0; plan.n_shards()],
+        leased_once: vec![false; options.workers.len()],
+        artifacts,
+        completed: resumed,
+        in_flight: 0,
+        active_workers: options.workers.len(),
+        retries: 0,
+        failed: None,
+    });
+    let reports: Vec<Mutex<WorkerReport>> =
+        options.workers.iter().map(|a| Mutex::new(WorkerReport::new(a))).collect();
+    if computed > 0 {
+        let started = Instant::now();
+        std::thread::scope(|scope| {
+            for (w, addr) in options.workers.iter().enumerate() {
+                let (state, report) = (&state, &reports[w]);
+                let (plan, fingerprint) = (&plan, fingerprint.as_str());
+                scope.spawn(move || {
+                    worker_loop(
+                        w, addr, spec, model, plan, fingerprint, options, state, report,
+                        started,
+                    );
+                });
+            }
+        });
+    }
+    let state = state.into_inner().expect("no worker thread panicked");
+    if let Some(message) = state.failed {
+        return Err(Error::Runtime(format!("distributed sweep failed: {message}")));
+    }
+    debug_assert_eq!(state.completed, plan.n_shards());
+    let all: Vec<ShardArtifact> = state
+        .artifacts
+        .into_iter()
+        .map(|a| a.expect("completed launch has every artifact"))
+        .collect();
+    let merged = merge_shards(&all)?;
+    debug_assert!(merged.is_complete());
+    Ok(LaunchReport {
+        merged,
+        workers: reports
+            .into_iter()
+            .map(|r| r.into_inner().expect("no worker thread panicked"))
+            .collect(),
+        n_shards: plan.n_shards(),
+        resumed,
+        computed,
+        retries: state.retries,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifact_paths_follow_the_shard_convention() {
+        let dir = PathBuf::from("/tmp/sweep");
+        assert_eq!(artifact_path(&dir, 0), PathBuf::from("/tmp/sweep/shard_0.json"));
+        assert_eq!(artifact_path(&dir, 17), PathBuf::from("/tmp/sweep/shard_17.json"));
+    }
+
+    #[test]
+    fn options_default_attempt_cap_scales_with_the_fleet() {
+        let o = LaunchOptions::new(vec!["a:1".into(), "b:2".into()], 8);
+        assert_eq!(o.worker_failure_limit, 3);
+        assert_eq!(o.max_attempts, 7, "2 workers x 3 strikes + 1");
+        assert!(o.read_timeout.is_some());
+    }
+
+    #[test]
+    fn empty_fleet_and_zero_limits_are_typed_errors() {
+        let spec = SweepSpec {
+            enobs: vec![4.0],
+            total_throughputs: vec![1e9],
+            tech_nms: vec![32.0],
+            n_adcs: vec![1],
+        };
+        let model = AdcModel::default();
+        let err = run_distributed_sweep(&spec, &model, &LaunchOptions::new(vec![], 2));
+        assert!(matches!(err, Err(Error::Config(_))), "{err:?}");
+        let mut o = LaunchOptions::new(vec!["a:1".into()], 2);
+        o.max_attempts = 0;
+        assert!(matches!(
+            run_distributed_sweep(&spec, &model, &o),
+            Err(Error::Config(_))
+        ));
+        // Zero shards is the shard planner's typed error.
+        let o = LaunchOptions::new(vec!["a:1".into()], 0);
+        assert!(matches!(
+            run_distributed_sweep(&spec, &model, &o),
+            Err(Error::Config(_))
+        ));
+    }
+
+    #[test]
+    fn lease_prefers_affinity_then_failed_or_live_owner_then_grace() {
+        let state = Mutex::new(LaunchState {
+            pending: VecDeque::from([0, 1, 2, 3, 4, 5]),
+            attempts: vec![0; 6],
+            leased_once: vec![false; 2],
+            artifacts: vec![None; 6],
+            completed: 0,
+            in_flight: 0,
+            active_workers: 2,
+            retries: 0,
+            failed: None,
+        });
+        let fresh = Instant::now();
+        // Worker 1 of 2 owns odd indices.
+        match lease(&state, 1, 2, fresh) {
+            Lease::Shard(i) => assert_eq!(i, 1),
+            _ => panic!("own shard must lease immediately"),
+        }
+        match lease(&state, 1, 2, fresh) {
+            Lease::Shard(i) => assert_eq!(i, 3),
+            _ => panic!("own shard must lease immediately"),
+        }
+        match lease(&state, 1, 2, fresh) {
+            Lease::Shard(i) => assert_eq!(i, 5),
+            _ => panic!("own shard must lease immediately"),
+        }
+        // Only pristine shards of the never-leased worker 0 remain:
+        // inside the grace window worker 1 waits...
+        assert!(matches!(lease(&state, 1, 2, fresh), Lease::Wait));
+        // ...unless one of them has already failed once...
+        state.lock().unwrap().attempts[2] = 1;
+        match lease(&state, 1, 2, fresh) {
+            Lease::Shard(i) => assert_eq!(i, 2),
+            _ => panic!("failed foreign shard must be stealable at once"),
+        }
+        // ...or the owner is provably alive (has leased before) — then
+        // its backlog is stealable without waiting out the grace.
+        assert!(matches!(lease(&state, 1, 2, fresh), Lease::Wait));
+        state.lock().unwrap().leased_once[0] = true;
+        match lease(&state, 1, 2, fresh) {
+            Lease::Shard(i) => assert_eq!(i, 0),
+            _ => panic!("live owner's shard must be stealable"),
+        }
+        // ...and after the grace period everything pending is fair game.
+        state.lock().unwrap().leased_once[0] = false;
+        let old = Instant::now() - 10 * STEAL_GRACE;
+        match lease(&state, 1, 2, old) {
+            Lease::Shard(i) => assert_eq!(i, 4),
+            _ => panic!("post-grace steal must lease"),
+        }
+        // Everything leased: Wait while in flight, Done once complete.
+        assert!(matches!(lease(&state, 1, 2, old), Lease::Wait));
+        {
+            let mut s = state.lock().unwrap();
+            s.completed = 6;
+            s.in_flight = 0;
+        }
+        assert!(matches!(lease(&state, 1, 2, old), Lease::Done));
+    }
+
+    #[test]
+    fn requeue_respects_the_attempt_cap() {
+        let options = LaunchOptions::new(vec!["a:1".into()], 4);
+        let state = Mutex::new(LaunchState {
+            pending: VecDeque::new(),
+            attempts: vec![0, 0],
+            leased_once: vec![true],
+            artifacts: vec![None; 2],
+            completed: 0,
+            in_flight: 1,
+            active_workers: 1,
+            retries: 0,
+            failed: None,
+        });
+        let err = Error::Runtime("boom".into());
+        for _ in 0..options.max_attempts - 1 {
+            requeue(&state, 0, &err, &options);
+            let mut s = state.lock().unwrap();
+            assert_eq!(s.pending.pop_front(), Some(0), "under the cap: requeued");
+            assert!(s.failed.is_none());
+            s.in_flight += 1;
+        }
+        requeue(&state, 0, &err, &options);
+        let s = state.lock().unwrap();
+        assert!(s.pending.is_empty(), "at the cap: not requeued");
+        let msg = s.failed.as_ref().expect("launch marked failed");
+        assert!(msg.contains("shard 0") && msg.contains("boom"), "{msg}");
+    }
+}

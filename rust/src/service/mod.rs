@@ -10,12 +10,17 @@
 //! zero-dependency):
 //!
 //! * [`protocol`] — newline-delimited JSON frames over the
-//!   [`crate::config::Value`] layer: `eval`, `sweep`, `accel`,
+//!   [`crate::config::Value`] layer: `eval`, `sweep`, `shard`, `accel`,
 //!   `metrics`, `shutdown`; typed error frames with stable codes;
 //!   floats optionally bit-hex exact per the `dse::shard` convention.
 //! * [`server`] — accept loop + per-connection reader threads feeding
 //!   the one shared persistent [`crate::exec::Pool`]; graceful drain on
-//!   shutdown.
+//!   shutdown; optional `--max-sweep-points` per-request budget.
+//! * [`launcher`] — the distributed half of sweep scale-out: a
+//!   work-queue scheduler (`cimdse sweep --workers host:port,...`) that
+//!   leases shards to daemons over the `shard` op, reassigns on worker
+//!   death/timeout/corruption, resumes from on-disk artifacts, and
+//!   merges bit-identically to the single-process rollup.
 //! * [`cache`] — LRU of [`crate::adc::PreparedModel`] keyed by the
 //!   model's canonical-JSON FNV-1a fingerprint
 //!   ([`crate::dse::model_fingerprint`]), with hit/miss counters.
@@ -33,12 +38,14 @@
 
 pub mod cache;
 pub mod client;
+pub mod launcher;
 pub mod metrics;
 pub mod protocol;
 pub mod server;
 
 pub use cache::{CacheStats, PreparedCache};
 pub use client::Client;
+pub use launcher::{LaunchOptions, LaunchReport, WorkerReport, run_distributed_sweep};
 pub use metrics::ServiceMetrics;
 pub use protocol::{MAX_FRAME_BYTES, Reject, Request};
 pub use server::{ServeOptions, Server, ServerHandle};

@@ -5,7 +5,8 @@
 //!
 //! Every request is one JSON object on one line (`\n`-terminated, at
 //! most [`MAX_FRAME_BYTES`] bytes). The `op` field selects the
-//! operation (`eval`, `sweep`, `accel`, `metrics`, `shutdown`); an
+//! operation (`eval`, `sweep`, `shard`, `accel`, `metrics`,
+//! `shutdown`); an
 //! optional scalar `id` (string or number) is echoed back verbatim so
 //! pipelining clients can match responses. Responses are one JSON
 //! object per line: `{"ok": true, "op": ..., "result": {...}}` on
@@ -34,7 +35,7 @@ use std::collections::BTreeMap;
 use crate::adc::{AdcMetrics, AdcModel, AdcQuery};
 use crate::config::{Value, f64_from_bits_hex, f64_to_bits_hex};
 use crate::dse::accel::AccelSweepSpec;
-use crate::dse::{SweepSpec, shard};
+use crate::dse::{ShardPlan, ShardSelector, SweepSpec, shard};
 
 /// Hard cap on one request frame (bytes, newline excluded). A frame
 /// that grows past this yields an [`CODE_OVERSIZED_FRAME`] error frame
@@ -55,6 +56,10 @@ pub const CODE_UNKNOWN_OP: &str = "unknown-op";
 pub const CODE_BAD_REQUEST: &str = "bad-request";
 /// Error code: the request line exceeded [`MAX_FRAME_BYTES`].
 pub const CODE_OVERSIZED_FRAME: &str = "oversized-frame";
+/// Error code: the request would evaluate more grid points than the
+/// server's `--max-sweep-points` budget allows (`sweep` counts its full
+/// grid, `shard` counts only its own index sub-range).
+pub const CODE_OVER_BUDGET: &str = "over-budget";
 /// Error code: the server failed internally while serving a valid
 /// request (should not happen; kept for forward compatibility).
 pub const CODE_INTERNAL: &str = "internal";
@@ -86,6 +91,8 @@ pub enum Request {
     Eval(EvalRequest),
     /// Stream a whole sweep grid to its summary rollup.
     Sweep(SweepRequest),
+    /// Compute one shard of a sweep and return its artifact.
+    Shard(ShardRequest),
     /// Accelerator-level DSE over a workload from the zoo.
     Accel(AccelRequest),
     /// Server counters / latency quantiles / cache stats.
@@ -100,6 +107,7 @@ impl Request {
         match self {
             Request::Eval(_) => "eval",
             Request::Sweep(_) => "sweep",
+            Request::Shard(_) => "shard",
             Request::Accel(_) => "accel",
             Request::Metrics => "metrics",
             Request::Shutdown => "shutdown",
@@ -123,6 +131,20 @@ pub struct EvalRequest {
 pub struct SweepRequest {
     /// The inline sweep grid.
     pub spec: SweepSpec,
+    /// Model override; `None` uses the server's default model.
+    pub model: Option<AdcModel>,
+}
+
+/// `op: "shard"` payload — the remote form of `cimdse sweep --shard i/N`:
+/// the server runs [`crate::dse::ShardArtifact::compute`] over the
+/// selector's index sub-range and streams the whole artifact back
+/// (bit-hex payload, the exact document `--shard` writes to disk).
+#[derive(Clone, Debug)]
+pub struct ShardRequest {
+    /// The full sweep grid the shard is planned over.
+    pub spec: SweepSpec,
+    /// Which `index/n_shards` sub-range to compute.
+    pub selector: ShardSelector,
     /// Model override; `None` uses the server's default model.
     pub model: Option<AdcModel>,
 }
@@ -281,12 +303,13 @@ pub fn parse_request(v: &Value) -> (Option<String>, Result<Request, Reject>) {
     let parsed = match op.as_str() {
         "eval" => parse_eval(v),
         "sweep" => parse_sweep(v),
+        "shard" => parse_shard(v),
         "accel" => parse_accel(v),
         "metrics" => Ok(Request::Metrics),
         "shutdown" => Ok(Request::Shutdown),
         other => Err(Reject::new(
             CODE_UNKNOWN_OP,
-            format!("unknown op `{other}` (eval|sweep|accel|metrics|shutdown)"),
+            format!("unknown op `{other}` (eval|sweep|shard|accel|metrics|shutdown)"),
         )),
     };
     (Some(op), parsed)
@@ -334,6 +357,30 @@ fn parse_sweep(v: &Value) -> Result<Request, Reject> {
         ));
     }
     Ok(Request::Sweep(SweepRequest { spec, model: model_field(v)? }))
+}
+
+fn parse_shard(v: &Value) -> Result<Request, Reject> {
+    let spec_value = v
+        .get("spec")
+        .ok_or_else(|| Reject::bad("shard needs an inline `spec` object"))?;
+    let spec = SweepSpec::from_value(spec_value).map_err(|e| Reject::bad(e.to_string()))?;
+    let selector = match v.get("shard") {
+        None | Some(Value::Null) => {
+            return Err(Reject::bad(
+                "shard needs a `shard` selector string of the form `index/n_shards`",
+            ));
+        }
+        Some(Value::String(s)) => {
+            ShardSelector::parse(s).map_err(|e| Reject::bad(e.to_string()))?
+        }
+        Some(_) => {
+            return Err(Reject::bad("`shard` is not an `index/n_shards` selector string"));
+        }
+    };
+    // Plan up front so grid problems (axis-product overflow, > 2^53
+    // points) are typed rejections here, not dispatch-time surprises.
+    ShardPlan::new(&spec, selector.n_shards()).map_err(|e| Reject::bad(e.to_string()))?;
+    Ok(Request::Shard(ShardRequest { spec, selector, model: model_field(v)? }))
 }
 
 fn parse_accel(v: &Value) -> Result<Request, Reject> {
@@ -533,6 +580,68 @@ mod tests {
         assert_eq!(r.unwrap_err().code, CODE_BAD_REQUEST);
         let (_, r) = req(r#"{"op": "sweep", "spec": {"enobs": [4]}}"#);
         assert_eq!(r.unwrap_err().code, CODE_BAD_REQUEST);
+    }
+
+    #[test]
+    fn shard_parses_selector_spec_and_model() {
+        let (op, r) = req(
+            r#"{"op": "shard", "shard": "1/3", "spec": {"enobs": [4, 8], "total_throughputs":
+                [1e9], "tech_nms": [32], "n_adcs": [1, 2]}}"#,
+        );
+        assert_eq!(op.as_deref(), Some("shard"));
+        match r.unwrap() {
+            Request::Shard(s) => {
+                assert_eq!((s.selector.index(), s.selector.n_shards()), (1, 3));
+                assert_eq!(s.spec.len(), 4);
+                assert!(s.model.is_none());
+            }
+            other => panic!("wrong request: {other:?}"),
+        }
+        // An explicit model rides along in the canonical bit-hex shape.
+        let model = AdcModel { area_offset_decades: 0.5, ..AdcModel::default() };
+        let frame = format!(
+            r#"{{"op": "shard", "shard": "0/1", "spec": {{"enobs": [4], "total_throughputs":
+                [1e9], "tech_nms": [32], "n_adcs": [1]}}, "model": {}}}"#,
+            model_to_value(&model).to_json_string().unwrap()
+        );
+        match req(&frame).1.unwrap() {
+            Request::Shard(s) => {
+                let got = s.model.expect("model field parses");
+                assert_eq!(
+                    crate::dse::model_fingerprint(&got),
+                    crate::dse::model_fingerprint(&model)
+                );
+            }
+            other => panic!("wrong request: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn shard_rejections_are_typed() {
+        let spec = r#""spec": {"enobs": [4], "total_throughputs": [1e9], "tech_nms": [32],
+            "n_adcs": [1]}"#;
+        for (text, needle) in [
+            (format!(r#"{{"op": "shard", {spec}}}"#), "selector"),
+            (r#"{"op": "shard", "shard": "0/2"}"#.to_string(), "spec"),
+            (format!(r#"{{"op": "shard", "shard": 3, {spec}}}"#), "selector"),
+            (format!(r#"{{"op": "shard", "shard": "junk", {spec}}}"#), "junk"),
+            (format!(r#"{{"op": "shard", "shard": "0/0", {spec}}}"#), "shard count"),
+            (format!(r#"{{"op": "shard", "shard": "3/2", {spec}}}"#), "out of range"),
+            (
+                format!(r#"{{"op": "shard", "shard": "0/2", {spec}, "model": {{"coefs": [1]}}}}"#),
+                "11",
+            ),
+            (
+                r#"{"op": "shard", "shard": "0/2", "spec": {"enobs": [4]}}"#.to_string(),
+                "n_adcs",
+            ),
+        ] {
+            let (op, r) = req(&text);
+            assert_eq!(op.as_deref(), Some("shard"), "{text}");
+            let e = r.expect_err(&text);
+            assert_eq!(e.code, CODE_BAD_REQUEST, "{text}");
+            assert!(e.message.contains(needle), "{text}: {}", e.message);
+        }
     }
 
     #[test]

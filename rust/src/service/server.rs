@@ -6,7 +6,8 @@
 //! One nonblocking accept loop (the thread that called
 //! [`Server::serve`]) spawns one reader thread per connection. Reader
 //! threads parse frames and dispatch them; `eval` answers on the
-//! connection thread (the work is tiny), while `sweep`/`accel` route
+//! connection thread (the work is tiny), while `sweep`/`shard`/`accel`
+//! route
 //! through the process-wide [`crate::exec::Pool::global`] — concurrent
 //! sweeps queue on the pool's broadcast slot first-come first-served,
 //! so the daemon never oversubscribes the machine no matter how many
@@ -32,16 +33,16 @@ use std::time::{Duration, Instant};
 
 use crate::adc::{AdcModel, PreparedModel};
 use crate::config::{Value, parse_json};
-use crate::dse::{SweepSummary, model_fingerprint};
+use crate::dse::{ShardArtifact, ShardPlan, SweepSummary, model_fingerprint};
 use crate::error::{Error, Result};
 use crate::exec::default_workers;
 
 use super::cache::PreparedCache;
 use super::metrics::ServiceMetrics;
 use super::protocol::{
-    AccelRequest, CODE_BAD_REQUEST, CODE_MALFORMED_JSON, CODE_OVERSIZED_FRAME, EvalRequest,
-    MAX_FRAME_BYTES, Reject, Request, SweepRequest, error_frame, fnum, frame_id,
-    metrics_to_value, ok_frame, parse_request,
+    AccelRequest, CODE_BAD_REQUEST, CODE_INTERNAL, CODE_MALFORMED_JSON, CODE_OVER_BUDGET,
+    CODE_OVERSIZED_FRAME, EvalRequest, MAX_FRAME_BYTES, Reject, Request, ShardRequest,
+    SweepRequest, error_frame, fnum, frame_id, metrics_to_value, ok_frame, parse_request,
 };
 
 /// Read timeout of connection sockets — the upper bound on how stale
@@ -65,6 +66,12 @@ pub struct ServeOptions {
     /// else routes through the shared pool, whose fixed width governs
     /// actual parallelism).
     pub workers: usize,
+    /// Per-request evaluation budget (`cimdse serve --max-sweep-points`):
+    /// a `sweep` whose grid, or a `shard` whose index sub-range, exceeds
+    /// this many points is answered with a typed
+    /// [`CODE_OVER_BUDGET`] error frame before any evaluation happens.
+    /// `None` accepts any size (the trusted-operator default).
+    pub max_sweep_points: Option<usize>,
 }
 
 impl Default for ServeOptions {
@@ -74,6 +81,7 @@ impl Default for ServeOptions {
             model: AdcModel::default(),
             cache_capacity: 32,
             workers: default_workers(),
+            max_sweep_points: None,
         }
     }
 }
@@ -82,6 +90,7 @@ struct ServerShared {
     default_model: AdcModel,
     default_fingerprint: String,
     workers: usize,
+    max_sweep_points: Option<usize>,
     cache: std::sync::Mutex<PreparedCache>,
     metrics: ServiceMetrics,
     shutdown: AtomicBool,
@@ -131,6 +140,7 @@ impl Server {
             default_fingerprint: model_fingerprint(&options.model),
             default_model: options.model,
             workers: options.workers.max(1),
+            max_sweep_points: options.max_sweep_points,
             cache: std::sync::Mutex::new(PreparedCache::new(options.cache_capacity)),
             metrics: ServiceMetrics::new(),
             shutdown: AtomicBool::new(false),
@@ -416,10 +426,33 @@ fn cache_value(fingerprint: &str, hit: bool) -> Value {
     Value::Table(map)
 }
 
+/// Enforce `--max-sweep-points`: `points` is what this request would
+/// actually evaluate (a `sweep`'s full grid; a `shard`'s own sub-range,
+/// so a sharded fleet can stay under per-worker budgets even when the
+/// full grid is over). Exactly-at-budget is accepted; one point over is
+/// a typed [`CODE_OVER_BUDGET`] rejection.
+fn check_budget(
+    shared: &ServerShared,
+    points: usize,
+    what: &str,
+) -> std::result::Result<(), Reject> {
+    match shared.max_sweep_points {
+        Some(budget) if points > budget => Err(Reject::new(
+            CODE_OVER_BUDGET,
+            format!(
+                "{what} would evaluate {points} grid points, over this server's \
+                 --max-sweep-points budget of {budget}"
+            ),
+        )),
+        _ => Ok(()),
+    }
+}
+
 fn dispatch(request: &Request, shared: &ServerShared) -> std::result::Result<Value, Reject> {
     match request {
         Request::Eval(req) => dispatch_eval(req, shared),
         Request::Sweep(req) => dispatch_sweep(req, shared),
+        Request::Shard(req) => dispatch_shard(req, shared),
         Request::Accel(req) => dispatch_accel(req, shared),
         Request::Metrics => {
             let cache = shared.cache.lock().unwrap().stats();
@@ -463,6 +496,7 @@ fn dispatch_eval(req: &EvalRequest, shared: &ServerShared) -> std::result::Resul
 }
 
 fn dispatch_sweep(req: &SweepRequest, shared: &ServerShared) -> std::result::Result<Value, Reject> {
+    check_budget(shared, req.spec.len(), "sweep")?;
     let (prepared, fingerprint, hit) = lookup_model(shared, req.model.as_ref());
     // The streamed rollup over the shared pool — the identical fold the
     // CLI's `sweep --summary-json` runs, so the summary payload (bit-hex
@@ -471,6 +505,31 @@ fn dispatch_sweep(req: &SweepRequest, shared: &ServerShared) -> std::result::Res
     let mut map = std::collections::BTreeMap::new();
     map.insert("points".to_string(), Value::Number(summary.count() as f64));
     map.insert("summary".to_string(), summary.to_value());
+    map.insert("cache".to_string(), cache_value(&fingerprint, hit));
+    Ok(Value::Table(map))
+}
+
+fn dispatch_shard(req: &ShardRequest, shared: &ServerShared) -> std::result::Result<Value, Reject> {
+    // The plan was validated at parse time; re-deriving it here is cheap
+    // (two divisions) and keeps dispatch self-contained.
+    let plan = ShardPlan::new(&req.spec, req.selector.n_shards())
+        .map_err(|e| Reject::new(CODE_BAD_REQUEST, e.to_string()))?;
+    check_budget(shared, plan.range(req.selector.index()).len(), "shard")?;
+    let (prepared, fingerprint, hit) = lookup_model(shared, req.model.as_ref());
+    // The identical computation `cimdse sweep --shard i/N` runs locally,
+    // over the shared pool — the artifact payload (bit-hex floats,
+    // summary checksum, embedded spec+model) is byte-identical to what
+    // that subcommand writes to disk, so a launcher can persist it
+    // verbatim and `merge_shards` cannot tell the difference.
+    let artifact =
+        ShardArtifact::compute(&req.spec, prepared.model(), req.selector, shared.workers)
+            .map_err(|e| Reject::new(CODE_INTERNAL, e.to_string()))?;
+    let mut map = std::collections::BTreeMap::new();
+    map.insert(
+        "points".to_string(),
+        Value::Number(artifact.summary().count() as f64),
+    );
+    map.insert("artifact".to_string(), artifact.to_value());
     map.insert("cache".to_string(), cache_value(&fingerprint, hit));
     Ok(Value::Table(map))
 }
@@ -517,11 +576,16 @@ mod tests {
     use super::*;
 
     fn shared_for_test() -> ServerShared {
+        shared_with_budget(None)
+    }
+
+    fn shared_with_budget(max_sweep_points: Option<usize>) -> ServerShared {
         let model = AdcModel::default();
         ServerShared {
             default_fingerprint: model_fingerprint(&model),
             default_model: model,
             workers: 2,
+            max_sweep_points,
             cache: std::sync::Mutex::new(PreparedCache::new(4)),
             metrics: ServiceMetrics::new(),
             shutdown: AtomicBool::new(false),
@@ -592,6 +656,77 @@ mod tests {
             .to_json_string()
             .unwrap();
         assert_eq!(served, direct, "served sweep summary must be byte-identical");
+    }
+
+    #[test]
+    fn shard_frame_artifact_is_byte_identical_to_local_compute() {
+        let shared = shared_for_test();
+        let spec = crate::dse::SweepSpec {
+            enobs: vec![4.0, 8.0, 12.0],
+            total_throughputs: vec![1e8, 1e9],
+            tech_nms: vec![32.0],
+            n_adcs: vec![1, 4],
+        };
+        let spec_json = spec.to_value().to_json_string().unwrap();
+        for i in 0..3usize {
+            let frame = format!(r#"{{"op": "shard", "shard": "{i}/3", "spec": {spec_json}}}"#);
+            let result = ok_result(&shared, &frame);
+            let served = result.get("artifact").unwrap().to_json_string().unwrap();
+            let direct = ShardArtifact::compute(
+                &spec,
+                &shared.default_model,
+                crate::dse::ShardSelector::new(i, 3).unwrap(),
+                2,
+            )
+            .unwrap()
+            .to_value()
+            .to_json_string()
+            .unwrap();
+            assert_eq!(served, direct, "shard {i}/3 must serialize byte-identically");
+            // And the served payload survives the full artifact validator
+            // (fingerprint, planned range, summary checksum).
+            let back = ShardArtifact::from_value(result.get("artifact").unwrap()).unwrap();
+            assert_eq!(back.summary().count(), result.require_usize("points").unwrap());
+        }
+    }
+
+    #[test]
+    fn sweep_and_shard_budget_boundary_is_exact() {
+        // dense-ish spec: 2 x 2 x 1 x 2 = 8 points; shards of 8/2 = 4.
+        let spec = crate::dse::SweepSpec {
+            enobs: vec![4.0, 8.0],
+            total_throughputs: vec![1e8, 1e9],
+            tech_nms: vec![32.0],
+            n_adcs: vec![1, 4],
+        };
+        let spec_json = spec.to_value().to_json_string().unwrap();
+        let sweep = format!(r#"{{"op": "sweep", "spec": {spec_json}}}"#);
+        let half = format!(r#"{{"op": "shard", "shard": "0/2", "spec": {spec_json}}}"#);
+        let whole = format!(r#"{{"op": "shard", "shard": "0/1", "spec": {spec_json}}}"#);
+
+        // Budget == the evaluated size: accepted, bit for bit.
+        let shared = shared_with_budget(Some(8));
+        ok_result(&shared, &sweep);
+        ok_result(&shared, &whole);
+        ok_result(&shared, &half);
+
+        // One point under the grid: the whole sweep (and the whole-grid
+        // shard) is rejected with the stable code, but a shard whose own
+        // sub-range fits is still served — budgets bound what a request
+        // evaluates, not the grid it is planned over.
+        let shared = shared_with_budget(Some(7));
+        assert_eq!(err_code(&shared, &sweep), CODE_OVER_BUDGET);
+        assert_eq!(err_code(&shared, &whole), CODE_OVER_BUDGET);
+        ok_result(&shared, &half);
+
+        // Budget below the half-shard too: everything sweep-shaped is
+        // rejected, eval is untouched.
+        let shared = shared_with_budget(Some(3));
+        assert_eq!(err_code(&shared, &half), CODE_OVER_BUDGET);
+        ok_result(
+            &shared,
+            r#"{"op": "eval", "query": {"enob": 7, "total_throughput": 1e9}}"#,
+        );
     }
 
     #[test]

@@ -1,0 +1,110 @@
+//! Corpus-driven protocol contract: every frame in
+//! `tests/protocol_corpus.json` is sent verbatim over a real socket to
+//! a live server (running with the corpus's `--max-sweep-points`
+//! budget) and must earn exactly the stable error code the corpus
+//! pins — or be accepted, for the budget-boundary cases. One
+//! connection carries the whole corpus, so the suite also proves that
+//! no amount of consecutive abuse costs a client its connection.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use cimdse::adc::AdcModel;
+use cimdse::config::{Value, parse_json};
+use cimdse::service::{Client, MAX_FRAME_BYTES, ServeOptions, Server};
+
+#[test]
+fn corpus_frames_earn_their_exact_codes_over_a_real_socket() {
+    let corpus_text = std::fs::read_to_string(concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/tests/protocol_corpus.json"
+    ))
+    .expect("read protocol corpus");
+    let corpus = parse_json(&corpus_text).expect("corpus parses");
+    assert_eq!(corpus.require_usize("schema").unwrap(), 1);
+    let budget = corpus.require_usize("server.max_sweep_points").unwrap();
+
+    let server = Server::bind(ServeOptions {
+        addr: "127.0.0.1:0".to_string(),
+        model: AdcModel::default(),
+        cache_capacity: 4,
+        workers: 2,
+        max_sweep_points: Some(budget),
+    })
+    .expect("bind");
+    let addr = server.local_addr().to_string();
+    let handle = server.handle();
+    let join = std::thread::spawn(move || server.serve().expect("serve"));
+
+    let stream = TcpStream::connect(&addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+
+    let cases = corpus.get("cases").and_then(Value::as_array).expect("corpus has cases");
+    assert!(cases.len() >= 20, "the corpus should stay substantial ({} cases)", cases.len());
+    let mut expected_error_frames = 0u64;
+    for case in cases {
+        let name = case.require_str("name").unwrap();
+        let mut frame = case.require_str("frame").unwrap().to_string();
+        if let Some(pad) = case.get("pad_to").and_then(Value::as_f64) {
+            frame = frame.replace("@PAD@", &"x".repeat(pad as usize));
+            assert!(
+                frame.len() > MAX_FRAME_BYTES,
+                "{name}: padded frame must exceed the cap ({} bytes)",
+                frame.len()
+            );
+        }
+        assert!(!frame.contains('\n'), "{name}: corpus frames are single lines");
+        writer.write_all(frame.as_bytes()).unwrap();
+        writer.write_all(b"\n").unwrap();
+        writer.flush().unwrap();
+        let mut line = String::new();
+        let n = reader.read_line(&mut line).unwrap();
+        assert!(n > 0, "{name}: the server must answer, never disconnect");
+        let resp = parse_json(line.trim_end())
+            .unwrap_or_else(|e| panic!("{name}: unparsable response `{line}`: {e}"));
+        match case.require_str("expect").unwrap() {
+            "ok" => {
+                assert_eq!(
+                    resp.get("ok").and_then(Value::as_bool),
+                    Some(true),
+                    "{name}: expected acceptance, got {line}"
+                );
+            }
+            code => {
+                expected_error_frames += 1;
+                assert_eq!(
+                    resp.get("ok").and_then(Value::as_bool),
+                    Some(false),
+                    "{name}: expected rejection, got {line}"
+                );
+                assert_eq!(
+                    resp.require_str("error.code").unwrap(),
+                    code,
+                    "{name}: wrong code in {line}"
+                );
+            }
+        }
+    }
+
+    // The same connection still serves, and the server counted exactly
+    // one error frame per rejected corpus case.
+    writer.write_all(b"{\"op\": \"metrics\"}\n").unwrap();
+    writer.flush().unwrap();
+    let mut line = String::new();
+    assert!(reader.read_line(&mut line).unwrap() > 0);
+    let resp = parse_json(line.trim_end()).unwrap();
+    assert_eq!(resp.get("ok").and_then(Value::as_bool), Some(true), "{line}");
+    assert_eq!(
+        resp.require_f64("result.error_frames").unwrap(),
+        expected_error_frames as f64,
+        "{line}"
+    );
+
+    let mut client = Client::connect(&addr).unwrap();
+    client.shutdown().unwrap();
+    drop(handle);
+    join.join().expect("server drains cleanly");
+}

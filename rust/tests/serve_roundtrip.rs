@@ -18,7 +18,7 @@ use std::time::Duration;
 
 use cimdse::adc::{AdcModel, AdcQuery};
 use cimdse::config::{Value, parse_json};
-use cimdse::dse::{SweepSpec, SweepSummary};
+use cimdse::dse::{ShardArtifact, ShardSelector, SweepSpec, SweepSummary, merge_shards};
 use cimdse::service::protocol::{
     CODE_BAD_FRAME, CODE_BAD_REQUEST, CODE_MALFORMED_JSON, CODE_OVERSIZED_FRAME,
     CODE_UNKNOWN_OP, MAX_FRAME_BYTES,
@@ -33,6 +33,7 @@ fn start_server(model: AdcModel) -> (String, ServerHandle, thread::JoinHandle<()
         model,
         cache_capacity: 8,
         workers: 2,
+        max_sweep_points: None,
     })
     .expect("bind");
     let addr = server.local_addr().to_string();
@@ -122,6 +123,39 @@ fn served_sweep_summary_is_byte_identical_to_direct_rollup() {
         assert_eq!(
             result.get("summary").unwrap().to_json_string().unwrap(),
             direct.to_value().to_json_string().unwrap()
+        );
+    }
+    stop_server(&addr, join);
+}
+
+#[test]
+fn served_shard_artifacts_merge_bit_identically_over_the_wire() {
+    let model = AdcModel::default();
+    let (addr, _handle, join) = start_server(model);
+    let mut client = Client::connect(&addr).unwrap();
+    let spec = small_spec();
+    let tuned = AdcModel { energy_offset_decades: 0.125, ..model };
+    for m in [model, tuned] {
+        let mut served = Vec::new();
+        for i in 0..3usize {
+            let selector = ShardSelector::new(i, 3).unwrap();
+            let artifact = client.shard(&spec, Some(&m), selector).unwrap();
+            // Byte-identical to the artifact `sweep --shard i/3` would
+            // write locally for the same spec and model.
+            let direct = ShardArtifact::compute(&spec, &m, selector, 2).unwrap();
+            assert_eq!(
+                artifact.to_json_string().unwrap(),
+                direct.to_json_string().unwrap(),
+                "served shard {i}/3 must be byte-identical to local compute"
+            );
+            served.push(artifact);
+        }
+        // And the served set merges to the exact single-process rollup.
+        let merged = merge_shards(&served).unwrap();
+        assert!(merged.is_complete());
+        assert_eq!(
+            merged.summary.to_json_string().unwrap(),
+            SweepSummary::compute(&spec, &m, 4).to_json_string().unwrap()
         );
     }
     stop_server(&addr, join);
