@@ -8,7 +8,7 @@
 PYTHON ?= python3
 ARTIFACTS_DIR ?= artifacts
 
-.PHONY: artifacts build test ci clean-artifacts
+.PHONY: artifacts build test lint ci clean-artifacts
 
 ## Lower the JAX graphs to $(ARTIFACTS_DIR)/*.hlo.txt + manifest.json.
 artifacts:
@@ -29,6 +29,10 @@ build:
 ## Tier-1 tests (ROADMAP.md's verify line).
 test:
 	cd rust && cargo build --release && cargo test -q
+
+## Static invariant checks (rules + suppressions: rust/docs/lints.md).
+lint:
+	cd rust && cargo run --quiet --release -- lint .
 
 ## Full CI: tier-1 + bench/example compile checks + shard and serve
 ## smoke tests + perf artifacts.

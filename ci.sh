@@ -11,6 +11,14 @@ cd "$(dirname "$0")/rust"
 echo "== cargo build --release =="
 cargo build --release
 
+echo "== cimdse lint (static invariant checks, hard fail) =="
+# Runs right after the build so invariant violations surface even when a
+# later stage is skipped. Rules + suppression syntax: rust/docs/lints.md.
+target/release/cimdse lint .
+# --json must emit a parsable report with the same zero findings.
+target/release/cimdse lint --json . | grep -q '"findings": \[\]' \
+  || { echo "ci.sh: lint --json did not report an empty findings array" >&2; exit 1; }
+
 echo "== cargo test -q =="
 cargo test -q
 
@@ -149,5 +157,32 @@ echo "== validate BENCH_sweep.json =="
 # Hard gate: a missing or malformed perf artifact fails CI.
 test -s BENCH_sweep.json || { echo "ci.sh: BENCH_sweep.json missing or empty" >&2; exit 1; }
 cargo run --quiet --release -- bench-report --path BENCH_sweep.json
+
+echo "== miri (nightly-only, auto-skips when the toolchain is absent) =="
+# Miri interprets the exec unit tests (the crate's only unsafe code:
+# the chunk-claim fast path) and catches UB that normal tests cannot.
+if command -v rustup >/dev/null 2>&1 \
+   && rustup toolchain list 2>/dev/null | grep -q nightly \
+   && rustup component list --toolchain nightly 2>/dev/null \
+      | grep -q 'miri.*(installed)'; then
+  cargo +nightly miri test --lib exec
+else
+  echo "ci.sh: SKIP miri — needs rustup + a nightly toolchain with the miri component"
+  echo "       (install: rustup toolchain install nightly && rustup +nightly component add miri)"
+fi
+
+echo "== ThreadSanitizer (nightly-only, auto-skips when unavailable) =="
+# TSan instruments the serve round-trip test, the most concurrent path
+# (daemon threads + client connections over one state mutex).
+if command -v rustup >/dev/null 2>&1 \
+   && rustup toolchain list 2>/dev/null | grep -q nightly \
+   && rustup component list --toolchain nightly 2>/dev/null \
+      | grep -q 'rust-src.*(installed)'; then
+  RUSTFLAGS="-Zsanitizer=thread" cargo +nightly test -Z build-std \
+    --target "$(rustc -vV | sed -n 's/^host: //p')" --test serve_roundtrip
+else
+  echo "ci.sh: SKIP tsan — needs rustup + a nightly toolchain with rust-src"
+  echo "       (install: rustup toolchain install nightly && rustup +nightly component add rust-src)"
+fi
 
 echo "ci.sh: all green"

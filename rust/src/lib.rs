@@ -38,6 +38,10 @@
 //!   tables/CSV/ASCII plots, property testing, RNG/log-space helpers)
 //!   hand-rolled because the offline registry carries no tokio / clap /
 //!   serde / criterion / proptest.
+//! * [`lint`] — `cimdse lint`, the zero-dependency static checker that
+//!   machine-enforces the crate's hand-maintained contracts (SAFETY
+//!   audits, error-code registry, float display, mutex-hold, determinism
+//!   and dependency hygiene; see rust/docs/lints.md).
 //!
 //! See DESIGN.md for the experiment index mapping every figure of the paper
 //! to a bench target, and EXPERIMENTS.md for measured results.
@@ -52,6 +56,7 @@ pub mod dse;
 pub mod energy;
 pub mod error;
 pub mod exec;
+pub mod lint;
 pub mod mapper;
 pub mod report;
 pub mod runtime;

@@ -1,0 +1,115 @@
+//! `cimdse lint` — a zero-dependency invariant checker for the
+//! hand-enforced contracts this crate relies on.
+//!
+//! The crate deliberately carries no external dependencies, which means
+//! several correctness contracts that `clippy` plugins or proc-macro
+//! frameworks would normally police are enforced by convention instead:
+//! every `unsafe` block carries a `// SAFETY:` audit, the NDJSON error
+//! codes stay in lock-step across `protocol.rs` / `docs/protocol.md` /
+//! `tests/protocol_corpus.json`, floats never hit `{}`-style lossy
+//! display in serialization paths, mutex guards never span I/O, and
+//! fingerprinted paths never consult wall clocks or unordered maps.
+//! This module turns those conventions into machine-checked rules built
+//! on a small lexical scanner ([`scanner`]) — no `syn`, no proc-macros,
+//! no new dependencies.
+//!
+//! Rules are individually suppressible at the offending line with
+//! `// lint:allow(<rule>) — reason` (see `rust/docs/lints.md`); every
+//! rule ships with known-bad/known-good fixtures under
+//! `tests/lint_fixtures/` exercised by `tests/lint_selfcheck.rs`.
+
+pub mod report;
+pub mod rules;
+pub mod scanner;
+
+use std::path::{Path, PathBuf};
+
+use crate::error::Result;
+use self::scanner::ScannedFile;
+
+/// One lint finding at a specific file/line.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Finding {
+    /// Stable rule name, e.g. `unsafe-audit`.
+    pub rule: &'static str,
+    /// Path relative to the lint root, `/`-separated.
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// Human-readable description of the violation.
+    pub message: String,
+}
+
+/// Everything a rule gets to look at.
+pub struct Context {
+    /// The lint root (a crate directory: contains `src/`, `Cargo.toml`).
+    pub root: PathBuf,
+    /// All scanned `.rs` files under `src/`, `tests/`, `benches/`.
+    pub files: Vec<ScannedFile>,
+}
+
+impl Context {
+    /// The scanned file at `rel`, if present in this tree.
+    pub fn file(&self, rel: &str) -> Option<&ScannedFile> {
+        self.files.iter().find(|f| f.rel == rel)
+    }
+}
+
+/// A named, individually-suppressible lint rule.
+pub trait Rule {
+    /// Stable kebab-case name used in reports and `lint:allow(...)`.
+    fn name(&self) -> &'static str;
+    /// One-line description for `--json` output and docs.
+    fn description(&self) -> &'static str;
+    /// Append findings for `ctx` to `out`.
+    fn check(&self, ctx: &Context, out: &mut Vec<Finding>);
+}
+
+/// All rules, in report order.
+pub fn all_rules() -> Vec<Box<dyn Rule>> {
+    vec![
+        Box::new(rules::unsafe_audit::UnsafeAudit),
+        Box::new(rules::error_codes::ErrorCodeRegistry),
+        Box::new(rules::float_display::FloatDisplay),
+        Box::new(rules::mutex_hold::MutexHold),
+        Box::new(rules::determinism::Determinism),
+        Box::new(rules::dep_hygiene::DepHygiene),
+    ]
+}
+
+/// The stable rule-name list (for docs and the self-check).
+pub fn rule_names() -> Vec<&'static str> {
+    all_rules().iter().map(|r| r.name()).collect()
+}
+
+/// Result of linting one tree.
+pub struct LintReport {
+    /// Lint root the report was produced from.
+    pub root: PathBuf,
+    /// Number of `.rs` files scanned.
+    pub files_scanned: usize,
+    /// All findings, sorted by (file, line, rule, message).
+    pub findings: Vec<Finding>,
+}
+
+/// Scan `root` and run every rule.
+pub fn lint_root(root: &Path) -> Result<LintReport> {
+    let files = scanner::scan_root(root)?;
+    let files_scanned = files.len();
+    let ctx = Context {
+        root: root.to_path_buf(),
+        files,
+    };
+    let mut findings = Vec::new();
+    for rule in all_rules() {
+        rule.check(&ctx, &mut findings);
+    }
+    findings.sort_by(|a, b| {
+        (&a.file, a.line, a.rule, &a.message).cmp(&(&b.file, b.line, b.rule, &b.message))
+    });
+    Ok(LintReport {
+        root: root.to_path_buf(),
+        files_scanned,
+        findings,
+    })
+}

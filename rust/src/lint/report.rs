@@ -1,0 +1,81 @@
+//! Rendering for [`LintReport`](crate::lint::LintReport): the
+//! `file:line: [rule] message` text form and a schema-stable JSON form
+//! built on [`config::Value`](crate::config::Value) so `--json` output
+//! round-trips through the crate's own parser.
+
+use std::collections::BTreeMap;
+
+use crate::config::Value;
+use crate::lint::{LintReport, all_rules};
+
+/// JSON schema version of [`to_json_value`]. Bump only on breaking
+/// shape changes; `tests/lint_selfcheck.rs` pins the current shape.
+pub const JSON_SCHEMA_VERSION: f64 = 1.0;
+
+/// Plain-text report: one `file:line: [rule] message` line per finding
+/// plus a trailing summary line.
+pub fn render_text(report: &LintReport) -> String {
+    let mut out = String::new();
+    for f in &report.findings {
+        out.push_str(&format!("{}:{}: [{}] {}\n", f.file, f.line, f.rule, f.message));
+    }
+    out.push_str(&format!(
+        "lint: {} finding(s) across {} file(s) scanned\n",
+        report.findings.len(),
+        report.files_scanned
+    ));
+    out
+}
+
+/// Structured report for `cimdse lint --json`.
+///
+/// Shape (schema 1):
+/// `{schema, root, files_scanned, rules: [{name, description}],`
+/// `findings: [{file, line, rule, message}]}`.
+pub fn to_json_value(report: &LintReport) -> Value {
+    let mut top = BTreeMap::new();
+    top.insert("schema".to_string(), Value::Number(JSON_SCHEMA_VERSION));
+    top.insert(
+        "root".to_string(),
+        Value::String(report.root.to_string_lossy().into_owned()),
+    );
+    top.insert(
+        "files_scanned".to_string(),
+        Value::Number(report.files_scanned as f64),
+    );
+    top.insert(
+        "rules".to_string(),
+        Value::Array(
+            all_rules()
+                .iter()
+                .map(|r| {
+                    let mut m = BTreeMap::new();
+                    m.insert("name".to_string(), Value::String(r.name().to_string()));
+                    m.insert(
+                        "description".to_string(),
+                        Value::String(r.description().to_string()),
+                    );
+                    Value::Table(m)
+                })
+                .collect(),
+        ),
+    );
+    top.insert(
+        "findings".to_string(),
+        Value::Array(
+            report
+                .findings
+                .iter()
+                .map(|f| {
+                    let mut m = BTreeMap::new();
+                    m.insert("file".to_string(), Value::String(f.file.clone()));
+                    m.insert("line".to_string(), Value::Number(f.line as f64));
+                    m.insert("rule".to_string(), Value::String(f.rule.to_string()));
+                    m.insert("message".to_string(), Value::String(f.message.clone()));
+                    Value::Table(m)
+                })
+                .collect(),
+        ),
+    );
+    Value::Table(top)
+}

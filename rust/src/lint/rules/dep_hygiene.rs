@@ -1,0 +1,183 @@
+//! `dep-hygiene`: the crate stays zero-dependency. `Cargo.toml` may
+//! list only optional vendored path dependencies (the `xla` PJRT shim),
+//! never registry crates or `[dev-dependencies]`; the `pjrt` backend
+//! module must be compiled only behind `#[cfg(feature = "pjrt")]`; and
+//! no `xla::` reference may appear outside `src/runtime/pjrt.rs` unless
+//! its enclosing top-level item carries the same cfg gate (e.g. the
+//! `From<xla::Error>` impl in `src/error.rs`).
+
+use std::fs;
+
+use crate::lint::scanner::{find_word, is_ident, scan_text};
+use crate::lint::{Context, Finding, Rule};
+
+/// The one module allowed to talk to `xla` ungated.
+const BACKEND_RS: &str = "src/runtime/pjrt.rs";
+const GATE: &str = "feature = \"pjrt\"";
+
+pub struct DepHygiene;
+
+impl Rule for DepHygiene {
+    fn name(&self) -> &'static str {
+        "dep-hygiene"
+    }
+
+    fn description(&self) -> &'static str {
+        "zero external deps; pjrt backend and xla refs gated behind the pjrt feature"
+    }
+
+    fn check(&self, ctx: &Context, out: &mut Vec<Finding>) {
+        check_cargo_toml(ctx, out);
+        check_mod_gating(ctx, out);
+        check_xla_refs(ctx, out);
+    }
+}
+
+/// `[dependencies]` may only hold optional vendored path deps; no
+/// `[dev-dependencies]` / `[build-dependencies]` sections at all.
+fn check_cargo_toml(ctx: &Context, out: &mut Vec<Finding>) {
+    let Ok(text) = fs::read_to_string(ctx.root.join("Cargo.toml")) else {
+        return;
+    };
+    let mut section: Option<String> = None;
+    for (i, line) in text.split('\n').enumerate() {
+        let s = line.trim();
+        if s.starts_with('[') {
+            section = Some(s.to_string());
+            if s == "[dev-dependencies]" || s == "[build-dependencies]" {
+                out.push(Finding {
+                    rule: "dep-hygiene",
+                    file: "Cargo.toml".to_string(),
+                    line: i + 1,
+                    message: format!("{s} is not allowed (zero-dependency crate)"),
+                });
+            }
+            continue;
+        }
+        if section.as_deref() == Some("[dependencies]")
+            && !s.is_empty()
+            && !s.starts_with('#')
+            && s.contains('=')
+            && !(s.contains("path") && s.contains("vendor/") && s.contains("optional = true"))
+        {
+            let name = s.split('=').next().unwrap_or("").trim();
+            out.push(Finding {
+                rule: "dep-hygiene",
+                file: "Cargo.toml".to_string(),
+                line: i + 1,
+                message: format!(
+                    "external dependency `{name}` (only optional vendored path deps are allowed)"
+                ),
+            });
+        }
+    }
+}
+
+/// If the backend module exists, `runtime/mod.rs` must gate it: the
+/// nearest code line above `mod pjrt` must be a `#[cfg(feature =
+/// "pjrt")]` attribute (comment/blank lines in between are fine,
+/// comments *mentioning* the gate are not enough).
+fn check_mod_gating(ctx: &Context, out: &mut Vec<Finding>) {
+    let modrs = ctx.root.join("src/runtime/mod.rs");
+    if !ctx.root.join(BACKEND_RS).exists() || !modrs.exists() {
+        return;
+    }
+    let Ok(text) = fs::read_to_string(&modrs) else {
+        return;
+    };
+    let raw: Vec<&str> = text.split('\n').collect();
+    let (code, _) = scan_text(&text);
+    for (i, line) in code.iter().enumerate() {
+        if !is_mod_pjrt(line) {
+            continue;
+        }
+        let mut k = i;
+        let mut gated = false;
+        while k > 0 {
+            k -= 1;
+            if code[k].trim().is_empty() {
+                continue; // comment or blank line
+            }
+            gated = code[k].trim().starts_with('#') && raw[k].contains(GATE);
+            break;
+        }
+        if !gated {
+            out.push(Finding {
+                rule: "dep-hygiene",
+                file: "src/runtime/mod.rs".to_string(),
+                line: i + 1,
+                message: "`mod pjrt` is not gated behind #[cfg(feature = \"pjrt\")]".to_string(),
+            });
+        }
+    }
+}
+
+/// `mod pjrt` as two whole words separated by whitespace.
+fn is_mod_pjrt(code: &str) -> bool {
+    let mut from = 0;
+    while let Some(pos) = find_word(code, "mod", from) {
+        let rest = &code[pos + 3..];
+        let trimmed = rest.trim_start();
+        if trimmed.len() < rest.len() && find_word(trimmed, "pjrt", 0) == Some(0) {
+            return true;
+        }
+        from = pos + 3;
+    }
+    false
+}
+
+/// Any `xla::` / `use xla` reference outside the backend module must sit
+/// inside a top-level item gated with `#[cfg(feature = "pjrt")]`.
+fn check_xla_refs(ctx: &Context, out: &mut Vec<Finding>) {
+    for f in &ctx.files {
+        if f.rel == BACKEND_RS {
+            continue;
+        }
+        let mut depth: i64 = 0;
+        let mut gated = false;
+        for (i, code) in f.code.iter().enumerate() {
+            let start = depth;
+            depth += code.matches('{').count() as i64 - code.matches('}').count() as i64;
+            let stripped = code.trim();
+            let is_attr = start == 0
+                && stripped.starts_with('#')
+                && f.raw_lines[i].contains(&format!("cfg({GATE})"));
+            if is_attr {
+                gated = true;
+            }
+            if references_xla(code) && !gated && !f.allowed("dep-hygiene", i) {
+                out.push(Finding {
+                    rule: "dep-hygiene",
+                    file: f.rel.clone(),
+                    line: i + 1,
+                    message: "`xla` referenced outside a #[cfg(feature = \"pjrt\")]-gated item"
+                        .to_string(),
+                });
+            }
+            if depth == 0 && !is_attr && !stripped.is_empty() && !stripped.starts_with('#') {
+                gated = false;
+            }
+        }
+    }
+}
+
+/// `xla::` (word-bounded) or `use xla` anywhere on the code line.
+fn references_xla(code: &str) -> bool {
+    let mut from = 0;
+    while let Some(pos) = code[from..].find("xla::").map(|o| from + o) {
+        if code[..pos].chars().next_back().map_or(true, |c| !is_ident(c)) {
+            return true;
+        }
+        from = pos + 5;
+    }
+    let mut from = 0;
+    while let Some(pos) = find_word(code, "use", from) {
+        let rest = &code[pos + 3..];
+        let trimmed = rest.trim_start();
+        if trimmed.len() < rest.len() && find_word(trimmed, "xla", 0) == Some(0) {
+            return true;
+        }
+        from = pos + 3;
+    }
+    false
+}

@@ -1,0 +1,54 @@
+//! `determinism`: fingerprinted/serialized paths must not consult wall
+//! clocks or iterate unordered maps. Sweep fingerprints, shard
+//! artifacts and NDJSON frames are diffed byte-for-byte across
+//! processes (see `merge-shards` and the serve protocol), so
+//! `SystemTime::now` / `Instant::now` readings and `HashMap` iteration
+//! order must never reach those payloads. The rule is scoped to the
+//! files that build them: `src/config/` (serializers), `src/dse/
+//! shard.rs` (artifacts + fingerprints) and the protocol/server pair.
+//! Legitimate uses (e.g. latency metrics in the server) carry a
+//! `lint:allow(determinism)` with the reason.
+
+use crate::lint::{Context, Finding, Rule};
+
+const DET_FILES: &[&str] = &[
+    "src/dse/shard.rs",
+    "src/service/protocol.rs",
+    "src/service/server.rs",
+];
+const DET_SCOPES: &[&str] = &["src/config/"];
+const DET_TOKENS: &[&str] = &["SystemTime::now", "Instant::now", "HashMap"];
+
+pub struct Determinism;
+
+impl Rule for Determinism {
+    fn name(&self) -> &'static str {
+        "determinism"
+    }
+
+    fn description(&self) -> &'static str {
+        "no wall-clock reads or HashMap in fingerprinted/serialized paths"
+    }
+
+    fn check(&self, ctx: &Context, out: &mut Vec<Finding>) {
+        for f in &ctx.files {
+            let in_scope = DET_FILES.contains(&f.rel.as_str())
+                || DET_SCOPES.iter().any(|p| f.rel.starts_with(p));
+            if !in_scope {
+                continue;
+            }
+            for (i, code) in f.code.iter().enumerate() {
+                for tok in DET_TOKENS {
+                    if code.contains(tok) && !f.allowed("determinism", i) {
+                        out.push(Finding {
+                            rule: "determinism",
+                            file: f.rel.clone(),
+                            line: i + 1,
+                            message: format!("`{tok}` in a fingerprinted/serialized path"),
+                        });
+                    }
+                }
+            }
+        }
+    }
+}

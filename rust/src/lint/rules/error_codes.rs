@@ -1,0 +1,215 @@
+//! `error-code-registry`: the NDJSON protocol's stable error codes are
+//! declared in three places that historically drifted by hand —
+//! `pub const CODE_*` in `src/service/protocol.rs`, the code table in
+//! `docs/protocol.md`, and the `expect` fields of
+//! `tests/protocol_corpus.json`. This rule machine-verifies the three
+//! sets are identical: every source code must be documented *and*
+//! exercised by at least one corpus case, every documented code must
+//! exist in source, and the corpus must not expect phantom codes.
+//!
+//! The extraction helpers are `pub` so `tests/lint_selfcheck.rs` can
+//! assert set identity directly (including `internal` and
+//! `over-budget`, the two codes that drifted before this rule existed).
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::Path;
+
+use crate::config::{Value, parse_json};
+use crate::error::{Error, Result};
+use crate::lint::scanner::ScannedFile;
+use crate::lint::{Context, Finding, Rule};
+
+/// Where the three registries live, relative to the lint root.
+pub const PROTOCOL_RS: &str = "src/service/protocol.rs";
+pub const PROTOCOL_MD: &str = "docs/protocol.md";
+pub const CORPUS_JSON: &str = "tests/protocol_corpus.json";
+
+/// `code -> 1-based line` of every `pub const CODE_*: &str = "..."` in
+/// the protocol source. Works on raw lines because the scanner blanks
+/// string contents in code lines.
+pub fn source_codes(proto: &ScannedFile) -> BTreeMap<String, usize> {
+    let mut out = BTreeMap::new();
+    for (i, line) in proto.raw_lines.iter().enumerate() {
+        if let Some(code) = parse_code_const(line) {
+            out.entry(code).or_insert(i + 1);
+        }
+    }
+    out
+}
+
+/// Parse one `pub const CODE_X: &str = "value";` line.
+fn parse_code_const(line: &str) -> Option<String> {
+    let pos = line.find("pub const CODE_")?;
+    let rest = &line[pos + "pub const CODE_".len()..];
+    let name_len = rest
+        .find(|c: char| !(c.is_ascii_uppercase() || c == '_'))
+        .unwrap_or(rest.len());
+    if name_len == 0 {
+        return None;
+    }
+    let rest = rest[name_len..].strip_prefix(':')?.trim_start();
+    let rest = rest.strip_prefix("&str")?.trim_start();
+    let rest = rest.strip_prefix('=')?.trim_start();
+    let rest = rest.strip_prefix('"')?;
+    let end = rest.find('"')?;
+    if end == 0 {
+        return None;
+    }
+    Some(rest[..end].to_string())
+}
+
+/// `code -> 1-based line` of every code documented in the
+/// `docs/protocol.md` error-code table (the table whose header row's
+/// first cell is `code`; code cells are backtick-wrapped kebab-case).
+pub fn doc_codes(text: &str) -> BTreeMap<String, usize> {
+    let mut out = BTreeMap::new();
+    let mut in_table = false;
+    for (i, line) in text.split('\n').enumerate() {
+        let stripped = line.trim();
+        if let Some(body) = stripped.strip_prefix('|') {
+            let body = body.strip_suffix('|').unwrap_or(body);
+            let first = body.split('|').next().unwrap_or("").trim();
+            if first == "code" {
+                in_table = true;
+                continue;
+            }
+            if in_table {
+                if let Some(code) = backtick_code(first) {
+                    out.entry(code).or_insert(i + 1);
+                }
+            }
+        } else {
+            in_table = false;
+        }
+    }
+    out
+}
+
+/// `` `kebab-case` `` cell -> `kebab-case`.
+fn backtick_code(cell: &str) -> Option<String> {
+    let inner = cell.strip_prefix('`')?.strip_suffix('`')?;
+    if !inner.is_empty()
+        && inner
+            .chars()
+            .all(|c| c.is_ascii_lowercase() || c == '-')
+    {
+        Some(inner.to_string())
+    } else {
+        None
+    }
+}
+
+/// `code -> first case name` for every non-`ok` `expect` in the corpus.
+pub fn corpus_codes(text: &str) -> Result<BTreeMap<String, String>> {
+    let doc = parse_json(text)?;
+    let mut out = BTreeMap::new();
+    let cases = doc
+        .get("cases")
+        .and_then(Value::as_array)
+        .ok_or_else(|| Error::Config("protocol corpus has no `cases` array".to_string()))?;
+    for case in cases {
+        let expect = case.get("expect").and_then(Value::as_str);
+        if let Some(e) = expect {
+            if !e.is_empty() && e != "ok" {
+                let name = case
+                    .get("name")
+                    .and_then(Value::as_str)
+                    .unwrap_or("<unnamed>");
+                out.entry(e.to_string()).or_insert_with(|| name.to_string());
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// The three code registries for the tree at `root`, for direct set
+/// comparison in tests.
+pub struct CodeSets {
+    pub source: BTreeMap<String, usize>,
+    pub docs: BTreeMap<String, usize>,
+    pub corpus: BTreeMap<String, String>,
+}
+
+/// Extract all three registries from `root`. Errors if any of the three
+/// files is missing or unparsable — the real tree must always have all
+/// of them.
+pub fn code_sets(root: &Path) -> Result<CodeSets> {
+    let proto_text = fs::read_to_string(root.join(PROTOCOL_RS)).map_err(Error::Io)?;
+    let proto = ScannedFile::from_text(PROTOCOL_RS, &proto_text);
+    let docs_text = fs::read_to_string(root.join(PROTOCOL_MD)).map_err(Error::Io)?;
+    let corpus_text = fs::read_to_string(root.join(CORPUS_JSON)).map_err(Error::Io)?;
+    Ok(CodeSets {
+        source: source_codes(&proto),
+        docs: doc_codes(&docs_text),
+        corpus: corpus_codes(&corpus_text)?,
+    })
+}
+
+pub struct ErrorCodeRegistry;
+
+impl Rule for ErrorCodeRegistry {
+    fn name(&self) -> &'static str {
+        "error-code-registry"
+    }
+
+    fn description(&self) -> &'static str {
+        "protocol error codes identical across protocol.rs, docs/protocol.md and the corpus"
+    }
+
+    fn check(&self, ctx: &Context, out: &mut Vec<Finding>) {
+        // Inert unless the tree actually has a protocol source (so rule
+        // fixtures for *other* rules don't all need one).
+        let Some(proto) = ctx.file(PROTOCOL_RS) else {
+            return;
+        };
+        let src = source_codes(proto);
+        let docs = fs::read_to_string(ctx.root.join(PROTOCOL_MD))
+            .map(|t| doc_codes(&t))
+            .unwrap_or_default();
+        let corpus = fs::read_to_string(ctx.root.join(CORPUS_JSON))
+            .ok()
+            .and_then(|t| corpus_codes(&t).ok())
+            .unwrap_or_default();
+        for (code, line) in &src {
+            if !docs.contains_key(code) {
+                out.push(Finding {
+                    rule: "error-code-registry",
+                    file: PROTOCOL_RS.to_string(),
+                    line: *line,
+                    message: format!("code `{code}` is not documented in docs/protocol.md"),
+                });
+            }
+            if !corpus.contains_key(code) {
+                out.push(Finding {
+                    rule: "error-code-registry",
+                    file: PROTOCOL_RS.to_string(),
+                    line: *line,
+                    message: format!("code `{code}` has no case in tests/protocol_corpus.json"),
+                });
+            }
+        }
+        for (code, line) in &docs {
+            if !src.contains_key(code) {
+                out.push(Finding {
+                    rule: "error-code-registry",
+                    file: PROTOCOL_MD.to_string(),
+                    line: *line,
+                    message: format!("documented code `{code}` is not defined in protocol.rs"),
+                });
+            }
+        }
+        for code in corpus.keys() {
+            if !src.contains_key(code) {
+                out.push(Finding {
+                    rule: "error-code-registry",
+                    file: CORPUS_JSON.to_string(),
+                    line: 1,
+                    message: format!(
+                        "corpus expects code `{code}` which protocol.rs does not define"
+                    ),
+                });
+            }
+        }
+    }
+}

@@ -1,0 +1,393 @@
+//! `float-display`: no lossy float formatting in serialization-adjacent
+//! code. Shard artifacts, NDJSON frames and config output round-trip
+//! floats bit-exactly via `f64_to_bits_hex`/`fnum`; a stray
+//! `format!("{}", x)` or `x.to_string()` silently truncates to decimal
+//! and breaks the byte-identical merge guarantee. The rule flags bare
+//! `{}` / `{:?}` / `{ident}` placeholders and `.to_string()` calls when
+//! there is *float evidence* — the ident is annotated `f32`/`f64`
+//! somewhere in the file, the expression contains a float literal, or
+//! an `as f32`/`as f64` cast. Placeholders carrying an explicit spec
+//! (`{:.3}`, `{:016x}`, `{:e}`) mark intentional display and pass.
+//!
+//! Scope: `src/service/`, `src/config/` and `src/dse/shard.rs` — the
+//! files whose output crosses process boundaries.
+//!
+//! Heuristic caveats (documented in rust/docs/lints.md): format calls
+//! are parsed line-locally (the format string and its args must share
+//! the line), and float evidence for `{ident}` is the file-wide set of
+//! `ident: f32/f64` annotations, not real type inference.
+
+use std::collections::BTreeSet;
+
+use crate::lint::scanner::{ScannedFile, find_word, is_ident};
+use crate::lint::{Context, Finding, Rule};
+
+const SCOPES: &[&str] = &["src/service/", "src/config/"];
+const FILES: &[&str] = &["src/dse/shard.rs"];
+const FMT_MACROS: &[&str] = &[
+    "format!",
+    "println!",
+    "print!",
+    "eprintln!",
+    "eprint!",
+    "write!",
+    "writeln!",
+];
+
+pub struct FloatDisplay;
+
+impl Rule for FloatDisplay {
+    fn name(&self) -> &'static str {
+        "float-display"
+    }
+
+    fn description(&self) -> &'static str {
+        "no bare {}/{:?}/to_string() on f32/f64 in serialization paths"
+    }
+
+    fn check(&self, ctx: &Context, out: &mut Vec<Finding>) {
+        for f in &ctx.files {
+            let in_scope = SCOPES.iter().any(|p| f.rel.starts_with(p))
+                || FILES.contains(&f.rel.as_str());
+            if !in_scope {
+                continue;
+            }
+            let idents = float_idents(f);
+            for (i, raw) in f.raw_lines.iter().enumerate() {
+                if f.allowed("float-display", i) {
+                    continue;
+                }
+                let code = &f.code[i];
+                check_to_string(f, i, code, &idents, out);
+                if !FMT_MACROS.iter().any(|m| code.contains(m)) {
+                    continue;
+                }
+                check_format_call(f, i, raw, &idents, out);
+            }
+        }
+    }
+}
+
+/// File-wide set of idents annotated `: f32` / `: f64` (incl. `&`,
+/// `&mut` forms) — the rule's stand-in for type inference.
+fn float_idents(f: &ScannedFile) -> BTreeSet<String> {
+    let mut out = BTreeSet::new();
+    for code in &f.code {
+        let b: Vec<char> = code.chars().collect();
+        let n = b.len();
+        for i in 0..n {
+            if b[i] != 'f' || i + 2 >= n {
+                continue;
+            }
+            let suffix_ok = (b[i + 1] == '3' && b[i + 2] == '2')
+                || (b[i + 1] == '6' && b[i + 2] == '4');
+            if !suffix_ok
+                || (i + 3 < n && is_ident(b[i + 3]))
+                || (i > 0 && is_ident(b[i - 1]))
+            {
+                continue;
+            }
+            // walk backwards over:  ident \s* : \s* &? (mut \s+)? f{32,64}
+            let mut k = i;
+            if k > 0 && b[k - 1].is_whitespace() {
+                let mut k2 = k;
+                while k2 > 0 && b[k2 - 1].is_whitespace() {
+                    k2 -= 1;
+                }
+                let is_mut = k2 >= 3
+                    && b[k2 - 3] == 'm'
+                    && b[k2 - 2] == 'u'
+                    && b[k2 - 1] == 't'
+                    && (k2 == 3 || !is_ident(b[k2 - 4]));
+                if is_mut {
+                    k = k2 - 3;
+                }
+            }
+            if k > 0 && b[k - 1] == '&' {
+                k -= 1;
+            }
+            while k > 0 && b[k - 1].is_whitespace() {
+                k -= 1;
+            }
+            if k == 0 || b[k - 1] != ':' {
+                continue;
+            }
+            k -= 1;
+            while k > 0 && b[k - 1].is_whitespace() {
+                k -= 1;
+            }
+            let end = k;
+            while k > 0 && is_ident(b[k - 1]) {
+                k -= 1;
+            }
+            if k == end {
+                continue; // e.g. `std::f64` — `::` yields no ident
+            }
+            let run: String = b[k..end].iter().collect();
+            if let Some(p) = run.find(|c: char| c.is_ascii_lowercase() || c == '_') {
+                out.insert(run[p..].to_string());
+            }
+        }
+    }
+    out
+}
+
+/// Flag `ident.to_string()` when `ident` is float-annotated.
+fn check_to_string(
+    f: &ScannedFile,
+    i: usize,
+    code: &str,
+    idents: &BTreeSet<String>,
+    out: &mut Vec<Finding>,
+) {
+    let b: Vec<char> = code.chars().collect();
+    let pat: Vec<char> = "to_string()".chars().collect();
+    let n = b.len();
+    let mut pos = 0usize;
+    while pos + pat.len() <= n {
+        if b[pos..pos + pat.len()] != pat[..] {
+            pos += 1;
+            continue;
+        }
+        // backwards:  ident \s* . \s* to_string()
+        let mut k = pos;
+        while k > 0 && b[k - 1].is_whitespace() {
+            k -= 1;
+        }
+        if k == 0 || b[k - 1] != '.' {
+            pos += pat.len();
+            continue;
+        }
+        k -= 1;
+        while k > 0 && b[k - 1].is_whitespace() {
+            k -= 1;
+        }
+        let end = k;
+        while k > 0 && is_ident(b[k - 1]) {
+            k -= 1;
+        }
+        if k < end {
+            let run: String = b[k..end].iter().collect();
+            if let Some(p) = run.find(|c: char| c.is_ascii_lowercase() || c == '_') {
+                let name = &run[p..];
+                if idents.contains(name) {
+                    out.push(Finding {
+                        rule: "float-display",
+                        file: f.rel.clone(),
+                        line: i + 1,
+                        message: format!(
+                            "`{name}.to_string()` on an f32/f64; use bit-hex or fnum"
+                        ),
+                    });
+                }
+            }
+        }
+        pos += pat.len();
+    }
+}
+
+/// Flag bare `{}` / `{:?}` / `{ident}` placeholders with float evidence.
+/// Parses the *raw* line: the scanner blanks string contents, but here
+/// the format string itself is the input.
+fn check_format_call(
+    f: &ScannedFile,
+    i: usize,
+    raw: &str,
+    idents: &BTreeSet<String>,
+    out: &mut Vec<Finding>,
+) {
+    let b: Vec<char> = raw.chars().collect();
+    let Some((fmt, rest_start)) = first_string_literal(&b) else {
+        return;
+    };
+    let rest: String = b[rest_start..].iter().collect();
+    let rest = rest.trim_start_matches([',', ' ']);
+    let args: Vec<String> = split_args(rest)
+        .into_iter()
+        .map(|a| a.trim().to_string())
+        .collect();
+    let fc: Vec<char> = fmt.chars().collect();
+    let n = fc.len();
+    let mut pos_arg = 0usize;
+    let mut j = 0usize;
+    while j < n {
+        if fc[j] != '{' {
+            j += 1;
+            continue;
+        }
+        // try to parse  { ident? (:spec)? }
+        let mut k = j + 1;
+        let name_start = k;
+        if k < n && (fc[k].is_ascii_alphabetic() || fc[k] == '_') {
+            k += 1;
+            while k < n && is_ident(fc[k]) {
+                k += 1;
+            }
+        }
+        let name: Option<String> = if k > name_start {
+            Some(fc[name_start..k].iter().collect())
+        } else {
+            None
+        };
+        let spec_start = k;
+        if k < n && fc[k] == ':' {
+            k += 1;
+            while k < n && fc[k] != '}' {
+                k += 1;
+            }
+        }
+        let spec: String = fc[spec_start..k].iter().collect();
+        if k >= n || fc[k] != '}' {
+            j += 1; // not a placeholder; resume scan at next char
+            continue;
+        }
+        j = k + 1;
+        if !(spec.is_empty() || spec == ":?") {
+            // explicit spec (precision, width, hex, ...) = intentional
+            if name.is_none() {
+                pos_arg += 1;
+            }
+            continue;
+        }
+        match name {
+            Some(nm) => {
+                if idents.contains(&nm) {
+                    out.push(Finding {
+                        rule: "float-display",
+                        file: f.rel.clone(),
+                        line: i + 1,
+                        message: format!(
+                            "bare `{{{nm}}}` formats an f32/f64; use bit-hex/fnum or a precision spec"
+                        ),
+                    });
+                }
+            }
+            None => {
+                if pos_arg < args.len() && float_evidence(&args[pos_arg], idents) {
+                    out.push(Finding {
+                        rule: "float-display",
+                        file: f.rel.clone(),
+                        line: i + 1,
+                        message: format!(
+                            "bare `{{}}` formats float expr `{}`; use bit-hex/fnum or a precision spec",
+                            args[pos_arg]
+                        ),
+                    });
+                }
+                pos_arg += 1;
+            }
+        }
+    }
+}
+
+/// First `"..."` literal on the raw line (escape-aware). Returns the
+/// contents and the char index just past the closing quote.
+fn first_string_literal(b: &[char]) -> Option<(String, usize)> {
+    let q = b.iter().position(|&c| c == '"')?;
+    let mut i = q + 1;
+    let mut content = String::new();
+    while i < b.len() {
+        if b[i] == '\\' && i + 1 < b.len() {
+            content.push(b[i]);
+            content.push(b[i + 1]);
+            i += 2;
+        } else if b[i] == '"' {
+            return Some((content, i + 1));
+        } else {
+            content.push(b[i]);
+            i += 1;
+        }
+    }
+    None
+}
+
+/// Split trailing macro arguments on top-level commas; stop at the
+/// macro's closing delimiter.
+fn split_args(s: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut cur = String::new();
+    let mut depth = 0i32;
+    for c in s.chars() {
+        if "([{".contains(c) {
+            depth += 1;
+        } else if ")]}".contains(c) {
+            depth -= 1;
+            if depth < 0 {
+                break;
+            }
+        }
+        if c == ',' && depth == 0 {
+            out.push(std::mem::take(&mut cur));
+        } else {
+            cur.push(c);
+        }
+    }
+    if !cur.is_empty() {
+        out.push(cur);
+    }
+    out
+}
+
+/// Does `expr` smell like a float? (cast, float literal, or a
+/// float-annotated ident.)
+fn float_evidence(expr: &str, idents: &BTreeSet<String>) -> bool {
+    // `as f32` / `as f64`
+    let mut from = 0;
+    while let Some(pos) = find_word(expr, "as", from) {
+        let rest = &expr[pos + 2..];
+        let trimmed = rest.trim_start();
+        if trimmed.len() < rest.len()
+            && (find_word(trimmed, "f32", 0) == Some(0) || find_word(trimmed, "f64", 0) == Some(0))
+        {
+            return true;
+        }
+        from = pos + 2;
+    }
+    // decimal float literal
+    let b: Vec<char> = expr.chars().collect();
+    let n = b.len();
+    let mut i = 0;
+    while i < n {
+        if b[i].is_ascii_digit() && (i == 0 || !(is_ident(b[i - 1]) || b[i - 1] == '.')) {
+            let mut j = i;
+            while j < n && b[j].is_ascii_digit() {
+                j += 1;
+            }
+            if j < n && b[j] == '.' && j + 1 < n && b[j + 1].is_ascii_digit() {
+                return true;
+            }
+            i = j.max(i + 1);
+        } else {
+            i += 1;
+        }
+    }
+    // float-annotated ident
+    let mut start = None;
+    for (idx, c) in b.iter().enumerate() {
+        if is_ident(*c) {
+            if start.is_none() {
+                start = Some(idx);
+            }
+        } else if let Some(s) = start.take() {
+            if ident_run_matches(&b[s..idx], idents) {
+                return true;
+            }
+        }
+    }
+    if let Some(s) = start {
+        if ident_run_matches(&b[s..], idents) {
+            return true;
+        }
+    }
+    false
+}
+
+/// Membership check for one maximal ident run, mirroring the lexical
+/// convention that idents start `[a-z_]`.
+fn ident_run_matches(run: &[char], idents: &BTreeSet<String>) -> bool {
+    let s: String = run.iter().collect();
+    match s.find(|c: char| c.is_ascii_lowercase() || c == '_') {
+        Some(p) => idents.contains(&s[p..]),
+        None => false,
+    }
+}

@@ -1,0 +1,10 @@
+//! The individual lint rules. Each rule lives in its own module and is
+//! registered in [`all_rules`](crate::lint::all_rules); rule names are
+//! stable and documented in `rust/docs/lints.md`.
+
+pub mod dep_hygiene;
+pub mod determinism;
+pub mod error_codes;
+pub mod float_display;
+pub mod mutex_hold;
+pub mod unsafe_audit;

@@ -1,0 +1,133 @@
+//! `mutex-hold`: no I/O or heavy statistics while a `Mutex` guard is
+//! held in `src/service/`. The serving daemon shares one state mutex
+//! across client threads; writing frames, flushing sockets or running
+//! `quantile` over latency samples while holding it serializes every
+//! other request behind the slowest client. The convention (clone out,
+//! drop the guard, then work) is enforced here.
+//!
+//! Scope detection is lexical: a `let guard = x.lock().unwrap();`
+//! binding holds to the end of its enclosing brace block; a temporary
+//! `x.lock().unwrap().field` holds to the end of its statement. Every
+//! lock site in the real tree is single-line, which keeps the
+//! line-local `.lock().unwrap()` detection sound.
+
+use crate::lint::scanner::find_word;
+use crate::lint::{Context, Finding, Rule};
+
+const SCOPE_PREFIX: &str = "src/service/";
+
+/// Tokens that mean "I/O or heavy work" when they appear in guard scope.
+const IO_TOKENS: &[&str] = &[
+    "write_line",
+    "quantile(",
+    "println!",
+    "eprintln!",
+    "write!",
+    "writeln!",
+    ".flush(",
+    "std::fs::",
+    "File::",
+    ".write_all(",
+    ".read_line(",
+    "read_to_string",
+];
+
+pub struct MutexHold;
+
+impl Rule for MutexHold {
+    fn name(&self) -> &'static str {
+        "mutex-hold"
+    }
+
+    fn description(&self) -> &'static str {
+        "no I/O or quantile work while a mutex guard is held in src/service/"
+    }
+
+    fn check(&self, ctx: &Context, out: &mut Vec<Finding>) {
+        for f in &ctx.files {
+            if !f.rel.starts_with(SCOPE_PREFIX) {
+                continue;
+            }
+            // (start, end) brace depth per line
+            let mut depth: i64 = 0;
+            let mut depths = Vec::with_capacity(f.code.len());
+            for code in &f.code {
+                let start = depth;
+                let opens = code.matches('{').count() as i64;
+                let closes = code.matches('}').count() as i64;
+                depth += opens - closes;
+                depths.push((start, depth));
+            }
+            for (i, code) in f.code.iter().enumerate() {
+                let Some(lock_pos) = code.find(".lock().unwrap()") else {
+                    continue;
+                };
+                if f.allowed("mutex-hold", i) {
+                    continue;
+                }
+                if is_binding(code, lock_pos) && code.trim_end().ends_with(';') {
+                    // Guard lives to the end of the enclosing block.
+                    let block_depth = depths[i].0;
+                    let mut j = i;
+                    while j < f.code.len() {
+                        if j != i {
+                            emit_tokens(f, j, &format!("while a mutex guard from line {} is held", i + 1), out);
+                        }
+                        j += 1;
+                        if j < f.code.len() && depths[j].1 < block_depth {
+                            break;
+                        }
+                    }
+                } else {
+                    // Temporary guard: lives to the end of the statement.
+                    let mut j = i;
+                    loop {
+                        emit_tokens(
+                            f,
+                            j,
+                            &format!("in a statement holding a mutex guard (line {})", i + 1),
+                            out,
+                        );
+                        if f.code[j].trim_end().ends_with(';') || j + 1 >= f.code.len() {
+                            break;
+                        }
+                        j += 1;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Does this line bind the guard (`let g = ....lock().unwrap()...`)?
+fn is_binding(code: &str, lock_pos: usize) -> bool {
+    let Some(let_pos) = find_word(code, "let", 0) else {
+        return false;
+    };
+    if let_pos >= lock_pos {
+        return false;
+    }
+    match code[let_pos..lock_pos].find('=') {
+        Some(off) => !code[let_pos + off..lock_pos].contains(';'),
+        None => false,
+    }
+}
+
+fn emit_tokens(
+    f: &crate::lint::scanner::ScannedFile,
+    j: usize,
+    why: &str,
+    out: &mut Vec<Finding>,
+) {
+    for tok in IO_TOKENS {
+        if f.code[j].contains(tok) && !f.allowed("mutex-hold", j) {
+            let label = tok.trim_matches(|c| c == '(' || c == '.');
+            out.push(Finding {
+                rule: "mutex-hold",
+                file: f.rel.clone(),
+                line: j + 1,
+                message: format!("`{label}` {why}"),
+            });
+        }
+    }
+}

@@ -1,0 +1,44 @@
+//! `unsafe-audit`: every `unsafe` keyword must be justified by a
+//! `// SAFETY:` comment on the same line or within the five lines
+//! above it. The scanner already strips comments and blanks string
+//! literals, so doc-comment *mentions* of `unsafe` (e.g. the
+//! `exec::unchecked` module docs) and strings never trip the rule.
+
+use crate::lint::scanner::has_word;
+use crate::lint::{Context, Finding, Rule};
+
+/// How far above the `unsafe` line a `SAFETY:` comment may sit.
+const SAFETY_WINDOW: usize = 5;
+
+pub struct UnsafeAudit;
+
+impl Rule for UnsafeAudit {
+    fn name(&self) -> &'static str {
+        "unsafe-audit"
+    }
+
+    fn description(&self) -> &'static str {
+        "every `unsafe` must carry a `// SAFETY:` comment within the 5 lines above"
+    }
+
+    fn check(&self, ctx: &Context, out: &mut Vec<Finding>) {
+        for f in &ctx.files {
+            for (i, code) in f.code.iter().enumerate() {
+                if !has_word(code, "unsafe") {
+                    continue;
+                }
+                let lo = i.saturating_sub(SAFETY_WINDOW);
+                let audited = f.comments[lo..=i].iter().any(|c| c.contains("SAFETY:"));
+                if !audited && !f.allowed("unsafe-audit", i) {
+                    out.push(Finding {
+                        rule: "unsafe-audit",
+                        file: f.rel.clone(),
+                        line: i + 1,
+                        message: "`unsafe` without a `// SAFETY:` comment in the 5 lines above"
+                            .to_string(),
+                    });
+                }
+            }
+        }
+    }
+}

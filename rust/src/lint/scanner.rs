@@ -1,0 +1,446 @@
+//! Lexical scanner behind `cimdse lint`.
+//!
+//! This is deliberately *not* a Rust parser: the lint rules only need to
+//! know, per line, which text is code and which is comment, with string
+//! and char-literal contents neutralized so a string that merely
+//! *mentions* `unsafe` or `HashMap` cannot trip a rule. A small
+//! hand-rolled state machine delivers exactly that:
+//!
+//! * `code` lines: source text with comments removed and the contents of
+//!   string/char literals blanked to spaces (quotes are kept so
+//!   expression shape survives, e.g. `format!("...")` still shows its
+//!   argument slots).
+//! * `comment` lines: the text of `//`, `///`, `//!` and (possibly
+//!   nested) `/* ... */` comments, which is where `SAFETY:` audits and
+//!   `lint:allow(...)` suppressions live.
+//!
+//! The scanner understands raw strings (`r"..."`, `r#"..."#` with any
+//! hash count), byte strings, escape sequences, block-comment nesting,
+//! and the `'a` lifetime vs `'a'` char-literal ambiguity. It does not
+//! attempt macro expansion or type inference — rules that need more
+//! (e.g. float detection) layer their own heuristics on top.
+
+use std::fs;
+use std::mem;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+
+/// Scanner state.
+enum S {
+    Normal,
+    LineComment,
+    BlockComment,
+    Str,
+    RawStr,
+    Char,
+}
+
+/// Split `text` into per-line `(code, comment)` strings.
+///
+/// Every `\n` in the input produces one entry in each vector (plus one
+/// final entry for the trailing partial line), so indices align with
+/// 0-based line numbers of the raw text.
+pub fn scan_text(text: &str) -> (Vec<String>, Vec<String>) {
+    let cs: Vec<char> = text.chars().collect();
+    let n = cs.len();
+    let mut code: Vec<String> = Vec::new();
+    let mut comm: Vec<String> = Vec::new();
+    let mut cur_code = String::new();
+    let mut cur_comm = String::new();
+    let mut state = S::Normal;
+    let mut depth = 0usize; // block-comment nesting
+    let mut raw_hashes = 0usize;
+    let mut i = 0usize;
+    while i < n {
+        let c = cs[i];
+        let nxt = if i + 1 < n { cs[i + 1] } else { '\0' };
+        if c == '\n' {
+            code.push(mem::take(&mut cur_code));
+            comm.push(mem::take(&mut cur_comm));
+            if matches!(state, S::LineComment) {
+                state = S::Normal;
+            }
+            i += 1;
+            continue;
+        }
+        match state {
+            S::Normal => {
+                if c == '/' && nxt == '/' {
+                    state = S::LineComment;
+                    i += 2;
+                } else if c == '/' && nxt == '*' {
+                    state = S::BlockComment;
+                    depth = 1;
+                    i += 2;
+                } else if c == '"' {
+                    cur_code.push('"');
+                    state = S::Str;
+                    i += 1;
+                } else if c == 'r' && (nxt == '"' || nxt == '#') {
+                    // raw string r"..." or r#"..."# (any hash count)
+                    let mut j = i + 1;
+                    let mut h = 0usize;
+                    while j < n && cs[j] == '#' {
+                        h += 1;
+                        j += 1;
+                    }
+                    if j < n && cs[j] == '"' {
+                        cur_code.push_str("r\"");
+                        state = S::RawStr;
+                        raw_hashes = h;
+                        i = j + 1;
+                    } else {
+                        cur_code.push(c);
+                        i += 1;
+                    }
+                } else if c == 'b' && nxt == '"' {
+                    cur_code.push_str("b\"");
+                    state = S::Str;
+                    i += 2;
+                } else if c == '\'' {
+                    if nxt == '\\' {
+                        // escaped char literal: '\n', '\\', '\x7f', ...
+                        cur_code.push('\'');
+                        state = S::Char;
+                        i += 1;
+                    } else {
+                        let after = if i + 2 < n { cs[i + 2] } else { '\0' };
+                        if (nxt.is_alphanumeric() || nxt == '_') && after != '\'' {
+                            // lifetime: 'a not followed by a closing quote
+                            cur_code.push('\'');
+                            i += 1;
+                        } else {
+                            cur_code.push_str("' ");
+                            state = S::Char;
+                            i += 2;
+                        }
+                    }
+                } else {
+                    cur_code.push(c);
+                    i += 1;
+                }
+            }
+            S::LineComment => {
+                cur_comm.push(c);
+                i += 1;
+            }
+            S::BlockComment => {
+                if c == '/' && nxt == '*' {
+                    depth += 1;
+                    cur_comm.push_str("/*");
+                    i += 2;
+                } else if c == '*' && nxt == '/' {
+                    depth -= 1;
+                    i += 2;
+                    if depth == 0 {
+                        state = S::Normal;
+                    } else {
+                        cur_comm.push_str("*/");
+                    }
+                } else {
+                    cur_comm.push(c);
+                    i += 1;
+                }
+            }
+            S::Str => {
+                if c == '\\' {
+                    if nxt == '\n' {
+                        // line continuation inside a string literal: the
+                        // newline still has to produce a line entry.
+                        cur_code.push(' ');
+                        code.push(mem::take(&mut cur_code));
+                        comm.push(mem::take(&mut cur_comm));
+                        i += 2;
+                    } else {
+                        cur_code.push_str("  ");
+                        i += 2;
+                    }
+                } else if c == '"' {
+                    cur_code.push('"');
+                    state = S::Normal;
+                    i += 1;
+                } else {
+                    cur_code.push(' ');
+                    i += 1;
+                }
+            }
+            S::RawStr => {
+                if c == '"' {
+                    let mut j = i + 1;
+                    let mut h = 0usize;
+                    while j < n && cs[j] == '#' && h < raw_hashes {
+                        h += 1;
+                        j += 1;
+                    }
+                    if h == raw_hashes {
+                        cur_code.push('"');
+                        state = S::Normal;
+                        i = j;
+                    } else {
+                        cur_code.push(' ');
+                        i += 1;
+                    }
+                } else {
+                    cur_code.push(' ');
+                    i += 1;
+                }
+            }
+            S::Char => {
+                if c == '\\' {
+                    cur_code.push_str("  ");
+                    i += 2;
+                } else if c == '\'' {
+                    cur_code.push('\'');
+                    state = S::Normal;
+                    i += 1;
+                } else {
+                    cur_code.push(' ');
+                    i += 1;
+                }
+            }
+        }
+    }
+    code.push(cur_code);
+    comm.push(cur_comm);
+    (code, comm)
+}
+
+/// True when `c` can be part of an identifier-ish word.
+pub fn is_ident(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// True when `needle` occurs in `hay` as a whole word (neither neighbor
+/// is an identifier character).
+pub fn has_word(hay: &str, needle: &str) -> bool {
+    find_word(hay, needle, 0).is_some()
+}
+
+/// Byte offset of the first whole-word occurrence of `needle` in `hay`
+/// at or after `from`.
+pub fn find_word(hay: &str, needle: &str, from: usize) -> Option<usize> {
+    let mut start = from;
+    while let Some(off) = hay[start..].find(needle) {
+        let pos = start + off;
+        let before_ok = hay[..pos].chars().next_back().map_or(true, |c| !is_ident(c));
+        let after_ok = hay[pos + needle.len()..]
+            .chars()
+            .next()
+            .map_or(true, |c| !is_ident(c));
+        if before_ok && after_ok {
+            return Some(pos);
+        }
+        start = pos + needle.len().max(1);
+        if start >= hay.len() {
+            return None;
+        }
+    }
+    None
+}
+
+/// Extract every `lint:allow(rule-name)` marker from a comment line.
+fn allow_markers(comment: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut rest = comment;
+    while let Some(pos) = rest.find("lint:allow(") {
+        let after = &rest[pos + "lint:allow(".len()..];
+        if let Some(end) = after.find(')') {
+            let name = &after[..end];
+            if !name.is_empty()
+                && name
+                    .chars()
+                    .all(|c| c.is_ascii_lowercase() || c == '-')
+            {
+                out.push(name.to_string());
+            }
+            rest = &after[end..];
+        } else {
+            break;
+        }
+    }
+    out
+}
+
+/// One scanned source file, ready for rule checks.
+pub struct ScannedFile {
+    /// Path relative to the lint root, with `/` separators.
+    pub rel: String,
+    /// Raw source lines (needed where string *contents* matter: format
+    /// strings, `cfg(feature = "pjrt")` attributes, error-code consts).
+    pub raw_lines: Vec<String>,
+    /// Per-line code text (comments stripped, literals blanked).
+    pub code: Vec<String>,
+    /// Per-line comment text.
+    pub comments: Vec<String>,
+    /// Per-line `lint:allow(...)` rule names.
+    allows: Vec<Vec<String>>,
+}
+
+impl ScannedFile {
+    /// Scan `text` as the contents of `rel`.
+    pub fn from_text(rel: &str, text: &str) -> ScannedFile {
+        let raw_lines: Vec<String> = text.split('\n').map(str::to_string).collect();
+        let (code, comments) = scan_text(text);
+        let allows = comments.iter().map(|c| allow_markers(c)).collect();
+        ScannedFile {
+            rel: rel.to_string(),
+            raw_lines,
+            code,
+            comments,
+            allows,
+        }
+    }
+
+    /// Is `rule` suppressed at 0-based `line_idx`?
+    ///
+    /// A `// lint:allow(rule) — reason` marker applies to its own line
+    /// and to the first code line below it: the marker may sit on the
+    /// offending line itself or anywhere in the contiguous run of
+    /// comment/blank lines directly above it (so multi-line
+    /// justification comments work).
+    pub fn allowed(&self, rule: &str, line_idx: usize) -> bool {
+        if line_idx < self.allows.len() && self.allows[line_idx].iter().any(|r| r == rule) {
+            return true;
+        }
+        let mut k = line_idx;
+        while k > 0 && self.code[k - 1].trim().is_empty() {
+            k -= 1;
+            if self.allows[k].iter().any(|r| r == rule) {
+                return true;
+            }
+        }
+        false
+    }
+}
+
+/// Recursively collect `.rs` files under `dir`, skipping any directory
+/// named `lint_fixtures` (fixtures are deliberately rule-breaking).
+fn walk_dir(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    let mut entries: Vec<_> = fs::read_dir(dir)
+        .map_err(Error::Io)?
+        .collect::<std::io::Result<Vec<_>>>()
+        .map_err(Error::Io)?;
+    entries.sort_by_key(|e| e.file_name());
+    for entry in entries {
+        let path = entry.path();
+        let name = entry.file_name().to_string_lossy().into_owned();
+        if path.is_dir() {
+            if name == "lint_fixtures" {
+                continue;
+            }
+            walk_dir(&path, out)?;
+        } else if name.ends_with(".rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Scan every `.rs` file under `root`'s `src/`, `tests/` and `benches/`
+/// directories, in deterministic (sorted-path) order.
+pub fn scan_root(root: &Path) -> Result<Vec<ScannedFile>> {
+    let mut paths = Vec::new();
+    for sub in ["src", "tests", "benches"] {
+        let dir = root.join(sub);
+        if dir.is_dir() {
+            walk_dir(&dir, &mut paths)?;
+        }
+    }
+    let mut files = Vec::with_capacity(paths.len());
+    for path in paths {
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(&path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let text = fs::read_to_string(&path).map_err(Error::Io)?;
+        files.push(ScannedFile::from_text(&rel, &text));
+    }
+    Ok(files)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comments_are_stripped_from_code() {
+        let (code, comm) = scan_text("let x = 1; // trailing\n/* block */ let y = 2;");
+        assert_eq!(code[0], "let x = 1; ");
+        assert_eq!(comm[0], " trailing");
+        assert_eq!(code[1], " let y = 2;");
+        assert_eq!(comm[1], " block ");
+    }
+
+    #[test]
+    fn string_contents_are_blanked() {
+        let (code, _) = scan_text(r#"call("unsafe // not a comment", x)"#);
+        assert!(!code[0].contains("unsafe"));
+        assert!(!code[0].contains("//"));
+        assert!(code[0].starts_with("call(\""));
+        assert!(code[0].ends_with("\", x)"));
+    }
+
+    #[test]
+    fn raw_strings_and_hashes() {
+        let (code, _) = scan_text(r##"let s = r#"quote " inside"#; let t = 1;"##);
+        assert!(code[0].contains("let t = 1;"));
+        assert!(!code[0].contains("inside"));
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let (code, _) = scan_text("fn f<'a>(x: &'a str) -> &'a str { x }");
+        assert_eq!(code[0], "fn f<'a>(x: &'a str) -> &'a str { x }");
+    }
+
+    #[test]
+    fn char_literals_are_blanked() {
+        let (code, _) = scan_text("let c = 'x'; let esc = '\\\\'; let q = '\\'';");
+        assert!(!code[0].contains('x'), "{}", code[0]);
+        // line structure survives escaped quotes and backslashes
+        assert_eq!(code.len(), 1);
+        assert!(code[0].ends_with(';'));
+    }
+
+    #[test]
+    fn block_comment_nesting() {
+        let (code, comm) = scan_text("/* outer /* inner */ still */ let z = 3;");
+        assert_eq!(code[0], " let z = 3;");
+        assert!(comm[0].contains("inner"));
+    }
+
+    #[test]
+    fn line_counts_match_raw() {
+        let text = "a\nb\\\nc\n\"multi\nline\"\n";
+        let (code, comm) = scan_text(text);
+        let raw = text.split('\n').count();
+        assert_eq!(code.len(), raw);
+        assert_eq!(comm.len(), raw);
+    }
+
+    #[test]
+    fn allow_markers_parse() {
+        let f = ScannedFile::from_text(
+            "x.rs",
+            "// lint:allow(determinism) — reason\n// more words\nlet t = now();\n",
+        );
+        assert!(f.allowed("determinism", 2));
+        assert!(!f.allowed("unsafe-audit", 2));
+        // marker applies only through contiguous comment/blank lines
+        let g = ScannedFile::from_text(
+            "y.rs",
+            "// lint:allow(determinism) — reason\nlet a = 1;\nlet t = now();\n",
+        );
+        assert!(g.allowed("determinism", 1));
+        assert!(!g.allowed("determinism", 2));
+    }
+
+    #[test]
+    fn word_boundaries() {
+        assert!(has_word("unsafe {", "unsafe"));
+        assert!(!has_word("unsafe_fn()", "unsafe"));
+        assert!(!has_word("not_unsafe", "unsafe"));
+    }
+}

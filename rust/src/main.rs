@@ -81,11 +81,14 @@ SUBCOMMANDS
            [eval: --enob B --throughput F --tech 32 --n-adcs 1]
            [sweep: --spec dense|fig5 --points N --out PATH]
            [accel: --workload NAME]               query a running daemon
+  lint     [PATH] [--json]                        static invariant checks over a crate
+                                                  tree (default PATH: .); exits 1 on
+                                                  findings (rules: rust/docs/lints.md)
 ";
 
 /// Boolean flags across all subcommands: declaring them keeps the parser
 /// from consuming a following positional as the flag's "value".
-const BOOLEAN_FLAGS: &[&str] = &["allow-partial"];
+const BOOLEAN_FLAGS: &[&str] = &["allow-partial", "json"];
 
 fn main() {
     let args = match Args::parse_with_flags(std::env::args().skip(1), BOOLEAN_FLAGS) {
@@ -108,6 +111,7 @@ fn main() {
         Some("bench-report") => cmd_bench_report(&args),
         Some("serve") => cmd_serve(&args),
         Some("query") => cmd_query(&args),
+        Some("lint") => cmd_lint(&args),
         _ => {
             println!("{USAGE}");
             Ok(())
@@ -951,4 +955,29 @@ fn cmd_figures(args: &Args) -> Result<()> {
         println!("{}", figures::render_fig5(&figures::fig5(&model, 5)?).render());
     }
     Ok(())
+}
+
+fn cmd_lint(args: &Args) -> Result<()> {
+    let root = args
+        .positionals()
+        .first()
+        .map(String::as_str)
+        .unwrap_or(".");
+    let report = cimdse::lint::lint_root(std::path::Path::new(root))?;
+    if args.flag("json") {
+        println!(
+            "{}",
+            cimdse::lint::report::to_json_value(&report).to_json_string()?
+        );
+    } else {
+        print!("{}", cimdse::lint::report::render_text(&report));
+    }
+    if report.findings.is_empty() {
+        Ok(())
+    } else {
+        Err(Error::Config(format!(
+            "lint: {} finding(s) in {root}",
+            report.findings.len()
+        )))
+    }
 }

@@ -39,6 +39,10 @@ pub fn compile(path: &Path) -> Result<BackendExecutable> {
 fn to_xla(lit: &Literal<'_>) -> Result<xla::Literal> {
     let dims: Vec<usize> = lit.shape().iter().map(|&d| d as usize).collect();
     let data = lit.data();
+    // SAFETY: `data` is a valid, initialized `&[f32]`, so viewing the
+    // same region as bytes of length `size_of_val(data)` stays in
+    // bounds for the borrow's lifetime, and `u8` has no alignment or
+    // validity requirements.
     let bytes = unsafe {
         std::slice::from_raw_parts(data.as_ptr() as *const u8, std::mem::size_of_val(data))
     };

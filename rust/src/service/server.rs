@@ -391,6 +391,8 @@ fn process_frame(line: &[u8], shared: &ServerShared) -> String {
         }
     };
     let op = request.op();
+    // lint:allow(determinism) — request-latency observability only; the
+    // reading feeds the metrics op, never a fingerprinted payload.
     let start = Instant::now();
     match dispatch(&request, shared) {
         Ok(result) => {

@@ -1,0 +1,8 @@
+//! Known-bad fixture (dep-hygiene): `xla::` referenced with no
+//! `#[cfg(feature = "pjrt")]` gate on the enclosing item.
+
+pub mod runtime;
+
+pub fn backend_error_name(e: &xla::Error) -> String {
+    format!("{e:?}")
+}

@@ -1,0 +1,4 @@
+//! Known-bad fixture (dep-hygiene): `mod pjrt` is compiled
+//! unconditionally instead of behind `#[cfg(feature = "pjrt")]`.
+
+pub mod pjrt;

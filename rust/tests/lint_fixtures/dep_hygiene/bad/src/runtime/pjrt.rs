@@ -1,0 +1,6 @@
+//! Backend module itself — exempt from the `xla`-reference check (it
+//! is the one place the bridge is allowed to live).
+
+pub fn platform_name() -> &'static str {
+    "cpu"
+}

@@ -1,0 +1,10 @@
+//! Known-good fixture (dep-hygiene): every `xla::` reference sits on a
+//! `#[cfg(feature = "pjrt")]`-gated item, and the backend module is
+//! gated in runtime/mod.rs.
+
+pub mod runtime;
+
+#[cfg(feature = "pjrt")]
+pub fn backend_error_name(e: &xla::Error) -> String {
+    format!("{e:?}")
+}

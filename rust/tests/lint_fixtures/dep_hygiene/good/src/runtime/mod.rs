@@ -1,0 +1,5 @@
+//! Known-good fixture (dep-hygiene): the backend module only compiles
+//! with the `pjrt` feature.
+
+#[cfg(feature = "pjrt")]
+pub mod pjrt;

@@ -1,0 +1,5 @@
+//! Backend module — exempt from the `xla`-reference check.
+
+pub fn platform_name() -> &'static str {
+    "cpu"
+}

@@ -1,0 +1,12 @@
+//! Known-bad fixture for the `determinism` rule: wall-clock reads and
+//! an unordered map on a fingerprinted artifact path. Exactly three
+//! findings.
+
+pub fn artifact_stamp() -> (usize, f64) {
+    let t0 = std::time::Instant::now();
+    let wall = std::time::SystemTime::now();
+    let mut keys = std::collections::HashMap::new();
+    keys.insert("a", 1.0_f64);
+    let _ = wall;
+    (keys.len(), t0.elapsed().as_secs_f64())
+}

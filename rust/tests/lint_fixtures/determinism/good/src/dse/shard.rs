@@ -1,0 +1,16 @@
+//! Known-good fixture for the `determinism` rule: ordered maps only,
+//! and the one timing read is explicitly suppressed with its
+//! justification.
+
+pub fn artifact_keys() -> Vec<String> {
+    let mut keys = std::collections::BTreeMap::new();
+    keys.insert("a".to_string(), 1.0_f64);
+    keys.into_keys().collect()
+}
+
+pub fn observability_latency() -> f64 {
+    // lint:allow(determinism) — log-only latency probe; the reading is
+    // never serialized into an artifact or response.
+    let t0 = std::time::Instant::now();
+    t0.elapsed().as_secs_f64()
+}

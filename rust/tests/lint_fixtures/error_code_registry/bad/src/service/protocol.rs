@@ -1,0 +1,11 @@
+//! Known-bad fixture for the `error-code-registry` rule. Exactly three
+//! findings: `extra-code` is defined here but undocumented,
+//! `lost-code` has no corpus case, and `ghost-code` is documented but
+//! not defined.
+
+/// Shared happy-path code: documented and corpus-covered.
+pub const CODE_SHARED: &str = "shared-code";
+/// Defined but missing from docs/protocol.md.
+pub const CODE_EXTRA: &str = "extra-code";
+/// Defined and documented, but no corpus case exercises it.
+pub const CODE_LOST: &str = "lost-code";

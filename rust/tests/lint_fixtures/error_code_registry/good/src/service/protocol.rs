@@ -1,0 +1,8 @@
+//! Known-good fixture for the `error-code-registry` rule: the two
+//! codes defined here are exactly the documented set, and each has a
+//! corpus case.
+
+/// First stable code.
+pub const CODE_ALPHA: &str = "alpha-code";
+/// Second stable code.
+pub const CODE_BETA: &str = "beta-code";

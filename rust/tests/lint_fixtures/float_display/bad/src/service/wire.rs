@@ -1,0 +1,15 @@
+//! Known-bad fixture for the `float-display` rule: three sites where
+//! an f64/f32 reaches Display/Debug formatting or `to_string()` on a
+//! wire-shaped path.
+
+pub fn encode_energy(energy_pj: f64) -> String {
+    format!("{}", energy_pj)
+}
+
+pub fn encode_ratio(ratio: f32) -> String {
+    ratio.to_string()
+}
+
+pub fn debug_line(enob: f64) -> String {
+    format!("enob={enob:?} done")
+}

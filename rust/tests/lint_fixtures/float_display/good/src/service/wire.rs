@@ -1,0 +1,18 @@
+//! Known-good fixture for the `float-display` rule: floats reach the
+//! wire as IEEE-754 bit-hex, human display uses explicit precision
+//! specs (intentional, lossy-by-design output), and one audited site
+//! is suppressed inline.
+
+pub fn encode_energy(energy_pj: f64) -> String {
+    format!("{:016x}", energy_pj.to_bits())
+}
+
+pub fn human_row(energy_pj: f64, area_um2: f64) -> String {
+    format!("{energy_pj:.3} pJ, {area_um2:.1} um^2")
+}
+
+pub fn audited(count: f64) -> String {
+    // lint:allow(float-display) — `count` is an integral counter
+    // carried as f64; its shortest-decimal Display form is exact.
+    format!("{count} points")
+}

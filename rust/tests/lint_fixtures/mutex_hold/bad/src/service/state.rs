@@ -1,0 +1,19 @@
+//! Known-bad fixture for the `mutex-hold` rule: I/O and quantile
+//! computation while a mutex guard is lexically alive.
+
+use std::io::Write;
+use std::sync::Mutex;
+
+pub fn flush_under_lock(counters: &Mutex<Vec<u64>>, out: &mut impl Write) {
+    let guard = counters.lock().unwrap();
+    writeln!(out, "count={}", guard.len()).unwrap();
+}
+
+pub fn quantile_under_lock(latencies: &Mutex<Vec<f64>>) -> f64 {
+    let samples = latencies.lock().unwrap();
+    quantile(&samples, 0.99)
+}
+
+fn quantile(xs: &[f64], _q: f64) -> f64 {
+    xs.first().copied().unwrap_or(0.0)
+}

@@ -1,0 +1,21 @@
+//! Known-good fixture for the `mutex-hold` rule: the guard lives in an
+//! inner block that ends before any I/O or quantile computation — the
+//! clone is taken under the lock, everything expensive happens after
+//! the guard is dropped.
+
+use std::io::Write;
+use std::sync::Mutex;
+
+pub fn snapshot(latencies: &Mutex<Vec<f64>>, out: &mut impl Write) -> f64 {
+    let samples = {
+        let guard = latencies.lock().unwrap();
+        guard.clone()
+    };
+    let p99 = quantile(&samples, 0.99);
+    writeln!(out, "p99={p99:.6}").unwrap();
+    p99
+}
+
+fn quantile(xs: &[f64], _q: f64) -> f64 {
+    xs.first().copied().unwrap_or(0.0)
+}

@@ -1,0 +1,13 @@
+//! Known-bad fixture for the `unsafe-audit` rule: two undocumented
+//! `unsafe` sites (a block and a fn). The lint must emit exactly two
+//! findings here — and must not count this doc comment's own mention
+//! of `unsafe` as a third.
+
+pub fn read_first(data: &[f32]) -> f32 {
+    let p = data.as_ptr();
+    unsafe { *p }
+}
+
+pub unsafe fn assume_positive(x: *const u32) -> u32 {
+    *x
+}

@@ -1,0 +1,21 @@
+//! Known-good fixture for the `unsafe-audit` rule: every `unsafe` is
+//! either documented with `// SAFETY:` within the five preceding lines
+//! or explicitly suppressed with an inline `lint:allow`. The word
+//! "unsafe" in comments and string literals must not trip the rule.
+
+pub fn read_first(data: &[f32]) -> f32 {
+    let p = data.as_ptr();
+    // SAFETY: the caller's contract guarantees `data` is non-empty, so
+    // reading one element at its base pointer stays in bounds.
+    unsafe { *p }
+}
+
+pub fn spelled_out() -> &'static str {
+    "this string mentions unsafe but is not code"
+}
+
+pub fn suppressed(x: &u32) -> u32 {
+    // lint:allow(unsafe-audit) — suppression-syntax demo; the
+    // justification for this site lives in the module docs instead.
+    unsafe { *(x as *const u32) }
+}

@@ -1,0 +1,160 @@
+//! Self-check for `cimdse lint`: every rule is exercised against its
+//! known-bad and known-good fixture trees under `tests/lint_fixtures/`
+//! (exact finding counts, not just "some findings"), the `--json`
+//! report shape is pinned, the real crate tree must be clean, and the
+//! protocol error-code registries are asserted identical by direct set
+//! comparison — independently of the rule that also checks them.
+
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+
+use cimdse::config::{Value, parse_json};
+use cimdse::lint::rules::error_codes;
+use cimdse::lint::{LintReport, lint_root, report, rule_names};
+
+/// (fixture dir, rule name, expected findings in the bad tree).
+const FIXTURES: &[(&str, &str, usize)] = &[
+    ("unsafe_audit", "unsafe-audit", 2),
+    ("error_code_registry", "error-code-registry", 3),
+    ("float_display", "float-display", 3),
+    ("mutex_hold", "mutex-hold", 2),
+    ("determinism", "determinism", 3),
+    ("dep_hygiene", "dep-hygiene", 5),
+];
+
+fn crate_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+}
+
+fn fixture_root(name: &str, kind: &str) -> PathBuf {
+    crate_root()
+        .join("tests")
+        .join("lint_fixtures")
+        .join(name)
+        .join(kind)
+}
+
+fn lint(path: &Path) -> LintReport {
+    lint_root(path).unwrap_or_else(|e| panic!("lint of {} failed: {e}", path.display()))
+}
+
+#[test]
+fn every_rule_flags_its_bad_fixture_exactly() {
+    for &(dir, rule, expected) in FIXTURES {
+        let report = lint(&fixture_root(dir, "bad"));
+        let got = report.findings.len();
+        assert_eq!(
+            got, expected,
+            "{dir}/bad: expected {expected} findings, got {got}: {:?}",
+            report
+                .findings
+                .iter()
+                .map(|f| format!("{}:{} [{}] {}", f.file, f.line, f.rule, f.message))
+                .collect::<Vec<_>>()
+        );
+        for f in &report.findings {
+            assert_eq!(
+                f.rule, rule,
+                "{dir}/bad: finding from unexpected rule: {}:{} [{}] {}",
+                f.file, f.line, f.rule, f.message
+            );
+        }
+    }
+}
+
+#[test]
+fn every_good_fixture_is_clean() {
+    for &(dir, _, _) in FIXTURES {
+        let report = lint(&fixture_root(dir, "good"));
+        assert!(
+            report.findings.is_empty(),
+            "{dir}/good: expected 0 findings, got: {:?}",
+            report
+                .findings
+                .iter()
+                .map(|f| format!("{}:{} [{}] {}", f.file, f.line, f.rule, f.message))
+                .collect::<Vec<_>>()
+        );
+    }
+}
+
+#[test]
+fn real_tree_is_clean() {
+    let report = lint(&crate_root());
+    assert!(
+        report.files_scanned >= 60,
+        "suspiciously few files scanned ({}) — did the walk break?",
+        report.files_scanned
+    );
+    assert!(
+        report.findings.is_empty(),
+        "real tree must lint clean; findings: {:?}",
+        report
+            .findings
+            .iter()
+            .map(|f| format!("{}:{} [{}] {}", f.file, f.line, f.rule, f.message))
+            .collect::<Vec<_>>()
+    );
+}
+
+#[test]
+fn json_report_schema_is_stable() {
+    let report = lint(&fixture_root("unsafe_audit", "bad"));
+    let json = report::to_json_value(&report).to_json_string().unwrap();
+    // must round-trip through the crate's own parser
+    let doc = parse_json(&json).unwrap_or_else(|e| panic!("unparsable lint JSON: {e}\n{json}"));
+    assert_eq!(doc.get("schema").and_then(Value::as_f64), Some(1.0));
+    assert!(doc.get("root").and_then(Value::as_str).is_some());
+    let scanned = doc
+        .get("files_scanned")
+        .and_then(Value::as_f64)
+        .expect("files_scanned");
+    assert!(scanned >= 1.0);
+    let rules = doc.get("rules").and_then(Value::as_array).expect("rules");
+    let listed: Vec<&str> = rules
+        .iter()
+        .map(|r| r.get("name").and_then(Value::as_str).expect("rule name"))
+        .collect();
+    assert_eq!(listed, rule_names(), "rule list drifted");
+    for r in rules {
+        assert!(r.get("description").and_then(Value::as_str).is_some());
+    }
+    let findings = doc
+        .get("findings")
+        .and_then(Value::as_array)
+        .expect("findings");
+    assert_eq!(findings.len(), 2);
+    for f in findings {
+        let Value::Table(map) = f else {
+            panic!("finding is not an object")
+        };
+        let keys: Vec<&str> = map.keys().map(String::as_str).collect();
+        assert_eq!(keys, ["file", "line", "message", "rule"], "finding keys drifted");
+        assert!(f.get("line").and_then(Value::as_f64).unwrap() >= 1.0);
+        assert_eq!(
+            f.get("rule").and_then(Value::as_str),
+            Some("unsafe-audit")
+        );
+    }
+}
+
+/// The tentpole contract of the `error-code-registry` rule, asserted
+/// directly: protocol.rs, docs/protocol.md and the corpus agree on the
+/// exact same code set — including `internal` and `over-budget`, the
+/// two codes that had drifted before this rule existed.
+#[test]
+fn error_code_registries_are_identical() {
+    let sets = error_codes::code_sets(&crate_root()).expect("all three registries readable");
+    let src: BTreeSet<&str> = sets.source.keys().map(String::as_str).collect();
+    let docs: BTreeSet<&str> = sets.docs.keys().map(String::as_str).collect();
+    let corpus: BTreeSet<&str> = sets.corpus.keys().map(String::as_str).collect();
+    assert_eq!(src, docs, "protocol.rs vs docs/protocol.md code sets");
+    assert_eq!(src, corpus, "protocol.rs vs corpus expect codes");
+    for must in ["internal", "over-budget"] {
+        assert!(src.contains(must), "`{must}` missing from protocol.rs");
+    }
+    assert!(
+        src.len() >= 7,
+        "expected at least the 7 stable protocol codes, got {src:?}"
+    );
+}

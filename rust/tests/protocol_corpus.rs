@@ -12,6 +12,7 @@ use std::time::Duration;
 
 use cimdse::adc::AdcModel;
 use cimdse::config::{Value, parse_json};
+use cimdse::service::protocol::{CODE_INTERNAL, Reject, error_frame};
 use cimdse::service::{Client, MAX_FRAME_BYTES, ServeOptions, Server};
 
 #[test]
@@ -47,6 +48,28 @@ fn corpus_frames_earn_their_exact_codes_over_a_real_socket() {
     let mut expected_error_frames = 0u64;
     for case in cases {
         let name = case.require_str("name").unwrap();
+        if let Some(via) = case.get("via").and_then(Value::as_str) {
+            // In-process coverage for codes a correct server cannot be
+            // provoked into sending over a socket (`internal`: every
+            // request is fully validated at parse time, so dispatch
+            // cannot fail on a valid one). Build the frame through the
+            // same public API the server uses and pin its wire shape.
+            assert_eq!(via, "error-frame", "{name}: unknown `via` kind `{via}`");
+            let expect = case.require_str("expect").unwrap();
+            let code = match expect {
+                "internal" => CODE_INTERNAL,
+                other => panic!("{name}: no error-frame builder for code `{other}`"),
+            };
+            let frame =
+                error_frame(Some("shard"), None, &Reject::new(code, "synthetic failure"));
+            assert!(!frame.contains('\n'), "{name}: frames are single lines");
+            let doc = parse_json(&frame)
+                .unwrap_or_else(|e| panic!("{name}: unparsable frame `{frame}`: {e}"));
+            assert_eq!(doc.get("ok").and_then(Value::as_bool), Some(false), "{name}");
+            assert_eq!(doc.require_str("error.code").unwrap(), expect, "{name}");
+            assert_eq!(doc.require_str("op").unwrap(), "shard", "{name}");
+            continue;
+        }
         let mut frame = case.require_str("frame").unwrap().to_string();
         if let Some(pad) = case.get("pad_to").and_then(Value::as_f64) {
             frame = frame.replace("@PAD@", &"x".repeat(pad as usize));
