@@ -8,7 +8,7 @@
 PYTHON ?= python3
 ARTIFACTS_DIR ?= artifacts
 
-.PHONY: artifacts build test lint ci clean-artifacts
+.PHONY: artifacts build test lint bench ci clean-artifacts
 
 ## Lower the JAX graphs to $(ARTIFACTS_DIR)/*.hlo.txt + manifest.json.
 artifacts:
@@ -33,6 +33,21 @@ test:
 ## Static invariant checks (rules + suppressions: rust/docs/lints.md).
 lint:
 	cd rust && cargo run --quiet --release -- lint .
+
+## Quick perf bench in both numeric-tier configurations (portable and,
+## on x86_64, the AVX2 `simd` feature), each validated by bench-report.
+## Artifacts: rust/BENCH_sweep.json + rust/BENCH_sweep_simd.json
+## (schema + tier policy: rust/docs/numeric_tiers.md).
+bench:
+	cd rust && CIMDSE_BENCH_QUICK=1 cargo bench --bench perf_hotpaths
+	cd rust && cargo run --quiet --release -- bench-report --path BENCH_sweep.json
+	@if [ "$$(uname -m)" = "x86_64" ]; then \
+	  cd rust && CIMDSE_BENCH_QUICK=1 CIMDSE_BENCH_OUT=BENCH_sweep_simd.json \
+	    cargo bench --bench perf_hotpaths --features simd && \
+	  cargo run --quiet --release -- bench-report --path BENCH_sweep_simd.json; \
+	else \
+	  echo "make bench: SKIP simd pass — host is $$(uname -m), AVX2 kernel is x86_64-only"; \
+	fi
 
 ## Full CI: tier-1 + bench/example compile checks + shard and serve
 ## smoke tests + perf artifacts.

@@ -22,6 +22,20 @@ target/release/cimdse lint --json . | grep -q '"findings": \[\]' \
 echo "== cargo test -q =="
 cargo test -q
 
+echo "== simd feature leg (x86_64 only) =="
+# The `simd` feature compiles the AVX2 lane kernel in util::fastmath
+# (docs/numeric_tiers.md). It is a no-op off x86_64 — the cfg gates
+# compile it out — so only x86_64 hosts exercise the build+test leg;
+# elsewhere we print a notice rather than pretend coverage.
+ARCH=$(uname -m)
+if [ "$ARCH" = "x86_64" ]; then
+  cargo build --release --features simd
+  cargo test -q --features simd
+else
+  echo "ci.sh: SKIP simd leg — host is $ARCH, the AVX2 kernel only compiles on x86_64"
+  echo "       (the portable fast-tier batch is covered by the default test run above)"
+fi
+
 echo "== bench targets compile (all-features preferred, default as fallback) =="
 # --all-features exercises the `pjrt` gate against the vendored xla API
 # shim; if that shim is ever swapped for real bindings that need system
@@ -154,9 +168,25 @@ rm -f BENCH_sweep.json
 CIMDSE_BENCH_QUICK=1 cargo bench --bench perf_hotpaths
 
 echo "== validate BENCH_sweep.json =="
-# Hard gate: a missing or malformed perf artifact fails CI.
+# Hard gate: a missing or malformed perf artifact fails CI. bench-report
+# rejects anything but schema 2 (which carries the `tiers` table), so a
+# stale artifact from an older binary also fails here.
 test -s BENCH_sweep.json || { echo "ci.sh: BENCH_sweep.json missing or empty" >&2; exit 1; }
 cargo run --quiet --release -- bench-report --path BENCH_sweep.json
+
+echo "== perf_hotpaths with --features simd (x86_64 only) -> BENCH_sweep_simd.json =="
+# Second quick bench with the AVX2 kernel compiled in, written next to
+# the portable-tier artifact so both tiers leave a validated record.
+if [ "$ARCH" = "x86_64" ]; then
+  rm -f BENCH_sweep_simd.json
+  CIMDSE_BENCH_QUICK=1 CIMDSE_BENCH_OUT=BENCH_sweep_simd.json \
+    cargo bench --bench perf_hotpaths --features simd
+  test -s BENCH_sweep_simd.json \
+    || { echo "ci.sh: BENCH_sweep_simd.json missing or empty" >&2; exit 1; }
+  cargo run --quiet --release -- bench-report --path BENCH_sweep_simd.json
+else
+  echo "ci.sh: SKIP simd bench — host is $ARCH (see simd leg above)"
+fi
 
 echo "== miri (nightly-only, auto-skips when the toolchain is absent) =="
 # Miri interprets the exec unit tests (the crate's only unsafe code:

@@ -1,9 +1,9 @@
 //! Bench: the whole-stack hot paths (EXPERIMENTS.md §Perf).
 //!
-//! L3 native: single-point eval, the three sweep tiers (serial eval,
-//! pooled eval, invariant-hoisted prepared kernel), streaming rollups,
-//! mapper, rollup. L3↔PJRT: artifact batch evaluation and marshalling
-//! overhead.
+//! L3 native: single-point eval, the sweep drivers (serial eval, pooled
+//! eval, invariant-hoisted prepared kernel, ULP-bounded fast tier),
+//! streaming rollups, mapper, rollup. L3↔PJRT: artifact batch evaluation
+//! and marshalling overhead.
 //!
 //! Writes the machine-readable perf trajectory to `BENCH_sweep.json`
 //! (schema in `bench_util::JsonReport`; `CIMDSE_BENCH_OUT` overrides the
@@ -15,7 +15,10 @@
 use cimdse::adc::{AdcModel, AdcQuery};
 use cimdse::arch::raella::{RaellaVariant, raella};
 use cimdse::bench_util::{Bench, JsonReport, quick, scale};
-use cimdse::dse::{NativeEvaluator, SweepSpec, run_sweep, run_sweep_prepared, sweep_min_eap};
+use cimdse::dse::{
+    NativeEvaluator, SweepSpec, SweepTier, run_sweep, run_sweep_prepared, run_sweep_prepared_tier,
+    sweep_min_eap,
+};
 use cimdse::energy::layer_energy;
 use cimdse::exec::{Pool, default_workers};
 use cimdse::mapper::map_layer;
@@ -68,6 +71,18 @@ fn main() {
     });
     report.case("dense18 prepared pooled", &s_prep_pool, n_points);
 
+    println!("fast tier backend: {}", cimdse::util::fastmath::fast_backend());
+    let s_fast = bench.run("sweep dense18: fast serial", || {
+        std::hint::black_box(run_sweep_prepared_tier(&spec, &model, 1, SweepTier::Fast).unwrap());
+    });
+    report.case("dense18 fast serial", &s_fast, n_points);
+    let s_fast_pool = bench.run("sweep dense18: fast pooled", || {
+        std::hint::black_box(
+            run_sweep_prepared_tier(&spec, &model, default_workers(), SweepTier::Fast).unwrap(),
+        );
+    });
+    report.case("dense18 fast pooled", &s_fast_pool, n_points);
+
     let speedup_prepared = s_serial.median_s / s_prep.median_s;
     let pool_scaling = s_prep.median_s / s_prep_pool.median_s;
     println!(
@@ -79,9 +94,18 @@ fn main() {
         n_points as f64 / s_prep_pool.median_s / 1e6,
         default_workers(),
     );
+    let speedup_fast = s_prep.median_s / s_fast.median_s;
+    println!(
+        "  -> dense18 fast tier ({}): {:.2} Mpts/s serial ({speedup_fast:.2}x over prepared \
+         scalar), {:.2} Mpts/s pooled",
+        cimdse::util::fastmath::fast_backend(),
+        n_points as f64 / s_fast.median_s / 1e6,
+        n_points as f64 / s_fast_pool.median_s / 1e6,
+    );
     report.metric("speedup_prepared_vs_serial_dense18", speedup_prepared);
     report.metric("pool_scaling_prepared_dense18", pool_scaling);
     report.metric("speedup_pooled_vs_serial_eval_dense18", s_serial.median_s / s_pool.median_s);
+    report.metric("speedup_fast_vs_prepared_dense18", speedup_fast);
     // Correctness pin: the prepared kernel must be bit-identical to the
     // eval path before any of its timings mean anything.
     let baseline = run_sweep(&spec, &serial).unwrap();
@@ -92,6 +116,30 @@ fn main() {
         assert_eq!(a.metrics.to_bits(), b.metrics.to_bits());
     }
     println!("  ok: prepared kernel bit-identical to AdcModel::eval over dense(18)");
+    // Fast tier pin: every metric within the documented ULP envelope of
+    // the exact kernel, and independent of the worker count.
+    let fast_out = run_sweep_prepared_tier(&spec, &model, 1, SweepTier::Fast).unwrap();
+    let fast_pool_out =
+        run_sweep_prepared_tier(&spec, &model, default_workers(), SweepTier::Fast).unwrap();
+    let mut worst_ulp = 0u64;
+    for ((exact, fast), fp) in prepared_out.iter().zip(&fast_out).zip(&fast_pool_out) {
+        assert_eq!(exact.query, fast.query);
+        assert_eq!(fast.metrics.to_bits(), fp.metrics.to_bits());
+        for (a, b) in exact.metrics.to_bits().iter().zip(fast.metrics.to_bits()) {
+            let d = cimdse::util::fastmath::ulp_distance(f64::from_bits(*a), f64::from_bits(b));
+            worst_ulp = worst_ulp.max(d);
+        }
+    }
+    assert!(
+        worst_ulp <= cimdse::util::fastmath::MAX_ULP,
+        "fast tier drifted to {worst_ulp} ULP (bound {})",
+        cimdse::util::fastmath::MAX_ULP
+    );
+    println!(
+        "  ok: fast tier within {worst_ulp} ULP of exact over dense(18) (bound {}), \
+         worker-independent",
+        cimdse::util::fastmath::MAX_ULP
+    );
     // Perf ratios are recorded in BENCH_sweep.json for trend tooling, not
     // hard-asserted: a noisy CI runner must not fail the build over them.
     if speedup_prepared <= 1.1 {

@@ -20,7 +20,7 @@ pub mod tuning;
 pub use coeffs::Coefficients;
 pub use fit::{FitReport, fit_model};
 pub use plugin::Estimator;
-pub use prepared::{PreparedModel, PreparedRow};
+pub use prepared::{PreparedModel, PreparedRow, PreparedRowLanes};
 pub use tuning::TuningPoint;
 
 use crate::util::logspace::{log10, pow10};

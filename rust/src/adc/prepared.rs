@@ -21,7 +21,18 @@
 //! the tests below and the `sweep_stream_properties` integration suite,
 //! which require exact bit equality (stronger than the 1-ulp contract).
 
+//! ## Fast tier
+//!
+//! [`PreparedRow::eval_log_f_fast`] and [`PreparedRowLanes`] are the
+//! opt-in approximate tier (`SweepTier::Fast`): identical log-domain
+//! arithmetic, but the two `pow10` calls go through
+//! [`crate::util::fastmath`]'s range-reduced polynomial instead of
+//! libm. Their results are ULP-bounded, not bit-exact, so the
+//! `determinism` lint bans them from fingerprinted paths; see
+//! `rust/docs/numeric_tiers.md`.
+
 use super::{AdcMetrics, AdcModel, AdcQuery};
+use crate::util::fastmath;
 use crate::util::logspace::{log10, pow10};
 
 /// A model prepared for row-major sweep evaluation.
@@ -121,6 +132,103 @@ impl PreparedRow {
     pub fn log_energy_pj(&self, log_f: f64) -> f64 {
         self.e_min.max(self.trade_base + self.b3 * log_f) + self.energy_offset
     }
+
+    /// Fast-tier scalar evaluation: the same hoisted log-domain
+    /// arithmetic as [`PreparedRow::eval_log_f`] (those intermediates
+    /// stay bit-identical) with the two `pow10` calls replaced by
+    /// [`fastmath::pow10_fast`]. Results are within
+    /// [`fastmath::MAX_ULP`] of the exact tier; inputs outside the fast
+    /// region (extreme or non-finite `log_f`) fall back to libm inside
+    /// `pow10_fast` and are bit-identical. This is also the tail path
+    /// the lane driver uses for remainders, so quad and tail agree.
+    #[inline]
+    pub fn eval_log_f_fast(&self, log_f: f64, total_throughput: f64, n_adcs: u32) -> AdcMetrics {
+        let log_e = self.e_min.max(self.trade_base + self.b3 * log_f) + self.energy_offset;
+        let log_area = self.area_base + self.d2 * log_f + self.d3 * log_e + self.area_offset;
+        let energy_pj = fastmath::pow10_fast(log_e);
+        let area = fastmath::pow10_fast(log_area);
+        AdcMetrics {
+            energy_pj_per_convert: energy_pj,
+            area_um2_per_adc: area,
+            total_power_w: energy_pj * 1e-12 * total_throughput,
+            total_area_um2: area * n_adcs as f64,
+        }
+    }
+}
+
+/// Four [`PreparedRow`]s transposed into structure-of-arrays lanes for
+/// the fast sweep tier: one [`PreparedRowLanes::eval4`] call evaluates
+/// four grid points per iteration.
+///
+/// Consecutive sweep grid points generally live on *different* rows
+/// (the grid is throughput-minor only within a row; `n_adcs` varies
+/// fastest), so the lane struct carries per-lane row constants rather
+/// than assuming one shared row.
+///
+/// Fast tier only — never reference this from fingerprinted code (the
+/// `determinism` lint enforces that). Lane results are bit-identical
+/// to four [`PreparedRow::eval_log_f_fast`] calls on every host and
+/// backend, which is what `tests/simd_equivalence.rs` pins.
+#[derive(Clone, Copy, Debug)]
+pub struct PreparedRowLanes {
+    e_min: [f64; 4],
+    trade_base: [f64; 4],
+    b3: [f64; 4],
+    area_base: [f64; 4],
+    d2: [f64; 4],
+    d3: [f64; 4],
+    energy_offset: [f64; 4],
+    area_offset: [f64; 4],
+}
+
+impl PreparedRowLanes {
+    /// Transpose four rows into lanes (lane `l` = `rows[l]`).
+    pub fn gather(rows: [&PreparedRow; 4]) -> PreparedRowLanes {
+        let pick = |field: fn(&PreparedRow) -> f64| {
+            [field(rows[0]), field(rows[1]), field(rows[2]), field(rows[3])]
+        };
+        PreparedRowLanes {
+            e_min: pick(|r| r.e_min),
+            trade_base: pick(|r| r.trade_base),
+            b3: pick(|r| r.b3),
+            area_base: pick(|r| r.area_base),
+            d2: pick(|r| r.d2),
+            d3: pick(|r| r.d3),
+            energy_offset: pick(|r| r.energy_offset),
+            area_offset: pick(|r| r.area_offset),
+        }
+    }
+
+    /// Evaluate four grid points, one per lane. Bit-identical to four
+    /// [`PreparedRow::eval_log_f_fast`] calls: the log-domain part
+    /// below is the same scalar arithmetic per lane, and
+    /// [`fastmath::pow10x4`] is bit-identical to four `pow10_fast`
+    /// calls by construction.
+    #[inline]
+    pub fn eval4(
+        &self,
+        log_f: [f64; 4],
+        total_throughput: [f64; 4],
+        n_adcs: [u32; 4],
+    ) -> [AdcMetrics; 4] {
+        let mut log_e = [0.0f64; 4];
+        let mut log_area = [0.0f64; 4];
+        for l in 0..4 {
+            let e = self.e_min[l].max(self.trade_base[l] + self.b3[l] * log_f[l])
+                + self.energy_offset[l];
+            log_e[l] = e;
+            log_area[l] =
+                self.area_base[l] + self.d2[l] * log_f[l] + self.d3[l] * e + self.area_offset[l];
+        }
+        let energy_pj = fastmath::pow10x4(log_e);
+        let area = fastmath::pow10x4(log_area);
+        std::array::from_fn(|l| AdcMetrics {
+            energy_pj_per_convert: energy_pj[l],
+            area_um2_per_adc: area[l],
+            total_power_w: energy_pj[l] * 1e-12 * total_throughput[l],
+            total_area_um2: area[l] * n_adcs[l] as f64,
+        })
+    }
 }
 
 #[cfg(test)]
@@ -187,6 +295,56 @@ mod tests {
                 let cached = log10(total / n as f64);
                 assert_eq!(cached.to_bits(), log10(q.throughput_per_adc()).to_bits());
             }
+        }
+    }
+
+    #[test]
+    fn fast_scalar_is_ulp_bounded_and_shares_log_domain() {
+        let model = AdcModel::default();
+        let prepared = PreparedModel::new(&model);
+        for enob in [2.0, 7.0, 13.9] {
+            for tech in [16.0, 65.0] {
+                let row = prepared.row(enob, tech);
+                for total in [1e4, 3.3e6, 4e10] {
+                    for n in [1u32, 8] {
+                        let log_f = log10(total / n as f64);
+                        let exact = row.eval_log_f(log_f, total, n);
+                        let fast = row.eval_log_f_fast(log_f, total, n);
+                        for (e, f) in exact.to_bits().iter().zip(fast.to_bits().iter()) {
+                            let d = fastmath::ulp_distance(
+                                f64::from_bits(*e),
+                                f64::from_bits(*f),
+                            );
+                            assert!(
+                                d <= fastmath::MAX_ULP,
+                                "enob={enob} tech={tech} total={total} n={n} ulp={d}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lanes_match_fast_scalar_bitwise() {
+        let model = AdcModel::default();
+        let prepared = PreparedModel::new(&model);
+        let rows = [
+            prepared.row(2.0, 16.0),
+            prepared.row(7.5, 32.0),
+            prepared.row(11.0, 65.0),
+            prepared.row(13.9, 130.0),
+        ];
+        let lanes = PreparedRowLanes::gather([&rows[0], &rows[1], &rows[2], &rows[3]]);
+        let totals = [1e4, 3.3e6, 1.3e9, 4e10];
+        let ns = [1u32, 3, 8, 32];
+        let log_f: [f64; 4] =
+            std::array::from_fn(|l| log10(totals[l] / ns[l] as f64));
+        let quad = lanes.eval4(log_f, totals, ns);
+        for l in 0..4 {
+            let scalar = rows[l].eval_log_f_fast(log_f[l], totals[l], ns[l]);
+            assert_eq!(quad[l].to_bits(), scalar.to_bits(), "lane {l}");
         }
     }
 

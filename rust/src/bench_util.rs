@@ -193,10 +193,11 @@ impl Bench {
 ///
 /// ```json
 /// {
-///   "schema": 1,
+///   "schema": 2,
 ///   "bench": "sweep",
 ///   "quick": false,
 ///   "workers": 8,
+///   "tiers": { "exact": "scalar", "fast": "avx2", "simd_feature": true },
 ///   "cases": {
 ///     "<case>": {
 ///       "median_s": 1.1e-3, "mean_s": 1.2e-3, "stddev_s": 1e-5,
@@ -207,6 +208,13 @@ impl Bench {
 ///   "derived": { "<metric>": 5.2 }
 /// }
 /// ```
+///
+/// Schema 2 added the `tiers` table: which numeric tier each backend
+/// resolved to on the measuring host (`exact` is always `"scalar"`;
+/// `fast` is `"avx2"` or `"portable"` per
+/// [`crate::util::fastmath::fast_backend`]; `simd_feature` records
+/// whether the `simd` cargo feature was compiled in). Without it, fast-
+/// tier numbers from different hosts are not comparable.
 #[derive(Clone, Debug)]
 pub struct JsonReport {
     bench: String,
@@ -249,9 +257,17 @@ impl JsonReport {
     /// The report as a config [`Value`] tree.
     pub fn to_value(&self) -> Value {
         let mut root = BTreeMap::new();
-        root.insert("schema".to_string(), Value::Number(1.0));
+        root.insert("schema".to_string(), Value::Number(2.0));
         root.insert("bench".to_string(), Value::String(self.bench.clone()));
         root.insert("quick".to_string(), Value::Bool(quick()));
+        let mut tiers = BTreeMap::new();
+        tiers.insert("exact".to_string(), Value::String("scalar".to_string()));
+        tiers.insert(
+            "fast".to_string(),
+            Value::String(crate::util::fastmath::fast_backend().to_string()),
+        );
+        tiers.insert("simd_feature".to_string(), Value::Bool(cfg!(feature = "simd")));
+        root.insert("tiers".to_string(), Value::Table(tiers));
         root.insert(
             "workers".to_string(),
             Value::Number(crate::exec::default_workers() as f64),
@@ -328,8 +344,12 @@ mod tests {
         report.metric("speedup_prepared_vs_serial", 5.2);
         let text = report.to_value().to_json_string().unwrap();
         let doc = crate::config::parse_json(&text).unwrap();
-        assert_eq!(doc.require_usize("schema").unwrap(), 1);
+        assert_eq!(doc.require_usize("schema").unwrap(), 2);
         assert_eq!(doc.require_str("bench").unwrap(), "sweep");
+        assert_eq!(doc.require_str("tiers.exact").unwrap(), "scalar");
+        let fast = doc.require_str("tiers.fast").unwrap();
+        assert!(fast == "avx2" || fast == "portable", "unknown fast backend {fast:?}");
+        assert!(doc.get("tiers.simd_feature").is_some());
         assert!(doc.get("cases.sweep: native serial.median_s").is_some());
         let mpts = doc
             .require_f64("cases.sweep: native serial.mpts_per_s")

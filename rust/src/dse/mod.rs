@@ -7,7 +7,7 @@
 //!
 //! ## The sweep hot path
 //!
-//! Three tiers, fastest first (all bit-identical — see
+//! Three drivers, fastest first (all bit-identical — see
 //! `tests/sweep_stream_properties.rs`):
 //!
 //! * [`run_sweep_fold`] — streaming rollup over the grid through the
@@ -25,6 +25,19 @@
 //! spec ([`ShardPlan`]), runs each to a self-describing JSON artifact
 //! ([`ShardArtifact`]), and merges any subset back ([`merge_shards`])
 //! bit-identically to the single-process streaming rollups.
+//!
+//! ## Numeric tiers
+//!
+//! Each driver also comes in a `_tier` form taking a [`SweepTier`].
+//! [`SweepTier::Exact`] (what the plain names run) is the bit-exact
+//! libm-backed reference above; [`SweepTier::Fast`] evaluates four grid
+//! points per iteration through [`PreparedRowLanes`] and the
+//! `util::fastmath` polynomial `pow10` — ULP-bounded against the exact
+//! tier (`tests/simd_equivalence.rs`), never used by fingerprinted or
+//! golden-pinned outputs ([`shard`] calls only the exact-tier entry
+//! points, and the `determinism` lint enforces that). Fast-tier results
+//! do not depend on worker count, chunking, or SIMD backend: the quad
+//! and tail kernels are bit-identical to each other on every host.
 
 pub mod accel;
 pub mod figures;
@@ -39,12 +52,13 @@ pub use shard::{
     artifact_file_name as shard_artifact_file_name, merge_shards, model_fingerprint,
     sweep_fingerprint,
 };
-pub use sweep::SweepSpec;
+pub use sweep::{SweepSpec, SweepTier};
 
-use crate::adc::{AdcMetrics, AdcModel, AdcQuery, PreparedModel, PreparedRow};
+use crate::adc::{AdcMetrics, AdcModel, AdcQuery, PreparedModel, PreparedRow, PreparedRowLanes};
 use crate::error::{Error, Result};
 use crate::exec::Pool;
 use crate::runtime::AdcModelEngine;
+use crate::util::logspace::log10;
 
 /// Queries generated per chunk by the streaming sweep drivers: large
 /// enough to amortize dispatch, small enough that a chunk's queries and
@@ -77,6 +91,10 @@ pub struct NativeEvaluator {
     pub workers: usize,
     /// Chunk size per work item (amortizes claim overhead).
     pub chunk: usize,
+    /// Numeric tier: [`SweepTier::Fast`] routes batches through the
+    /// lane-batched fast kernel instead of [`AdcModel::eval`]. Results
+    /// are then ULP-bounded, not bit-exact — see the module docs.
+    pub tier: SweepTier,
 }
 
 impl NativeEvaluator {
@@ -84,17 +102,83 @@ impl NativeEvaluator {
     /// claims ~100 µs of work — big enough to amortize a deque pop, small
     /// enough that even a fig-sized sweep fans out across the pool.
     pub fn new(model: AdcModel) -> Self {
-        NativeEvaluator { model, workers: crate::exec::default_workers(), chunk: 1024 }
+        NativeEvaluator {
+            model,
+            workers: crate::exec::default_workers(),
+            chunk: 1024,
+            tier: SweepTier::Exact,
+        }
     }
 
     /// Serial evaluator (useful for micro-benchmarks).
     pub fn serial(model: AdcModel) -> Self {
-        NativeEvaluator { model, workers: 1, chunk: usize::MAX }
+        NativeEvaluator { model, workers: 1, chunk: usize::MAX, tier: SweepTier::Exact }
+    }
+
+    /// Builder-style tier switch.
+    pub fn with_tier(mut self, tier: SweepTier) -> Self {
+        self.tier = tier;
+        self
+    }
+
+    /// Fast-tier batch evaluation: whole quads through
+    /// [`PreparedRowLanes::eval4`], remainders through the scalar fast
+    /// kernel. The two are bit-identical, so results do not depend on
+    /// worker count, chunk boundaries, or SIMD backend.
+    fn eval_fast(&self, queries: &[AdcQuery]) -> Vec<AdcMetrics> {
+        let prepared = PreparedModel::new(&self.model);
+        let eval_range = |start: usize, out: &mut [AdcMetrics]| {
+            let mut l = 0usize;
+            while l + 4 <= out.len() {
+                let q = &queries[start + l..start + l + 4];
+                let rows = [
+                    prepared.row(q[0].enob, q[0].tech_nm),
+                    prepared.row(q[1].enob, q[1].tech_nm),
+                    prepared.row(q[2].enob, q[2].tech_nm),
+                    prepared.row(q[3].enob, q[3].tech_nm),
+                ];
+                let lanes = PreparedRowLanes::gather([&rows[0], &rows[1], &rows[2], &rows[3]]);
+                let log_f = [
+                    log10(q[0].throughput_per_adc()),
+                    log10(q[1].throughput_per_adc()),
+                    log10(q[2].throughput_per_adc()),
+                    log10(q[3].throughput_per_adc()),
+                ];
+                let totals = [
+                    q[0].total_throughput,
+                    q[1].total_throughput,
+                    q[2].total_throughput,
+                    q[3].total_throughput,
+                ];
+                let ns = [q[0].n_adcs, q[1].n_adcs, q[2].n_adcs, q[3].n_adcs];
+                out[l..l + 4].copy_from_slice(&lanes.eval4(log_f, totals, ns));
+                l += 4;
+            }
+            for j in l..out.len() {
+                let q = &queries[start + j];
+                out[j] = prepared.row(q.enob, q.tech_nm).eval_log_f_fast(
+                    log10(q.throughput_per_adc()),
+                    q.total_throughput,
+                    q.n_adcs,
+                );
+            }
+        };
+        let mut out = vec![AdcMetrics::default(); queries.len()];
+        if self.workers == 1 || queries.len() <= 1 {
+            eval_range(0, &mut out);
+        } else {
+            Pool::global()
+                .fill_chunk_ranges(&mut out, self.chunk, |start, slice| eval_range(start, slice));
+        }
+        out
     }
 }
 
 impl Evaluator for NativeEvaluator {
     fn eval(&self, queries: &[AdcQuery]) -> Result<Vec<AdcMetrics>> {
+        if self.tier == SweepTier::Fast {
+            return Ok(self.eval_fast(queries));
+        }
         if self.workers == 1 || queries.len() <= 1 {
             return Ok(queries.iter().map(|q| self.model.eval(q)).collect());
         }
@@ -240,6 +324,81 @@ impl<'a> PreparedSweep<'a> {
             f(i, &query, &metrics);
         });
     }
+
+    /// Fast-tier variant of [`PreparedSweep::for_each_in_range`]: the
+    /// same odometer iteration, buffered into quads for
+    /// [`PreparedRowLanes::eval4`] (consecutive grid points usually sit
+    /// on different rows — `n_adcs` varies fastest — hence the per-lane
+    /// gather). Points are still handed to `f` in exact grid order;
+    /// sub-quad remainders go through the scalar fast kernel, which is
+    /// bit-identical to the lane kernel, so range splits cannot change
+    /// results.
+    fn for_each_in_range_fast<F: FnMut(usize, &AdcQuery, &AdcMetrics)>(
+        &self,
+        range: std::ops::Range<usize>,
+        mut f: F,
+    ) {
+        let n = self.spec.n_adcs.len();
+        let k = self.spec.tech_nms.len();
+        let mut idx = [0usize; 4];
+        let mut row_i = [0usize; 4];
+        let mut log_fs = [0.0f64; 4];
+        let mut queries = [AdcQuery::default(); 4];
+        let mut filled = 0usize;
+        self.spec.for_each_index_in_range(range, |i, ei, ti, ki, ni| {
+            idx[filled] = i;
+            row_i[filled] = ei * k + ki;
+            log_fs[filled] = self.log_f[ti * n + ni];
+            queries[filled] = AdcQuery {
+                enob: self.spec.enobs[ei],
+                total_throughput: self.spec.total_throughputs[ti],
+                tech_nm: self.spec.tech_nms[ki],
+                n_adcs: self.spec.n_adcs[ni],
+            };
+            filled += 1;
+            if filled == 4 {
+                filled = 0;
+                let lanes = PreparedRowLanes::gather([
+                    &self.rows[row_i[0]],
+                    &self.rows[row_i[1]],
+                    &self.rows[row_i[2]],
+                    &self.rows[row_i[3]],
+                ]);
+                let totals = [
+                    queries[0].total_throughput,
+                    queries[1].total_throughput,
+                    queries[2].total_throughput,
+                    queries[3].total_throughput,
+                ];
+                let ns = [queries[0].n_adcs, queries[1].n_adcs, queries[2].n_adcs, queries[3].n_adcs];
+                let metrics = lanes.eval4(log_fs, totals, ns);
+                for l in 0..4 {
+                    f(idx[l], &queries[l], &metrics[l]);
+                }
+            }
+        });
+        for l in 0..filled {
+            let metrics = self.rows[row_i[l]].eval_log_f_fast(
+                log_fs[l],
+                queries[l].total_throughput,
+                queries[l].n_adcs,
+            );
+            f(idx[l], &queries[l], &metrics);
+        }
+    }
+
+    /// Tier dispatch over the two range drivers above.
+    fn for_each_in_range_tier<F: FnMut(usize, &AdcQuery, &AdcMetrics)>(
+        &self,
+        tier: SweepTier,
+        range: std::ops::Range<usize>,
+        f: F,
+    ) {
+        match tier {
+            SweepTier::Exact => self.for_each_in_range(range, f),
+            SweepTier::Fast => self.for_each_in_range_fast(range, f),
+        }
+    }
 }
 
 /// Pool chunk size for streaming sweeps: enough chunks for stealing to
@@ -257,6 +416,19 @@ pub fn run_sweep_prepared(
     model: &AdcModel,
     workers: usize,
 ) -> Result<Vec<EvaluatedPoint>> {
+    run_sweep_prepared_tier(spec, model, workers, SweepTier::Exact)
+}
+
+/// [`run_sweep_prepared`] on an explicit [`SweepTier`].
+/// [`SweepTier::Fast`] evaluates quads through [`PreparedRowLanes`];
+/// its output is ULP-bounded (not bit-exact) against the exact tier but
+/// independent of `workers` and SIMD backend.
+pub fn run_sweep_prepared_tier(
+    spec: &SweepSpec,
+    model: &AdcModel,
+    workers: usize,
+    tier: SweepTier,
+) -> Result<Vec<EvaluatedPoint>> {
     let n = spec.checked_len().ok_or_else(|| {
         Error::Numeric(
             "sweep grid length overflows usize; split the spec into sub-range specs".into(),
@@ -265,7 +437,7 @@ pub fn run_sweep_prepared(
     let prepared = PreparedSweep::new(spec, model);
     if workers == 1 || n <= 1 {
         let mut out = Vec::with_capacity(n);
-        prepared.for_each_in_range(0..n, |_, q, m| {
+        prepared.for_each_in_range_tier(tier, 0..n, |_, q, m| {
             out.push(EvaluatedPoint { query: *q, metrics: *m });
         });
         return Ok(out);
@@ -273,7 +445,7 @@ pub fn run_sweep_prepared(
     let mut out = vec![EvaluatedPoint::default(); n];
     Pool::global().fill_chunk_ranges(&mut out, stream_chunk(n), |start, slice| {
         let mut j = 0usize;
-        prepared.for_each_in_range(start..start + slice.len(), |_, q, m| {
+        prepared.for_each_in_range_tier(tier, start..start + slice.len(), |_, q, m| {
             slice[j] = EvaluatedPoint { query: *q, metrics: *m };
             j += 1;
         });
@@ -321,7 +493,31 @@ where
     let n = spec
         .checked_len()
         .expect("sweep grid length overflows usize; split the spec into sub-range specs");
-    run_sweep_fold_range(spec, model, workers, 0..n, init, fold, merge)
+    run_sweep_fold_range_tier(spec, model, workers, SweepTier::Exact, 0..n, init, fold, merge)
+}
+
+/// [`run_sweep_fold`] on an explicit [`SweepTier`] (see
+/// [`run_sweep_prepared_tier`] for the fast tier's contract). Panics
+/// like [`run_sweep_fold`] on a length-overflowed grid.
+pub fn run_sweep_fold_tier<A, I, F, M>(
+    spec: &SweepSpec,
+    model: &AdcModel,
+    workers: usize,
+    tier: SweepTier,
+    init: I,
+    fold: F,
+    merge: M,
+) -> A
+where
+    A: Send,
+    I: Fn() -> A + Sync,
+    F: Fn(&mut A, usize, &AdcQuery, &AdcMetrics) + Sync,
+    M: Fn(A, A) -> A,
+{
+    let n = spec
+        .checked_len()
+        .expect("sweep grid length overflows usize; split the spec into sub-range specs");
+    run_sweep_fold_range_tier(spec, model, workers, tier, 0..n, init, fold, merge)
 }
 
 /// [`run_sweep_fold`] restricted to a contiguous sub-range of grid
@@ -346,6 +542,30 @@ where
     F: Fn(&mut A, usize, &AdcQuery, &AdcMetrics) + Sync,
     M: Fn(A, A) -> A,
 {
+    run_sweep_fold_range_tier(spec, model, workers, SweepTier::Exact, range, init, fold, merge)
+}
+
+/// [`run_sweep_fold_range`] on an explicit [`SweepTier`] — the single
+/// implementation every fold driver funnels through. Shard execution
+/// ([`shard::SweepSummary`]) calls the exact-tier wrapper only, so
+/// fingerprinted artifacts never touch the fast kernel.
+#[allow(clippy::too_many_arguments)]
+pub fn run_sweep_fold_range_tier<A, I, F, M>(
+    spec: &SweepSpec,
+    model: &AdcModel,
+    workers: usize,
+    tier: SweepTier,
+    range: std::ops::Range<usize>,
+    init: I,
+    fold: F,
+    merge: M,
+) -> A
+where
+    A: Send,
+    I: Fn() -> A + Sync,
+    F: Fn(&mut A, usize, &AdcQuery, &AdcMetrics) + Sync,
+    M: Fn(A, A) -> A,
+{
     let len = spec
         .checked_len()
         .expect("sweep grid length overflows usize; split the spec into sub-range specs");
@@ -357,12 +577,12 @@ where
     let prepared = PreparedSweep::new(spec, model);
     if workers == 1 || n <= 1 {
         let mut acc = init();
-        prepared.for_each_in_range(range, |i, q, m| fold(&mut acc, i, q, m));
+        prepared.for_each_in_range_tier(tier, range, |i, q, m| fold(&mut acc, i, q, m));
         return acc;
     }
     let base = range.start;
     let accs = Pool::global().fold_chunks(n, stream_chunk(n), &init, |acc, chunk| {
-        prepared.for_each_in_range(base + chunk.start..base + chunk.end, |i, q, m| {
+        prepared.for_each_in_range_tier(tier, base + chunk.start..base + chunk.end, |i, q, m| {
             fold(acc, i, q, m)
         });
     });
@@ -388,14 +608,28 @@ pub fn sweep_min_eap(
     model: &AdcModel,
     workers: usize,
 ) -> Option<EvaluatedPoint> {
+    sweep_min_eap_tier(spec, model, workers, SweepTier::Exact)
+}
+
+/// [`sweep_min_eap`] on an explicit [`SweepTier`]. The fast tier's
+/// per-point ULP error can in principle flip an argmin between two
+/// near-tied candidates; exact-tier summaries (shards, serve) are
+/// unaffected because they never run on [`SweepTier::Fast`].
+pub fn sweep_min_eap_tier(
+    spec: &SweepSpec,
+    model: &AdcModel,
+    workers: usize,
+    tier: SweepTier,
+) -> Option<EvaluatedPoint> {
     type Best = Option<(usize, f64, EvaluatedPoint)>;
     let better = |a: &(usize, f64, EvaluatedPoint), b: &(usize, f64, EvaluatedPoint)| {
         eap_candidate_better((a.0, a.1), (b.0, b.1))
     };
-    run_sweep_fold(
+    run_sweep_fold_tier(
         spec,
         model,
         workers,
+        tier,
         || None,
         |best: &mut Best, i, q, m| {
             let eap = m.energy_pj_per_convert * m.total_area_um2;
@@ -600,6 +834,89 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn fast_tier_is_ulp_bounded_and_worker_independent() {
+        use crate::util::fastmath::{MAX_ULP, ulp_distance};
+        let model = AdcModel::default();
+        // dense(5) has 600 points (600 % 4 == 0); small_spec has 36 — a
+        // 4-remainder exercise rides in via fold ranges below.
+        for spec in [SweepSpec::dense(5), small_spec()] {
+            let exact = run_sweep_prepared(&spec, &model, 1).unwrap();
+            let fast1 = run_sweep_prepared_tier(&spec, &model, 1, SweepTier::Fast).unwrap();
+            let fast4 = run_sweep_prepared_tier(&spec, &model, 4, SweepTier::Fast).unwrap();
+            assert_eq!(fast1.len(), exact.len());
+            for ((e, f1), f4) in exact.iter().zip(&fast1).zip(&fast4) {
+                assert_eq!(e.query, f1.query);
+                // worker count must not change fast-tier bits
+                assert_eq!(f1.metrics.to_bits(), f4.metrics.to_bits());
+                for (a, b) in e.metrics.to_bits().iter().zip(f1.metrics.to_bits().iter()) {
+                    let d = ulp_distance(f64::from_bits(*a), f64::from_bits(*b));
+                    assert!(d <= MAX_ULP, "ulp {d} at {:?}", e.query);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fast_fold_matches_fast_materialized_at_odd_ranges() {
+        let model = AdcModel::default();
+        let spec = small_spec();
+        let all = run_sweep_prepared_tier(&spec, &model, 1, SweepTier::Fast).unwrap();
+        let n = spec.len();
+        // ranges with sub-quad remainders: tail and quad kernels must agree
+        for (start, end) in [(0usize, 3usize), (1, 6), (5, 19), (n - 2, n), (0, n)] {
+            for workers in [1usize, 4] {
+                let visited = run_sweep_fold_range_tier(
+                    &spec,
+                    &model,
+                    workers,
+                    SweepTier::Fast,
+                    start..end,
+                    Vec::new,
+                    |acc: &mut Vec<(usize, [u64; 4])>, i, q, m| {
+                        assert_eq!(all[i].query, *q);
+                        acc.push((i, m.to_bits()));
+                    },
+                    |mut a, b| {
+                        a.extend(b);
+                        a
+                    },
+                );
+                for (i, bits) in visited {
+                    assert_eq!(bits, all[i].metrics.to_bits(), "{start}..{end} index {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fast_native_evaluator_matches_prepared_fast_tier() {
+        let model = AdcModel::default();
+        let spec = small_spec();
+        let prepared = run_sweep_prepared_tier(&spec, &model, 1, SweepTier::Fast).unwrap();
+        for eval in [
+            NativeEvaluator::serial(model).with_tier(SweepTier::Fast),
+            NativeEvaluator::new(model).with_tier(SweepTier::Fast),
+        ] {
+            let out = eval.eval(&spec.points()).unwrap();
+            assert_eq!(out.len(), prepared.len());
+            for (a, b) in out.iter().zip(&prepared) {
+                assert_eq!(a.to_bits(), b.metrics.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn fast_min_eap_agrees_with_exact_argmin_on_default_grid() {
+        let model = AdcModel::default();
+        let spec = SweepSpec::dense(6);
+        let exact = sweep_min_eap(&spec, &model, 1).unwrap();
+        let fast = sweep_min_eap_tier(&spec, &model, 4, SweepTier::Fast).unwrap();
+        // the default grid's EAP minimum is not near-tied, so the
+        // ULP-bounded tier must land on the same design point
+        assert_eq!(exact.query, fast.query);
     }
 
     #[test]

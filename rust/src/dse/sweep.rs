@@ -13,6 +13,45 @@ use crate::config::Value;
 use crate::error::{Error, Result};
 use crate::util::logspace::{log10, logspace};
 
+/// Numeric tier a sweep evaluates on (see `rust/docs/numeric_tiers.md`).
+///
+/// [`SweepTier::Exact`] is the libm-backed bit-exact reference — the
+/// only tier fingerprinted or golden-pinned outputs (shard artifacts,
+/// served responses, sweep summaries, golden figures) ever run on.
+/// [`SweepTier::Fast`] is the opt-in lane-batched polynomial tier
+/// (`util::fastmath` + `PreparedRowLanes`): same results to within a
+/// property-tested ULP bound, roughly the same on every host (the
+/// AVX2 and portable backends are bit-identical to each other).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SweepTier {
+    /// Bit-exact libm-backed scalar reference (the default).
+    #[default]
+    Exact,
+    /// ULP-bounded lane-batched polynomial tier.
+    Fast,
+}
+
+impl SweepTier {
+    /// Parse a CLI/user-supplied tier name; typed error names the set.
+    pub fn parse(s: &str) -> Result<SweepTier> {
+        match s {
+            "exact" => Ok(SweepTier::Exact),
+            "fast" => Ok(SweepTier::Fast),
+            other => Err(Error::Config(format!(
+                "unknown sweep tier `{other}` (valid tiers: fast, exact)"
+            ))),
+        }
+    }
+
+    /// The stable lower-case name (`"exact"` / `"fast"`).
+    pub fn name(self) -> &'static str {
+        match self {
+            SweepTier::Exact => "exact",
+            SweepTier::Fast => "fast",
+        }
+    }
+}
+
 /// A cartesian sweep over (ENOB, total throughput, tech node, #ADCs).
 #[derive(Clone, Debug)]
 pub struct SweepSpec {
@@ -262,6 +301,19 @@ impl SweepSpec {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn tier_parse_roundtrips_and_rejects() {
+        assert_eq!(SweepTier::parse("exact").unwrap(), SweepTier::Exact);
+        assert_eq!(SweepTier::parse("fast").unwrap(), SweepTier::Fast);
+        assert_eq!(SweepTier::default(), SweepTier::Exact);
+        for t in [SweepTier::Exact, SweepTier::Fast] {
+            assert_eq!(SweepTier::parse(t.name()).unwrap(), t);
+        }
+        let err = SweepTier::parse("turbo").unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("turbo") && msg.contains("fast") && msg.contains("exact"), "{msg}");
+    }
 
     #[test]
     fn cartesian_count_and_order() {

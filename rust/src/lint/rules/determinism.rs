@@ -1,13 +1,16 @@
 //! `determinism`: fingerprinted/serialized paths must not consult wall
-//! clocks or iterate unordered maps. Sweep fingerprints, shard
-//! artifacts and NDJSON frames are diffed byte-for-byte across
-//! processes (see `merge-shards` and the serve protocol), so
-//! `SystemTime::now` / `Instant::now` readings and `HashMap` iteration
-//! order must never reach those payloads. The rule is scoped to the
-//! files that build them: `src/config/` (serializers), `src/dse/
-//! shard.rs` (artifacts + fingerprints) and the protocol/server pair.
-//! Legitimate uses (e.g. latency metrics in the server) carry a
-//! `lint:allow(determinism)` with the reason.
+//! clocks, iterate unordered maps, or call ULP-bounded fast-tier math.
+//! Sweep fingerprints, shard artifacts and NDJSON frames are diffed
+//! byte-for-byte across processes (see `merge-shards` and the serve
+//! protocol), so `SystemTime::now` / `Instant::now` readings and
+//! `HashMap` iteration order must never reach those payloads — and
+//! neither may the approximate sweep tier (`util::fastmath`,
+//! `PreparedRowLanes`, `pow10_fast`), whose results are only
+//! ULP-bounded against the bit-exact reference. The rule is scoped to
+//! the files that build those payloads: `src/config/` (serializers),
+//! `src/dse/shard.rs` (artifacts + fingerprints) and the
+//! protocol/server pair. Legitimate uses (e.g. latency metrics in the
+//! server) carry a `lint:allow(determinism)` with the reason.
 
 use crate::lint::{Context, Finding, Rule};
 
@@ -17,7 +20,14 @@ const DET_FILES: &[&str] = &[
     "src/service/server.rs",
 ];
 const DET_SCOPES: &[&str] = &["src/config/"];
-const DET_TOKENS: &[&str] = &["SystemTime::now", "Instant::now", "HashMap"];
+const DET_TOKENS: &[&str] = &[
+    "SystemTime::now",
+    "Instant::now",
+    "HashMap",
+    "fastmath",
+    "PreparedRowLanes",
+    "pow10_fast",
+];
 
 pub struct Determinism;
 
@@ -27,7 +37,7 @@ impl Rule for Determinism {
     }
 
     fn description(&self) -> &'static str {
-        "no wall-clock reads or HashMap in fingerprinted/serialized paths"
+        "no wall-clock reads, HashMap, or fast-tier math in fingerprinted/serialized paths"
     }
 
     fn check(&self, ctx: &Context, out: &mut Vec<Finding>) {

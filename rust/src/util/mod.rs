@@ -1,8 +1,12 @@
 //! Small numeric / formatting substrates shared across the crate.
 
+pub mod fastmath;
 pub mod logspace;
 pub mod rng;
 pub mod units;
 
+// `fastmath` items are deliberately not re-exported: call sites must
+// spell out the module (the determinism lint bans that token from
+// fingerprinted paths, so approximate math stays greppable).
 pub use logspace::{linspace, log10, logspace, pow10};
 pub use rng::Rng;

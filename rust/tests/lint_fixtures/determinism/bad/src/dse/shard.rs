@@ -1,6 +1,6 @@
-//! Known-bad fixture for the `determinism` rule: wall-clock reads and
-//! an unordered map on a fingerprinted artifact path. Exactly three
-//! findings.
+//! Known-bad fixture for the `determinism` rule: wall-clock reads, an
+//! unordered map, and ULP-bounded fast-tier math on a fingerprinted
+//! artifact path. Exactly five findings.
 
 pub fn artifact_stamp() -> (usize, f64) {
     let t0 = std::time::Instant::now();
@@ -9,4 +9,10 @@ pub fn artifact_stamp() -> (usize, f64) {
     keys.insert("a", 1.0_f64);
     let _ = wall;
     (keys.len(), t0.elapsed().as_secs_f64())
+}
+
+pub fn approximate_fingerprint(x: f64) -> f64 {
+    let e = crate::util::fastmath::exp2_fast(x);
+    let lanes = PreparedRowLanes::gather_stub(e);
+    e + lanes
 }

@@ -1,0 +1,299 @@
+//! Differential property suite for the fast sweep tier (satellite of
+//! the SIMD-lane PR): randomized inputs drive the fast kernel against
+//! the exact libm-backed path and assert the documented contracts:
+//!
+//! * `pow10_fast` / `pow10x4` stay within `fastmath::MAX_ULP` of libm
+//!   in the fast region and are bit-identical in the fallback region
+//!   (extremes, denormal-scale arguments, NaN/±inf);
+//! * fast-tier sweeps over arbitrary specs and tuned models stay within
+//!   `MAX_ULP` of the exact tier per metric, and their bytes do not
+//!   depend on worker count (quad vs. tail kernels agree bitwise);
+//! * the exact tier through every driver stays **bit-identical** to
+//!   `AdcModel::eval` — the fast tier must not perturb it;
+//! * real workload throughputs (zoo networks mapped onto RAELLA) behave
+//!   the same as synthetic grids.
+//!
+//! Scalar-vs-AVX2 backend parity is asserted inside
+//! `util::fastmath::tests::pow10x4_matches_scalar_bitwise`; this file's
+//! claims therefore hold verbatim with and without `--features simd`.
+
+use cimdse::adc::{AdcModel, AdcQuery, PreparedModel, TuningPoint};
+use cimdse::arch::raella::{RaellaVariant, raella};
+use cimdse::dse::{
+    NativeEvaluator, SweepSpec, SweepTier, run_sweep, run_sweep_fold_tier, run_sweep_prepared,
+    run_sweep_prepared_tier,
+};
+use cimdse::mapper::map_layer;
+use cimdse::testing::{Config, check};
+use cimdse::util::Rng;
+use cimdse::util::fastmath::{MAX_ULP, pow10_fast, pow10x4, ulp_distance};
+use cimdse::util::logspace::{log10, pow10};
+use cimdse::workload::zoo::by_name;
+
+/// A random spec with 0..=4 values per axis, inside the model's valid
+/// ranges (mirrors the generator in `sweep_stream_properties.rs`).
+fn arbitrary_spec(rng: &mut Rng) -> SweepSpec {
+    let axis_len = |rng: &mut Rng| rng.index(5);
+    SweepSpec {
+        enobs: (0..axis_len(rng)).map(|_| rng.uniform(2.0, 14.0)).collect(),
+        total_throughputs: (0..axis_len(rng))
+            .map(|_| 10f64.powf(rng.uniform(4.0, 10.5)))
+            .collect(),
+        tech_nms: (0..axis_len(rng)).map(|_| rng.uniform(7.0, 180.0)).collect(),
+        n_adcs: (0..axis_len(rng)).map(|_| 1 + rng.index(64) as u32).collect(),
+    }
+}
+
+/// Default or tuned model, so the offset-decade rows are exercised too.
+fn arbitrary_model(rng: &mut Rng) -> AdcModel {
+    let base = AdcModel::default();
+    if rng.bool(0.5) {
+        return base;
+    }
+    base.tuned_to(&TuningPoint {
+        query: AdcQuery {
+            enob: rng.uniform(4.0, 10.0),
+            total_throughput: 10f64.powf(rng.uniform(6.0, 10.0)),
+            tech_nm: 32.0,
+            n_adcs: 1,
+        },
+        energy_pj_per_convert: 10f64.powf(rng.uniform(-1.0, 1.5)),
+        area_um2: if rng.bool(0.5) { Some(10f64.powf(rng.uniform(2.0, 5.0))) } else { None },
+    })
+}
+
+/// Max per-metric ULP distance between two evaluated sweeps, asserting
+/// the queries line up.
+fn max_sweep_ulp(
+    exact: &[cimdse::dse::EvaluatedPoint],
+    fast: &[cimdse::dse::EvaluatedPoint],
+) -> u64 {
+    assert_eq!(exact.len(), fast.len());
+    let mut worst = 0u64;
+    for (a, b) in exact.iter().zip(fast) {
+        assert_eq!(a.query, b.query);
+        for (ea, eb) in a.metrics.to_bits().iter().zip(b.metrics.to_bits()) {
+            worst = worst.max(ulp_distance(f64::from_bits(*ea), f64::from_bits(eb)));
+        }
+    }
+    worst
+}
+
+#[test]
+fn pow10_fast_randomized_ulp_bound_and_fallback_bit_identity() {
+    check(Config::default().cases(400).seed(71), |rng| {
+        // Fast region: within the documented bound of libm.
+        for _ in 0..256 {
+            let x = rng.uniform(-15.5, 15.5);
+            let d = ulp_distance(pow10_fast(x), pow10(x));
+            assert!(d <= MAX_ULP, "x={x} ulp={d}");
+        }
+        // Fallback region (|round(x)| > 15): bit-identical to libm,
+        // overflow/underflow/denormal results included.
+        let x = if rng.bool(0.5) { rng.uniform(15.5, 340.0) } else { rng.uniform(-340.0, -15.5) };
+        if x.abs() > 15.5 {
+            assert_eq!(pow10_fast(x).to_bits(), pow10(x).to_bits(), "x={x}");
+        }
+        // Lane batches equal four scalar calls bit-for-bit on random
+        // quads straddling both regions.
+        let lane = |rng: &mut Rng| rng.uniform(-20.0, 20.0);
+        let xs = [lane(rng), lane(rng), lane(rng), lane(rng)];
+        let batch = pow10x4(xs);
+        for l in 0..4 {
+            assert_eq!(batch[l].to_bits(), pow10_fast(xs[l]).to_bits(), "lane {l} of {xs:?}");
+        }
+    });
+}
+
+#[test]
+fn fast_sweeps_are_ulp_bounded_and_worker_independent() {
+    check(Config::default().cases(60).seed(72), |rng| {
+        let spec = arbitrary_spec(rng);
+        let model = arbitrary_model(rng);
+        let exact = run_sweep_prepared(&spec, &model, 1).unwrap();
+        let fast1 = run_sweep_prepared_tier(&spec, &model, 1, SweepTier::Fast).unwrap();
+        let fast4 = run_sweep_prepared_tier(&spec, &model, 4, SweepTier::Fast).unwrap();
+        assert!(max_sweep_ulp(&exact, &fast1) <= MAX_ULP);
+        // Worker count must not change a single byte of fast output.
+        assert_eq!(fast1.len(), fast4.len());
+        for (a, b) in fast1.iter().zip(&fast4) {
+            assert_eq!(a.query, b.query);
+            assert_eq!(a.metrics.to_bits(), b.metrics.to_bits());
+        }
+    });
+}
+
+#[test]
+fn odd_tail_specs_match_the_scalar_fast_reference_bitwise() {
+    // Grid sizes with every lane remainder (len % 4 ∈ {0,1,2,3}): the
+    // quad kernel and the scalar tail must be indistinguishable, so the
+    // whole fast sweep equals a pure `eval_log_f_fast` replay bit-wise.
+    let model = AdcModel::default();
+    let prepared = PreparedModel::new(&model);
+    for n_thr in [1usize, 2, 3, 4, 5, 6, 7, 9, 13] {
+        let spec = SweepSpec {
+            enobs: vec![4.0, 9.5],
+            total_throughputs: cimdse::util::logspace::logspace(1e5, 1e10, n_thr),
+            tech_nms: vec![32.0],
+            n_adcs: vec![1, 8, 64],
+        };
+        let fast = run_sweep_prepared_tier(&spec, &model, 1, SweepTier::Fast).unwrap();
+        assert_eq!(fast.len(), spec.len());
+        for (p, q) in fast.iter().zip(spec.points()) {
+            assert_eq!(p.query, q);
+            let row = prepared.row(q.enob, q.tech_nm);
+            let reference = row.eval_log_f_fast(
+                log10(q.total_throughput / q.n_adcs as f64),
+                q.total_throughput,
+                q.n_adcs,
+            );
+            assert_eq!(p.metrics.to_bits(), reference.to_bits(), "n_thr={n_thr} q={q:?}");
+        }
+    }
+}
+
+#[test]
+fn fast_fold_streams_the_same_bytes_as_the_materialized_fast_sweep() {
+    check(Config::default().cases(40).seed(73), |rng| {
+        let spec = arbitrary_spec(rng);
+        let model = arbitrary_model(rng);
+        let materialized = run_sweep_prepared_tier(&spec, &model, 1, SweepTier::Fast).unwrap();
+        for workers in [1usize, 4] {
+            let mut replayed = run_sweep_fold_tier(
+                &spec,
+                &model,
+                workers,
+                SweepTier::Fast,
+                Vec::new,
+                |acc: &mut Vec<(usize, AdcQuery, [u64; 4])>, i, q, m| {
+                    acc.push((i, *q, m.to_bits()));
+                },
+                |mut a, b| {
+                    a.extend(b);
+                    a
+                },
+            );
+            replayed.sort_by_key(|(i, _, _)| *i);
+            assert_eq!(replayed.len(), materialized.len(), "workers={workers}");
+            for ((i, q, bits), p) in replayed.iter().zip(&materialized) {
+                assert_eq!(*q, p.query, "index {i}");
+                assert_eq!(*bits, p.metrics.to_bits(), "index {i} workers={workers}");
+            }
+        }
+    });
+}
+
+#[test]
+fn exact_tier_through_every_driver_stays_bit_identical_to_model_eval() {
+    check(Config::default().cases(40).seed(74), |rng| {
+        let spec = arbitrary_spec(rng);
+        let model = arbitrary_model(rng);
+        let baseline = run_sweep(&spec, &NativeEvaluator::serial(model)).unwrap();
+        // Explicit-tier prepared driver on Exact == eval path.
+        let exact = run_sweep_prepared_tier(&spec, &model, 4, SweepTier::Exact).unwrap();
+        assert_eq!(baseline.len(), exact.len());
+        for (a, b) in baseline.iter().zip(&exact) {
+            assert_eq!(a.query, b.query);
+            assert_eq!(a.metrics.to_bits(), b.metrics.to_bits());
+        }
+        // NativeEvaluator defaults to Exact; with_tier(Fast) routes to
+        // the lane kernel and must equal the prepared fast driver.
+        let fast_eval =
+            run_sweep(&spec, &NativeEvaluator::serial(model).with_tier(SweepTier::Fast)).unwrap();
+        let fast_prep = run_sweep_prepared_tier(&spec, &model, 1, SweepTier::Fast).unwrap();
+        for (a, b) in fast_eval.iter().zip(&fast_prep) {
+            assert_eq!(a.query, b.query);
+            assert_eq!(a.metrics.to_bits(), b.metrics.to_bits());
+        }
+    });
+}
+
+#[test]
+fn extreme_log_f_regimes_fall_back_bit_identically() {
+    // Denormal-scale per-ADC throughput (log_f ≈ -308) and huge
+    // throughput / n_adcs combinations push `pow10` far outside the
+    // decade table: the fast tier must take the libm fallback there and
+    // thus reproduce the exact tier bit-for-bit.
+    let model = AdcModel::default();
+    let spec = SweepSpec {
+        enobs: vec![2.0, 8.0, 14.0],
+        total_throughputs: vec![f64::MIN_POSITIVE, 1e-30, 1e30, 1e300],
+        tech_nms: vec![7.0, 180.0],
+        n_adcs: vec![1, u32::MAX],
+    };
+    let exact = run_sweep_prepared(&spec, &model, 1).unwrap();
+    let fast = run_sweep_prepared_tier(&spec, &model, 1, SweepTier::Fast).unwrap();
+    assert_eq!(exact.len(), fast.len());
+    for (a, b) in exact.iter().zip(&fast) {
+        assert_eq!(a.query, b.query);
+        // Not every extreme point lands in the fallback (the energy
+        // exponent may stay in range while the area one leaves it, and
+        // vice versa), so assert the ULP envelope everywhere and bit
+        // identity wherever both pow10 arguments left the fast region.
+        let ulp = a
+            .metrics
+            .to_bits()
+            .iter()
+            .zip(b.metrics.to_bits())
+            .map(|(ea, eb)| ulp_distance(f64::from_bits(*ea), f64::from_bits(eb)))
+            .max()
+            .unwrap();
+        assert!(ulp <= MAX_ULP, "q={:?} ulp={ulp}", a.query);
+        if a.query.total_throughput >= 1e300 {
+            // log_f ≥ ~290 pushes both the energy exponent (b3·log_f)
+            // and the area exponent (d2·log_f + d3·log_e) far outside
+            // the decade table -> both pow10s take the libm fallback
+            // and every metric is bit-identical (energy overflows to
+            // +inf identically on both tiers).
+            assert_eq!(a.metrics.to_bits(), b.metrics.to_bits(), "q={:?}", a.query);
+        }
+        if a.query.total_throughput == f64::MIN_POSITIVE {
+            // log_f ≈ -308: the energy exponent clamps to its in-range
+            // floor (still approximate), but d2·log_f throws the area
+            // exponent out of range -> the area metrics fall back and
+            // must match bit-for-bit.
+            assert_eq!(
+                a.metrics.area_um2_per_adc.to_bits(),
+                b.metrics.area_um2_per_adc.to_bits(),
+                "q={:?}",
+                a.query
+            );
+            assert_eq!(
+                a.metrics.total_area_um2.to_bits(),
+                b.metrics.total_area_um2.to_bits(),
+                "q={:?}",
+                a.query
+            );
+        }
+    }
+}
+
+#[test]
+fn zoo_workload_throughputs_stay_in_the_ulp_envelope() {
+    // Real adc_converts rates from the three zoo networks mapped onto
+    // RAELLA-Medium, used as sweep throughput axes: the fast tier must
+    // hold its bound on production-shaped inputs, not just synthetic
+    // grids.
+    let arch = raella(RaellaVariant::Medium);
+    let model = AdcModel::default();
+    for name in ["resnet18", "vgg16", "lenet"] {
+        let workload = by_name(name).unwrap();
+        let mut throughputs: Vec<f64> = workload
+            .layers
+            .iter()
+            .map(|l| map_layer(&arch, l).unwrap().counts.adc_converts)
+            .filter(|c| *c > 0.0)
+            .collect();
+        throughputs.truncate(8);
+        let spec = SweepSpec {
+            enobs: vec![4.0, 7.0, 11.0],
+            total_throughputs: throughputs,
+            tech_nms: vec![22.0, 32.0],
+            n_adcs: vec![1, 16, 128],
+        };
+        let exact = run_sweep_prepared(&spec, &model, 1).unwrap();
+        let fast = run_sweep_prepared_tier(&spec, &model, 1, SweepTier::Fast).unwrap();
+        let worst = max_sweep_ulp(&exact, &fast);
+        assert!(worst <= MAX_ULP, "{name}: worst ULP {worst}");
+    }
+}
