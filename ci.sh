@@ -22,6 +22,14 @@ target/release/cimdse lint --json . | grep -q '"findings": \[\]' \
 echo "== cargo test -q =="
 cargo test -q
 
+echo "== protocol v2 conformance corpus (both cores, byte-compared) =="
+# Already part of `cargo test -q`, but the corpus is this PR's protocol
+# gate, so run it as its own visible stage: every corpus case replays
+# over a real socket against the event-loop AND threaded cores and the
+# response bytes are cmp'd, plus the v2 battery (hello negotiation,
+# progress cadence, cancel live/unknown/completed, cancel-on-disconnect).
+cargo test -q --test protocol_corpus
+
 echo "== simd feature leg (x86_64 only) =="
 # The `simd` feature compiles the AVX2 lane kernel in util::fastmath
 # (docs/numeric_tiers.md). It is a no-op off x86_64 — the cfg gates
@@ -85,9 +93,9 @@ rm "$SHARD_DIR/shard_1.json"
 cmp "$SHARD_DIR/merged.json" "$SHARD_DIR/merged2.json"
 echo "resumed shard set merges identically"
 
-echo "== serve smoke test (daemon on an ephemeral port) =="
+echo "== serve smoke test (event-loop daemon on an ephemeral port) =="
 SERVE_LOG="$SHARD_DIR/serve.log"
-"$BIN" serve --addr 127.0.0.1:0 > "$SERVE_LOG" 2>&1 &
+"$BIN" serve --addr 127.0.0.1:0 --core event-loop > "$SERVE_LOG" 2>&1 &
 SERVE_PID=$!
 ADDR=$(serve_addr "$SERVE_LOG" "$SERVE_PID")
 echo "daemon at $ADDR"
@@ -120,10 +128,46 @@ grep -q "drained cleanly" "$SERVE_LOG" \
   || { echo "ci.sh: serve log lacks graceful-drain confirmation" >&2; cat "$SERVE_LOG" >&2; exit 1; }
 echo "daemon drained cleanly (exit 0)"
 
-echo "== distributed sweep over 2 local workers (cmp vs single process) =="
-"$BIN" serve --addr 127.0.0.1:0 > "$SHARD_DIR/w1.log" 2>&1 &
+echo "== cross-core v1 byte identity (event-loop vs threads, raw socket cmp) =="
+# The acceptance bar for the event-loop rewrite: a v1 client must see
+# byte-identical frames from both cores. Replay one pipelined burst —
+# good eval, unknown op, malformed JSON, sweep — over a raw socket
+# (bash /dev/tcp, no client-side rendering) against each core and cmp
+# the response bytes. Both daemons use the default model fit, so the
+# payloads are deterministic.
+"$BIN" serve --addr 127.0.0.1:0 --core event-loop > "$SHARD_DIR/ce.log" 2>&1 &
 W1_PID=$!
-"$BIN" serve --addr 127.0.0.1:0 > "$SHARD_DIR/w2.log" 2>&1 &
+"$BIN" serve --addr 127.0.0.1:0 --core threads > "$SHARD_DIR/ct.log" 2>&1 &
+W2_PID=$!
+CE=$(serve_addr "$SHARD_DIR/ce.log" "$W1_PID")
+CT=$(serve_addr "$SHARD_DIR/ct.log" "$W2_PID")
+BURST=$(cat <<'EOF'
+{"op": "eval", "id": 1, "query": {"enob": 7, "total_throughput": 1.3e9, "n_adcs": 8}}
+{"op": "frobnicate", "id": 2}
+{ not json
+{"op": "eval", "id": 4}
+{"op": "sweep", "id": 5, "spec": {"enobs": [4, 6], "total_throughputs": [1e9, 2e9], "tech_nms": [32], "n_adcs": [1, 4]}}
+EOF
+)
+for PAIR in "event_loop=$CE" "threads=$CT"; do
+  TAG=${PAIR%%=*}; A=${PAIR#*=}
+  exec 3<>"/dev/tcp/${A%:*}/${A##*:}"
+  printf '%s\n' "$BURST" >&3
+  head -n 5 <&3 > "$SHARD_DIR/burst_$TAG.txt"
+  exec 3<&- 3>&-
+done
+cmp "$SHARD_DIR/burst_event_loop.txt" "$SHARD_DIR/burst_threads.txt"
+echo "pipelined v1 burst == across cores (byte-identical over raw sockets)"
+"$BIN" query --addr "$CE" --op shutdown > /dev/null
+"$BIN" query --addr "$CT" --op shutdown > /dev/null
+wait "$W1_PID" && wait "$W2_PID" \
+  || { echo "ci.sh: a cross-core daemon did not drain cleanly" >&2; exit 1; }
+W1_PID=""; W2_PID=""
+
+echo "== distributed sweep over 2 local workers (event-loop core, cmp vs single process) =="
+"$BIN" serve --addr 127.0.0.1:0 --core event-loop > "$SHARD_DIR/w1.log" 2>&1 &
+W1_PID=$!
+"$BIN" serve --addr 127.0.0.1:0 --core event-loop > "$SHARD_DIR/w2.log" 2>&1 &
 W2_PID=$!
 A1=$(serve_addr "$SHARD_DIR/w1.log" "$W1_PID")
 A2=$(serve_addr "$SHARD_DIR/w2.log" "$W2_PID")
@@ -157,7 +201,36 @@ echo "$RESUME_OUT" | grep -q "0 computed, 6 resumed" \
 cmp "$SHARD_DIR/dist_summary.json" "$SHARD_DIR/dist_summary2.json"
 echo "distributed resume skipped all shards and merged identically"
 
-echo "== bench_serve (quick mode) -> BENCH_serve.json =="
+echo "== quick 64-client soak (event-loop daemon, process level) =="
+# 64 concurrent real client processes against one event-loop daemon,
+# then a graceful drain — the process-level cut of the 256-connection
+# in-process soak in tests/async_core.rs. Every client must exit 0 and
+# the daemon must still drain cleanly afterwards.
+SOAK_LOG="$SHARD_DIR/soak.log"
+"$BIN" serve --addr 127.0.0.1:0 --core event-loop > "$SOAK_LOG" 2>&1 &
+SERVE_PID=$!
+SOAK_ADDR=$(serve_addr "$SOAK_LOG" "$SERVE_PID")
+QPIDS=()
+for i in $(seq 1 64); do
+  "$BIN" query --addr "$SOAK_ADDR" --op eval \
+    --enob $((3 + i % 10)) --throughput 1.3e9 --n-adcs $((1 + i % 4)) \
+    > /dev/null &
+  QPIDS+=($!)
+done
+for P in "${QPIDS[@]}"; do
+  wait "$P" || { echo "ci.sh: a soak client failed" >&2; exit 1; }
+done
+"$BIN" query --addr "$SOAK_ADDR" --op metrics | grep -Eq 'requests +(6[4-9]|[7-9][0-9]|[1-9][0-9]{2,}) total' \
+  || { echo "ci.sh: soak daemon reports fewer than 64 requests" >&2; exit 1; }
+"$BIN" query --addr "$SOAK_ADDR" --op shutdown > /dev/null
+wait "$SERVE_PID" \
+  || { echo "ci.sh: soak daemon did not exit cleanly" >&2; cat "$SOAK_LOG" >&2; exit 1; }
+SERVE_PID=""
+grep -q "drained cleanly" "$SOAK_LOG" \
+  || { echo "ci.sh: soak daemon lacks graceful-drain confirmation" >&2; cat "$SOAK_LOG" >&2; exit 1; }
+echo "64 concurrent clients served, daemon drained cleanly"
+
+echo "== bench_serve (quick mode, both cores, 1/4/16/64 clients) -> BENCH_serve.json =="
 rm -f BENCH_serve.json
 CIMDSE_BENCH_QUICK=1 cargo bench --bench bench_serve
 test -s BENCH_serve.json || { echo "ci.sh: BENCH_serve.json missing or empty" >&2; exit 1; }

@@ -1,10 +1,12 @@
-//! Bench: serving-daemon request throughput.
+//! Bench: serving-daemon request throughput, both cores.
 //!
 //! Spins up an in-process `service::Server` on an ephemeral port and
-//! measures `eval` requests/s at 1/4/16 concurrent client connections,
-//! on a cached model (every request reuses the default model — pure
-//! protocol + cache-hit path) vs uncached models (every request carries
-//! a fresh tuning offset, forcing a fingerprint miss and a prepare).
+//! measures `eval` requests/s at 1/4/16/64 concurrent client
+//! connections for **each serving core** — the readiness-driven event
+//! loop and the original thread-per-connection core — on a cached model
+//! (every request reuses the default model — pure protocol +
+//! cache-hit path) vs uncached models (every request carries a fresh
+//! tuning offset, forcing a fingerprint miss and a prepare).
 //!
 //! Writes the machine-readable report to `BENCH_serve.json`
 //! (`bench_util::JsonReport` schema, validated by
@@ -16,7 +18,7 @@ use std::thread;
 
 use cimdse::adc::{AdcModel, AdcQuery};
 use cimdse::bench_util::{Bench, JsonReport, quick, scale};
-use cimdse::service::{Client, ServeOptions, Server};
+use cimdse::service::{Client, ServeCore, ServeOptions, Server};
 
 /// Monotonic counter so every "uncached" request names a distinct model.
 static UNCACHED_SEQ: AtomicU64 = AtomicU64::new(1);
@@ -59,6 +61,13 @@ fn drive(clients: &mut [Client], per_client: usize, cached: bool) {
     });
 }
 
+fn core_tag(core: ServeCore) -> &'static str {
+    match core {
+        ServeCore::EventLoop => "event-loop",
+        ServeCore::Threads => "threads",
+    }
+}
+
 fn main() {
     let bench = Bench::auto();
     let mut report = JsonReport::new("serve");
@@ -66,50 +75,61 @@ fn main() {
         println!("(CIMDSE_BENCH_QUICK: reduced budgets and request counts)\n");
     }
 
-    let server = Server::bind(ServeOptions {
-        addr: "127.0.0.1:0".to_string(),
-        model: AdcModel::default(),
-        // Smaller than the uncached stream so misses also exercise
-        // eviction, the cache's steady state under model churn.
-        cache_capacity: 16,
-        workers: cimdse::exec::default_workers(),
-        max_sweep_points: None,
-    })
-    .expect("bind bench server");
-    let addr = server.local_addr().to_string();
-    let handle = server.handle();
-    let serve_thread = thread::spawn(move || server.serve().expect("serve"));
-
     let per_client = scale(64, 16);
-    let mut baseline_rps = None;
-    for &clients in &[1usize, 4, 16] {
-        let mut pool: Vec<Client> = (0..clients)
-            .map(|_| Client::connect(&addr).expect("bench client connect"))
-            .collect();
-        let requests = clients * per_client;
-        for cached in [true, false] {
-            let label = format!(
-                "eval x{requests}: {clients} client(s), {} model",
-                if cached { "cached" } else { "uncached" }
-            );
-            let stats = bench.run(&label, || drive(&mut pool, per_client, cached));
-            // `points` = requests per iteration, so mpts_per_s in the
-            // report is literally Mrequests/s.
-            report.case(&label, &stats, requests);
-            let rps = requests as f64 / stats.median_s;
-            println!("  -> {rps:.0} requests/s");
-            if cached {
-                if clients == 1 {
-                    baseline_rps = Some(rps);
-                } else if let Some(base) = baseline_rps {
-                    report.metric(&format!("scaling_cached_{clients}_clients"), rps / base);
+    for &core in &[ServeCore::EventLoop, ServeCore::Threads] {
+        let server = Server::bind(ServeOptions {
+            addr: "127.0.0.1:0".to_string(),
+            model: AdcModel::default(),
+            // Smaller than the uncached stream so misses also exercise
+            // eviction, the cache's steady state under model churn.
+            cache_capacity: 16,
+            workers: cimdse::exec::default_workers(),
+            core,
+            ..ServeOptions::default()
+        })
+        .expect("bind bench server");
+        let addr = server.local_addr().to_string();
+        let handle = server.handle();
+        let serve_thread = thread::spawn(move || server.serve().expect("serve"));
+
+        println!("== {} core ==", core_tag(core));
+        let mut baseline_rps = None;
+        for &clients in &[1usize, 4, 16, 64] {
+            let mut pool: Vec<Client> = (0..clients)
+                .map(|_| Client::connect(&addr).expect("bench client connect"))
+                .collect();
+            let requests = clients * per_client;
+            for cached in [true, false] {
+                let label = format!(
+                    "[{}] eval x{requests}: {clients} client(s), {} model",
+                    core_tag(core),
+                    if cached { "cached" } else { "uncached" }
+                );
+                let stats = bench.run(&label, || drive(&mut pool, per_client, cached));
+                // `points` = requests per iteration, so mpts_per_s in the
+                // report is literally Mrequests/s.
+                report.case(&label, &stats, requests);
+                let rps = requests as f64 / stats.median_s;
+                println!("  -> {rps:.0} requests/s");
+                if cached {
+                    if clients == 1 {
+                        baseline_rps = Some(rps);
+                    } else if let Some(base) = baseline_rps {
+                        report.metric(
+                            &format!(
+                                "scaling_cached_{}_{clients}_clients",
+                                core_tag(core).replace('-', "_")
+                            ),
+                            rps / base,
+                        );
+                    }
                 }
             }
         }
-    }
 
-    handle.shutdown();
-    serve_thread.join().expect("serve thread");
+        handle.shutdown();
+        serve_thread.join().expect("serve thread");
+    }
 
     let path = report.write().expect("writing bench report");
     println!("\nwrote serve throughput report to {path}");

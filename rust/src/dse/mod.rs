@@ -56,7 +56,7 @@ pub use sweep::{SweepSpec, SweepTier};
 
 use crate::adc::{AdcMetrics, AdcModel, AdcQuery, PreparedModel, PreparedRow, PreparedRowLanes};
 use crate::error::{Error, Result};
-use crate::exec::Pool;
+use crate::exec::{CancelToken, Pool};
 use crate::runtime::AdcModelEngine;
 use crate::util::logspace::log10;
 
@@ -545,10 +545,9 @@ where
     run_sweep_fold_range_tier(spec, model, workers, SweepTier::Exact, range, init, fold, merge)
 }
 
-/// [`run_sweep_fold_range`] on an explicit [`SweepTier`] — the single
-/// implementation every fold driver funnels through. Shard execution
-/// ([`shard::SweepSummary`]) calls the exact-tier wrapper only, so
-/// fingerprinted artifacts never touch the fast kernel.
+/// [`run_sweep_fold_range`] on an explicit [`SweepTier`]. Delegates to
+/// [`run_sweep_fold_range_ctl`] with no controls attached, which cannot
+/// report cancellation — the unwrap is infallible by construction.
 #[allow(clippy::too_many_arguments)]
 pub fn run_sweep_fold_range_tier<A, I, F, M>(
     spec: &SweepSpec,
@@ -566,6 +565,76 @@ where
     F: Fn(&mut A, usize, &AdcQuery, &AdcMetrics) + Sync,
     M: Fn(A, A) -> A,
 {
+    run_sweep_fold_range_ctl(
+        spec,
+        model,
+        workers,
+        tier,
+        range,
+        FoldCtl::default(),
+        init,
+        fold,
+        merge,
+    )
+    .expect("a fold without a cancel token cannot be cancelled")
+}
+
+/// Cooperative controls threaded through a streaming fold: an optional
+/// cancellation token checked at chunk boundaries and an optional
+/// progress observer called with the number of points just folded.
+///
+/// Both hooks fire at the fold's internal chunk granularity
+/// ([`stream_chunk`], 1024–16384 points), so neither perturbs the
+/// per-point fold sequence: an uncancelled controlled fold produces
+/// bytes identical to an uncontrolled one. The progress observer runs on
+/// pool worker threads (serially on the caller when `workers == 1`) and
+/// must therefore be cheap and `Sync`.
+#[derive(Clone, Copy, Default)]
+pub struct FoldCtl<'a> {
+    /// Checked before each chunk; a tripped token stops further chunks
+    /// and makes the fold return `None`.
+    pub cancel: Option<&'a CancelToken>,
+    /// Called with each completed chunk's point count.
+    pub progress: Option<&'a (dyn Fn(usize) + Sync)>,
+    /// Serial-path chunk override: bounds cancel latency and progress
+    /// cadence for `workers == 1` folds (`cimdse serve --progress-every`
+    /// on small grids). `None` keeps [`stream_chunk`]. Chunk size never
+    /// changes result bytes — the points fold into one accumulator in
+    /// exact grid order at any split — and the parallel path ignores the
+    /// hint so its pool chunking stays canonical.
+    pub chunk: Option<usize>,
+}
+
+/// [`run_sweep_fold_range_tier`] with cooperative cancellation and
+/// progress reporting — the single implementation every fold driver
+/// funnels through. Shard execution ([`shard::SweepSummary`]) calls the
+/// exact-tier path only, so fingerprinted artifacts never touch the
+/// fast kernel.
+///
+/// Returns `None` iff `ctl.cancel` was tripped before the fold finished:
+/// in-flight chunks still complete (cancellation is cooperative), but no
+/// further chunks start and the partial accumulators are discarded. A
+/// completed fold returns `Some` with bytes identical to the
+/// uncontrolled fold — the controls only gate *whether* chunks run,
+/// never how points fold within them.
+#[allow(clippy::too_many_arguments)]
+pub fn run_sweep_fold_range_ctl<A, I, F, M>(
+    spec: &SweepSpec,
+    model: &AdcModel,
+    workers: usize,
+    tier: SweepTier,
+    range: std::ops::Range<usize>,
+    ctl: FoldCtl<'_>,
+    init: I,
+    fold: F,
+    merge: M,
+) -> Option<A>
+where
+    A: Send,
+    I: Fn() -> A + Sync,
+    F: Fn(&mut A, usize, &AdcQuery, &AdcMetrics) + Sync,
+    M: Fn(A, A) -> A,
+{
     let len = spec
         .checked_len()
         .expect("sweep grid length overflows usize; split the spec into sub-range specs");
@@ -573,20 +642,53 @@ where
         range.start <= range.end && range.end <= len,
         "shard range {range:?} out of bounds for {len} grid points"
     );
+    let cancelled = || ctl.cancel.is_some_and(CancelToken::is_cancelled);
+    let report = |points: usize| {
+        if let Some(progress) = ctl.progress {
+            progress(points);
+        }
+    };
+    if cancelled() {
+        return None;
+    }
     let n = range.len();
     let prepared = PreparedSweep::new(spec, model);
     if workers == 1 || n <= 1 {
+        // Serial path: walk the same chunk boundaries the pool would use
+        // so cancel latency and progress cadence match the parallel path.
+        // Chunking a serial fold cannot change its bytes — the points
+        // fold into one accumulator in exact grid order either way.
+        let chunk = ctl.chunk.unwrap_or_else(|| stream_chunk(n)).max(1);
         let mut acc = init();
-        prepared.for_each_in_range_tier(tier, range, |i, q, m| fold(&mut acc, i, q, m));
-        return acc;
+        let mut at = range.start;
+        while at < range.end {
+            if cancelled() {
+                return None;
+            }
+            let stop = (at + chunk).min(range.end);
+            prepared.for_each_in_range_tier(tier, at..stop, |i, q, m| fold(&mut acc, i, q, m));
+            report(stop - at);
+            at = stop;
+        }
+        return Some(acc);
     }
     let base = range.start;
     let accs = Pool::global().fold_chunks(n, stream_chunk(n), &init, |acc, chunk| {
+        // Cooperative skip: once the token trips, claimed chunks return
+        // without folding, so the pool drains in one claim pass instead
+        // of computing the rest of an abandoned sweep.
+        if cancelled() {
+            return;
+        }
         prepared.for_each_in_range_tier(tier, base + chunk.start..base + chunk.end, |i, q, m| {
             fold(acc, i, q, m)
         });
+        report(chunk.len());
     });
-    accs.into_iter().reduce(&merge).unwrap_or_else(init)
+    if cancelled() {
+        return None;
+    }
+    Some(accs.into_iter().reduce(&merge).unwrap_or_else(init))
 }
 
 /// The min-EAP candidate ordering shared by [`sweep_min_eap`] and the

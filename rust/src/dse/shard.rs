@@ -37,7 +37,9 @@ use crate::config::{Value, f64_from_bits_hex, f64_to_bits_hex, parse_json};
 use crate::error::{Error, Result};
 
 use super::sweep::SweepSpec;
-use super::{EvaluatedPoint, StreamingFront, eap_candidate_better, run_sweep_fold_range};
+use super::{
+    EvaluatedPoint, FoldCtl, StreamingFront, eap_candidate_better, run_sweep_fold_range_ctl,
+};
 
 /// Artifact schema version; bump on breaking payload changes.
 const ARTIFACT_SCHEMA: usize = 1;
@@ -327,11 +329,28 @@ impl SweepSummary {
         workers: usize,
         range: Range<usize>,
     ) -> SweepSummary {
-        run_sweep_fold_range(
+        SweepSummary::compute_range_ctl(spec, model, workers, range, FoldCtl::default())
+            .expect("a fold without a cancel token cannot be cancelled")
+    }
+
+    /// [`SweepSummary::compute_range`] under a [`FoldCtl`]: cancellable
+    /// at chunk granularity with progress reporting. Returns `None` iff
+    /// the control's token tripped; a completed summary is bit-identical
+    /// to the uncontrolled one (the controls never reach the fold).
+    pub fn compute_range_ctl(
+        spec: &SweepSpec,
+        model: &AdcModel,
+        workers: usize,
+        range: Range<usize>,
+        ctl: FoldCtl<'_>,
+    ) -> Option<SweepSummary> {
+        run_sweep_fold_range_ctl(
             spec,
             model,
             workers,
+            super::SweepTier::Exact,
             range,
+            ctl,
             SweepSummary::new,
             |acc: &mut SweepSummary, i, q, m| acc.absorb(i, q, m),
             SweepSummary::merge,
@@ -631,10 +650,31 @@ impl ShardArtifact {
         selector: ShardSelector,
         workers: usize,
     ) -> Result<ShardArtifact> {
+        ShardArtifact::compute_ctl(spec, model, selector, workers, FoldCtl::default())?
+            .ok_or_else(|| {
+                Error::Runtime("a fold without a cancel token cannot be cancelled".into())
+            })
+    }
+
+    /// [`ShardArtifact::compute`] under a [`FoldCtl`]: cancellable at
+    /// chunk granularity with progress reporting. `Ok(None)` means the
+    /// control's token tripped mid-shard; a completed artifact is
+    /// byte-identical to the uncontrolled one.
+    pub fn compute_ctl(
+        spec: &SweepSpec,
+        model: &AdcModel,
+        selector: ShardSelector,
+        workers: usize,
+        ctl: FoldCtl<'_>,
+    ) -> Result<Option<ShardArtifact>> {
         let plan = ShardPlan::new(spec, selector.n_shards())?;
         let range = plan.range(selector.index());
-        let summary = SweepSummary::compute_range(spec, model, workers, range.clone());
-        Ok(ShardArtifact {
+        let Some(summary) =
+            SweepSummary::compute_range_ctl(spec, model, workers, range.clone(), ctl)
+        else {
+            return Ok(None);
+        };
+        Ok(Some(ShardArtifact {
             fingerprint: sweep_fingerprint(spec, model),
             selector,
             start: range.start,
@@ -643,7 +683,7 @@ impl ShardArtifact {
             spec: spec.clone(),
             model: *model,
             summary,
-        })
+        }))
     }
 
     /// The sweep fingerprint this shard belongs to.

@@ -401,10 +401,54 @@ where
     nested.into_iter().flatten().collect()
 }
 
+/// A cooperative cancellation flag shared between a dispatcher and the
+/// chunked work it runs on the pool.
+///
+/// Cancellation is *advisory*: the pool never preempts a running chunk.
+/// Long-running folds check the token at chunk boundaries (see
+/// [`crate::dse::run_sweep_fold_range_ctl`]) and stop claiming new work
+/// once it trips, so an abandoned job stops burning worker cycles within
+/// one chunk of the cancel. Clones share the same flag; a token is
+/// created untripped and can only ever move to cancelled (no reset),
+/// which keeps "observed cancelled" a stable fact across threads.
+#[derive(Clone, Debug, Default)]
+pub struct CancelToken {
+    flag: Arc<std::sync::atomic::AtomicBool>,
+}
+
+impl CancelToken {
+    /// A fresh, untripped token.
+    pub fn new() -> CancelToken {
+        CancelToken::default()
+    }
+
+    /// Trip the flag. Idempotent; visible to every clone.
+    pub fn cancel(&self) {
+        self.flag.store(true, std::sync::atomic::Ordering::Release);
+    }
+
+    /// Has any clone of this token been cancelled?
+    pub fn is_cancelled(&self) -> bool {
+        self.flag.load(std::sync::atomic::Ordering::Acquire)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use std::collections::BTreeSet;
+
+    #[test]
+    fn cancel_token_clones_share_one_flag() {
+        let token = CancelToken::new();
+        let clone = token.clone();
+        assert!(!token.is_cancelled() && !clone.is_cancelled());
+        clone.cancel();
+        assert!(token.is_cancelled() && clone.is_cancelled());
+        // Idempotent.
+        token.cancel();
+        assert!(token.is_cancelled());
+    }
 
     #[test]
     fn preserves_order() {

@@ -64,9 +64,9 @@ SUBCOMMANDS
             [--launch-json PATH]]                 distributed sweep over serve daemons
                                                   (resumable; summary byte-identical
                                                   to the single-process run; the
-                                                  timeout must exceed the slowest
-                                                  shard's compute time — raise it or
-                                                  use more/smaller shards; 0 = wait
+                                                  timeout bounds the gap between
+                                                  frames, not compute — v2 workers
+                                                  heartbeat while busy; 0 = wait
                                                   forever)
   merge-shards FILE... [--out merged.json]
            [--allow-partial]                      merge shard artifacts (bit-identical
@@ -80,10 +80,13 @@ SUBCOMMANDS
   bench-report --path BENCH_sweep.json            validate + summarize a perf artifact
   serve    [--addr 127.0.0.1:0] [--cache 32]
            [--n 700] [--seed 1997]
-           [--max-sweep-points N]                 long-lived serving daemon (NDJSON
-                                                  protocol; see rust/docs/protocol.md);
-                                                  sweep/shard requests over N points
-                                                  get a typed `over-budget` error
+           [--core event-loop|threads]            long-lived serving daemon (NDJSON
+           [--max-sweep-points N]                 protocol v2; see rust/docs/protocol.md);
+           [--progress-every N]                   sweep/shard requests over the point
+                                                  budget get a typed `over-budget`
+                                                  error; --progress-every streams a
+                                                  progress frame every N points to
+                                                  v2 clients (event-loop core)
   query    --addr HOST:PORT --op eval|sweep|accel|metrics|shutdown
            [eval: --enob B --throughput F --tech 32 --n-adcs 1]
            [sweep: --spec dense|fig5 --points N --out PATH]
@@ -876,22 +879,42 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // Same default fit as `model`/`sweep`, so served responses diff
     // cleanly against the direct subcommands.
     let model = fitted_model(n, seed)?;
+    let core: cimdse::service::ServeCore = args.opt_or("core", "event-loop").parse()?;
+    let progress_every = match args.opt("progress-every") {
+        None => None,
+        Some(_) => {
+            let every = args.usize_or("progress-every", 0)?;
+            if every == 0 {
+                return Err(Error::Config(
+                    "--progress-every must be >= 1 (omit the flag to disable progress frames)"
+                        .into(),
+                ));
+            }
+            Some(every)
+        }
+    };
     let options = cimdse::service::ServeOptions {
         addr: args.opt_or("addr", "127.0.0.1:0").to_string(),
         model,
         cache_capacity: cache,
         workers: cimdse::exec::default_workers(),
         max_sweep_points,
+        core,
+        progress_every,
     };
     let workers = options.workers;
     let budget = match max_sweep_points {
         Some(b) => format!(", budget {b} pts"),
         None => String::new(),
     };
+    let core_tag = match core {
+        cimdse::service::ServeCore::EventLoop => "event-loop",
+        cimdse::service::ServeCore::Threads => "threads",
+    };
     let server = cimdse::service::Server::bind(options)?;
     println!(
-        "cimdse serve: listening on {} ({workers} workers, cache {cache}, model fit \
-         n={n} seed={seed}{budget})",
+        "cimdse serve: listening on {} ({core_tag} core, {workers} workers, cache {cache}, \
+         model fit n={n} seed={seed}{budget})",
         server.local_addr()
     );
     // Scripts poll stdout for the line above; don't let it sit in the

@@ -91,7 +91,13 @@ impl Client {
             .map_err(|e| Error::Runtime(format!("query: set timeout: {e}")))
     }
 
-    /// Send one raw frame line and read the response line (uninterpreted).
+    /// Send one raw frame line and read the response line
+    /// (uninterpreted). Interim v2 `progress`/`keepalive` frames are
+    /// skipped transparently — and because each one restarts the read
+    /// deadline, a configured timeout bounds the **inter-frame gap**
+    /// (liveness), not total compute time: a server that streams
+    /// progress on a long sweep is healthy no matter how long the sweep
+    /// takes, while one that goes silent still times out.
     pub fn request_line(&mut self, line: &str) -> Result<Value> {
         debug_assert!(!line.contains('\n'), "frames are single lines");
         let mut bytes = Vec::with_capacity(line.len() + 1);
@@ -101,23 +107,28 @@ impl Client {
             .write_all(&bytes)
             .and_then(|_| self.writer.flush())
             .map_err(|e| Error::Runtime(format!("query: send failed: {e}")))?;
-        let mut response = String::new();
-        let n = self.reader.read_line(&mut response).map_err(|e| {
-            if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) {
-                Error::Runtime(
-                    "query: read timed out waiting for a response (hung worker?); \
-                     the connection is no longer usable"
-                        .into(),
-                )
-            } else {
-                Error::Runtime(format!("query: read failed: {e}"))
+        loop {
+            let mut response = String::new();
+            let n = self.reader.read_line(&mut response).map_err(|e| {
+                if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) {
+                    Error::Runtime(
+                        "query: read timed out waiting for a response (hung worker?); \
+                         the connection is no longer usable"
+                            .into(),
+                    )
+                } else {
+                    Error::Runtime(format!("query: read failed: {e}"))
+                }
+            })?;
+            if n == 0 {
+                return Err(Error::Runtime("query: server closed the connection".into()));
             }
-        })?;
-        if n == 0 {
-            return Err(Error::Runtime("query: server closed the connection".into()));
+            let doc = parse_json(response.trim_end())
+                .map_err(|e| Error::Runtime(format!("query: unparsable response: {e}")))?;
+            if !protocol::is_interim_frame(&doc) {
+                return Ok(doc);
+            }
         }
-        parse_json(response.trim_end())
-            .map_err(|e| Error::Runtime(format!("query: unparsable response: {e}")))
     }
 
     /// Send a frame [`Value`] and return the response's `result`,
@@ -238,6 +249,30 @@ impl Client {
         let mut map = std::collections::BTreeMap::new();
         map.insert("op".to_string(), Value::String("shutdown".to_string()));
         self.call(&Value::Table(map)).map(|_| ())
+    }
+
+    /// Negotiate protocol v2 on this connection. After this the server
+    /// may interleave `progress`/`keepalive` frames, which
+    /// [`Client::request_line`] skips and which keep the read deadline
+    /// armed during long computations.
+    pub fn negotiate_v2(&mut self) -> Result<Value> {
+        let mut map = std::collections::BTreeMap::new();
+        map.insert("op".to_string(), Value::String("hello".to_string()));
+        map.insert(
+            "version".to_string(),
+            Value::Number(f64::from(protocol::PROTOCOL_V2)),
+        );
+        self.call(&Value::Table(map))
+    }
+
+    /// Cancel a queued or in-flight request by its `id`. Only
+    /// meaningful on a pipelined connection; on a lockstep one the
+    /// target has always already been answered, earning `unknown-id`.
+    pub fn cancel(&mut self, target: &Value) -> Result<Value> {
+        let mut map = std::collections::BTreeMap::new();
+        map.insert("op".to_string(), Value::String("cancel".to_string()));
+        map.insert("target".to_string(), target.clone());
+        self.call(&Value::Table(map))
     }
 }
 

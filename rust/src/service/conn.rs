@@ -1,0 +1,456 @@
+//! Per-connection state for the serving daemon: incremental newline
+//! framing ([`FrameBuf`]), a bounded outgoing byte queue
+//! ([`WriteQueue`]), and the connection state machine ([`Conn`]) the
+//! event-loop core ([`super::reactor`]) drives.
+//!
+//! The framing logic here **is** the serving framing: the threaded
+//! core's `LineReader` wraps the same [`FrameBuf`], so both cores
+//! split, cap, and resynchronize byte streams identically by
+//! construction — the property the cross-core byte-identity tests pin.
+//!
+//! ## Backpressure bounds
+//!
+//! A pipelining client is bounded two ways (both documented in
+//! `docs/protocol.md`):
+//!
+//! * at most [`MAX_PIPELINE`] parsed requests may wait in the
+//!   connection's FIFO queue, and
+//! * at most [`WRITE_QUEUE_CAP`] response bytes may wait unsent.
+//!
+//! Past either bound the reactor stops reading the socket, so TCP flow
+//! control pushes back on the client and per-connection server memory
+//! stays O(cap) no matter how fast frames arrive or how slowly the
+//! client drains responses.
+
+use std::collections::VecDeque;
+use std::io::{ErrorKind, Write};
+use std::net::TcpStream;
+use std::time::Instant;
+
+use crate::config::Value;
+use crate::exec::CancelToken;
+
+use super::protocol::{MAX_FRAME_BYTES, PROTOCOL_V1, Request};
+
+/// Upper bound on unsent response bytes queued per connection before
+/// the reactor stops reading that socket (resumes once drained).
+pub const WRITE_QUEUE_CAP: usize = 4 * 1024 * 1024;
+
+/// Upper bound on parsed-but-unanswered requests queued per connection
+/// before the reactor stops reading that socket.
+pub const MAX_PIPELINE: usize = 64;
+
+/// What [`FrameBuf::next_event`] hands back per complete line.
+#[derive(Debug, PartialEq, Eq)]
+pub enum FrameEvent {
+    /// One complete frame (newline and any trailing `\r` stripped).
+    Frame(Vec<u8>),
+    /// A line exceeded [`MAX_FRAME_BYTES`]; its remainder is being
+    /// discarded up to the next newline so the stream resynchronizes.
+    Oversized,
+}
+
+/// Incremental `\n`-delimited frame splitter with a hard size cap.
+///
+/// Push bytes as they arrive (nonblocking reads), pop complete frames.
+/// Oversized lines surface exactly once as [`FrameEvent::Oversized`]
+/// and their tail is discarded up to the next newline — the same
+/// resynchronization contract the v1 threaded core has always had.
+#[derive(Default)]
+pub struct FrameBuf {
+    buf: Vec<u8>,
+    /// Bytes of `buf` already scanned for a newline — only newly pushed
+    /// bytes are searched, keeping per-frame cost linear in frame size
+    /// instead of quadratic in the number of reads.
+    scanned: usize,
+    /// Discarding until the next newline after an oversized frame.
+    discarding: bool,
+}
+
+impl FrameBuf {
+    /// An empty buffer.
+    pub fn new() -> FrameBuf {
+        FrameBuf::default()
+    }
+
+    /// Append freshly read bytes.
+    pub fn push(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Whether [`FrameBuf::next_event`] could make progress without
+    /// more bytes. The reactor uses this to keep re-pumping a
+    /// connection whose buffered backlog outlives the read event that
+    /// delivered it: once backpressure lifts, the leftover frames must
+    /// be parsed *now* — no further socket event will arrive for bytes
+    /// already consumed off the wire.
+    pub fn has_frame(&self) -> bool {
+        self.buf[self.scanned..].contains(&b'\n')
+            || (!self.discarding && self.buf.len() > MAX_FRAME_BYTES)
+    }
+
+    /// Pop the next complete frame (or oversized marker) if one is
+    /// buffered; `None` means more bytes are needed.
+    pub fn next_event(&mut self) -> Option<FrameEvent> {
+        loop {
+            if let Some(rel) = self.buf[self.scanned..].iter().position(|&b| b == b'\n') {
+                let pos = self.scanned + rel;
+                let mut line: Vec<u8> = self.buf.drain(..=pos).collect();
+                self.scanned = 0;
+                line.pop(); // the newline
+                if line.last() == Some(&b'\r') {
+                    line.pop();
+                }
+                if self.discarding {
+                    self.discarding = false;
+                    continue; // the tail of an oversized line
+                }
+                if line.len() > MAX_FRAME_BYTES {
+                    // A whole oversized line arrived in one gulp: the
+                    // newline is already consumed, nothing to discard.
+                    return Some(FrameEvent::Oversized);
+                }
+                return Some(FrameEvent::Frame(line));
+            }
+            self.scanned = self.buf.len();
+            if self.discarding {
+                self.buf.clear();
+                self.scanned = 0;
+                return None;
+            }
+            if self.buf.len() > MAX_FRAME_BYTES {
+                self.discarding = true;
+                self.buf.clear();
+                self.scanned = 0;
+                return Some(FrameEvent::Oversized);
+            }
+            return None;
+        }
+    }
+}
+
+/// Bounded FIFO of outgoing response bytes with partial-write resume.
+///
+/// Frames are queued whole; [`WriteQueue::write_to`] sends as much as
+/// the socket accepts and remembers the offset, so a nonblocking writer
+/// never splits, reorders, or re-sends bytes.
+#[derive(Default)]
+pub struct WriteQueue {
+    chunks: VecDeque<Vec<u8>>,
+    /// Offset of the first unsent byte within `chunks[0]`.
+    head: usize,
+    /// Total unsent bytes across all chunks.
+    queued: usize,
+    /// High-water mark of `queued` over the queue's lifetime.
+    peak: usize,
+}
+
+impl WriteQueue {
+    /// An empty queue.
+    pub fn new() -> WriteQueue {
+        WriteQueue::default()
+    }
+
+    /// Queue one response line (newline appended).
+    pub fn push_line(&mut self, line: &str) {
+        let mut bytes = Vec::with_capacity(line.len() + 1);
+        bytes.extend_from_slice(line.as_bytes());
+        bytes.push(b'\n');
+        self.queued += bytes.len();
+        self.peak = self.peak.max(self.queued);
+        self.chunks.push_back(bytes);
+    }
+
+    /// Unsent bytes currently queued.
+    pub fn queued_bytes(&self) -> usize {
+        self.queued
+    }
+
+    /// Lifetime high-water mark of [`WriteQueue::queued_bytes`].
+    pub fn peak_bytes(&self) -> usize {
+        self.peak
+    }
+
+    /// Whether everything queued has been written.
+    pub fn is_empty(&self) -> bool {
+        self.queued == 0
+    }
+
+    /// Write queued bytes until the sink would block or the queue
+    /// drains. Returns the number of bytes written this call; a sink
+    /// that reports `Ok(0)` surfaces as [`ErrorKind::WriteZero`].
+    pub fn write_to<W: Write>(&mut self, w: &mut W) -> std::io::Result<usize> {
+        let mut sent = 0usize;
+        while let Some(front) = self.chunks.front() {
+            match w.write(&front[self.head..]) {
+                Ok(0) => {
+                    return Err(std::io::Error::new(
+                        ErrorKind::WriteZero,
+                        "connection closed mid-response",
+                    ));
+                }
+                Ok(n) => {
+                    sent += n;
+                    self.head += n;
+                    self.queued -= n;
+                    if self.head == front.len() {
+                        self.chunks.pop_front();
+                        self.head = 0;
+                    }
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => return Ok(sent),
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(e) => return Err(e),
+            }
+        }
+        Ok(sent)
+    }
+}
+
+/// A parsed request waiting its FIFO turn (or a pre-formed reply).
+pub enum QueueEntry {
+    /// A response line already decided at parse time (malformed JSON,
+    /// oversized frame, bad request …) waiting its in-order turn so a
+    /// pipelining v1 client sees the exact byte order the threaded core
+    /// produces.
+    Reply(String),
+    /// A parsed request waiting to be answered or dispatched.
+    Job(PendingJob),
+}
+
+/// One parsed request plus the bookkeeping `cancel` needs to find it.
+pub struct PendingJob {
+    /// The request's op name (static, from [`Request::op`]).
+    pub op: &'static str,
+    /// The client-supplied `id`, echoed on every frame answering it.
+    pub id: Option<Value>,
+    /// Canonical JSON of `id` — what a `cancel` frame's `target` must
+    /// match (string `"7"` and number `7` are distinct ids, exactly as
+    /// they are distinct echoes).
+    pub id_key: Option<String>,
+    /// The parsed request itself.
+    pub request: Request,
+    /// Trips when this request is cancelled (cancel frame, disconnect,
+    /// or server drain); checked at chunk boundaries by the fold.
+    pub cancel: CancelToken,
+}
+
+/// The in-flight residue of a [`PendingJob`] handed to a runner thread:
+/// enough to echo progress frames and to match a later `cancel`.
+pub struct InFlight {
+    /// Op name of the running request.
+    pub op: &'static str,
+    /// Canonical JSON of the running request's `id`, if any.
+    pub id_key: Option<String>,
+    /// The running request's cooperative cancellation token.
+    pub cancel: CancelToken,
+}
+
+/// Per-connection state machine for the event-loop core.
+pub struct Conn {
+    /// The nonblocking socket.
+    pub stream: TcpStream,
+    /// Incremental inbound framing.
+    pub frames: FrameBuf,
+    /// Bounded outbound byte queue.
+    pub out: WriteQueue,
+    /// Negotiated protocol version; starts at [`PROTOCOL_V1`] and only
+    /// a `hello` frame can raise it. Interim (progress/keepalive)
+    /// frames are emitted iff this is ≥ 2.
+    pub version: u32,
+    /// Requests (and pre-formed replies) awaiting their FIFO turn.
+    pub queue: VecDeque<QueueEntry>,
+    /// The single request currently computing on a runner thread.
+    pub in_flight: Option<InFlight>,
+    /// Peer closed its write side (or a read error): no further frames
+    /// will be parsed; the connection drops once `in_flight` resolves.
+    pub read_closed: bool,
+    /// When the last response byte chunk was queued — drives keepalive
+    /// cadence for v2 connections with work in flight.
+    pub last_tx: Instant,
+    /// Last instant `write_to` made progress — drives the stuck-writer
+    /// drop during drain.
+    pub last_write_progress: Instant,
+}
+
+impl Conn {
+    /// Wrap a freshly accepted (already nonblocking) socket.
+    pub fn new(stream: TcpStream) -> Conn {
+        let now = Instant::now();
+        Conn {
+            stream,
+            frames: FrameBuf::new(),
+            out: WriteQueue::new(),
+            version: PROTOCOL_V1,
+            queue: VecDeque::new(),
+            in_flight: None,
+            read_closed: false,
+            last_tx: now,
+            last_write_progress: now,
+        }
+    }
+
+    /// Queue one response line and stamp the keepalive clock.
+    pub fn send(&mut self, line: &str) {
+        self.out.push_line(line);
+        self.last_tx = Instant::now();
+    }
+
+    /// Whether backpressure says to stop reading this socket: either
+    /// bound being exceeded parks the connection until the queues drain.
+    pub fn throttled(&self) -> bool {
+        self.out.queued_bytes() > WRITE_QUEUE_CAP || self.queue.len() >= MAX_PIPELINE
+    }
+
+    /// Trip the token of the in-flight or queued request whose `id`
+    /// canonicalizes to `key`. Returns whether anything matched — a miss
+    /// is the caller's `unknown-id` error (unknown, already answered,
+    /// or issued by a different connection: all indistinguishable here
+    /// by design).
+    pub fn cancel_target(&mut self, key: &str) -> bool {
+        if let Some(f) = &self.in_flight {
+            if f.id_key.as_deref() == Some(key) {
+                f.cancel.cancel();
+                return true;
+            }
+        }
+        for entry in &self.queue {
+            if let QueueEntry::Job(job) = entry {
+                if job.id_key.as_deref() == Some(key) {
+                    job.cancel.cancel();
+                    return true;
+                }
+            }
+        }
+        false
+    }
+
+    /// Trip every token this connection owns (disconnect / drain).
+    pub fn cancel_all(&mut self) {
+        if let Some(f) = &self.in_flight {
+            f.cancel.cancel();
+        }
+        for entry in &self.queue {
+            if let QueueEntry::Job(job) = entry {
+                job.cancel.cancel();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn frame(ev: Option<FrameEvent>) -> Vec<u8> {
+        match ev {
+            Some(FrameEvent::Frame(f)) => f,
+            other => panic!("expected a frame, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn framebuf_splits_lines_across_arbitrary_push_boundaries() {
+        let mut fb = FrameBuf::new();
+        let wire = b"{\"op\": \"metrics\"}\r\n\n{\"op\": \"shutdown\"}\n";
+        // Feed one byte at a time: the cruellest fragmentation.
+        let mut frames = Vec::new();
+        for b in wire {
+            fb.push(&[*b]);
+            while let Some(ev) = fb.next_event() {
+                frames.push(frame(Some(ev)));
+            }
+        }
+        assert_eq!(
+            frames,
+            vec![
+                b"{\"op\": \"metrics\"}".to_vec(),
+                Vec::new(), // the blank keep-alive line
+                b"{\"op\": \"shutdown\"}".to_vec(),
+            ]
+        );
+        assert_eq!(fb.next_event(), None);
+    }
+
+    #[test]
+    fn framebuf_oversized_lines_surface_once_and_resynchronize() {
+        let mut fb = FrameBuf::new();
+        // Grow past the cap without a newline: Oversized fires exactly
+        // once, then the tail (including more pushes) is discarded.
+        fb.push(&vec![b'x'; MAX_FRAME_BYTES + 1]);
+        assert_eq!(fb.next_event(), Some(FrameEvent::Oversized));
+        fb.push(&vec![b'y'; 4096]);
+        assert_eq!(fb.next_event(), None);
+        fb.push(b"tail\n{\"ok\": 1}\n");
+        // The newline ends the discard; the next line parses normally.
+        assert_eq!(frame(fb.next_event()), b"{\"ok\": 1}".to_vec());
+
+        // A whole oversized line arriving in one gulp (newline included)
+        // also surfaces once, with nothing left to discard.
+        let mut one = vec![b'z'; MAX_FRAME_BYTES + 1];
+        one.push(b'\n');
+        one.extend_from_slice(b"next\n");
+        fb.push(&one);
+        assert_eq!(fb.next_event(), Some(FrameEvent::Oversized));
+        assert_eq!(frame(fb.next_event()), b"next".to_vec());
+    }
+
+    /// A sink that accepts at most `cap` bytes per write call and
+    /// blocks after `limit` total bytes — a slow client in miniature.
+    struct Throttle {
+        cap: usize,
+        limit: usize,
+        got: Vec<u8>,
+    }
+
+    impl Write for Throttle {
+        fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+            if self.got.len() >= self.limit {
+                return Err(std::io::Error::new(ErrorKind::WouldBlock, "full"));
+            }
+            let n = buf.len().min(self.cap).min(self.limit - self.got.len());
+            self.got.extend_from_slice(&buf[..n]);
+            Ok(n)
+        }
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn write_queue_resumes_partial_writes_without_reordering() {
+        let mut q = WriteQueue::new();
+        q.push_line("first response");
+        q.push_line("second");
+        assert_eq!(q.queued_bytes(), "first response\nsecond\n".len());
+        assert_eq!(q.peak_bytes(), q.queued_bytes());
+
+        let mut sink = Throttle { cap: 5, limit: 9, got: Vec::new() };
+        assert_eq!(q.write_to(&mut sink).unwrap(), 9);
+        assert!(!q.is_empty());
+
+        sink.limit = usize::MAX;
+        q.write_to(&mut sink).unwrap();
+        assert!(q.is_empty());
+        assert_eq!(sink.got, b"first response\nsecond\n");
+        // Peak survives the drain.
+        assert_eq!(q.peak_bytes(), "first response\nsecond\n".len());
+    }
+
+    #[test]
+    fn write_queue_surfaces_closed_sinks_as_write_zero() {
+        struct Closed;
+        impl Write for Closed {
+            fn write(&mut self, _buf: &[u8]) -> std::io::Result<usize> {
+                Ok(0)
+            }
+            fn flush(&mut self) -> std::io::Result<()> {
+                Ok(())
+            }
+        }
+        let mut q = WriteQueue::new();
+        q.push_line("doomed");
+        let err = q.write_to(&mut Closed).unwrap_err();
+        assert_eq!(err.kind(), ErrorKind::WriteZero);
+    }
+}

@@ -21,13 +21,19 @@
 //! ## Fault model
 //!
 //! Every way a worker can disappoint — refused connection, death
-//! mid-shard (EOF), a response that times out ([`LaunchOptions::read_timeout`]),
-//! a typed error frame (e.g. `over-budget`), or a *corrupted artifact*
-//! (the client re-validates fingerprint, planned range, and the
-//! payload checksum, so even one flipped bit is caught) — is handled
-//! the same way: the shard goes back on the queue for someone else,
-//! the worker's failure streak grows, and a worker that fails
+//! mid-shard (EOF), a response that times out ([`LaunchOptions::read_timeout`],
+//! an **inter-frame liveness** bound now that connections negotiate
+//! protocol v2 and busy workers heartbeat), a typed error frame (e.g.
+//! `over-budget`), or a *corrupted artifact* (the client re-validates
+//! fingerprint, planned range, and the payload checksum, so even one
+//! flipped bit is caught) — is handled the same way: the shard goes
+//! back on the queue for someone else, the worker's failure streak
+//! grows, and a worker that fails
 //! [`LaunchOptions::worker_failure_limit`] times in a row is retired.
+//! Abandoning a worker always drops its connection, and an event-loop
+//! worker cancels that connection's in-flight shard on disconnect —
+//! a retired worker's pool stops burning cycles on work nobody will
+//! read.
 //! A shard that fails [`LaunchOptions::max_attempts`] times, or the
 //! retirement of the last worker with shards still pending, fails the
 //! whole launch with a typed error — a distributed sweep either
@@ -83,14 +89,16 @@ pub struct LaunchOptions {
     /// everything in memory.
     pub out_dir: Option<PathBuf>,
     /// Per-request I/O deadline (connect/read/write) on worker
-    /// connections; a worker that hangs past it forfeits the shard.
-    /// The protocol has no response streaming or cancellation, so this
-    /// deadline also bounds a shard's **server-side compute time**:
-    /// size it above the slowest shard (or raise `n_shards` so shards
-    /// shrink), or healthy-but-busy workers will be misdiagnosed as
-    /// hung and their still-running computations orphaned on the
-    /// worker's pool. `None` trusts workers to always answer — only
-    /// sensible interactively.
+    /// connections; a worker that goes silent past it forfeits the
+    /// shard. Every fresh connection negotiates protocol v2, and
+    /// event-loop workers stream `keepalive`/`progress` frames during
+    /// compute — each one re-arms this deadline, so against a v2
+    /// worker it is a pure **inter-frame liveness bound**: a shard may
+    /// compute for minutes as long as the worker keeps heartbeating.
+    /// Only against a v1-era worker (or the `threads` core, which
+    /// stays silent while computing) does the deadline still bound
+    /// server-side compute time. `None` trusts workers to always
+    /// answer — only sensible interactively.
     pub read_timeout: Option<Duration>,
     /// A shard failing this many times (across all workers) fails the
     /// launch.
@@ -309,9 +317,10 @@ fn worker_exited(state: &Mutex<LaunchState>) {
             .collect();
         s.failed = Some(format!(
             "every worker was retired with shards {} still incomplete — workers \
-             dead/unreachable, the fleet kept returning bad artifacts, or healthy \
-             workers timed out on shards bigger than the I/O deadline allows \
-             (raise --timeout-ms or increase --shards so shards shrink)",
+             dead/unreachable, the fleet kept returning bad artifacts, or workers \
+             went silent past the I/O deadline (v2 workers heartbeat while busy, \
+             so raise --timeout-ms only for v1/threads-core fleets, or increase \
+             --shards so shards shrink)",
             remaining.join(", ")
         ));
     }
@@ -329,7 +338,15 @@ fn run_one(
     options: &LaunchOptions,
 ) -> Result<ShardArtifact> {
     if client.is_none() {
-        *client = Some(Client::connect_with_timeout(addr, options.read_timeout)?);
+        let mut fresh = Client::connect_with_timeout(addr, options.read_timeout)?;
+        // Negotiate v2 so the worker streams keepalive/progress frames
+        // while it computes: the client skips them, but every one
+        // re-arms the read deadline, turning `read_timeout` into a
+        // liveness bound instead of a compute bound. A v1-era worker
+        // answers `hello` with a typed error frame — the connection is
+        // still usable, it just stays silent-while-computing.
+        let _ = fresh.negotiate_v2();
+        *client = Some(fresh);
     }
     let selector = ShardSelector::new(index, plan.n_shards())?;
     let artifact = client

@@ -33,6 +33,17 @@ struct Inner {
     next_slot: usize,
     /// Total latencies ever recorded (>= ring occupancy).
     recorded: u64,
+    /// Sweep/shard fold chunks completed (each one a cancellation
+    /// checkpoint — a stalling counter is how tests prove an abandoned
+    /// shard stopped burning pool cycles).
+    work_chunks: u64,
+    /// Grid points evaluated across those chunks.
+    work_points: u64,
+    /// Requests answered with a `cancelled` error frame.
+    cancelled: u64,
+    /// High-water mark of any connection's response write queue (bytes)
+    /// — event-loop core only; bounded by its backpressure cap.
+    write_queue_peak_bytes: u64,
 }
 
 /// Shared, thread-safe service counters.
@@ -77,12 +88,31 @@ impl ServiceMetrics {
         self.inner.lock().unwrap().error_frames += 1;
     }
 
+    /// Record one completed sweep/shard fold chunk of `points` points.
+    pub fn record_chunk(&self, points: usize) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.work_chunks += 1;
+        inner.work_points += points as u64;
+    }
+
+    /// Record a request answered with a `cancelled` error frame.
+    pub fn record_cancelled(&self) {
+        self.inner.lock().unwrap().cancelled += 1;
+    }
+
+    /// Raise the write-queue high-water mark to `bytes` if it is higher
+    /// than anything seen so far.
+    pub fn note_write_queue_peak(&self, bytes: usize) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.write_queue_peak_bytes = inner.write_queue_peak_bytes.max(bytes as u64);
+    }
+
     /// Snapshot everything as the `metrics` frame payload.
     pub fn snapshot(&self, cache: &CacheStats) -> Value {
         // Copy what we need and release the lock before the O(n log n)
         // quantile sorts, so connection threads recording latencies are
         // never stalled behind a metrics request.
-        let (requests_counts, error_frames, connections, latencies, recorded) = {
+        let (requests_counts, error_frames, connections, latencies, recorded, work, peak) = {
             let inner = self.inner.lock().unwrap();
             (
                 inner.requests.clone(),
@@ -90,6 +120,8 @@ impl ServiceMetrics {
                 inner.connections,
                 inner.latencies.clone(),
                 inner.recorded,
+                (inner.work_chunks, inner.work_points, inner.cancelled),
+                inner.write_queue_peak_bytes,
             )
         };
         let mut requests = BTreeMap::new();
@@ -120,6 +152,13 @@ impl ServiceMetrics {
         map.insert("error_frames".to_string(), Value::Number(error_frames as f64));
         map.insert("latency".to_string(), Value::Table(latency));
         map.insert("cache".to_string(), Value::Table(cache_map));
+        let (work_chunks, work_points, cancelled) = work;
+        let mut work_map = BTreeMap::new();
+        work_map.insert("chunks".to_string(), Value::Number(work_chunks as f64));
+        work_map.insert("points".to_string(), Value::Number(work_points as f64));
+        work_map.insert("cancelled".to_string(), Value::Number(cancelled as f64));
+        map.insert("work".to_string(), Value::Table(work_map));
+        map.insert("write_queue_peak_bytes".to_string(), Value::Number(peak as f64));
         Value::Table(map)
     }
 
@@ -163,6 +202,17 @@ impl ServiceMetrics {
             num("cache.entries")?,
             num("cache.capacity")?
         ));
+        // Tolerate snapshots from servers predating these counters.
+        if let Some(chunks) = v.get("work.chunks").and_then(Value::as_f64) {
+            let points = v.get("work.points").and_then(Value::as_f64).unwrap_or(0.0);
+            let cancelled = v.get("work.cancelled").and_then(Value::as_f64).unwrap_or(0.0);
+            out.push_str(&format!(
+                "  work            {chunks:.0} chunks, {points:.0} points, {cancelled:.0} cancelled\n"
+            ));
+        }
+        if let Some(peak) = v.get("write_queue_peak_bytes").and_then(Value::as_f64) {
+            out.push_str(&format!("  write queue     {peak:.0} bytes peak\n"));
+        }
         Ok(out)
     }
 }
@@ -213,6 +263,25 @@ mod tests {
         // The oldest 100 samples were overwritten, so the minimum
         // surviving latency is >= 100.
         assert!(v.require_f64("latency.p50_s").unwrap() >= 100.0);
+    }
+
+    #[test]
+    fn work_and_backpressure_counters_accumulate() {
+        let m = ServiceMetrics::new();
+        m.record_chunk(64);
+        m.record_chunk(64);
+        m.record_chunk(8);
+        m.record_cancelled();
+        m.note_write_queue_peak(1024);
+        m.note_write_queue_peak(512); // lower: peak must not regress
+        let v = m.snapshot(&stats());
+        assert_eq!(v.require_f64("work.chunks").unwrap(), 3.0);
+        assert_eq!(v.require_f64("work.points").unwrap(), 136.0);
+        assert_eq!(v.require_f64("work.cancelled").unwrap(), 1.0);
+        assert_eq!(v.require_f64("write_queue_peak_bytes").unwrap(), 1024.0);
+        let text = ServiceMetrics::render(&v).unwrap();
+        assert!(text.contains("work            3 chunks, 136 points, 1 cancelled"), "{text}");
+        assert!(text.contains("write queue     1024 bytes peak"), "{text}");
     }
 
     #[test]

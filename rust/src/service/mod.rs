@@ -11,11 +11,22 @@
 //!
 //! * [`protocol`] — newline-delimited JSON frames over the
 //!   [`crate::config::Value`] layer: `eval`, `sweep`, `shard`, `accel`,
-//!   `metrics`, `shutdown`; typed error frames with stable codes;
-//!   floats optionally bit-hex exact per the `dse::shard` convention.
-//! * [`server`] — accept loop + per-connection reader threads feeding
-//!   the one shared persistent [`crate::exec::Pool`]; graceful drain on
-//!   shutdown; optional `--max-sweep-points` per-request budget.
+//!   `metrics`, `shutdown`, plus the v2 additions (`hello` version
+//!   negotiation, `cancel`, interim `progress`/`keepalive` frames);
+//!   typed error frames with stable codes; floats optionally bit-hex
+//!   exact per the `dse::shard` convention.
+//! * [`server`] — the daemon in two selectable cores sharing one parse
+//!   and dispatch funnel: the default readiness-driven event loop
+//!   ([`reactor`]) and the original thread-per-connection core; both
+//!   feed the one shared persistent [`crate::exec::Pool`]; graceful
+//!   drain on shutdown; optional `--max-sweep-points` budget.
+//! * [`reactor`] — the event loop itself: raw `epoll(7)`/`poll(2)`
+//!   readiness, nonblocking per-connection state machines ([`conn`]),
+//!   a runner-thread bridge for compute ops, cancel-on-disconnect,
+//!   write-queue backpressure, v2 interim frames.
+//! * [`conn`] — the per-connection pieces both cores share: the
+//!   [`conn::FrameBuf`] framing (so both cores agree byte-for-byte on
+//!   what a frame is) and the event loop's bounded write queue.
 //! * [`launcher`] — the distributed half of sweep scale-out: a
 //!   work-queue scheduler (`cimdse sweep --workers host:port,...`) that
 //!   leases shards to daemons over the `shard` op, reassigns on worker
@@ -38,14 +49,17 @@
 
 pub mod cache;
 pub mod client;
+pub mod conn;
 pub mod launcher;
 pub mod metrics;
 pub mod protocol;
+#[cfg(unix)]
+pub mod reactor;
 pub mod server;
 
 pub use cache::{CacheStats, PreparedCache};
 pub use client::Client;
 pub use launcher::{LaunchOptions, LaunchReport, WorkerReport, run_distributed_sweep};
 pub use metrics::ServiceMetrics;
-pub use protocol::{MAX_FRAME_BYTES, Reject, Request};
-pub use server::{ServeOptions, Server, ServerHandle};
+pub use protocol::{MAX_FRAME_BYTES, PROTOCOL_V1, PROTOCOL_V2, Reject, Request};
+pub use server::{ServeCore, ServeOptions, Server, ServerHandle};

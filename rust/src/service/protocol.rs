@@ -5,14 +5,28 @@
 //!
 //! Every request is one JSON object on one line (`\n`-terminated, at
 //! most [`MAX_FRAME_BYTES`] bytes). The `op` field selects the
-//! operation (`eval`, `sweep`, `shard`, `accel`, `metrics`,
-//! `shutdown`); an
+//! operation (`hello`, `eval`, `sweep`, `shard`, `accel`, `metrics`,
+//! `cancel`, `shutdown`); an
 //! optional scalar `id` (string or number) is echoed back verbatim so
 //! pipelining clients can match responses. Responses are one JSON
 //! object per line: `{"ok": true, "op": ..., "result": {...}}` on
 //! success, `{"ok": false, "error": {"code": ..., "message": ...}}` on
 //! failure. Error frames use the stable codes below and never cost the
 //! client its connection — the server answers and keeps reading.
+//!
+//! ## Protocol v2
+//!
+//! A connection starts in protocol v1. A `hello` frame negotiates the
+//! version ([`PROTOCOL_V1`]..=[`PROTOCOL_V2`]); only a connection that
+//! negotiated v2 ever receives *interim* frames — `progress` and
+//! `keepalive` lines emitted while a `sweep`/`shard`/`accel` request
+//! computes. Interim frames carry a `"frame"` discriminator and no
+//! `"ok"` key ([`is_interim_frame`]), so final responses keep their v1
+//! shape byte-for-byte and a v1 client that never says hello sees
+//! exactly the v1 byte stream. The `cancel` op aborts an in-flight or
+//! queued request by its `id` on the same connection; the cancelled
+//! request answers with a [`CODE_CANCELLED`] error frame. See
+//! `rust/docs/protocol.md` for the v2 grammar and compatibility table.
 //!
 //! ## Float convention
 //!
@@ -63,6 +77,23 @@ pub const CODE_OVER_BUDGET: &str = "over-budget";
 /// Error code: the server failed internally while serving a valid
 /// request (should not happen; kept for forward compatibility).
 pub const CODE_INTERNAL: &str = "internal";
+/// Error code: a `hello` frame asked for a protocol version outside
+/// [`PROTOCOL_V1`]..=[`PROTOCOL_V2`].
+pub const CODE_UNSUPPORTED_VERSION: &str = "unsupported-version";
+/// Error code: a `cancel` frame named an `id` with no in-flight or
+/// queued request on this connection (never started, already answered,
+/// or owned by another connection).
+pub const CODE_UNKNOWN_ID: &str = "unknown-id";
+/// Error code: the request was cancelled before it completed — by a
+/// `cancel` frame naming its `id`, by its connection disconnecting, or
+/// by server shutdown discarding queued work.
+pub const CODE_CANCELLED: &str = "cancelled";
+
+/// The baseline protocol version every connection starts in.
+pub const PROTOCOL_V1: u32 = 1;
+/// The newest protocol version this build speaks (progress/keepalive
+/// interim frames + `cancel`).
+pub const PROTOCOL_V2: u32 = 2;
 
 /// A typed protocol rejection: stable machine code + human message.
 #[derive(Clone, Debug)]
@@ -87,6 +118,8 @@ impl Reject {
 /// A parsed, validated request frame.
 #[derive(Clone, Debug)]
 pub enum Request {
+    /// Negotiate the connection's protocol version (v2 entry point).
+    Hello(u32),
     /// Evaluate one or more design points.
     Eval(EvalRequest),
     /// Stream a whole sweep grid to its summary rollup.
@@ -97,6 +130,9 @@ pub enum Request {
     Accel(AccelRequest),
     /// Server counters / latency quantiles / cache stats.
     Metrics,
+    /// Abort the same connection's in-flight or queued request whose
+    /// `id` equals the carried target (scalar, pre-validated).
+    Cancel(Value),
     /// Graceful drain: stop accepting, finish in-flight work, exit.
     Shutdown,
 }
@@ -105,11 +141,13 @@ impl Request {
     /// The op name this request was parsed from.
     pub fn op(&self) -> &'static str {
         match self {
+            Request::Hello(_) => "hello",
             Request::Eval(_) => "eval",
             Request::Sweep(_) => "sweep",
             Request::Shard(_) => "shard",
             Request::Accel(_) => "accel",
             Request::Metrics => "metrics",
+            Request::Cancel(_) => "cancel",
             Request::Shutdown => "shutdown",
         }
     }
@@ -301,18 +339,51 @@ pub fn parse_request(v: &Value) -> (Option<String>, Result<Request, Reject>) {
         }
     };
     let parsed = match op.as_str() {
+        "hello" => parse_hello(v),
         "eval" => parse_eval(v),
         "sweep" => parse_sweep(v),
         "shard" => parse_shard(v),
         "accel" => parse_accel(v),
         "metrics" => Ok(Request::Metrics),
+        "cancel" => parse_cancel(v),
         "shutdown" => Ok(Request::Shutdown),
         other => Err(Reject::new(
             CODE_UNKNOWN_OP,
-            format!("unknown op `{other}` (eval|sweep|shard|accel|metrics|shutdown)"),
+            format!("unknown op `{other}` (hello|eval|sweep|shard|accel|metrics|cancel|shutdown)"),
         )),
     };
     (Some(op), parsed)
+}
+
+fn parse_hello(v: &Value) -> Result<Request, Reject> {
+    let version = match v.get("version") {
+        None | Some(Value::Null) => {
+            return Err(Reject::bad("hello needs an integer `version` field"));
+        }
+        Some(x) => x
+            .as_usize()
+            .ok_or_else(|| Reject::bad("`version` is not a non-negative integer"))?,
+    };
+    if !(PROTOCOL_V1 as usize..=PROTOCOL_V2 as usize).contains(&version) {
+        return Err(Reject::new(
+            CODE_UNSUPPORTED_VERSION,
+            format!(
+                "protocol version {version} is not supported \
+                 (this server speaks {PROTOCOL_V1}..={PROTOCOL_V2})"
+            ),
+        ));
+    }
+    Ok(Request::Hello(version as u32))
+}
+
+fn parse_cancel(v: &Value) -> Result<Request, Reject> {
+    match v.get("target") {
+        Some(t @ (Value::String(_) | Value::Number(_))) => Ok(Request::Cancel(t.clone())),
+        None | Some(Value::Null) => {
+            Err(Reject::bad("cancel needs a scalar `target` request id"))
+        }
+        Some(_) => Err(Reject::bad("`target` is not a scalar (string or number) request id")),
+    }
 }
 
 fn parse_eval(v: &Value) -> Result<Request, Reject> {
@@ -463,6 +534,50 @@ pub fn error_frame(op: Option<&str>, id: Option<&Value>, reject: &Reject) -> Str
     }
     map.insert("error".to_string(), Value::Table(err));
     frame_text(Value::Table(map))
+}
+
+/// The `hello` result payload for a freshly negotiated version: the
+/// version the connection will speak from now on plus the static frame
+/// cap (so clients can size requests without a probe).
+pub fn hello_result(version: u32) -> Value {
+    let mut map = BTreeMap::new();
+    map.insert("version".to_string(), Value::Number(version as f64));
+    map.insert("max_frame_bytes".to_string(), Value::Number(MAX_FRAME_BYTES as f64));
+    Value::Table(map)
+}
+
+/// Serialize a v2 `progress` interim frame (one line, no trailing
+/// newline): `done` of `total` points of the identified request have
+/// been folded. Interim frames carry a `"frame"` discriminator and no
+/// `"ok"` key, so they can never be mistaken for a final response.
+/// Only v2-negotiated connections ever receive one.
+pub fn progress_frame(op: &str, id: Option<&Value>, done: usize, total: usize) -> String {
+    let mut map = BTreeMap::new();
+    map.insert("frame".to_string(), Value::String("progress".to_string()));
+    map.insert("op".to_string(), Value::String(op.to_string()));
+    if let Some(id) = id {
+        map.insert("id".to_string(), id.clone());
+    }
+    map.insert("done".to_string(), Value::Number(done as f64));
+    map.insert("total".to_string(), Value::Number(total as f64));
+    frame_text(Value::Table(map))
+}
+
+/// Serialize a v2 `keepalive` interim frame: a bare liveness pulse sent
+/// while a request computes but no progress boundary has been crossed.
+/// Only v2-negotiated connections ever receive one.
+pub fn keepalive_frame() -> String {
+    let mut map = BTreeMap::new();
+    map.insert("frame".to_string(), Value::String("keepalive".to_string()));
+    frame_text(Value::Table(map))
+}
+
+/// Is this decoded line a v2 interim frame (`progress`/`keepalive`)
+/// rather than a final response? Clients awaiting a response skip
+/// interim frames (each one proves the server is alive and re-arms
+/// read-timeout liveness); v1 code never sees one.
+pub fn is_interim_frame(v: &Value) -> bool {
+    matches!(v.get("frame"), Some(Value::String(_)))
 }
 
 /// Canonical single-line text of a frame. Serialization of a response
@@ -704,6 +819,85 @@ mod tests {
         assert_eq!(frame_id(&frame), Some(Value::String("abc".into())));
         let frame = parse_json(r#"{"op": "metrics", "id": [1]}"#).unwrap();
         assert_eq!(frame_id(&frame), None);
+    }
+
+    #[test]
+    fn hello_negotiates_supported_versions_and_rejects_others() {
+        for v in [1usize, 2] {
+            match req(&format!(r#"{{"op": "hello", "version": {v}}}"#)).1.unwrap() {
+                Request::Hello(got) => assert_eq!(got as usize, v),
+                other => panic!("wrong request: {other:?}"),
+            }
+        }
+        for (text, code, needle) in [
+            (r#"{"op": "hello"}"#, CODE_BAD_REQUEST, "version"),
+            (r#"{"op": "hello", "version": null}"#, CODE_BAD_REQUEST, "version"),
+            (r#"{"op": "hello", "version": "2"}"#, CODE_BAD_REQUEST, "integer"),
+            (r#"{"op": "hello", "version": 2.5}"#, CODE_BAD_REQUEST, "integer"),
+            (r#"{"op": "hello", "version": 0}"#, CODE_UNSUPPORTED_VERSION, "not supported"),
+            (r#"{"op": "hello", "version": 3}"#, CODE_UNSUPPORTED_VERSION, "1..=2"),
+        ] {
+            let (op, r) = req(text);
+            assert_eq!(op.as_deref(), Some("hello"), "{text}");
+            let e = r.expect_err(text);
+            assert_eq!(e.code, code, "{text}");
+            assert!(e.message.contains(needle), "{text}: {}", e.message);
+        }
+        let result = hello_result(PROTOCOL_V2);
+        assert_eq!(result.get("version").and_then(Value::as_usize), Some(2));
+        assert_eq!(
+            result.get("max_frame_bytes").and_then(Value::as_usize),
+            Some(MAX_FRAME_BYTES)
+        );
+    }
+
+    #[test]
+    fn cancel_parses_scalar_targets_and_rejects_others() {
+        match req(r#"{"op": "cancel", "target": 7}"#).1.unwrap() {
+            Request::Cancel(t) => assert_eq!(t.as_f64(), Some(7.0)),
+            other => panic!("wrong request: {other:?}"),
+        }
+        match req(r#"{"op": "cancel", "target": "job-1", "id": 9}"#).1.unwrap() {
+            Request::Cancel(t) => assert_eq!(t.as_str(), Some("job-1")),
+            other => panic!("wrong request: {other:?}"),
+        }
+        for (text, needle) in [
+            (r#"{"op": "cancel"}"#, "target"),
+            (r#"{"op": "cancel", "target": null}"#, "target"),
+            (r#"{"op": "cancel", "target": [1]}"#, "scalar"),
+            (r#"{"op": "cancel", "target": {"id": 1}}"#, "scalar"),
+        ] {
+            let (_, r) = req(text);
+            let e = r.expect_err(text);
+            assert_eq!(e.code, CODE_BAD_REQUEST, "{text}");
+            assert!(e.message.contains(needle), "{text}: {}", e.message);
+        }
+    }
+
+    #[test]
+    fn interim_frames_are_single_lines_and_discriminated() {
+        let id = Value::String("s1".into());
+        let p = progress_frame("sweep", Some(&id), 2048, 81920);
+        assert!(!p.contains('\n'), "{p}");
+        let doc = parse_json(&p).unwrap();
+        assert!(is_interim_frame(&doc), "{p}");
+        assert_eq!(doc.require_str("frame").unwrap(), "progress");
+        assert_eq!(doc.require_str("op").unwrap(), "sweep");
+        assert_eq!(doc.require_str("id").unwrap(), "s1");
+        assert_eq!(doc.get("done").and_then(Value::as_usize), Some(2048));
+        assert_eq!(doc.get("total").and_then(Value::as_usize), Some(81920));
+        assert!(doc.get("ok").is_none(), "interim frames carry no `ok` key: {p}");
+
+        let k = keepalive_frame();
+        let doc = parse_json(&k).unwrap();
+        assert!(is_interim_frame(&doc), "{k}");
+        assert_eq!(doc.require_str("frame").unwrap(), "keepalive");
+
+        // Final responses are never mistaken for interim frames.
+        let ok = ok_frame("eval", None, Value::Table(BTreeMap::new()));
+        assert!(!is_interim_frame(&parse_json(&ok).unwrap()));
+        let err = error_frame(Some("sweep"), None, &Reject::new(CODE_CANCELLED, "x"));
+        assert!(!is_interim_frame(&parse_json(&err).unwrap()));
     }
 
     #[test]

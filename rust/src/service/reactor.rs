@@ -1,0 +1,1004 @@
+//! The readiness-driven serving core: one event-loop thread multiplexes
+//! every connection over `epoll(7)` (raw syscalls — the crate stays
+//! zero-dependency) with a portable `poll(2)` fallback off Linux.
+//!
+//! ## Architecture
+//!
+//! * **Reactor thread** (the caller of [`serve_event_loop`]): accepts,
+//!   reads nonblocking sockets into per-connection [`FrameBuf`]s,
+//!   parses frames, answers cheap ops (`hello`, `eval`, `metrics`,
+//!   `cancel`, `shutdown`, and every parse error) inline, and queues
+//!   compute ops (`sweep`, `shard`, `accel`) per connection in strict
+//!   FIFO order.
+//! * **Runner threads** (a small fixed pool): pull one compute job at a
+//!   time, evaluate it through the shared [`crate::exec::Pool`] under a
+//!   [`FoldCtl`] carrying the job's [`CancelToken`] and a progress hook,
+//!   and push the response line back over a completion queue.
+//! * **Wakeup pipe** (a [`UnixStream::pair`]): runners write one byte
+//!   after each completion or progress frame so the reactor's poll call
+//!   returns immediately instead of waiting out its tick.
+//!
+//! Responses per connection are answered strictly in request order
+//! (one compute job in flight per connection), so a pipelining v1
+//! client observes the exact byte stream the threaded core produces.
+//! The only out-of-order frame is `cancel`'s own response — answered
+//! immediately, because a cancel queued behind the sweep it targets
+//! would be useless — plus v2 interim `progress`/`keepalive` frames,
+//! which only version-negotiated connections ever receive.
+//!
+//! ## Disconnect and drain
+//!
+//! A read of zero bytes (or any read/write error) is a disconnect: all
+//! of the connection's queued and in-flight work is cancelled through
+//! its tokens and the connection is dropped — an abandoned shard stops
+//! burning pool cycles at its next chunk boundary. On shutdown the
+//! reactor stops accepting and reading, drops undispatched pipelined
+//! requests (the threaded core's long-standing semantics), lets
+//! in-flight computes finish, flushes write queues, and force-drops any
+//! connection whose peer stops draining for [`DRAIN_STUCK_GRACE`] — so
+//! drain latency is bounded by the grace period, not by stuck clients.
+
+use std::collections::HashMap;
+use std::io::{ErrorKind, Read, Write};
+use std::net::TcpListener;
+use std::os::unix::net::UnixStream;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::config::Value;
+use crate::dse::{FoldCtl, ShardPlan};
+use crate::error::{Error, Result};
+use crate::exec::{CancelToken, default_workers};
+
+use super::conn::{Conn, FrameEvent, InFlight, PendingJob, QueueEntry};
+use super::protocol::{
+    PROTOCOL_V2, Request, error_frame, keepalive_frame, ok_frame, progress_frame,
+};
+use super::server::{
+    ServerShared, cancelled_reject, dispatch, oversized_reject, parse_or_reply,
+    unknown_id_reject,
+};
+pub use poller::{Event, Interest, Poller};
+
+/// Poll tick: bounds drain-flag staleness and keepalive jitter.
+const TICK: Duration = Duration::from_millis(25);
+
+/// Minimum quiet interval before a v2 connection with work in flight is
+/// sent a `keepalive` frame. Liveness deadlines (`--timeout-ms`) should
+/// sit comfortably above this.
+const KEEPALIVE_EVERY: Duration = Duration::from_millis(250);
+
+/// During drain, a connection whose write queue makes no progress for
+/// this long is force-dropped so stuck clients cannot delay shutdown.
+const DRAIN_STUCK_GRACE: Duration = Duration::from_millis(400);
+
+/// Poll token of the accept listener.
+const TOKEN_LISTENER: u64 = 0;
+/// Poll token of the wakeup pipe's read end.
+const TOKEN_WAKEUP: u64 = 1;
+/// First token handed to an accepted connection.
+const TOKEN_FIRST_CONN: u64 = 2;
+
+/// Compute ops that run on runner threads; everything else is answered
+/// inline on the reactor.
+fn is_compute(op: &str) -> bool {
+    matches!(op, "sweep" | "shard" | "accel")
+}
+
+/// One compute job handed to a runner thread.
+struct RunnerJob {
+    conn_id: u64,
+    op: &'static str,
+    id: Option<Value>,
+    request: Request,
+    cancel: CancelToken,
+    /// The connection's negotiated version when the job was dispatched —
+    /// gates interim progress frames.
+    version: u32,
+}
+
+/// One line travelling back from a runner to the reactor.
+struct Completion {
+    conn_id: u64,
+    line: String,
+    /// `true` for the final response (clears the connection's in-flight
+    /// slot); `false` for interim progress frames.
+    end_of_job: bool,
+}
+
+#[derive(Default)]
+struct JobQueue {
+    queue: std::collections::VecDeque<RunnerJob>,
+    drain: bool,
+}
+
+/// Shared plumbing between the reactor and its runner threads.
+#[derive(Default)]
+struct Bridge {
+    jobs: Mutex<JobQueue>,
+    jobs_cv: Condvar,
+    done: Mutex<std::collections::VecDeque<Completion>>,
+}
+
+/// Write one byte into the wakeup pipe (nonblocking: a full pipe means
+/// a wakeup is already pending, which is all we need).
+fn wake_reactor(wake: &UnixStream) {
+    let mut w = wake;
+    let _ = Write::write(&mut w, &[1u8]);
+}
+
+fn push_completion(bridge: &Bridge, wake: &UnixStream, completion: Completion) {
+    bridge.done.lock().unwrap().push_back(completion);
+    wake_reactor(wake);
+}
+
+/// Grid points this job will evaluate — the `total` of its progress
+/// frames. Requests the dispatcher will reject anyway report zero.
+fn job_total(job: &RunnerJob) -> usize {
+    match &job.request {
+        Request::Sweep(req) => req.spec.len(),
+        Request::Shard(req) => ShardPlan::new(&req.spec, req.selector.n_shards())
+            .map(|plan| plan.range(req.selector.index()).len())
+            .unwrap_or(0),
+        _ => 0,
+    }
+}
+
+/// Run one compute job to a response line (plus interim progress lines).
+fn run_job(shared: &ServerShared, bridge: &Bridge, wake: &UnixStream, job: RunnerJob) {
+    let start = Instant::now();
+    if job.cancel.is_cancelled() {
+        // Cancelled while queued behind this runner's previous job.
+        shared.metrics.record_cancelled();
+        shared.metrics.record_error_frame();
+        let line = error_frame(Some(job.op), job.id.as_ref(), &cancelled_reject());
+        push_completion(bridge, wake, Completion { conn_id: job.conn_id, line, end_of_job: true });
+        return;
+    }
+    let total = job_total(&job);
+    let done = AtomicUsize::new(0);
+    let emitted = AtomicUsize::new(0);
+    let progress_every = shared.progress_every;
+    let progress = |points: usize| {
+        shared.metrics.record_chunk(points);
+        let so_far = done.fetch_add(points, Ordering::AcqRel) + points;
+        let Some(every) = progress_every else { return };
+        if job.version < PROTOCOL_V2 {
+            return;
+        }
+        let last = emitted.load(Ordering::Acquire);
+        if so_far.saturating_sub(last) >= every
+            && emitted
+                .compare_exchange(last, so_far, Ordering::AcqRel, Ordering::Acquire)
+                .is_ok()
+        {
+            push_completion(
+                bridge,
+                wake,
+                Completion {
+                    conn_id: job.conn_id,
+                    line: progress_frame(job.op, job.id.as_ref(), so_far, total),
+                    end_of_job: false,
+                },
+            );
+        }
+    };
+    let ctl = FoldCtl {
+        cancel: Some(&job.cancel),
+        progress: Some(&progress),
+        // Tighten serial-path chunking to the progress cadence so tiny
+        // grids still demonstrate it (chunk size never changes bytes).
+        chunk: progress_every,
+    };
+    let line = match dispatch(&job.request, shared, ctl) {
+        Ok(result) => {
+            shared.metrics.record_request(job.op, start.elapsed().as_secs_f64());
+            ok_frame(job.op, job.id.as_ref(), result)
+        }
+        Err(reject) => {
+            if reject.code == super::protocol::CODE_CANCELLED {
+                shared.metrics.record_cancelled();
+            }
+            shared.metrics.record_error_frame();
+            error_frame(Some(job.op), job.id.as_ref(), &reject)
+        }
+    };
+    push_completion(bridge, wake, Completion { conn_id: job.conn_id, line, end_of_job: true });
+}
+
+fn runner_loop(shared: &ServerShared, bridge: &Bridge, wake: &UnixStream) {
+    loop {
+        let job = {
+            let mut q = bridge.jobs.lock().unwrap();
+            loop {
+                if let Some(job) = q.queue.pop_front() {
+                    break Some(job);
+                }
+                if q.drain {
+                    break None;
+                }
+                q = bridge.jobs_cv.wait(q).unwrap();
+            }
+        };
+        match job {
+            Some(job) => run_job(shared, bridge, wake, job),
+            None => return,
+        }
+    }
+}
+
+/// Serve until a graceful shutdown completes — the event-loop analogue
+/// of the threaded `Server::serve`.
+pub(crate) fn serve_event_loop(listener: TcpListener, shared: Arc<ServerShared>) -> Result<()> {
+    use std::os::unix::io::AsRawFd;
+
+    let (wake_rx, wake_tx) = UnixStream::pair()
+        .map_err(|e| Error::Runtime(format!("serve: wakeup pipe: {e}")))?;
+    wake_rx
+        .set_nonblocking(true)
+        .and_then(|_| wake_tx.set_nonblocking(true))
+        .map_err(|e| Error::Runtime(format!("serve: wakeup pipe: {e}")))?;
+
+    let bridge = Arc::new(Bridge::default());
+    let runners = default_workers().clamp(2, 4);
+    let mut runner_handles = Vec::with_capacity(runners);
+    for _ in 0..runners {
+        let shared = Arc::clone(&shared);
+        let bridge = Arc::clone(&bridge);
+        let wake = wake_tx
+            .try_clone()
+            .map_err(|e| Error::Runtime(format!("serve: clone wakeup pipe: {e}")))?;
+        runner_handles.push(std::thread::spawn(move || runner_loop(&shared, &bridge, &wake)));
+    }
+
+    let mut poller = Poller::new().map_err(|e| Error::Runtime(format!("serve: poller: {e}")))?;
+    poller
+        .register(listener.as_raw_fd(), TOKEN_LISTENER, Interest::readable())
+        .and_then(|_| poller.register(wake_rx.as_raw_fd(), TOKEN_WAKEUP, Interest::readable()))
+        .map_err(|e| Error::Runtime(format!("serve: poller register: {e}")))?;
+
+    let mut conns: HashMap<u64, Conn> = HashMap::new();
+    let mut next_id = TOKEN_FIRST_CONN;
+    let mut events: Vec<Event> = Vec::new();
+    let mut draining = false;
+    let mut listener_registered = true;
+
+    loop {
+        if let Err(e) = poller.wait(&mut events, TICK) {
+            return Err(Error::Runtime(format!("serve: poll: {e}")));
+        }
+        for i in 0..events.len() {
+            let ev = events[i];
+            match ev.token {
+                TOKEN_LISTENER => {
+                    if !draining {
+                        accept_ready(&listener, &mut poller, &mut conns, &mut next_id, &shared);
+                    }
+                }
+                TOKEN_WAKEUP => {
+                    drain_wakeups(&wake_rx);
+                    deliver_completions(
+                        &mut poller,
+                        &mut conns,
+                        &shared,
+                        &bridge,
+                        draining,
+                    );
+                }
+                id => {
+                    conn_event(&mut poller, &mut conns, id, ev, &shared, &bridge, draining);
+                }
+            }
+        }
+        // A `shutdown` frame (or a ServerHandle) may have flipped the
+        // flag during event handling; enter drain mode exactly once.
+        if !draining && shared.shutdown.load(std::sync::atomic::Ordering::SeqCst) {
+            draining = true;
+            if listener_registered {
+                let _ = poller.deregister(listener.as_raw_fd());
+                listener_registered = false;
+            }
+            let now = Instant::now();
+            for (&id, conn) in conns.iter_mut() {
+                // Undispatched pipelined requests are dropped, matching
+                // the threaded core (which stops reading frames at the
+                // same point); in-flight computes always finish.
+                conn.queue.clear();
+                conn.read_closed = true;
+                conn.last_write_progress = now;
+                update_interest(&mut poller, id, conn);
+            }
+        }
+        keepalive_tick(&mut poller, &mut conns);
+        if draining {
+            conns.retain(|&id, conn| {
+                let idle = conn.in_flight.is_none() && conn.out.is_empty();
+                let stuck = !conn.out.is_empty()
+                    && conn.last_write_progress.elapsed() > DRAIN_STUCK_GRACE;
+                if idle || stuck {
+                    conn.cancel_all();
+                    let _ = poller.deregister(conn.stream.as_raw_fd());
+                    return false;
+                }
+                true
+            });
+            if conns.is_empty() {
+                break;
+            }
+        }
+    }
+
+    // Stop the runners: finish whatever is queued (tokens of dropped
+    // connections are already tripped, so those unwind at their next
+    // chunk), then exit.
+    {
+        let mut q = bridge.jobs.lock().unwrap();
+        q.drain = true;
+    }
+    bridge.jobs_cv.notify_all();
+    for handle in runner_handles {
+        let _ = handle.join();
+    }
+    drop(listener);
+    Ok(())
+}
+
+fn accept_ready(
+    listener: &TcpListener,
+    poller: &mut Poller,
+    conns: &mut HashMap<u64, Conn>,
+    next_id: &mut u64,
+    shared: &ServerShared,
+) {
+    use std::os::unix::io::AsRawFd;
+    loop {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                if stream.set_nonblocking(true).is_err() {
+                    continue;
+                }
+                shared.metrics.connection_opened();
+                let id = *next_id;
+                *next_id += 1;
+                if poller.register(stream.as_raw_fd(), id, Interest::readable()).is_ok() {
+                    conns.insert(id, Conn::new(stream));
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => {
+                // Transient accept failures (fd pressure, aborted
+                // handshakes) must not kill the daemon; the next tick
+                // retries.
+                eprintln!("cimdse serve: accept failed (retrying): {e}");
+                break;
+            }
+        }
+    }
+}
+
+fn drain_wakeups(wake_rx: &UnixStream) {
+    let mut buf = [0u8; 256];
+    let mut r = wake_rx;
+    loop {
+        match Read::read(&mut r, &mut buf) {
+            Ok(0) => return,
+            Ok(_) => {}
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(_) => return, // WouldBlock: fully drained
+        }
+    }
+}
+
+fn deliver_completions(
+    poller: &mut Poller,
+    conns: &mut HashMap<u64, Conn>,
+    shared: &ServerShared,
+    bridge: &Bridge,
+    draining: bool,
+) {
+    let batch: Vec<Completion> = {
+        let mut done = bridge.done.lock().unwrap();
+        done.drain(..).collect()
+    };
+    for completion in batch {
+        let Some(conn) = conns.get_mut(&completion.conn_id) else {
+            continue; // the connection disconnected mid-compute
+        };
+        conn.send(&completion.line);
+        shared.metrics.note_write_queue_peak(conn.out.peak_bytes());
+        if completion.end_of_job {
+            conn.in_flight = None;
+        }
+        finish_touch(poller, conns, completion.conn_id, shared, bridge, draining);
+    }
+}
+
+/// The per-event epilogue for one connection: re-parse buffered frames
+/// (a completion or a write flush may have just lifted the backpressure
+/// throttle, and no further read event would arrive for bytes already
+/// sitting in the [`FrameBuf`]), pump the FIFO queue, flush what the
+/// socket will take, reap finished connections, and refresh poll
+/// interest. A write error drops the connection (disconnect ⇒ cancel
+/// its work).
+fn finish_touch(
+    poller: &mut Poller,
+    conns: &mut HashMap<u64, Conn>,
+    id: u64,
+    shared: &ServerShared,
+    bridge: &Bridge,
+    draining: bool,
+) {
+    use std::os::unix::io::AsRawFd;
+    let Some(conn) = conns.get_mut(&id) else { return };
+    if !draining {
+        // Loop until quiescent, not once: pumping cheap replies can
+        // lift the pipeline throttle while complete frames still sit
+        // in the FrameBuf — and no future socket event will re-parse
+        // bytes already consumed off the wire. Each iteration either
+        // consumes buffered bytes or observes throttle, so this
+        // terminates.
+        loop {
+            drain_frames(conn, shared);
+            pump_conn(conn, id, shared, bridge);
+            if conn.throttled() || !conn.frames.has_frame() {
+                break;
+            }
+        }
+    }
+    let alive = match conn.out.write_to(&mut conn.stream) {
+        Ok(n) => {
+            if n > 0 {
+                conn.last_write_progress = Instant::now();
+            }
+            true
+        }
+        Err(_) => false,
+    };
+    // A fully answered connection whose peer has closed is done.
+    let done = conn.read_closed
+        && conn.in_flight.is_none()
+        && conn.queue.is_empty()
+        && conn.out.is_empty();
+    if !alive || done {
+        conn.cancel_all();
+        let _ = poller.deregister(conn.stream.as_raw_fd());
+        conns.remove(&id);
+        return;
+    }
+    update_interest(poller, id, conn);
+}
+
+fn update_interest(poller: &mut Poller, id: u64, conn: &Conn) {
+    use std::os::unix::io::AsRawFd;
+    let interest = Interest {
+        readable: !conn.read_closed && !conn.throttled(),
+        writable: !conn.out.is_empty(),
+    };
+    let _ = poller.modify(conn.stream.as_raw_fd(), id, interest);
+}
+
+/// Parse every buffered frame the backpressure bounds allow into the
+/// connection's FIFO queue.
+fn drain_frames(conn: &mut Conn, shared: &ServerShared) {
+    while !conn.throttled() {
+        match conn.frames.next_event() {
+            Some(FrameEvent::Frame(line)) => process_line(conn, &line, shared),
+            Some(FrameEvent::Oversized) => {
+                shared.metrics.record_error_frame();
+                let line = error_frame(None, None, &oversized_reject());
+                conn.queue.push_back(QueueEntry::Reply(line));
+            }
+            None => break,
+        }
+    }
+}
+
+fn conn_event(
+    poller: &mut Poller,
+    conns: &mut HashMap<u64, Conn>,
+    id: u64,
+    ev: Event,
+    shared: &ServerShared,
+    bridge: &Bridge,
+    draining: bool,
+) {
+    use std::os::unix::io::AsRawFd;
+    let Some(conn) = conns.get_mut(&id) else { return };
+    if ev.hangup {
+        // EPOLLERR/EPOLLHUP: the connection is gone in both directions
+        // (reset or fully closed). Nothing is deliverable — cancel every
+        // token this connection owns and drop it; an abandoned sweep
+        // stops at its next chunk boundary.
+        conn.cancel_all();
+        let _ = poller.deregister(conn.stream.as_raw_fd());
+        conns.remove(&id);
+        return;
+    }
+    if ev.readable && !conn.read_closed && !draining {
+        let mut chunk = [0u8; 8192];
+        loop {
+            drain_frames(conn, shared);
+            if conn.throttled() || conn.read_closed {
+                break;
+            }
+            match conn.stream.read(&mut chunk) {
+                Ok(0) => {
+                    // Clean EOF: no further requests will arrive, but
+                    // everything already parsed is still answered (the
+                    // peer may be half-closed and reading). Cancellation
+                    // for a peer that *vanished* comes from the write
+                    // error its reset produces — keepalive/progress
+                    // frames keep v2 connections probing.
+                    conn.read_closed = true;
+                }
+                Ok(n) => conn.frames.push(&chunk[..n]),
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(_) => {
+                    conn.cancel_all();
+                    let _ = poller.deregister(conn.stream.as_raw_fd());
+                    conns.remove(&id);
+                    return;
+                }
+            }
+        }
+    }
+    // Parse + pump + flush, reap closed-and-answered connections,
+    // refresh interest.
+    finish_touch(poller, conns, id, shared, bridge, draining);
+}
+
+/// Parse one frame into the connection's FIFO queue (or answer `cancel`
+/// immediately).
+fn process_line(conn: &mut Conn, line: &[u8], shared: &ServerShared) {
+    if line.iter().all(|b| b.is_ascii_whitespace()) {
+        return; // blank keep-alive lines are not frames
+    }
+    match parse_or_reply(line, shared) {
+        Err(reply) => conn.queue.push_back(QueueEntry::Reply(reply)),
+        Ok((id, Request::Cancel(target))) => {
+            // Answered out of band by design: a cancel queued behind the
+            // request it targets could never fire in time.
+            let start = Instant::now();
+            let key = target.to_json_string().unwrap_or_default();
+            let line = if conn.cancel_target(&key) {
+                shared.metrics.record_request("cancel", start.elapsed().as_secs_f64());
+                let mut map = std::collections::BTreeMap::new();
+                map.insert("target".to_string(), target.clone());
+                map.insert("cancelled".to_string(), Value::Bool(true));
+                ok_frame("cancel", id.as_ref(), Value::Table(map))
+            } else {
+                shared.metrics.record_error_frame();
+                error_frame(Some("cancel"), id.as_ref(), &unknown_id_reject(&key))
+            };
+            conn.send(&line);
+        }
+        Ok((id, request)) => {
+            let op = request.op();
+            let id_key = id.as_ref().and_then(|v| v.to_json_string().ok());
+            conn.queue.push_back(QueueEntry::Job(PendingJob {
+                op,
+                id,
+                id_key,
+                request,
+                cancel: CancelToken::new(),
+            }));
+        }
+    }
+}
+
+/// Answer queue entries in FIFO order until a compute op goes in flight
+/// (or the queue empties).
+fn pump_conn(conn: &mut Conn, conn_id: u64, shared: &ServerShared, bridge: &Bridge) {
+    while conn.in_flight.is_none() {
+        let Some(entry) = conn.queue.pop_front() else { break };
+        match entry {
+            QueueEntry::Reply(line) => conn.send(&line),
+            QueueEntry::Job(job) => {
+                if job.cancel.is_cancelled() {
+                    // Cancelled while queued: answered at its FIFO turn
+                    // without ever touching the pool.
+                    shared.metrics.record_cancelled();
+                    shared.metrics.record_error_frame();
+                    conn.send(&error_frame(Some(job.op), job.id.as_ref(), &cancelled_reject()));
+                } else if is_compute(job.op) {
+                    conn.in_flight = Some(InFlight {
+                        op: job.op,
+                        id_key: job.id_key.clone(),
+                        cancel: job.cancel.clone(),
+                    });
+                    {
+                        let mut q = bridge.jobs.lock().unwrap();
+                        q.queue.push_back(RunnerJob {
+                            conn_id,
+                            op: job.op,
+                            id: job.id,
+                            request: job.request,
+                            cancel: job.cancel,
+                            version: conn.version,
+                        });
+                    }
+                    bridge.jobs_cv.notify_one();
+                } else {
+                    if let Request::Hello(version) = &job.request {
+                        conn.version = *version;
+                    }
+                    let start = Instant::now();
+                    let line = match dispatch(&job.request, shared, FoldCtl::default()) {
+                        Ok(result) => {
+                            shared
+                                .metrics
+                                .record_request(job.op, start.elapsed().as_secs_f64());
+                            ok_frame(job.op, job.id.as_ref(), result)
+                        }
+                        Err(reject) => {
+                            shared.metrics.record_error_frame();
+                            error_frame(Some(job.op), job.id.as_ref(), &reject)
+                        }
+                    };
+                    conn.send(&line);
+                }
+            }
+        }
+    }
+    shared.metrics.note_write_queue_peak(conn.out.peak_bytes());
+}
+
+fn keepalive_tick(poller: &mut Poller, conns: &mut HashMap<u64, Conn>) {
+    for (&id, conn) in conns.iter_mut() {
+        if conn.version >= PROTOCOL_V2
+            && conn.in_flight.is_some()
+            && conn.last_tx.elapsed() >= KEEPALIVE_EVERY
+        {
+            conn.send(&keepalive_frame());
+            let _ = conn.out.write_to(&mut conn.stream);
+            update_interest(poller, id, conn);
+        }
+    }
+}
+
+/// Readiness polling over raw syscalls: `epoll(7)` on Linux, `poll(2)`
+/// everywhere else — the only platform-specific code in the crate.
+mod poller {
+    use std::io;
+    use std::os::unix::io::RawFd;
+    use std::time::Duration;
+
+    /// What a registration wants to be woken for.
+    #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+    pub struct Interest {
+        /// Wake when the fd is readable (or the peer hung up).
+        pub readable: bool,
+        /// Wake when the fd is writable.
+        pub writable: bool,
+    }
+
+    impl Interest {
+        /// Read-only interest.
+        pub fn readable() -> Interest {
+            Interest { readable: true, writable: false }
+        }
+    }
+
+    /// One readiness event out of [`Poller::wait`].
+    #[derive(Clone, Copy, Debug)]
+    pub struct Event {
+        /// The token the fd was registered with.
+        pub token: u64,
+        /// Readable (includes hangup/error so reads observe EOF).
+        pub readable: bool,
+        /// Writable (includes hangup/error so writes observe the error).
+        pub writable: bool,
+        /// Peer hung up or the fd errored.
+        pub hangup: bool,
+    }
+
+    #[cfg(target_os = "linux")]
+    mod sys {
+        use std::os::raw::c_int;
+
+        // `epoll_event` is packed on x86-64 only (a 12-byte struct); on
+        // every other Linux architecture it has natural alignment. See
+        // `epoll_ctl(2)` NOTES.
+        #[cfg_attr(target_arch = "x86_64", repr(C, packed))]
+        #[cfg_attr(not(target_arch = "x86_64"), repr(C))]
+        #[derive(Clone, Copy)]
+        pub struct EpollEvent {
+            pub events: u32,
+            pub data: u64,
+        }
+
+        pub const EPOLL_CLOEXEC: c_int = 0x80000;
+        pub const EPOLL_CTL_ADD: c_int = 1;
+        pub const EPOLL_CTL_DEL: c_int = 2;
+        pub const EPOLL_CTL_MOD: c_int = 3;
+        pub const EPOLLIN: u32 = 0x001;
+        pub const EPOLLOUT: u32 = 0x004;
+        pub const EPOLLERR: u32 = 0x008;
+        pub const EPOLLHUP: u32 = 0x010;
+        pub const EPOLLRDHUP: u32 = 0x2000;
+
+        extern "C" {
+            pub fn epoll_create1(flags: c_int) -> c_int;
+            pub fn epoll_ctl(
+                epfd: c_int,
+                op: c_int,
+                fd: c_int,
+                event: *mut EpollEvent,
+            ) -> c_int;
+            pub fn epoll_wait(
+                epfd: c_int,
+                events: *mut EpollEvent,
+                maxevents: c_int,
+                timeout_ms: c_int,
+            ) -> c_int;
+        }
+    }
+
+    /// The Linux implementation: one epoll instance, level-triggered.
+    #[cfg(target_os = "linux")]
+    pub struct Poller {
+        epfd: std::os::unix::io::OwnedFd,
+    }
+
+    #[cfg(target_os = "linux")]
+    impl Poller {
+        /// A fresh epoll instance (close-on-exec).
+        pub fn new() -> io::Result<Poller> {
+            use std::os::unix::io::FromRawFd;
+            // SAFETY: epoll_create1 takes no pointers; it returns a new
+            // fd or -1.
+            let fd = unsafe { sys::epoll_create1(sys::EPOLL_CLOEXEC) };
+            if fd < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            // SAFETY: `fd` was just returned by epoll_create1, is valid,
+            // and nothing else owns it.
+            let epfd = unsafe { std::os::unix::io::OwnedFd::from_raw_fd(fd) };
+            Ok(Poller { epfd })
+        }
+
+        fn events_bits(interest: Interest) -> u32 {
+            // EPOLLRDHUP rides with read interest only: once a
+            // connection stops reading (EOF seen, or throttled), the
+            // level-triggered half-close condition must stop waking the
+            // loop. EPOLLERR/EPOLLHUP are always reported regardless.
+            let mut bits = 0;
+            if interest.readable {
+                bits |= sys::EPOLLIN | sys::EPOLLRDHUP;
+            }
+            if interest.writable {
+                bits |= sys::EPOLLOUT;
+            }
+            bits
+        }
+
+        fn ctl(&mut self, op: std::os::raw::c_int, fd: RawFd, ev: sys::EpollEvent) -> io::Result<()> {
+            use std::os::unix::io::AsRawFd;
+            let mut ev = ev;
+            // SAFETY: `ev` lives across the call; the kernel copies it
+            // before epoll_ctl returns, and both fds are valid.
+            let rc = unsafe { sys::epoll_ctl(self.epfd.as_raw_fd(), op, fd, &mut ev) };
+            if rc < 0 { Err(io::Error::last_os_error()) } else { Ok(()) }
+        }
+
+        /// Start watching `fd` under `token`.
+        pub fn register(&mut self, fd: RawFd, token: u64, interest: Interest) -> io::Result<()> {
+            let ev = sys::EpollEvent { events: Self::events_bits(interest), data: token };
+            self.ctl(sys::EPOLL_CTL_ADD, fd, ev)
+        }
+
+        /// Update the interest of a watched `fd`.
+        pub fn modify(&mut self, fd: RawFd, token: u64, interest: Interest) -> io::Result<()> {
+            let ev = sys::EpollEvent { events: Self::events_bits(interest), data: token };
+            self.ctl(sys::EPOLL_CTL_MOD, fd, ev)
+        }
+
+        /// Stop watching `fd`.
+        pub fn deregister(&mut self, fd: RawFd) -> io::Result<()> {
+            // A non-null event pointer keeps pre-2.6.9 kernels happy.
+            let ev = sys::EpollEvent { events: 0, data: 0 };
+            self.ctl(sys::EPOLL_CTL_DEL, fd, ev)
+        }
+
+        /// Wait up to `timeout` for readiness; appends into `out`
+        /// (cleared first). EINTR surfaces as zero events.
+        pub fn wait(&mut self, out: &mut Vec<Event>, timeout: Duration) -> io::Result<()> {
+            use std::os::unix::io::AsRawFd;
+            out.clear();
+            let mut buf = [sys::EpollEvent { events: 0, data: 0 }; 64];
+            let timeout_ms = timeout.as_millis().min(i32::MAX as u128) as std::os::raw::c_int;
+            // SAFETY: `buf` provides 64 writable entries and we pass
+            // maxevents = 64, so the kernel never writes past it.
+            let n = unsafe {
+                sys::epoll_wait(self.epfd.as_raw_fd(), buf.as_mut_ptr(), 64, timeout_ms)
+            };
+            if n < 0 {
+                let err = io::Error::last_os_error();
+                if err.kind() == io::ErrorKind::Interrupted {
+                    return Ok(());
+                }
+                return Err(err);
+            }
+            for ev in buf.iter().take(n as usize) {
+                // Copy out of the (possibly packed) struct before use.
+                let bits = ev.events;
+                let token = ev.data;
+                // EPOLLRDHUP (peer half-closed, our writes may still
+                // matter) surfaces as readability so reads observe EOF;
+                // only EPOLLERR/EPOLLHUP (gone both ways) is a hangup.
+                let hangup = bits & (sys::EPOLLERR | sys::EPOLLHUP) != 0;
+                out.push(Event {
+                    token,
+                    readable: bits & (sys::EPOLLIN | sys::EPOLLRDHUP) != 0 || hangup,
+                    writable: bits & sys::EPOLLOUT != 0,
+                    hangup,
+                });
+            }
+            Ok(())
+        }
+    }
+
+    #[cfg(not(target_os = "linux"))]
+    mod sys {
+        use std::os::raw::{c_int, c_short, c_ulong};
+
+        #[repr(C)]
+        #[derive(Clone, Copy)]
+        pub struct PollFd {
+            pub fd: c_int,
+            pub events: c_short,
+            pub revents: c_short,
+        }
+
+        // Identical values on every poll(2) platform we can land on
+        // (BSDs, macOS, illumos).
+        pub const POLLIN: c_short = 0x001;
+        pub const POLLOUT: c_short = 0x004;
+        pub const POLLERR: c_short = 0x008;
+        pub const POLLHUP: c_short = 0x010;
+
+        extern "C" {
+            pub fn poll(fds: *mut PollFd, nfds: c_ulong, timeout_ms: c_int) -> c_int;
+        }
+    }
+
+    /// The portable fallback: a registration list replayed through one
+    /// `poll(2)` call per wait. O(fds) per wait, which is fine for the
+    /// connection counts the fallback platforms see in practice.
+    #[cfg(not(target_os = "linux"))]
+    pub struct Poller {
+        entries: Vec<(RawFd, u64, Interest)>,
+    }
+
+    #[cfg(not(target_os = "linux"))]
+    impl Poller {
+        /// An empty registration table.
+        pub fn new() -> io::Result<Poller> {
+            Ok(Poller { entries: Vec::new() })
+        }
+
+        /// Start watching `fd` under `token`.
+        pub fn register(&mut self, fd: RawFd, token: u64, interest: Interest) -> io::Result<()> {
+            if self.entries.iter().any(|(f, _, _)| *f == fd) {
+                return Err(io::Error::new(io::ErrorKind::AlreadyExists, "fd registered"));
+            }
+            self.entries.push((fd, token, interest));
+            Ok(())
+        }
+
+        /// Update the interest of a watched `fd`.
+        pub fn modify(&mut self, fd: RawFd, token: u64, interest: Interest) -> io::Result<()> {
+            match self.entries.iter_mut().find(|(f, _, _)| *f == fd) {
+                Some(entry) => {
+                    entry.1 = token;
+                    entry.2 = interest;
+                    Ok(())
+                }
+                None => Err(io::Error::new(io::ErrorKind::NotFound, "fd not registered")),
+            }
+        }
+
+        /// Stop watching `fd`.
+        pub fn deregister(&mut self, fd: RawFd) -> io::Result<()> {
+            self.entries.retain(|(f, _, _)| *f != fd);
+            Ok(())
+        }
+
+        /// Wait up to `timeout` for readiness; appends into `out`
+        /// (cleared first). EINTR surfaces as zero events.
+        pub fn wait(&mut self, out: &mut Vec<Event>, timeout: Duration) -> io::Result<()> {
+            out.clear();
+            let mut fds: Vec<sys::PollFd> = self
+                .entries
+                .iter()
+                .map(|(fd, _, interest)| sys::PollFd {
+                    fd: *fd,
+                    events: if interest.readable { sys::POLLIN } else { 0 }
+                        | if interest.writable { sys::POLLOUT } else { 0 },
+                    revents: 0,
+                })
+                .collect();
+            let timeout_ms = timeout.as_millis().min(i32::MAX as u128) as std::os::raw::c_int;
+            // SAFETY: `fds` provides exactly `fds.len()` PollFd entries,
+            // matching the nfds argument; the kernel only writes their
+            // `revents` fields.
+            let n = unsafe {
+                sys::poll(fds.as_mut_ptr(), fds.len() as std::os::raw::c_ulong, timeout_ms)
+            };
+            if n < 0 {
+                let err = io::Error::last_os_error();
+                if err.kind() == io::ErrorKind::Interrupted {
+                    return Ok(());
+                }
+                return Err(err);
+            }
+            for (slot, (_, token, _)) in fds.iter().zip(&self.entries) {
+                let bits = slot.revents;
+                if bits == 0 {
+                    continue;
+                }
+                let hangup = bits & (sys::POLLERR | sys::POLLHUP) != 0;
+                out.push(Event {
+                    token: *token,
+                    readable: bits & sys::POLLIN != 0 || hangup,
+                    writable: bits & sys::POLLOUT != 0,
+                    hangup,
+                });
+            }
+            Ok(())
+        }
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+        use std::io::Write;
+        use std::os::unix::io::AsRawFd;
+        use std::os::unix::net::UnixStream;
+
+        #[test]
+        fn poller_sees_readability_and_honors_interest() {
+            let (a, mut b) = UnixStream::pair().unwrap();
+            a.set_nonblocking(true).unwrap();
+            let mut poller = Poller::new().unwrap();
+            poller.register(a.as_raw_fd(), 7, Interest::readable()).unwrap();
+
+            // Nothing to read yet: the wait times out empty.
+            let mut events = Vec::new();
+            poller.wait(&mut events, Duration::from_millis(10)).unwrap();
+            assert!(events.iter().all(|e| e.token != 7 || !e.readable));
+
+            b.write_all(b"ping").unwrap();
+            poller.wait(&mut events, Duration::from_millis(1000)).unwrap();
+            let ev = events.iter().find(|e| e.token == 7).expect("readable event");
+            assert!(ev.readable && !ev.writable);
+
+            // Write interest on a socket with buffer space fires.
+            poller
+                .modify(a.as_raw_fd(), 7, Interest { readable: true, writable: true })
+                .unwrap();
+            poller.wait(&mut events, Duration::from_millis(1000)).unwrap();
+            assert!(events.iter().any(|e| e.token == 7 && e.writable));
+
+            poller.deregister(a.as_raw_fd()).unwrap();
+            poller.wait(&mut events, Duration::from_millis(10)).unwrap();
+            assert!(events.iter().all(|e| e.token != 7));
+        }
+
+        #[test]
+        fn poller_reports_peer_hangup() {
+            let (a, b) = UnixStream::pair().unwrap();
+            a.set_nonblocking(true).unwrap();
+            let mut poller = Poller::new().unwrap();
+            poller.register(a.as_raw_fd(), 3, Interest::readable()).unwrap();
+            drop(b);
+            let mut events = Vec::new();
+            poller.wait(&mut events, Duration::from_millis(1000)).unwrap();
+            let ev = events.iter().find(|e| e.token == 3).expect("hangup event");
+            assert!(ev.readable, "hangup must surface as readable so reads see EOF");
+        }
+    }
+}

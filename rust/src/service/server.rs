@@ -1,28 +1,38 @@
-//! The serving daemon: accept loop, per-connection reader threads, and
-//! request dispatch onto the shared persistent [`crate::exec::Pool`].
+//! The serving daemon: connection handling and request dispatch onto
+//! the shared persistent [`crate::exec::Pool`], in two selectable
+//! cores (see [`ServeCore`]):
 //!
-//! ## Threading model
+//! * **Event loop** (the default): one reactor thread multiplexes
+//!   every connection over `epoll`/`poll` readiness
+//!   ([`super::reactor`]), with a small runner pool bridging compute
+//!   jobs to the shared pool. Scales to hundreds of connections,
+//!   speaks protocol v2 (`hello`/`progress`/`keepalive`/`cancel`), and
+//!   bounds per-connection memory through write-queue backpressure.
+//! * **Threads** (the original core, kept for byte-identity testing
+//!   and the `bench_serve` comparison): one reader thread per
+//!   connection. `eval` answers on the connection thread (the work is
+//!   tiny), while `sweep`/`shard`/`accel` route through the
+//!   process-wide [`crate::exec::Pool::global`] — concurrent sweeps
+//!   queue on the pool's broadcast slot first-come first-served, so
+//!   the daemon never oversubscribes the machine.
 //!
-//! One nonblocking accept loop (the thread that called
-//! [`Server::serve`]) spawns one reader thread per connection. Reader
-//! threads parse frames and dispatch them; `eval` answers on the
-//! connection thread (the work is tiny), while `sweep`/`shard`/`accel`
-//! route
-//! through the process-wide [`crate::exec::Pool::global`] — concurrent
-//! sweeps queue on the pool's broadcast slot first-come first-served,
-//! so the daemon never oversubscribes the machine no matter how many
-//! clients are connected.
+//! Both cores funnel every frame through the same parse
+//! ([`parse_or_reply`]) and dispatch ([`dispatch`]) functions, so every
+//! v1 frame is answered byte-identically regardless of core — the
+//! property `tests/async_core.rs` pins over real sockets.
 //!
 //! ## Shutdown
 //!
 //! A `shutdown` frame answers, then flips the shared drain flag. The
-//! accept loop stops accepting; reader threads notice the flag at their
-//! next frame boundary (both reads and writes time out every
-//! [`READ_TIMEOUT`], so even a thread mid-write to a client that
-//! stopped reading re-checks the flag and abandons the stalled
-//! connection) and close; [`Server::serve`] joins them all and
-//! returns. In-flight requests always finish computing — drain is
-//! graceful and bounded by construction.
+//! accept path stops accepting; in-flight requests always finish
+//! computing; pipelined-but-unprocessed frames are dropped. In the
+//! threaded core, reader threads notice the flag at their next frame
+//! boundary (both reads and writes time out every [`READ_TIMEOUT`], so
+//! even a thread mid-write to a client that stopped reading re-checks
+//! the flag and abandons the stalled connection). In the event-loop
+//! core, the reactor additionally force-drops any connection whose
+//! write queue stops making progress, so stuck clients delay drain by
+//! a fixed grace period at most.
 
 use std::io::{ErrorKind, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -33,16 +43,18 @@ use std::time::{Duration, Instant};
 
 use crate::adc::{AdcModel, PreparedModel};
 use crate::config::{Value, parse_json};
-use crate::dse::{ShardArtifact, ShardPlan, SweepSummary, model_fingerprint};
+use crate::dse::{FoldCtl, ShardArtifact, ShardPlan, SweepSummary, model_fingerprint};
 use crate::error::{Error, Result};
 use crate::exec::default_workers;
 
 use super::cache::PreparedCache;
+use super::conn::{FrameBuf, FrameEvent};
 use super::metrics::ServiceMetrics;
 use super::protocol::{
-    AccelRequest, CODE_BAD_REQUEST, CODE_INTERNAL, CODE_MALFORMED_JSON, CODE_OVER_BUDGET,
-    CODE_OVERSIZED_FRAME, EvalRequest, MAX_FRAME_BYTES, Reject, Request, ShardRequest,
-    SweepRequest, error_frame, fnum, frame_id, metrics_to_value, ok_frame, parse_request,
+    AccelRequest, CODE_BAD_REQUEST, CODE_CANCELLED, CODE_INTERNAL, CODE_MALFORMED_JSON,
+    CODE_OVER_BUDGET, CODE_OVERSIZED_FRAME, CODE_UNKNOWN_ID, EvalRequest, MAX_FRAME_BYTES,
+    Reject, Request, ShardRequest, SweepRequest, error_frame, fnum, frame_id, hello_result,
+    metrics_to_value, ok_frame, parse_request,
 };
 
 /// Read timeout of connection sockets — the upper bound on how stale
@@ -52,6 +64,36 @@ const READ_TIMEOUT: Duration = Duration::from_millis(100);
 /// Poll interval of the nonblocking accept loop (bounds connect
 /// latency and drain-flag staleness for the acceptor).
 const ACCEPT_POLL: Duration = Duration::from_millis(25);
+
+/// Which serving core [`Server::serve`] runs. Both answer every v1
+/// frame byte-identically (they share parse and dispatch); only the
+/// event loop speaks protocol v2.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ServeCore {
+    /// Readiness-driven event loop ([`super::reactor`]): the default.
+    /// Scales to hundreds of connections, supports v2
+    /// progress/keepalive/cancel frames and write-queue backpressure.
+    /// (Off unix targets this falls back to [`ServeCore::Threads`].)
+    #[default]
+    EventLoop,
+    /// One reader thread per connection — the original core, kept for
+    /// cross-core byte-identity tests and `bench_serve` comparisons.
+    Threads,
+}
+
+impl std::str::FromStr for ServeCore {
+    type Err = Error;
+
+    fn from_str(s: &str) -> Result<ServeCore> {
+        match s {
+            "event-loop" => Ok(ServeCore::EventLoop),
+            "threads" => Ok(ServeCore::Threads),
+            other => Err(Error::Parse(format!(
+                "unknown serve core `{other}` (expected `event-loop` or `threads`)"
+            ))),
+        }
+    }
+}
 
 /// Configuration for [`Server::bind`].
 #[derive(Clone, Debug)]
@@ -72,6 +114,14 @@ pub struct ServeOptions {
     /// [`CODE_OVER_BUDGET`] error frame before any evaluation happens.
     /// `None` accepts any size (the trusted-operator default).
     pub max_sweep_points: Option<usize>,
+    /// Which serving core to run.
+    pub core: ServeCore,
+    /// Emit a v2 `progress` frame roughly every this many completed
+    /// grid points of an in-flight `sweep`/`shard` (`cimdse serve
+    /// --progress-every`). `None` disables progress frames; `keepalive`
+    /// frames flow to v2 connections either way. Only the event-loop
+    /// core emits interim frames.
+    pub progress_every: Option<usize>,
 }
 
 impl Default for ServeOptions {
@@ -82,18 +132,21 @@ impl Default for ServeOptions {
             cache_capacity: 32,
             workers: default_workers(),
             max_sweep_points: None,
+            core: ServeCore::default(),
+            progress_every: None,
         }
     }
 }
 
-struct ServerShared {
-    default_model: AdcModel,
-    default_fingerprint: String,
-    workers: usize,
-    max_sweep_points: Option<usize>,
-    cache: std::sync::Mutex<PreparedCache>,
-    metrics: ServiceMetrics,
-    shutdown: AtomicBool,
+pub(super) struct ServerShared {
+    pub(super) default_model: AdcModel,
+    pub(super) default_fingerprint: String,
+    pub(super) workers: usize,
+    pub(super) max_sweep_points: Option<usize>,
+    pub(super) progress_every: Option<usize>,
+    pub(super) cache: std::sync::Mutex<PreparedCache>,
+    pub(super) metrics: ServiceMetrics,
+    pub(super) shutdown: AtomicBool,
 }
 
 /// A bound (but not yet serving) daemon. [`Server::serve`] consumes it
@@ -101,6 +154,7 @@ struct ServerShared {
 pub struct Server {
     listener: TcpListener,
     local_addr: SocketAddr,
+    core: ServeCore,
     shared: Arc<ServerShared>,
 }
 
@@ -141,11 +195,12 @@ impl Server {
             default_model: options.model,
             workers: options.workers.max(1),
             max_sweep_points: options.max_sweep_points,
+            progress_every: options.progress_every,
             cache: std::sync::Mutex::new(PreparedCache::new(options.cache_capacity)),
             metrics: ServiceMetrics::new(),
             shutdown: AtomicBool::new(false),
         });
-        Ok(Server { listener, local_addr, shared })
+        Ok(Server { listener, local_addr, core: options.core, shared })
     }
 
     /// The address actually bound (resolves `:0` ephemeral ports).
@@ -158,46 +213,56 @@ impl Server {
         ServerHandle { shared: Arc::clone(&self.shared) }
     }
 
-    /// Accept connections until a shutdown is requested, then drain:
-    /// join every connection thread (letting in-flight requests finish)
-    /// and return.
+    /// Accept connections until a shutdown is requested, then drain
+    /// (letting in-flight requests finish) and return.
     pub fn serve(self) -> Result<()> {
-        let mut handles: Vec<JoinHandle<()>> = Vec::new();
-        loop {
-            if self.shared.shutdown.load(Ordering::SeqCst) {
-                break;
-            }
-            match self.listener.accept() {
-                Ok((stream, _peer)) => {
-                    self.shared.metrics.connection_opened();
-                    let shared = Arc::clone(&self.shared);
-                    handles.push(std::thread::spawn(move || handle_connection(stream, &shared)));
-                    // Reap finished threads so a long-lived daemon's
-                    // handle list stays bounded by live connections.
-                    handles.retain(|h| !h.is_finished());
-                }
-                Err(e) if e.kind() == ErrorKind::WouldBlock => {
-                    std::thread::sleep(ACCEPT_POLL);
-                }
-                Err(e) if e.kind() == ErrorKind::Interrupted => {}
-                Err(e) => {
-                    // Transient accept failures (EMFILE/ENFILE under fd
-                    // pressure, ECONNABORTED races) must not kill a
-                    // long-lived daemon that still has healthy
-                    // connections: note it, back off, keep serving.
-                    // The sleep bounds the retry rate while the
-                    // condition (e.g. fd exhaustion) clears.
-                    eprintln!("cimdse serve: accept failed (retrying): {e}");
-                    std::thread::sleep(ACCEPT_POLL);
-                }
-            }
+        match self.core {
+            #[cfg(unix)]
+            ServeCore::EventLoop => super::reactor::serve_event_loop(self.listener, self.shared),
+            #[cfg(not(unix))]
+            ServeCore::EventLoop => serve_threads(self.listener, self.shared),
+            ServeCore::Threads => serve_threads(self.listener, self.shared),
         }
-        drop(self.listener);
-        for h in handles {
-            let _ = h.join();
-        }
-        Ok(())
     }
+}
+
+/// The thread-per-connection core: accept, spawn, join on drain.
+fn serve_threads(listener: TcpListener, shared: Arc<ServerShared>) -> Result<()> {
+    let mut handles: Vec<JoinHandle<()>> = Vec::new();
+    loop {
+        if shared.shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                shared.metrics.connection_opened();
+                let shared = Arc::clone(&shared);
+                handles.push(std::thread::spawn(move || handle_connection(stream, &shared)));
+                // Reap finished threads so a long-lived daemon's
+                // handle list stays bounded by live connections.
+                handles.retain(|h| !h.is_finished());
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                std::thread::sleep(ACCEPT_POLL);
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => {
+                // Transient accept failures (EMFILE/ENFILE under fd
+                // pressure, ECONNABORTED races) must not kill a
+                // long-lived daemon that still has healthy
+                // connections: note it, back off, keep serving.
+                // The sleep bounds the retry rate while the
+                // condition (e.g. fd exhaustion) clears.
+                eprintln!("cimdse serve: accept failed (retrying): {e}");
+                std::thread::sleep(ACCEPT_POLL);
+            }
+        }
+    }
+    drop(listener);
+    for h in handles {
+        let _ = h.join();
+    }
+    Ok(())
 }
 
 /// What the bounded line reader hands back per call.
@@ -212,60 +277,32 @@ enum FrameRead {
 }
 
 /// Reads `\n`-delimited frames with a hard size cap, surviving read
-/// timeouts (used to poll the drain flag) and discarding the tail of
-/// oversized lines so the connection can resynchronize.
+/// timeouts (used to poll the drain flag). The framing itself —
+/// newline split, `\r` strip, oversized discard-and-resync — lives in
+/// [`FrameBuf`], shared byte-for-byte with the event-loop core so both
+/// cores agree on what a frame is.
 struct LineReader {
     stream: TcpStream,
-    buf: Vec<u8>,
-    /// Bytes of `buf` already scanned for a newline — only newly read
-    /// bytes are searched, keeping per-frame cost linear in frame size
-    /// instead of quadratic in the number of reads.
-    scanned: usize,
-    /// Discarding until the next newline after an oversized frame.
-    discarding: bool,
+    frames: FrameBuf,
 }
 
 impl LineReader {
     fn new(stream: TcpStream) -> LineReader {
-        LineReader { stream, buf: Vec::new(), scanned: 0, discarding: false }
+        LineReader { stream, frames: FrameBuf::new() }
     }
 
     fn next_frame(&mut self, shutdown: &AtomicBool) -> FrameRead {
         let mut chunk = [0u8; 8192];
         loop {
-            // Serve / discard whatever is already buffered first.
-            if let Some(rel) = self.buf[self.scanned..].iter().position(|&b| b == b'\n') {
-                let pos = self.scanned + rel;
-                let mut line: Vec<u8> = self.buf.drain(..=pos).collect();
-                self.scanned = 0;
-                line.pop(); // the newline
-                if line.last() == Some(&b'\r') {
-                    line.pop();
-                }
-                if self.discarding {
-                    self.discarding = false;
-                    continue; // the tail of an oversized line
-                }
-                if line.len() > MAX_FRAME_BYTES {
-                    // A whole oversized line arrived in one gulp: the
-                    // newline is already consumed, nothing to discard.
-                    return FrameRead::Oversized;
-                }
-                return FrameRead::Frame(line);
-            }
-            self.scanned = self.buf.len();
-            if self.discarding {
-                self.buf.clear();
-                self.scanned = 0;
-            } else if self.buf.len() > MAX_FRAME_BYTES {
-                self.discarding = true;
-                self.buf.clear();
-                self.scanned = 0;
-                return FrameRead::Oversized;
+            // Serve whatever is already buffered first.
+            match self.frames.next_event() {
+                Some(FrameEvent::Frame(line)) => return FrameRead::Frame(line),
+                Some(FrameEvent::Oversized) => return FrameRead::Oversized,
+                None => {}
             }
             match self.stream.read(&mut chunk) {
                 Ok(0) => return FrameRead::Closed,
-                Ok(n) => self.buf.extend_from_slice(&chunk[..n]),
+                Ok(n) => self.frames.push(&chunk[..n]),
                 Err(e)
                     if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut =>
                 {
@@ -297,12 +334,8 @@ fn handle_connection(stream: TcpStream, shared: &ServerShared) {
         let line = match reader.next_frame(&shared.shutdown) {
             FrameRead::Frame(line) => line,
             FrameRead::Oversized => {
-                let reject = Reject::new(
-                    CODE_OVERSIZED_FRAME,
-                    format!("request frame exceeds {MAX_FRAME_BYTES} bytes"),
-                );
                 shared.metrics.record_error_frame();
-                let frame = error_frame(None, None, &reject);
+                let frame = error_frame(None, None, &oversized_reject());
                 if write_line(&mut writer, &frame, &shared.shutdown).is_err() {
                     return;
                 }
@@ -360,41 +393,83 @@ fn write_line(
     writer.flush()
 }
 
-/// Parse + dispatch one frame; always returns a response line (success
-/// or typed error — a malformed frame never costs the connection).
-fn process_frame(line: &[u8], shared: &ServerShared) -> String {
+/// The [`super::protocol::CODE_OVERSIZED_FRAME`] rejection both cores
+/// answer an over-cap line with.
+pub(super) fn oversized_reject() -> Reject {
+    Reject::new(
+        CODE_OVERSIZED_FRAME,
+        format!("request frame exceeds {MAX_FRAME_BYTES} bytes"),
+    )
+}
+
+/// The [`CODE_CANCELLED`] rejection a cancelled `sweep`/`shard` is
+/// answered with (at its FIFO turn, so ordering is preserved).
+pub(super) fn cancelled_reject() -> Reject {
+    Reject::new(CODE_CANCELLED, "request was cancelled before completing")
+}
+
+/// The [`CODE_UNKNOWN_ID`] rejection for a `cancel` naming no in-flight
+/// or queued request. `key` is the target id in its JSON spelling.
+pub(super) fn unknown_id_reject(key: &str) -> Reject {
+    Reject::new(
+        CODE_UNKNOWN_ID,
+        format!("no in-flight or queued request with id {key} on this connection"),
+    )
+}
+
+/// Parse one raw frame into `(id, request)`, or the complete error-frame
+/// line answering it (metrics already recorded). Both cores funnel
+/// every frame through here, so parse-level negative paths answer
+/// byte-identically no matter which core serves them.
+pub(super) fn parse_or_reply(
+    line: &[u8],
+    shared: &ServerShared,
+) -> std::result::Result<(Option<Value>, Request), String> {
     let text = match std::str::from_utf8(line) {
         Ok(t) => t,
         Err(_) => {
             shared.metrics.record_error_frame();
-            return error_frame(
+            return Err(error_frame(
                 None,
                 None,
                 &Reject::new(CODE_MALFORMED_JSON, "frame is not valid UTF-8"),
-            );
+            ));
         }
     };
     let doc = match parse_json(text) {
         Ok(v) => v,
         Err(e) => {
             shared.metrics.record_error_frame();
-            return error_frame(None, None, &Reject::new(CODE_MALFORMED_JSON, e.to_string()));
+            return Err(error_frame(
+                None,
+                None,
+                &Reject::new(CODE_MALFORMED_JSON, e.to_string()),
+            ));
         }
     };
     let id = frame_id(&doc);
     let (op, request) = parse_request(&doc);
-    let request = match request {
-        Ok(r) => r,
+    match request {
+        Ok(request) => Ok((id, request)),
         Err(reject) => {
             shared.metrics.record_error_frame();
-            return error_frame(op.as_deref(), id.as_ref(), &reject);
+            Err(error_frame(op.as_deref(), id.as_ref(), &reject))
         }
+    }
+}
+
+/// Parse + dispatch one frame; always returns a response line (success
+/// or typed error — a malformed frame never costs the connection).
+fn process_frame(line: &[u8], shared: &ServerShared) -> String {
+    let (id, request) = match parse_or_reply(line, shared) {
+        Ok(parsed) => parsed,
+        Err(reply) => return reply,
     };
     let op = request.op();
     // lint:allow(determinism) — request-latency observability only; the
     // reading feeds the metrics op, never a fingerprinted payload.
     let start = Instant::now();
-    match dispatch(&request, shared) {
+    match dispatch(&request, shared, FoldCtl::default()) {
         Ok(result) => {
             shared.metrics.record_request(op, start.elapsed().as_secs_f64());
             ok_frame(op, id.as_ref(), result)
@@ -450,12 +525,30 @@ fn check_budget(
     }
 }
 
-fn dispatch(request: &Request, shared: &ServerShared) -> std::result::Result<Value, Reject> {
+/// Answer one parsed request. `ctl` carries the cancellation token and
+/// progress hook of the serving core (the threaded core passes
+/// [`FoldCtl::default`]: uncancellable, no progress — which the fold
+/// layer guarantees is byte-identical to the uncontrolled path).
+pub(super) fn dispatch(
+    request: &Request,
+    shared: &ServerShared,
+    ctl: FoldCtl<'_>,
+) -> std::result::Result<Value, Reject> {
     match request {
+        Request::Hello(version) => Ok(hello_result(*version)),
         Request::Eval(req) => dispatch_eval(req, shared),
-        Request::Sweep(req) => dispatch_sweep(req, shared),
-        Request::Shard(req) => dispatch_shard(req, shared),
+        Request::Sweep(req) => dispatch_sweep(req, shared, ctl),
+        Request::Shard(req) => dispatch_shard(req, shared, ctl),
         Request::Accel(req) => dispatch_accel(req, shared),
+        Request::Cancel(target) => {
+            // Only the event-loop core can ever hit a live target; it
+            // answers `cancel` on the reactor without reaching dispatch.
+            // The threaded core parses a frame only after fully
+            // answering the previous one, so nothing is in flight here
+            // and every cancel misses.
+            let key = target.to_json_string().unwrap_or_default();
+            Err(unknown_id_reject(&key))
+        }
         Request::Metrics => {
             let cache = shared.cache.lock().unwrap().stats();
             Ok(shared.metrics.snapshot(&cache))
@@ -497,13 +590,29 @@ fn dispatch_eval(req: &EvalRequest, shared: &ServerShared) -> std::result::Resul
     Ok(Value::Table(map))
 }
 
-fn dispatch_sweep(req: &SweepRequest, shared: &ServerShared) -> std::result::Result<Value, Reject> {
+fn dispatch_sweep(
+    req: &SweepRequest,
+    shared: &ServerShared,
+    ctl: FoldCtl<'_>,
+) -> std::result::Result<Value, Reject> {
     check_budget(shared, req.spec.len(), "sweep")?;
     let (prepared, fingerprint, hit) = lookup_model(shared, req.model.as_ref());
     // The streamed rollup over the shared pool — the identical fold the
     // CLI's `sweep --summary-json` runs, so the summary payload (bit-hex
-    // floats) is byte-identical to the direct library call.
-    let summary = SweepSummary::compute(&req.spec, prepared.model(), shared.workers);
+    // floats) is byte-identical to the direct library call. `ctl` only
+    // adds observation points and an early exit; a fold that completes
+    // produces the same bytes with or without it. (checked_len rather
+    // than a panic: a length-overflowed grid must not take down a
+    // shared runner thread.)
+    let range = 0..req.spec.checked_len().ok_or_else(|| {
+        Reject::new(
+            CODE_BAD_REQUEST,
+            "sweep grid length overflows usize; split the spec into sub-range specs",
+        )
+    })?;
+    let summary =
+        SweepSummary::compute_range_ctl(&req.spec, prepared.model(), shared.workers, range, ctl)
+            .ok_or_else(cancelled_reject)?;
     let mut map = std::collections::BTreeMap::new();
     map.insert("points".to_string(), Value::Number(summary.count() as f64));
     map.insert("summary".to_string(), summary.to_value());
@@ -511,7 +620,11 @@ fn dispatch_sweep(req: &SweepRequest, shared: &ServerShared) -> std::result::Res
     Ok(Value::Table(map))
 }
 
-fn dispatch_shard(req: &ShardRequest, shared: &ServerShared) -> std::result::Result<Value, Reject> {
+fn dispatch_shard(
+    req: &ShardRequest,
+    shared: &ServerShared,
+    ctl: FoldCtl<'_>,
+) -> std::result::Result<Value, Reject> {
     // The plan was validated at parse time; re-deriving it here is cheap
     // (two divisions) and keeps dispatch self-contained.
     let plan = ShardPlan::new(&req.spec, req.selector.n_shards())
@@ -524,8 +637,9 @@ fn dispatch_shard(req: &ShardRequest, shared: &ServerShared) -> std::result::Res
     // that subcommand writes to disk, so a launcher can persist it
     // verbatim and `merge_shards` cannot tell the difference.
     let artifact =
-        ShardArtifact::compute(&req.spec, prepared.model(), req.selector, shared.workers)
-            .map_err(|e| Reject::new(CODE_INTERNAL, e.to_string()))?;
+        ShardArtifact::compute_ctl(&req.spec, prepared.model(), req.selector, shared.workers, ctl)
+            .map_err(|e| Reject::new(CODE_INTERNAL, e.to_string()))?
+            .ok_or_else(cancelled_reject)?;
     let mut map = std::collections::BTreeMap::new();
     map.insert(
         "points".to_string(),
@@ -588,6 +702,7 @@ mod tests {
             default_model: model,
             workers: 2,
             max_sweep_points,
+            progress_every: None,
             cache: std::sync::Mutex::new(PreparedCache::new(4)),
             metrics: ServiceMetrics::new(),
             shutdown: AtomicBool::new(false),
@@ -761,6 +876,50 @@ mod tests {
         let result = ok_result(&shared, r#"{"op": "shutdown"}"#);
         assert_eq!(result.get("draining").and_then(Value::as_bool), Some(true));
         assert!(shared.shutdown.load(Ordering::SeqCst));
+    }
+
+    #[test]
+    fn hello_negotiates_and_bad_versions_get_exact_codes() {
+        let shared = shared_for_test();
+        for v in [1u32, 2] {
+            let result = ok_result(&shared, &format!(r#"{{"op": "hello", "version": {v}}}"#));
+            assert_eq!(result.require_usize("version").unwrap(), v as usize);
+        }
+        assert_eq!(
+            err_code(&shared, r#"{"op": "hello", "version": 3}"#),
+            super::super::protocol::CODE_UNSUPPORTED_VERSION
+        );
+        assert_eq!(err_code(&shared, r#"{"op": "hello"}"#), CODE_BAD_REQUEST);
+        assert_eq!(
+            err_code(&shared, r#"{"op": "hello", "version": 1.5}"#),
+            CODE_BAD_REQUEST
+        );
+    }
+
+    #[test]
+    fn threaded_core_cancel_always_misses_with_unknown_id() {
+        // The threaded core answers each frame before parsing the next,
+        // so a `cancel` can never name a live request: every one is a
+        // typed unknown-id rejection (live-target hits are event-loop
+        // behavior, exercised by the v2 corpus).
+        let shared = shared_for_test();
+        assert_eq!(
+            err_code(&shared, r#"{"op": "cancel", "target": "job-9"}"#),
+            CODE_UNKNOWN_ID
+        );
+        let resp = parse_json(&process_frame(
+            br#"{"op": "cancel", "target": 7, "id": "c-1"}"#,
+            &shared,
+        ))
+        .unwrap();
+        assert_eq!(resp.require_str("id").unwrap(), "c-1");
+        assert_eq!(resp.require_str("error.code").unwrap(), CODE_UNKNOWN_ID);
+        // Malformed cancels are bad requests, not unknown ids.
+        assert_eq!(err_code(&shared, r#"{"op": "cancel"}"#), CODE_BAD_REQUEST);
+        assert_eq!(
+            err_code(&shared, r#"{"op": "cancel", "target": [1]}"#),
+            CODE_BAD_REQUEST
+        );
     }
 
     #[test]

@@ -1,0 +1,314 @@
+//! Soak and fault battery for the event-loop serving core.
+//!
+//! What `tests/protocol_corpus.rs` proves frame-by-frame, this file
+//! proves at scale: 256 concurrent connections with mixed behaviors
+//! (well-behaved clients, pipelined bursts past the backpressure gate,
+//! slow readers, mid-frame disconnects), bit-identical responses vs
+//! direct library calls throughout, bounded write-queue memory
+//! (`write_queue_peak_bytes` never exceeds the cap), and a graceful
+//! drain that no client — not even one that stops reading entirely —
+//! can wedge. Plus the cross-core acceptance check: a pipelined v1
+//! burst earns byte-identical response streams from the event-loop and
+//! thread-per-connection cores.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::mpsc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use cimdse::adc::{AdcModel, AdcQuery};
+use cimdse::config::{Value, parse_json};
+use cimdse::dse::{SweepSpec, SweepSummary};
+use cimdse::service::conn::WRITE_QUEUE_CAP;
+use cimdse::service::{Client, ServeCore, ServeOptions, Server, ServerHandle};
+
+fn start(
+    core: ServeCore,
+    workers: usize,
+    progress_every: Option<usize>,
+) -> (String, ServerHandle, thread::JoinHandle<()>) {
+    let server = Server::bind(ServeOptions {
+        addr: "127.0.0.1:0".to_string(),
+        model: AdcModel::default(),
+        cache_capacity: 8,
+        workers,
+        core,
+        progress_every,
+        ..ServeOptions::default()
+    })
+    .expect("bind");
+    let addr = server.local_addr().to_string();
+    let handle = server.handle();
+    let join = thread::spawn(move || server.serve().expect("serve"));
+    (addr, handle, join)
+}
+
+/// Join the serve thread under a watchdog: a wedged drain is a test
+/// failure, not a hung CI job.
+fn join_within(join: thread::JoinHandle<()>, limit: Duration, what: &str) -> Duration {
+    let started = Instant::now();
+    let (tx, rx) = mpsc::channel();
+    thread::spawn(move || {
+        join.join().expect("serve thread panicked");
+        let _ = tx.send(());
+    });
+    rx.recv_timeout(limit)
+        .unwrap_or_else(|_| panic!("{what}: drain wedged past {limit:?}"));
+    started.elapsed()
+}
+
+fn raw_pair(addr: &str) -> (TcpStream, BufReader<TcpStream>) {
+    let stream = TcpStream::connect(addr).expect("connect");
+    stream.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    let reader = BufReader::new(stream.try_clone().unwrap());
+    (stream, reader)
+}
+
+fn read_line(reader: &mut BufReader<TcpStream>) -> Value {
+    let mut line = String::new();
+    let n = reader.read_line(&mut line).expect("read");
+    assert!(n > 0, "server closed unexpectedly");
+    parse_json(line.trim_end()).expect("response parses")
+}
+
+fn eval_frame(id: usize) -> String {
+    format!(
+        "{{\"op\": \"eval\", \"id\": {id}, \"query\": {{\"enob\": {}, \
+         \"total_throughput\": 1e9}}}}",
+        3 + id % 10
+    )
+}
+
+fn small_spec() -> SweepSpec {
+    SweepSpec {
+        enobs: vec![4.0, 8.0, 12.0],
+        total_throughputs: vec![1e8, 1e10],
+        tech_nms: vec![32.0],
+        n_adcs: vec![1, 4],
+    }
+}
+
+#[test]
+fn soak_256_mixed_connections_then_clean_drain() {
+    const CONNS: usize = 256;
+    /// Frames per pipelined-burst connection — deliberately past the
+    /// `MAX_PIPELINE` backpressure gate (64), so the event loop must
+    /// throttle reading and re-pump the buffered tail as replies drain.
+    const BURST: usize = 96;
+    const SLOW: usize = 8;
+    const NORMAL_EVALS: usize = 3;
+    let model = AdcModel::default();
+    let (addr, _handle, join) = start(ServeCore::EventLoop, 2, None);
+    let spec = small_spec();
+    let direct_summary = SweepSummary::compute(&spec, &model, 2).to_json_string().unwrap();
+    thread::scope(|s| {
+        for c in 0..CONNS {
+            let addr = addr.as_str();
+            let spec = &spec;
+            let direct_summary = direct_summary.as_str();
+            let model = &model;
+            s.spawn(move || match c % 4 {
+                // Well-behaved client: evals + one sweep, every
+                // response bit-identical to the direct library call.
+                0 => {
+                    let mut client = Client::connect(addr).expect("connect");
+                    for i in 0..NORMAL_EVALS {
+                        let q = AdcQuery {
+                            enob: 2.0 + ((c + i) % 12) as f64,
+                            total_throughput: 1e6 * 10f64.powi((i % 4) as i32),
+                            tech_nm: 32.0,
+                            n_adcs: 1 + (c as u32 % 4),
+                        };
+                        let served = client.eval_metrics(&q, None).expect("eval");
+                        assert_eq!(served.to_bits(), model.eval(&q).to_bits(), "c={c} i={i}");
+                    }
+                    let (_, summary) = client.sweep(spec, None).expect("sweep");
+                    assert_eq!(summary.to_json_string().unwrap(), direct_summary, "c={c}");
+                }
+                // Pipelined burst past the backpressure gate: all
+                // frames in one write, responses must come back
+                // complete, in order, with ids echoed.
+                1 => {
+                    let (mut stream, mut reader) = raw_pair(addr);
+                    let mut burst = String::new();
+                    for i in 0..BURST {
+                        burst.push_str(&eval_frame(c * BURST + i));
+                        burst.push('\n');
+                    }
+                    stream.write_all(burst.as_bytes()).unwrap();
+                    stream.flush().unwrap();
+                    for i in 0..BURST {
+                        let resp = read_line(&mut reader);
+                        assert_eq!(
+                            resp.get("ok").and_then(Value::as_bool),
+                            Some(true),
+                            "c={c} i={i}: {resp:?}"
+                        );
+                        assert_eq!(
+                            resp.get("id").and_then(Value::as_f64),
+                            Some((c * BURST + i) as f64),
+                            "responses must arrive in request order"
+                        );
+                    }
+                }
+                // Slow reader: pipeline a few requests, then dribble
+                // the reads — the write queue absorbs the difference.
+                2 => {
+                    let (mut stream, mut reader) = raw_pair(addr);
+                    let mut burst = String::new();
+                    for i in 0..SLOW {
+                        burst.push_str(&eval_frame(c * SLOW + i));
+                        burst.push('\n');
+                    }
+                    stream.write_all(burst.as_bytes()).unwrap();
+                    stream.flush().unwrap();
+                    for _ in 0..SLOW {
+                        thread::sleep(Duration::from_millis(10));
+                        let resp = read_line(&mut reader);
+                        assert_eq!(resp.get("ok").and_then(Value::as_bool), Some(true));
+                    }
+                }
+                // Rude client: half a frame, then gone. The server
+                // must shrug (asserted collectively: the soak's other
+                // connections keep working and drain stays clean).
+                _ => {
+                    let mut stream = TcpStream::connect(addr).expect("connect");
+                    stream
+                        .write_all(br#"{"op": "eval", "query": {"en"#)
+                        .unwrap();
+                    stream.flush().unwrap();
+                }
+            });
+        }
+    });
+
+    let mut client = Client::connect(&addr).expect("metrics connect");
+    let snapshot = client.metrics().expect("metrics");
+    let expected =
+        (CONNS / 4) * (NORMAL_EVALS + 1) + (CONNS / 4) * BURST + (CONNS / 4) * SLOW;
+    assert!(
+        snapshot.require_f64("requests_total").unwrap() >= expected as f64,
+        "{snapshot:?}"
+    );
+    // Bounded memory: however rude the burst, the per-connection write
+    // queue never grew past its cap.
+    let peak = snapshot.require_f64("write_queue_peak_bytes").unwrap();
+    assert!(
+        peak <= WRITE_QUEUE_CAP as f64,
+        "write queue peak {peak} exceeds the {WRITE_QUEUE_CAP} cap"
+    );
+    client.shutdown().expect("shutdown");
+    join_within(join, Duration::from_secs(30), "soak");
+}
+
+#[test]
+fn pipelined_v1_bursts_are_byte_identical_across_cores() {
+    // The acceptance criterion for the core swap: a v1 client cannot
+    // tell the cores apart, byte for byte, even pipelined. (Ops with
+    // nondeterministic payloads — `metrics` — are exercised elsewhere;
+    // every frame here has a deterministic response.)
+    let spec_json = small_spec().to_value().to_json_string().unwrap();
+    let mut burst = String::new();
+    let mut expected = 0usize;
+    for i in 0..6 {
+        burst.push_str(&eval_frame(i));
+        burst.push('\n');
+        expected += 1;
+    }
+    burst.push_str("{\"op\": \"frobnicate\"}\n"); // unknown-op
+    burst.push_str("{ not json\n"); // malformed-json
+    burst.push_str("{\"op\": \"eval\", \"id\": \"x\"}\n"); // bad-request
+    expected += 3;
+    burst.push_str(&format!("{{\"op\": \"sweep\", \"id\": 99, \"spec\": {spec_json}}}\n"));
+    expected += 1;
+
+    let mut streams: Vec<Vec<String>> = Vec::new();
+    for core in [ServeCore::EventLoop, ServeCore::Threads] {
+        let (addr, _handle, join) = start(core, 2, None);
+        let (mut stream, mut reader) = raw_pair(&addr);
+        stream.write_all(burst.as_bytes()).unwrap();
+        stream.flush().unwrap();
+        let mut lines = Vec::with_capacity(expected);
+        for _ in 0..expected {
+            let mut line = String::new();
+            assert!(reader.read_line(&mut line).expect("read") > 0, "early close");
+            lines.push(line);
+        }
+        drop((stream, reader));
+        let mut client = Client::connect(&addr).expect("connect");
+        client.shutdown().expect("shutdown");
+        join_within(join, Duration::from_secs(30), "cross-core burst");
+        streams.push(lines);
+    }
+    for (i, (a, b)) in streams[0].iter().zip(&streams[1]).enumerate() {
+        assert_eq!(a, b, "response {i} differs between cores");
+    }
+}
+
+#[cfg(unix)]
+#[test]
+fn stuck_client_cannot_wedge_the_drain() {
+    // A v2 client starts a long sweep with 1-point progress cadence,
+    // reads one frame to prove the stream is flowing, then stops
+    // reading entirely. Its kernel buffers fill, the server's write
+    // queue stalls — and a shutdown must still complete: the reactor
+    // force-drops any connection whose writes make no progress for the
+    // stuck-writer grace period, cancelling its in-flight work.
+    let (addr, _handle, join) = start(ServeCore::EventLoop, 1, Some(1));
+    let stuck = {
+        let (mut stream, mut reader) = raw_pair(&addr);
+        stream.write_all(b"{\"op\": \"hello\", \"version\": 2}\n").unwrap();
+        let hello = read_line(&mut reader);
+        assert_eq!(hello.get("ok").and_then(Value::as_bool), Some(true), "{hello:?}");
+        let big = SweepSpec {
+            enobs: (0..100).map(|i| 2.0 + 0.1 * f64::from(i)).collect(),
+            total_throughputs: (1..=40).map(|i| 1e8 * f64::from(i)).collect(),
+            tech_nms: vec![16.0, 22.0, 32.0, 45.0, 65.0],
+            n_adcs: vec![1, 2, 4, 8],
+        };
+        let frame = format!(
+            "{{\"op\": \"sweep\", \"spec\": {}}}\n",
+            big.to_value().to_json_string().unwrap()
+        );
+        stream.write_all(frame.as_bytes()).unwrap();
+        stream.flush().unwrap();
+        let first = read_line(&mut reader);
+        assert!(first.get("frame").is_some(), "stream must be flowing: {first:?}");
+        (stream, reader) // kept open, never read again
+    };
+
+    let mut killer = Client::connect(&addr).expect("connect");
+    killer.shutdown().expect("shutdown ack");
+    let elapsed = join_within(join, Duration::from_secs(15), "stuck client");
+    assert!(
+        elapsed < Duration::from_secs(10),
+        "drain took {elapsed:?} with one stuck client"
+    );
+    drop(stuck);
+}
+
+#[test]
+fn threads_core_drains_despite_an_unread_response_backlog() {
+    // The classic wart: a client that requests and never reads. The
+    // threaded core's bounded-write loop re-checks the drain flag on
+    // every write timeout, so this cannot hold shutdown hostage.
+    let (addr, _handle, join) = start(ServeCore::Threads, 2, None);
+    let backlog = {
+        let (mut stream, reader) = raw_pair(&addr);
+        let mut burst = String::new();
+        for i in 0..32 {
+            burst.push_str(&eval_frame(i));
+            burst.push('\n');
+        }
+        stream.write_all(burst.as_bytes()).unwrap();
+        stream.flush().unwrap();
+        (stream, reader) // never read
+    };
+    thread::sleep(Duration::from_millis(100));
+    let mut killer = Client::connect(&addr).expect("connect");
+    killer.shutdown().expect("shutdown ack");
+    let elapsed = join_within(join, Duration::from_secs(15), "threads backlog");
+    assert!(elapsed < Duration::from_secs(10), "drain took {elapsed:?}");
+    drop(backlog);
+}

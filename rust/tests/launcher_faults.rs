@@ -46,7 +46,7 @@ fn start_real_worker(model: AdcModel) -> (String, ServerHandle, thread::JoinHand
         model,
         cache_capacity: 8,
         workers: 2,
-        max_sweep_points: None,
+        ..ServeOptions::default()
     })
     .expect("bind");
     let addr = server.local_addr().to_string();
@@ -67,23 +67,42 @@ fn refusing_addr() -> String {
     listener.local_addr().unwrap().to_string()
 }
 
-/// What a fake worker does with each accepted connection.
+/// What a fake worker does with the first *compute* frame on each
+/// accepted connection. (`hello` frames are always answered honestly —
+/// the launcher negotiates v2 on every fresh connection, and a fake
+/// that chokes on the handshake would test the wrong fault.)
 enum FakeBehavior {
-    /// Read one frame, then close abruptly — the socket-level signature
-    /// of a worker killed mid-shard.
+    /// Read the request, then close abruptly — the socket-level
+    /// signature of a worker killed mid-shard.
     EofAfterRequest,
-    /// Read one frame, never answer — a hung worker; only the
+    /// Read the request, never answer — a hung worker; only the
     /// launcher's read timeout gets the shard back.
     Hang,
     /// Answer the shard request with a *real* artifact whose payload
     /// has one flipped hex digit — valid JSON, valid frame, corrupt
     /// bits. The client-side artifact validation must catch it.
     CorruptArtifact,
+    /// A slow but *healthy* worker: heartbeat `keepalive` frames well
+    /// past the launcher's read deadline, then answer honestly. Each
+    /// heartbeat re-arms the deadline, so the launcher must NOT retire
+    /// this worker.
+    SlowHeartbeat { heartbeat: Duration, beats: usize },
+}
+
+/// Is this frame the launcher's v2 handshake?
+fn is_hello(line: &str) -> bool {
+    parse_json(line)
+        .ok()
+        .and_then(|doc| doc.get("op").and_then(Value::as_str).map(|op| op == "hello"))
+        .unwrap_or(false)
 }
 
 /// Spawn a protocol-speaking fake worker; returns its address. The
-/// accept loop runs until the test process exits.
+/// accept loop runs until the test process exits. Each connection is
+/// served frame-by-frame: `hello` gets the honest v2 handshake, the
+/// first compute frame gets the configured behavior.
 fn spawn_fake_worker(behavior: FakeBehavior, model: AdcModel) -> String {
+    use cimdse::service::protocol::{hello_result, keepalive_frame};
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap().to_string();
     thread::spawn(move || {
@@ -95,26 +114,88 @@ fn spawn_fake_worker(behavior: FakeBehavior, model: AdcModel) -> String {
                 Err(_) => continue,
             });
             let mut writer = stream;
-            let mut line = String::new();
-            if reader.read_line(&mut line).unwrap_or(0) == 0 {
-                continue;
-            }
-            match behavior {
-                FakeBehavior::EofAfterRequest => drop(writer),
-                FakeBehavior::Hang => {
-                    // Hold the socket open well past any test timeout.
-                    thread::sleep(Duration::from_secs(30));
+            loop {
+                let mut line = String::new();
+                if reader.read_line(&mut line).unwrap_or(0) == 0 {
+                    break;
                 }
-                FakeBehavior::CorruptArtifact => {
-                    let response = corrupt_response(line.trim_end(), &model);
-                    let _ = writer.write_all(response.as_bytes());
-                    let _ = writer.write_all(b"\n");
-                    let _ = writer.flush();
+                let frame = line.trim_end();
+                if frame.is_empty() {
+                    continue;
                 }
+                if is_hello(frame) {
+                    let response = ok_frame("hello", None, hello_result(2));
+                    if writer
+                        .write_all(response.as_bytes())
+                        .and_then(|()| writer.write_all(b"\n"))
+                        .and_then(|()| writer.flush())
+                        .is_err()
+                    {
+                        break;
+                    }
+                    continue;
+                }
+                match behavior {
+                    FakeBehavior::EofAfterRequest => {}
+                    FakeBehavior::Hang => {
+                        // Hold the socket open well past any test
+                        // timeout.
+                        thread::sleep(Duration::from_secs(30));
+                    }
+                    FakeBehavior::CorruptArtifact => {
+                        let response = corrupt_response(frame, &model);
+                        let _ = writer.write_all(response.as_bytes());
+                        let _ = writer.write_all(b"\n");
+                        let _ = writer.flush();
+                    }
+                    FakeBehavior::SlowHeartbeat { heartbeat, beats } => {
+                        for _ in 0..*beats {
+                            thread::sleep(*heartbeat);
+                            if writer
+                                .write_all(keepalive_frame().as_bytes())
+                                .and_then(|()| writer.write_all(b"\n"))
+                                .and_then(|()| writer.flush())
+                                .is_err()
+                            {
+                                break;
+                            }
+                        }
+                        let response = honest_response(frame, &model);
+                        let _ = writer.write_all(response.as_bytes());
+                        let _ = writer.write_all(b"\n");
+                        let _ = writer.flush();
+                        // Healthy workers serve many shards per
+                        // connection; keep this one open.
+                        continue;
+                    }
+                }
+                break;
             }
         }
     });
     addr
+}
+
+/// Build the honest `ok` shard response a real worker would send.
+fn honest_response(line: &str, default_model: &AdcModel) -> String {
+    let doc = parse_json(line).expect("launcher sends valid frames");
+    let (_, request) = parse_request(&doc);
+    let shard = match request.expect("launcher sends valid shard requests") {
+        Request::Shard(s) => s,
+        other => {
+            return error_frame(
+                None,
+                None,
+                &Reject::new("bad-request", format!("fake worker got {other:?}")),
+            );
+        }
+    };
+    let model = shard.model.unwrap_or(*default_model);
+    let artifact = ShardArtifact::compute(&shard.spec, &model, shard.selector, 1)
+        .expect("fake worker computes the artifact");
+    let mut result = std::collections::BTreeMap::new();
+    result.insert("artifact".to_string(), artifact.to_value());
+    ok_frame("shard", None, Value::Table(result))
 }
 
 /// Build an `ok` shard response whose artifact payload has one flipped
@@ -202,6 +283,146 @@ fn hung_worker_times_out_and_is_rescheduled() {
     let addr = spawn_fake_worker(FakeBehavior::Hang, AdcModel::default());
     // Short deadline: the hang must cost ~300 ms per strike, not 30 s.
     assert_fault_tolerated(addr, Duration::from_millis(300));
+}
+
+#[test]
+fn slow_but_heartbeating_worker_is_not_retired() {
+    // A worker that takes 3x the read deadline per shard but streams
+    // keepalive frames the whole time is *healthy*: every heartbeat
+    // re-arms the launcher's deadline, so the shard must complete on
+    // this worker with zero failures charged — the deadline is an
+    // inter-frame liveness bound, not a compute bound. The worker is
+    // the ONLY one in the fleet, so misdiagnosing it as hung would
+    // fail the whole launch.
+    let model = AdcModel::default();
+    let spec = small_spec();
+    let slow = spawn_fake_worker(
+        FakeBehavior::SlowHeartbeat { heartbeat: Duration::from_millis(60), beats: 10 },
+        model,
+    );
+    let mut options = LaunchOptions::new(vec![slow.clone()], 2);
+    options.read_timeout = Some(Duration::from_millis(200));
+    let report =
+        run_distributed_sweep(&spec, &model, &options).expect("heartbeats keep the worker alive");
+    assert_eq!(
+        report.merged.summary.to_json_string().unwrap(),
+        reference_json(&spec, &model),
+        "merge must be byte-identical to the single-process rollup"
+    );
+    let worker = report.workers.iter().find(|w| w.addr == slow).expect("worker reported");
+    assert_eq!(worker.failures, 0, "{worker:?}");
+    assert!(!worker.retired, "{worker:?}");
+    assert_eq!(worker.shards_served, 2, "{worker:?}");
+}
+
+#[cfg(unix)]
+#[test]
+fn abandoned_shard_is_cancelled_and_stops_burning_the_pool() {
+    // When the launcher gives up on a worker it drops the connection
+    // (reconnect-on-failure, retirement, or launcher death all look
+    // the same from the worker's socket). An event-loop worker must
+    // cancel that connection's in-flight shard so its pool stops
+    // burning cycles on work nobody will read — asserted through the
+    // worker's own `work.*` metrics counters.
+    use cimdse::service::{ServeCore, ServeOptions, Server};
+    let model = AdcModel::default();
+    let server = Server::bind(ServeOptions {
+        addr: "127.0.0.1:0".to_string(),
+        model,
+        cache_capacity: 8,
+        workers: 1,
+        core: ServeCore::EventLoop,
+        // 1-point chunks: cancellation lands between chunks, so the
+        // finest granularity makes the burn measurable and the stop
+        // immediate.
+        progress_every: Some(1),
+        ..ServeOptions::default()
+    })
+    .expect("bind");
+    let addr = server.local_addr().to_string();
+    let handle = server.handle();
+    let join = thread::spawn(move || server.serve().expect("serve"));
+
+    // A shard big enough to still be mid-compute when the launcher
+    // walks away (1 runner, 1-point chunks each also streaming a
+    // progress completion).
+    let big = SweepSpec {
+        enobs: (0..100).map(|i| 2.0 + 0.1 * f64::from(i)).collect(),
+        total_throughputs: (1..=40).map(|i| 1e8 * f64::from(i)).collect(),
+        tech_nms: vec![16.0, 22.0, 32.0, 45.0, 65.0],
+        n_adcs: vec![1, 2, 4, 8],
+    };
+    let total = 100 * 40 * 5 * 4;
+    {
+        // Raw socket (not `Client`, which would skip interim frames):
+        // hello, fire the shard request, read ONE frame to prove
+        // compute started streaming, then drop the connection without
+        // collecting the artifact — the launcher's walk-away signature.
+        let mut stream = std::net::TcpStream::connect(&addr).expect("connect");
+        stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut line = String::new();
+        stream.write_all(b"{\"op\": \"hello\", \"version\": 2}\n").unwrap();
+        assert!(reader.read_line(&mut line).unwrap() > 0, "hello answered");
+        let mut spec_frame = std::collections::BTreeMap::new();
+        spec_frame.insert("op".to_string(), Value::String("shard".to_string()));
+        spec_frame.insert("shard".to_string(), Value::String("0/1".to_string()));
+        spec_frame.insert("spec".to_string(), big.to_value());
+        let frame = Value::Table(spec_frame).to_json_string().unwrap();
+        stream.write_all(frame.as_bytes()).unwrap();
+        stream.write_all(b"\n").unwrap();
+        stream.flush().unwrap();
+        line.clear();
+        assert!(reader.read_line(&mut line).unwrap() > 0, "compute started streaming");
+        let first = parse_json(line.trim_end()).unwrap();
+        assert!(first.get("frame").is_some(), "first frame is interim: {first:?}");
+    }
+
+    // The worker notices the disconnect and cancels: `work.cancelled`
+    // ticks up, and the chunk counter freezes well short of the grid.
+    let mut probe = Client::connect(&addr).expect("probe connect");
+    let deadline = std::time::Instant::now() + Duration::from_secs(20);
+    let cancelled = loop {
+        let snapshot = probe.metrics().expect("metrics");
+        let cancelled = snapshot.require_f64("work.cancelled").unwrap_or(0.0);
+        if cancelled >= 1.0 {
+            break snapshot;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "worker never cancelled the abandoned shard: {snapshot:?}"
+        );
+        thread::sleep(Duration::from_millis(20));
+    };
+    assert!(
+        cancelled.require_f64("work.points").unwrap() < total as f64,
+        "the full grid was computed despite the cancel: {cancelled:?}"
+    );
+    // The chunk counter must freeze. A chunk already mid-fold when the
+    // cancel lands may still complete, so wait for two samples 300 ms
+    // apart to agree rather than pinning the very first reading.
+    let mut frozen = cancelled.require_f64("work.chunks").unwrap();
+    let freeze_deadline = std::time::Instant::now() + Duration::from_secs(5);
+    let settled = loop {
+        thread::sleep(Duration::from_millis(300));
+        let later = probe.metrics().expect("metrics");
+        let now = later.require_f64("work.chunks").unwrap();
+        if now == frozen {
+            break later;
+        }
+        assert!(
+            std::time::Instant::now() < freeze_deadline,
+            "chunk counter still advancing after the cancel (pool still burning?): {later:?}"
+        );
+        frozen = now;
+    };
+    assert!(
+        settled.require_f64("work.points").unwrap() < total as f64,
+        "the pool burned the whole grid despite the cancel: {settled:?}"
+    );
+
+    handle.shutdown();
+    join.join().expect("worker drains cleanly");
 }
 
 #[test]

@@ -5,6 +5,13 @@
 //! pins — or be accepted, for the budget-boundary cases. One
 //! connection carries the whole corpus, so the suite also proves that
 //! no amount of consecutive abuse costs a client its connection.
+//!
+//! The corpus runs against **both serving cores** and every response
+//! line must be byte-identical across them — the socket-level
+//! cross-core contract. The protocol-v2 behaviors a lockstep corpus
+//! cannot reach (interim progress frames, live-target cancel,
+//! cancel-on-disconnect, v1 purity) get their own tests below, all
+//! against the event-loop core that implements them.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
@@ -12,63 +19,100 @@ use std::time::Duration;
 
 use cimdse::adc::AdcModel;
 use cimdse::config::{Value, parse_json};
-use cimdse::service::protocol::{CODE_INTERNAL, Reject, error_frame};
-use cimdse::service::{Client, MAX_FRAME_BYTES, ServeOptions, Server};
+use cimdse::service::protocol::{
+    CODE_CANCELLED, CODE_INTERNAL, Reject, error_frame, is_interim_frame,
+};
+use cimdse::service::{Client, MAX_FRAME_BYTES, ServeCore, ServeOptions, Server};
 
-#[test]
-fn corpus_frames_earn_their_exact_codes_over_a_real_socket() {
-    let corpus_text = std::fs::read_to_string(concat!(
-        env!("CARGO_MANIFEST_DIR"),
-        "/tests/protocol_corpus.json"
-    ))
-    .expect("read protocol corpus");
-    let corpus = parse_json(&corpus_text).expect("corpus parses");
-    assert_eq!(corpus.require_usize("schema").unwrap(), 1);
-    let budget = corpus.require_usize("server.max_sweep_points").unwrap();
+/// A live server plus the plumbing tests need to talk to and stop it.
+struct Harness {
+    addr: String,
+    handle: cimdse::service::ServerHandle,
+    join: std::thread::JoinHandle<()>,
+}
 
+fn start(core: ServeCore, workers: usize, budget: Option<usize>, every: Option<usize>) -> Harness {
     let server = Server::bind(ServeOptions {
         addr: "127.0.0.1:0".to_string(),
         model: AdcModel::default(),
         cache_capacity: 4,
-        workers: 2,
-        max_sweep_points: Some(budget),
+        workers,
+        max_sweep_points: budget,
+        core,
+        progress_every: every,
     })
     .expect("bind");
     let addr = server.local_addr().to_string();
     let handle = server.handle();
     let join = std::thread::spawn(move || server.serve().expect("serve"));
+    Harness { addr, handle, join }
+}
 
-    let stream = TcpStream::connect(&addr).unwrap();
-    stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
-    let mut reader = BufReader::new(stream.try_clone().unwrap());
-    let mut writer = stream;
+impl Harness {
+    fn stop(self) {
+        let mut client = Client::connect(&self.addr).unwrap();
+        client.shutdown().unwrap();
+        drop(self.handle);
+        self.join.join().expect("server drains cleanly");
+    }
+}
+
+/// One lockstep line-oriented connection. Reads skip v2 interim frames
+/// (progress/keepalive prove liveness, they are never the response).
+struct Wire {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Wire {
+    fn connect(addr: &str) -> Wire {
+        let stream = TcpStream::connect(addr).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        Wire { reader: BufReader::new(stream.try_clone().unwrap()), writer: stream }
+    }
+
+    fn send(&mut self, frame: &str) {
+        self.writer.write_all(frame.as_bytes()).unwrap();
+        self.writer.write_all(b"\n").unwrap();
+        self.writer.flush().unwrap();
+    }
+
+    /// Next raw line (no trailing newline), interim or final.
+    fn read_raw(&mut self) -> Option<String> {
+        let mut line = String::new();
+        if self.reader.read_line(&mut line).unwrap() == 0 {
+            return None;
+        }
+        Some(line.trim_end_matches(['\n', '\r']).to_string())
+    }
+
+    /// Next *final* response line, skipping interim frames.
+    fn read_response(&mut self) -> String {
+        loop {
+            let line = self.read_raw().expect("the server must answer, never disconnect");
+            let doc = parse_json(&line).expect("response parses");
+            if !is_interim_frame(&doc) {
+                return line;
+            }
+        }
+    }
+}
+
+/// Run every socket case of the corpus against `core` in lockstep,
+/// asserting each pinned code; returns the raw response lines for
+/// cross-core comparison.
+fn run_corpus_on(corpus: &Value, core: ServeCore) -> Vec<String> {
+    let budget = corpus.require_usize("server.max_sweep_points").unwrap();
+    let harness = start(core, 2, Some(budget), None);
+    let mut wire = Wire::connect(&harness.addr);
 
     let cases = corpus.get("cases").and_then(Value::as_array).expect("corpus has cases");
-    assert!(cases.len() >= 20, "the corpus should stay substantial ({} cases)", cases.len());
+    let mut lines = Vec::new();
     let mut expected_error_frames = 0u64;
     for case in cases {
         let name = case.require_str("name").unwrap();
-        if let Some(via) = case.get("via").and_then(Value::as_str) {
-            // In-process coverage for codes a correct server cannot be
-            // provoked into sending over a socket (`internal`: every
-            // request is fully validated at parse time, so dispatch
-            // cannot fail on a valid one). Build the frame through the
-            // same public API the server uses and pin its wire shape.
-            assert_eq!(via, "error-frame", "{name}: unknown `via` kind `{via}`");
-            let expect = case.require_str("expect").unwrap();
-            let code = match expect {
-                "internal" => CODE_INTERNAL,
-                other => panic!("{name}: no error-frame builder for code `{other}`"),
-            };
-            let frame =
-                error_frame(Some("shard"), None, &Reject::new(code, "synthetic failure"));
-            assert!(!frame.contains('\n'), "{name}: frames are single lines");
-            let doc = parse_json(&frame)
-                .unwrap_or_else(|e| panic!("{name}: unparsable frame `{frame}`: {e}"));
-            assert_eq!(doc.get("ok").and_then(Value::as_bool), Some(false), "{name}");
-            assert_eq!(doc.require_str("error.code").unwrap(), expect, "{name}");
-            assert_eq!(doc.require_str("op").unwrap(), "shard", "{name}");
-            continue;
+        if case.get("via").is_some() {
+            continue; // exercised in-process, once, by the main test
         }
         let mut frame = case.require_str("frame").unwrap().to_string();
         if let Some(pad) = case.get("pad_to").and_then(Value::as_f64) {
@@ -80,13 +124,9 @@ fn corpus_frames_earn_their_exact_codes_over_a_real_socket() {
             );
         }
         assert!(!frame.contains('\n'), "{name}: corpus frames are single lines");
-        writer.write_all(frame.as_bytes()).unwrap();
-        writer.write_all(b"\n").unwrap();
-        writer.flush().unwrap();
-        let mut line = String::new();
-        let n = reader.read_line(&mut line).unwrap();
-        assert!(n > 0, "{name}: the server must answer, never disconnect");
-        let resp = parse_json(line.trim_end())
+        wire.send(&frame);
+        let line = wire.read_response();
+        let resp = parse_json(&line)
             .unwrap_or_else(|e| panic!("{name}: unparsable response `{line}`: {e}"));
         match case.require_str("expect").unwrap() {
             "ok" => {
@@ -110,24 +150,256 @@ fn corpus_frames_earn_their_exact_codes_over_a_real_socket() {
                 );
             }
         }
+        lines.push(line);
     }
 
     // The same connection still serves, and the server counted exactly
     // one error frame per rejected corpus case.
-    writer.write_all(b"{\"op\": \"metrics\"}\n").unwrap();
-    writer.flush().unwrap();
-    let mut line = String::new();
-    assert!(reader.read_line(&mut line).unwrap() > 0);
-    let resp = parse_json(line.trim_end()).unwrap();
+    wire.send("{\"op\": \"metrics\"}");
+    let line = wire.read_response();
+    let resp = parse_json(&line).unwrap();
     assert_eq!(resp.get("ok").and_then(Value::as_bool), Some(true), "{line}");
     assert_eq!(
         resp.require_f64("result.error_frames").unwrap(),
         expected_error_frames as f64,
         "{line}"
     );
+    drop(wire);
 
-    let mut client = Client::connect(&addr).unwrap();
-    client.shutdown().unwrap();
-    drop(handle);
-    join.join().expect("server drains cleanly");
+    harness.stop();
+    lines
+}
+
+fn load_corpus() -> Value {
+    let corpus_text = std::fs::read_to_string(concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/tests/protocol_corpus.json"
+    ))
+    .expect("read protocol corpus");
+    let corpus = parse_json(&corpus_text).expect("corpus parses");
+    assert_eq!(corpus.require_usize("schema").unwrap(), 2);
+    corpus
+}
+
+#[test]
+fn corpus_frames_earn_their_exact_codes_on_both_cores_byte_identically() {
+    let corpus = load_corpus();
+    let cases = corpus.get("cases").and_then(Value::as_array).expect("corpus has cases");
+    assert!(cases.len() >= 20, "the corpus should stay substantial ({} cases)", cases.len());
+
+    // In-process coverage for codes a correct lockstep server cannot be
+    // provoked into sending over this socket corpus. Build the frame
+    // through the same public API the server uses and pin its wire
+    // shape; the codes that *are* reachable live (`cancelled`) earn
+    // their socket coverage in the pipelined-cancel test below.
+    for case in cases {
+        let Some(via) = case.get("via").and_then(Value::as_str) else { continue };
+        let name = case.require_str("name").unwrap();
+        assert_eq!(via, "error-frame", "{name}: unknown `via` kind `{via}`");
+        let expect = case.require_str("expect").unwrap();
+        let code = match expect {
+            "internal" => CODE_INTERNAL,
+            "cancelled" => CODE_CANCELLED,
+            other => panic!("{name}: no error-frame builder for code `{other}`"),
+        };
+        let frame = error_frame(Some("shard"), None, &Reject::new(code, "synthetic failure"));
+        assert!(!frame.contains('\n'), "{name}: frames are single lines");
+        let doc = parse_json(&frame)
+            .unwrap_or_else(|e| panic!("{name}: unparsable frame `{frame}`: {e}"));
+        assert_eq!(doc.get("ok").and_then(Value::as_bool), Some(false), "{name}");
+        assert_eq!(doc.require_str("error.code").unwrap(), expect, "{name}");
+        assert_eq!(doc.require_str("op").unwrap(), "shard", "{name}");
+    }
+
+    let threaded = run_corpus_on(&corpus, ServeCore::Threads);
+    let event_loop = run_corpus_on(&corpus, ServeCore::EventLoop);
+    assert_eq!(threaded.len(), event_loop.len());
+    for (i, (t, e)) in threaded.iter().zip(&event_loop).enumerate() {
+        assert_eq!(t, e, "case #{i}: cores must answer byte-identically");
+    }
+}
+
+/// A v1 connection (no `hello`) must never receive a v2 frame, even on
+/// a server configured to emit progress at every point: each request
+/// gets exactly one line back, and none of them carry a `frame` key.
+#[cfg(unix)]
+#[test]
+fn v1_connection_sees_zero_v2_frames() {
+    let harness = start(ServeCore::EventLoop, 1, None, Some(1));
+    let mut wire = Wire::connect(&harness.addr);
+    let sweep = r#"{"op": "sweep", "id": "s1", "spec": {"enobs": [4, 6, 8], "total_throughputs": [1e8, 1e9], "tech_nms": [32], "n_adcs": [1, 2]}}"#;
+    wire.send(sweep);
+    wire.send(r#"{"op": "metrics", "id": "m1"}"#);
+    // Lockstep-read exactly two lines: if the server leaked a progress
+    // frame for the sweep, the first read would surface it instead of
+    // the sweep's response.
+    for expect_id in ["s1", "m1"] {
+        let line = wire.read_raw().expect("response");
+        let doc = parse_json(&line).unwrap();
+        assert!(
+            !is_interim_frame(&doc),
+            "v1 connection received an interim frame: {line}"
+        );
+        assert_eq!(doc.get("ok").and_then(Value::as_bool), Some(true), "{line}");
+        assert_eq!(doc.require_str("id").unwrap(), expect_id, "{line}");
+    }
+    drop(wire);
+    harness.stop();
+}
+
+/// After `hello v2` on a serial (workers=1) server with
+/// `--progress-every 1`, a 12-point sweep must stream monotonic
+/// progress frames before its final response.
+#[cfg(unix)]
+#[test]
+fn v2_connection_streams_progress_frames_under_tiny_cadence() {
+    let harness = start(ServeCore::EventLoop, 1, None, Some(1));
+    let mut wire = Wire::connect(&harness.addr);
+    wire.send(r#"{"op": "hello", "version": 2}"#);
+    let hello = parse_json(&wire.read_response()).unwrap();
+    assert_eq!(hello.require_usize("result.version").unwrap(), 2);
+
+    let sweep = r#"{"op": "sweep", "id": "s2", "spec": {"enobs": [4, 6, 8], "total_throughputs": [1e8, 1e9], "tech_nms": [32], "n_adcs": [1, 2]}}"#;
+    wire.send(sweep);
+    let mut progress_done = Vec::new();
+    let final_resp = loop {
+        let line = wire.read_raw().expect("response");
+        let doc = parse_json(&line).unwrap();
+        if !is_interim_frame(&doc) {
+            break doc;
+        }
+        match doc.require_str("frame").unwrap() {
+            "keepalive" => {}
+            "progress" => {
+                assert_eq!(doc.require_str("op").unwrap(), "sweep", "{line}");
+                assert_eq!(doc.require_str("id").unwrap(), "s2", "{line}");
+                assert_eq!(doc.require_usize("total").unwrap(), 12, "{line}");
+                progress_done.push(doc.require_usize("done").unwrap());
+            }
+            other => panic!("unknown interim frame kind `{other}`: {line}"),
+        }
+    };
+    assert_eq!(final_resp.get("ok").and_then(Value::as_bool), Some(true));
+    assert_eq!(final_resp.require_str("id").unwrap(), "s2");
+    assert_eq!(final_resp.require_usize("result.points").unwrap(), 12);
+    assert!(
+        progress_done.len() >= 2,
+        "a 12-point sweep at --progress-every 1 must stream progress, saw {progress_done:?}"
+    );
+    assert!(
+        progress_done.windows(2).all(|w| w[0] < w[1]),
+        "progress must be strictly monotonic: {progress_done:?}"
+    );
+    assert!(*progress_done.last().unwrap() <= 12, "{progress_done:?}");
+    drop(wire);
+    harness.stop();
+}
+
+/// A pipelined `cancel` naming a queued request must kill it: the
+/// cancel answers `cancelled: true` out of band, the in-flight request
+/// ahead of it completes normally, and the victim is answered with the
+/// `cancelled` error code at its FIFO turn.
+#[cfg(unix)]
+#[test]
+fn pipelined_cancel_kills_a_queued_request() {
+    let harness = start(ServeCore::EventLoop, 1, None, None);
+    let mut wire = Wire::connect(&harness.addr);
+    wire.send(r#"{"op": "hello", "version": 2}"#);
+    wire.read_response();
+
+    // One burst: sweep "a", sweep "b" (queued behind "a"), cancel "b".
+    // The reactor parses all three before "a" can complete, so the
+    // cancel deterministically finds "b" still queued.
+    let spec = r#"{"enobs": [4, 6, 8, 10], "total_throughputs": [1e8, 1e9], "tech_nms": [32], "n_adcs": [1, 2]}"#;
+    let burst = format!(
+        "{{\"op\": \"sweep\", \"id\": \"a\", \"spec\": {spec}}}\n{{\"op\": \"sweep\", \"id\": \"b\", \"spec\": {spec}}}\n{{\"op\": \"cancel\", \"id\": \"c\", \"target\": \"b\"}}\n"
+    );
+    wire.writer.write_all(burst.as_bytes()).unwrap();
+    wire.writer.flush().unwrap();
+
+    let mut by_id = std::collections::BTreeMap::new();
+    for _ in 0..3 {
+        let line = wire.read_response();
+        let doc = parse_json(&line).unwrap();
+        by_id.insert(doc.require_str("id").unwrap().to_string(), doc);
+    }
+    let cancel = &by_id["c"];
+    assert_eq!(cancel.get("ok").and_then(Value::as_bool), Some(true));
+    assert_eq!(cancel.get("result.cancelled").and_then(Value::as_bool), Some(true));
+    assert_eq!(cancel.require_str("result.target").unwrap(), "b");
+    let a = &by_id["a"];
+    assert_eq!(a.get("ok").and_then(Value::as_bool), Some(true), "the in-flight request ahead of the cancel must finish");
+    assert_eq!(a.require_usize("result.points").unwrap(), 16);
+    let b = &by_id["b"];
+    assert_eq!(b.get("ok").and_then(Value::as_bool), Some(false));
+    assert_eq!(b.require_str("error.code").unwrap(), "cancelled");
+
+    // And cancelling it again misses: answered ids are forgotten.
+    wire.send(r#"{"op": "cancel", "target": "b"}"#);
+    let again = parse_json(&wire.read_response()).unwrap();
+    assert_eq!(again.require_str("error.code").unwrap(), "unknown-id");
+
+    // The server counted the cancellation.
+    wire.send(r#"{"op": "metrics"}"#);
+    let metrics = parse_json(&wire.read_response()).unwrap();
+    assert!(metrics.require_f64("result.work.cancelled").unwrap() >= 1.0);
+    drop(wire);
+    harness.stop();
+}
+
+/// Dropping a connection mid-sweep must stop the abandoned work at a
+/// chunk boundary: the work counters (observed over a second
+/// connection) stall far short of the sweep's full grid and the
+/// cancellation is recorded.
+#[cfg(unix)]
+#[test]
+fn disconnect_cancels_in_flight_work() {
+    let harness = start(ServeCore::EventLoop, 1, None, Some(1));
+    {
+        let mut wire = Wire::connect(&harness.addr);
+        wire.send(r#"{"op": "hello", "version": 2}"#);
+        wire.read_response();
+        // 100x40x5x4 = 80_000 points, chunked 1 point at a time: each
+        // chunk is a cancellation checkpoint AND a progress completion,
+        // so the fold cannot outrun the reactor noticing the dead peer.
+        let axes = |n: usize, scale: f64| -> String {
+            (1..=n).map(|i| format!("{}", i as f64 * scale)).collect::<Vec<_>>().join(", ")
+        };
+        let spec = format!(
+            "{{\"enobs\": [{}], \"total_throughputs\": [{}], \"tech_nms\": [{}], \"n_adcs\": [1, 2, 4, 8]}}",
+            axes(100, 0.1),
+            axes(40, 1e8),
+            axes(5, 16.0)
+        );
+        wire.send(&format!("{{\"op\": \"sweep\", \"id\": \"doomed\", \"spec\": {spec}}}"));
+        // Wait for the first progress frame so the sweep is provably in
+        // flight, then vanish without reading further.
+        let line = wire.read_raw().expect("first frame");
+        let doc = parse_json(&line).unwrap();
+        assert!(is_interim_frame(&doc), "expected an interim frame first, got {line}");
+    } // wire drops here: both directions close
+
+    // Over a fresh connection, wait for the cancellation to land, then
+    // assert the work stalled well short of the grid.
+    let mut probe = Wire::connect(&harness.addr);
+    let deadline = std::time::Instant::now() + Duration::from_secs(20);
+    let cancelled = loop {
+        probe.send(r#"{"op": "metrics"}"#);
+        let metrics = parse_json(&probe.read_response()).unwrap();
+        if metrics.require_f64("result.work.cancelled").unwrap() >= 1.0 {
+            break metrics;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "abandoned sweep was never cancelled: {metrics:?}"
+        );
+        std::thread::sleep(Duration::from_millis(50));
+    };
+    let points = cancelled.require_f64("result.work.points").unwrap();
+    assert!(
+        points < 80_000.0,
+        "the abandoned sweep should stop short of its 80k-point grid, burned {points}"
+    );
+    drop(probe);
+    harness.stop();
 }

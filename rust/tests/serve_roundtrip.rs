@@ -33,7 +33,7 @@ fn start_server(model: AdcModel) -> (String, ServerHandle, thread::JoinHandle<()
         model,
         cache_capacity: 8,
         workers: 2,
-        max_sweep_points: None,
+        ..ServeOptions::default()
     })
     .expect("bind");
     let addr = server.local_addr().to_string();
