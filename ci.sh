@@ -164,20 +164,71 @@ wait "$W1_PID" && wait "$W2_PID" \
   || { echo "ci.sh: a cross-core daemon did not drain cleanly" >&2; exit 1; }
 W1_PID=""; W2_PID=""
 
+echo "== observability: traced daemon byte-identity + trace capture =="
+# Tracing enabled must not change a single served byte: replay the
+# cross-core burst against an event-loop daemon running with
+# --trace-out and cmp its responses against the untraced capture
+# above. The trace file itself must then parse with the crate's own
+# JSON parser — `cimdse trace` hard-fails on any malformed line — and
+# the Prometheus exposition must render from the same snapshot.
+TRACE_FILE="$SHARD_DIR/serve_trace.ndjson"
+"$BIN" serve --addr 127.0.0.1:0 --core event-loop --trace-out "$TRACE_FILE" \
+  > "$SHARD_DIR/traced.log" 2>&1 &
+SERVE_PID=$!
+TADDR=$(serve_addr "$SHARD_DIR/traced.log" "$SERVE_PID")
+exec 3<>"/dev/tcp/${TADDR%:*}/${TADDR##*:}"
+printf '%s\n' "$BURST" >&3
+head -n 5 <&3 > "$SHARD_DIR/burst_traced.txt"
+exec 3<&- 3>&-
+cmp "$SHARD_DIR/burst_event_loop.txt" "$SHARD_DIR/burst_traced.txt"
+echo "traced daemon responses == untraced responses (byte-identical)"
+"$BIN" query --addr "$TADDR" --op metrics --format prometheus > "$SHARD_DIR/prom.txt"
+grep -q '^cimdse_request_duration_seconds_bucket{le="+Inf"}' "$SHARD_DIR/prom.txt" \
+  || { echo "ci.sh: prometheus exposition lacks the latency histogram" >&2; exit 1; }
+grep -q '^cimdse_error_frames_total' "$SHARD_DIR/prom.txt" \
+  || { echo "ci.sh: prometheus exposition lacks error_frames" >&2; exit 1; }
+"$BIN" query --addr "$TADDR" --op shutdown > /dev/null
+wait "$SERVE_PID" \
+  || { echo "ci.sh: traced daemon did not drain cleanly" >&2; cat "$SHARD_DIR/traced.log" >&2; exit 1; }
+SERVE_PID=""
+test -s "$TRACE_FILE" || { echo "ci.sh: trace file missing or empty" >&2; exit 1; }
+"$BIN" trace "$TRACE_FILE" | tee "$SHARD_DIR/trace_report.txt"
+grep -q "cimdse trace:" "$SHARD_DIR/trace_report.txt" \
+  || { echo "ci.sh: trace analyzer produced no report" >&2; exit 1; }
+echo "trace file parses and analyzes"
+
 echo "== distributed sweep over 2 local workers (event-loop core, cmp vs single process) =="
-"$BIN" serve --addr 127.0.0.1:0 --core event-loop > "$SHARD_DIR/w1.log" 2>&1 &
+# Each process records its own trace file; the launcher propagates its
+# shard-span contexts to the workers over the protocol `trace` field,
+# so the three files concatenate into one connected trace forest
+# (analyzed after the summary cmp below).
+"$BIN" serve --addr 127.0.0.1:0 --core event-loop --trace-out "$SHARD_DIR/w1_trace.ndjson" > "$SHARD_DIR/w1.log" 2>&1 &
 W1_PID=$!
-"$BIN" serve --addr 127.0.0.1:0 --core event-loop > "$SHARD_DIR/w2.log" 2>&1 &
+"$BIN" serve --addr 127.0.0.1:0 --core event-loop --trace-out "$SHARD_DIR/w2_trace.ndjson" > "$SHARD_DIR/w2.log" 2>&1 &
 W2_PID=$!
 A1=$(serve_addr "$SHARD_DIR/w1.log" "$W1_PID")
 A2=$(serve_addr "$SHARD_DIR/w2.log" "$W2_PID")
 echo "workers at $A1 and $A2"
 DIST_ARGS=(sweep --spec dense --points 6 --workers "$A1,$A2" --shards 6 \
-  --out "$SHARD_DIR/dist" --summary-json "$SHARD_DIR/dist_summary.json")
+  --out "$SHARD_DIR/dist" --summary-json "$SHARD_DIR/dist_summary.json" \
+  --trace-out "$SHARD_DIR/launch_trace.ndjson")
 "$BIN" "${DIST_ARGS[@]}" | tee "$SHARD_DIR/dist.txt"
 "$BIN" sweep --spec dense --points 6 --summary-json "$SHARD_DIR/dist_single.json"
 cmp "$SHARD_DIR/dist_summary.json" "$SHARD_DIR/dist_single.json"
 echo "distributed summary == single-process summary (byte-identical)"
+
+# Fleet trace forest: the launcher's trace plus both workers' traces
+# concatenate into one NDJSON file, and the analyzer must see all three
+# processes — the launcher by label, each worker by its bound address
+# (proof the trace context actually crossed the wire to both).
+cat "$SHARD_DIR/launch_trace.ndjson" "$SHARD_DIR/w1_trace.ndjson" \
+  "$SHARD_DIR/w2_trace.ndjson" > "$SHARD_DIR/fleet_trace.ndjson"
+"$BIN" trace "$SHARD_DIR/fleet_trace.ndjson" | tee "$SHARD_DIR/fleet_report.txt"
+for P in launcher "$A1" "$A2"; do
+  grep -q "$P" "$SHARD_DIR/fleet_report.txt" \
+    || { echo "ci.sh: fleet trace report is missing process $P" >&2; exit 1; }
+done
+echo "fleet trace stitches launcher + both workers into one forest"
 
 # Both workers must have served at least one shard (the affinity
 # scheduler guarantees a healthy worker is never starved) — asserted

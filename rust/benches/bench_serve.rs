@@ -127,6 +127,23 @@ fn main() {
             }
         }
 
+        // Histogram-derived latency quantiles for the whole core's run,
+        // straight from the server's own `metrics` op — the same numbers
+        // an operator would see, covering every frame (errors included).
+        let snapshot = Client::connect(&addr)
+            .and_then(|mut c| c.metrics())
+            .expect("bench metrics");
+        let tag = core_tag(core).replace('-', "_");
+        for (key, metric) in [("p50_s", "latency_p50_s"), ("p99_s", "latency_p99_s")] {
+            let v = snapshot
+                .get("latency")
+                .and_then(|l| l.get(key))
+                .and_then(cimdse::config::Value::as_f64)
+                .expect("latency quantile in metrics snapshot");
+            report.metric(&format!("{metric}_{tag}"), v);
+            println!("  {} {metric} = {v:.6}s", core_tag(core));
+        }
+
         handle.shutdown();
         serve_thread.join().expect("serve thread");
     }

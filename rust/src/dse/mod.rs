@@ -603,6 +603,12 @@ pub struct FoldCtl<'a> {
     /// exact grid order at any split — and the parallel path ignores the
     /// hint so its pool chunking stays canonical.
     pub chunk: Option<usize>,
+    /// Trace parent for per-chunk child spans: the serving core's
+    /// request span, set only while the global tracer is recording.
+    /// `None` (the default, and the only state untraced traffic sees)
+    /// records nothing and touches no clock — result bytes never depend
+    /// on this field either way.
+    pub trace: Option<crate::obs::TraceCtx>,
 }
 
 /// [`run_sweep_fold_range_tier`] with cooperative cancellation and
@@ -648,6 +654,16 @@ where
             progress(points);
         }
     };
+    // Per-chunk child span under the serving core's request span. The
+    // guard records on drop, so holding it across the chunk times the
+    // fold work; a `None` parent returns `None` and costs nothing.
+    let chunk_span = |points: usize| {
+        ctl.trace.map(|parent| {
+            let mut s = crate::obs::child_span("chunk", parent);
+            s.attr("points", crate::config::Value::Number(points as f64));
+            s
+        })
+    };
     if cancelled() {
         return None;
     }
@@ -666,7 +682,9 @@ where
                 return None;
             }
             let stop = (at + chunk).min(range.end);
+            let span = chunk_span(stop - at);
             prepared.for_each_in_range_tier(tier, at..stop, |i, q, m| fold(&mut acc, i, q, m));
+            drop(span);
             report(stop - at);
             at = stop;
         }
@@ -680,9 +698,11 @@ where
         if cancelled() {
             return;
         }
+        let span = chunk_span(chunk.len());
         prepared.for_each_in_range_tier(tier, base + chunk.start..base + chunk.end, |i, q, m| {
             fold(acc, i, q, m)
         });
+        drop(span);
         report(chunk.len());
     });
     if cancelled() {

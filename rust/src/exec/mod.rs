@@ -27,6 +27,7 @@
 
 use std::collections::VecDeque;
 use std::ops::Range;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread::{JoinHandle, ThreadId};
 
@@ -68,12 +69,45 @@ struct PoolState {
     shutdown: bool,
 }
 
+/// Lifetime profiling counters for one worker (relaxed atomics: they are
+/// monotonic tallies read out of band by [`Pool::stats`], never used for
+/// synchronization).
+#[derive(Default)]
+struct WorkerCounters {
+    /// Chunks this worker executed (own-deque claims plus steals).
+    chunks: AtomicU64,
+    /// Chunks claimed from *another* worker's deque.
+    steals: AtomicU64,
+    /// Nanoseconds spent parked on `work_cv` waiting for an epoch.
+    idle_ns: AtomicU64,
+}
+
+/// Snapshot of one worker's lifetime counters (see [`Pool::stats`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WorkerStats {
+    /// Chunks executed by this worker (own claims + steals).
+    pub chunks: u64,
+    /// Chunks stolen from other workers' deques.
+    pub steals: u64,
+    /// Nanoseconds spent idle waiting for work.
+    pub idle_ns: u64,
+}
+
+/// Snapshot of every worker's lifetime counters, indexed by worker.
+#[derive(Clone, Debug, Default)]
+pub struct PoolStats {
+    /// One entry per worker thread, in worker-index order.
+    pub workers: Vec<WorkerStats>,
+}
+
 struct Shared {
     state: Mutex<PoolState>,
     /// Workers wait here for a new epoch.
     work_cv: Condvar,
     /// The submitter waits here for `active` to reach zero.
     done_cv: Condvar,
+    /// Per-worker profiling tallies (chunks/steals/idle).
+    counters: Vec<WorkerCounters>,
 }
 
 /// A persistent worker pool: threads are spawned once and reused across
@@ -99,6 +133,7 @@ impl Pool {
             }),
             work_cv: Condvar::new(),
             done_cv: Condvar::new(),
+            counters: (0..workers).map(|_| WorkerCounters::default()).collect(),
         });
         let handles = (0..workers)
             .map(|i| {
@@ -132,6 +167,25 @@ impl Pool {
     /// Whether the calling thread is a pool worker (any pool's).
     pub fn on_worker_thread() -> bool {
         IS_POOL_WORKER.with(|f| f.get())
+    }
+
+    /// Snapshot the per-worker lifetime profiling counters: chunks
+    /// executed, chunks stolen from other workers, and nanoseconds spent
+    /// parked waiting for work. Counters are monotonic over the pool's
+    /// life; callers diff snapshots to attribute a window.
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            workers: self
+                .shared
+                .counters
+                .iter()
+                .map(|c| WorkerStats {
+                    chunks: c.chunks.load(Ordering::Relaxed),
+                    steals: c.steals.load(Ordering::Relaxed),
+                    idle_ns: c.idle_ns.load(Ordering::Relaxed),
+                })
+                .collect(),
+        }
     }
 
     /// Run `f(worker_index)` once on every worker, returning when all have
@@ -236,8 +290,13 @@ impl Pool {
             deques.into_iter().map(Mutex::new).collect();
         let f = &f;
         let queues = &queues;
+        let counters = &self.shared.counters;
         self.broadcast(&move |w| {
-            while let Some((start, slice)) = claim(queues, w) {
+            while let Some(((start, slice), stolen)) = claim(queues, w) {
+                counters[w].chunks.fetch_add(1, Ordering::Relaxed);
+                if stolen {
+                    counters[w].steals.fetch_add(1, Ordering::Relaxed);
+                }
                 f(start, slice);
             }
         });
@@ -279,9 +338,14 @@ impl Pool {
         let fold = &fold;
         let queues_ref = &queues;
         let accs_ref = &accs;
+        let counters = &self.shared.counters;
         self.broadcast(&move |w| {
             let mut acc: Option<A> = None;
-            while let Some(range) = claim(queues_ref, w) {
+            while let Some((range, stolen)) = claim(queues_ref, w) {
+                counters[w].chunks.fetch_add(1, Ordering::Relaxed);
+                if stolen {
+                    counters[w].steals.fetch_add(1, Ordering::Relaxed);
+                }
                 fold(acc.get_or_insert_with(init), range);
             }
             if let Some(acc) = acc {
@@ -295,15 +359,17 @@ impl Pool {
 
 /// Claim a chunk for worker `w`: front of its own deque, else steal from
 /// the back of the others (back-stealing keeps the owner's front pops and
-/// thieves' back pops on opposite ends of a contiguous index run).
-fn claim<T>(queues: &[Mutex<VecDeque<T>>], w: usize) -> Option<T> {
+/// thieves' back pops on opposite ends of a contiguous index run). The
+/// returned flag is `true` when the chunk was stolen from another worker's
+/// deque (feeds the [`Pool::stats`] steal counter).
+fn claim<T>(queues: &[Mutex<VecDeque<T>>], w: usize) -> Option<(T, bool)> {
     if let Some(task) = queues[w].lock().unwrap().pop_front() {
-        return Some(task);
+        return Some((task, false));
     }
     for off in 1..queues.len() {
         let victim = (w + off) % queues.len();
         if let Some(task) = queues[victim].lock().unwrap().pop_back() {
-            return Some(task);
+            return Some((task, true));
         }
     }
     None
@@ -325,7 +391,11 @@ fn worker_loop(shared: &Shared, worker_index: usize) {
                         break *ptr;
                     }
                 }
+                let parked = std::time::Instant::now();
                 st = shared.work_cv.wait(st).unwrap();
+                shared.counters[worker_index]
+                    .idle_ns
+                    .fetch_add(parked.elapsed().as_nanos() as u64, Ordering::Relaxed);
             }
         };
         // SAFETY: `broadcast` keeps the pointee alive (and the pointer in
@@ -572,6 +642,27 @@ mod tests {
         assert!(!first.contains(&std::thread::current().id()));
         let after: BTreeSet<ThreadId> = pool.worker_ids().into_iter().collect();
         assert_eq!(worker_ids, after);
+    }
+
+    #[test]
+    fn stats_count_every_chunk_exactly_once() {
+        let pool = Pool::new(3);
+        let before: u64 = pool.stats().workers.iter().map(|w| w.chunks).sum();
+        assert_eq!(before, 0, "fresh pool starts with zero chunks");
+        let mut out = vec![0usize; 100];
+        pool.fill_with(&mut out, 7, |i| i);
+        let stats = pool.stats();
+        assert_eq!(stats.workers.len(), 3);
+        let chunks: u64 = stats.workers.iter().map(|w| w.chunks).sum();
+        let steals: u64 = stats.workers.iter().map(|w| w.steals).sum();
+        // 100 items in chunks of 7 → ceil(100/7) = 15 claims, no more.
+        assert_eq!(chunks, 15, "every chunk tallied exactly once");
+        assert!(steals <= chunks, "steals are a subset of claims");
+        // A second job accumulates on top (counters are lifetime tallies).
+        let accs = pool.fold_chunks(50, 10, || 0usize, |acc, r| *acc += r.len());
+        assert_eq!(accs.iter().sum::<usize>(), 50);
+        let after: u64 = pool.stats().workers.iter().map(|w| w.chunks).sum();
+        assert_eq!(after, 15 + 5);
     }
 
     #[test]

@@ -38,6 +38,11 @@
 //!   tables/CSV/ASCII plots, property testing, RNG/log-space helpers)
 //!   hand-rolled because the offline registry carries no tokio / clap /
 //!   serde / criterion / proptest.
+//! * [`obs`] — structured observability: lock-cheap tracing spans with
+//!   cross-process trace-context propagation (the protocol's optional
+//!   `trace` field), NDJSON trace sinks (`--trace-out`), mergeable
+//!   log2 latency histograms, and the `cimdse trace` analyzer (see
+//!   rust/docs/observability.md).
 //! * [`lint`] — `cimdse lint`, the zero-dependency static checker that
 //!   machine-enforces the crate's hand-maintained contracts (SAFETY
 //!   audits, error-code registry, float display, mutex-hold, determinism
@@ -58,6 +63,7 @@ pub mod error;
 pub mod exec;
 pub mod lint;
 pub mod mapper;
+pub mod obs;
 pub mod report;
 pub mod runtime;
 pub mod service;

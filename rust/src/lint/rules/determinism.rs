@@ -6,11 +6,15 @@
 //! `HashMap` iteration order must never reach those payloads — and
 //! neither may the approximate sweep tier (`util::fastmath`,
 //! `PreparedRowLanes`, `pow10_fast`), whose results are only
-//! ULP-bounded against the bit-exact reference. The rule is scoped to
+//! ULP-bounded against the bit-exact reference. `obs::` is banned for
+//! the same reason: trace spans carry monotonic timestamps and
+//! process-local ids, so nothing from the tracing layer may flow into a
+//! fingerprinted or serialized payload. The rule is scoped to
 //! the files that build those payloads: `src/config/` (serializers),
 //! `src/dse/shard.rs` (artifacts + fingerprints) and the
 //! protocol/server pair. Legitimate uses (e.g. latency metrics in the
-//! server) carry a `lint:allow(determinism)` with the reason.
+//! server, or `obs::server_span` whose data flows only to the trace
+//! sink) carry a `lint:allow(determinism)` with the reason.
 
 use crate::lint::{Context, Finding, Rule};
 
@@ -27,6 +31,7 @@ const DET_TOKENS: &[&str] = &[
     "fastmath",
     "PreparedRowLanes",
     "pow10_fast",
+    "obs::",
 ];
 
 pub struct Determinism;

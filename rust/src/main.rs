@@ -20,6 +20,9 @@
 //! * `query`   — client for the daemon (`eval`/`sweep`/`accel`/
 //!   `metrics`/`shutdown`); output matches the direct subcommands so
 //!   served results can be diffed against library ones.
+//! * `trace`   — analyze an NDJSON trace captured with `--trace-out`
+//!   (per-op latency, per-process timeline, cross-process critical
+//!   path; see rust/docs/observability.md).
 
 use cimdse::adc::{AdcModel, AdcQuery, fit_model, tuning::TuningPoint};
 use cimdse::arch::raella::{RaellaVariant, raella};
@@ -61,7 +64,8 @@ SUBCOMMANDS
            [--shard i/N] [--out shard_i.json]     run one shard to a resumable artifact
            [--workers HOST:PORT,... [--shards N]
             [--out DIR] [--timeout-ms 60000]
-            [--launch-json PATH]]                 distributed sweep over serve daemons
+            [--launch-json PATH]
+            [--trace-out FILE]]                   distributed sweep over serve daemons
                                                   (resumable; summary byte-identical
                                                   to the single-process run; the
                                                   timeout bounds the gap between
@@ -83,14 +87,20 @@ SUBCOMMANDS
            [--core event-loop|threads]            long-lived serving daemon (NDJSON
            [--max-sweep-points N]                 protocol v2; see rust/docs/protocol.md);
            [--progress-every N]                   sweep/shard requests over the point
-                                                  budget get a typed `over-budget`
+           [--trace-out FILE]                     budget get a typed `over-budget`
                                                   error; --progress-every streams a
                                                   progress frame every N points to
-                                                  v2 clients (event-loop core)
+                                                  v2 clients (event-loop core);
+                                                  --trace-out records NDJSON spans
+                                                  (rust/docs/observability.md)
   query    --addr HOST:PORT --op eval|sweep|accel|metrics|shutdown
            [eval: --enob B --throughput F --tech 32 --n-adcs 1]
            [sweep: --spec dense|fig5 --points N --out PATH]
-           [accel: --workload NAME]               query a running daemon
+           [accel: --workload NAME]
+           [metrics: --format text|prometheus]    query a running daemon
+  trace    FILE                                   analyze an NDJSON trace (--trace-out):
+                                                  per-op latency, per-process timeline,
+                                                  cross-process critical path
   lint     [PATH] [--json]                        static invariant checks over a crate
                                                   tree (default PATH: .); exits 1 on
                                                   findings (rules: rust/docs/lints.md)
@@ -121,6 +131,7 @@ fn main() {
         Some("bench-report") => cmd_bench_report(&args),
         Some("serve") => cmd_serve(&args),
         Some("query") => cmd_query(&args),
+        Some("trace") => cmd_trace(&args),
         Some("lint") => cmd_lint(&args),
         _ => {
             println!("{USAGE}");
@@ -400,6 +411,12 @@ fn cmd_sweep_workers(
     options.read_timeout =
         (timeout_ms > 0).then(|| std::time::Duration::from_millis(timeout_ms));
     options.out_dir = args.opt("out").map(std::path::PathBuf::from);
+    if let Some(path) = args.opt("trace-out") {
+        // The launcher's own spans (launch root + per-shard leases);
+        // workers started with their own --trace-out record the linked
+        // server-side spans, and `cimdse trace` joins the concatenation.
+        cimdse::obs::init_file(path, "launcher")?;
+    }
     let report = run_distributed_sweep(spec, model, &options)?;
     println!(
         "distributed sweep: {} shards over {} workers ({} computed, {} resumed, {} \
@@ -847,8 +864,29 @@ fn cmd_bench_report(args: &Args) -> Result<()> {
     println!("{}", t.render());
     if let Some(cimdse::config::Value::Table(derived)) = doc.get("derived") {
         for (name, v) in derived {
-            if let Some(x) = v.as_f64() {
-                println!("  {name} = {x:.3}");
+            let x = v.as_f64().ok_or_else(|| {
+                Error::Config(format!("derived metric `{name}` is not a number"))
+            })?;
+            if !x.is_finite() {
+                return Err(Error::Config(format!("derived metric `{name}` is {x}")));
+            }
+            println!("  {name} = {x:.3}");
+        }
+    }
+    if bench == "serve" {
+        // The serve bench must carry histogram-derived latency quantiles
+        // (one p50/p99 pair per core) so latency regressions gate CI, not
+        // just throughput.
+        let derived = match doc.get("derived") {
+            Some(cimdse::config::Value::Table(map)) => map.clone(),
+            _ => Default::default(),
+        };
+        for prefix in ["latency_p50_s_", "latency_p99_s_"] {
+            if !derived.keys().any(|k| k.starts_with(prefix)) {
+                return Err(Error::Config(format!(
+                    "serve bench report lacks a `{prefix}*` derived metric \
+                     (regenerate with `cargo bench --bench bench_serve`)"
+                )));
             }
         }
     }
@@ -912,6 +950,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
         cimdse::service::ServeCore::Threads => "threads",
     };
     let server = cimdse::service::Server::bind(options)?;
+    if let Some(path) = args.opt("trace-out") {
+        // Label events with the actual bound address (ephemeral ports
+        // resolve here), so a fleet's per-worker traces concatenate into
+        // one forest with distinguishable processes.
+        cimdse::obs::init_file(path, &server.local_addr().to_string())?;
+        println!("cimdse serve: tracing spans to {path}");
+    }
     println!(
         "cimdse serve: listening on {} ({core_tag} core, {workers} workers, cache {cache}, \
          model fit n={n} seed={seed}{budget})",
@@ -1004,7 +1049,18 @@ fn cmd_query(args: &Args) -> Result<()> {
         }
         "metrics" => {
             let snapshot = client.metrics()?;
-            print!("{}", cimdse::service::ServiceMetrics::render(&snapshot)?);
+            match args.opt_or("format", "text") {
+                "text" => print!("{}", cimdse::service::ServiceMetrics::render(&snapshot)?),
+                "prometheus" => print!(
+                    "{}",
+                    cimdse::service::ServiceMetrics::render_prometheus(&snapshot)?
+                ),
+                other => {
+                    return Err(Error::Config(format!(
+                        "unknown metrics format `{other}` (text|prometheus)"
+                    )));
+                }
+            }
         }
         "shutdown" => {
             client.shutdown()?;
@@ -1050,6 +1106,25 @@ fn cmd_figures(args: &Args) -> Result<()> {
         println!("Fig. 5: EAP vs number of ADCs for varying total throughput");
         println!("{}", figures::render_fig5(&figures::fig5(&model, 5)?).render());
     }
+    Ok(())
+}
+
+fn cmd_trace(args: &Args) -> Result<()> {
+    // Accept the file as a positional (`cimdse trace FILE`) or --path;
+    // several files' worth of NDJSON may be concatenated into one (the
+    // fleet case: launcher + per-worker traces).
+    let positionals = args.positionals();
+    let path = positionals
+        .first()
+        .map(String::as_str)
+        .or_else(|| args.opt("path"))
+        .ok_or_else(|| {
+            Error::Config("trace needs an NDJSON trace file (cimdse trace FILE)".into())
+        })?;
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| Error::Config(format!("cannot read trace file {path}: {e}")))?;
+    let events = cimdse::obs::analyze::parse_trace(&text)?;
+    print!("{}", cimdse::obs::analyze::render_report(&events));
     Ok(())
 }
 

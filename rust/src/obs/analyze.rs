@@ -1,0 +1,358 @@
+//! The `cimdse trace <FILE>` analyzer: loads an NDJSON trace (one
+//! process's file, or several concatenated — the fleet case), and
+//! renders per-op latency breakdowns, a per-process timeline, and the
+//! critical path of the largest trace.
+//!
+//! Cross-process caveat: `t_us` timestamps are monotonic readings of
+//! *each process's own clock*, so timeline offsets are relative within
+//! one process and never compared across processes. Cross-process
+//! structure — which worker span served which launcher shard — comes
+//! entirely from the `trace`/`parent` span links, which is why the
+//! critical path is computed over the link forest, not over clocks.
+
+use std::collections::BTreeMap;
+
+use crate::bench_util::fmt_secs;
+use crate::config::{Value, parse_json};
+use crate::error::{Error, Result};
+use crate::obs::parse_hex16;
+
+/// One decoded trace line.
+#[derive(Clone, Debug)]
+pub struct TraceEvent {
+    /// `"span"` or `"event"`.
+    pub ev: String,
+    /// Span/event name.
+    pub name: String,
+    /// Trace id this event belongs to.
+    pub trace: u64,
+    /// This event's own span id.
+    pub span: u64,
+    /// Parent span id, when linked.
+    pub parent: Option<u64>,
+    /// Monotonic start, µs since the *originating process's* tracer init.
+    pub t_us: u64,
+    /// Duration in µs (0 for instant events).
+    pub dur_us: u64,
+    /// Per-process thread tag.
+    pub tid: u64,
+    /// Process label (`"launcher"`, a worker address, ...).
+    pub proc: String,
+    /// Free-form attributes (`Value::Null` when absent).
+    pub attrs: Value,
+}
+
+/// Parse a whole NDJSON trace text. Every non-blank line must parse
+/// with the crate's own JSON parser and carry the span-event schema;
+/// the error names the offending line.
+pub fn parse_trace(text: &str) -> Result<Vec<TraceEvent>> {
+    let mut events = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let doc = parse_json(line)
+            .map_err(|e| Error::Config(format!("trace line {}: unparsable JSON: {e}", i + 1)))?;
+        events.push(event_from_value(&doc).map_err(|e| {
+            Error::Config(format!("trace line {}: {e}", i + 1))
+        })?);
+    }
+    Ok(events)
+}
+
+fn event_from_value(v: &Value) -> std::result::Result<TraceEvent, String> {
+    let field = |key: &str| {
+        v.get(key)
+            .and_then(Value::as_str)
+            .ok_or_else(|| format!("missing string `{key}`"))
+    };
+    let hex = |key: &str| {
+        parse_hex16(field(key)?).ok_or_else(|| format!("`{key}` is not 16 hex digits"))
+    };
+    let num = |key: &str| {
+        v.get(key)
+            .and_then(Value::as_f64)
+            .filter(|x| x.is_finite() && *x >= 0.0)
+            .map(|x| x as u64)
+            .ok_or_else(|| format!("missing numeric `{key}`"))
+    };
+    let ev = field("ev")?.to_string();
+    if ev != "span" && ev != "event" {
+        return Err(format!("unknown event kind `{ev}`"));
+    }
+    let parent = match v.get("parent") {
+        None => None,
+        Some(_) => Some(hex("parent")?),
+    };
+    Ok(TraceEvent {
+        name: field("name")?.to_string(),
+        trace: hex("trace")?,
+        span: hex("span")?,
+        parent,
+        t_us: num("t_us")?,
+        dur_us: if ev == "span" { num("dur_us")? } else { 0 },
+        tid: num("tid")?,
+        proc: field("proc")?.to_string(),
+        attrs: v.get("attrs").cloned().unwrap_or(Value::Null),
+        ev,
+    })
+}
+
+const TIMELINE_SPAN_CAP: usize = 24;
+
+/// Render the human report for a parsed trace.
+pub fn render_report(events: &[TraceEvent]) -> String {
+    let spans: Vec<&TraceEvent> = events.iter().filter(|e| e.ev == "span").collect();
+    let mut traces = BTreeMap::new();
+    let mut procs: BTreeMap<&str, Vec<&TraceEvent>> = BTreeMap::new();
+    for &e in &spans {
+        *traces.entry(e.trace).or_insert(0usize) += 1;
+        procs.entry(e.proc.as_str()).or_default().push(e);
+    }
+    let mut out = format!(
+        "cimdse trace: {} events ({} spans), {} process(es), {} trace(s)\n",
+        events.len(),
+        spans.len(),
+        procs.len(),
+        traces.len()
+    );
+    if spans.is_empty() {
+        out.push_str("  (no spans recorded)\n");
+        return out;
+    }
+
+    // Per-op latency breakdown: group span durations by name.
+    out.push_str("\nper-op latency:\n");
+    let mut by_name: BTreeMap<&str, (usize, u64, u64)> = BTreeMap::new();
+    for e in &spans {
+        let entry = by_name.entry(e.name.as_str()).or_insert((0, 0, 0));
+        entry.0 += 1;
+        entry.1 += e.dur_us;
+        entry.2 = entry.2.max(e.dur_us);
+    }
+    for (name, (count, total_us, max_us)) in &by_name {
+        out.push_str(&format!(
+            "  {name:<16} {count:>6} spans  total {:>9}  mean {:>9}  max {:>9}\n",
+            fmt_secs(*total_us as f64 / 1e6),
+            fmt_secs(*total_us as f64 / 1e6 / *count as f64),
+            fmt_secs(*max_us as f64 / 1e6),
+        ));
+    }
+
+    // Per-process timeline: offsets relative to that process's first
+    // span (monotonic clocks are per-process; see module docs).
+    out.push_str("\nper-process timeline (offsets are per-process):\n");
+    for (proc, list) in &procs {
+        let mut list: Vec<&&TraceEvent> = list.iter().collect();
+        list.sort_by_key(|e| (e.t_us, e.span));
+        let t0 = list.first().map(|e| e.t_us).unwrap_or(0);
+        let busy_us: u64 = list.iter().map(|e| e.dur_us).sum();
+        let label = if proc.is_empty() { "(unlabeled)" } else { proc };
+        out.push_str(&format!(
+            "  {label}: {} spans, busy {}\n",
+            list.len(),
+            fmt_secs(busy_us as f64 / 1e6)
+        ));
+        for e in list.iter().take(TIMELINE_SPAN_CAP) {
+            out.push_str(&format!(
+                "    +{:>9} {:<16} {:>9}  [tid {}]\n",
+                fmt_secs((e.t_us - t0) as f64 / 1e6),
+                e.name,
+                fmt_secs(e.dur_us as f64 / 1e6),
+                e.tid,
+            ));
+        }
+        if list.len() > TIMELINE_SPAN_CAP {
+            out.push_str(&format!(
+                "    ... {} more spans\n",
+                list.len() - TIMELINE_SPAN_CAP
+            ));
+        }
+    }
+
+    // Critical path over the parent-link forest of the largest trace:
+    // the root-to-leaf chain with the largest summed duration. Links,
+    // not clocks, so it is valid across processes.
+    let (&big_trace, _) = traces
+        .iter()
+        .max_by_key(|&(id, n)| (*n, std::cmp::Reverse(*id)))
+        .expect("spans is non-empty");
+    out.push_str(&format!(
+        "\ncritical path (trace {}):\n",
+        crate::obs::hex16(big_trace)
+    ));
+    let in_trace: Vec<&&TraceEvent> = spans.iter().filter(|e| e.trace == big_trace).collect();
+    let known: BTreeMap<u64, &&TraceEvent> = in_trace.iter().map(|e| (e.span, *e)).collect();
+    let mut children: BTreeMap<u64, Vec<u64>> = BTreeMap::new();
+    let mut roots = Vec::new();
+    for e in &in_trace {
+        match e.parent {
+            // A parent recorded in another file still counts as a link
+            // only if its span made it into this trace text.
+            Some(p) if known.contains_key(&p) => children.entry(p).or_default().push(e.span),
+            _ => roots.push(e.span),
+        }
+    }
+    let mut best: Option<(u64, Vec<u64>)> = None;
+    for &root in &roots {
+        let chain = heaviest_chain(root, &known, &children);
+        let cost: u64 = chain.iter().map(|s| known[s].dur_us).sum();
+        if best.as_ref().map(|(c, _)| cost > *c).unwrap_or(true) {
+            best = Some((cost, chain));
+        }
+    }
+    if let Some((cost, chain)) = best {
+        for (depth, span) in chain.iter().enumerate() {
+            let e = known[span];
+            out.push_str(&format!(
+                "  {}{} {} [{}]\n",
+                "  ".repeat(depth),
+                e.name,
+                fmt_secs(e.dur_us as f64 / 1e6),
+                if e.proc.is_empty() { "(unlabeled)" } else { &e.proc },
+            ));
+        }
+        out.push_str(&format!("  = {} along the path\n", fmt_secs(cost as f64 / 1e6)));
+    }
+    out
+}
+
+/// Depth-first heaviest (by summed `dur_us`) root-to-leaf chain.
+/// Iterative so a pathological deep trace cannot overflow the stack.
+fn heaviest_chain(
+    root: u64,
+    known: &BTreeMap<u64, &&TraceEvent>,
+    children: &BTreeMap<u64, Vec<u64>>,
+) -> Vec<u64> {
+    // Post-order accumulate best child chains.
+    let mut best_down: BTreeMap<u64, (u64, Option<u64>)> = BTreeMap::new();
+    let mut stack = vec![(root, false)];
+    while let Some((node, expanded)) = stack.pop() {
+        if !expanded {
+            stack.push((node, true));
+            for &c in children.get(&node).into_iter().flatten() {
+                stack.push((c, false));
+            }
+            continue;
+        }
+        let mut pick: (u64, Option<u64>) = (0, None);
+        for &c in children.get(&node).into_iter().flatten() {
+            let down = best_down.get(&c).map(|(cost, _)| *cost).unwrap_or(0);
+            if down > pick.0 || pick.1.is_none() {
+                pick = (down, Some(c));
+            }
+        }
+        let self_cost = known.get(&node).map(|e| e.dur_us).unwrap_or(0);
+        best_down.insert(node, (self_cost + pick.0, pick.1));
+    }
+    let mut chain = vec![root];
+    let mut cur = root;
+    while let Some((_, Some(next))) = best_down.get(&cur) {
+        chain.push(*next);
+        cur = *next;
+    }
+    chain
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Value;
+    use crate::obs::Tracer;
+
+    fn fleet_fixture() -> String {
+        // Three "processes": a launcher whose shard spans parent the
+        // two workers' compute spans, exactly the wire contract.
+        let launcher = Tracer::new();
+        launcher.enable_ring("launcher");
+        let mut lines = Vec::new();
+        let root = launcher.span("launch");
+        let root_ctx = root.ctx();
+        for (i, worker) in ["127.0.0.1:7101", "127.0.0.1:7102"].iter().enumerate() {
+            let mut shard = launcher.child_span("shard", root_ctx);
+            shard.attr("shard", Value::String(format!("{i}/2")));
+            let w = Tracer::new();
+            w.enable_ring(worker);
+            {
+                let compute = w.child_span("shard", shard.ctx());
+                {
+                    let _chunk = w.child_span("chunk", compute.ctx());
+                }
+            }
+            lines.extend(w.ring());
+        }
+        drop(root);
+        lines.extend(launcher.ring());
+        lines.join("\n") + "\n"
+    }
+
+    #[test]
+    fn parses_and_reports_a_fleet_trace() {
+        let text = fleet_fixture();
+        let events = parse_trace(&text).unwrap();
+        assert_eq!(events.len(), 7); // 1 launch + 2x(shard + compute + chunk)
+        let traces: std::collections::BTreeSet<u64> =
+            events.iter().map(|e| e.trace).collect();
+        assert_eq!(traces.len(), 1, "one fleet run = one trace id");
+
+        let report = render_report(&events);
+        assert!(report.contains("3 process(es)"), "{report}");
+        assert!(report.contains("127.0.0.1:7101"), "{report}");
+        assert!(report.contains("127.0.0.1:7102"), "{report}");
+        assert!(report.contains("per-op latency"), "{report}");
+        assert!(report.contains("critical path"), "{report}");
+        // The critical path must cross processes: launch -> shard ->
+        // worker-side shard -> chunk is 4 levels deep.
+        assert!(report.contains("      chunk"), "chunk at depth 3:\n{report}");
+    }
+
+    #[test]
+    fn rejects_malformed_lines_with_line_numbers() {
+        let good = fleet_fixture();
+        let bad = format!("{good}this is not json\n");
+        let err = parse_trace(&bad).unwrap_err().to_string();
+        assert!(err.contains("trace line 8"), "{err}");
+        let bad_schema = "{\"ev\": \"span\"}\n";
+        let err = parse_trace(bad_schema).unwrap_err().to_string();
+        assert!(err.contains("trace line 1"), "{err}");
+        assert!(err.contains("name"), "{err}");
+    }
+
+    #[test]
+    fn empty_trace_renders() {
+        let events = parse_trace("").unwrap();
+        assert!(events.is_empty());
+        let report = render_report(&events);
+        assert!(report.contains("0 events"), "{report}");
+    }
+
+    #[test]
+    fn critical_path_prefers_the_heavy_chain() {
+        // Hand-built forest: root with a fast deep chain and one slow
+        // shallow child; the slow child must win.
+        let mk = |name: &str, span: u64, parent: Option<u64>, dur_us: u64| TraceEvent {
+            ev: "span".to_string(),
+            name: name.to_string(),
+            trace: 1,
+            span,
+            parent,
+            t_us: 0,
+            dur_us,
+            tid: 1,
+            proc: "p".to_string(),
+            attrs: Value::Null,
+        };
+        let events = vec![
+            mk("root", 1, None, 10),
+            mk("fast", 2, Some(1), 5),
+            mk("fast", 3, Some(2), 5),
+            mk("slow", 4, Some(1), 1_000_000),
+        ];
+        let report = render_report(&events);
+        assert!(report.contains("slow"), "{report}");
+        let root_pos = report.find("critical path").unwrap();
+        let tail = &report[root_pos..];
+        assert!(tail.contains("slow"), "{tail}");
+        assert!(!tail.contains("fast"), "fast chain must lose: {tail}");
+    }
+}

@@ -1,0 +1,375 @@
+//! Fixed-bucket log2 latency histograms: mergeable, constant-memory,
+//! exact counts.
+//!
+//! The serving layer used to keep a 4096-sample ring of recent
+//! latencies: quantiles were exact but windowed (a burst of rejects
+//! evicted the history that mattered), merging two servers' rings was
+//! meaningless, and memory grew with the window. A log2 histogram
+//! inverts every one of those trades: 64 fixed buckets over
+//! nanoseconds, every observation counted forever, and merging is
+//! element-wise addition — associative, commutative, and exact on
+//! counts — at the cost of quantiles that are only bucket-resolution
+//! (within one power of two) approximations.
+//!
+//! Bucket layout over a duration of `n` whole nanoseconds:
+//!
+//! * bucket `0` — `n == 0` (sub-nanosecond),
+//! * bucket `i` in `1..=62` — `n` in `[2^(i-1), 2^i)`,
+//! * bucket `63` — everything at or above `2^62` ns (~146 years), the
+//!   overflow bucket.
+//!
+//! Exposed through the `metrics` op (bucket table + derived quantiles)
+//! and the Prometheus text exposition; see `rust/docs/observability.md`.
+
+use std::collections::BTreeMap;
+
+use crate::config::Value;
+
+/// Number of log2 buckets. Fixed so any two histograms merge.
+pub const BUCKETS: usize = 64;
+
+const NS_PER_S: f64 = 1e9;
+
+/// A mergeable log2 histogram of durations in seconds.
+#[derive(Clone, Debug)]
+pub struct Hist {
+    counts: [u64; BUCKETS],
+    count: u64,
+    sum_s: f64,
+    min_s: f64,
+    max_s: f64,
+}
+
+impl Default for Hist {
+    fn default() -> Hist {
+        Hist::new()
+    }
+}
+
+impl Hist {
+    /// An empty histogram.
+    pub fn new() -> Hist {
+        Hist {
+            counts: [0; BUCKETS],
+            count: 0,
+            sum_s: 0.0,
+            min_s: f64::INFINITY,
+            max_s: f64::NEG_INFINITY,
+        }
+    }
+
+    /// The bucket a duration of `latency_s` seconds lands in.
+    /// Total: negative/NaN durations clamp into bucket 0, absurdly
+    /// large ones into the overflow bucket.
+    pub fn bucket_index(latency_s: f64) -> usize {
+        let ns = latency_s * NS_PER_S;
+        if !(ns >= 1.0) {
+            return 0; // < 1 ns, negative, or NaN
+        }
+        if ns >= (1u64 << 62) as f64 {
+            return BUCKETS - 1;
+        }
+        let n = ns as u64; // truncation == floor for positive finite
+        (64 - n.leading_zeros() as usize).min(BUCKETS - 1)
+    }
+
+    /// Exclusive upper edge of bucket `i` in seconds (`+inf` for the
+    /// overflow bucket).
+    pub fn bucket_le_s(i: usize) -> f64 {
+        if i >= BUCKETS - 1 { f64::INFINITY } else { (1u64 << i) as f64 / NS_PER_S }
+    }
+
+    /// Inclusive lower edge of bucket `i` in seconds.
+    pub fn bucket_lo_s(i: usize) -> f64 {
+        if i == 0 { 0.0 } else { (1u64 << (i - 1)) as f64 / NS_PER_S }
+    }
+
+    /// Record one duration.
+    pub fn observe(&mut self, latency_s: f64) {
+        self.counts[Self::bucket_index(latency_s)] += 1;
+        self.count += 1;
+        if latency_s.is_finite() {
+            self.sum_s += latency_s.max(0.0);
+            self.min_s = self.min_s.min(latency_s.max(0.0));
+            self.max_s = self.max_s.max(latency_s.max(0.0));
+        }
+    }
+
+    /// Total observations (exact: every `observe` lands in exactly one
+    /// bucket).
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Sum of all observed durations (seconds).
+    pub fn sum_s(&self) -> f64 {
+        self.sum_s
+    }
+
+    /// Smallest observation, if any.
+    pub fn min_s(&self) -> Option<f64> {
+        (self.count > 0).then_some(self.min_s)
+    }
+
+    /// Largest observation, if any.
+    pub fn max_s(&self) -> Option<f64> {
+        (self.count > 0).then_some(self.max_s)
+    }
+
+    /// Per-bucket count.
+    pub fn bucket_count(&self, i: usize) -> u64 {
+        self.counts[i]
+    }
+
+    /// Fold another histogram in. Counts add exactly; the float
+    /// `sum_s` is the only field subject to rounding, so merged counts
+    /// are order-independent bit-for-bit and sums are order-independent
+    /// up to f64 addition error.
+    pub fn merge(&mut self, other: &Hist) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum_s += other.sum_s;
+        if other.count > 0 {
+            self.min_s = self.min_s.min(other.min_s);
+            self.max_s = self.max_s.max(other.max_s);
+        }
+    }
+
+    /// Approximate quantile (`q` in `[0, 1]`): the midpoint of the
+    /// bucket holding the rank-`q` observation, clamped to the observed
+    /// `[min, max]` range. Accurate to within one power of two, which
+    /// is the histogram trade.
+    pub fn quantile(&self, q: f64) -> Option<f64> {
+        if self.count == 0 {
+            return None;
+        }
+        let rank = (q.clamp(0.0, 1.0) * (self.count - 1) as f64).round() as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if c > 0 && seen > rank {
+                let lo = Self::bucket_lo_s(i);
+                let hi = if i == BUCKETS - 1 { self.max_s } else { Self::bucket_le_s(i) };
+                let mid = 0.5 * (lo + hi);
+                return Some(mid.clamp(self.min_s, self.max_s));
+            }
+        }
+        Some(self.max_s) // unreachable in practice: counts sum to count
+    }
+
+    /// Mean observed duration, if any.
+    pub fn mean_s(&self) -> Option<f64> {
+        (self.count > 0).then(|| self.sum_s / self.count as f64)
+    }
+
+    /// The histogram as a `metrics`-frame payload: exact totals,
+    /// derived quantiles, and the non-empty buckets as
+    /// `{le_s, count}` rows (the overflow bucket omits `le_s`,
+    /// standing for `+inf`, which JSON cannot carry as a number).
+    pub fn to_value(&self) -> Value {
+        let mut map = BTreeMap::new();
+        map.insert("count".to_string(), Value::Number(self.count as f64));
+        map.insert("sum_s".to_string(), Value::Number(self.sum_s));
+        if let (Some(min), Some(max)) = (self.min_s(), self.max_s()) {
+            map.insert("min_s".to_string(), Value::Number(min));
+            map.insert("max_s".to_string(), Value::Number(max));
+        }
+        if let (Some(p50), Some(p99)) = (self.quantile(0.50), self.quantile(0.99)) {
+            map.insert("p50_s".to_string(), Value::Number(p50));
+            map.insert("p99_s".to_string(), Value::Number(p99));
+        }
+        let mut buckets = Vec::new();
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            let mut b = BTreeMap::new();
+            b.insert("count".to_string(), Value::Number(c as f64));
+            let le = Self::bucket_le_s(i);
+            if le.is_finite() {
+                b.insert("le_s".to_string(), Value::Number(le));
+            }
+            buckets.push(Value::Table(b));
+        }
+        map.insert("buckets".to_string(), Value::Array(buckets));
+        Value::Table(map)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn bucket_boundaries_are_exact_powers_of_two() {
+        // Exactly representable nanosecond durations sit in the bucket
+        // whose half-open range [2^(i-1), 2^i) contains them.
+        assert_eq!(Hist::bucket_index(0.0), 0);
+        assert_eq!(Hist::bucket_index(-1.0), 0);
+        assert_eq!(Hist::bucket_index(f64::NAN), 0);
+        assert_eq!(Hist::bucket_index(0.5e-9), 0); // sub-ns
+        assert_eq!(Hist::bucket_index(1e-9), 1); // exactly 1 ns
+        for i in 1..=52usize {
+            let lo_ns = (1u64 << (i - 1)) as f64;
+            let hi_ns = (1u64 << i) as f64;
+            assert_eq!(Hist::bucket_index(lo_ns / 1e9), i, "lower edge of bucket {i}");
+            assert_eq!(
+                Hist::bucket_index((hi_ns - 1.0) / 1e9),
+                i,
+                "last ns of bucket {i}"
+            );
+            assert_eq!(Hist::bucket_index(hi_ns / 1e9), i + 1, "upper edge leaves bucket {i}");
+        }
+        // Overflow bucket swallows everything gigantic.
+        assert_eq!(Hist::bucket_index(1e60), BUCKETS - 1);
+        assert_eq!(Hist::bucket_index(f64::INFINITY), BUCKETS - 1);
+        // Edges are consistent: lo of bucket i+1 == le of bucket i.
+        for i in 0..BUCKETS - 2 {
+            assert_eq!(Hist::bucket_lo_s(i + 1), Hist::bucket_le_s(i));
+        }
+        assert!(Hist::bucket_le_s(BUCKETS - 1).is_infinite());
+    }
+
+    /// Deterministic pseudo-random latencies spanning ns..minutes.
+    fn sample_latencies(seed: u64, n: usize) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| {
+                let exp = rng.uniform(-9.0, 2.0); // 1 ns .. 100 s
+                10f64.powf(exp)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn counts_are_conserved_vs_naive_reference() {
+        let xs = sample_latencies(7, 5000);
+        let mut h = Hist::new();
+        let mut naive = [0u64; BUCKETS];
+        for &x in &xs {
+            h.observe(x);
+            naive[Hist::bucket_index(x)] += 1;
+        }
+        assert_eq!(h.count(), xs.len() as u64);
+        assert_eq!(naive.iter().sum::<u64>(), xs.len() as u64);
+        for i in 0..BUCKETS {
+            assert_eq!(h.bucket_count(i), naive[i], "bucket {i}");
+        }
+        let true_sum: f64 = xs.iter().sum();
+        assert!((h.sum_s() - true_sum).abs() <= 1e-9 * true_sum.abs());
+        let true_min = xs.iter().cloned().fold(f64::INFINITY, f64::min);
+        let true_max = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        assert_eq!(h.min_s(), Some(true_min));
+        assert_eq!(h.max_s(), Some(true_max));
+    }
+
+    fn hist_of(xs: &[f64]) -> Hist {
+        let mut h = Hist::new();
+        for &x in xs {
+            h.observe(x);
+        }
+        h
+    }
+
+    fn assert_same_counts(a: &Hist, b: &Hist) {
+        assert_eq!(a.count(), b.count());
+        for i in 0..BUCKETS {
+            assert_eq!(a.bucket_count(i), b.bucket_count(i), "bucket {i}");
+        }
+        assert_eq!(a.min_s(), b.min_s());
+        assert_eq!(a.max_s(), b.max_s());
+        let (sa, sb) = (a.sum_s(), b.sum_s());
+        assert!((sa - sb).abs() <= 1e-9 * sa.abs().max(1.0), "{sa} vs {sb}");
+    }
+
+    #[test]
+    fn merge_is_associative_and_order_independent() {
+        let xs = sample_latencies(11, 900);
+        let parts: Vec<&[f64]> = xs.chunks(300).collect();
+        let (a, b, c) = (hist_of(parts[0]), hist_of(parts[1]), hist_of(parts[2]));
+
+        // (a + b) + c
+        let mut left = a.clone();
+        left.merge(&b);
+        left.merge(&c);
+        // a + (b + c)
+        let mut bc = b.clone();
+        bc.merge(&c);
+        let mut right = a.clone();
+        right.merge(&bc);
+        // c + a + b (another order)
+        let mut rot = c.clone();
+        rot.merge(&a);
+        rot.merge(&b);
+        // the single-pass reference
+        let whole = hist_of(&xs);
+
+        assert_same_counts(&left, &right);
+        assert_same_counts(&left, &rot);
+        assert_same_counts(&left, &whole);
+        // Merging an empty histogram is the identity on counts.
+        let mut with_empty = whole.clone();
+        with_empty.merge(&Hist::new());
+        assert_same_counts(&with_empty, &whole);
+    }
+
+    #[test]
+    fn quantiles_are_bucket_accurate() {
+        // All mass in one bucket: every quantile lands inside it.
+        let mut h = Hist::new();
+        for _ in 0..1000 {
+            h.observe(3e-3); // bucket holding ~3 ms
+        }
+        let i = Hist::bucket_index(3e-3);
+        for q in [0.0, 0.5, 0.99, 1.0] {
+            let est = h.quantile(q).unwrap();
+            assert!(
+                est >= Hist::bucket_lo_s(i) && est < Hist::bucket_le_s(i),
+                "q={q}: {est} outside bucket {i}"
+            );
+        }
+        // Clamped into the observed range.
+        assert_eq!(h.quantile(0.5), Some(3e-3));
+
+        // Bimodal: the median must sit at the heavy mode.
+        let mut h = Hist::new();
+        for _ in 0..900 {
+            h.observe(1e-6);
+        }
+        for _ in 0..100 {
+            h.observe(1.0);
+        }
+        let p50 = h.quantile(0.50).unwrap();
+        assert!(p50 < 1e-4, "median pulled off the heavy mode: {p50}");
+        let p999 = h.quantile(0.999).unwrap();
+        assert!(p999 >= 0.5, "tail quantile missed the slow mode: {p999}");
+        assert!(Hist::new().quantile(0.5).is_none());
+    }
+
+    #[test]
+    fn payload_value_shape() {
+        let mut h = Hist::new();
+        h.observe(1e-3);
+        h.observe(2e-3);
+        let v = h.to_value();
+        assert_eq!(v.require_f64("count").unwrap(), 2.0);
+        assert!(v.require_f64("sum_s").unwrap() > 0.0);
+        assert!(v.require_f64("p50_s").unwrap() > 0.0);
+        assert!(v.require_f64("p99_s").unwrap() > 0.0);
+        let buckets = v.get("buckets").and_then(Value::as_array).unwrap();
+        assert!(!buckets.is_empty());
+        let total: f64 = buckets
+            .iter()
+            .map(|b| b.require_f64("count").unwrap())
+            .sum();
+        assert_eq!(total, 2.0, "bucket rows conserve the count");
+        // Serializes even with overflow-bucket mass (no non-finite
+        // numbers may reach the JSON layer).
+        h.observe(f64::INFINITY);
+        let text = h.to_value().to_json_string().unwrap();
+        assert!(text.contains("\"count\""), "{text}");
+    }
+}

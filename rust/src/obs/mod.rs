@@ -1,0 +1,520 @@
+//! Structured tracing and profiling: lock-cheap spans, NDJSON trace
+//! events, mergeable latency histograms, and the trace analyzer behind
+//! `cimdse trace`.
+//!
+//! ## Span model
+//!
+//! A *span* is a named, timed region of work: it carries a 64-bit
+//! trace id (shared by every span of one logical operation, e.g. a
+//! whole distributed sweep), its own 64-bit span id, an optional
+//! parent span id, a monotonic start timestamp, a duration, the
+//! recording thread, and free-form attributes. Spans are RAII guards
+//! ([`Span`]): create one with [`span`]/[`child_span`], attach
+//! attributes, and the event is recorded when the guard drops. A
+//! *trace context* ([`TraceCtx`]) is the `(trace id, span id)` pair
+//! that travels across process boundaries — over the wire as the
+//! optional protocol-v2 `trace` frame field (16 lowercase hex digits
+//! each; see `rust/docs/protocol.md`) — so a fleet run stitches into
+//! one forest: launcher shard spans parent the worker-side compute
+//! spans, which parent the pool chunk spans.
+//!
+//! ## Recording
+//!
+//! The global [`Tracer`] starts disabled: every span call is a single
+//! relaxed atomic load and no lock is touched, so the serving hot path
+//! pays nothing until `--trace-out` enables it. Enabled, each event is
+//! serialized through the crate's own [`crate::config::Value`] JSON
+//! layer (no new dependencies) into a bounded in-memory ring of the
+//! most recent [`RING_CAPACITY`] lines and, when a file sink is
+//! configured, appended as one NDJSON line (written and flushed per
+//! event — trace volume is request-scale, not point-scale, and a
+//! crashed process keeps its trace).
+//!
+//! Timestamps are *monotonic* (`t_us` = microseconds since this
+//! process's tracer initialized) and therefore only comparable within
+//! one process; cross-process ordering comes from the parent links,
+//! never from clocks. Trace data flows only to the ring/file sink —
+//! never into fingerprinted artifacts or response frames; the
+//! `determinism` lint machine-checks that `obs::` is unreachable from
+//! serialized paths (see `rust/docs/lints.md`).
+//!
+//! ## Event schema (one JSON object per line)
+//!
+//! | key      | type   | meaning                                        |
+//! |----------|--------|------------------------------------------------|
+//! | `ev`     | string | `"span"` or `"event"` (instant, no duration)   |
+//! | `name`   | string | span/event name (`"shard"`, `"chunk"`, ...)    |
+//! | `trace`  | string | 16-hex trace id                                |
+//! | `span`   | string | 16-hex span id                                 |
+//! | `parent` | string | 16-hex parent span id (absent for roots)       |
+//! | `t_us`   | number | monotonic start, µs since tracer init          |
+//! | `dur_us` | number | span duration in µs (spans only)               |
+//! | `tid`    | number | small per-process thread tag                   |
+//! | `proc`   | string | process label (`"launcher"`, a worker address) |
+//! | `attrs`  | object | free-form attributes (present when non-empty)  |
+
+pub mod analyze;
+pub mod hist;
+
+use std::collections::{BTreeMap, VecDeque};
+use std::fs::File;
+use std::io::Write;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::config::Value;
+use crate::error::{Error, Result};
+
+/// Most recent trace lines retained in memory per tracer.
+pub const RING_CAPACITY: usize = 4096;
+
+/// A propagatable trace context: which trace this work belongs to and
+/// which span is its parent. Wire form: 16 lowercase hex digits each.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TraceCtx {
+    /// Identifies the whole logical operation (one distributed sweep).
+    pub trace_id: u64,
+    /// The span to parent child work under.
+    pub span_id: u64,
+}
+
+impl TraceCtx {
+    /// The wire form of this context: `{"id": <16-hex>, "span": <16-hex>}`,
+    /// the exact table the protocol's optional `trace` field carries.
+    pub fn to_value(self) -> Value {
+        let mut map = BTreeMap::new();
+        map.insert("id".to_string(), Value::String(hex16(self.trace_id)));
+        map.insert("span".to_string(), Value::String(hex16(self.span_id)));
+        Value::Table(map)
+    }
+
+    /// Parse the wire form back; `None` if the shape is not a valid
+    /// trace table (callers on the serve path validate separately and
+    /// reject — this is the lenient read for already-validated echoes).
+    pub fn from_value(v: &Value) -> Option<TraceCtx> {
+        let trace_id = parse_hex16(v.get("id")?.as_str()?)?;
+        let span_id = parse_hex16(v.get("span")?.as_str()?)?;
+        Some(TraceCtx { trace_id, span_id })
+    }
+}
+
+/// Format a 64-bit id as 16 lowercase hex digits.
+pub fn hex16(x: u64) -> String {
+    format!("{x:016x}")
+}
+
+/// Parse exactly 16 lowercase hex digits.
+pub fn parse_hex16(s: &str) -> Option<u64> {
+    if s.len() != 16 || !s.bytes().all(|b| b.is_ascii_digit() || (b'a'..=b'f').contains(&b)) {
+        return None;
+    }
+    u64::from_str_radix(s, 16).ok()
+}
+
+/// Where recorded lines go: the bounded ring plus an optional file.
+struct Sink {
+    proc_label: String,
+    ring: VecDeque<String>,
+    file: Option<File>,
+}
+
+/// A lock-cheap structured tracer. Disabled (the initial state) it
+/// costs one atomic load per span; enabled it serializes each event
+/// under a short mutex hold.
+pub struct Tracer {
+    enabled: AtomicBool,
+    epoch: Instant,
+    next_id: AtomicU64,
+    sink: Mutex<Sink>,
+}
+
+impl Default for Tracer {
+    fn default() -> Tracer {
+        Tracer::new()
+    }
+}
+
+impl Tracer {
+    /// A fresh, disabled tracer.
+    pub fn new() -> Tracer {
+        // Seed ids from the wall clock and pid so independently-started
+        // processes (launcher + workers) cannot collide; ids never
+        // enter fingerprinted payloads, only the trace sink.
+        let wall = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_nanos() as u64)
+            .unwrap_or(0);
+        let seed = wall ^ (std::process::id() as u64) << 32;
+        Tracer {
+            enabled: AtomicBool::new(false),
+            epoch: Instant::now(),
+            next_id: AtomicU64::new(seed),
+            sink: Mutex::new(Sink { proc_label: String::new(), ring: VecDeque::new(), file: None }),
+        }
+    }
+
+    /// Is this tracer recording? The only cost a disabled hot path pays.
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Enable in-memory recording only (tests, ad-hoc probes).
+    pub fn enable_ring(&self, proc_label: &str) {
+        let mut sink = self.sink.lock().unwrap();
+        sink.proc_label = proc_label.to_string();
+        self.enabled.store(true, Ordering::Relaxed);
+    }
+
+    /// Enable recording with an NDJSON file sink (the `--trace-out`
+    /// path), labeling every event with `proc_label`.
+    pub fn enable_file(&self, path: &str, proc_label: &str) -> Result<()> {
+        let file = File::create(path)
+            .map_err(|e| Error::Config(format!("cannot create trace file `{path}`: {e}")))?;
+        let mut sink = self.sink.lock().unwrap();
+        sink.proc_label = proc_label.to_string();
+        sink.file = Some(file);
+        self.enabled.store(true, Ordering::Relaxed);
+        Ok(())
+    }
+
+    fn fresh_id(&self) -> u64 {
+        // SplitMix64 over an atomic counter: unique, well-mixed, and
+        // never zero (zero is reserved as "no id").
+        let mut z = self.next_id.fetch_add(1, Ordering::Relaxed);
+        z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        (z ^ (z >> 31)) | 1
+    }
+
+    /// Start a root span: a fresh trace id with no parent.
+    pub fn span(&self, name: &'static str) -> Span<'_> {
+        if !self.enabled() {
+            return Span::noop(name);
+        }
+        let ctx = TraceCtx { trace_id: self.fresh_id(), span_id: self.fresh_id() };
+        self.live_span(name, ctx, None)
+    }
+
+    /// Start a span under `parent`: same trace, parented to the
+    /// context's span (the cross-process link).
+    pub fn child_span(&self, name: &'static str, parent: TraceCtx) -> Span<'_> {
+        if !self.enabled() {
+            return Span::noop(name);
+        }
+        let ctx = TraceCtx { trace_id: parent.trace_id, span_id: self.fresh_id() };
+        self.live_span(name, ctx, Some(parent.span_id))
+    }
+
+    fn live_span(&self, name: &'static str, ctx: TraceCtx, parent: Option<u64>) -> Span<'_> {
+        Span {
+            tracer: Some(self),
+            name,
+            ctx,
+            parent,
+            t_us: self.epoch.elapsed().as_micros() as u64,
+            started: Instant::now(),
+            attrs: BTreeMap::new(),
+        }
+    }
+
+    /// Record an instant event (no duration) under `parent` if given.
+    pub fn event(&self, name: &'static str, parent: Option<TraceCtx>, attrs: &[(&str, Value)]) {
+        if !self.enabled() {
+            return;
+        }
+        let ctx = match parent {
+            Some(p) => TraceCtx { trace_id: p.trace_id, span_id: self.fresh_id() },
+            None => TraceCtx { trace_id: self.fresh_id(), span_id: self.fresh_id() },
+        };
+        let mut map = event_base("event", name, ctx, parent.map(|p| p.span_id));
+        map.insert(
+            "t_us".to_string(),
+            Value::Number(self.epoch.elapsed().as_micros() as u64 as f64),
+        );
+        if !attrs.is_empty() {
+            let mut a = BTreeMap::new();
+            for (k, v) in attrs {
+                a.insert((*k).to_string(), v.clone());
+            }
+            map.insert("attrs".to_string(), Value::Table(a));
+        }
+        self.record(map);
+    }
+
+    /// The in-memory ring, oldest first (tests and ad-hoc inspection).
+    pub fn ring(&self) -> Vec<String> {
+        self.sink.lock().unwrap().ring.iter().cloned().collect()
+    }
+
+    fn record(&self, mut map: BTreeMap<String, Value>) {
+        map.insert("tid".to_string(), Value::Number(thread_tag() as f64));
+        let mut sink = self.sink.lock().unwrap();
+        map.insert("proc".to_string(), Value::String(sink.proc_label.clone()));
+        let Ok(line) = Value::Table(map).to_json_string() else {
+            return; // an unserializable attr never takes the process down
+        };
+        if sink.ring.len() >= RING_CAPACITY {
+            sink.ring.pop_front();
+        }
+        sink.ring.push_back(line.clone());
+        if let Some(file) = sink.file.as_mut() {
+            // Best-effort: a full disk degrades tracing, never serving.
+            let _ = writeln!(file, "{line}");
+            let _ = file.flush();
+        }
+    }
+}
+
+fn event_base(
+    ev: &str,
+    name: &str,
+    ctx: TraceCtx,
+    parent: Option<u64>,
+) -> BTreeMap<String, Value> {
+    let mut map = BTreeMap::new();
+    map.insert("ev".to_string(), Value::String(ev.to_string()));
+    map.insert("name".to_string(), Value::String(name.to_string()));
+    map.insert("trace".to_string(), Value::String(hex16(ctx.trace_id)));
+    map.insert("span".to_string(), Value::String(hex16(ctx.span_id)));
+    if let Some(p) = parent {
+        map.insert("parent".to_string(), Value::String(hex16(p)));
+    }
+    map
+}
+
+/// Small sequential per-process thread tag (monotonic-clock traces
+/// need stable thread identity, not OS thread ids).
+fn thread_tag() -> u64 {
+    use std::cell::Cell;
+    static NEXT_TAG: AtomicU64 = AtomicU64::new(1);
+    thread_local! {
+        static TAG: Cell<u64> = const { Cell::new(0) };
+    }
+    TAG.with(|c| {
+        if c.get() == 0 {
+            c.set(NEXT_TAG.fetch_add(1, Ordering::Relaxed));
+        }
+        c.get()
+    })
+}
+
+/// An RAII span guard: records its event (with duration) on drop.
+/// No-op — no lock, no allocation beyond the struct — when the tracer
+/// is disabled.
+pub struct Span<'a> {
+    tracer: Option<&'a Tracer>,
+    name: &'static str,
+    ctx: TraceCtx,
+    parent: Option<u64>,
+    t_us: u64,
+    started: Instant,
+    attrs: BTreeMap<String, Value>,
+}
+
+impl Span<'_> {
+    fn noop(name: &'static str) -> Span<'static> {
+        Span {
+            tracer: None,
+            name,
+            ctx: TraceCtx { trace_id: 0, span_id: 0 },
+            parent: None,
+            t_us: 0,
+            started: Instant::now(),
+            attrs: BTreeMap::new(),
+        }
+    }
+
+    /// Is this span actually recording (tracer enabled at creation)?
+    pub fn is_recording(&self) -> bool {
+        self.tracer.is_some()
+    }
+
+    /// This span's propagatable context (zeros when not recording —
+    /// callers gate propagation on [`Span::is_recording`]).
+    pub fn ctx(&self) -> TraceCtx {
+        self.ctx
+    }
+
+    /// Attach an attribute (recorded with the span on drop).
+    pub fn attr(&mut self, key: &str, value: Value) {
+        if self.tracer.is_some() {
+            self.attrs.insert(key.to_string(), value);
+        }
+    }
+}
+
+impl Drop for Span<'_> {
+    fn drop(&mut self) {
+        let Some(tracer) = self.tracer else { return };
+        let mut map = event_base("span", self.name, self.ctx, self.parent);
+        map.insert("t_us".to_string(), Value::Number(self.t_us as f64));
+        map.insert(
+            "dur_us".to_string(),
+            Value::Number(self.started.elapsed().as_micros() as u64 as f64),
+        );
+        if !self.attrs.is_empty() {
+            map.insert("attrs".to_string(), Value::Table(std::mem::take(&mut self.attrs)));
+        }
+        tracer.record(map);
+    }
+}
+
+static GLOBAL: OnceLock<Tracer> = OnceLock::new();
+
+/// The process-wide tracer (disabled until [`init_file`] or
+/// [`Tracer::enable_ring`] flips it on).
+pub fn global() -> &'static Tracer {
+    GLOBAL.get_or_init(Tracer::new)
+}
+
+/// Enable the global tracer with an NDJSON file sink — the
+/// `--trace-out FILE` entry point.
+pub fn init_file(path: &str, proc_label: &str) -> Result<()> {
+    global().enable_file(path, proc_label)
+}
+
+/// Is the global tracer recording?
+pub fn enabled() -> bool {
+    global().enabled()
+}
+
+/// Start a root span on the global tracer.
+pub fn span(name: &'static str) -> Span<'static> {
+    global().span(name)
+}
+
+/// Start a child span on the global tracer.
+pub fn child_span(name: &'static str, parent: TraceCtx) -> Span<'static> {
+    global().child_span(name, parent)
+}
+
+/// Start a span for a served request: a child of the request's wire
+/// `trace` table when it carried a valid one, else a fresh root. The
+/// single entry point both serving cores call (so each core carries
+/// one audited determinism-lint suppression, not a scatter).
+pub fn server_span(name: &'static str, trace: Option<&Value>) -> Span<'static> {
+    match trace.and_then(TraceCtx::from_value) {
+        Some(parent) => child_span(name, parent),
+        None => span(name),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::parse_json;
+
+    #[test]
+    fn hex_ids_roundtrip_and_reject_junk() {
+        for x in [0u64, 1, 0xdead_beef, u64::MAX] {
+            assert_eq!(parse_hex16(&hex16(x)), Some(x));
+        }
+        for bad in ["", "123", "0123456789abcdeF", "0123456789abcdeg", "0123456789abcdef0"] {
+            assert_eq!(parse_hex16(bad), None, "{bad:?}");
+        }
+        let ctx = TraceCtx { trace_id: 7, span_id: 9 };
+        assert_eq!(TraceCtx::from_value(&ctx.to_value()), Some(ctx));
+        assert!(TraceCtx::from_value(&Value::Null).is_none());
+    }
+
+    #[test]
+    fn disabled_tracer_records_nothing() {
+        let t = Tracer::new();
+        {
+            let mut s = t.span("noop");
+            assert!(!s.is_recording());
+            s.attr("k", Value::Number(1.0));
+        }
+        t.event("nothing", None, &[]);
+        assert!(t.ring().is_empty());
+        assert!(!t.enabled());
+    }
+
+    #[test]
+    fn spans_record_schema_links_and_order() {
+        let t = Tracer::new();
+        t.enable_ring("unit-test");
+        let parent_ctx;
+        {
+            let mut root = t.span("root");
+            assert!(root.is_recording());
+            root.attr("points", Value::Number(12.0));
+            parent_ctx = root.ctx();
+            {
+                let child = t.child_span("child", parent_ctx);
+                assert_eq!(child.ctx().trace_id, parent_ctx.trace_id);
+                assert_ne!(child.ctx().span_id, parent_ctx.span_id);
+            } // child drops (records) first
+        } // then root
+        let ring = t.ring();
+        assert_eq!(ring.len(), 2);
+        let child = parse_json(&ring[0]).unwrap();
+        let root = parse_json(&ring[1]).unwrap();
+        assert_eq!(child.require_str("ev").unwrap(), "span");
+        assert_eq!(child.require_str("name").unwrap(), "child");
+        assert_eq!(child.require_str("proc").unwrap(), "unit-test");
+        assert_eq!(
+            child.require_str("parent").unwrap(),
+            hex16(parent_ctx.span_id),
+            "child links to its parent span"
+        );
+        assert_eq!(child.require_str("trace").unwrap(), hex16(parent_ctx.trace_id));
+        assert!(child.require_f64("t_us").unwrap() >= 0.0);
+        assert!(child.require_f64("dur_us").unwrap() >= 0.0);
+        assert!(child.require_f64("tid").unwrap() >= 1.0);
+        assert!(root.get("parent").is_none(), "roots carry no parent");
+        assert_eq!(root.require_f64("attrs.points").unwrap(), 12.0);
+    }
+
+    #[test]
+    fn instant_events_and_ring_bound() {
+        let t = Tracer::new();
+        t.enable_ring("ring");
+        let root = t.span("anchor");
+        let ctx = root.ctx();
+        for i in 0..(RING_CAPACITY + 10) {
+            t.event("tick", Some(ctx), &[("i", Value::Number(i as f64))]);
+        }
+        drop(root);
+        let ring = t.ring();
+        assert_eq!(ring.len(), RING_CAPACITY, "ring is bounded");
+        let last = parse_json(ring.last().unwrap()).unwrap();
+        assert_eq!(last.require_str("ev").unwrap(), "span");
+        let ev = parse_json(&ring[0]).unwrap();
+        assert_eq!(ev.require_str("ev").unwrap(), "event");
+        assert!(ev.get("dur_us").is_none(), "instant events carry no duration");
+    }
+
+    #[test]
+    fn ids_are_unique_and_nonzero() {
+        let t = Tracer::new();
+        let mut seen = std::collections::BTreeSet::new();
+        for _ in 0..10_000 {
+            let id = t.fresh_id();
+            assert_ne!(id, 0);
+            assert!(seen.insert(id), "duplicate id {id:#x}");
+        }
+    }
+
+    #[test]
+    fn file_sink_writes_parseable_ndjson() {
+        let dir = std::env::temp_dir().join(format!("cimdse-obs-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trace.ndjson");
+        let t = Tracer::new();
+        t.enable_file(path.to_str().unwrap(), "file-test").unwrap();
+        {
+            let mut s = t.span("write");
+            s.attr("n", Value::Number(3.0));
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 1);
+        let doc = parse_json(lines[0]).unwrap();
+        assert_eq!(doc.require_str("name").unwrap(), "write");
+        assert_eq!(doc.require_str("proc").unwrap(), "file-test");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

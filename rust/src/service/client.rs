@@ -211,12 +211,30 @@ impl Client {
         model: Option<&AdcModel>,
         selector: ShardSelector,
     ) -> Result<ShardArtifact> {
+        self.shard_traced(spec, model, selector, None)
+    }
+
+    /// [`Client::shard`] with an optional trace context attached to the
+    /// request frame, so the worker's serving span (and its pool chunk
+    /// spans) parent under the launcher's shard span — the cross-process
+    /// link that stitches a fleet run into one trace forest. `None`
+    /// sends the exact frame [`Client::shard`] always has.
+    pub fn shard_traced(
+        &mut self,
+        spec: &SweepSpec,
+        model: Option<&AdcModel>,
+        selector: ShardSelector,
+        trace: Option<&Value>,
+    ) -> Result<ShardArtifact> {
         let mut map = std::collections::BTreeMap::new();
         map.insert("op".to_string(), Value::String("shard".to_string()));
         map.insert("spec".to_string(), spec.to_value());
         map.insert("shard".to_string(), Value::String(selector.to_string()));
         if let Some(m) = model {
             map.insert("model".to_string(), protocol::model_to_value(m));
+        }
+        if let Some(t) = trace {
+            map.insert("trace".to_string(), t.clone());
         }
         let result = self.call(&Value::Table(map))?;
         let artifact = result

@@ -233,6 +233,13 @@ pub struct PendingJob {
     /// Trips when this request is cancelled (cancel frame, disconnect,
     /// or server drain); checked at chunk boundaries by the fold.
     pub cancel: CancelToken,
+    /// The validated wire `trace` table, if the frame carried one —
+    /// echoed on every frame answering this request and parented by the
+    /// serving span.
+    pub trace: Option<Value>,
+    /// When the frame was parsed — the latency origin for requests
+    /// answered without ever dispatching (cancelled while queued).
+    pub queued_at: Instant,
 }
 
 /// The in-flight residue of a [`PendingJob`] handed to a runner thread:

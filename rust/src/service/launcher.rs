@@ -327,6 +327,7 @@ fn worker_exited(state: &Mutex<LaunchState>) {
 }
 
 /// One leased shard against one worker: (re)connect, request, validate.
+#[allow(clippy::too_many_arguments)]
 fn run_one(
     client: &mut Option<Client>,
     addr: &str,
@@ -336,6 +337,7 @@ fn run_one(
     fingerprint: &str,
     index: usize,
     options: &LaunchOptions,
+    trace: Option<&Value>,
 ) -> Result<ShardArtifact> {
     if client.is_none() {
         let mut fresh = Client::connect_with_timeout(addr, options.read_timeout)?;
@@ -352,7 +354,7 @@ fn run_one(
     let artifact = client
         .as_mut()
         .expect("connected above")
-        .shard(spec, Some(model), selector)?;
+        .shard_traced(spec, Some(model), selector, trace)?;
     // `Client::shard` already validated the artifact against itself
     // (fingerprint vs embedded spec/model, range vs plan, payload
     // checksum); these two checks pin it to *this* sweep and *this*
@@ -375,6 +377,7 @@ fn run_one(
     Ok(artifact)
 }
 
+#[allow(clippy::too_many_arguments)]
 fn worker_loop(
     w: usize,
     addr: &str,
@@ -386,6 +389,7 @@ fn worker_loop(
     state: &Mutex<LaunchState>,
     report: &Mutex<WorkerReport>,
     started: Instant,
+    launch_ctx: Option<crate::obs::TraceCtx>,
 ) {
     let n_workers = options.workers.len();
     let mut client: Option<Client> = None;
@@ -400,7 +404,26 @@ fn worker_loop(
             Lease::Shard(i) => i,
         };
         let shard_started = Instant::now();
-        match run_one(&mut client, addr, spec, model, plan, fingerprint, index, options) {
+        // One "shard" span per lease attempt, under the launch root.
+        // Its context rides the request frame (`trace`), so the worker's
+        // serving span — and that worker's pool chunk spans — parent
+        // here, stitching the fleet into one cross-process forest.
+        let mut shard_span = launch_ctx.map(|ctx| {
+            let mut s = crate::obs::child_span("shard", ctx);
+            s.attr("index", Value::Number(index as f64));
+            s.attr("worker", Value::String(addr.to_string()));
+            s
+        });
+        let trace = shard_span.as_ref().map(|s| s.ctx().to_value());
+        let outcome = run_one(
+            &mut client, addr, spec, model, plan, fingerprint, index, options,
+            trace.as_ref(),
+        );
+        if let Some(s) = shard_span.as_mut() {
+            s.attr("ok", Value::Bool(outcome.is_ok()));
+        }
+        drop(shard_span);
+        match outcome {
             Ok(artifact) => {
                 // Persist before counting the shard complete, so a
                 // launcher killed between the two leaves a resumable
@@ -497,6 +520,14 @@ pub fn run_distributed_sweep(
         options.workers.iter().map(|a| Mutex::new(WorkerReport::new(a))).collect();
     if computed > 0 {
         let started = Instant::now();
+        // The root of the fleet's trace forest: held across the whole
+        // scope so its duration is the launch wall time. Every worker
+        // thread parents its shard spans here.
+        let mut launch_span = crate::obs::span("launch");
+        launch_span.attr("n_shards", Value::Number(plan.n_shards() as f64));
+        launch_span.attr("workers", Value::Number(options.workers.len() as f64));
+        launch_span.attr("resumed", Value::Number(resumed as f64));
+        let launch_ctx = launch_span.is_recording().then(|| launch_span.ctx());
         std::thread::scope(|scope| {
             for (w, addr) in options.workers.iter().enumerate() {
                 let (state, report) = (&state, &reports[w]);
@@ -504,11 +535,12 @@ pub fn run_distributed_sweep(
                 scope.spawn(move || {
                     worker_loop(
                         w, addr, spec, model, plan, fingerprint, options, state, report,
-                        started,
+                        started, launch_ctx,
                     );
                 });
             }
         });
+        drop(launch_span);
     }
     let state = state.into_inner().expect("no worker thread panicked");
     if let Some(message) = state.failed {

@@ -1,10 +1,15 @@
-//! Service observability: request counters, latency quantiles, cache
-//! stats, uptime — served as a `metrics` frame and printable.
+//! Service observability: request counters, log2 latency histograms,
+//! per-op/outcome and per-stage breakdowns, pool profiling, cache stats,
+//! uptime — served as a `metrics` frame, printable for humans, and
+//! exportable in the Prometheus text exposition format.
 //!
-//! Latencies are kept in a fixed-size ring (the most recent
-//! [`LATENCY_WINDOW`] requests); p50/p99 come from
-//! [`crate::stats::quantile`] over a snapshot of the ring, so the cost
-//! of a `metrics` request is O(window), never O(history).
+//! Latencies live in fixed-bucket log2 histograms
+//! ([`crate::obs::hist::Hist`]): constant memory, exact counts over the
+//! server's whole life (no sliding window), and mergeable across
+//! servers. Every frame feeds the histograms — successes, typed error
+//! frames, and cancellations, each under an `outcome` label — so a
+//! daemon drowning in rejects can no longer report healthy quantiles
+//! (the old 4096-sample ring counted successes only).
 
 use std::collections::BTreeMap;
 use std::sync::Mutex;
@@ -12,27 +17,31 @@ use std::time::Instant;
 
 use crate::config::Value;
 use crate::error::Result;
-use crate::stats::quantile;
+use crate::obs::hist::Hist;
 
 use super::cache::CacheStats;
 
-/// Number of recent request latencies retained for the quantiles.
-pub const LATENCY_WINDOW: usize = 4096;
+/// Outcome labels used in the per-op histogram table.
+pub const OUTCOMES: &[&str] = &["ok", "error", "cancelled"];
+
+/// Request pipeline stages timed by both serving cores.
+pub const STAGES: &[&str] = &["parse", "dispatch", "compute", "write"];
 
 #[derive(Default)]
 struct Inner {
     /// Successful requests per op.
     requests: BTreeMap<String, u64>,
-    /// Error frames sent (malformed/unknown/rejected requests).
+    /// Error frames sent (malformed/unknown/rejected/cancelled requests).
     error_frames: u64,
     /// Connections accepted over the server's lifetime.
     connections: u64,
-    /// Ring buffer of request latencies (seconds).
-    latencies: Vec<f64>,
-    /// Next ring slot to overwrite once the ring is full.
-    next_slot: usize,
-    /// Total latencies ever recorded (>= ring occupancy).
-    recorded: u64,
+    /// Latency of every frame served, any outcome.
+    overall: Hist,
+    /// Latency by `(op, outcome)`; outcome is one of [`OUTCOMES`]. Frames
+    /// rejected before an op could be parsed land under op `"unknown"`.
+    by_op: BTreeMap<(String, &'static str), Hist>,
+    /// Time spent per pipeline stage (one of [`STAGES`]).
+    stages: BTreeMap<&'static str, Hist>,
     /// Sweep/shard fold chunks completed (each one a cancellation
     /// checkpoint — a stalling counter is how tests prove an abandoned
     /// shard stopped burning pool cycles).
@@ -41,8 +50,9 @@ struct Inner {
     work_points: u64,
     /// Requests answered with a `cancelled` error frame.
     cancelled: u64,
-    /// High-water mark of any connection's response write queue (bytes)
-    /// — event-loop core only; bounded by its backpressure cap.
+    /// High-water mark of any connection's response write queue (bytes).
+    /// Tracked on both cores: the event loop measures its backpressure
+    /// queue, the threads core the serialized line it writes.
     write_queue_peak_bytes: u64,
 }
 
@@ -73,19 +83,43 @@ impl ServiceMetrics {
     pub fn record_request(&self, op: &str, latency_s: f64) {
         let mut inner = self.inner.lock().unwrap();
         *inner.requests.entry(op.to_string()).or_insert(0) += 1;
-        inner.recorded += 1;
-        if inner.latencies.len() < LATENCY_WINDOW {
-            inner.latencies.push(latency_s);
-        } else {
-            let slot = inner.next_slot;
-            inner.latencies[slot] = latency_s;
-            inner.next_slot = (slot + 1) % LATENCY_WINDOW;
-        }
+        inner.overall.observe(latency_s);
+        inner.by_op.entry((op.to_string(), "ok")).or_default().observe(latency_s);
     }
 
-    /// Record an error frame sent to a client.
-    pub fn record_error_frame(&self) {
-        self.inner.lock().unwrap().error_frames += 1;
+    /// Record an error frame sent to a client, with the time spent
+    /// producing it. `op` is the request's op when one was parsed
+    /// (`None` for malformed/oversized frames, tallied as `"unknown"`).
+    pub fn record_error_frame(&self, op: Option<&str>, latency_s: f64) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.error_frames += 1;
+        inner.overall.observe(latency_s);
+        inner
+            .by_op
+            .entry((op.unwrap_or("unknown").to_string(), "error"))
+            .or_default()
+            .observe(latency_s);
+    }
+
+    /// Record a request answered with a `cancelled` error frame: bumps
+    /// both the cancellation counter and the error-frame tally (a
+    /// cancellation *is* an error frame on the wire).
+    pub fn record_cancelled_frame(&self, op: Option<&str>, latency_s: f64) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.cancelled += 1;
+        inner.error_frames += 1;
+        inner.overall.observe(latency_s);
+        inner
+            .by_op
+            .entry((op.unwrap_or("unknown").to_string(), "cancelled"))
+            .or_default()
+            .observe(latency_s);
+    }
+
+    /// Record time spent in one pipeline stage (one of [`STAGES`]).
+    pub fn record_stage(&self, stage: &'static str, dur_s: f64) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.stages.entry(stage).or_default().observe(dur_s);
     }
 
     /// Record one completed sweep/shard fold chunk of `points` points.
@@ -93,11 +127,6 @@ impl ServiceMetrics {
         let mut inner = self.inner.lock().unwrap();
         inner.work_chunks += 1;
         inner.work_points += points as u64;
-    }
-
-    /// Record a request answered with a `cancelled` error frame.
-    pub fn record_cancelled(&self) {
-        self.inner.lock().unwrap().cancelled += 1;
     }
 
     /// Raise the write-queue high-water mark to `bytes` if it is higher
@@ -109,17 +138,18 @@ impl ServiceMetrics {
 
     /// Snapshot everything as the `metrics` frame payload.
     pub fn snapshot(&self, cache: &CacheStats) -> Value {
-        // Copy what we need and release the lock before the O(n log n)
-        // quantile sorts, so connection threads recording latencies are
-        // never stalled behind a metrics request.
-        let (requests_counts, error_frames, connections, latencies, recorded, work, peak) = {
+        // Clone the tallies and release the lock before deriving
+        // quantiles and building the payload, so connection threads
+        // recording latencies are never stalled behind a metrics request.
+        let (requests_counts, error_frames, connections, overall, by_op, stage_hists, work, peak) = {
             let inner = self.inner.lock().unwrap();
             (
                 inner.requests.clone(),
                 inner.error_frames,
                 inner.connections,
-                inner.latencies.clone(),
-                inner.recorded,
+                inner.overall.clone(),
+                inner.by_op.clone(),
+                inner.stages.clone(),
                 (inner.work_chunks, inner.work_points, inner.cancelled),
                 inner.write_queue_peak_bytes,
             )
@@ -130,12 +160,24 @@ impl ServiceMetrics {
             requests.insert(op.clone(), Value::Number(*n as f64));
             total += n;
         }
-        let mut latency = BTreeMap::new();
-        latency.insert("samples".to_string(), Value::Number(latencies.len() as f64));
-        latency.insert("recorded".to_string(), Value::Number(recorded as f64));
-        if !latencies.is_empty() {
-            latency.insert("p50_s".to_string(), Value::Number(quantile(&latencies, 0.50)));
-            latency.insert("p99_s".to_string(), Value::Number(quantile(&latencies, 0.99)));
+        // The latency table is the overall histogram payload plus the
+        // legacy `samples`/`recorded` keys (both now the exact lifetime
+        // count: histograms never evict).
+        let mut latency = match overall.to_value() {
+            Value::Table(t) => t,
+            _ => BTreeMap::new(),
+        };
+        latency.insert("samples".to_string(), Value::Number(overall.count() as f64));
+        latency.insert("recorded".to_string(), Value::Number(overall.count() as f64));
+        let mut ops: BTreeMap<String, BTreeMap<String, Value>> = BTreeMap::new();
+        for ((op, outcome), h) in &by_op {
+            ops.entry(op.clone()).or_default().insert(outcome.to_string(), h.to_value());
+        }
+        let ops: BTreeMap<String, Value> =
+            ops.into_iter().map(|(op, t)| (op, Value::Table(t))).collect();
+        let mut stages = BTreeMap::new();
+        for (stage, h) in &stage_hists {
+            stages.insert(stage.to_string(), h.to_value());
         }
         let mut cache_map = BTreeMap::new();
         cache_map.insert("hits".to_string(), Value::Number(cache.hits as f64));
@@ -151,6 +193,8 @@ impl ServiceMetrics {
         map.insert("requests".to_string(), Value::Table(requests));
         map.insert("error_frames".to_string(), Value::Number(error_frames as f64));
         map.insert("latency".to_string(), Value::Table(latency));
+        map.insert("ops".to_string(), Value::Table(ops));
+        map.insert("stages".to_string(), Value::Table(stages));
         map.insert("cache".to_string(), Value::Table(cache_map));
         let (work_chunks, work_points, cancelled) = work;
         let mut work_map = BTreeMap::new();
@@ -159,6 +203,7 @@ impl ServiceMetrics {
         work_map.insert("cancelled".to_string(), Value::Number(cancelled as f64));
         map.insert("work".to_string(), Value::Table(work_map));
         map.insert("write_queue_peak_bytes".to_string(), Value::Number(peak as f64));
+        map.insert("pool".to_string(), pool_stats_value());
         Value::Table(map)
     }
 
@@ -194,6 +239,17 @@ impl ServiceMetrics {
             )),
             _ => out.push_str("  latency         (no samples yet)\n"),
         }
+        if let Some(Value::Table(stages)) = v.get("stages") {
+            let mut parts = Vec::new();
+            for (stage, h) in stages {
+                if let Some(p50) = h.get("p50_s").and_then(Value::as_f64) {
+                    parts.push(format!("{stage} p50 {}", crate::bench_util::fmt_secs(p50)));
+                }
+            }
+            if !parts.is_empty() {
+                out.push_str(&format!("  stages          {}\n", parts.join(", ")));
+            }
+        }
         out.push_str(&format!(
             "  cache           {:.0} hits, {:.0} misses, {:.0} evictions, {:.0}/{:.0} entries\n",
             num("cache.hits")?,
@@ -213,8 +269,186 @@ impl ServiceMetrics {
         if let Some(peak) = v.get("write_queue_peak_bytes").and_then(Value::as_f64) {
             out.push_str(&format!("  write queue     {peak:.0} bytes peak\n"));
         }
+        if let Some(workers) = v.get("pool.workers").and_then(Value::as_f64) {
+            let chunks = v.get("pool.chunks").and_then(Value::as_f64).unwrap_or(0.0);
+            let steals = v.get("pool.steals").and_then(Value::as_f64).unwrap_or(0.0);
+            let idle = v.get("pool.idle_s").and_then(Value::as_f64).unwrap_or(0.0);
+            out.push_str(&format!(
+                "  pool            {workers:.0} workers, {chunks:.0} chunks ({steals:.0} stolen), {} idle\n",
+                crate::bench_util::fmt_secs(idle)
+            ));
+        }
         Ok(out)
     }
+
+    /// Render a `metrics` frame payload in the Prometheus text
+    /// exposition format (`cimdse query --op metrics --format
+    /// prometheus`). Counters and gauges come straight off the payload;
+    /// histograms are re-emitted with *cumulative* `le` buckets as the
+    /// format requires. Like [`ServiceMetrics::render`], a static
+    /// function over the [`Value`] so the client renders exactly what
+    /// the server measured.
+    pub fn render_prometheus(v: &Value) -> Result<String> {
+        let num = |path: &str| -> Result<f64> { v.require_f64(path) };
+        let mut out = String::new();
+        prom_type(&mut out, "cimdse_uptime_seconds", "gauge");
+        prom_line(&mut out, "cimdse_uptime_seconds", &[], num("uptime_s")?);
+        prom_type(&mut out, "cimdse_connections_total", "counter");
+        prom_line(&mut out, "cimdse_connections_total", &[], num("connections")?);
+        prom_type(&mut out, "cimdse_requests_total", "counter");
+        if let Some(Value::Table(requests)) = v.get("requests") {
+            for (op, n) in requests {
+                if let Some(n) = n.as_f64() {
+                    prom_line(&mut out, "cimdse_requests_total", &[("op", op)], n);
+                }
+            }
+        }
+        prom_type(&mut out, "cimdse_error_frames_total", "counter");
+        prom_line(&mut out, "cimdse_error_frames_total", &[], num("error_frames")?);
+        prom_type(&mut out, "cimdse_request_duration_seconds", "histogram");
+        prom_hist(&mut out, "cimdse_request_duration_seconds", &[], v.get("latency"))?;
+        prom_type(&mut out, "cimdse_op_duration_seconds", "histogram");
+        if let Some(Value::Table(ops)) = v.get("ops") {
+            for (op, outcomes) in ops {
+                if let Value::Table(outcomes) = outcomes {
+                    for (outcome, h) in outcomes {
+                        prom_hist(
+                            &mut out,
+                            "cimdse_op_duration_seconds",
+                            &[("op", op), ("outcome", outcome)],
+                            Some(h),
+                        )?;
+                    }
+                }
+            }
+        }
+        prom_type(&mut out, "cimdse_stage_duration_seconds", "histogram");
+        if let Some(Value::Table(stages)) = v.get("stages") {
+            for (stage, h) in stages {
+                prom_hist(&mut out, "cimdse_stage_duration_seconds", &[("stage", stage)], Some(h))?;
+            }
+        }
+        for (key, name) in [
+            ("cache.hits", "cimdse_cache_hits_total"),
+            ("cache.misses", "cimdse_cache_misses_total"),
+            ("cache.evictions", "cimdse_cache_evictions_total"),
+            ("cache.entries", "cimdse_cache_entries"),
+            ("work.chunks", "cimdse_work_chunks_total"),
+            ("work.points", "cimdse_work_points_total"),
+            ("work.cancelled", "cimdse_work_cancelled_total"),
+        ] {
+            if let Some(x) = v.get(key).and_then(Value::as_f64) {
+                let kind = if name.ends_with("_total") { "counter" } else { "gauge" };
+                prom_type(&mut out, name, kind);
+                prom_line(&mut out, name, &[], x);
+            }
+        }
+        if let Some(peak) = v.get("write_queue_peak_bytes").and_then(Value::as_f64) {
+            prom_type(&mut out, "cimdse_write_queue_peak_bytes", "gauge");
+            prom_line(&mut out, "cimdse_write_queue_peak_bytes", &[], peak);
+        }
+        if let Some(per_worker) = v.get("pool.per_worker").and_then(Value::as_array) {
+            prom_type(&mut out, "cimdse_pool_chunks_total", "counter");
+            prom_type(&mut out, "cimdse_pool_steals_total", "counter");
+            prom_type(&mut out, "cimdse_pool_idle_seconds_total", "counter");
+            for (i, w) in per_worker.iter().enumerate() {
+                let worker = format!("{i}");
+                for (key, name) in [
+                    ("chunks", "cimdse_pool_chunks_total"),
+                    ("steals", "cimdse_pool_steals_total"),
+                    ("idle_s", "cimdse_pool_idle_seconds_total"),
+                ] {
+                    if let Some(x) = w.get(key).and_then(Value::as_f64) {
+                        prom_line(&mut out, name, &[("worker", &worker)], x);
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// The global pool's profiling counters as a `metrics` payload table.
+/// Always present (both cores use [`crate::exec::Pool::global`] for
+/// sweep/shard folds), so cross-core `metrics` frames stay
+/// shape-identical.
+fn pool_stats_value() -> Value {
+    let stats = crate::exec::Pool::global().stats();
+    let (mut chunks, mut steals, mut idle_ns) = (0u64, 0u64, 0u64);
+    let mut per_worker = Vec::new();
+    for w in &stats.workers {
+        chunks += w.chunks;
+        steals += w.steals;
+        idle_ns += w.idle_ns;
+        let mut t = BTreeMap::new();
+        t.insert("chunks".to_string(), Value::Number(w.chunks as f64));
+        t.insert("steals".to_string(), Value::Number(w.steals as f64));
+        t.insert("idle_s".to_string(), Value::Number(w.idle_ns as f64 / 1e9));
+        per_worker.push(Value::Table(t));
+    }
+    let mut map = BTreeMap::new();
+    map.insert("workers".to_string(), Value::Number(stats.workers.len() as f64));
+    map.insert("chunks".to_string(), Value::Number(chunks as f64));
+    map.insert("steals".to_string(), Value::Number(steals as f64));
+    map.insert("idle_s".to_string(), Value::Number(idle_ns as f64 / 1e9));
+    map.insert("per_worker".to_string(), Value::Array(per_worker));
+    Value::Table(map)
+}
+
+/// One `# TYPE` comment line of the exposition.
+fn prom_type(out: &mut String, name: &str, kind: &str) {
+    out.push_str(&format!("# TYPE {name} {kind}\n"));
+}
+
+/// One sample line: `name{label="v",...} value`. Values are printed in
+/// scientific notation (an explicit float format, which every
+/// Prometheus parser accepts).
+fn prom_line(out: &mut String, name: &str, labels: &[(&str, &str)], value: f64) {
+    out.push_str(name);
+    if !labels.is_empty() {
+        out.push('{');
+        for (i, (k, val)) in labels.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!("{k}=\"{val}\""));
+        }
+        out.push('}');
+    }
+    out.push_str(&format!(" {value:e}\n"));
+}
+
+/// Emit one histogram (from its `metrics`-payload table) as cumulative
+/// `_bucket{le=...}` lines plus `_sum`/`_count`. The payload carries
+/// non-empty buckets only; the mandatory `le="+Inf"` closing bucket is
+/// synthesized from the exact total count.
+fn prom_hist(out: &mut String, name: &str, labels: &[(&str, &str)], h: Option<&Value>) -> Result<()> {
+    let Some(h) = h else {
+        return Ok(());
+    };
+    let count = h.require_f64("count")?;
+    let sum = h.require_f64("sum_s")?;
+    let mut cum = 0.0;
+    if let Some(buckets) = h.get("buckets").and_then(Value::as_array) {
+        for b in buckets {
+            // Rows without `le_s` are the overflow bucket (+inf): covered
+            // by the synthesized closing bucket below.
+            let Some(le) = b.get("le_s").and_then(Value::as_f64) else {
+                continue;
+            };
+            cum += b.require_f64("count")?;
+            let le = format!("{le:e}");
+            let mut lab = labels.to_vec();
+            lab.push(("le", le.as_str()));
+            prom_line(out, &format!("{name}_bucket"), &lab, cum);
+        }
+    }
+    let mut lab = labels.to_vec();
+    lab.push(("le", "+Inf"));
+    prom_line(out, &format!("{name}_bucket"), &lab, count);
+    prom_line(out, &format!("{name}_sum"), labels, sum);
+    prom_line(out, &format!("{name}_count"), labels, count);
+    Ok(())
 }
 
 #[cfg(test)]
@@ -234,7 +468,7 @@ mod tests {
             m.record_request("eval", (i + 1) as f64 * 1e-3);
         }
         m.record_request("sweep", 0.5);
-        m.record_error_frame();
+        m.record_error_frame(Some("eval"), 1e-4);
         let v = m.snapshot(&stats());
         assert_eq!(v.require_f64("requests_total").unwrap(), 101.0);
         assert_eq!(v.require_f64("requests.eval").unwrap(), 100.0);
@@ -246,23 +480,51 @@ mod tests {
         let p99 = v.require_f64("latency.p99_s").unwrap();
         assert!(p50 > 0.0 && p99 >= p50, "p50={p50} p99={p99}");
         assert!(v.require_f64("uptime_s").unwrap() >= 0.0);
+        // Histograms never evict: samples == recorded == every frame,
+        // including the error frame.
+        assert_eq!(v.require_f64("latency.samples").unwrap(), 102.0);
+        assert_eq!(v.require_f64("latency.recorded").unwrap(), 102.0);
+        // The pool table is always present and shape-stable.
+        assert!(v.require_f64("pool.workers").unwrap() >= 1.0);
+    }
+
+    /// Regression test (the old ring counted successes only): error and
+    /// cancelled frames feed the latency histograms under their own
+    /// outcome label.
+    #[test]
+    fn error_and_cancelled_frames_feed_latency() {
+        let m = ServiceMetrics::new();
+        m.record_request("eval", 1e-3);
+        m.record_error_frame(None, 2e-3);
+        m.record_error_frame(Some("sweep"), 3e-3);
+        m.record_cancelled_frame(Some("sweep"), 4e-3);
+        let v = m.snapshot(&stats());
+        // 1 ok + 2 errors + 1 cancelled, all in the overall histogram.
+        assert_eq!(v.require_f64("latency.samples").unwrap(), 4.0);
+        // A cancellation is an error frame on the wire.
+        assert_eq!(v.require_f64("error_frames").unwrap(), 3.0);
+        assert_eq!(v.require_f64("work.cancelled").unwrap(), 1.0);
+        // Per-op/outcome breakdown: op-less rejects land under "unknown".
+        assert_eq!(v.require_f64("ops.eval.ok.count").unwrap(), 1.0);
+        assert_eq!(v.require_f64("ops.unknown.error.count").unwrap(), 1.0);
+        assert_eq!(v.require_f64("ops.sweep.error.count").unwrap(), 1.0);
+        assert_eq!(v.require_f64("ops.sweep.cancelled.count").unwrap(), 1.0);
+        // Only successes count toward `requests`.
+        assert_eq!(v.require_f64("requests_total").unwrap(), 1.0);
     }
 
     #[test]
-    fn latency_ring_is_bounded() {
+    fn stage_histograms_accumulate() {
         let m = ServiceMetrics::new();
-        for i in 0..(LATENCY_WINDOW + 100) {
-            m.record_request("eval", i as f64);
-        }
+        m.record_stage("parse", 1e-6);
+        m.record_stage("parse", 2e-6);
+        m.record_stage("compute", 5e-3);
         let v = m.snapshot(&stats());
-        assert_eq!(v.require_f64("latency.samples").unwrap(), LATENCY_WINDOW as f64);
-        assert_eq!(
-            v.require_f64("latency.recorded").unwrap(),
-            (LATENCY_WINDOW + 100) as f64
-        );
-        // The oldest 100 samples were overwritten, so the minimum
-        // surviving latency is >= 100.
-        assert!(v.require_f64("latency.p50_s").unwrap() >= 100.0);
+        assert_eq!(v.require_f64("stages.parse.count").unwrap(), 2.0);
+        assert_eq!(v.require_f64("stages.compute.count").unwrap(), 1.0);
+        let text = ServiceMetrics::render(&v).unwrap();
+        assert!(text.contains("stages          "), "{text}");
+        assert!(text.contains("parse p50"), "{text}");
     }
 
     #[test]
@@ -271,7 +533,7 @@ mod tests {
         m.record_chunk(64);
         m.record_chunk(64);
         m.record_chunk(8);
-        m.record_cancelled();
+        m.record_cancelled_frame(Some("sweep"), 1e-3);
         m.note_write_queue_peak(1024);
         m.note_write_queue_peak(512); // lower: peak must not regress
         let v = m.snapshot(&stats());
@@ -294,10 +556,47 @@ mod tests {
         assert!(text.contains("requests        2 total (eval 2)"), "{text}");
         assert!(text.contains("cache           3 hits, 2 misses"), "{text}");
         assert!(text.contains("latency         p50"), "{text}");
+        assert!(text.contains("pool            "), "{text}");
         // Renders an empty snapshot too (no latency samples).
         let empty = ServiceMetrics::new();
         let text =
             ServiceMetrics::render(&empty.snapshot(&CacheStats::default())).unwrap();
         assert!(text.contains("(no samples yet)"), "{text}");
+    }
+
+    #[test]
+    fn prometheus_exposition_is_wellformed() {
+        let m = ServiceMetrics::new();
+        m.record_request("eval", 1e-3);
+        m.record_request("eval", 8e-3);
+        m.record_error_frame(None, 1e-5);
+        m.record_stage("parse", 1e-6);
+        m.record_chunk(16);
+        let text = ServiceMetrics::render_prometheus(&m.snapshot(&stats())).unwrap();
+        assert!(text.contains("# TYPE cimdse_request_duration_seconds histogram"), "{text}");
+        assert!(text.contains("cimdse_requests_total{op=\"eval\"} 2e0"), "{text}");
+        assert!(text.contains("le=\"+Inf\"} 3e0"), "{text}");
+        assert!(text.contains("cimdse_request_duration_seconds_count 3e0"), "{text}");
+        assert!(text.contains("op=\"unknown\",outcome=\"error\""), "{text}");
+        assert!(text.contains("stage=\"parse\""), "{text}");
+        assert!(text.contains("cimdse_work_chunks_total 1e0"), "{text}");
+        assert!(text.contains("cimdse_pool_chunks_total{worker=\"0\"}"), "{text}");
+        // Every non-comment line is `name[{labels}] value`.
+        for line in text.lines() {
+            if line.starts_with('#') {
+                continue;
+            }
+            let (series, value) = line.rsplit_once(' ').expect("sample line has a value");
+            assert!(!series.is_empty(), "{line}");
+            assert!(value == "+Inf" || value.parse::<f64>().is_ok(), "{line}");
+        }
+        // Bucket lines are cumulative: the +Inf bucket equals _count.
+        let inf: f64 = text
+            .lines()
+            .find(|l| l.starts_with("cimdse_request_duration_seconds_bucket") && l.contains("+Inf"))
+            .and_then(|l| l.rsplit_once(' '))
+            .map(|(_, v)| v.parse().unwrap())
+            .unwrap();
+        assert_eq!(inf, 3.0);
     }
 }

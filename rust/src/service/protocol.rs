@@ -28,6 +28,20 @@
 //! request answers with a [`CODE_CANCELLED`] error frame. See
 //! `rust/docs/protocol.md` for the v2 grammar and compatibility table.
 //!
+//! ## Trace context
+//!
+//! Any request frame may carry an optional `trace` field: a table
+//! `{"id": <16-hex>, "span": <16-hex>}` naming the distributed trace
+//! the request belongs to and the caller-side span to parent
+//! server-side work under ([`frame_trace`]). The validated table is
+//! echoed verbatim on every frame the request produces — the final
+//! response *or* error frame and any interim `progress` frames — so a
+//! launcher can stitch a fleet's frames into one trace forest
+//! (`cimdse trace`; see [`crate::obs`]). A malformed `trace` is a
+//! [`CODE_BAD_REQUEST`] whose error frame carries no echo. Frames
+//! without the field are byte-identical to the pre-trace protocol:
+//! the key is simply never inserted.
+//!
 //! ## Float convention
 //!
 //! Request floats may be JSON numbers *or* 16-hex-digit IEEE-754 bit
@@ -317,6 +331,41 @@ pub fn frame_id(v: &Value) -> Option<Value> {
     }
 }
 
+/// The optional `trace` context of a request frame, validated.
+///
+/// Absent or null is the common untraced case (`Ok(None)`); otherwise
+/// the field must be a table holding exactly `id` and `span`, each 16
+/// lowercase hex digits, or the frame is rejected with
+/// [`CODE_BAD_REQUEST`]. The validated table is echoed verbatim on
+/// every frame the request produces (see the module docs).
+pub fn frame_trace(v: &Value) -> Result<Option<Value>, Reject> {
+    let t = match v.get("trace") {
+        None | Some(Value::Null) => return Ok(None),
+        Some(t) => t,
+    };
+    let Value::Table(map) = t else {
+        return Err(Reject::bad("`trace` is not a table"));
+    };
+    if map.len() != 2 || !map.contains_key("id") || !map.contains_key("span") {
+        return Err(Reject::bad("`trace` must hold exactly `id` and `span`"));
+    }
+    for key in ["id", "span"] {
+        let ok = map
+            .get(key)
+            .and_then(Value::as_str)
+            // lint:allow(determinism) — parse_hex16 is a pure string
+            // validator; no obs clock or id source is reachable here.
+            .and_then(crate::obs::parse_hex16)
+            .is_some();
+        if !ok {
+            return Err(Reject::bad(format!(
+                "`trace.{key}` is not 16 lowercase hex digits"
+            )));
+        }
+    }
+    Ok(Some(t.clone()))
+}
+
 /// Parse a decoded frame into a typed [`Request`].
 ///
 /// The caller has already parsed the JSON; this validates shape and
@@ -509,11 +558,26 @@ fn usize_axis(v: &Value, what: &str) -> Result<Vec<usize>, Reject> {
 
 /// Serialize a success frame (one line, no trailing newline).
 pub fn ok_frame(op: &str, id: Option<&Value>, result: Value) -> String {
+    ok_frame_traced(op, id, None, result)
+}
+
+/// [`ok_frame`] with a validated `trace` table to echo. `None` emits a
+/// frame byte-identical to the untraced builder (the key is never
+/// inserted, not inserted-as-null).
+pub fn ok_frame_traced(
+    op: &str,
+    id: Option<&Value>,
+    trace: Option<&Value>,
+    result: Value,
+) -> String {
     let mut map = BTreeMap::new();
     map.insert("ok".to_string(), Value::Bool(true));
     map.insert("op".to_string(), Value::String(op.to_string()));
     if let Some(id) = id {
         map.insert("id".to_string(), id.clone());
+    }
+    if let Some(trace) = trace {
+        map.insert("trace".to_string(), trace.clone());
     }
     map.insert("result".to_string(), result);
     frame_text(Value::Table(map))
@@ -521,6 +585,18 @@ pub fn ok_frame(op: &str, id: Option<&Value>, result: Value) -> String {
 
 /// Serialize a typed error frame (one line, no trailing newline).
 pub fn error_frame(op: Option<&str>, id: Option<&Value>, reject: &Reject) -> String {
+    error_frame_traced(op, id, None, reject)
+}
+
+/// [`error_frame`] with a validated `trace` table to echo (rejected
+/// requests that *carried* a valid trace still echo it; an invalid
+/// trace itself is rejected without one).
+pub fn error_frame_traced(
+    op: Option<&str>,
+    id: Option<&Value>,
+    trace: Option<&Value>,
+    reject: &Reject,
+) -> String {
     let mut err = BTreeMap::new();
     err.insert("code".to_string(), Value::String(reject.code.to_string()));
     err.insert("message".to_string(), Value::String(reject.message.clone()));
@@ -531,6 +607,9 @@ pub fn error_frame(op: Option<&str>, id: Option<&Value>, reject: &Reject) -> Str
     }
     if let Some(id) = id {
         map.insert("id".to_string(), id.clone());
+    }
+    if let Some(trace) = trace {
+        map.insert("trace".to_string(), trace.clone());
     }
     map.insert("error".to_string(), Value::Table(err));
     frame_text(Value::Table(map))
@@ -552,11 +631,26 @@ pub fn hello_result(version: u32) -> Value {
 /// `"ok"` key, so they can never be mistaken for a final response.
 /// Only v2-negotiated connections ever receive one.
 pub fn progress_frame(op: &str, id: Option<&Value>, done: usize, total: usize) -> String {
+    progress_frame_traced(op, id, None, done, total)
+}
+
+/// [`progress_frame`] with a validated `trace` table to echo, so a
+/// traced request's interim frames correlate like its final one.
+pub fn progress_frame_traced(
+    op: &str,
+    id: Option<&Value>,
+    trace: Option<&Value>,
+    done: usize,
+    total: usize,
+) -> String {
     let mut map = BTreeMap::new();
     map.insert("frame".to_string(), Value::String("progress".to_string()));
     map.insert("op".to_string(), Value::String(op.to_string()));
     if let Some(id) = id {
         map.insert("id".to_string(), id.clone());
+    }
+    if let Some(trace) = trace {
+        map.insert("trace".to_string(), trace.clone());
     }
     map.insert("done".to_string(), Value::Number(done as f64));
     map.insert("total".to_string(), Value::Number(total as f64));
@@ -898,6 +992,75 @@ mod tests {
         assert!(!is_interim_frame(&parse_json(&ok).unwrap()));
         let err = error_frame(Some("sweep"), None, &Reject::new(CODE_CANCELLED, "x"));
         assert!(!is_interim_frame(&parse_json(&err).unwrap()));
+    }
+
+    #[test]
+    fn trace_field_is_validated_and_optional() {
+        // Absent and null are the untraced case.
+        for text in [r#"{"op": "metrics"}"#, r#"{"op": "metrics", "trace": null}"#] {
+            let v = parse_json(text).unwrap();
+            assert_eq!(frame_trace(&v).unwrap(), None, "{text}");
+        }
+        // A well-formed context passes through verbatim.
+        let good = r#"{"op": "metrics",
+            "trace": {"id": "00000000deadbeef", "span": "0123456789abcdef"}}"#;
+        let v = parse_json(good).unwrap();
+        let t = frame_trace(&v).unwrap().expect("valid trace");
+        assert_eq!(t.require_str("id").unwrap(), "00000000deadbeef");
+        assert_eq!(t.require_str("span").unwrap(), "0123456789abcdef");
+        // Everything else is a typed bad-request.
+        for (text, needle) in [
+            (r#"{"trace": "deadbeef"}"#, "not a table"),
+            (r#"{"trace": [1]}"#, "not a table"),
+            (r#"{"trace": {"id": "00000000deadbeef"}}"#, "exactly"),
+            (
+                r#"{"trace": {"id": "00000000deadbeef", "span": "0123456789abcdef", "x": 1}}"#,
+                "exactly",
+            ),
+            (r#"{"trace": {"id": "deadbeef", "span": "0123456789abcdef"}}"#, "trace.id"),
+            (
+                r#"{"trace": {"id": "00000000DEADBEEF", "span": "0123456789abcdef"}}"#,
+                "lowercase hex",
+            ),
+            (r#"{"trace": {"id": "00000000deadbeef", "span": 7}}"#, "trace.span"),
+        ] {
+            let v = parse_json(text).unwrap();
+            let e = frame_trace(&v).expect_err(text);
+            assert_eq!(e.code, CODE_BAD_REQUEST, "{text}");
+            assert!(e.message.contains(needle), "{text}: {}", e.message);
+        }
+    }
+
+    #[test]
+    fn traced_builders_echo_and_untraced_are_byte_identical() {
+        let id = Value::Number(3.0);
+        let trace = parse_json(r#"{"id": "00000000deadbeef", "span": "0123456789abcdef"}"#).unwrap();
+        // With no trace, the traced builders emit the exact same bytes
+        // as the plain ones (the key is never inserted).
+        assert_eq!(
+            ok_frame("eval", Some(&id), Value::Table(BTreeMap::new())),
+            ok_frame_traced("eval", Some(&id), None, Value::Table(BTreeMap::new()))
+        );
+        let rej = Reject::bad("nope");
+        assert_eq!(
+            error_frame(Some("eval"), Some(&id), &rej),
+            error_frame_traced(Some("eval"), Some(&id), None, &rej)
+        );
+        assert_eq!(
+            progress_frame("sweep", Some(&id), 1, 10),
+            progress_frame_traced("sweep", Some(&id), None, 1, 10)
+        );
+        // With a trace, every frame kind echoes the table verbatim.
+        for line in [
+            ok_frame_traced("eval", Some(&id), Some(&trace), Value::Table(BTreeMap::new())),
+            error_frame_traced(Some("eval"), Some(&id), Some(&trace), &rej),
+            progress_frame_traced("sweep", Some(&id), Some(&trace), 1, 10),
+        ] {
+            assert!(!line.contains('\n'), "{line}");
+            let doc = parse_json(&line).unwrap();
+            assert_eq!(doc.require_str("trace.id").unwrap(), "00000000deadbeef", "{line}");
+            assert_eq!(doc.require_str("trace.span").unwrap(), "0123456789abcdef", "{line}");
+        }
     }
 
     #[test]

@@ -53,7 +53,8 @@ use crate::exec::{CancelToken, default_workers};
 
 use super::conn::{Conn, FrameEvent, InFlight, PendingJob, QueueEntry};
 use super::protocol::{
-    PROTOCOL_V2, Request, error_frame, keepalive_frame, ok_frame, progress_frame,
+    PROTOCOL_V2, Request, error_frame, error_frame_traced, keepalive_frame, ok_frame_traced,
+    progress_frame_traced,
 };
 use super::server::{
     ServerShared, cancelled_reject, dispatch, oversized_reject, parse_or_reply,
@@ -96,6 +97,10 @@ struct RunnerJob {
     /// The connection's negotiated version when the job was dispatched —
     /// gates interim progress frames.
     version: u32,
+    /// The request's validated wire `trace` table — echoed on the final
+    /// response and every interim progress frame, and parented by the
+    /// runner's serving span.
+    trace: Option<Value>,
 }
 
 /// One line travelling back from a runner to the reactor.
@@ -150,12 +155,12 @@ fn run_job(shared: &ServerShared, bridge: &Bridge, wake: &UnixStream, job: Runne
     let start = Instant::now();
     if job.cancel.is_cancelled() {
         // Cancelled while queued behind this runner's previous job.
-        shared.metrics.record_cancelled();
-        shared.metrics.record_error_frame();
-        let line = error_frame(Some(job.op), job.id.as_ref(), &cancelled_reject());
+        shared.metrics.record_cancelled_frame(Some(job.op), start.elapsed().as_secs_f64());
+        let line = error_frame_traced(Some(job.op), job.id.as_ref(), job.trace.as_ref(), &cancelled_reject());
         push_completion(bridge, wake, Completion { conn_id: job.conn_id, line, end_of_job: true });
         return;
     }
+    let span = crate::obs::server_span(job.op, job.trace.as_ref());
     let total = job_total(&job);
     let done = AtomicUsize::new(0);
     let emitted = AtomicUsize::new(0);
@@ -178,7 +183,13 @@ fn run_job(shared: &ServerShared, bridge: &Bridge, wake: &UnixStream, job: Runne
                 wake,
                 Completion {
                     conn_id: job.conn_id,
-                    line: progress_frame(job.op, job.id.as_ref(), so_far, total),
+                    line: progress_frame_traced(
+                        job.op,
+                        job.id.as_ref(),
+                        job.trace.as_ref(),
+                        so_far,
+                        total,
+                    ),
                     end_of_job: false,
                 },
             );
@@ -190,20 +201,30 @@ fn run_job(shared: &ServerShared, bridge: &Bridge, wake: &UnixStream, job: Runne
         // Tighten serial-path chunking to the progress cadence so tiny
         // grids still demonstrate it (chunk size never changes bytes).
         chunk: progress_every,
+        trace: span.is_recording().then(|| span.ctx()),
     };
+    let dispatched = Instant::now();
     let line = match dispatch(&job.request, shared, ctl) {
         Ok(result) => {
+            let dispatch_s = dispatched.elapsed().as_secs_f64();
+            shared.metrics.record_stage("dispatch", dispatch_s);
+            shared.metrics.record_stage("compute", dispatch_s);
             shared.metrics.record_request(job.op, start.elapsed().as_secs_f64());
-            ok_frame(job.op, job.id.as_ref(), result)
+            ok_frame_traced(job.op, job.id.as_ref(), job.trace.as_ref(), result)
         }
         Err(reject) => {
+            let dispatch_s = dispatched.elapsed().as_secs_f64();
+            shared.metrics.record_stage("dispatch", dispatch_s);
+            shared.metrics.record_stage("compute", dispatch_s);
             if reject.code == super::protocol::CODE_CANCELLED {
-                shared.metrics.record_cancelled();
+                shared.metrics.record_cancelled_frame(Some(job.op), start.elapsed().as_secs_f64());
+            } else {
+                shared.metrics.record_error_frame(Some(job.op), start.elapsed().as_secs_f64());
             }
-            shared.metrics.record_error_frame();
-            error_frame(Some(job.op), job.id.as_ref(), &reject)
+            error_frame_traced(Some(job.op), job.id.as_ref(), job.trace.as_ref(), &reject)
         }
     };
+    drop(span);
     push_completion(bridge, wake, Completion { conn_id: job.conn_id, line, end_of_job: true });
 }
 
@@ -447,6 +468,7 @@ fn finish_touch(
             }
         }
     }
+    let flush_started = (!conn.out.is_empty()).then(Instant::now);
     let alive = match conn.out.write_to(&mut conn.stream) {
         Ok(n) => {
             if n > 0 {
@@ -456,6 +478,11 @@ fn finish_touch(
         }
         Err(_) => false,
     };
+    if let Some(t) = flush_started {
+        // One sample per non-empty flush attempt: the time the reactor
+        // thread spent feeding this socket (partial writes included).
+        shared.metrics.record_stage("write", t.elapsed().as_secs_f64());
+    }
     // A fully answered connection whose peer has closed is done.
     let done = conn.read_closed
         && conn.in_flight.is_none()
@@ -486,7 +513,10 @@ fn drain_frames(conn: &mut Conn, shared: &ServerShared) {
         match conn.frames.next_event() {
             Some(FrameEvent::Frame(line)) => process_line(conn, &line, shared),
             Some(FrameEvent::Oversized) => {
-                shared.metrics.record_error_frame();
+                // The reject is formed the instant the cap trips, so its
+                // latency is sub-ns; what matters is that reject storms
+                // are visible in the error histograms at all.
+                shared.metrics.record_error_frame(None, 0.0);
                 let line = error_frame(None, None, &oversized_reject());
                 conn.queue.push_back(QueueEntry::Reply(line));
             }
@@ -558,7 +588,7 @@ fn process_line(conn: &mut Conn, line: &[u8], shared: &ServerShared) {
     }
     match parse_or_reply(line, shared) {
         Err(reply) => conn.queue.push_back(QueueEntry::Reply(reply)),
-        Ok((id, Request::Cancel(target))) => {
+        Ok((id, trace, Request::Cancel(target))) => {
             // Answered out of band by design: a cancel queued behind the
             // request it targets could never fire in time.
             let start = Instant::now();
@@ -568,14 +598,14 @@ fn process_line(conn: &mut Conn, line: &[u8], shared: &ServerShared) {
                 let mut map = std::collections::BTreeMap::new();
                 map.insert("target".to_string(), target.clone());
                 map.insert("cancelled".to_string(), Value::Bool(true));
-                ok_frame("cancel", id.as_ref(), Value::Table(map))
+                ok_frame_traced("cancel", id.as_ref(), trace.as_ref(), Value::Table(map))
             } else {
-                shared.metrics.record_error_frame();
-                error_frame(Some("cancel"), id.as_ref(), &unknown_id_reject(&key))
+                shared.metrics.record_error_frame(Some("cancel"), start.elapsed().as_secs_f64());
+                error_frame_traced(Some("cancel"), id.as_ref(), trace.as_ref(), &unknown_id_reject(&key))
             };
             conn.send(&line);
         }
-        Ok((id, request)) => {
+        Ok((id, trace, request)) => {
             let op = request.op();
             let id_key = id.as_ref().and_then(|v| v.to_json_string().ok());
             conn.queue.push_back(QueueEntry::Job(PendingJob {
@@ -584,6 +614,8 @@ fn process_line(conn: &mut Conn, line: &[u8], shared: &ServerShared) {
                 id_key,
                 request,
                 cancel: CancelToken::new(),
+                trace,
+                queued_at: Instant::now(),
             }));
         }
     }
@@ -600,9 +632,15 @@ fn pump_conn(conn: &mut Conn, conn_id: u64, shared: &ServerShared, bridge: &Brid
                 if job.cancel.is_cancelled() {
                     // Cancelled while queued: answered at its FIFO turn
                     // without ever touching the pool.
-                    shared.metrics.record_cancelled();
-                    shared.metrics.record_error_frame();
-                    conn.send(&error_frame(Some(job.op), job.id.as_ref(), &cancelled_reject()));
+                    shared
+                        .metrics
+                        .record_cancelled_frame(Some(job.op), job.queued_at.elapsed().as_secs_f64());
+                    conn.send(&error_frame_traced(
+                        Some(job.op),
+                        job.id.as_ref(),
+                        job.trace.as_ref(),
+                        &cancelled_reject(),
+                    ));
                 } else if is_compute(job.op) {
                     conn.in_flight = Some(InFlight {
                         op: job.op,
@@ -618,6 +656,7 @@ fn pump_conn(conn: &mut Conn, conn_id: u64, shared: &ServerShared, bridge: &Brid
                             request: job.request,
                             cancel: job.cancel,
                             version: conn.version,
+                            trace: job.trace,
                         });
                     }
                     bridge.jobs_cv.notify_one();
@@ -625,19 +664,32 @@ fn pump_conn(conn: &mut Conn, conn_id: u64, shared: &ServerShared, bridge: &Brid
                     if let Request::Hello(version) = &job.request {
                         conn.version = *version;
                     }
+                    let span = crate::obs::server_span(job.op, job.trace.as_ref());
+                    let mut ctl = FoldCtl::default();
+                    if span.is_recording() {
+                        ctl.trace = Some(span.ctx());
+                    }
                     let start = Instant::now();
-                    let line = match dispatch(&job.request, shared, FoldCtl::default()) {
+                    let line = match dispatch(&job.request, shared, ctl) {
                         Ok(result) => {
-                            shared
-                                .metrics
-                                .record_request(job.op, start.elapsed().as_secs_f64());
-                            ok_frame(job.op, job.id.as_ref(), result)
+                            let dt = start.elapsed().as_secs_f64();
+                            shared.metrics.record_stage("dispatch", dt);
+                            shared.metrics.record_request(job.op, dt);
+                            ok_frame_traced(job.op, job.id.as_ref(), job.trace.as_ref(), result)
                         }
                         Err(reject) => {
-                            shared.metrics.record_error_frame();
-                            error_frame(Some(job.op), job.id.as_ref(), &reject)
+                            let dt = start.elapsed().as_secs_f64();
+                            shared.metrics.record_stage("dispatch", dt);
+                            shared.metrics.record_error_frame(Some(job.op), dt);
+                            error_frame_traced(
+                                Some(job.op),
+                                job.id.as_ref(),
+                                job.trace.as_ref(),
+                                &reject,
+                            )
                         }
                     };
+                    drop(span);
                     conn.send(&line);
                 }
             }

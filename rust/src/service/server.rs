@@ -53,8 +53,8 @@ use super::metrics::ServiceMetrics;
 use super::protocol::{
     AccelRequest, CODE_BAD_REQUEST, CODE_CANCELLED, CODE_INTERNAL, CODE_MALFORMED_JSON,
     CODE_OVER_BUDGET, CODE_OVERSIZED_FRAME, CODE_UNKNOWN_ID, EvalRequest, MAX_FRAME_BYTES,
-    Reject, Request, ShardRequest, SweepRequest, error_frame, fnum, frame_id, hello_result,
-    metrics_to_value, ok_frame, parse_request,
+    Reject, Request, ShardRequest, SweepRequest, error_frame, error_frame_traced, fnum, frame_id,
+    frame_trace, hello_result, metrics_to_value, ok_frame, ok_frame_traced, parse_request,
 };
 
 /// Read timeout of connection sockets — the upper bound on how stale
@@ -334,9 +334,13 @@ fn handle_connection(stream: TcpStream, shared: &ServerShared) {
         let line = match reader.next_frame(&shared.shutdown) {
             FrameRead::Frame(line) => line,
             FrameRead::Oversized => {
-                shared.metrics.record_error_frame();
+                // No request was timed: the reject is immediate, so it
+                // lands in the histogram's sub-ns bucket (what matters
+                // is that reject storms are *counted* in the latency
+                // distribution at all).
+                shared.metrics.record_error_frame(None, 0.0);
                 let frame = error_frame(None, None, &oversized_reject());
-                if write_line(&mut writer, &frame, &shared.shutdown).is_err() {
+                if write_reply(&mut writer, &frame, shared).is_err() {
                     return;
                 }
                 continue;
@@ -347,13 +351,32 @@ fn handle_connection(stream: TcpStream, shared: &ServerShared) {
             continue; // blank keep-alive lines are not frames
         }
         let response = process_frame(&line, shared);
-        if write_line(&mut writer, &response, &shared.shutdown).is_err() {
+        if write_reply(&mut writer, &response, shared).is_err() {
             return;
         }
         if shared.shutdown.load(Ordering::SeqCst) {
             return;
         }
     }
+}
+
+/// Write one response line, timing the write stage and tracking the
+/// write-queue high-water mark. The threads core writes synchronously,
+/// so its "queue" is at most the one serialized line (+ newline) in
+/// flight — reported so cross-core `metrics` frames stay
+/// shape-identical with the event loop's backpressure gauge.
+fn write_reply(
+    writer: &mut TcpStream,
+    line: &str,
+    shared: &ServerShared,
+) -> std::io::Result<()> {
+    shared.metrics.note_write_queue_peak(line.len() + 1);
+    // lint:allow(determinism) — write-stage observability only; the
+    // reading feeds the metrics op, never a fingerprinted payload.
+    let start = Instant::now();
+    let out = write_line(writer, line, &shared.shutdown);
+    shared.metrics.record_stage("write", start.elapsed().as_secs_f64());
+    out
 }
 
 fn write_line(
@@ -417,18 +440,26 @@ pub(super) fn unknown_id_reject(key: &str) -> Reject {
     )
 }
 
-/// Parse one raw frame into `(id, request)`, or the complete error-frame
-/// line answering it (metrics already recorded). Both cores funnel
-/// every frame through here, so parse-level negative paths answer
-/// byte-identically no matter which core serves them.
+/// Parse one raw frame into `(id, trace, request)`, or the complete
+/// error-frame line answering it (metrics already recorded). Both cores
+/// funnel every frame through here, so parse-level negative paths
+/// answer byte-identically no matter which core serves them. `trace` is
+/// the request's validated trace context, to echo on every frame the
+/// request produces; an *invalid* trace is itself a rejection, answered
+/// without an echo.
 pub(super) fn parse_or_reply(
     line: &[u8],
     shared: &ServerShared,
-) -> std::result::Result<(Option<Value>, Request), String> {
+) -> std::result::Result<(Option<Value>, Option<Value>, Request), String> {
+    // lint:allow(determinism) — parse-stage/latency observability only;
+    // the readings feed the metrics op, never a fingerprinted payload.
+    let start = Instant::now();
     let text = match std::str::from_utf8(line) {
         Ok(t) => t,
         Err(_) => {
-            shared.metrics.record_error_frame();
+            let dt = start.elapsed().as_secs_f64();
+            shared.metrics.record_stage("parse", dt);
+            shared.metrics.record_error_frame(None, dt);
             return Err(error_frame(
                 None,
                 None,
@@ -439,7 +470,9 @@ pub(super) fn parse_or_reply(
     let doc = match parse_json(text) {
         Ok(v) => v,
         Err(e) => {
-            shared.metrics.record_error_frame();
+            let dt = start.elapsed().as_secs_f64();
+            shared.metrics.record_stage("parse", dt);
+            shared.metrics.record_error_frame(None, dt);
             return Err(error_frame(
                 None,
                 None,
@@ -449,11 +482,25 @@ pub(super) fn parse_or_reply(
     };
     let id = frame_id(&doc);
     let (op, request) = parse_request(&doc);
-    match request {
-        Ok(request) => Ok((id, request)),
+    let trace = match frame_trace(&doc) {
+        Ok(trace) => trace,
         Err(reject) => {
-            shared.metrics.record_error_frame();
-            Err(error_frame(op.as_deref(), id.as_ref(), &reject))
+            let dt = start.elapsed().as_secs_f64();
+            shared.metrics.record_stage("parse", dt);
+            shared.metrics.record_error_frame(op.as_deref(), dt);
+            return Err(error_frame(op.as_deref(), id.as_ref(), &reject));
+        }
+    };
+    match request {
+        Ok(request) => {
+            shared.metrics.record_stage("parse", start.elapsed().as_secs_f64());
+            Ok((id, trace, request))
+        }
+        Err(reject) => {
+            let dt = start.elapsed().as_secs_f64();
+            shared.metrics.record_stage("parse", dt);
+            shared.metrics.record_error_frame(op.as_deref(), dt);
+            Err(error_frame_traced(op.as_deref(), id.as_ref(), trace.as_ref(), &reject))
         }
     }
 }
@@ -461,22 +508,39 @@ pub(super) fn parse_or_reply(
 /// Parse + dispatch one frame; always returns a response line (success
 /// or typed error — a malformed frame never costs the connection).
 fn process_frame(line: &[u8], shared: &ServerShared) -> String {
-    let (id, request) = match parse_or_reply(line, shared) {
+    let (id, trace, request) = match parse_or_reply(line, shared) {
         Ok(parsed) => parsed,
         Err(reply) => return reply,
     };
     let op = request.op();
+    // Server-side span, parented under the client's span when the frame
+    // carried a trace context. A no-op unless `--trace-out` enabled the
+    // tracer; span data flows only to the trace sink, never the frame.
+    // lint:allow(determinism) — observability only; the span flows to
+    // the trace sink, never into the serialized response.
+    let span = crate::obs::server_span(op, trace.as_ref());
+    let mut ctl = FoldCtl::default();
+    if span.is_recording() {
+        ctl.trace = Some(span.ctx());
+    }
     // lint:allow(determinism) — request-latency observability only; the
     // reading feeds the metrics op, never a fingerprinted payload.
     let start = Instant::now();
-    match dispatch(&request, shared, FoldCtl::default()) {
+    let result = dispatch(&request, shared, ctl);
+    let dispatch_s = start.elapsed().as_secs_f64();
+    shared.metrics.record_stage("dispatch", dispatch_s);
+    if matches!(&request, Request::Sweep(_) | Request::Shard(_) | Request::Accel(_)) {
+        shared.metrics.record_stage("compute", dispatch_s);
+    }
+    drop(span);
+    match result {
         Ok(result) => {
             shared.metrics.record_request(op, start.elapsed().as_secs_f64());
-            ok_frame(op, id.as_ref(), result)
+            ok_frame_traced(op, id.as_ref(), trace.as_ref(), result)
         }
         Err(reject) => {
-            shared.metrics.record_error_frame();
-            error_frame(Some(op), id.as_ref(), &reject)
+            shared.metrics.record_error_frame(Some(op), start.elapsed().as_secs_f64());
+            error_frame_traced(Some(op), id.as_ref(), trace.as_ref(), &reject)
         }
     }
 }

@@ -1,6 +1,6 @@
 //! Known-bad fixture for the `determinism` rule: wall-clock reads, an
-//! unordered map, and ULP-bounded fast-tier math on a fingerprinted
-//! artifact path. Exactly five findings.
+//! unordered map, ULP-bounded fast-tier math, and a trace span on a
+//! fingerprinted artifact path. Exactly six findings.
 
 pub fn artifact_stamp() -> (usize, f64) {
     let t0 = std::time::Instant::now();
@@ -15,4 +15,9 @@ pub fn approximate_fingerprint(x: f64) -> f64 {
     let e = crate::util::fastmath::exp2_fast(x);
     let lanes = PreparedRowLanes::gather_stub(e);
     e + lanes
+}
+
+pub fn traced_fingerprint() -> u64 {
+    let span = crate::obs::span("fingerprint");
+    span.ctx().span_id
 }

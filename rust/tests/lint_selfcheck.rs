@@ -18,7 +18,7 @@ const FIXTURES: &[(&str, &str, usize)] = &[
     ("error_code_registry", "error-code-registry", 3),
     ("float_display", "float-display", 3),
     ("mutex_hold", "mutex-hold", 2),
-    ("determinism", "determinism", 5),
+    ("determinism", "determinism", 6),
     ("dep_hygiene", "dep-hygiene", 5),
 ];
 

@@ -150,6 +150,22 @@ fn run_corpus_on(corpus: &Value, core: ServeCore) -> Vec<String> {
                 );
             }
         }
+        // Trace-context contract: a traced request's every response
+        // frame echoes the validated table verbatim; an untraced (or
+        // null-traced) request's response must not carry a `trace` key
+        // at all — that absence is what keeps untraced traffic
+        // byte-identical to the pre-trace protocol.
+        match case.get("echo_trace") {
+            Some(expected) => assert_eq!(
+                resp.get("trace"),
+                Some(expected),
+                "{name}: response must echo the request's trace context: {line}"
+            ),
+            None => assert!(
+                resp.get("trace").is_none(),
+                "{name}: untraced response must not grow a `trace` key: {line}"
+            ),
+        }
         lines.push(line);
     }
 
