@@ -93,6 +93,33 @@ rm "$SHARD_DIR/shard_1.json"
 cmp "$SHARD_DIR/merged.json" "$SHARD_DIR/merged2.json"
 echo "resumed shard set merges identically"
 
+echo "== tri-objective shard/merge round-trip (energy,area,snr; cmp vs single process) =="
+# Same grid, tri-objective rollup: 3 shard processes must merge
+# byte-identically to the single-process tri summary, and the SNR
+# context must enter the fingerprint — a classic artifact of the same
+# grid can never slip into a tri merge.
+TRI_ARGS=("${SPEC_ARGS[@]}" --objectives energy,area,snr --snr-sum 2048 --snr-cell-bits 3)
+for i in 0 1 2; do
+  "$BIN" "${TRI_ARGS[@]}" --shard "$i/3" --out "$SHARD_DIR/tri_shard_$i.json"
+done
+"$BIN" merge-shards "$SHARD_DIR"/tri_shard_0.json "$SHARD_DIR"/tri_shard_1.json \
+  "$SHARD_DIR"/tri_shard_2.json --out "$SHARD_DIR/tri_merged.json"
+"$BIN" "${TRI_ARGS[@]}" --summary-json "$SHARD_DIR/tri_single.json"
+cmp "$SHARD_DIR/tri_merged.json" "$SHARD_DIR/tri_single.json"
+grep -q '"snr_front"' "$SHARD_DIR/tri_merged.json" \
+  || { echo "ci.sh: tri-objective summary lacks the snr_front payload" >&2; exit 1; }
+if "$BIN" merge-shards "$SHARD_DIR"/shard_0.json "$SHARD_DIR"/tri_shard_1.json \
+  "$SHARD_DIR"/tri_shard_2.json --out "$SHARD_DIR/tri_mixed.json" 2>/dev/null; then
+  echo "ci.sh: merge-shards accepted a classic/tri artifact mix" >&2; exit 1
+fi
+echo "tri-objective merged shards == single-process tri summary; classic/tri mix refused"
+
+# The classic surface must be untouched by the new flag: naming the
+# default objective set byte-matches omitting it.
+"$BIN" "${SPEC_ARGS[@]}" --objectives power,area --summary-json "$SHARD_DIR/classic_named.json"
+cmp "$SHARD_DIR/single.json" "$SHARD_DIR/classic_named.json"
+echo "--objectives power,area == default (byte-identical)"
+
 echo "== serve smoke test (event-loop daemon on an ephemeral port) =="
 SERVE_LOG="$SHARD_DIR/serve.log"
 "$BIN" serve --addr 127.0.0.1:0 --core event-loop > "$SERVE_LOG" 2>&1 &

@@ -21,16 +21,48 @@ pub fn enob_from_sndr_db(sndr_db: f64) -> f64 {
 
 /// Combine independent noise sources given as SNDRs (dB) against the same
 /// signal: noise powers add.
+///
+/// Total on every input (the compute-SNR metric feeds it request-derived
+/// values, so panics are not an option):
+/// - an empty slice is the zero-noise identity and returns `+∞` dB;
+/// - a `+∞` dB source contributes zero noise power (same identity);
+/// - a `−∞` dB source (infinite noise) forces `−∞` dB out;
+/// - NaN propagates to a NaN result.
 pub fn combine_sndr_db(sndrs_db: &[f64]) -> f64 {
-    assert!(!sndrs_db.is_empty());
     let total_noise: f64 = sndrs_db.iter().map(|s| 10f64.powf(-s / 10.0)).sum();
     -10.0 * total_noise.log10()
 }
 
+/// `2^k` as an `f64`, total for any `k`. For `k < 64` this is the integer
+/// shift `(1u64 << k) as f64` (bit-identical to the pre-existing shift
+/// path); for `64 <= k <= 1023` the power of two is bit-constructed from
+/// the IEEE-754 exponent field (still exact — every such power is
+/// representable); beyond 1023 it saturates to `+∞`, where `2^k`
+/// overflows f64 anyway. No libm call, so results are identical on every
+/// host. This replaces the raw `1u64 << bits` idiom, which panics in
+/// debug / wraps in release once a user-supplied bit count reaches 64.
+pub fn pow2_f64(k: u32) -> f64 {
+    if k < 64 {
+        (1u64 << k) as f64
+    } else if k <= 1023 {
+        f64::from_bits((1023u64 + k as u64) << 52)
+    } else {
+        f64::INFINITY
+    }
+}
+
 /// Bits needed to read an analog sum of `n_sum` values stored in
 /// `cell_bits`-bit cells losslessly: `log2(n_sum · (2^cell_bits - 1) + 1)`.
+///
+/// Total for any input: an empty sum needs no bits (one level), and for
+/// `cell_bits >= 1024` the per-cell level count saturates to `+∞`
+/// ([`pow2_f64`]), so the result is `+∞` rather than a panic or a wrapped
+/// shift.
 pub fn lossless_bits(n_sum: usize, cell_bits: u32) -> f64 {
-    ((n_sum as f64) * ((1u64 << cell_bits) - 1) as f64 + 1.0).log2()
+    if n_sum == 0 {
+        return 0.0;
+    }
+    ((n_sum as f64) * (pow2_f64(cell_bits) - 1.0) + 1.0).log2()
 }
 
 /// Effective resolution degradation (in bits) when an ADC with
@@ -77,6 +109,52 @@ mod tests {
     fn combining_with_much_better_source_is_noop() {
         let combined = combine_sndr_db(&[50.0, 110.0]);
         assert!((combined - 50.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn combine_is_total_on_degenerate_inputs() {
+        // Empty slice: the zero-noise identity, not a panic.
+        assert_eq!(combine_sndr_db(&[]), f64::INFINITY);
+        // A +inf source is the same identity element.
+        assert_eq!(combine_sndr_db(&[f64::INFINITY]), f64::INFINITY);
+        assert_eq!(combine_sndr_db(&[50.0, f64::INFINITY]).to_bits(), combine_sndr_db(&[50.0]).to_bits());
+        // A -inf source (infinite noise) dominates everything.
+        assert_eq!(combine_sndr_db(&[50.0, f64::NEG_INFINITY]), f64::NEG_INFINITY);
+        // NaN propagates instead of silently poisoning downstream math.
+        assert!(combine_sndr_db(&[f64::NAN]).is_nan());
+        assert!(combine_sndr_db(&[50.0, f64::NAN]).is_nan());
+    }
+
+    #[test]
+    fn pow2_is_exact_and_saturating() {
+        // Below 64: bit-identical to the integer-shift path.
+        for k in [0u32, 1, 2, 10, 52, 53, 63] {
+            assert_eq!(pow2_f64(k).to_bits(), ((1u64 << k) as f64).to_bits(), "k={k}");
+        }
+        // 64..=1023: exact powers of two, monotone, no panic.
+        assert_eq!(pow2_f64(64), 2f64.powi(64));
+        assert_eq!(pow2_f64(100), 2f64.powi(100));
+        assert_eq!(pow2_f64(1023), 2f64.powi(1023));
+        // Beyond the f64 exponent range: saturate, never wrap.
+        assert_eq!(pow2_f64(1024), f64::INFINITY);
+        assert_eq!(pow2_f64(u32::MAX), f64::INFINITY);
+    }
+
+    #[test]
+    fn lossless_bits_is_total_for_huge_cell_bits() {
+        // The old `1u64 << cell_bits` panicked (debug) / wrapped (release)
+        // from 64 up; now the level count saturates cleanly.
+        assert!(lossless_bits(128, 64).is_finite());
+        assert!((lossless_bits(128, 64) - (128.0 * 2f64.powi(64)).log2()).abs() < 1e-9);
+        assert!(lossless_bits(128, 1023).is_finite());
+        assert_eq!(lossless_bits(128, 1024), f64::INFINITY);
+        assert_eq!(lossless_bits(1, u32::MAX), f64::INFINITY);
+        // An empty sum needs no bits, regardless of cell width.
+        assert_eq!(lossless_bits(0, 2), 0.0);
+        assert_eq!(lossless_bits(0, 5000), 0.0);
+        // And clipped_bits stays total on the same inputs.
+        assert_eq!(clipped_bits(1, u32::MAX, 8.0), f64::INFINITY);
+        assert_eq!(clipped_bits(0, 5000, 8.0), 0.0);
     }
 
     #[test]

@@ -100,9 +100,12 @@ impl CimArch {
     }
 
     /// The analog full-scale (distinct levels - 1) a column sum can reach:
-    /// sum_size rows each contributing up to (2^cell_bits - 1).
+    /// sum_size rows each contributing up to (2^cell_bits - 1). Total for
+    /// any `cell_bits` (the raw `1u64 << cell_bits` shift panicked/wrapped
+    /// from 64 up): the per-cell level count saturates to `+∞` via
+    /// [`crate::adc::enob::pow2_f64`].
     pub fn column_full_scale(&self) -> f64 {
-        self.sum_size as f64 * ((1u64 << self.cell_bits) - 1) as f64
+        self.sum_size as f64 * (crate::adc::enob::pow2_f64(self.cell_bits) - 1.0)
     }
 
     /// ENOB needed to read a full-scale column losslessly
@@ -212,5 +215,20 @@ edram_bytes = 4194304
     fn weights_per_array() {
         let a = from_toml(DOC).unwrap();
         assert_eq!(a.weights_per_array(), 512 * 128);
+    }
+
+    #[test]
+    fn huge_cell_bits_saturate_instead_of_panicking() {
+        // A TOML spec can carry any cell width; full scale and lossless
+        // ENOB must stay total rather than hitting a 64-bit shift.
+        let mut a = from_toml(DOC).unwrap();
+        a.cell_bits = 64;
+        a.weight_bits = 64;
+        assert!(a.column_full_scale().is_finite());
+        assert!(a.lossless_enob().is_finite());
+        a.cell_bits = 4096;
+        a.weight_bits = 4096;
+        assert_eq!(a.column_full_scale(), f64::INFINITY);
+        assert_eq!(a.lossless_enob(), f64::INFINITY);
     }
 }

@@ -43,15 +43,17 @@ pub mod accel;
 pub mod figures;
 pub mod pareto;
 pub mod shard;
+pub mod snr;
 pub mod sweep;
 
 pub use accel::{AccelPoint, AccelSweepSpec, run_accel_sweep};
-pub use pareto::{StreamingFront, pareto_front};
+pub use pareto::{FrontK, StreamingFront, pareto_front, pareto_front_k};
 pub use shard::{
     MergedSweep, ShardArtifact, ShardPlan, ShardSelector, SweepSummary,
     artifact_file_name as shard_artifact_file_name, merge_shards, model_fingerprint,
-    sweep_fingerprint,
+    sweep_fingerprint, sweep_fingerprint_with,
 };
+pub use snr::{SnrContext, compute_snr_db};
 pub use sweep::{SweepSpec, SweepTier};
 
 use crate::adc::{AdcMetrics, AdcModel, AdcQuery, PreparedModel, PreparedRow, PreparedRowLanes};
@@ -769,23 +771,114 @@ pub fn sweep_min_eap_tier(
     .map(|(_, _, point)| point)
 }
 
-/// Streaming Pareto front over (total power, total area): the indices
-/// [`pareto_front`] would return on the materialized sweep, computed with
-/// front-sized memory. The equivalence holds for finite objectives (any
-/// valid spec); [`StreamingFront`] drops non-finite points, where
-/// `pareto_front`'s behavior is unspecified.
-pub fn sweep_power_area_front(spec: &SweepSpec, model: &AdcModel, workers: usize) -> Vec<usize> {
+/// Streaming K-objective Pareto front over a sweep: each grid point is
+/// mapped to a `[f64; K]` objective row by `objectives(index, query,
+/// metrics)` (all objectives minimized — negate anything to maximize,
+/// as the SNR objective does) and folded into a [`FrontK`], so a
+/// million-point sweep's front costs front-sized memory. The result is
+/// the same index set [`pareto_front_k`] would return on the
+/// materialized rows, for any worker count — both sides drop non-finite
+/// rows, so the equivalence holds even under NaN objectives.
+pub fn sweep_front_k<const K: usize, O>(
+    spec: &SweepSpec,
+    model: &AdcModel,
+    workers: usize,
+    objectives: O,
+) -> FrontK<K>
+where
+    O: Fn(usize, &AdcQuery, &AdcMetrics) -> [f64; K] + Sync,
+{
     run_sweep_fold(
         spec,
         model,
         workers,
-        StreamingFront::new,
-        |front: &mut StreamingFront, i, _q, m| {
-            front.push(m.total_power_w, m.total_area_um2, i);
-        },
-        StreamingFront::merge,
+        FrontK::new,
+        |front: &mut FrontK<K>, i, q, m| front.push(objectives(i, q, m), i),
+        FrontK::merge,
     )
+}
+
+/// Streaming Pareto front over (total power, total area): the indices
+/// [`pareto_front`] would return on the materialized sweep, computed with
+/// front-sized memory. The equivalence holds for finite objectives (any
+/// valid spec); the streaming engine drops non-finite points, where
+/// `pareto_front`'s behavior is unspecified. Implemented as the K = 2
+/// instantiation of [`sweep_front_k`]; [`FrontK::into_indices`] returns
+/// the same index order [`StreamingFront`] (which still backs the shard
+/// summaries' pinned payloads) and `pareto_front` use.
+pub fn sweep_power_area_front(spec: &SweepSpec, model: &AdcModel, workers: usize) -> Vec<usize> {
+    sweep_front_k(spec, model, workers, |_i, _q, m: &AdcMetrics| {
+        [m.total_power_w, m.total_area_um2]
+    })
     .into_indices()
+}
+
+/// Streaming tri-objective (energy per convert, total area, −compute-SNR)
+/// Pareto front — the `--objectives energy,area,snr` sweep. SNR enters
+/// negated so every objective minimizes: a front point is one no rival
+/// beats on energy, area, *and* fidelity simultaneously. The SNR of a
+/// grid point depends only on its ENOB plus the fixed [`SnrContext`]
+/// (analog sum size, cell bits).
+pub fn sweep_energy_area_snr_front(
+    spec: &SweepSpec,
+    model: &AdcModel,
+    workers: usize,
+    ctx: &SnrContext,
+) -> FrontK<3> {
+    sweep_front_k(spec, model, workers, |_i, q: &AdcQuery, m: &AdcMetrics| {
+        [m.energy_pj_per_convert, m.total_area_um2, -ctx.compute_snr_db(q.enob)]
+    })
+}
+
+/// The objective sets the sweep stack serves. The classic pair is the
+/// hard-coded behavior every pre-existing artifact, golden figure, and
+/// served byte was pinned on; the tri set adds the compute-SNR axis.
+/// Kept a closed enum (rather than arbitrary name lists) so every layer
+/// — CLI, protocol, shard artifacts — agrees on exactly which
+/// combinations exist and what their payloads look like.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ObjectiveSet {
+    /// `power,area` — the classic 2-objective front ([`StreamingFront`]
+    /// inside [`SweepSummary`]); requesting it explicitly is
+    /// byte-identical to not passing objectives at all.
+    #[default]
+    PowerArea,
+    /// `energy,area,snr` — the tri-objective front
+    /// ([`sweep_energy_area_snr_front`]), carried as the summary's
+    /// optional `snr_front` payload alongside the classic front.
+    EnergyAreaSnr,
+}
+
+impl ObjectiveSet {
+    /// The stable lower-case names, in objective order.
+    pub fn names(self) -> &'static [&'static str] {
+        match self {
+            ObjectiveSet::PowerArea => &["power", "area"],
+            ObjectiveSet::EnergyAreaSnr => &["energy", "area", "snr"],
+        }
+    }
+
+    /// Parse a comma-separated objective list (`"energy,area,snr"`).
+    /// Typed error naming the supported sets on anything else — unknown
+    /// names, reordered or partial combinations, empty input.
+    pub fn parse_csv(s: &str) -> Result<ObjectiveSet> {
+        let names: Vec<&str> = s.split(',').map(str::trim).collect();
+        ObjectiveSet::parse_names(&names)
+    }
+
+    /// [`ObjectiveSet::parse_csv`] over pre-split names (the protocol's
+    /// JSON array form).
+    pub fn parse_names(names: &[&str]) -> Result<ObjectiveSet> {
+        for set in [ObjectiveSet::PowerArea, ObjectiveSet::EnergyAreaSnr] {
+            if names == set.names() {
+                return Ok(set);
+            }
+        }
+        Err(Error::Config(format!(
+            "unsupported objective set `{}` (supported: `power,area` and `energy,area,snr`)",
+            names.join(",")
+        )))
+    }
 }
 
 #[cfg(test)]
@@ -926,6 +1019,54 @@ mod tests {
     }
 
     #[test]
+    fn tri_objective_front_matches_materialized_front() {
+        let model = AdcModel::default();
+        let spec = SweepSpec::dense(5);
+        let ctx = snr::SnrContext::default();
+        let all = run_sweep(&spec, &NativeEvaluator::serial(model)).unwrap();
+        let rows: Vec<[f64; 3]> = all
+            .iter()
+            .map(|p| {
+                [
+                    p.metrics.energy_pj_per_convert,
+                    p.metrics.total_area_um2,
+                    -ctx.compute_snr_db(p.query.enob),
+                ]
+            })
+            .collect();
+        let brute = pareto_front_k(&rows);
+        assert!(!brute.is_empty());
+        for workers in [1usize, 4] {
+            let front = sweep_energy_area_snr_front(&spec, &model, workers, &ctx);
+            assert_eq!(front.indices(), brute, "workers={workers}");
+        }
+        // The tri front is a genuine third axis: restricted to its first
+        // two objectives it is at least as large as the 2-objective
+        // front of those axes (SNR can only admit more points).
+        let two: Vec<[f64; 2]> = rows.iter().map(|r| [r[0], r[1]]).collect();
+        assert!(brute.len() >= pareto_front_k(&two).len());
+    }
+
+    #[test]
+    fn objective_set_parsing_is_closed_and_typed() {
+        assert_eq!(ObjectiveSet::parse_csv("power,area").unwrap(), ObjectiveSet::PowerArea);
+        assert_eq!(ObjectiveSet::parse_csv("power, area").unwrap(), ObjectiveSet::PowerArea);
+        assert_eq!(
+            ObjectiveSet::parse_csv("energy,area,snr").unwrap(),
+            ObjectiveSet::EnergyAreaSnr
+        );
+        assert_eq!(ObjectiveSet::default(), ObjectiveSet::PowerArea);
+        for bad in ["", "energy", "energy,snr", "snr,area,energy", "power,area,snr", "turbo,area"]
+        {
+            let err = ObjectiveSet::parse_csv(bad).unwrap_err().to_string();
+            assert!(
+                err.contains("power,area") && err.contains("energy,area,snr"),
+                "`{bad}`: {err}"
+            );
+        }
+    }
+
+    #[test]
     fn fold_range_visits_exactly_the_range_with_global_indices() {
         let model = AdcModel::default();
         let spec = small_spec();
@@ -1054,5 +1195,8 @@ mod tests {
         assert!(run_sweep_prepared(&spec, &model, 4).unwrap().is_empty());
         assert!(sweep_min_eap(&spec, &model, 4).is_none());
         assert!(sweep_power_area_front(&spec, &model, 4).is_empty());
+        assert!(
+            sweep_energy_area_snr_front(&spec, &model, 4, &snr::SnrContext::default()).is_empty()
+        );
     }
 }

@@ -11,7 +11,9 @@
 //! * [`ShardArtifact::compute`] runs one shard through the
 //!   invariant-hoisted kernel ([`run_sweep_fold_range`]) into a
 //!   [`SweepSummary`] — the streamed fold (per-metric extrema), min-EAP
-//!   candidate, and power/area [`StreamingFront`] — and serializes it as
+//!   candidate, power/area [`StreamingFront`], and (for sweeps launched
+//!   with a compute-SNR objective, [`ShardArtifact::compute_with`]) the
+//!   tri-objective energy/area/−SNR [`FrontK`] — and serializes it as
 //!   a self-describing JSON document via the [`crate::config::Value`]
 //!   layer. Every payload float travels as its IEEE-754 bit pattern
 //!   ([`f64_to_bits_hex`]), so nothing is lost at the process boundary.
@@ -36,9 +38,11 @@ use crate::adc::{AdcMetrics, AdcModel, AdcQuery, Coefficients};
 use crate::config::{Value, f64_from_bits_hex, f64_to_bits_hex, parse_json};
 use crate::error::{Error, Result};
 
+use super::snr::SnrContext;
 use super::sweep::SweepSpec;
 use super::{
-    EvaluatedPoint, FoldCtl, StreamingFront, eap_candidate_better, run_sweep_fold_range_ctl,
+    EvaluatedPoint, FoldCtl, FrontK, StreamingFront, eap_candidate_better,
+    run_sweep_fold_range_ctl,
 };
 
 /// Artifact schema version; bump on breaking payload changes.
@@ -72,7 +76,21 @@ fn fnv1a64(bytes: &[u8]) -> u64 {
 /// not collision-resistant, so [`merge_shards`] compares the full
 /// canonical strings, not just this digest.)
 pub fn sweep_fingerprint(spec: &SweepSpec, model: &AdcModel) -> String {
-    format!("{:016x}", fnv1a64(sweep_canonical(spec, model).as_bytes()))
+    sweep_fingerprint_with(spec, model, None)
+}
+
+/// [`sweep_fingerprint`] extended with the sweep's objective context:
+/// when a compute-SNR objective is active its [`SnrContext`] enters the
+/// canonical string, so a tri-objective resume can never accept a
+/// classic power/area artifact (or one computed under a different
+/// context) as complete. `None` is byte-identical to the classic
+/// canonical string, hence to [`sweep_fingerprint`].
+pub fn sweep_fingerprint_with(
+    spec: &SweepSpec,
+    model: &AdcModel,
+    snr: Option<&SnrContext>,
+) -> String {
+    format!("{:016x}", fnv1a64(sweep_canonical_with(spec, model, snr).as_bytes()))
 }
 
 /// The canonical byte string a sweep is identified by: every axis value,
@@ -104,6 +122,22 @@ fn sweep_canonical(spec: &SweepSpec, model: &AdcModel) -> String {
     canon.push_str(&f64_to_bits_hex(model.energy_offset_decades));
     canon.push(',');
     canon.push_str(&f64_to_bits_hex(model.area_offset_decades));
+    canon
+}
+
+/// [`sweep_canonical`] plus the optional SNR objective context. With
+/// `None` this *is* `sweep_canonical` (same bytes — pre-existing
+/// fingerprints and resume directories stay valid); with `Some` the
+/// context's integer attributes are appended, so sweeps that differ only
+/// in objective set or SNR context never share a canonical string.
+fn sweep_canonical_with(spec: &SweepSpec, model: &AdcModel, snr: Option<&SnrContext>) -> String {
+    let mut canon = sweep_canonical(spec, model);
+    if let Some(ctx) = snr {
+        canon.push_str(";snr=n_sum:");
+        canon.push_str(&ctx.n_sum.to_string());
+        canon.push_str(",cell_bits:");
+        canon.push_str(&ctx.cell_bits.to_string());
+    }
     canon
 }
 
@@ -244,7 +278,10 @@ pub struct MetricExtrema {
 
 /// The streamed rollup a shard (or a whole single-process sweep) carries:
 /// point count, per-metric extrema, the min-EAP candidate (with its grid
-/// index for deterministic tie-breaks), and the power/area Pareto front.
+/// index for deterministic tie-breaks), the power/area Pareto front, and
+/// — when the sweep was launched with a compute-SNR objective
+/// ([`SweepSummary::with_snr`]) — the tri-objective
+/// energy/area/−SNR front with its [`SnrContext`].
 ///
 /// Every component is insensitive to fold/merge order, so
 /// `merge(a, b) == merge(b, a)` bit-for-bit and a shard-wise computation
@@ -255,12 +292,22 @@ pub struct SweepSummary {
     extrema: Option<MetricExtrema>,
     best: Option<(usize, f64, EvaluatedPoint)>,
     front: StreamingFront,
+    snr: Option<(SnrContext, FrontK<3>)>,
 }
 
 impl SweepSummary {
     /// Empty summary (the fold identity: `merge(new(), s) == s`).
     pub fn new() -> SweepSummary {
         SweepSummary::default()
+    }
+
+    /// Empty summary that additionally accumulates the tri-objective
+    /// energy/area/−SNR front under `ctx`. The SNR objective is pushed
+    /// negated so all three objectives minimize. The context persists
+    /// through empty shards, so every shard of a tri-objective sweep
+    /// carries (and fingerprints) the same context.
+    pub fn with_snr(ctx: SnrContext) -> SweepSummary {
+        SweepSummary { snr: Some((ctx, FrontK::new())), ..SweepSummary::default() }
     }
 
     /// Absorb one evaluated grid point.
@@ -291,6 +338,16 @@ impl SweepSummary {
             self.best = Some((index, eap, EvaluatedPoint { query: *query, metrics: *metrics }));
         }
         self.front.push(metrics.total_power_w, metrics.total_area_um2, index);
+        if let Some((ctx, front)) = &mut self.snr {
+            front.push(
+                [
+                    metrics.energy_pj_per_convert,
+                    metrics.total_area_um2,
+                    -ctx.compute_snr_db(query.enob),
+                ],
+                index,
+            );
+        }
     }
 
     /// Combine two summaries (commutative and associative).
@@ -319,6 +376,14 @@ impl SweepSummary {
             (None, b) => b,
         };
         self.front = self.front.merge(other.front);
+        // Total even on mismatched operands: the left context wins when
+        // both sides carry one. Callers that must not conflate contexts
+        // ([`merge_shards`]) compare the full canonical strings first.
+        self.snr = match (self.snr.take(), other.snr) {
+            (Some((ctx, a)), Some((_, b))) => Some((ctx, a.merge(b))),
+            (a, None) => a,
+            (None, b) => b,
+        };
         self
     }
 
@@ -344,6 +409,21 @@ impl SweepSummary {
         range: Range<usize>,
         ctl: FoldCtl<'_>,
     ) -> Option<SweepSummary> {
+        SweepSummary::compute_range_ctl_with(spec, model, workers, range, ctl, None)
+    }
+
+    /// [`SweepSummary::compute_range_ctl`] with an optional compute-SNR
+    /// objective context. `None` is the classic power/area-only summary
+    /// (bit-identical payload); `Some(ctx)` additionally streams the
+    /// tri-objective front.
+    pub fn compute_range_ctl_with(
+        spec: &SweepSpec,
+        model: &AdcModel,
+        workers: usize,
+        range: Range<usize>,
+        ctl: FoldCtl<'_>,
+        snr: Option<SnrContext>,
+    ) -> Option<SweepSummary> {
         run_sweep_fold_range_ctl(
             spec,
             model,
@@ -351,7 +431,10 @@ impl SweepSummary {
             super::SweepTier::Exact,
             range,
             ctl,
-            SweepSummary::new,
+            move || match snr {
+                None => SweepSummary::new(),
+                Some(ctx) => SweepSummary::with_snr(ctx),
+            },
             |acc: &mut SweepSummary, i, q, m| acc.absorb(i, q, m),
             SweepSummary::merge,
         )
@@ -360,10 +443,22 @@ impl SweepSummary {
     /// Streamed summary of the whole grid — the single-process reference
     /// every complete shard merge must reproduce bit-identically.
     pub fn compute(spec: &SweepSpec, model: &AdcModel, workers: usize) -> SweepSummary {
+        SweepSummary::compute_with(spec, model, workers, None)
+    }
+
+    /// [`SweepSummary::compute`] with an optional compute-SNR objective
+    /// context (see [`SweepSummary::compute_range_ctl_with`]).
+    pub fn compute_with(
+        spec: &SweepSpec,
+        model: &AdcModel,
+        workers: usize,
+        snr: Option<SnrContext>,
+    ) -> SweepSummary {
         let len = spec.checked_len().expect(
             "sweep grid length overflows usize; split the spec into sub-range specs",
         );
-        SweepSummary::compute_range(spec, model, workers, 0..len)
+        SweepSummary::compute_range_ctl_with(spec, model, workers, 0..len, FoldCtl::default(), snr)
+            .expect("a fold without a cancel token cannot be cancelled")
     }
 
     /// Points absorbed.
@@ -396,6 +491,24 @@ impl SweepSummary {
     /// [`super::sweep_power_area_front`] on the same coverage.
     pub fn front_indices(&self) -> Vec<usize> {
         self.front.indices()
+    }
+
+    /// The compute-SNR objective context, iff this summary was built with
+    /// one ([`SweepSummary::with_snr`]).
+    pub fn snr_context(&self) -> Option<SnrContext> {
+        self.snr.as_ref().map(|(ctx, _)| *ctx)
+    }
+
+    /// The accumulated tri-objective energy/area/−SNR front, iff the
+    /// summary carries the SNR objective.
+    pub fn snr_front(&self) -> Option<&FrontK<3>> {
+        self.snr.as_ref().map(|(_, front)| front)
+    }
+
+    /// Tri-objective front indices — equals
+    /// [`super::sweep_energy_area_snr_front`] on the same coverage.
+    pub fn snr_front_indices(&self) -> Option<Vec<usize>> {
+        self.snr.as_ref().map(|(_, front)| front.indices())
     }
 
     /// Canonical [`Value`] payload. All floats travel as IEEE-754 bit
@@ -437,6 +550,15 @@ impl SweepSummary {
             },
         );
         map.insert("front".to_string(), self.front.to_value());
+        // The snr_front key is ABSENT (not null) when the SNR objective
+        // is off, so classic power/area payloads keep their exact
+        // pre-existing bytes (CI diffs them against golden shards).
+        if let Some((ctx, front)) = &self.snr {
+            let mut t = BTreeMap::new();
+            t.insert("context".to_string(), ctx.to_value());
+            t.insert("front".to_string(), front.to_value());
+            map.insert("snr_front".to_string(), Value::Table(t));
+        }
         Value::Table(map)
     }
 
@@ -479,12 +601,29 @@ impl SweepSummary {
             v.get("front")
                 .ok_or_else(|| Error::Config("summary payload lacks `front`".into()))?,
         )?;
-        if count == 0 && (extrema.is_some() || best.is_some() || !front.is_empty()) {
+        let snr = match v.get("snr_front") {
+            None | Some(Value::Null) => None,
+            Some(s) => {
+                let ctx = SnrContext::from_value(s.get("context").ok_or_else(|| {
+                    Error::Config("snr_front payload lacks `context`".into())
+                })?)?;
+                let tri = FrontK::<3>::from_value(s.get("front").ok_or_else(|| {
+                    Error::Config("snr_front payload lacks `front`".into())
+                })?)?;
+                Some((ctx, tri))
+            }
+        };
+        if count == 0
+            && (extrema.is_some()
+                || best.is_some()
+                || !front.is_empty()
+                || snr.as_ref().is_some_and(|(_, f)| !f.is_empty()))
+        {
             return Err(Error::Config(
                 "summary claims 0 points but carries a non-empty payload".into(),
             ));
         }
-        Ok(SweepSummary { count, extrema, best, front })
+        Ok(SweepSummary { count, extrema, best, front, snr })
     }
 
     /// The canonical JSON text of [`SweepSummary::to_value`].
@@ -650,7 +789,21 @@ impl ShardArtifact {
         selector: ShardSelector,
         workers: usize,
     ) -> Result<ShardArtifact> {
-        ShardArtifact::compute_ctl(spec, model, selector, workers, FoldCtl::default())?
+        ShardArtifact::compute_with(spec, model, selector, workers, None)
+    }
+
+    /// [`ShardArtifact::compute`] with an optional compute-SNR objective
+    /// context: `Some(ctx)` yields an artifact whose summary carries the
+    /// tri-objective front and whose fingerprint covers `ctx`
+    /// ([`sweep_fingerprint_with`]).
+    pub fn compute_with(
+        spec: &SweepSpec,
+        model: &AdcModel,
+        selector: ShardSelector,
+        workers: usize,
+        snr: Option<SnrContext>,
+    ) -> Result<ShardArtifact> {
+        ShardArtifact::compute_ctl_with(spec, model, selector, workers, FoldCtl::default(), snr)?
             .ok_or_else(|| {
                 Error::Runtime("a fold without a cancel token cannot be cancelled".into())
             })
@@ -667,15 +820,31 @@ impl ShardArtifact {
         workers: usize,
         ctl: FoldCtl<'_>,
     ) -> Result<Option<ShardArtifact>> {
+        ShardArtifact::compute_ctl_with(spec, model, selector, workers, ctl, None)
+    }
+
+    /// [`ShardArtifact::compute_ctl`] with an optional compute-SNR
+    /// objective context (see [`ShardArtifact::compute_with`]).
+    pub fn compute_ctl_with(
+        spec: &SweepSpec,
+        model: &AdcModel,
+        selector: ShardSelector,
+        workers: usize,
+        ctl: FoldCtl<'_>,
+        snr: Option<SnrContext>,
+    ) -> Result<Option<ShardArtifact>> {
+        if let Some(ctx) = &snr {
+            ctx.validate()?;
+        }
         let plan = ShardPlan::new(spec, selector.n_shards())?;
         let range = plan.range(selector.index());
         let Some(summary) =
-            SweepSummary::compute_range_ctl(spec, model, workers, range.clone(), ctl)
+            SweepSummary::compute_range_ctl_with(spec, model, workers, range.clone(), ctl, snr)
         else {
             return Ok(None);
         };
         Ok(Some(ShardArtifact {
-            fingerprint: sweep_fingerprint(spec, model),
+            fingerprint: sweep_fingerprint_with(spec, model, snr.as_ref()),
             selector,
             start: range.start,
             end: range.end,
@@ -766,13 +935,6 @@ impl ShardArtifact {
         let model = model_from_value(
             v.get("model").ok_or_else(|| Error::Config("artifact lacks `model`".into()))?,
         )?;
-        let expected = sweep_fingerprint(&spec, &model);
-        if fingerprint != expected {
-            return Err(Error::Config(format!(
-                "shard artifact fingerprint `{fingerprint}` does not match its own \
-                 spec/model (expect `{expected}`) — artifact corrupted or hand-edited"
-            )));
-        }
         let selector =
             ShardSelector::new(v.require_usize("shard.index")?, v.require_usize("shard.n_shards")?)?;
         let start = v.require_usize("shard.start")?;
@@ -792,6 +954,17 @@ impl ShardArtifact {
         let summary = SweepSummary::from_value(
             v.get("summary").ok_or_else(|| Error::Config("artifact lacks `summary`".into()))?,
         )?;
+        // The fingerprint covers the objective context too, so it can
+        // only be re-derived once the summary (which carries any
+        // SnrContext) is parsed. A tri-objective artifact therefore
+        // never masquerades as a classic one or vice versa.
+        let expected = sweep_fingerprint_with(&spec, &model, summary.snr_context().as_ref());
+        if fingerprint != expected {
+            return Err(Error::Config(format!(
+                "shard artifact fingerprint `{fingerprint}` does not match its own \
+                 spec/model (expect `{expected}`) — artifact corrupted or hand-edited"
+            )));
+        }
         // Payload integrity: the stored checksum must match the parsed
         // summary's canonical serialization (round-tripping canonical
         // JSON is the identity, so any edited/corrupted byte of the
@@ -824,6 +997,15 @@ impl ShardArtifact {
                 return Err(Error::Config(format!(
                     "shard {selector} front index {i} outside its range {start}..{end}"
                 )));
+            }
+        }
+        if let Some(front) = summary.snr_front() {
+            for &(_, i) in front.points() {
+                if !(start..end).contains(&i) {
+                    return Err(Error::Config(format!(
+                        "shard {selector} snr front index {i} outside its range {start}..{end}"
+                    )));
+                }
             }
         }
         Ok(ShardArtifact { fingerprint, selector, start, end, total, spec, model, summary })
@@ -899,14 +1081,17 @@ pub fn merge_shards(artifacts: &[ShardArtifact]) -> Result<MergedSweep> {
     let first = artifacts
         .first()
         .ok_or_else(|| Error::Config("no shard artifacts to merge".into()))?;
-    // Compare the full canonical spec/model strings, not just the 64-bit
-    // FNV digest — FNV is not collision-resistant, and merging shards of
-    // two different sweeps must be impossible, not merely unlikely.
-    let first_canonical = sweep_canonical(&first.spec, &first.model);
+    // Compare the full canonical spec/model/objective strings, not just
+    // the 64-bit FNV digest — FNV is not collision-resistant, and
+    // merging shards of two different sweeps (including tri-objective
+    // shards under different SNR contexts, or mixed with classic
+    // power/area shards) must be impossible, not merely unlikely.
+    let canonical_of = |a: &ShardArtifact| {
+        sweep_canonical_with(&a.spec, &a.model, a.summary.snr_context().as_ref())
+    };
+    let first_canonical = canonical_of(first);
     for a in &artifacts[1..] {
-        if a.fingerprint != first.fingerprint
-            || sweep_canonical(&a.spec, &a.model) != first_canonical
-        {
+        if a.fingerprint != first.fingerprint || canonical_of(a) != first_canonical {
             return Err(Error::Config(format!(
                 "shard artifact fingerprint mismatch: shard {} has `{}` but shard {} has \
                  `{}` — the artifacts belong to different sweeps (spec or model differs)",
@@ -1246,6 +1431,187 @@ mod tests {
         // fingerprint (the cache key survives the wire).
         let back = model_from_value(&model_to_value(&model)).unwrap();
         assert_eq!(base, model_fingerprint(&back));
+    }
+
+    #[test]
+    fn classic_payload_bytes_do_not_change_without_snr() {
+        // The SNR objective is strictly additive: without it, summaries
+        // serialize without any `snr_front` key and the canonical
+        // fingerprint is the pre-existing one.
+        let spec = small_spec();
+        let model = AdcModel::default();
+        let summary = SweepSummary::compute(&spec, &model, 2);
+        let text = summary.to_json_string().unwrap();
+        assert!(!text.contains("snr_front"), "{text}");
+        assert!(summary.snr_context().is_none() && summary.snr_front().is_none());
+        assert_eq!(
+            sweep_fingerprint(&spec, &model),
+            sweep_fingerprint_with(&spec, &model, None)
+        );
+        let ctx = crate::dse::SnrContext::default();
+        assert_ne!(
+            sweep_fingerprint(&spec, &model),
+            sweep_fingerprint_with(&spec, &model, Some(&ctx))
+        );
+        // Different contexts => different fingerprints.
+        let other = crate::dse::SnrContext { n_sum: 128, ..ctx };
+        assert_ne!(
+            sweep_fingerprint_with(&spec, &model, Some(&ctx)),
+            sweep_fingerprint_with(&spec, &model, Some(&other))
+        );
+    }
+
+    #[test]
+    fn tri_objective_summary_roundtrips_and_matches_library_front() {
+        let spec = small_spec();
+        let model = AdcModel::default();
+        let ctx = crate::dse::SnrContext::default();
+        let summary = SweepSummary::compute_with(&spec, &model, 4, Some(ctx));
+        assert_eq!(summary.snr_context(), Some(ctx));
+        let indices = summary.snr_front_indices().unwrap();
+        assert!(!indices.is_empty());
+        assert_eq!(
+            indices,
+            super::super::sweep_energy_area_snr_front(&spec, &model, 1, &ctx).into_indices()
+        );
+        // The classic power/area components are untouched by the extra
+        // objective.
+        assert_eq!(summary.front_indices(), sweep_power_area_front(&spec, &model, 1));
+        // Bit-exact JSON round-trip, snr payload included.
+        let text = summary.to_json_string().unwrap();
+        assert!(text.contains("snr_front"), "{text}");
+        let back = SweepSummary::from_value(&parse_json(&text).unwrap()).unwrap();
+        assert_eq!(back.to_json_string().unwrap(), text);
+    }
+
+    #[test]
+    fn tri_objective_sharded_merge_reproduces_single_process_bitwise() {
+        let spec = small_spec();
+        let model = AdcModel::default();
+        let ctx = crate::dse::SnrContext { n_sum: 2048, cell_bits: 2 };
+        let reference =
+            SweepSummary::compute_with(&spec, &model, 4, Some(ctx)).to_json_string().unwrap();
+        for n_shards in [1usize, 3, 7] {
+            let mut artifacts: Vec<ShardArtifact> = (0..n_shards)
+                .map(|i| {
+                    ShardArtifact::compute_with(
+                        &spec,
+                        &model,
+                        ShardSelector::new(i, n_shards).unwrap(),
+                        2,
+                        Some(ctx),
+                    )
+                    .unwrap()
+                })
+                .collect();
+            artifacts.reverse();
+            // Artifacts survive serialization before merging (the real
+            // multi-process path).
+            let artifacts: Vec<ShardArtifact> = artifacts
+                .iter()
+                .map(|a| {
+                    ShardArtifact::from_value(&parse_json(&a.to_json_string().unwrap()).unwrap())
+                        .unwrap()
+                })
+                .collect();
+            let merged = merge_shards(&artifacts).unwrap();
+            assert!(merged.is_complete(), "n_shards={n_shards}");
+            assert_eq!(
+                merged.summary.to_json_string().unwrap(),
+                reference,
+                "n_shards={n_shards}"
+            );
+        }
+    }
+
+    #[test]
+    fn merge_rejects_mixed_objective_sets_and_contexts() {
+        let spec = small_spec();
+        let model = AdcModel::default();
+        let ctx = crate::dse::SnrContext::default();
+        let classic =
+            ShardArtifact::compute(&spec, &model, ShardSelector::new(0, 2).unwrap(), 1).unwrap();
+        let tri = ShardArtifact::compute_with(
+            &spec,
+            &model,
+            ShardSelector::new(1, 2).unwrap(),
+            1,
+            Some(ctx),
+        )
+        .unwrap();
+        assert_ne!(classic.fingerprint(), tri.fingerprint());
+        let err = merge_shards(&[classic, tri.clone()]).unwrap_err().to_string();
+        assert!(err.contains("fingerprint"), "{err}");
+        let other = ShardArtifact::compute_with(
+            &spec,
+            &model,
+            ShardSelector::new(0, 2).unwrap(),
+            1,
+            Some(crate::dse::SnrContext { n_sum: 64, cell_bits: 4 }),
+        )
+        .unwrap();
+        let err = merge_shards(&[other, tri]).unwrap_err().to_string();
+        assert!(err.contains("fingerprint"), "{err}");
+        // An invalid context is a typed error up front.
+        assert!(ShardArtifact::compute_with(
+            &spec,
+            &model,
+            ShardSelector::new(0, 2).unwrap(),
+            1,
+            Some(crate::dse::SnrContext { n_sum: 0, cell_bits: 2 }),
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn from_value_rejects_inconsistent_snr_payloads() {
+        // count == 0 with a non-empty tri front is structurally bogus.
+        let mut map = match SweepSummary::new().to_value() {
+            Value::Table(map) => map,
+            _ => unreachable!("summaries are tables"),
+        };
+        let mut front = FrontK::<3>::new();
+        front.push([1.0, 2.0, 3.0], 0);
+        let mut snr = BTreeMap::new();
+        snr.insert("context".to_string(), crate::dse::SnrContext::default().to_value());
+        snr.insert("front".to_string(), front.to_value());
+        map.insert("snr_front".to_string(), Value::Table(snr.clone()));
+        let err =
+            SweepSummary::from_value(&Value::Table(map.clone())).unwrap_err().to_string();
+        assert!(err.contains("0 points"), "{err}");
+        // A context-less or front-less snr payload is rejected too.
+        for missing in ["context", "front"] {
+            let mut broken = snr.clone();
+            broken.remove(missing);
+            map.insert("snr_front".to_string(), Value::Table(broken));
+            let err = SweepSummary::from_value(&Value::Table(map.clone()))
+                .unwrap_err()
+                .to_string();
+            assert!(err.contains(missing), "{err}");
+        }
+
+        // A tri artifact whose snr front cites an index outside the
+        // shard's range is rejected (mirror of the power/area check).
+        let spec = small_spec();
+        let model = AdcModel::default();
+        let ctx = crate::dse::SnrContext::default();
+        let artifact = ShardArtifact::compute_with(
+            &spec,
+            &model,
+            ShardSelector::new(0, 2).unwrap(),
+            1,
+            Some(ctx),
+        )
+        .unwrap();
+        let mut doctored = artifact.clone();
+        let mut front = FrontK::<3>::new();
+        // Index 20 lies in shard 1's half of the 36-point grid.
+        front.push([1.0, 2.0, 3.0], 20);
+        doctored.summary.snr = Some((ctx, front));
+        // to_value recomputes the (now consistent) checksum, so only the
+        // range validation can catch the out-of-shard index.
+        let err = ShardArtifact::from_value(&doctored.to_value()).unwrap_err().to_string();
+        assert!(err.contains("snr front index 20"), "{err}");
     }
 
     #[test]

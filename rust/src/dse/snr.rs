@@ -1,0 +1,223 @@
+//! Compute-SNR metric for analog in-memory-computing sweeps.
+//!
+//! The source paper models ADC energy/area from architecture-level
+//! attributes; the follow-on literature ("Compute SNR-Optimal
+//! Analog-to-Digital Converters for Analog In-Memory Computing",
+//! Kavishwar & Shanbhag 2025 — see PAPERS.md) optimizes the same ADCs
+//! for *compute SNR*: the end-to-end fidelity of the analog dot-product
+//! read through a finite-resolution converter. This module provides
+//! that metric from the same architecture-level attributes the rest of
+//! the crate uses — the analog sum size `n_sum`, the per-cell bit width
+//! `cell_bits`, and the ADC's ENOB — so tri-objective
+//! (energy, area, SNR) sweeps need no circuit-level inputs.
+//!
+//! Two independent noise sources are combined (noise powers add,
+//! [`combine_sndr_db`]):
+//!
+//! 1. **Quantization** — reading a column sum that needs
+//!    [`lossless_bits`] through an `enob`-bit quantizer yields
+//!    [`expected_read_sqnr_db`]: `6.02·min(enob, lossless) + 1.76` dB.
+//! 2. **Clipping** — when the ADC is short of lossless
+//!    ([`clipped_bits`] > 0), the unrecovered range contributes
+//!    square-law distortion at 12.04 dB (two ENOB-equivalents) per
+//!    clipped bit below the lossless ceiling:
+//!    `ideal_sndr_db(lossless) − 12.04·clipped`. An over-provisioned
+//!    ADC clips nothing and the term is the `+∞` dB identity.
+//!
+//! The derivation, its assumptions, and worked RAELLA S/M/L/XL numbers
+//! live in `rust/docs/snr_metric.md`; golden anchors are pinned in
+//! `tests/golden_figures.json`.
+
+use crate::adc::enob::{
+    clipped_bits, combine_sndr_db, expected_read_sqnr_db, ideal_sndr_db, lossless_bits,
+};
+use crate::config::Value;
+use crate::error::{Error, Result};
+
+/// SNDR (dB) of the clipping/saturation distortion alone: the square-law
+/// penalty of reading a [`lossless_bits`]-bit sum with an ADC that is
+/// [`clipped_bits`] short of it. `+∞` dB (no distortion) when nothing
+/// clips, so it is the identity under [`combine_sndr_db`].
+pub fn clipping_sndr_db(n_sum: usize, cell_bits: u32, adc_bits: f64) -> f64 {
+    let clipped = clipped_bits(n_sum, cell_bits, adc_bits);
+    if clipped == f64::INFINITY {
+        // A saturated level count (`cell_bits >= 1024`, see
+        // `adc::enob::pow2_f64`) clips infinitely: infinite distortion,
+        // not the `∞ − ∞ = NaN` the raw formula would produce.
+        f64::NEG_INFINITY
+    } else if clipped > 0.0 {
+        ideal_sndr_db(lossless_bits(n_sum, cell_bits)) - 2.0 * 6.02 * clipped
+    } else {
+        f64::INFINITY
+    }
+}
+
+/// Compute SNR (dB) of an analog dot-product of `n_sum` values stored in
+/// `cell_bits`-bit cells, read through an ADC with effective resolution
+/// `enob`: quantization SQNR and clipping distortion combined as
+/// independent noise powers. Total on any input (NaN propagates; see
+/// [`combine_sndr_db`]).
+pub fn compute_snr_db(n_sum: usize, cell_bits: u32, enob: f64) -> f64 {
+    combine_sndr_db(&[
+        expected_read_sqnr_db(n_sum, cell_bits, enob),
+        clipping_sndr_db(n_sum, cell_bits, enob),
+    ])
+}
+
+/// Architecture context the compute-SNR objective needs beyond the ADC's
+/// ENOB (which the sweep grid already carries): the analog sum size and
+/// per-cell bit width.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SnrContext {
+    /// Values summed on a column line per ADC convert.
+    pub n_sum: usize,
+    /// Bits stored per memory cell.
+    pub cell_bits: u32,
+}
+
+impl Default for SnrContext {
+    /// RAELLA-M: 512-element sums of 2-bit cells (`arch::raella`).
+    fn default() -> Self {
+        SnrContext { n_sum: 512, cell_bits: 2 }
+    }
+}
+
+impl SnrContext {
+    /// [`compute_snr_db`] for this context at the given ENOB.
+    pub fn compute_snr_db(&self, enob: f64) -> f64 {
+        compute_snr_db(self.n_sum, self.cell_bits, enob)
+    }
+
+    /// Validate the context: both attributes must be positive (the math
+    /// is total regardless, but a zero sum or zero-bit cell is a caller
+    /// bug, not a design point).
+    pub fn validate(&self) -> Result<()> {
+        if self.n_sum == 0 {
+            return Err(Error::Config("snr context: n_sum must be >= 1".into()));
+        }
+        if self.cell_bits == 0 {
+            return Err(Error::Config("snr context: cell_bits must be >= 1".into()));
+        }
+        Ok(())
+    }
+
+    /// Serialize as a canonical `{"cell_bits": B, "n_sum": N}` table.
+    pub fn to_value(&self) -> Value {
+        let mut map = std::collections::BTreeMap::new();
+        map.insert("n_sum".to_string(), Value::Number(self.n_sum as f64));
+        map.insert("cell_bits".to_string(), Value::Number(self.cell_bits as f64));
+        Value::Table(map)
+    }
+
+    /// Inverse of [`SnrContext::to_value`], with typed errors on missing
+    /// or mistyped fields and validation applied.
+    pub fn from_value(v: &Value) -> Result<SnrContext> {
+        let Value::Table(table) = v else {
+            return Err(Error::Config("snr context is not a table".into()));
+        };
+        for key in table.keys() {
+            if key != "n_sum" && key != "cell_bits" {
+                return Err(Error::Config(format!("snr context: unknown key `{key}`")));
+            }
+        }
+        let n_sum = v
+            .get("n_sum")
+            .and_then(Value::as_usize)
+            .ok_or_else(|| {
+                Error::Config("snr context: `n_sum` missing or not a non-negative integer".into())
+            })?;
+        let cell_bits = v
+            .get("cell_bits")
+            .and_then(Value::as_usize)
+            .filter(|&b| b <= u32::MAX as usize)
+            .ok_or_else(|| {
+                Error::Config("snr context: `cell_bits` missing or not a u32 integer".into())
+            })?;
+        let ctx = SnrContext { n_sum, cell_bits: cell_bits as u32 };
+        ctx.validate()?;
+        Ok(ctx)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::raella::{RaellaVariant, raella};
+
+    #[test]
+    fn over_provisioned_adc_reaches_the_lossless_ceiling() {
+        // ENOB >= lossless bits: no clipping, SNR == ideal SQNR of the
+        // lossless read, bit-for-bit (the clipping term is the identity).
+        let (n_sum, cell_bits) = (16usize, 2u32);
+        let lossless = lossless_bits(n_sum, cell_bits);
+        let snr = compute_snr_db(n_sum, cell_bits, 12.0);
+        assert_eq!(snr.to_bits(), ideal_sndr_db(lossless).to_bits());
+        assert_eq!(clipping_sndr_db(n_sum, cell_bits, 12.0), f64::INFINITY);
+    }
+
+    #[test]
+    fn snr_is_monotone_in_enob_and_saturates() {
+        let ctx = SnrContext::default();
+        let mut prev = f64::NEG_INFINITY;
+        for enob in [3.0, 5.0, 7.0, 9.0, 11.0] {
+            let snr = ctx.compute_snr_db(enob);
+            assert!(snr.is_finite());
+            assert!(snr > prev, "enob={enob}: {snr} <= {prev}");
+            prev = snr;
+        }
+        // Beyond lossless, extra ENOB buys nothing.
+        let ceiling = ideal_sndr_db(lossless_bits(ctx.n_sum, ctx.cell_bits));
+        assert!(ctx.compute_snr_db(14.0) <= ceiling + 1e-12);
+        assert!(ctx.compute_snr_db(20.0).to_bits() == ctx.compute_snr_db(23.0).to_bits());
+    }
+
+    #[test]
+    fn clipping_dominates_underprovisioned_reads() {
+        // RAELLA-style operation sits well below lossless: the combined
+        // SNR must land below both the quantization-only figure and the
+        // clipping-only figure (noise powers add).
+        for v in RaellaVariant::ALL {
+            let a = raella(v);
+            let snr = compute_snr_db(a.sum_size, a.cell_bits, a.adc.enob);
+            let q = expected_read_sqnr_db(a.sum_size, a.cell_bits, a.adc.enob);
+            let c = clipping_sndr_db(a.sum_size, a.cell_bits, a.adc.enob);
+            assert!(snr < q && snr < c, "{v:?}: snr={snr} q={q} c={c}");
+            assert!(snr > 0.0, "{v:?}: {snr}");
+        }
+    }
+
+    #[test]
+    fn metric_is_total_on_degenerate_inputs() {
+        // Huge cell widths saturate (see `adc::enob::pow2_f64`) instead
+        // of panicking; an infinitely-clipped read is -inf dB (infinite
+        // distortion); NaN ENOB propagates instead of asserting.
+        assert!(compute_snr_db(128, 64, 6.0).is_finite());
+        assert_eq!(compute_snr_db(128, 5000, 6.0), f64::NEG_INFINITY);
+        assert!(compute_snr_db(512, 2, f64::NAN).is_nan());
+    }
+
+    #[test]
+    fn context_value_roundtrip_and_rejections() {
+        use crate::config::parse_json;
+        let ctx = SnrContext { n_sum: 2048, cell_bits: 3 };
+        let text = ctx.to_value().to_json_string().unwrap();
+        assert_eq!(SnrContext::from_value(&parse_json(&text).unwrap()).unwrap(), ctx);
+        assert_eq!(
+            SnrContext::from_value(&SnrContext::default().to_value()).unwrap(),
+            SnrContext::default()
+        );
+        for text in [
+            "[]",
+            "{}",
+            "{\"n_sum\": 512}",
+            "{\"n_sum\": 512, \"cell_bits\": 2, \"extra\": 1}",
+            "{\"n_sum\": 0, \"cell_bits\": 2}",
+            "{\"n_sum\": 512, \"cell_bits\": 0}",
+            "{\"n_sum\": 1.5, \"cell_bits\": 2}",
+            "{\"n_sum\": 512, \"cell_bits\": 5000000000}",
+        ] {
+            let v = parse_json(text).unwrap();
+            assert!(SnrContext::from_value(&v).is_err(), "{text}");
+        }
+    }
+}

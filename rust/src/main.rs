@@ -28,9 +28,9 @@ use cimdse::adc::{AdcModel, AdcQuery, fit_model, tuning::TuningPoint};
 use cimdse::arch::raella::{RaellaVariant, raella};
 use cimdse::cli::Args;
 use cimdse::dse::{
-    NativeEvaluator, PjrtEvaluator, ShardArtifact, ShardPlan, ShardSelector, SweepSpec,
-    SweepSummary, SweepTier, figures, merge_shards, pareto_front, run_sweep,
-    run_sweep_prepared_tier, sweep_fingerprint,
+    NativeEvaluator, ObjectiveSet, PjrtEvaluator, ShardArtifact, ShardPlan, ShardSelector,
+    SnrContext, SweepSpec, SweepSummary, SweepTier, figures, merge_shards, pareto_front,
+    pareto_front_k, run_sweep, run_sweep_prepared_tier, sweep_fingerprint_with,
 };
 use cimdse::energy::{AreaScope, accel_area, layer_energy, workload_energy};
 use cimdse::report::Table;
@@ -54,6 +54,13 @@ SUBCOMMANDS
                                                   Accelergy-style plug-in query
   sweep    [--backend native|pjrt] [--spec dense|fig5] [--points 12]
            [--enob 7] [--tsteps 12]               dense DSE + Pareto front
+           [--objectives power,area|energy,area,snr]
+           [--snr-sum 512] [--snr-cell-bits 2]    energy,area,snr adds the compute-SNR
+                                                  objective (rust/docs/snr_metric.md)
+                                                  to the front; composes with
+                                                  --summary-json / --shard / --workers
+                                                  (classic power,area outputs are
+                                                  byte-identical to omitting the flag)
            [--tier exact|fast]                    fast = lane-batched polynomial
                                                   kernel, ULP-bounded vs exact
                                                   (rust/docs/numeric_tiers.md);
@@ -95,7 +102,8 @@ SUBCOMMANDS
                                                   (rust/docs/observability.md)
   query    --addr HOST:PORT --op eval|sweep|accel|metrics|shutdown
            [eval: --enob B --throughput F --tech 32 --n-adcs 1]
-           [sweep: --spec dense|fig5 --points N --out PATH]
+           [sweep: --spec dense|fig5 --points N --out PATH
+                   --objectives ... --snr-sum N --snr-cell-bits B]
            [accel: --workload NAME]
            [metrics: --format text|prometheus]    query a running daemon
   trace    FILE                                   analyze an NDJSON trace (--trace-out):
@@ -288,6 +296,37 @@ fn sweep_spec_from_args(args: &Args) -> Result<SweepSpec> {
     }
 }
 
+/// The sweep's objective set from `--objectives` (absent means the
+/// classic `power,area` pair) plus the compute-SNR context knobs.
+/// `--snr-sum`/`--snr-cell-bits` are rejected without the tri-objective
+/// set — a silently ignored flag would make the printed sweep look like
+/// a different one than actually ran.
+fn snr_context_from_args(args: &Args) -> Result<Option<SnrContext>> {
+    let set = match args.opt("objectives") {
+        Some(csv) => ObjectiveSet::parse_csv(csv)?,
+        None => ObjectiveSet::PowerArea,
+    };
+    if set == ObjectiveSet::PowerArea {
+        for flag in ["snr-sum", "snr-cell-bits"] {
+            if args.opt(flag).is_some() {
+                return Err(Error::Config(format!(
+                    "--{flag} requires `--objectives energy,area,snr`"
+                )));
+            }
+        }
+        return Ok(None);
+    }
+    let defaults = SnrContext::default();
+    let bits = args.usize_or("snr-cell-bits", defaults.cell_bits as usize)?;
+    let ctx = SnrContext {
+        n_sum: args.usize_or("snr-sum", defaults.n_sum)?,
+        cell_bits: u32::try_from(bits)
+            .map_err(|_| Error::Config(format!("--snr-cell-bits {bits} exceeds u32")))?,
+    };
+    ctx.validate()?;
+    Ok(Some(ctx))
+}
+
 /// Human summary of a streamed sweep rollup (shared by `--summary-json`
 /// and `merge-shards`).
 fn print_sweep_summary(spec: &SweepSpec, summary: &SweepSummary) {
@@ -314,6 +353,14 @@ fn print_sweep_summary(spec: &SweepSpec, summary: &SweepSummary) {
         ),
     }
     println!("  power-area Pareto front: {} points", summary.front().len());
+    if let Some((ctx, front)) = summary.snr_context().zip(summary.snr_front()) {
+        println!(
+            "  energy-area-SNR Pareto front: {} points (n_sum {}, cell bits {})",
+            front.len(),
+            ctx.n_sum,
+            ctx.cell_bits
+        );
+    }
     if let Some(e) = summary.extrema() {
         println!(
             "  energy/convert range: {} .. {}",
@@ -330,6 +377,7 @@ fn cmd_sweep_shard(
     spec: &SweepSpec,
     model: &AdcModel,
     shard_spec: &str,
+    snr: Option<SnrContext>,
 ) -> Result<()> {
     if args.opt_or("backend", "native") != "native" {
         return Err(Error::Config(
@@ -339,7 +387,9 @@ fn cmd_sweep_shard(
     let selector = ShardSelector::parse(shard_spec)?;
     let plan = ShardPlan::new(spec, selector.n_shards())?;
     let range = plan.range(selector.index());
-    let fingerprint = sweep_fingerprint(spec, model);
+    // Objective-aware: a tri-objective shard can never be confused with
+    // (or resumed from) a classic artifact of the same grid.
+    let fingerprint = sweep_fingerprint_with(spec, model, snr.as_ref());
     let out = match args.opt("out") {
         Some(p) => p.to_string(),
         None => cimdse::dse::shard_artifact_file_name(selector.index()),
@@ -353,7 +403,7 @@ fn cmd_sweep_shard(
         return Ok(());
     }
     let artifact =
-        ShardArtifact::compute(spec, model, selector, cimdse::exec::default_workers())?;
+        ShardArtifact::compute_with(spec, model, selector, cimdse::exec::default_workers(), snr)?;
     artifact.write(&out)?;
     println!(
         "shard {selector}: evaluated {} of {} grid points [{}..{}) -> {out} (fingerprint \
@@ -379,6 +429,7 @@ fn cmd_sweep_workers(
     spec: &SweepSpec,
     model: &AdcModel,
     workers: &str,
+    snr: Option<SnrContext>,
 ) -> Result<()> {
     use cimdse::service::{LaunchOptions, run_distributed_sweep};
     if args.opt_or("backend", "native") != "native" {
@@ -411,6 +462,7 @@ fn cmd_sweep_workers(
     options.read_timeout =
         (timeout_ms > 0).then(|| std::time::Duration::from_millis(timeout_ms));
     options.out_dir = args.opt("out").map(std::path::PathBuf::from);
+    options.snr = snr;
     if let Some(path) = args.opt("trace-out") {
         // The launcher's own spans (launch root + per-shard leases);
         // workers started with their own --trace-out record the linked
@@ -506,6 +558,7 @@ fn cmd_merge_shards(args: &Args) -> Result<()> {
 fn cmd_sweep(args: &Args) -> Result<()> {
     let model = fitted_model(args.usize_or("n", 700)?, args.u64_or("seed", 1997)?)?;
     let spec = sweep_spec_from_args(args)?;
+    let snr = snr_context_from_args(args)?;
     let tier = match args.opt("tier") {
         Some(name) => SweepTier::parse(name)?,
         None => SweepTier::Exact,
@@ -557,10 +610,10 @@ fn cmd_sweep(args: &Args) -> Result<()> {
                     .into(),
             ));
         }
-        return cmd_sweep_shard(args, &spec, &model, shard_spec);
+        return cmd_sweep_shard(args, &spec, &model, shard_spec, snr);
     }
     if let Some(workers) = args.opt("workers") {
-        return cmd_sweep_workers(args, &spec, &model, workers);
+        return cmd_sweep_workers(args, &spec, &model, workers, snr);
     }
     if let Some(path) = args.opt("summary-json") {
         if args.opt_or("backend", "native") != "native" {
@@ -570,7 +623,8 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         }
         // Single-process streaming rollup — byte-identical to what
         // `merge-shards --out` writes for a complete shard set.
-        let summary = SweepSummary::compute(&spec, &model, cimdse::exec::default_workers());
+        let summary =
+            SweepSummary::compute_with(&spec, &model, cimdse::exec::default_workers(), snr);
         std::fs::write(path, summary.to_json_string()? + "\n")?;
         print_sweep_summary(&spec, &summary);
         println!("wrote sweep summary to {path}");
@@ -602,29 +656,68 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         other => return Err(Error::Config(format!("unknown backend `{other}`"))),
     };
 
-    // Pareto front over (total power, total area).
-    let objectives: Vec<(f64, f64)> = evaluated
-        .iter()
-        .map(|p| (p.metrics.total_power_w, p.metrics.total_area_um2))
-        .collect();
-    let front = pareto_front(&objectives);
-    println!("{} points on the power-area Pareto front:\n", front.len());
-    let mut t = Table::new(vec![
-        "ENOB", "total thpt", "tech", "n_adcs", "E/convert", "power", "area",
-    ]);
-    for &i in front.iter().take(args.usize_or("top", 20)?) {
-        let p = &evaluated[i];
-        t.row(vec![
-            format!("{:.1}", p.query.enob),
-            fmt_throughput(p.query.total_throughput),
-            format!("{} nm", p.query.tech_nm),
-            p.query.n_adcs.to_string(),
-            fmt_energy_pj(p.metrics.energy_pj_per_convert),
-            fmt_power_w(p.metrics.total_power_w),
-            fmt_area_um2(p.metrics.total_area_um2),
+    if let Some(ctx) = snr {
+        // Tri-objective front over (energy/convert, total area, -SNR):
+        // same indices as the streaming `sweep_energy_area_snr_front`
+        // (SNR enters negated so every objective minimizes).
+        let objectives: Vec<[f64; 3]> = evaluated
+            .iter()
+            .map(|p| {
+                [
+                    p.metrics.energy_pj_per_convert,
+                    p.metrics.total_area_um2,
+                    -ctx.compute_snr_db(p.query.enob),
+                ]
+            })
+            .collect();
+        let front = pareto_front_k(&objectives);
+        println!(
+            "{} points on the energy-area-SNR Pareto front (n_sum {}, cell bits {}):\n",
+            front.len(),
+            ctx.n_sum,
+            ctx.cell_bits
+        );
+        let mut t = Table::new(vec![
+            "ENOB", "total thpt", "tech", "n_adcs", "E/convert", "area", "SNR",
         ]);
+        for &i in front.iter().take(args.usize_or("top", 20)?) {
+            let p = &evaluated[i];
+            t.row(vec![
+                format!("{:.1}", p.query.enob),
+                fmt_throughput(p.query.total_throughput),
+                format!("{} nm", p.query.tech_nm),
+                p.query.n_adcs.to_string(),
+                fmt_energy_pj(p.metrics.energy_pj_per_convert),
+                fmt_area_um2(p.metrics.total_area_um2),
+                format!("{:.2} dB", ctx.compute_snr_db(p.query.enob)),
+            ]);
+        }
+        println!("{}", t.render());
+    } else {
+        // Pareto front over (total power, total area).
+        let objectives: Vec<(f64, f64)> = evaluated
+            .iter()
+            .map(|p| (p.metrics.total_power_w, p.metrics.total_area_um2))
+            .collect();
+        let front = pareto_front(&objectives);
+        println!("{} points on the power-area Pareto front:\n", front.len());
+        let mut t = Table::new(vec![
+            "ENOB", "total thpt", "tech", "n_adcs", "E/convert", "power", "area",
+        ]);
+        for &i in front.iter().take(args.usize_or("top", 20)?) {
+            let p = &evaluated[i];
+            t.row(vec![
+                format!("{:.1}", p.query.enob),
+                fmt_throughput(p.query.total_throughput),
+                format!("{} nm", p.query.tech_nm),
+                p.query.n_adcs.to_string(),
+                fmt_energy_pj(p.metrics.energy_pj_per_convert),
+                fmt_power_w(p.metrics.total_power_w),
+                fmt_area_um2(p.metrics.total_area_um2),
+            ]);
+        }
+        println!("{}", t.render());
     }
-    println!("{}", t.render());
     if let Some(path) = args.opt("csv") {
         let mut csv = String::from(
             "enob,total_throughput,tech_nm,n_adcs,energy_pj,area_um2,power_w,total_area_um2\n",
@@ -1009,7 +1102,8 @@ fn cmd_query(args: &Args) -> Result<()> {
         }
         "sweep" => {
             let spec = sweep_spec_from_args(args)?;
-            let (_result, summary) = client.sweep(&spec, None)?;
+            let snr = snr_context_from_args(args)?;
+            let (_result, summary) = client.sweep_with(&spec, None, snr.as_ref())?;
             print_sweep_summary(&spec, &summary);
             if let Some(path) = args.opt("out") {
                 // Canonical summary JSON — byte-identical to what

@@ -11,7 +11,9 @@ use std::time::Duration;
 
 use crate::adc::{AdcModel, AdcQuery};
 use crate::config::{Value, parse_json};
-use crate::dse::{ShardArtifact, ShardSelector, SweepSpec, SweepSummary};
+use crate::dse::{
+    ObjectiveSet, ShardArtifact, ShardSelector, SnrContext, SweepSpec, SweepSummary,
+};
 use crate::error::{Error, Result};
 
 use super::protocol;
@@ -184,12 +186,26 @@ impl Client {
         spec: &SweepSpec,
         model: Option<&AdcModel>,
     ) -> Result<(Value, SweepSummary)> {
+        self.sweep_with(spec, model, None)
+    }
+
+    /// [`Client::sweep`] with an optional compute-SNR objective context:
+    /// `Some(ctx)` requests the `energy,area,snr` objective set (the
+    /// summary then carries the tri-objective front under `ctx`), `None`
+    /// sends the exact classic frame [`Client::sweep`] always has.
+    pub fn sweep_with(
+        &mut self,
+        spec: &SweepSpec,
+        model: Option<&AdcModel>,
+        snr: Option<&SnrContext>,
+    ) -> Result<(Value, SweepSummary)> {
         let mut map = std::collections::BTreeMap::new();
         map.insert("op".to_string(), Value::String("sweep".to_string()));
         map.insert("spec".to_string(), spec.to_value());
         if let Some(m) = model {
             map.insert("model".to_string(), protocol::model_to_value(m));
         }
+        insert_objectives(&mut map, snr);
         let result = self.call(&Value::Table(map))?;
         let summary = result
             .get("summary")
@@ -226,6 +242,21 @@ impl Client {
         selector: ShardSelector,
         trace: Option<&Value>,
     ) -> Result<ShardArtifact> {
+        self.shard_traced_with(spec, model, selector, trace, None)
+    }
+
+    /// [`Client::shard_traced`] with an optional compute-SNR objective
+    /// context (see [`Client::sweep_with`]); the returned artifact's
+    /// fingerprint then covers the context, so the launcher's resume
+    /// probe distinguishes tri-objective artifacts from classic ones.
+    pub fn shard_traced_with(
+        &mut self,
+        spec: &SweepSpec,
+        model: Option<&AdcModel>,
+        selector: ShardSelector,
+        trace: Option<&Value>,
+        snr: Option<&SnrContext>,
+    ) -> Result<ShardArtifact> {
         let mut map = std::collections::BTreeMap::new();
         map.insert("op".to_string(), Value::String("shard".to_string()));
         map.insert("spec".to_string(), spec.to_value());
@@ -236,6 +267,7 @@ impl Client {
         if let Some(t) = trace {
             map.insert("trace".to_string(), t.clone());
         }
+        insert_objectives(&mut map, snr);
         let result = self.call(&Value::Table(map))?;
         let artifact = result
             .get("artifact")
@@ -291,6 +323,25 @@ impl Client {
         map.insert("op".to_string(), Value::String("cancel".to_string()));
         map.insert("target".to_string(), target.clone());
         self.call(&Value::Table(map))
+    }
+}
+
+/// Attach the `objectives`/`snr` fields selecting the tri-objective
+/// set to a request frame. `None` inserts nothing — the frame is
+/// byte-identical to the pre-objectives protocol.
+fn insert_objectives(map: &mut std::collections::BTreeMap<String, Value>, snr: Option<&SnrContext>) {
+    if let Some(ctx) = snr {
+        map.insert(
+            "objectives".to_string(),
+            Value::Array(
+                ObjectiveSet::EnergyAreaSnr
+                    .names()
+                    .iter()
+                    .map(|n| Value::String((*n).to_string()))
+                    .collect(),
+            ),
+        );
+        map.insert("snr".to_string(), ctx.to_value());
     }
 }
 

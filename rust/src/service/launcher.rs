@@ -57,8 +57,8 @@ use crate::adc::AdcModel;
 use crate::config::Value;
 use crate::dse::shard::artifact_file_name;
 use crate::dse::{
-    MergedSweep, ShardArtifact, ShardPlan, ShardSelector, SweepSpec, merge_shards,
-    sweep_fingerprint,
+    MergedSweep, ShardArtifact, ShardPlan, ShardSelector, SnrContext, SweepSpec, merge_shards,
+    sweep_fingerprint_with,
 };
 use crate::error::{Error, Result};
 use crate::stats::quantile;
@@ -106,6 +106,12 @@ pub struct LaunchOptions {
     /// Consecutive failures after which a worker is retired for the
     /// rest of the launch.
     pub worker_failure_limit: usize,
+    /// Compute-SNR objective context: `Some(ctx)` runs the whole fleet
+    /// tri-objective (`energy,area,snr`), and the launch fingerprint —
+    /// hence resume probing — covers the context, so a tri-objective
+    /// re-run never accepts classic artifacts from a previous run (or
+    /// vice versa). `None` is the classic byte-identical launch.
+    pub snr: Option<SnrContext>,
 }
 
 impl LaunchOptions {
@@ -122,6 +128,7 @@ impl LaunchOptions {
             out_dir: None,
             read_timeout: Some(Duration::from_secs(60)),
             worker_failure_limit,
+            snr: None,
         }
     }
 }
@@ -354,7 +361,7 @@ fn run_one(
     let artifact = client
         .as_mut()
         .expect("connected above")
-        .shard_traced(spec, Some(model), selector, trace)?;
+        .shard_traced_with(spec, Some(model), selector, trace, options.snr.as_ref())?;
     // `Client::shard` already validated the artifact against itself
     // (fingerprint vs embedded spec/model, range vs plan, payload
     // checksum); these two checks pin it to *this* sweep and *this*
@@ -483,7 +490,13 @@ pub fn run_distributed_sweep(
         ));
     }
     let plan = ShardPlan::new(spec, options.n_shards)?;
-    let fingerprint = sweep_fingerprint(spec, model);
+    if let Some(ctx) = &options.snr {
+        ctx.validate()?;
+    }
+    // Objective-aware fingerprint: resume probing and worker-response
+    // validation both pin artifacts to this sweep *and* this objective
+    // set/context.
+    let fingerprint = sweep_fingerprint_with(spec, model, options.snr.as_ref());
     let mut artifacts: Vec<Option<ShardArtifact>> = vec![None; plan.n_shards()];
     let mut resumed = 0usize;
     if let Some(dir) = &options.out_dir {

@@ -63,7 +63,7 @@ use std::collections::BTreeMap;
 use crate::adc::{AdcMetrics, AdcModel, AdcQuery};
 use crate::config::{Value, f64_from_bits_hex, f64_to_bits_hex};
 use crate::dse::accel::AccelSweepSpec;
-use crate::dse::{ShardPlan, ShardSelector, SweepSpec, shard};
+use crate::dse::{ObjectiveSet, ShardPlan, ShardSelector, SnrContext, SweepSpec, shard};
 
 /// Hard cap on one request frame (bytes, newline excluded). A frame
 /// that grows past this yields an [`CODE_OVERSIZED_FRAME`] error frame
@@ -185,6 +185,10 @@ pub struct SweepRequest {
     pub spec: SweepSpec,
     /// Model override; `None` uses the server's default model.
     pub model: Option<AdcModel>,
+    /// Compute-SNR objective context, iff the frame selected the
+    /// `energy,area,snr` objective set via its `objectives` field.
+    /// `None` is the classic power/area sweep, byte-identical responses.
+    pub snr: Option<SnrContext>,
 }
 
 /// `op: "shard"` payload — the remote form of `cimdse sweep --shard i/N`:
@@ -199,6 +203,9 @@ pub struct ShardRequest {
     pub selector: ShardSelector,
     /// Model override; `None` uses the server's default model.
     pub model: Option<AdcModel>,
+    /// Compute-SNR objective context, iff the frame selected the
+    /// `energy,area,snr` objective set (see [`SweepRequest::snr`]).
+    pub snr: Option<SnrContext>,
 }
 
 /// `op: "accel"` payload.
@@ -319,6 +326,47 @@ fn model_field(v: &Value) -> Result<Option<AdcModel>, Reject> {
     match v.get("model") {
         None | Some(Value::Null) => Ok(None),
         Some(m) => model_from_value(m).map(Some),
+    }
+}
+
+/// The optional `objectives` / `snr` fields of a `sweep` or `shard`
+/// frame, reduced to the server-side representation: `None` for the
+/// classic `power,area` set (whether requested explicitly or by
+/// omission — same bytes either way), `Some(context)` for
+/// `energy,area,snr`. An `snr` context table is only legal alongside
+/// the SNR objective set; the context defaults to
+/// [`SnrContext::default`] (RAELLA-M) when the set is selected without
+/// one. Unknown names, partial/reordered sets, non-string entries, and
+/// malformed contexts are all [`CODE_BAD_REQUEST`] — no new error code.
+fn objectives_field(v: &Value) -> Result<Option<SnrContext>, Reject> {
+    let set = match v.get("objectives") {
+        None | Some(Value::Null) => ObjectiveSet::PowerArea,
+        Some(Value::Array(items)) => {
+            let names = items
+                .iter()
+                .enumerate()
+                .map(|(i, item)| {
+                    item.as_str()
+                        .ok_or_else(|| Reject::bad(format!("`objectives[{i}]` is not a string")))
+                })
+                .collect::<Result<Vec<&str>, Reject>>()?;
+            ObjectiveSet::parse_names(&names).map_err(|e| Reject::bad(e.to_string()))?
+        }
+        Some(_) => {
+            return Err(Reject::bad("`objectives` is not an array of objective names"));
+        }
+    };
+    match (set, v.get("snr")) {
+        (ObjectiveSet::PowerArea, None | Some(Value::Null)) => Ok(None),
+        (ObjectiveSet::PowerArea, Some(_)) => Err(Reject::bad(
+            "`snr` context is only valid with the `energy,area,snr` objective set",
+        )),
+        (ObjectiveSet::EnergyAreaSnr, None | Some(Value::Null)) => {
+            Ok(Some(SnrContext::default()))
+        }
+        (ObjectiveSet::EnergyAreaSnr, Some(s)) => {
+            SnrContext::from_value(s).map(Some).map_err(|e| Reject::bad(e.to_string()))
+        }
     }
 }
 
@@ -476,7 +524,11 @@ fn parse_sweep(v: &Value) -> Result<Request, Reject> {
             "sweep grid length overflows usize; split the spec into sub-range specs",
         ));
     }
-    Ok(Request::Sweep(SweepRequest { spec, model: model_field(v)? }))
+    Ok(Request::Sweep(SweepRequest {
+        spec,
+        model: model_field(v)?,
+        snr: objectives_field(v)?,
+    }))
 }
 
 fn parse_shard(v: &Value) -> Result<Request, Reject> {
@@ -500,7 +552,12 @@ fn parse_shard(v: &Value) -> Result<Request, Reject> {
     // Plan up front so grid problems (axis-product overflow, > 2^53
     // points) are typed rejections here, not dispatch-time surprises.
     ShardPlan::new(&spec, selector.n_shards()).map_err(|e| Reject::bad(e.to_string()))?;
-    Ok(Request::Shard(ShardRequest { spec, selector, model: model_field(v)? }))
+    Ok(Request::Shard(ShardRequest {
+        spec,
+        selector,
+        model: model_field(v)?,
+        snr: objectives_field(v)?,
+    }))
 }
 
 fn parse_accel(v: &Value) -> Result<Request, Reject> {
@@ -847,6 +904,90 @@ mod tests {
         ] {
             let (op, r) = req(&text);
             assert_eq!(op.as_deref(), Some("shard"), "{text}");
+            let e = r.expect_err(&text);
+            assert_eq!(e.code, CODE_BAD_REQUEST, "{text}");
+            assert!(e.message.contains(needle), "{text}: {}", e.message);
+        }
+    }
+
+    #[test]
+    fn objectives_select_the_snr_context_or_reject() {
+        let spec = r#""spec": {"enobs": [4, 8], "total_throughputs": [1e9], "tech_nms": [32],
+            "n_adcs": [1, 2]}"#;
+        // Absent objectives and the explicit classic set are the same
+        // classic request (no snr context).
+        for text in [
+            format!(r#"{{"op": "sweep", {spec}}}"#),
+            format!(r#"{{"op": "sweep", {spec}, "objectives": ["power", "area"]}}"#),
+            format!(r#"{{"op": "sweep", {spec}, "objectives": null}}"#),
+        ] {
+            match req(&text).1.unwrap() {
+                Request::Sweep(s) => assert!(s.snr.is_none(), "{text}"),
+                other => panic!("wrong request: {other:?}"),
+            }
+        }
+        // The tri set without a context defaults to RAELLA-M.
+        let text = format!(r#"{{"op": "sweep", {spec}, "objectives": ["energy", "area", "snr"]}}"#);
+        match req(&text).1.unwrap() {
+            Request::Sweep(s) => assert_eq!(s.snr, Some(SnrContext::default())),
+            other => panic!("wrong request: {other:?}"),
+        }
+        // An explicit context rides along, on shard frames too.
+        let text = format!(
+            r#"{{"op": "shard", "shard": "1/2", {spec}, "objectives": ["energy", "area", "snr"],
+                "snr": {{"n_sum": 2048, "cell_bits": 3}}}}"#
+        );
+        match req(&text).1.unwrap() {
+            Request::Shard(s) => {
+                assert_eq!(s.snr, Some(SnrContext { n_sum: 2048, cell_bits: 3 }));
+            }
+            other => panic!("wrong request: {other:?}"),
+        }
+        for (text, needle) in [
+            (format!(r#"{{"op": "sweep", {spec}, "objectives": "snr"}}"#), "not an array"),
+            (format!(r#"{{"op": "sweep", {spec}, "objectives": [7]}}"#), "objectives[0]"),
+            (
+                format!(r#"{{"op": "sweep", {spec}, "objectives": ["energy", "snr"]}}"#),
+                "unsupported objective set",
+            ),
+            (
+                format!(r#"{{"op": "sweep", {spec}, "objectives": ["snr", "area", "energy"]}}"#),
+                "unsupported objective set",
+            ),
+            (
+                format!(r#"{{"op": "sweep", {spec}, "snr": {{"n_sum": 512, "cell_bits": 2}}}}"#),
+                "only valid with",
+            ),
+            (
+                format!(
+                    r#"{{"op": "shard", "shard": "0/2", {spec},
+                        "objectives": ["power", "area"], "snr": {{"n_sum": 512, "cell_bits": 2}}}}"#
+                ),
+                "only valid with",
+            ),
+            (
+                format!(
+                    r#"{{"op": "sweep", {spec}, "objectives": ["energy", "area", "snr"],
+                        "snr": {{"n_sum": 0, "cell_bits": 2}}}}"#
+                ),
+                "n_sum",
+            ),
+            (
+                format!(
+                    r#"{{"op": "sweep", {spec}, "objectives": ["energy", "area", "snr"],
+                        "snr": {{"n_sum": 512, "cell_bits": 2, "extra": 1}}}}"#
+                ),
+                "unknown key",
+            ),
+            (
+                format!(
+                    r#"{{"op": "sweep", {spec}, "objectives": ["energy", "area", "snr"],
+                        "snr": [512, 2]}}"#
+                ),
+                "not a table",
+            ),
+        ] {
+            let (_, r) = req(&text);
             let e = r.expect_err(&text);
             assert_eq!(e.code, CODE_BAD_REQUEST, "{text}");
             assert!(e.message.contains(needle), "{text}: {}", e.message);

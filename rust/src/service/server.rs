@@ -674,9 +674,15 @@ fn dispatch_sweep(
             "sweep grid length overflows usize; split the spec into sub-range specs",
         )
     })?;
-    let summary =
-        SweepSummary::compute_range_ctl(&req.spec, prepared.model(), shared.workers, range, ctl)
-            .ok_or_else(cancelled_reject)?;
+    let summary = SweepSummary::compute_range_ctl_with(
+        &req.spec,
+        prepared.model(),
+        shared.workers,
+        range,
+        ctl,
+        req.snr,
+    )
+    .ok_or_else(cancelled_reject)?;
     let mut map = std::collections::BTreeMap::new();
     map.insert("points".to_string(), Value::Number(summary.count() as f64));
     map.insert("summary".to_string(), summary.to_value());
@@ -700,10 +706,16 @@ fn dispatch_shard(
     // summary checksum, embedded spec+model) is byte-identical to what
     // that subcommand writes to disk, so a launcher can persist it
     // verbatim and `merge_shards` cannot tell the difference.
-    let artifact =
-        ShardArtifact::compute_ctl(&req.spec, prepared.model(), req.selector, shared.workers, ctl)
-            .map_err(|e| Reject::new(CODE_INTERNAL, e.to_string()))?
-            .ok_or_else(cancelled_reject)?;
+    let artifact = ShardArtifact::compute_ctl_with(
+        &req.spec,
+        prepared.model(),
+        req.selector,
+        shared.workers,
+        ctl,
+        req.snr,
+    )
+    .map_err(|e| Reject::new(CODE_INTERNAL, e.to_string()))?
+    .ok_or_else(cancelled_reject)?;
     let mut map = std::collections::BTreeMap::new();
     map.insert(
         "points".to_string(),
@@ -869,6 +881,63 @@ mod tests {
             let back = ShardArtifact::from_value(result.get("artifact").unwrap()).unwrap();
             assert_eq!(back.summary().count(), result.require_usize("points").unwrap());
         }
+    }
+
+    #[test]
+    fn tri_objective_frames_are_byte_identical_to_local_compute() {
+        let shared = shared_for_test();
+        let spec = crate::dse::SweepSpec {
+            enobs: vec![4.0, 8.0],
+            total_throughputs: vec![1e8, 1e9],
+            tech_nms: vec![32.0],
+            n_adcs: vec![1, 4],
+        };
+        let spec_json = spec.to_value().to_json_string().unwrap();
+        let ctx = crate::dse::SnrContext { n_sum: 2048, cell_bits: 3 };
+        let objectives = r#""objectives": ["energy", "area", "snr"]"#;
+        let snr = r#""snr": {"n_sum": 2048, "cell_bits": 3}"#;
+
+        let frame = format!(r#"{{"op": "sweep", "spec": {spec_json}, {objectives}, {snr}}}"#);
+        let result = ok_result(&shared, &frame);
+        let served = result.get("summary").unwrap().to_json_string().unwrap();
+        let direct = SweepSummary::compute_with(&spec, &shared.default_model, 2, Some(ctx))
+            .to_value()
+            .to_json_string()
+            .unwrap();
+        assert_eq!(served, direct, "served tri-objective summary must be byte-identical");
+        assert!(served.contains("snr_front"), "{served}");
+
+        for i in 0..2usize {
+            let frame = format!(
+                r#"{{"op": "shard", "shard": "{i}/2", "spec": {spec_json}, {objectives}, {snr}}}"#
+            );
+            let result = ok_result(&shared, &frame);
+            let served = result.get("artifact").unwrap().to_json_string().unwrap();
+            let direct = ShardArtifact::compute_with(
+                &spec,
+                &shared.default_model,
+                crate::dse::ShardSelector::new(i, 2).unwrap(),
+                2,
+                Some(ctx),
+            )
+            .unwrap()
+            .to_value()
+            .to_json_string()
+            .unwrap();
+            assert_eq!(served, direct, "tri shard {i}/2 must serialize byte-identically");
+            let back = ShardArtifact::from_value(result.get("artifact").unwrap()).unwrap();
+            assert_eq!(back.summary().snr_context(), Some(ctx));
+        }
+
+        // Explicitly requesting the classic set changes nothing: same
+        // bytes as a frame with no objectives at all.
+        let classic = format!(r#"{{"op": "sweep", "spec": {spec_json}}}"#);
+        let explicit =
+            format!(r#"{{"op": "sweep", "spec": {spec_json}, "objectives": ["power", "area"]}}"#);
+        assert_eq!(
+            ok_result(&shared, &classic).to_json_string().unwrap(),
+            ok_result(&shared, &explicit).to_json_string().unwrap()
+        );
     }
 
     #[test]

@@ -23,7 +23,10 @@ use std::collections::BTreeMap;
 use std::path::PathBuf;
 
 use cimdse::adc::AdcModel;
+use cimdse::adc::enob::ideal_sndr_db;
+use cimdse::arch::raella::{RaellaVariant, raella};
 use cimdse::config::{Value, parse_json};
+use cimdse::dse::compute_snr_db;
 use cimdse::dse::figures::{Fig5Cell, fig2, fig3, fig5};
 use cimdse::survey::generator::{SurveyConfig, generate_survey};
 
@@ -79,6 +82,10 @@ struct Computed {
     fig5_area: Vec<Vec<f64>>,
     fig5_eap: Vec<Vec<f64>>,
     fig5_optimal: Vec<u32>,
+    /// Compute-SNR anchors: the ideal 8-bit SNDR and the RAELLA
+    /// S/M/L/XL clipping ladder (per-variant `compute_snr_db`).
+    snr_ideal_8bit: f64,
+    snr_raella: Vec<f64>,
 }
 
 fn compute() -> Computed {
@@ -110,6 +117,13 @@ fn compute() -> Computed {
         let best: &Fig5Cell = group.iter().min_by(|a, b| a.eap.total_cmp(&b.eap)).unwrap();
         fig5_optimal.push(best.n_adcs);
     }
+    let snr_raella = RaellaVariant::ALL
+        .iter()
+        .map(|&v| {
+            let a = raella(v);
+            compute_snr_db(a.sum_size, a.cell_bits, a.adc.enob)
+        })
+        .collect();
     Computed {
         throughputs_23,
         fig2_values: line_values(&d2.lines),
@@ -119,6 +133,8 @@ fn compute() -> Computed {
         fig5_area,
         fig5_eap,
         fig5_optimal,
+        snr_ideal_8bit: ideal_sndr_db(8.0),
+        snr_raella,
     }
 }
 
@@ -155,8 +171,30 @@ fn write_golden(c: &Computed) {
         "optimal_n_adcs".into(),
         Value::Array(c.fig5_optimal.iter().map(|&n| Value::Number(n as f64)).collect()),
     );
+    let mut snr = BTreeMap::new();
+    snr.insert("cell_bits".into(), Value::Number(2.0));
+    snr.insert(
+        "enobs".into(),
+        list(&RaellaVariant::ALL.map(|v| raella(v).adc.enob)),
+    );
+    snr.insert("ideal_8bit_db".into(), Value::Number(c.snr_ideal_8bit));
+    snr.insert(
+        "n_sums".into(),
+        list(&RaellaVariant::ALL.map(|v| raella(v).sum_size as f64)),
+    );
+    snr.insert("values_db".into(), list(&c.snr_raella));
+    snr.insert(
+        "variants".into(),
+        Value::Array(
+            RaellaVariant::ALL
+                .iter()
+                .map(|v| Value::String(v.name().to_lowercase()))
+                .collect(),
+        ),
+    );
     let mut root = BTreeMap::new();
     root.insert("schema".into(), Value::Number(1.0));
+    root.insert("snr_metric".into(), Value::Table(snr));
     root.insert("model".into(), Value::String("generator_truth".into()));
     root.insert("rel_tol".into(), Value::Number(1e-9));
     root.insert("fig2_energy".into(), fig23(&c.fig2_values, &c.throughputs_23));
@@ -246,4 +284,33 @@ fn figures_match_golden_values() {
     let optimal = f64_list(f5, "optimal_n_adcs");
     let optimal: Vec<u32> = optimal.iter().map(|&x| x as u32).collect();
     assert_eq!(computed.fig5_optimal, optimal, "fig5 optimal n_adcs per throughput");
+
+    // Compute-SNR anchors (rust/docs/snr_metric.md): the textbook ideal
+    // 8-bit SNDR and the RAELLA S/M/L/XL clipping ladder.
+    let snr = golden.get("snr_metric").expect("golden lacks `snr_metric`");
+    assert_eq!(snr.require_usize("cell_bits").unwrap(), 2);
+    assert_close(
+        computed.snr_ideal_8bit,
+        snr.require_f64("ideal_8bit_db").unwrap(),
+        rel_tol,
+        "snr_metric ideal_8bit_db",
+    );
+    assert!((computed.snr_ideal_8bit - 49.92).abs() < 1e-9, "6.02*8 + 1.76 drifted");
+    let n_sums = f64_list(snr, "n_sums");
+    let enobs = f64_list(snr, "enobs");
+    for (i, &v) in RaellaVariant::ALL.iter().enumerate() {
+        let a = raella(v);
+        assert_eq!(n_sums[i], a.sum_size as f64, "snr_metric n_sums[{i}]");
+        assert_eq!(enobs[i], a.adc.enob, "snr_metric enobs[{i}]");
+    }
+    let values = f64_list(snr, "values_db");
+    assert_eq!(values.len(), RaellaVariant::ALL.len());
+    for (i, (&got, &want)) in computed.snr_raella.iter().zip(&values).enumerate() {
+        assert_close(got, want, rel_tol, &format!("snr_metric values_db[{i}]"));
+    }
+    // Bigger variants trade +1 ADC bit for +2 lossless bits: the
+    // combined SNR still rises monotonically S -> XL (all ~22 dB).
+    for w in computed.snr_raella.windows(2) {
+        assert!(w[0] < w[1], "clipping ladder must rise: {:?}", computed.snr_raella);
+    }
 }

@@ -15,8 +15,8 @@ use std::process::Command;
 
 use cimdse::adc::{AdcModel, fit_model};
 use cimdse::dse::{
-    ShardArtifact, SweepSpec, SweepSummary, merge_shards, sweep_min_eap,
-    sweep_power_area_front,
+    ShardArtifact, SnrContext, SweepSpec, SweepSummary, merge_shards,
+    sweep_energy_area_snr_front, sweep_min_eap, sweep_power_area_front,
 };
 use cimdse::survey::generator::{SurveyConfig, generate_survey};
 
@@ -158,6 +158,99 @@ fn multi_process_shards_merge_bit_identical_for_1_3_7() {
             let _ = std::fs::remove_dir_all(&dir);
         }
     }
+}
+
+/// Tri-objective (`--objectives energy,area,snr`) multi-process
+/// round-trip: shard processes + `merge-shards` reproduce the
+/// single-process `--summary-json` byte-for-byte, the snr-aware
+/// fingerprint keeps tri and classic artifacts of the same grid from
+/// resuming or merging into each other, and the snr flag surface is
+/// validated with typed errors.
+#[test]
+fn tri_objective_shards_merge_bit_identical_and_never_mix_with_classic() {
+    let model = cli_model();
+    let spec = SweepSpec::dense(5);
+    let ctx = SnrContext { n_sum: 2048, cell_bits: 3 };
+    let reference = SweepSummary::compute_with(&spec, &model, 4, Some(ctx));
+    let ref_json = reference.to_json_string().unwrap();
+    // The summary's tri front matches the public streaming entry point.
+    assert_eq!(
+        reference.snr_front_indices().unwrap(),
+        sweep_energy_area_snr_front(&spec, &model, 4, &ctx).into_indices()
+    );
+
+    let cli = [
+        "--spec", "dense", "--points", "5", "--objectives", "energy,area,snr",
+        "--snr-sum", "2048", "--snr-cell-bits", "3",
+    ];
+    let classic_cli = ["--spec", "dense", "--points", "5"];
+    let n = 3usize;
+    let dir = tmpdir("tri");
+    let files = shard_files(&dir, n);
+    for (i, out) in files.iter().enumerate() {
+        let stdout = run_shard(&cli, &format!("{i}/{n}"), out);
+        assert!(stdout.contains("evaluated"), "{i}/{n}: {stdout}");
+    }
+    // Resume works within the tri objective set...
+    let stdout = run_shard(&cli, "1/3", &files[1]);
+    assert!(stdout.contains("already complete"), "{stdout}");
+    // ...but a classic run of the same grid must NOT resume from a tri
+    // artifact (the snr context is part of the fingerprint), and vice
+    // versa after it overwrites.
+    let stdout = run_shard(&classic_cli, "1/3", &files[1]);
+    assert!(stdout.contains("evaluated"), "objective change must recompute: {stdout}");
+    let stdout = run_shard(&cli, "1/3", &files[1]);
+    assert!(stdout.contains("evaluated"), "context restore must recompute: {stdout}");
+
+    // Binary-level: merge-shards --out == tri sweep --summary-json, and
+    // both equal the library reference bytes.
+    let merged_path = dir.join("merged.json");
+    let merged_str = merged_path.to_str().unwrap();
+    let mut margs = vec!["merge-shards"];
+    margs.extend(files.iter().map(String::as_str));
+    margs.extend_from_slice(&["--out", merged_str]);
+    let stdout = run_ok(&margs);
+    assert!(stdout.contains("energy-area-SNR Pareto front"), "{stdout}");
+    let single_path = dir.join("single.json");
+    let single_str = single_path.to_str().unwrap();
+    let mut sargs = vec!["sweep"];
+    sargs.extend_from_slice(&cli);
+    sargs.extend_from_slice(&["--summary-json", single_str]);
+    run_ok(&sargs);
+    assert_eq!(
+        std::fs::read(&merged_path).unwrap(),
+        std::fs::read(&single_path).unwrap(),
+        "tri merge and single-process summary bytes must match"
+    );
+    assert_eq!(
+        String::from_utf8(std::fs::read(&single_path).unwrap()).unwrap(),
+        format!("{ref_json}\n"),
+        "tri binary summary must equal the library reference"
+    );
+
+    // Mixing classic and tri artifacts of the same grid is a typed
+    // fingerprint error at merge time.
+    let classic = dir.join("classic.json");
+    run_shard(&classic_cli, "0/3", classic.to_str().unwrap());
+    let stderr = run_err(&[
+        "merge-shards", classic.to_str().unwrap(), files[1].as_str(), files[2].as_str(),
+    ]);
+    assert!(stderr.contains("fingerprint"), "{stderr}");
+
+    // Flag validation: snr knobs require the tri objective set; unknown
+    // sets are named in the error.
+    let stderr = run_err(&["sweep", "--spec", "dense", "--points", "4", "--snr-sum", "64"]);
+    assert!(stderr.contains("--objectives energy,area,snr"), "{stderr}");
+    let stderr = run_err(&[
+        "sweep", "--spec", "dense", "--points", "4", "--objectives", "energy,snr",
+    ]);
+    assert!(stderr.contains("unsupported objective set"), "{stderr}");
+    let stderr = run_err(&[
+        "sweep", "--spec", "dense", "--points", "4", "--objectives", "energy,area,snr",
+        "--snr-sum", "0",
+    ]);
+    assert!(stderr.contains("n_sum"), "{stderr}");
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 #[test]

@@ -6,8 +6,9 @@
 
 use cimdse::adc::{AdcMetrics, AdcModel, AdcQuery, PreparedModel, TuningPoint};
 use cimdse::dse::{
-    NativeEvaluator, ShardPlan, StreamingFront, SweepSpec, pareto_front, run_sweep,
-    run_sweep_fold, run_sweep_prepared, sweep_min_eap, sweep_power_area_front,
+    FrontK, NativeEvaluator, ShardPlan, SnrContext, StreamingFront, SweepSpec, pareto_front,
+    pareto_front_k, run_sweep, run_sweep_fold, run_sweep_prepared, sweep_energy_area_snr_front,
+    sweep_min_eap, sweep_power_area_front,
 };
 use cimdse::testing::{Config, check};
 use cimdse::util::Rng;
@@ -273,6 +274,83 @@ fn front_merge_with_non_finite_objectives_never_panics_and_matches_finite_front(
         let brute: Vec<usize> =
             pareto_front(&objectives).into_iter().map(|j| finite[j].0).collect();
         assert_eq!(whole.into_indices(), brute);
+    });
+}
+
+/// The k-objective generalization of the test above: a [`FrontK`] fed
+/// whole must equal the same points split across random sub-fronts and
+/// merged in random order, and both must equal the materialized
+/// [`pareto_front_k`] — including under NaN/±inf injection (non-finite
+/// rows are dropped identically by the streaming and materialized
+/// paths, so their index sets cannot diverge).
+#[test]
+fn front_k_merge_with_non_finite_objectives_matches_materialized_front() {
+    check(Config::default().cases(150).seed(43), |rng| {
+        let n = rng.index(40);
+        let coord = |rng: &mut Rng| match rng.index(8) {
+            0 => f64::NAN,
+            1 => f64::INFINITY,
+            2 => f64::NEG_INFINITY,
+            // Coarse values so duplicates and dominance ties are common.
+            _ => rng.uniform(0.0, 4.0).round(),
+        };
+        let pts: Vec<[f64; 3]> =
+            (0..n).map(|_| [coord(rng), coord(rng), coord(rng)]).collect();
+
+        let mut whole = FrontK::<3>::new();
+        for (i, &p) in pts.iter().enumerate() {
+            whole.push(p, i);
+        }
+        let k = 1 + rng.index(5);
+        let mut parts: Vec<FrontK<3>> = (0..k).map(|_| FrontK::new()).collect();
+        for (i, &p) in pts.iter().enumerate() {
+            parts[rng.index(k)].push(p, i);
+        }
+        rng.shuffle(&mut parts);
+        let merged = parts.into_iter().fold(FrontK::new(), |acc, part| acc.merge(part));
+        assert_eq!(merged.indices(), whole.indices());
+
+        // `pareto_front_k` skips non-finite rows itself and reports
+        // original indices, so it is the ground truth directly.
+        assert_eq!(whole.into_indices(), pareto_front_k(&pts));
+    });
+}
+
+/// The streamed tri-objective sweep front equals the brute-force one:
+/// materialize the sweep, build the (energy, area, -SNR) rows, run
+/// [`pareto_front_k`]. Random SNR contexts include degenerate cell
+/// widths whose saturated math yields -inf SNR (the whole grid drops
+/// off the front on that axis) — both paths must agree there too.
+#[test]
+fn streamed_snr_front_matches_materialized_for_random_contexts() {
+    check(Config::default().cases(25).seed(47), |rng| {
+        let spec = arbitrary_spec(rng, true);
+        let model = arbitrary_model(rng);
+        let ctx = SnrContext {
+            n_sum: 1 + rng.index(10_000),
+            // Mostly realistic widths; occasionally huge so pow2_f64
+            // saturates and the SNR term goes to -inf without panicking.
+            cell_bits: if rng.bool(0.1) { 1_000 } else { 1 + rng.index(8) as u32 },
+        };
+        let all = run_sweep(&spec, &NativeEvaluator::serial(model)).unwrap();
+        let objectives: Vec<[f64; 3]> = all
+            .iter()
+            .map(|p| {
+                [
+                    p.metrics.energy_pj_per_convert,
+                    p.metrics.total_area_um2,
+                    -ctx.compute_snr_db(p.query.enob),
+                ]
+            })
+            .collect();
+        let brute = pareto_front_k(&objectives);
+        for workers in [1usize, 4] {
+            assert_eq!(
+                sweep_energy_area_snr_front(&spec, &model, workers, &ctx).into_indices(),
+                brute,
+                "workers={workers} ctx={ctx:?}"
+            );
+        }
     });
 }
 
